@@ -1,0 +1,97 @@
+//! END-TO-END DRIVER: the full three-layer stack on a real workload.
+//!
+//! Loads the AOT artifacts (JAX/Pallas → HLO text, built by
+//! `make artifacts`), schedules the Fig. 10 GoogLeNet on four virtual
+//! cores with DSH, serves a batch of inference requests through the
+//! parallel flag-protocol engine (one OS thread per core, PJRT per-layer
+//! executables), verifies numerics against both the single-core artifact
+//! and the pure-Rust oracle, and reports latency/throughput.
+//!
+//! Run: `make artifacts && cargo run --release --example parallel_inference`
+
+use acetone::exec::{run_full, run_parallel};
+use acetone::nn::eval::{eval, Tensor};
+use acetone::nn::{numel, weights, zoo};
+use acetone::runtime::Manifest;
+use acetone::sched::dsh::Dsh;
+use acetone::sched::Scheduler;
+use acetone::wcet::CostModel;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    let net = zoo::googlenet(zoo::Scale::Tiny);
+    let mm = manifest.models.get("googlenet").expect("googlenet artifacts");
+    let g = net.to_dag(&CostModel::default());
+    let m = 4;
+    let sched = Dsh.schedule(&g, m).schedule;
+    println!(
+        "googlenet (tiny) on {m} virtual cores: schedule makespan {} cycles, {} comms",
+        sched.makespan(),
+        acetone::sched::derive_comms(&g, &sched).len()
+    );
+
+    let shapes = net.shapes();
+
+    // One-shot path (per-request compilation) for the per-layer report.
+    let input0 = Tensor::new(
+        shapes[0].clone(),
+        weights::input_tensor(numel(&shapes[0]), mm.seed ^ 1000),
+    );
+    let t_oneshot = Instant::now();
+    let (_, report) = run_parallel(&net, &sched, mm, "artifacts", &input0)?;
+    println!(
+        "one-shot run (includes per-request PJRT compilation): {:?} ({} steps)",
+        t_oneshot.elapsed(),
+        report.steps.len()
+    );
+
+    // Serving path: the persistent engine compiles once, then streams.
+    let t_build = Instant::now();
+    let engine = acetone::exec::Engine::new(&net, &sched, mm, "artifacts")?;
+    println!("engine built (all artifacts compiled) in {:?}", t_build.elapsed());
+
+    let batch = 32u64;
+    let mut worst = 0f32;
+    let t0 = Instant::now();
+    for req in 0..batch {
+        let input = Tensor::new(
+            shapes[0].clone(),
+            weights::input_tensor(numel(&shapes[0]), mm.seed ^ (1000 + req)),
+        );
+        let out = engine.infer(&input)?;
+        // Verify against both references.
+        let (full, _) = run_full(mm, "artifacts", &input)?;
+        let oracle = eval(&net, &input, mm.seed);
+        worst = worst.max(max_err(&out, &full)).max(max_err(&out, &oracle));
+    }
+    let elapsed = t0.elapsed();
+    // The verification re-runs the full artifact per request; time the
+    // serving loop alone for the throughput number.
+    let t1 = Instant::now();
+    for req in 0..batch {
+        let input = Tensor::new(
+            shapes[0].clone(),
+            weights::input_tensor(numel(&shapes[0]), mm.seed ^ (2000 + req)),
+        );
+        let _ = engine.infer(&input)?;
+    }
+    let serve = t1.elapsed();
+    println!(
+        "batch of {batch}: mean latency {:?}, throughput {:.1} req/s (verification loop took {:?}), worst max|Δ| {worst:.2e}",
+        serve / batch as u32,
+        batch as f64 / serve.as_secs_f64(),
+        elapsed,
+    );
+    assert!(worst < 1e-3, "numerics drifted");
+    println!("numerics OK — all layers computed by PJRT artifacts + native memory ops");
+    Ok(())
+}
+
+fn max_err(a: &Tensor, b: &Tensor) -> f32 {
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}

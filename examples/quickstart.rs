@@ -1,0 +1,43 @@
+//! Quickstart: build a model, schedule it on multiple cores, inspect the
+//! schedule, and statically bound the parallel WCET.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use acetone::nn::{numel, zoo};
+use acetone::sched::dsh::Dsh;
+use acetone::sched::{check_valid, Scheduler};
+use acetone::wcet::{compose_global, serial_global, CostModel};
+
+fn main() {
+    // 1. A model from the zoo — the split LeNet-5 of the paper's Fig. 2.
+    let net = zoo::lenet5_split(zoo::Scale::Tiny);
+    println!("model: {} ({} layers, {} parameters)", net.name, net.layers.len(), net.param_count());
+
+    // 2. Lower it to the §2.2 task DAG with the OTAWA-analogue cost model.
+    let cm = CostModel::default();
+    let g = net.to_dag(&cm);
+    println!("task DAG: {} nodes, {} edges, width {}", g.n(), g.edge_count(), g.width());
+
+    // 3. Schedule on two cores with the Duplication Scheduling Heuristic.
+    let result = Dsh.schedule(&g, 2);
+    check_valid(&g, &result.schedule).expect("valid schedule");
+    println!(
+        "DSH on 2 cores: makespan {} cycles, speedup {:.2}×, {} duplicate(s), solved in {:?}",
+        result.schedule.makespan(),
+        result.schedule.speedup(&g),
+        result.schedule.duplication_count(),
+        result.solve_time,
+    );
+
+    // 4. Static global WCET of the parallel code (§5.4 composition).
+    let shapes = net.shapes();
+    let bytes = move |v: usize| numel(&shapes[v]) * 4;
+    let composed = compose_global(&g, &result.schedule, &cm, &bytes);
+    let serial = serial_global(&g);
+    println!(
+        "global WCET: serial {} → parallel {} ({:.1}% gain)",
+        serial,
+        composed.makespan,
+        100.0 * (1.0 - composed.makespan as f64 / serial as f64)
+    );
+}

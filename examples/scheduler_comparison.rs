@@ -1,0 +1,50 @@
+//! Compare every solver in the crate on the same workloads: the paper's
+//! worked example (Fig. 3) and a §4.1 random graph — makespan, optimality,
+//! duplicates and solve time side by side.
+//!
+//! Run: `cargo run --release --example scheduler_comparison`
+
+use acetone::daggen::{generate, DagGenConfig};
+use acetone::graph::{ensure_single_sink, paper_example_dag};
+use acetone::metrics::Table;
+use acetone::sched::bnb::ChouChung;
+use acetone::sched::cp::{CpConfig, CpSolver, Encoding};
+use acetone::sched::dsh::Dsh;
+use acetone::sched::hybrid::Hybrid;
+use acetone::sched::ish::Ish;
+use acetone::sched::{check_valid, Scheduler};
+use std::time::Duration;
+
+fn main() {
+    let mut fig3 = paper_example_dag();
+    ensure_single_sink(&mut fig3);
+    let mut rand20 = generate(&DagGenConfig::paper(20), 7);
+    ensure_single_sink(&mut rand20);
+
+    for (name, g, m) in [("Fig. 3 example", &fig3, 2), ("random n=20 (§4.1)", &rand20, 4)] {
+        println!("\n### {name} on {m} cores (total WCET {} cycles)\n", g.total_wcet());
+        let solvers: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(Ish),
+            Box::new(Dsh),
+            Box::new(ChouChung { timeout: Duration::from_secs(10) }),
+            Box::new(CpSolver::new(CpConfig::improved(Duration::from_secs(10)))),
+            Box::new(CpSolver::new(CpConfig::tang(Duration::from_secs(10)))),
+            Box::new(Hybrid { cp_timeout: Duration::from_secs(5) }),
+        ];
+        let mut t = Table::new(&["solver", "makespan", "speedup", "dups", "optimal", "time", "explored"]);
+        for s in solvers {
+            let r = s.schedule(g, m);
+            check_valid(g, &r.schedule).expect("valid");
+            t.row(vec![
+                s.name().into(),
+                r.schedule.makespan().to_string(),
+                format!("{:.3}", r.schedule.speedup(g)),
+                r.schedule.duplication_count().to_string(),
+                r.optimal.to_string(),
+                format!("{:?}", r.solve_time),
+                r.explored.to_string(),
+            ]);
+        }
+        println!("{}", t.markdown());
+    }
+}

@@ -1,0 +1,128 @@
+"""AOT lowering: JAX/Pallas → HLO **text** artifacts + manifest.
+
+Run once per build (``make artifacts``); Python never touches the
+inference path afterwards. For every model JSON in ``--models``:
+
+* one HLO module per *compute* layer (conv2d / dense / maxpool / avgpool;
+  memory ops — input, output, split, concat, reshape — are executed
+  natively by the Rust engine, exactly as ACETONE keeps them as C copy
+  loops);
+* one ``full`` HLO module for the single-core reference execution;
+* a ``manifest.json`` describing artifact paths and activation shapes.
+
+HLO **text** is the interchange format, not ``HloModuleProto.serialize()``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly.
+
+Usage::
+
+    python -m compile.aot --models ../artifacts/models --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import Model
+
+DEFAULT_SEED = 42
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring).
+
+    ``print_large_constants=True`` is ESSENTIAL: the default printer elides
+    big literals as ``constant({...})``, which the text parser then reads
+    as zeros — baked-in weights silently vanish and conv/dense layers
+    degenerate to their biases. Caught by
+    rust/tests/runtime_integration.rs (PJRT vs. the Rust oracle).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_fn(fn, arg_shapes) -> str:
+    specs = [jax.ShapeDtypeStruct(s, np.float32) for s in arg_shapes]
+    # Wrap in a tuple so the Rust side can uniformly unwrap to_tuple1().
+    return to_hlo_text(jax.jit(lambda *a: (fn(*a),)).lower(*specs))
+
+
+def sanitize(name: str) -> str:
+    return name.replace("/", "__")
+
+
+def compile_model(model: Model, out_dir: str, seed: int) -> dict:
+    shapes = model.shapes()
+    model_dir = os.path.join(out_dir, model.name)
+    os.makedirs(model_dir, exist_ok=True)
+    layers_manifest = {}
+    for idx, layer in enumerate(model.layers):
+        if not model.is_compute(idx):
+            continue
+        fn = model.layer_fn(idx, seed)
+        arg_shapes = [shapes[i] for i in layer.inputs]
+        hlo = lower_fn(fn, arg_shapes)
+        rel = f"{model.name}/{sanitize(layer.name)}.hlo.txt"
+        with open(os.path.join(out_dir, rel), "w") as f:
+            f.write(hlo)
+        layers_manifest[layer.name] = {
+            "artifact": rel,
+            "inputs": [list(s) for s in arg_shapes],
+            "output": list(shapes[idx]),
+        }
+    full = lower_fn(model.full_fn(seed), [shapes[0]])
+    full_rel = f"{model.name}/full.hlo.txt"
+    with open(os.path.join(out_dir, full_rel), "w") as f:
+        f.write(full)
+    return {
+        "seed": seed,
+        "layers": layers_manifest,
+        "full": {
+            "artifact": full_rel,
+            "input": list(shapes[0]),
+            "output": list(shapes[-1]),
+        },
+        "all_shapes": {
+            l.name: list(shapes[i]) for i, l in enumerate(model.layers)
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--models", required=True, help="directory of model JSONs")
+    ap.add_argument("--out", required=True, help="artifact output directory")
+    ap.add_argument("--seed", type=int, default=DEFAULT_SEED)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"models": {}}
+    names = sorted(os.listdir(args.models))
+    if not names:
+        print(f"no model JSONs found in {args.models}", file=sys.stderr)
+        sys.exit(1)
+    for fname in names:
+        if not fname.endswith(".json"):
+            continue
+        model = Model.load(os.path.join(args.models, fname))
+        print(f"[aot] lowering {model.name} ({len(model.layers)} layers)")
+        manifest["models"][model.name] = compile_model(model, args.out, args.seed)
+    path = os.path.join(args.out, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

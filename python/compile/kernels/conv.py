@@ -1,0 +1,46 @@
+"""Layer-1 convolution: im2col + the Pallas matmul kernel.
+
+The GPU-style formulation (one threadblock per output tile) is rethought
+for TPU: ``conv_general_dilated_patches`` materializes the im2col matrix
+(an XLA gather fused into the surrounding HLO), and the contraction runs on
+the Pallas MXU-tiled matmul. Bias-add and ReLU fuse into the same jitted
+function, so the whole layer lowers into one HLO module per layer artifact.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from .matmul import matmul
+
+
+def conv2d(x, kernel, bias, stride: int, padding: str, relu: bool):
+    """NHWC conv over one image.
+
+    ``x [H,W,C]``, ``kernel [kh,kw,cin,cout]`` → ``[OH,OW,cout]``.
+    """
+    kh, kw, cin, cout = kernel.shape
+    patches = lax.conv_general_dilated_patches(
+        x[None, ...],
+        (kh, kw),
+        (stride, stride),
+        padding.upper(),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0]  # [OH, OW, cin*kh*kw] with (cin, kh, kw)-major feature order
+    oh, ow, feat = patches.shape
+    # Match the patches' (cin, kh, kw) feature order.
+    wmat = jnp.transpose(kernel, (2, 0, 1, 3)).reshape(feat, cout)
+    y = matmul(patches.reshape(oh * ow, feat), wmat).reshape(oh, ow, cout)
+    y = y + bias
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def dense(x, kernel, bias, relu: bool):
+    """``x [N]`` through the Pallas matmul: ``[1,N] @ [N,U]``."""
+    y = matmul(x[None, :], kernel)[0] + bias
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y

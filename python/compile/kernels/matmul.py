@@ -1,0 +1,83 @@
+"""Layer-1 Pallas matmul kernel — the compute hot-spot of the stack.
+
+Every convolution (via im2col) and every dense layer lowers onto this
+kernel, mirroring how ACETONE's generated C funnels >99 % of its cycles
+through the conv/gemm loop nests (paper Table 1).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the kernel is tiled for
+VMEM with a 3-D grid over (M, N, K) blocks; each grid step moves one
+``bm×bk`` LHS tile and one ``bk×bn`` RHS tile HBM→VMEM (expressed with
+``BlockSpec`` index maps) and accumulates into the resident ``bm×bn``
+output tile — the MXU-friendly schedule. Block sizes default to 128×128×128
+(MXU/VREG aligned) and shrink to fit small operands.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; lowering in interpret mode emits plain HLO that both the
+pytest suite and the Rust runtime execute. Real-TPU efficiency is
+estimated in EXPERIMENTS.md §Perf from the VMEM footprint.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _round_up(x: int, mult: int) -> int:
+    return (x + mult - 1) // mult * mult
+
+
+def _block(dim: int, preferred: int, align: int = 8) -> int:
+    """Largest aligned block ≤ preferred that covers dim (min one vreg)."""
+    return min(_round_up(dim, align), preferred)
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (i, j, k) grid step: accumulate x[i,k] @ w[k,j] into o[i,j]."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, w, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    """``x [M,K] @ w [K,N]`` via the Pallas kernel.
+
+    Operands are zero-padded up to block multiples (zero rows/cols do not
+    change the product) and the result is sliced back.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = _block(m, bm)
+    bn = _block(n, bn)
+    bk = _block(k, bk)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int) -> int:
+    """Estimated VMEM residency of one grid step (f32): LHS + RHS + ACC
+    tiles. Used by the §Perf analysis (16 MiB VMEM budget on TPUv4)."""
+    return 4 * (bm * bk + bk * bn + bm * bn)

@@ -1,0 +1,67 @@
+"""Layer-1 pooling kernels.
+
+Global average pooling (the paper's ``avgpool`` layer before ``gemm``) is a
+Pallas reduction kernel; windowed max/avg pooling uses ``lax.reduce_window``
+— pooling is <1 % of the cycle budget (Table 1), so the Pallas effort goes
+to the matmul hot-spot instead.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _global_avg_kernel(x_ref, o_ref):
+    """Mean over the spatial axes of an [H, W, C] block resident in VMEM."""
+    o_ref[...] = jnp.mean(x_ref[...], axis=(0, 1), keepdims=True)
+
+
+def global_avgpool(x):
+    """``[H,W,C] → [1,1,C]`` via a single-step Pallas reduction."""
+    h, w, c = x.shape
+    return pl.pallas_call(
+        _global_avg_kernel,
+        out_shape=jax.ShapeDtypeStruct((1, 1, c), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def maxpool(x, k: int, stride: int, padding: str):
+    """Windowed max pooling over ``[H,W,C]``."""
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(k, k, 1),
+        window_strides=(stride, stride, 1),
+        padding=padding.upper(),
+    )
+
+
+def avgpool(x, k: int, stride: int, padding: str):
+    """Windowed average pooling (padding excluded from the mean). Falls
+    back to the Pallas global reduction when the window covers the whole
+    feature map."""
+    h, w, _ = x.shape
+    if padding.lower() == "valid" and k == h and k == w and stride >= k:
+        return global_avgpool(x)
+    summed = lax.reduce_window(
+        x,
+        0.0,
+        lax.add,
+        window_dimensions=(k, k, 1),
+        window_strides=(stride, stride, 1),
+        padding=padding.upper(),
+    )
+    counts = lax.reduce_window(
+        jnp.ones_like(x),
+        0.0,
+        lax.add,
+        window_dimensions=(k, k, 1),
+        window_strides=(stride, stride, 1),
+        padding=padding.upper(),
+    )
+    return summed / counts

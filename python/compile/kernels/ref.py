@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the Pallas kernels (Layer-1 correctness ground
+truth, checked by ``python/tests/test_kernels.py``)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(x, w):
+    """Plain dot: ``x [M,K] @ w [K,N]``."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def conv2d_ref(x, kernel, bias, stride: int, padding: str, relu: bool):
+    """NHWC conv over a single image ``x [H,W,C]``, kernel
+    ``[kh,kw,cin,cout]``, JAX SAME/VALID semantics."""
+    y = lax.conv_general_dilated(
+        x[None, ...],
+        kernel,
+        window_strides=(stride, stride),
+        padding=padding.upper(),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0]
+    y = y + bias
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def dense_ref(x, kernel, bias, relu: bool):
+    """``x [N] @ kernel [N,U] + bias``."""
+    y = jnp.dot(x, kernel) + bias
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def maxpool_ref(x, k: int, stride: int, padding: str):
+    """Max pooling over ``x [H,W,C]`` (padding contributes -inf)."""
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(k, k, 1),
+        window_strides=(stride, stride, 1),
+        padding=padding.upper(),
+    )
+
+
+def avgpool_ref(x, k: int, stride: int, padding: str):
+    """Average pooling; padded positions are excluded from the mean
+    (count_include_pad = False), matching the Rust oracle."""
+    summed = lax.reduce_window(
+        x,
+        0.0,
+        lax.add,
+        window_dimensions=(k, k, 1),
+        window_strides=(stride, stride, 1),
+        padding=padding.upper(),
+    )
+    counts = lax.reduce_window(
+        jnp.ones_like(x),
+        0.0,
+        lax.add,
+        window_dimensions=(k, k, 1),
+        window_strides=(stride, stride, 1),
+        padding=padding.upper(),
+    )
+    return summed / counts

@@ -1,0 +1,167 @@
+"""Layer 2 — the JAX model: build per-layer and full-network functions from
+the JSON model format emitted by the Rust side (``acetone export-models``).
+
+Weights are baked into the functions as constants (``weights.py`` derives
+them deterministically from layer names), so each lowered HLO module is
+self-contained: the Rust runtime feeds activations only.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from . import weights
+from .kernels import conv as kconv
+from .kernels import pool as kpool
+
+
+@dataclass
+class LayerDef:
+    name: str
+    op: str
+    inputs: list[int]
+    attrs: dict = field(default_factory=dict)
+
+
+@dataclass
+class Model:
+    """Parsed network description (mirror of nn::Network)."""
+
+    name: str
+    layers: list[LayerDef]
+
+    @staticmethod
+    def from_json(doc: dict) -> "Model":
+        index: dict[str, int] = {}
+        layers: list[LayerDef] = []
+        for l in doc["layers"]:
+            inputs = [index[i] for i in l["inputs"]]
+            attrs = {k: v for k, v in l.items() if k not in ("name", "op", "inputs")}
+            index[l["name"]] = len(layers)
+            layers.append(LayerDef(l["name"], l["op"], inputs, attrs))
+        return Model(doc["name"], layers)
+
+    @staticmethod
+    def load(path: str) -> "Model":
+        with open(path) as f:
+            return Model.from_json(json.load(f))
+
+    # ---- shape inference (mirror of nn::shapes) ----
+
+    def shapes(self) -> list[tuple[int, ...]]:
+        out: list[tuple[int, ...]] = []
+        for l in self.layers:
+            ins = [out[i] for i in l.inputs]
+            out.append(_infer(l, ins))
+        return out
+
+    # ---- computation ----
+
+    def layer_fn(self, idx: int, seed: int) -> Callable:
+        """A jax-traceable function computing layer ``idx`` from its input
+        activation tensors (weights closed over as constants)."""
+        l = self.layers[idx]
+        shp = self.shapes()
+        ins = [shp[i] for i in l.inputs]
+        return _layer_fn(l, ins, seed)
+
+    def full_fn(self, seed: int) -> Callable:
+        """One function: network input → Output-layer tensor."""
+        shp = self.shapes()
+        fns = [
+            _layer_fn(l, [shp[i] for i in l.inputs], seed) for l in self.layers
+        ]
+
+        def run(x):
+            acts: list = []
+            for l, fn in zip(self.layers, fns):
+                if l.op == "input":
+                    acts.append(x)
+                else:
+                    acts.append(fn(*[acts[i] for i in l.inputs]))
+            return acts[-1]
+
+        return run
+
+    def is_compute(self, idx: int) -> bool:
+        """Layers lowered to PJRT artifacts; the rest are memory ops the
+        Rust engine executes natively (its copy loops = ACETONE's C)."""
+        return self.layers[idx].op in ("conv2d", "dense", "maxpool", "avgpool")
+
+
+def _infer(l: LayerDef, ins: list[tuple[int, ...]]) -> tuple[int, ...]:
+    a = l.attrs
+    if l.op == "input":
+        return tuple(a["shape"])
+    if l.op in ("split", "output"):
+        return ins[0]
+    if l.op == "reshape":
+        return tuple(a["shape"])
+    if l.op == "concat":
+        h, w, _ = ins[0]
+        return (h, w, sum(s[2] for s in ins))
+    if l.op == "conv2d":
+        h, w, _ = ins[0]
+        return (
+            _out_dim(h, a["kh"], a["stride"], a["padding"]),
+            _out_dim(w, a["kw"], a["stride"], a["padding"]),
+            a["out_ch"],
+        )
+    if l.op in ("maxpool", "avgpool"):
+        h, w, c = ins[0]
+        return (
+            _out_dim(h, a["k"], a["stride"], a["padding"]),
+            _out_dim(w, a["k"], a["stride"], a["padding"]),
+            c,
+        )
+    if l.op == "dense":
+        return (a["units"],)
+    raise ValueError(f"unknown op {l.op}")
+
+
+def _out_dim(n: int, k: int, stride: int, padding: str) -> int:
+    if padding == "same":
+        return -(-n // stride)
+    return (n - k) // stride + 1
+
+
+def _layer_fn(l: LayerDef, ins: list[tuple[int, ...]], seed: int) -> Callable:
+    a = l.attrs
+    if l.op in ("input", "split", "output"):
+        return lambda x: x
+    if l.op == "reshape":
+        shape = tuple(a["shape"])
+        return lambda x: x.reshape(shape)
+    if l.op == "concat":
+        import jax.numpy as jnp
+
+        return lambda *xs: jnp.concatenate(xs, axis=-1)
+    if l.op == "conv2d":
+        cin = ins[0][2]
+        kernel, bias = weights.conv_params(
+            l.name, a["kh"], a["kw"], cin, a["out_ch"], seed
+        )
+        stride, padding, relu = a["stride"], a["padding"], a["relu"]
+        return lambda x: kconv.conv2d(x, kernel, bias, stride, padding, relu)
+    if l.op == "dense":
+        n_in = ins[0][0]
+        kernel, bias = weights.dense_params(l.name, n_in, a["units"], seed)
+        relu = a["relu"]
+        return lambda x: kconv.dense(x, kernel, bias, relu)
+    if l.op == "maxpool":
+        k, stride, padding = a["k"], a["stride"], a["padding"]
+        return lambda x: kpool.maxpool(x, k, stride, padding)
+    if l.op == "avgpool":
+        k, stride, padding = a["k"], a["stride"], a["padding"]
+        return lambda x: kpool.avgpool(x, k, stride, padding)
+    raise ValueError(f"unknown op {l.op}")
+
+
+def input_array(model: Model, seed: int) -> np.ndarray:
+    """The deterministic input tensor (mirror of nn::weights::input_tensor)."""
+    shape = model.shapes()[0]
+    return weights.input_tensor(int(np.prod(shape)), seed).reshape(shape)

@@ -1,0 +1,73 @@
+"""Deterministic network parameters — bit-for-bit mirror of
+``rust/src/util/rng.rs`` + ``rust/src/nn/weights.rs``.
+
+Both compile paths (this JAX AOT path and the Rust C code generator) derive
+the SAME weights from ``(network seed, layer name)``, so no parameter file
+ever crosses the language boundary. Any drift is caught by
+``rust/tests/runtime_integration.rs`` (PJRT output vs. the Rust oracle).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+
+#: Weight scale before fan-in normalization (mirror of weights.rs SCALE).
+SCALE = np.float32(0.25)
+
+
+class SplitMix64:
+    """SplitMix64 PRNG (mirror of util::rng::SplitMix64)."""
+
+    def __init__(self, seed: int) -> None:
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+    def weight_f32(self, scale: np.float32) -> np.float32:
+        """Uniform f32 in ``[-scale, scale)`` — same op order as Rust."""
+        u = np.float32(self.next_u64() >> 40) / np.float32(1 << 24)
+        return np.float32((u * np.float32(2.0) - np.float32(1.0)) * scale)
+
+    def weights(self, n: int, scale: np.float32) -> np.ndarray:
+        return np.array([self.weight_f32(scale) for _ in range(n)], dtype=np.float32)
+
+
+def seed_from_name(name: str, base_seed: int) -> int:
+    """FNV-1a(name) XOR base_seed (mirror of SplitMix64::seed_from_name)."""
+    h = 0xCBF29CE484222325
+    for b in name.encode():
+        h ^= b
+        h = (h * 0x00000100000001B3) & MASK64
+    return (h ^ base_seed) & MASK64
+
+
+def conv_params(name: str, kh: int, kw: int, cin: int, cout: int, seed: int):
+    """Kernel ``[kh, kw, cin, cout]`` + bias ``[cout]`` (weights.rs order)."""
+    rng = SplitMix64(seed_from_name(name, seed))
+    fan_in = np.float32(kh * kw * cin)
+    scale = np.float32(SCALE / np.sqrt(fan_in))
+    kernel = rng.weights(kh * kw * cin * cout, scale).reshape(kh, kw, cin, cout)
+    bias = rng.weights(cout, scale)
+    return kernel, bias
+
+
+def dense_params(name: str, n_in: int, units: int, seed: int):
+    """Kernel ``[in, units]`` + bias ``[units]`` (weights.rs order)."""
+    rng = SplitMix64(seed_from_name(name, seed))
+    scale = np.float32(SCALE / np.sqrt(np.float32(n_in)))
+    kernel = rng.weights(n_in * units, scale).reshape(n_in, units)
+    bias = rng.weights(units, scale)
+    return kernel, bias
+
+
+def input_tensor(numel: int, seed: int) -> np.ndarray:
+    """Mirror of nn::weights::input_tensor."""
+    rng = SplitMix64(seed_from_name("__input__", seed))
+    return rng.weights(numel, np.float32(1.0))

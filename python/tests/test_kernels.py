@@ -1,0 +1,145 @@
+"""Layer-1 correctness: Pallas kernels vs. the pure-jnp oracle.
+
+Hypothesis sweeps shapes; every property asserts allclose against ref.py.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv as kconv
+from compile.kernels import pool as kpool
+from compile.kernels import ref
+from compile.kernels.matmul import matmul, vmem_footprint_bytes
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(shape, seed):
+    return np.random.RandomState(seed).randn(*shape).astype(np.float32)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    x, w = rand((m, k), seed), rand((k, n), seed + 1)
+    got = np.asarray(matmul(x, w))
+    want = np.asarray(ref.matmul_ref(x, w))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 40),
+    bm=st.sampled_from([8, 16, 64, 128]),
+    bn=st.sampled_from([8, 16, 64, 128]),
+    bk=st.sampled_from([8, 16, 64, 128]),
+)
+def test_matmul_block_shape_invariance(m, k, n, bm, bn, bk):
+    """The result must not depend on the VMEM tiling."""
+    x, w = rand((m, k), 0), rand((k, n), 1)
+    got = np.asarray(matmul(x, w, bm=bm, bn=bn, bk=bk))
+    want = np.asarray(ref.matmul_ref(x, w))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.integers(4, 20),
+    w=st.integers(4, 20),
+    cin=st.integers(1, 6),
+    cout=st.integers(1, 6),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    padding=st.sampled_from(["same", "valid"]),
+    relu=st.booleans(),
+    seed=st.integers(0, 1000),
+)
+def test_conv2d_matches_ref(h, w, cin, cout, k, stride, padding, relu, seed):
+    if padding == "valid" and (h < k or w < k):
+        return
+    x = rand((h, w, cin), seed)
+    kern = rand((k, k, cin, cout), seed + 1) * 0.2
+    bias = rand((cout,), seed + 2) * 0.1
+    got = np.asarray(kconv.conv2d(x, kern, bias, stride, padding, relu))
+    want = np.asarray(ref.conv2d_ref(x, kern, bias, stride, padding, relu))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 200),
+    units=st.integers(1, 64),
+    relu=st.booleans(),
+    seed=st.integers(0, 1000),
+)
+def test_dense_matches_ref(n, units, relu, seed):
+    x = rand((n,), seed)
+    kern = rand((n, units), seed + 1) * 0.2
+    bias = rand((units,), seed + 2) * 0.1
+    got = np.asarray(kconv.dense(x, kern, bias, relu))
+    want = np.asarray(ref.dense_ref(x, kern, bias, relu))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.integers(2, 16),
+    c=st.integers(1, 8),
+    k=st.sampled_from([2, 3]),
+    stride=st.sampled_from([1, 2]),
+    padding=st.sampled_from(["same", "valid"]),
+    seed=st.integers(0, 1000),
+)
+def test_maxpool_matches_ref(h, c, k, stride, padding, seed):
+    if padding == "valid" and h < k:
+        return
+    x = rand((h, h, c), seed)
+    got = np.asarray(kpool.maxpool(x, k, stride, padding))
+    want = np.asarray(ref.maxpool_ref(x, k, stride, padding))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(h=st.integers(1, 16), c=st.integers(1, 8), seed=st.integers(0, 1000))
+def test_global_avgpool_pallas_matches_ref(h, c, seed):
+    x = rand((h, h, c), seed)
+    got = np.asarray(kpool.global_avgpool(x))
+    want = np.asarray(ref.avgpool_ref(x, h, h, "valid"))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.integers(2, 12),
+    c=st.integers(1, 4),
+    k=st.sampled_from([2, 3]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 1000),
+)
+def test_windowed_avgpool_matches_ref(h, c, k, stride, seed):
+    if h < k:
+        return
+    x = rand((h, h, c), seed)
+    for padding in ("same", "valid"):
+        got = np.asarray(kpool.avgpool(x, k, stride, padding))
+        want = np.asarray(ref.avgpool_ref(x, k, stride, padding))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_vmem_footprint_within_budget():
+    """Default 128³ tiling: 3 × 64 KiB = 192 KiB ≪ 16 MiB VMEM (§Perf)."""
+    assert vmem_footprint_bytes(128, 128, 128) == 3 * 128 * 128 * 4
+    assert vmem_footprint_bytes(128, 128, 128) < 16 * 2**20
+
+
+def test_matmul_empty_edge():
+    with pytest.raises(Exception):
+        matmul(np.zeros((2, 3), np.float32), np.zeros((4, 5), np.float32))

@@ -1,0 +1,72 @@
+"""Layer-2 correctness: per-layer functions compose to the full model, and
+both match across models in the zoo."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile.model import Model, input_array
+
+MODELS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "models")
+SEED = 42
+
+needs_models = pytest.mark.skipif(
+    not os.path.isdir(MODELS_DIR),
+    reason="run `make models` first (Rust exports the zoo JSONs)",
+)
+
+
+def load(name):
+    return Model.load(os.path.join(MODELS_DIR, f"{name}.json"))
+
+
+@needs_models
+@pytest.mark.parametrize("name", ["lenet5", "lenet5_split", "googlenet", "mlp"])
+def test_layerwise_composition_equals_full(name):
+    model = load(name)
+    x = input_array(model, SEED)
+    full = np.asarray(model.full_fn(SEED)(x))
+    # Execute layer by layer through the per-layer functions (what the Rust
+    # engine does with the per-layer artifacts).
+    acts = []
+    for idx, l in enumerate(model.layers):
+        if l.op == "input":
+            acts.append(np.asarray(x))
+        else:
+            fn = model.layer_fn(idx, SEED)
+            acts.append(np.asarray(fn(*[acts[i] for i in l.inputs])))
+    np.testing.assert_allclose(acts[-1], full, rtol=1e-5, atol=1e-5)
+
+
+@needs_models
+@pytest.mark.parametrize("name", ["lenet5", "lenet5_split", "googlenet", "mlp"])
+def test_shapes_consistent(name):
+    model = load(name)
+    shapes = model.shapes()
+    x = input_array(model, SEED)
+    assert x.shape == shapes[0]
+    y = np.asarray(model.full_fn(SEED)(x))
+    assert y.shape == tuple(shapes[-1])
+    assert np.all(np.isfinite(y))
+
+
+@needs_models
+def test_compute_layer_classification(name="lenet5_split"):
+    model = load(name)
+    for idx, l in enumerate(model.layers):
+        if l.op in ("conv2d", "dense", "maxpool", "avgpool"):
+            assert model.is_compute(idx)
+        else:
+            assert not model.is_compute(idx)
+
+
+@needs_models
+def test_split_model_output_differs_from_unsplit():
+    a = np.asarray(load("lenet5").full_fn(SEED)(input_array(load("lenet5"), SEED)))
+    b = np.asarray(
+        load("lenet5_split").full_fn(SEED)(input_array(load("lenet5_split"), SEED))
+    )
+    assert a.shape == b.shape
+    assert not np.allclose(a, b)

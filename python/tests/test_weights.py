@@ -1,0 +1,68 @@
+"""The Python weight stream must match the Rust stream bit-for-bit."""
+
+import numpy as np
+
+from compile import weights
+
+
+def test_splitmix_known_sequence():
+    # Same reference values as rust/src/util/rng.rs::known_sequence.
+    r = weights.SplitMix64(1234)
+    seq = [r.next_u64() for _ in range(4)]
+    assert seq == [
+        13478418381427711195,
+        10936887474700444964,
+        3728693401281897946,
+        5648149391703318579,
+    ]
+
+
+def test_seed_from_name_deterministic():
+    a = weights.seed_from_name("conv_1", 42)
+    b = weights.seed_from_name("conv_1", 42)
+    c = weights.seed_from_name("conv_2", 42)
+    d = weights.seed_from_name("conv_1", 43)
+    assert a == b
+    assert a != c
+    assert a != d
+
+
+def test_conv_params_shapes_and_bounds():
+    k, b = weights.conv_params("conv_1", 5, 5, 1, 3, 42)
+    assert k.shape == (5, 5, 1, 3)
+    assert b.shape == (3,)
+    assert k.dtype == np.float32
+    scale = weights.SCALE / np.sqrt(np.float32(25))
+    assert np.all(np.abs(k) <= scale)
+
+
+def test_dense_params_deterministic():
+    k1, b1 = weights.dense_params("gemm", 16, 4, 7)
+    k2, b2 = weights.dense_params("gemm", 16, 4, 7)
+    assert np.array_equal(k1, k2) and np.array_equal(b1, b2)
+    k3, _ = weights.dense_params("gemm", 16, 4, 8)
+    assert not np.array_equal(k1, k3)
+
+
+def test_input_tensor_range():
+    x = weights.input_tensor(256, 42)
+    assert x.shape == (256,)
+    assert np.all(np.abs(x) < 1.0)
+
+
+def test_weight_values_match_rust_reference():
+    # Reference values printed by rust nn::weights (seed 42, lenet5 tiny) —
+    # guards the FNV/SplitMix mirrors bit-for-bit.
+    k, b = weights.conv_params("conv_1", 5, 5, 1, 3, 42)
+    np.testing.assert_array_equal(
+        k.flatten()[:4],
+        np.array([0.040667918, 0.008743018, 0.045324426, 0.013244092], np.float32),
+    )
+    np.testing.assert_array_equal(
+        b[:2], np.array([0.001927644, 0.025934195], np.float32)
+    )
+    x = weights.input_tensor(144, 42)
+    np.testing.assert_array_equal(
+        x[:4],
+        np.array([-0.31701303, -0.8401673, -0.9235221, 0.78992224], np.float32),
+    )

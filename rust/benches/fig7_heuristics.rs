@@ -1,0 +1,27 @@
+//! Bench: Fig. 7c/7d — scheduling computation time of ISH vs DSH across
+//! graph sizes and core counts (the paper's Observation 3: ISH is 1–2
+//! orders of magnitude faster and stays stable as cores grow).
+
+use acetone::daggen::{generate, DagGenConfig};
+use acetone::sched::dsh::Dsh;
+use acetone::sched::ish::Ish;
+use acetone::sched::Scheduler;
+use acetone::util::bench::bench;
+
+fn main() {
+    println!("# fig7 heuristics bench (computation time per schedule)\n");
+    for n in [20usize, 50, 100] {
+        let g = generate(&DagGenConfig::paper(n), 0xBE_7 + n as u64);
+        for m in [2usize, 8, 20] {
+            let iters = if n >= 100 { 10 } else { 30 };
+            let s = bench(&format!("ISH n={n} m={m}"), 2, iters, || {
+                Ish.schedule(&g, m).schedule.makespan()
+            });
+            println!("{}", s.row());
+            let s = bench(&format!("DSH n={n} m={m}"), 2, iters, || {
+                Dsh.schedule(&g, m).schedule.makespan()
+            });
+            println!("{}", s.row());
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! Bench: Table 3 — end-to-end on the simulated target: schedule + full
+//! flag-protocol simulation of GoogLeNet on four cores, plus (when
+//! artifacts exist) the real PJRT parallel engine latency.
+
+use acetone::nn::eval::Tensor;
+use acetone::nn::{numel, weights, zoo};
+use acetone::sched::dsh::Dsh;
+use acetone::sched::Scheduler;
+use acetone::sim::{simulate, simulate_serial, Machine};
+use acetone::util::bench::bench;
+use acetone::wcet::CostModel;
+
+fn comm(bytes: usize) -> u64 {
+    CostModel::default().comm_wcet(bytes)
+}
+
+fn main() {
+    println!("# table3 target bench\n");
+    let net = zoo::googlenet(zoo::Scale::Paper);
+    let cm = CostModel::default();
+    let g = net.to_dag(&cm);
+    let shapes = net.shapes();
+    let sched = Dsh.schedule(&g, 4).schedule;
+    let mut machine = Machine::exact(comm);
+    for (i, s) in shapes.iter().enumerate() {
+        machine.payload_bytes.insert(i, numel(s) * 4);
+    }
+    let s = bench("simulate googlenet serial", 3, 50, || {
+        simulate_serial(&g, &machine).makespan
+    });
+    println!("{}", s.row());
+    let s = bench("simulate googlenet 4-core", 3, 50, || {
+        simulate(&g, &sched, &machine).makespan
+    });
+    println!("{}", s.row());
+
+    // Real engine (needs `make artifacts`).
+    if let Ok(manifest) = acetone::runtime::Manifest::load("artifacts") {
+        let tiny = zoo::googlenet(zoo::Scale::Tiny);
+        let mm = &manifest.models["googlenet"];
+        let gt = tiny.to_dag(&cm);
+        let st = Dsh.schedule(&gt, 4).schedule;
+        let tshapes = tiny.shapes();
+        let input = Tensor::new(
+            tshapes[0].clone(),
+            weights::input_tensor(numel(&tshapes[0]), mm.seed),
+        );
+        let s = bench("PJRT parallel googlenet-tiny 4-core (one-shot)", 1, 3, || {
+            acetone::exec::run_parallel(&tiny, &st, mm, "artifacts", &input)
+                .unwrap()
+                .1
+                .wall
+        });
+        println!("{}", s.row());
+        // Persistent engine: compile once, serve many (the §Perf fix).
+        let engine = acetone::exec::Engine::new(&tiny, &st, mm, "artifacts").unwrap();
+        let s = bench("PJRT parallel googlenet-tiny 4-core (engine)", 2, 20, || {
+            engine.infer(&input).unwrap()
+        });
+        println!("{}", s.row());
+        let s = bench("PJRT single-core full artifact", 1, 5, || {
+            acetone::exec::run_full(mm, "artifacts", &input).unwrap().1
+        });
+        println!("{}", s.row());
+    } else {
+        println!("(skipping PJRT engine bench — run `make artifacts`)");
+    }
+}

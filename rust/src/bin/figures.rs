@@ -1,0 +1,746 @@
+//! `figures` — regenerate every table and figure of the paper's evaluation.
+//!
+//! One subcommand per experiment (see DESIGN.md §Per-experiment index):
+//!
+//! * `fig7`            — ISH/DSH speedup + computation time vs cores
+//! * `fig8`            — improved-encoding CP speedup + solve time vs cores
+//! * `tang-vs-improved`— §4.3 Observation 1 head-to-head
+//! * `table1`          — per-layer WCET bounds (GoogLeNet, Fig. 10)
+//! * `table2`          — synchronization-operator WCET bounds
+//! * `fig11`           — DSH schedule of GoogLeNet on four cores
+//! * `sec54`           — global WCET composition (serial vs parallel)
+//! * `table3`          — measured cycles on the (simulated) target
+//! * `fig3456`         — the worked 9-node examples
+//! * `all`             — everything, with scaled-down sweep parameters
+//!
+//! We do not expect to match the paper's absolute numbers (our target is a
+//! calibrated simulator, not the authors' Keystone II/OTAWA testbed); the
+//! *shape* — who wins, plateaus, crossovers — is asserted in the test
+//! suite and printed here next to the paper's values where available.
+
+use acetone::daggen::{generate_set, DagGenConfig};
+use acetone::graph::Dag;
+use acetone::metrics::{geomean, mean, mean_secs, sci, Table};
+use acetone::nn::{numel, zoo};
+use acetone::sched::cp::{CpConfig, CpSolver, Encoding};
+use acetone::sched::dsh::Dsh;
+use acetone::sched::ish::Ish;
+use acetone::sched::{derive_programs, CoreStep, Scheduler};
+use acetone::sim::{simulate, simulate_serial, Machine};
+use acetone::wcet::{compose_global, layer_table, serial_global, CostModel};
+use std::collections::HashMap;
+use std::time::Duration;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("all");
+    let quick = args.iter().any(|a| a == "--quick");
+    match cmd {
+        "fig7" => fig7(quick),
+        "fig8" => fig8(quick),
+        "tang-vs-improved" => tang_vs_improved(quick),
+        "table1" => table1(),
+        "table2" => table2(),
+        "fig11" => fig11(),
+        "sec54" => sec54(),
+        "table3" => table3(),
+        "fig3456" => fig3456(),
+        "ablation-split" => ablation_split(),
+        "ablation-buffers" => ablation_buffers(),
+        "ablation-margin" => ablation_margin(),
+        "hybrid" => hybrid_cmp(quick),
+        "all" => {
+            fig3456();
+            table1();
+            table2();
+            fig11();
+            sec54();
+            table3();
+            fig7(true);
+            fig8(true);
+            tang_vs_improved(true);
+            ablation_split();
+            ablation_buffers();
+            ablation_margin();
+            hybrid_cmp(true);
+        }
+        other => {
+            eprintln!("unknown experiment {other}");
+            eprintln!(
+                "usage: figures <fig7|fig8|tang-vs-improved|table1|table2|fig11|sec54|table3|fig3456|ablation-split|ablation-buffers|ablation-margin|hybrid|all> [--quick]"
+            );
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Core counts swept in Figs. 7–8 (2..20 as in the paper; fewer in quick).
+fn core_sweep(quick: bool) -> Vec<usize> {
+    if quick {
+        vec![2, 4, 8, 12, 16, 20]
+    } else {
+        (1..=10).map(|i| 2 * i).collect()
+    }
+}
+
+// ---------------------------------------------------------------- Fig. 7
+
+fn fig7(quick: bool) {
+    println!("\n## Figure 7 — ISH / DSH: speedup and computation time vs cores\n");
+    let sizes: &[usize] = if quick { &[20, 50] } else { &[20, 50, 100] };
+    let graphs = if quick { 5 } else { 10 };
+    let mut table = Table::new(&[
+        "algo", "nodes", "cores", "speedup(geomean)", "avg time [s]", "dups",
+    ]);
+    for &n in sizes {
+        let set = generate_set(&DagGenConfig::paper(n), 0xF16_7 + n as u64, graphs);
+        for algo in [&Ish as &dyn Scheduler, &Dsh] {
+            for &m in &core_sweep(quick) {
+                let mut speedups = Vec::new();
+                let mut times = Vec::new();
+                let mut dups = Vec::new();
+                for g in &set {
+                    let r = algo.schedule(g, m);
+                    speedups.push(r.schedule.speedup(g));
+                    times.push(r.solve_time);
+                    dups.push(r.schedule.duplication_count() as f64);
+                }
+                table.row(vec![
+                    algo.name().into(),
+                    n.to_string(),
+                    m.to_string(),
+                    format!("{:.3}", geomean(&speedups)),
+                    format!("{:.6}", mean_secs(&times)),
+                    format!("{:.1}", mean(&dups)),
+                ]);
+            }
+        }
+    }
+    println!("{}", table.markdown());
+    let p = table.write_csv("fig7").expect("csv");
+    println!("(csv: {})", p.display());
+    println!(
+        "paper shape: speedup grows then plateaus at the max-parallelism \
+         value; DSH ≥ ISH (Obs 2); ISH 1–2 orders faster (Obs 3); only DSH \
+         duplicates (Obs 4)."
+    );
+}
+
+// ---------------------------------------------------------------- Fig. 8
+
+fn fig8(quick: bool) {
+    println!("\n## Figure 8 — improved CP encoding: speedup and solve time vs cores\n");
+    let sizes: &[usize] = &[20, 50]; // paper: larger graphs hit the timeout
+    let graphs = if quick { 2 } else { 5 };
+    let timeout = Duration::from_secs(if quick { 3 } else { 20 });
+    let cores: Vec<usize> = if quick { vec![2, 4, 8, 20] } else { core_sweep(false) };
+    let mut table = Table::new(&[
+        "nodes", "cores", "speedup(geomean)", "avg time [s]", "optimal%", "vs-DSH",
+    ]);
+    for &n in sizes {
+        let set = generate_set(&DagGenConfig::paper(n), 0xF16_8 + n as u64, graphs);
+        for &m in &cores {
+            let mut speedups = Vec::new();
+            let mut times = Vec::new();
+            let mut optimal = 0usize;
+            let mut beats_dsh = 0usize;
+            for g in &set {
+                let dsh_ms = Dsh.schedule(g, m).schedule.makespan();
+                let solver = CpSolver::new(CpConfig {
+                    encoding: Encoding::Improved,
+                    timeout,
+                    warm_start: None,
+                });
+                let out = solver.solve(g, m);
+                speedups.push(out.result.schedule.speedup(g));
+                times.push(out.result.solve_time);
+                optimal += out.result.optimal as usize;
+                beats_dsh += (out.result.schedule.makespan() <= dsh_ms) as usize;
+            }
+            table.row(vec![
+                n.to_string(),
+                m.to_string(),
+                format!("{:.3}", geomean(&speedups)),
+                format!("{:.3}", mean_secs(&times)),
+                format!("{}", optimal * 100 / graphs),
+                format!("{beats_dsh}/{graphs} ≤"),
+            ]);
+        }
+    }
+    println!("{}", table.markdown());
+    let p = table.write_csv("fig8").expect("csv");
+    println!("(csv: {})", p.display());
+    println!(
+        "paper shape: plateau at the DSH value but reached with fewer cores \
+         (Obs 2); computation time far above the heuristics, often at the \
+         timeout for 50-node graphs (Obs 3)."
+    );
+}
+
+// ------------------------------------- §4.3 Obs 1: Tang head-to-head
+
+fn tang_vs_improved(quick: bool) {
+    println!("\n## §4.3 Observation 1 — Tang et al. encoding vs improved encoding\n");
+    let graphs = if quick { 3 } else { 5 };
+    let timeout = Duration::from_secs(if quick { 3 } else { 15 });
+    let mut table = Table::new(&[
+        "nodes", "cores", "encoding", "found", "makespan(mean)", "optimal", "avg time [s]", "explored",
+    ]);
+    for (n, m) in [(10usize, 2usize), (10, 4), (20, 2), (20, 4)] {
+        let set = generate_set(&DagGenConfig::paper(n), 0x7A96 + n as u64, graphs);
+        for enc in [Encoding::Tang, Encoding::Improved] {
+            let mut found = 0;
+            let mut ms = Vec::new();
+            let mut optimal = 0;
+            let mut times = Vec::new();
+            let mut explored = Vec::new();
+            for g in &set {
+                let out = CpSolver::new(CpConfig {
+                    encoding: enc,
+                    timeout,
+                    warm_start: None,
+                })
+                .solve(g, m);
+                found += out.found_solution as usize;
+                optimal += out.result.optimal as usize;
+                ms.push(out.result.schedule.makespan() as f64);
+                times.push(out.result.solve_time);
+                explored.push(out.result.explored as f64);
+            }
+            table.row(vec![
+                n.to_string(),
+                m.to_string(),
+                format!("{enc:?}"),
+                format!("{found}/{graphs}"),
+                format!("{:.1}", mean(&ms)),
+                format!("{optimal}/{graphs}"),
+                format!("{:.3}", mean_secs(&times)),
+                format!("{:.0}", mean(&explored)),
+            ]);
+        }
+    }
+    println!("{}", table.markdown());
+    let p = table.write_csv("tang_vs_improved").expect("csv");
+    println!("(csv: {})", p.display());
+    println!(
+        "paper shape: under an equal timeout Tang's 4-D d-variables explore \
+         a larger decision space to reach the same quality; the improved \
+         model always returns at least as good a schedule."
+    );
+}
+
+// ---------------------------------------------------------------- Table 1
+
+/// Paper Table 1 (OTAWA bounds, cycles) for the side-by-side.
+fn paper_table1() -> Vec<(&'static str, f64)> {
+    vec![
+        ("input", 5.27e6),
+        ("conv_1", 8.16e9),
+        ("maxpool_1", 1.22e8),
+        ("conv_2", 1.59e10),
+        ("maxpool_2", 2.71e7),
+        ("inception_1/conv_a", 4.57e8),
+        ("inception_1/conv_b1", 2.86e8),
+        ("inception_1/conv_b2", 7.92e8),
+        ("inception_1/conv_c1", 5.72e7),
+        ("inception_1/conv_c2", 1.63e8),
+        ("inception_1/maxpool", 2.49e7),
+        ("inception_1/conv_d", 2.29e8),
+        ("inception_1/concat", 6.06e6),
+        ("inception_2/conv_a", 6.86e8),
+        ("inception_2/conv_b1", 3.43e8),
+        ("inception_2/conv_b2", 1.14e9),
+        ("inception_2/conv_c1", 8.58e7),
+        ("inception_2/conv_c2", 2.53e8),
+        ("inception_2/maxpool", 2.49e7),
+        ("inception_2/conv_d", 2.29e8),
+        ("inception_2/concat", 7.49e6),
+        ("avgpool", 2.51e6),
+        ("reshape", 0.0),
+        ("gemm", 2.67e7),
+        ("output", 3.51e4),
+    ]
+}
+
+fn table1() {
+    println!("\n## Table 1 — per-layer WCET bounds, GoogLeNet (Fig. 10)\n");
+    let net = zoo::googlenet(zoo::Scale::Paper);
+    let cm = CostModel::default();
+    let ours = layer_table(&net, &cm);
+    let paper: HashMap<&str, f64> = paper_table1().into_iter().collect();
+    let mut t = Table::new(&["Layer Name", "ours [cycles]", "paper/OTAWA [cycles]", "ratio"]);
+    let mut total = 0u64;
+    for (name, cycles) in &ours {
+        total += cycles;
+        let p = paper.get(name.as_str()).copied();
+        t.row(vec![
+            name.clone(),
+            sci(*cycles as f64),
+            p.map(sci).unwrap_or_else(|| "-".into()),
+            p.filter(|&v| v > 0.0)
+                .map(|v| format!("{:.2}", *cycles as f64 / v))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    let paper_total: f64 = paper.values().sum();
+    t.row(vec![
+        "Total Sum".into(),
+        sci(total as f64),
+        sci(paper_total),
+        format!("{:.2}", total as f64 / paper_total),
+    ]);
+    println!("{}", t.markdown());
+    let p = t.write_csv("table1").expect("csv");
+    println!("(csv: {})", p.display());
+}
+
+// ---------------------------------------------------------------- Table 2
+
+fn table2() {
+    println!("\n## Table 2 — synchronization-operator WCET bounds\n");
+    let net = zoo::googlenet(zoo::Scale::Paper);
+    let cm = CostModel::default();
+    let g = net.to_dag(&cm);
+    let sched = Dsh.schedule(&g, 4).schedule;
+    let comms = acetone::sched::derive_comms(&g, &sched);
+    let shapes = net.shapes();
+    let mut t = Table::new(&["Communication", "payload [KiB]", "ours [cycles]", "paper band"]);
+    for c in &comms {
+        let bytes = numel(&shapes[c.src]) * 4;
+        t.row(vec![
+            format!("{} ({} → core {})", c.tag(), g.name(c.src), c.dst_core),
+            format!("{:.1}", bytes as f64 / 1024.0),
+            sci(cm.comm_wcet(bytes) as f64),
+            "1.19e5 – 3.58e5".into(),
+        ]);
+    }
+    println!("{}", t.markdown());
+    let p = t.write_csv("table2").expect("csv");
+    println!("(csv: {})", p.display());
+    println!("paper: Write/Read operators between 1.19e5 and 3.58e5 cycles.");
+}
+
+// ---------------------------------------------------------------- Fig. 11
+
+fn fig11() {
+    println!("\n## Figure 11 — GoogLeNet scheduled on four cores (DSH)\n");
+    let net = zoo::googlenet(zoo::Scale::Paper);
+    let cm = CostModel::default();
+    let g = net.to_dag(&cm);
+    let sched = Dsh.schedule(&g, 4).schedule;
+    let programs = derive_programs(&g, &sched);
+    let width = 26;
+    let rows: Vec<Vec<String>> = programs
+        .iter()
+        .map(|p| {
+            p.steps
+                .iter()
+                .map(|s| match s {
+                    CoreStep::Compute { node, .. } => g.name(*node).to_string(),
+                    CoreStep::Write { comm } => format!("Write {}", comm.tag()),
+                    CoreStep::Read { comm } => format!("Read {}", comm.tag()),
+                })
+                .collect()
+        })
+        .collect();
+    let height = rows.iter().map(Vec::len).max().unwrap_or(0);
+    println!(
+        "{}",
+        (0..4).map(|c| format!("| {:<w$}", format!("P{c}"), w = width)).collect::<String>()
+    );
+    for i in 0..height {
+        let line: String = (0..4)
+            .map(|c| {
+                let cell = rows[c].get(i).cloned().unwrap_or_default();
+                format!("| {cell:<w$}", w = width)
+            })
+            .collect();
+        println!("{line}");
+    }
+    println!(
+        "\nmakespan = {} cycles; duplicates = {}; communications = {}",
+        sched.makespan(),
+        sched.duplication_count(),
+        acetone::sched::derive_comms(&g, &sched).len()
+    );
+}
+
+// ---------------------------------------------------------------- §5.4
+
+/// The parallelizable segment of Fig. 10: maxpool_2 … inception_2/concat.
+fn segment_nodes(net: &acetone::nn::Network) -> (usize, usize) {
+    let a = net.layers.iter().position(|l| l.name == "maxpool_2").unwrap();
+    let b = net
+        .layers
+        .iter()
+        .position(|l| l.name == "inception_2/concat")
+        .unwrap();
+    (a, b)
+}
+
+fn sec54() {
+    println!("\n## §5.4 — global WCET: sequential vs parallel (4 cores)\n");
+    let net = zoo::googlenet(zoo::Scale::Paper);
+    let cm = CostModel::default();
+    let g = net.to_dag(&cm);
+    let sched = Dsh.schedule(&g, 4).schedule;
+    let shapes = net.shapes();
+    let bytes = {
+        let shapes = shapes.clone();
+        move |v: usize| numel(&shapes[v]) * 4
+    };
+    let composed = compose_global(&g, &sched, &cm, &bytes);
+    let serial = serial_global(&g);
+    let gain = 100.0 * (1.0 - composed.makespan as f64 / serial as f64);
+
+    let (seg_a, seg_b) = segment_nodes(&net);
+    let serial_seg: u64 = (seg_a..=seg_b).map(|v| g.wcet(v)).sum();
+    let par_seg = composed.node_finish[&seg_b].saturating_sub(
+        composed.node_finish[&seg_a].saturating_sub(g.wcet(seg_a)),
+    );
+    let seg_gain = 100.0 * (1.0 - par_seg as f64 / serial_seg as f64);
+
+    let mut t = Table::new(&["quantity", "ours", "paper"]);
+    t.row(vec!["sequential WCET".into(), sci(serial as f64), "2.90e10".into()]);
+    t.row(vec!["parallel WCET (4 cores)".into(), sci(composed.makespan as f64), "2.68e10".into()]);
+    t.row(vec!["overall gain".into(), format!("{gain:.1}%"), "8%".into()]);
+    t.row(vec!["segment sequential".into(), sci(serial_seg as f64), "4.81e9".into()]);
+    t.row(vec!["segment parallel".into(), sci(par_seg as f64), "2.60e9".into()]);
+    t.row(vec!["segment gain".into(), format!("{seg_gain:.1}%"), "46%".into()]);
+    println!("{}", t.markdown());
+    let p = t.write_csv("sec54").expect("csv");
+    println!("(csv: {})", p.display());
+}
+
+// ---------------------------------------------------------------- Table 3
+
+/// Paper Table 3 (measured cycles) for the side-by-side.
+fn paper_table3() -> Vec<(&'static str, f64, f64)> {
+    vec![
+        ("input", 9.75e5, 3.34e6),
+        ("conv_1", 6.92e8, 6.86e8),
+        ("maxpool_1", 1.26e7, 1.32e7),
+        ("conv_2", 1.45e9, 1.45e9),
+        ("maxpool_2", 2.61e6, 2.62e6),
+        ("inception_1/conv_a", 1.36e7, 1.37e7),
+        ("inception_1/conv_b1", 8.46e6, 8.63e6),
+        ("inception_1/conv_b2", 6.29e7, 7.60e7),
+        ("inception_1/conv_c1", 7.53e6, 1.86e6),
+        ("inception_1/conv_c2", 1.16e7, 1.19e7),
+        ("inception_1/maxpool", 2.55e6, 2.49e6),
+        ("inception_1/conv_d", 6.96e6, 6.94e6),
+        ("inception_1/concat", 4.37e5, 4.56e5),
+        ("inception_2/conv_a", 2.03e7, 2.04e7),
+        ("inception_2/conv_b1", 1.01e7, 1.02e7),
+        ("inception_2/conv_b2", 9.48e7, 9.53e7),
+        ("inception_2/conv_c1", 2.54e6, 2.62e6),
+        ("inception_2/conv_c2", 1.76e7, 1.92e7),
+        ("inception_2/maxpool", 2.55e6, 2.62e6),
+        ("inception_2/conv_d", 6.90e6, 6.94e6),
+        ("inception_2/concat", 1.02e6, 5.29e5),
+        ("avgpool", 1.69e5, 1.42e5),
+        ("reshape", 0.0, 0.0),
+        ("gemm", 2.67e6, 2.69e6),
+        ("output", 3.22e3, 3.77e3),
+    ]
+}
+
+fn table3_comm(bytes: usize) -> u64 {
+    CostModel::default().comm_wcet(bytes)
+}
+
+fn table3() {
+    println!("\n## Table 3 — measured cycles on the (simulated) target, single vs multi core\n");
+    let net = zoo::googlenet(zoo::Scale::Paper);
+    let cm = CostModel::default();
+    let g = net.to_dag(&cm);
+    let shapes = net.shapes();
+    let sched = Dsh.schedule(&g, 4).schedule;
+
+    // The "measured" machine: execution-time jitter plus copy-contention on
+    // the Input layer (Table 3 Obs 1: multi-core interference on the
+    // memory-bound input copy).
+    let mut machine = Machine::exact(table3_comm);
+    for (i, s) in shapes.iter().enumerate() {
+        machine.payload_bytes.insert(i, numel(s) * 4);
+    }
+    machine.jitter = 0.02;
+    machine.seed = 7;
+    machine.copy_contention = 3.4;
+    machine.copy_nodes = net
+        .layers
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| matches!(l.op, acetone::nn::Op::Input { .. }))
+        .map(|(i, _)| i)
+        .collect();
+
+    let serial = simulate_serial(&g, &{
+        let mut m = machine.clone();
+        m.copy_contention = 1.0; // single core: no interference
+        m
+    });
+    let par = simulate(&g, &sched, &machine);
+
+    let paper: HashMap<&str, (f64, f64)> = paper_table3()
+        .into_iter()
+        .map(|(n, a, b)| (n, (a, b)))
+        .collect();
+    let mut t = Table::new(&[
+        "Layer name", "single-core [cyc]", "multi-core [cyc]", "paper single", "paper multi",
+    ]);
+    let serial_by_node: HashMap<usize, u64> = serial.node_cycles.clone().into_iter().collect();
+    for (i, l) in net.layers.iter().enumerate() {
+        let s = serial_by_node.get(&i).copied().unwrap_or(0);
+        let m = par.node_cycles.get(&i).copied().unwrap_or(0);
+        let (ps, pm) = paper.get(l.name.as_str()).copied().unwrap_or((0.0, 0.0));
+        t.row(vec![
+            l.name.clone(),
+            sci(s as f64),
+            sci(m as f64),
+            sci(ps),
+            sci(pm),
+        ]);
+    }
+    t.row(vec![
+        "Total".into(),
+        sci(serial.makespan as f64),
+        sci(par.makespan as f64),
+        "2.42e9".into(),
+        "2.22e9".into(),
+    ]);
+    println!("{}", t.markdown());
+    let p = t.write_csv("table3").expect("csv");
+    println!("(csv: {})", p.display());
+
+    let gain = 100.0 * (1.0 - par.makespan as f64 / serial.makespan as f64);
+    let (seg_a, seg_b) = segment_nodes(&net);
+    // Parallel-segment span on the simulated timeline.
+    let seg_start = par
+        .per_core
+        .iter()
+        .flatten()
+        .filter(|e| e.node == Some(seg_a))
+        .map(|e| e.start)
+        .min()
+        .unwrap_or(0);
+    let seg_end = par
+        .per_core
+        .iter()
+        .flatten()
+        .filter(|e| e.node == Some(seg_b))
+        .map(|e| e.end)
+        .max()
+        .unwrap_or(0);
+    let serial_seg: u64 = (seg_a..=seg_b).map(|v| serial_by_node[&v]).sum();
+    let seg_gain = 100.0 * (1.0 - (seg_end - seg_start) as f64 / serial_seg as f64);
+    println!(
+        "overall gain {gain:.1}% (paper: 8%); parallel-segment gain {seg_gain:.1}% \
+         (paper: 31% measured vs 46% statically predicted). Our simulator \
+         runs the full §5.2 protocol: on this schedule the gap comes from \
+         readers waiting on data + the comm-operator costs (total wait {} \
+         cycles, of which write-side stalls {} — see ablation-buffers).",
+        par.total_wait, par.write_wait
+    );
+}
+
+// ---------------------------------------------------------------- Figs. 3–6
+
+fn fig3456() {
+    println!("\n## Figures 3–6 — the worked 9-node example\n");
+    let g: Dag = acetone::graph::paper_example_dag();
+    println!("Fig. 3 DAG ({} nodes, width {}):\n{}", g.n(), g.width(), g.to_dot());
+    let ish = Ish.schedule(&g, 2);
+    println!(
+        "Fig. 4 — ISH on 2 cores: makespan {} (explored {})\n{}",
+        ish.schedule.makespan(),
+        ish.explored,
+        ish.schedule.gantt(&g)
+    );
+    let dsh = Dsh.schedule(&g, 2);
+    println!(
+        "Fig. 5 — DSH on 2 cores: makespan {} with {} duplicate(s)\n{}",
+        dsh.schedule.makespan(),
+        dsh.schedule.duplication_count(),
+        dsh.schedule.gantt(&g)
+    );
+    let bnb = acetone::sched::bnb::ChouChung::default().schedule(&g, 2);
+    println!(
+        "Fig. 6 — Chou–Chung exact search: optimal={} makespan {} ({} S-nodes explored)",
+        bnb.optimal,
+        bnb.schedule.makespan(),
+        bnb.explored
+    );
+}
+
+// ------------------------------------------------------------ Ablations
+
+/// §3.2 "finer parallelization": split convolutions into channel
+/// partitions and watch sequential LeNet-5 become schedulable.
+fn ablation_split() {
+    println!("\n## Ablation — finer-grained conv splitting (§3.2 / Fig. 2)\n");
+    let cm = CostModel::default();
+    let mut t = Table::new(&["network", "tasks", "width", "DSH speedup (4 cores)"]);
+    let base = zoo::lenet5(zoo::Scale::Paper);
+    for (label, net) in [
+        ("lenet5 (Fig. 1, sequential)".to_string(), base.clone()),
+        ("split k=2".to_string(), acetone::nn::transform::split_convs(&base, 2, 2)),
+        ("split k=4".to_string(), acetone::nn::transform::split_convs(&base, 4, 4)),
+        ("split k=8".to_string(), acetone::nn::transform::split_convs(&base, 8, 8)),
+    ] {
+        let g = net.to_dag(&cm);
+        let sp = Dsh.schedule(&g, 4).schedule.speedup(&g);
+        t.row(vec![
+            label,
+            g.n().to_string(),
+            g.width().to_string(),
+            format!("{sp:.3}"),
+        ]);
+    }
+    println!("{}", t.markdown());
+    let p = t.write_csv("ablation_split").expect("csv");
+    println!("(csv: {})", p.display());
+}
+
+/// §5.2 future work: non-blocking writes via deeper channel buffers —
+/// recovers the §5.4-predicted segment gain the single buffer loses.
+fn ablation_buffers() {
+    println!("\n## Ablation — channel buffer depth (§5.2 trade-off / future work)\n");
+    let net = zoo::googlenet(zoo::Scale::Paper);
+    let cm = CostModel::default();
+    let g = net.to_dag(&cm);
+    let shapes = net.shapes();
+    let sched = Dsh.schedule(&g, 4).schedule;
+    let mut t = Table::new(&["buffers/channel", "parallel makespan", "gain vs serial", "write-stall cycles", "total wait"]);
+    let serial = {
+        let mut machine = Machine::exact(table3_comm);
+        for (i, s) in shapes.iter().enumerate() {
+            machine.payload_bytes.insert(i, numel(s) * 4);
+        }
+        simulate_serial(&g, &machine).makespan
+    };
+    for cap in [1usize, 2, 4, 16] {
+        let mut machine = Machine::exact(table3_comm);
+        for (i, s) in shapes.iter().enumerate() {
+            machine.payload_bytes.insert(i, numel(s) * 4);
+        }
+        machine.channel_capacity = cap;
+        let r = simulate(&g, &sched, &machine);
+        t.row(vec![
+            cap.to_string(),
+            sci(r.makespan as f64),
+            format!("{:.1}%", 100.0 * (1.0 - r.makespan as f64 / serial as f64)),
+            sci(r.write_wait as f64),
+            sci(r.total_wait as f64),
+        ]);
+    }
+    println!("{}", t.markdown());
+    let p = t.write_csv("ablation_buffers").expect("csv");
+    println!("(csv: {})", p.display());
+    println!(
+        "GoogLeNet/DSH: ≤1 in-flight message per channel, so the single \
+         buffer never back-pressures — the §5.2 trade-off is free here."
+    );
+
+    // A communication-dense workload where the buffer DOES bite: dense
+    // random DAGs on two cores, ISH (no duplication → more transfers).
+    println!("\ncommunication-dense workload (n=40, density 30 %, 2 cores, ISH):\n");
+    let mut cfg = DagGenConfig::paper(40);
+    cfg.density = 0.30;
+    let mut t = Table::new(&["buffers/channel", "sim makespan (mean)", "write-stalls (mean)"]);
+    let set = generate_set(&cfg, 0xB0FF, 5);
+    for cap in [1usize, 2, 4, 16] {
+        let mut ms = Vec::new();
+        let mut stalls = Vec::new();
+        for g in &set {
+            let sched = Ish.schedule(g, 2).schedule;
+            let mut machine = Machine::exact(unit_comm);
+            machine.channel_capacity = cap;
+            let r = simulate(g, &sched, &machine);
+            ms.push(r.makespan as f64);
+            stalls.push(r.write_wait as f64);
+        }
+        t.row(vec![
+            cap.to_string(),
+            format!("{:.1}", mean(&ms)),
+            format!("{:.1}", mean(&stalls)),
+        ]);
+    }
+    println!("{}", t.markdown());
+    println!("shape: with many messages per channel, deeper buffers eliminate write stalls.");
+}
+
+fn unit_comm(_bytes: usize) -> u64 {
+    2
+}
+
+/// §2.1: the interference margin added to all WCET bounds.
+fn ablation_margin() {
+    println!("\n## Ablation — multi-core interference margin (§2.1)\n");
+    let mut t = Table::new(&["margin", "serial WCET", "parallel WCET (4c)", "gain"]);
+    for margin in [0.0, 0.05, 0.10, 0.20] {
+        let cm = CostModel { interference_margin: margin, ..CostModel::default() };
+        let net = zoo::googlenet(zoo::Scale::Paper);
+        let g = net.to_dag(&cm);
+        let shapes = net.shapes();
+        let sched = Dsh.schedule(&g, 4).schedule;
+        let bytes = {
+            let shapes = shapes.clone();
+            move |v: usize| numel(&shapes[v]) * 4
+        };
+        let composed = compose_global(&g, &sched, &cm, &bytes);
+        let serial = serial_global(&g);
+        t.row(vec![
+            format!("{:.0}%", margin * 100.0),
+            sci(serial as f64),
+            sci(composed.makespan as f64),
+            format!("{:.1}%", 100.0 * (1.0 - composed.makespan as f64 / serial as f64)),
+        ]);
+    }
+    println!("{}", t.markdown());
+    let p = t.write_csv("ablation_margin").expect("csv");
+    println!("(csv: {})", p.display());
+    println!("shape: the margin scales both bounds, leaving the relative gain stable —");
+    println!("the paper's justification for folding interference into a margin.");
+}
+
+/// §4.3's suggested hybrid: DSH warm start + CP refinement.
+fn hybrid_cmp(quick: bool) {
+    use acetone::sched::hybrid::Hybrid;
+    println!("\n## §4.3 — hybrid DSH+CP vs its components\n");
+    let graphs = if quick { 3 } else { 5 };
+    let budget = Duration::from_secs(if quick { 2 } else { 10 });
+    let mut t = Table::new(&["nodes", "cores", "solver", "makespan(mean)", "time(mean)"]);
+    for (n, m) in [(20usize, 4usize), (30, 4)] {
+        let set = generate_set(&DagGenConfig::paper(n), 0x4B1D + n as u64, graphs);
+        let solvers: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(Dsh),
+            Box::new(CpSolver::new(CpConfig {
+                encoding: Encoding::Improved,
+                timeout: budget,
+                warm_start: None,
+            })),
+            Box::new(Hybrid { cp_timeout: budget }),
+        ];
+        for s in solvers {
+            let mut ms = Vec::new();
+            let mut times = Vec::new();
+            for g in &set {
+                let r = s.schedule(g, m);
+                ms.push(r.schedule.makespan() as f64);
+                times.push(r.solve_time);
+            }
+            t.row(vec![
+                n.to_string(),
+                m.to_string(),
+                s.name().into(),
+                format!("{:.1}", mean(&ms)),
+                format!("{:.4}s", mean_secs(&times)),
+            ]);
+        }
+    }
+    println!("{}", t.markdown());
+    let p = t.write_csv("hybrid").expect("csv");
+    println!("(csv: {})", p.display());
+    println!("shape: hybrid ≤ DSH always, at CP-level cost — the paper's suggested compromise.");
+}

@@ -1,0 +1,184 @@
+//! Per-operator C loop-nest emitters.
+//!
+//! The emitted code mirrors `nn::eval` operation-for-operation (same SAME-
+//! padding offsets, same accumulation order), so the generated C, the Rust
+//! oracle and the XLA artifacts agree to float rounding. These are the
+//! "default templates" of ACETONE's layer objects (§5.1).
+
+use crate::nn::{Op, Padding};
+use std::fmt::Write as _;
+
+/// JAX-convention SAME padding offset (mirror of eval::pad_before).
+fn pad_before(input: usize, k: usize, stride: usize, padding: Padding, out: usize) -> i64 {
+    match padding {
+        Padding::Valid => 0,
+        Padding::Same => (((out - 1) * stride + k).saturating_sub(input) / 2) as i64,
+    }
+}
+
+/// Emit the C statements computing `op` from input buffers `ins` into
+/// `dst`. `in_shapes[k]` is the shape of `ins[k]`; `out_shape` the output.
+pub fn emit_op(
+    name: &str,
+    op: &Op,
+    ins: &[String],
+    in_shapes: &[Vec<usize>],
+    out_shape: &[usize],
+    dst: &str,
+) -> String {
+    let mut c = String::new();
+    let w = super::sanitize(name);
+    match op {
+        Op::Split => {
+            let n: usize = out_shape.iter().product();
+            let _ = writeln!(
+                c,
+                "  for (int i = 0; i < {n}; ++i) {dst}[i] = {src}[i];",
+                src = ins[0]
+            );
+        }
+        Op::Concat => {
+            let (h, wd, cout) = (out_shape[0], out_shape[1], out_shape[2]);
+            let _ = writeln!(c, "  for (int h = 0; h < {h}; ++h)");
+            let _ = writeln!(c, "    for (int x = 0; x < {wd}; ++x) {{");
+            let mut off = 0usize;
+            for (k, src) in ins.iter().enumerate() {
+                let ch = in_shapes[k][2];
+                let _ = writeln!(
+                    c,
+                    "      for (int ch = 0; ch < {ch}; ++ch)\n        \
+                     {dst}[(h*{wd}+x)*{cout} + {off} + ch] = {src}[(h*{iw}+x)*{ch} + ch];",
+                    iw = in_shapes[k][1],
+                );
+                off += ch;
+            }
+            let _ = writeln!(c, "    }}");
+        }
+        Op::Conv2D { out_ch, kh, kw, stride, padding, relu } => {
+            let (ih, iw, cin) = (in_shapes[0][0], in_shapes[0][1], in_shapes[0][2]);
+            let (oh, ow) = (out_shape[0], out_shape[1]);
+            let ph = pad_before(ih, *kh, *stride, *padding, oh);
+            let pw = pad_before(iw, *kw, *stride, *padding, ow);
+            let src = &ins[0];
+            let _ = writeln!(c, "  for (int oh = 0; oh < {oh}; ++oh)");
+            let _ = writeln!(c, "    for (int ow = 0; ow < {ow}; ++ow)");
+            let _ = writeln!(c, "      for (int oc = 0; oc < {out_ch}; ++oc) {{");
+            let _ = writeln!(c, "        float acc = b_{w}[oc];");
+            let _ = writeln!(c, "        for (int fh = 0; fh < {kh}; ++fh)");
+            let _ = writeln!(c, "          for (int fw = 0; fw < {kw}; ++fw) {{");
+            let _ = writeln!(
+                c,
+                "            int ihh = oh*{stride} + fh - {ph};\n            \
+                 int iww = ow*{stride} + fw - {pw};\n            \
+                 if (ihh < 0 || iww < 0 || ihh >= {ih} || iww >= {iw}) continue;"
+            );
+            let _ = writeln!(
+                c,
+                "            for (int ic = 0; ic < {cin}; ++ic)\n              \
+                 acc += {src}[(ihh*{iw}+iww)*{cin}+ic] * \
+                 w_{w}[((fh*{kw}+fw)*{cin}+ic)*{out_ch}+oc];"
+            );
+            let _ = writeln!(c, "          }}");
+            if *relu {
+                let _ = writeln!(c, "        if (acc < 0.f) acc = 0.f;");
+            }
+            let _ = writeln!(c, "        {dst}[(oh*{ow}+ow)*{out_ch}+oc] = acc;");
+            let _ = writeln!(c, "      }}");
+        }
+        Op::MaxPool { k, stride, padding } | Op::AvgPool { k, stride, padding } => {
+            let is_max = matches!(op, Op::MaxPool { .. });
+            let (ih, iw, ch) = (in_shapes[0][0], in_shapes[0][1], in_shapes[0][2]);
+            let (oh, ow) = (out_shape[0], out_shape[1]);
+            let ph = pad_before(ih, *k, *stride, *padding, oh);
+            let pw = pad_before(iw, *k, *stride, *padding, ow);
+            let src = &ins[0];
+            let _ = writeln!(c, "  for (int oh = 0; oh < {oh}; ++oh)");
+            let _ = writeln!(c, "    for (int ow = 0; ow < {ow}; ++ow)");
+            let _ = writeln!(c, "      for (int ch = 0; ch < {ch}; ++ch) {{");
+            if is_max {
+                let _ = writeln!(c, "        float acc = -3.402823466e+38f;");
+            } else {
+                let _ = writeln!(c, "        float acc = 0.f;\n        int cnt = 0;");
+            }
+            let _ = writeln!(c, "        for (int fh = 0; fh < {k}; ++fh)");
+            let _ = writeln!(c, "          for (int fw = 0; fw < {k}; ++fw) {{");
+            let _ = writeln!(
+                c,
+                "            int ihh = oh*{stride} + fh - {ph};\n            \
+                 int iww = ow*{stride} + fw - {pw};\n            \
+                 if (ihh < 0 || iww < 0 || ihh >= {ih} || iww >= {iw}) continue;"
+            );
+            let _ = writeln!(c, "            float v = {src}[(ihh*{iw}+iww)*{ch}+ch];");
+            if is_max {
+                let _ = writeln!(c, "            if (v > acc) acc = v;");
+            } else {
+                let _ = writeln!(c, "            acc += v; ++cnt;");
+            }
+            let _ = writeln!(c, "          }}");
+            if is_max {
+                let _ = writeln!(c, "        {dst}[(oh*{ow}+ow)*{ch}+ch] = acc;");
+            } else {
+                let _ = writeln!(
+                    c,
+                    "        {dst}[(oh*{ow}+ow)*{ch}+ch] = cnt ? acc / (float)cnt : 0.f;"
+                );
+            }
+            let _ = writeln!(c, "      }}");
+        }
+        Op::Dense { units, relu } => {
+            let n_in = in_shapes[0][0];
+            let src = &ins[0];
+            let _ = writeln!(c, "  for (int u = 0; u < {units}; ++u) {{");
+            let _ = writeln!(c, "    float acc = b_{w}[u];");
+            let _ = writeln!(
+                c,
+                "    for (int i = 0; i < {n_in}; ++i) acc += {src}[i] * w_{w}[i*{units}+u];"
+            );
+            if *relu {
+                let _ = writeln!(c, "    if (acc < 0.f) acc = 0.f;");
+            }
+            let _ = writeln!(c, "    {dst}[u] = acc;");
+            let _ = writeln!(c, "  }}");
+        }
+        Op::Input { .. } | Op::Output | Op::Reshape { .. } => {
+            unreachable!("handled by the caller");
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_emits_bounds_checks_and_relu() {
+        let op = Op::Conv2D { out_ch: 2, kh: 3, kw: 3, stride: 1, padding: Padding::Same, relu: true };
+        let s = emit_op(
+            "conv_1",
+            &op,
+            &["in0".into()],
+            &[vec![8, 8, 1]],
+            &[8, 8, 2],
+            "out0",
+        );
+        assert!(s.contains("b_conv_1[oc]"));
+        assert!(s.contains("if (ihh < 0"));
+        assert!(s.contains("acc = 0.f"));
+    }
+
+    #[test]
+    fn dense_emits_gemm_loop() {
+        let op = Op::Dense { units: 4, relu: false };
+        let s = emit_op("gemm", &op, &["x".into()], &[vec![10]], &[4], "y");
+        assert!(s.contains("w_gemm[i*4+u]"));
+        assert!(!s.contains("acc = 0.f;\n    y"));
+    }
+
+    #[test]
+    fn avgpool_counts_valid_elements() {
+        let op = Op::AvgPool { k: 2, stride: 2, padding: Padding::Valid };
+        let s = emit_op("p", &op, &["x".into()], &[vec![4, 4, 1]], &[2, 2, 1], "y");
+        assert!(s.contains("acc / (float)cnt"));
+    }
+}

@@ -1,0 +1,196 @@
+//! Shared-memory flag/buffer channels (§5.2).
+//!
+//! For each ordered pair of cores `(i, j)` the platform reserves **one**
+//! flag and **one** array in shared memory — `2m(m−1)` variables on an
+//! m-core target (760 for m = 20, 24 for m = 4, as §5.2 counts). All
+//! transfers from `i` to `j` reuse the same buffer, identified by sequence
+//! number.
+//!
+//! Protocol (mirrored by the generated C code and by the simulator):
+//! the flag counts half-handshakes. For message `k`:
+//! * the **Writing** operator spins until `flag == 2k` (the reader has
+//!   consumed message `k−1`), copies the payload into the array, then
+//!   publishes `flag = 2k+1`;
+//! * the **Reading** operator spins until `flag == 2k+1`, copies the array
+//!   into its local buffer, then releases `flag = 2k+2`.
+//!
+//! The flag alternation makes writer and reader mutually exclusive on the
+//! buffer, so no additional lock is needed; a `Mutex` still guards the
+//! `Vec` to keep the Rust implementation safe (it is never contended —
+//! each side only touches the buffer while it holds the flag).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// One single-buffer channel from a fixed source core to a fixed
+/// destination core.
+pub struct Channel {
+    flag: AtomicU64,
+    buf: Mutex<Vec<f32>>,
+}
+
+/// How long a spin may last before the run is declared deadlocked.
+const SPIN_TIMEOUT: Duration = Duration::from_secs(20);
+
+impl Channel {
+    pub fn new() -> Self {
+        Self { flag: AtomicU64::new(0), buf: Mutex::new(Vec::new()) }
+    }
+
+    fn spin_until(&self, expected: u64, who: &str, seq: usize) {
+        let start = Instant::now();
+        let mut spins = 0u64;
+        while self.flag.load(Ordering::Acquire) != expected {
+            spins += 1;
+            if spins % 1024 == 0 {
+                // §5.2's bare-metal code busy-waits; on a hosted target we
+                // yield so single-CPU machines still make progress.
+                std::thread::yield_now();
+                if start.elapsed() > SPIN_TIMEOUT {
+                    panic!(
+                        "channel deadlock: {who} waiting for flag={expected} \
+                         (msg {seq}), stuck at {}",
+                        self.flag.load(Ordering::Acquire)
+                    );
+                }
+            }
+        }
+    }
+
+    /// Writing operator for message `seq` (Algorithm 2, ll. 12–19).
+    pub fn write(&self, seq: usize, data: &[f32]) {
+        self.spin_until(2 * seq as u64, "writer", seq);
+        {
+            let mut buf = self.buf.lock().unwrap();
+            buf.clear();
+            buf.extend_from_slice(data);
+        }
+        self.flag.store(2 * seq as u64 + 1, Ordering::Release);
+    }
+
+    /// Reading operator for message `seq` (Algorithm 3, ll. 3–8).
+    pub fn read(&self, seq: usize, out: &mut Vec<f32>) {
+        self.spin_until(2 * seq as u64 + 1, "reader", seq);
+        {
+            let buf = self.buf.lock().unwrap();
+            out.clear();
+            out.extend_from_slice(&buf);
+        }
+        self.flag.store(2 * seq as u64 + 2, Ordering::Release);
+    }
+
+    /// Non-blocking probe: may message `seq` be written now?
+    pub fn can_write(&self, seq: usize) -> bool {
+        self.flag.load(Ordering::Acquire) == 2 * seq as u64
+    }
+
+    /// Non-blocking probe: may message `seq` be read now?
+    pub fn can_read(&self, seq: usize) -> bool {
+        self.flag.load(Ordering::Acquire) == 2 * seq as u64 + 1
+    }
+}
+
+impl Default for Channel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The full `m × m` channel matrix (diagonal unused): the §5.2 allocation
+/// of `m(m−1)` flags and `m(m−1)` arrays.
+pub struct ChannelMatrix {
+    m: usize,
+    channels: Vec<Channel>,
+}
+
+impl ChannelMatrix {
+    pub fn new(m: usize) -> Self {
+        Self { m, channels: (0..m * m).map(|_| Channel::new()).collect() }
+    }
+
+    pub fn channel(&self, src: usize, dst: usize) -> &Channel {
+        assert_ne!(src, dst, "no self-channel");
+        assert!(src < self.m && dst < self.m);
+        &self.channels[src * self.m + dst]
+    }
+
+    /// Number of synchronization variables introduced (§5.2: flags +
+    /// arrays = 2m(m−1)).
+    pub fn sync_variable_count(&self) -> usize {
+        2 * self.m * (self.m - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn single_message_roundtrip() {
+        let ch = Channel::new();
+        assert!(ch.can_write(0));
+        assert!(!ch.can_read(0));
+        ch.write(0, &[1.0, 2.0, 3.0]);
+        assert!(ch.can_read(0));
+        let mut out = Vec::new();
+        ch.read(0, &mut out);
+        assert_eq!(out, vec![1.0, 2.0, 3.0]);
+        assert!(ch.can_write(1));
+    }
+
+    #[test]
+    fn sequenced_messages_across_threads() {
+        let ch = Arc::new(Channel::new());
+        let n_msgs = 64usize;
+        let writer = {
+            let ch = Arc::clone(&ch);
+            std::thread::spawn(move || {
+                for k in 0..n_msgs {
+                    ch.write(k, &[k as f32; 8]);
+                }
+            })
+        };
+        let mut out = Vec::new();
+        for k in 0..n_msgs {
+            ch.read(k, &mut out);
+            assert_eq!(out, vec![k as f32; 8], "message {k}");
+        }
+        writer.join().unwrap();
+    }
+
+    #[test]
+    fn writer_blocks_until_reader_consumes() {
+        // §5.2: "the sender does not overwrite data that has yet to be
+        // handled". Write msg 0; msg 1 must not be writable yet.
+        let ch = Channel::new();
+        ch.write(0, &[1.0]);
+        assert!(!ch.can_write(1), "buffer still holds unread msg 0");
+        let mut out = Vec::new();
+        ch.read(0, &mut out);
+        assert!(ch.can_write(1));
+    }
+
+    #[test]
+    fn matrix_counts_match_paper() {
+        // §5.2: 24 variables for 4 cores, 760 for 20.
+        assert_eq!(ChannelMatrix::new(4).sync_variable_count(), 24);
+        assert_eq!(ChannelMatrix::new(20).sync_variable_count(), 760);
+    }
+
+    #[test]
+    fn matrix_channels_are_distinct() {
+        let mx = ChannelMatrix::new(3);
+        mx.channel(0, 1).write(0, &[7.0]);
+        assert!(mx.channel(0, 1).can_read(0));
+        assert!(!mx.channel(1, 0).can_read(0));
+        assert!(!mx.channel(0, 2).can_read(0));
+    }
+
+    #[test]
+    #[should_panic(expected = "no self-channel")]
+    fn self_channel_rejected() {
+        ChannelMatrix::new(2).channel(1, 1);
+    }
+}

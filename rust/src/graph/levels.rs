@@ -1,0 +1,107 @@
+//! Node levels for list scheduling (§3.3).
+//!
+//! Kruatrachue's heuristics assign each node a *static level*: "the sum of
+//! all node execution times alongside the longest valid path from the node
+//! to the leaf". Communication weights are deliberately excluded — the level
+//! is a pure computation-length priority.
+
+use super::{Cycles, Dag, NodeId};
+
+/// Static (bottom) level of every node: `lvl(v) = t(v) + max over children
+/// lvl(c)`, 0-based on WCETs only (no communication terms).
+pub fn static_levels(g: &Dag) -> Vec<Cycles> {
+    let mut lvl = vec![0; g.n()];
+    for &v in g.topo_order().iter().rev() {
+        let best_child = g.children(v).iter().map(|&(c, _)| lvl[c]).max().unwrap_or(0);
+        lvl[v] = g.wcet(v) + best_child;
+    }
+    lvl
+}
+
+/// Top level of every node: longest compute path from any source up to but
+/// excluding `v`. `top(v) + t(v) + bottom-level-below(v)` bounds the
+/// critical path through `v`; used for lower bounds in the exact solvers.
+pub fn top_levels(g: &Dag) -> Vec<Cycles> {
+    let mut top = vec![0; g.n()];
+    for &v in &g.topo_order() {
+        for &(c, _) in g.children(v) {
+            top[c] = top[c].max(top[v] + g.wcet(v));
+        }
+    }
+    top
+}
+
+/// Length of the critical (longest compute) path: a makespan lower bound on
+/// any number of cores, because duplication never shortens a dependency
+/// chain.
+pub fn critical_path_len(g: &Dag) -> Cycles {
+    static_levels(g).into_iter().max().unwrap_or(0)
+}
+
+/// Nodes on some critical path (level + top-level == critical path length).
+pub fn critical_nodes(g: &Dag) -> Vec<NodeId> {
+    let lvl = static_levels(g);
+    let top = top_levels(g);
+    let cp = critical_path_len(g);
+    (0..g.n()).filter(|&v| top[v] + lvl[v] == cp).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::paper_example_dag;
+
+    #[test]
+    fn chain_levels() {
+        let mut g = Dag::new();
+        let a = g.add_node("a", 3);
+        let b = g.add_node("b", 4);
+        let c = g.add_node("c", 5);
+        g.add_edge(a, b, 10);
+        g.add_edge(b, c, 10);
+        let lvl = static_levels(&g);
+        // Communication weights must NOT contribute.
+        assert_eq!(lvl, vec![12, 9, 5]);
+        assert_eq!(critical_path_len(&g), 12);
+        assert_eq!(top_levels(&g), vec![0, 3, 7]);
+        assert_eq!(critical_nodes(&g), vec![a, b, c]);
+    }
+
+    #[test]
+    fn diamond_levels() {
+        let mut g = Dag::new();
+        let a = g.add_node("a", 1);
+        let b = g.add_node("b", 2);
+        let c = g.add_node("c", 7);
+        let d = g.add_node("d", 1);
+        g.add_edge(a, b, 1);
+        g.add_edge(a, c, 1);
+        g.add_edge(b, d, 1);
+        g.add_edge(c, d, 1);
+        let lvl = static_levels(&g);
+        assert_eq!(lvl[a], 1 + 7 + 1);
+        assert_eq!(lvl[b], 3);
+        assert_eq!(lvl[c], 8);
+        assert_eq!(lvl[d], 1);
+        assert_eq!(critical_nodes(&g), vec![a, c, d]);
+    }
+
+    #[test]
+    fn example_dag_levels_order_nodes_for_fig4() {
+        // In Fig. 4's ready queue, node 3 (level 3) is parsed before node 2
+        // (level 1 in the figure's queue column — its level there counts
+        // only itself plus descendants).
+        let g = paper_example_dag();
+        let lvl = static_levels(&g);
+        assert!(lvl[2] > lvl[1], "node 3 must outrank node 2");
+    }
+
+    #[test]
+    fn levels_monotone_along_edges() {
+        let g = paper_example_dag();
+        let lvl = static_levels(&g);
+        for (u, v, _) in g.edges() {
+            assert!(lvl[u] > lvl[v], "level must strictly decrease along edges");
+        }
+    }
+}

@@ -1,0 +1,385 @@
+//! Task-graph substrate: the DAG model of §2.2.
+//!
+//! A directed acyclic graph `(V, E, t, w)` where nodes are network layers
+//! (tasks), `t(v)` is the per-node WCET in cycles, and `w(e)` is the
+//! communication latency paid when the two endpoints of `e` execute on
+//! different cores. All times are integer cycles (`u64`): the paper samples
+//! integer weights from U[1,10] and OTAWA bounds are integral cycle counts.
+
+mod levels;
+mod single_sink;
+
+pub use levels::{critical_nodes, critical_path_len, static_levels, top_levels};
+pub use single_sink::ensure_single_sink;
+
+use std::collections::VecDeque;
+
+/// Index of a node in a [`Dag`].
+pub type NodeId = usize;
+
+/// Cycle count (WCET or communication latency).
+pub type Cycles = u64;
+
+/// A directed acyclic task graph `(V, E, t, w)` (§2.2).
+///
+/// Edges are stored in both directions (children and parents) for O(1)
+/// neighbourhood queries, which every scheduler in `crate::sched` relies on.
+#[derive(Debug, Clone, Default)]
+pub struct Dag {
+    names: Vec<String>,
+    wcet: Vec<Cycles>,
+    /// `children[u]` = outgoing edges `(v, w(u→v))`.
+    children: Vec<Vec<(NodeId, Cycles)>>,
+    /// `parents[v]` = incoming edges `(u, w(u→v))`.
+    parents: Vec<Vec<(NodeId, Cycles)>>,
+}
+
+impl Dag {
+    /// Empty graph.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a node with the given display name and WCET; returns its id.
+    pub fn add_node(&mut self, name: impl Into<String>, wcet: Cycles) -> NodeId {
+        let id = self.names.len();
+        self.names.push(name.into());
+        self.wcet.push(wcet);
+        self.children.push(Vec::new());
+        self.parents.push(Vec::new());
+        id
+    }
+
+    /// Add edge `u → v` with communication latency `w`.
+    ///
+    /// Panics if the edge would duplicate an existing one or if `u == v`.
+    pub fn add_edge(&mut self, u: NodeId, v: NodeId, w: Cycles) {
+        assert_ne!(u, v, "self-loop");
+        assert!(
+            !self.children[u].iter().any(|&(c, _)| c == v),
+            "duplicate edge {u}->{v}"
+        );
+        self.children[u].push((v, w));
+        self.parents[v].push((u, w));
+    }
+
+    /// Number of nodes `|V|`.
+    pub fn n(&self) -> usize {
+        self.names.len()
+    }
+
+    /// Number of edges `|E|`.
+    pub fn edge_count(&self) -> usize {
+        self.children.iter().map(Vec::len).sum()
+    }
+
+    /// WCET `t(v)`.
+    pub fn wcet(&self, v: NodeId) -> Cycles {
+        self.wcet[v]
+    }
+
+    /// Override `t(v)` (used when re-annotating a network DAG with a
+    /// different cost model).
+    pub fn set_wcet(&mut self, v: NodeId, t: Cycles) {
+        self.wcet[v] = t;
+    }
+
+    /// Display name of `v`.
+    pub fn name(&self, v: NodeId) -> &str {
+        &self.names[v]
+    }
+
+    /// Outgoing edges of `u` as `(child, w)`.
+    pub fn children(&self, u: NodeId) -> &[(NodeId, Cycles)] {
+        &self.children[u]
+    }
+
+    /// Incoming edges of `v` as `(parent, w)`.
+    pub fn parents(&self, v: NodeId) -> &[(NodeId, Cycles)] {
+        &self.parents[v]
+    }
+
+    /// Latency of edge `u → v`, if present.
+    pub fn edge_weight(&self, u: NodeId, v: NodeId) -> Option<Cycles> {
+        self.children[u].iter().find(|&&(c, _)| c == v).map(|&(_, w)| w)
+    }
+
+    /// All edges `(u, v, w)`.
+    pub fn edges(&self) -> impl Iterator<Item = (NodeId, NodeId, Cycles)> + '_ {
+        self.children
+            .iter()
+            .enumerate()
+            .flat_map(|(u, cs)| cs.iter().map(move |&(v, w)| (u, v, w)))
+    }
+
+    /// Nodes with no parents.
+    pub fn sources(&self) -> Vec<NodeId> {
+        (0..self.n()).filter(|&v| self.parents[v].is_empty()).collect()
+    }
+
+    /// Nodes with no children.
+    pub fn sinks(&self) -> Vec<NodeId> {
+        (0..self.n()).filter(|&v| self.children[v].is_empty()).collect()
+    }
+
+    /// The unique sink, if the graph has exactly one.
+    pub fn single_sink(&self) -> Option<NodeId> {
+        let s = self.sinks();
+        (s.len() == 1).then(|| s[0])
+    }
+
+    /// Sum of all node WCETs: the single-core makespan (no idle time is ever
+    /// needed on one core) and the "theoretical maximum" of constraint (13).
+    pub fn total_wcet(&self) -> Cycles {
+        self.wcet.iter().sum()
+    }
+
+    /// Kahn topological order. Panics if the graph has a cycle (the
+    /// constructors in `daggen`/`nn` only build acyclic graphs; a cycle here
+    /// is a programming error).
+    pub fn topo_order(&self) -> Vec<NodeId> {
+        let mut indeg: Vec<usize> = (0..self.n()).map(|v| self.parents[v].len()).collect();
+        let mut queue: VecDeque<NodeId> =
+            (0..self.n()).filter(|&v| indeg[v] == 0).collect();
+        let mut order = Vec::with_capacity(self.n());
+        while let Some(u) = queue.pop_front() {
+            order.push(u);
+            for &(v, _) in &self.children[u] {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    queue.push_back(v);
+                }
+            }
+        }
+        assert_eq!(order.len(), self.n(), "graph has a cycle");
+        order
+    }
+
+    /// True if the edge relation is acyclic (checked without panicking).
+    pub fn is_acyclic(&self) -> bool {
+        let mut indeg: Vec<usize> = (0..self.n()).map(|v| self.parents[v].len()).collect();
+        let mut queue: VecDeque<NodeId> =
+            (0..self.n()).filter(|&v| indeg[v] == 0).collect();
+        let mut seen = 0;
+        while let Some(u) = queue.pop_front() {
+            seen += 1;
+            for &(v, _) in &self.children[u] {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    queue.push_back(v);
+                }
+            }
+        }
+        seen == self.n()
+    }
+
+    /// Maximum width of the DAG: the size of the largest antichain, i.e. the
+    /// paper's "maximal parallelization value" (§4.2 Observation 1) — the
+    /// number of cores beyond which speedup plateaus.
+    ///
+    /// Computed exactly via Dilworth's theorem: width = |V| − (maximum
+    /// matching in the bipartite graph of the transitive closure).
+    pub fn width(&self) -> usize {
+        let n = self.n();
+        // Transitive closure by DFS from each node (n ≤ a few hundred).
+        let mut reach = vec![vec![false; n]; n];
+        for u in self.topo_order().into_iter().rev() {
+            for &(v, _) in &self.children[u] {
+                reach[u][v] = true;
+                for x in 0..n {
+                    if reach[v][x] {
+                        reach[u][x] = true;
+                    }
+                }
+            }
+        }
+        // Hopcroft–Karp is overkill: simple Hungarian augmenting paths.
+        let mut match_r: Vec<Option<usize>> = vec![None; n];
+        fn try_assign(
+            u: usize,
+            reach: &[Vec<bool>],
+            visited: &mut [bool],
+            match_r: &mut [Option<usize>],
+        ) -> bool {
+            for v in 0..reach.len() {
+                if reach[u][v] && !visited[v] {
+                    visited[v] = true;
+                    if match_r[v].is_none()
+                        || try_assign(match_r[v].unwrap(), reach, visited, match_r)
+                    {
+                        match_r[v] = Some(u);
+                        return true;
+                    }
+                }
+            }
+            false
+        }
+        let mut matched = 0;
+        for u in 0..n {
+            let mut visited = vec![false; n];
+            if try_assign(u, &reach, &mut visited, &mut match_r) {
+                matched += 1;
+            }
+        }
+        n - matched
+    }
+
+    /// Edge density as defined by Eq. (14): `|E| / (|V|(|V|−1)/2)`.
+    pub fn density(&self) -> f64 {
+        let n = self.n() as f64;
+        self.edge_count() as f64 / (n * (n - 1.0) / 2.0)
+    }
+
+    /// Graphviz DOT rendering (node label = `name\nt(v)`, edge label = `w`).
+    pub fn to_dot(&self) -> String {
+        let mut s = String::from("digraph dag {\n  rankdir=TB;\n");
+        for v in 0..self.n() {
+            s.push_str(&format!(
+                "  n{} [label=\"{}\\nt={}\"];\n",
+                v,
+                self.names[v],
+                self.wcet[v]
+            ));
+        }
+        for (u, v, w) in self.edges() {
+            s.push_str(&format!("  n{u} -> n{v} [label=\"{w}\"];\n"));
+        }
+        s.push_str("}\n");
+        s
+    }
+}
+
+/// The 9-node example DAG of Fig. 3 (black part), used throughout the
+/// paper's worked examples (Figs. 4–6). Node ids are `label − 1`.
+///
+/// WCETs (underlined in the figure) and edge latencies (gray) are chosen to
+/// reproduce the published Gantt charts exactly:
+/// * ISH on 2 cores schedules 1,6 on P1, 5 on P2, inserts node 2 into the
+///   idle slot [5,6) created while waiting for node 5's data (Fig. 4);
+/// * DSH duplicates node 1 onto P2 to remove the 1→5 communication (Fig. 5).
+pub fn paper_example_dag() -> Dag {
+    let mut g = Dag::new();
+    // label:        1  2  3  4  5  6  7  8  9
+    let t = [1u64, 1, 2, 1, 2, 3, 3, 2, 1];
+    let ids: Vec<NodeId> = (0..9)
+        .map(|i| g.add_node(format!("{}", i + 1), t[i]))
+        .collect();
+    // Fan-out from node 1 to five parallel branches (width 5, §4.2 Obs. 1
+    // names this graph's maximal parallelism as 5).
+    g.add_edge(ids[0], ids[1], 1); // 1→2
+    g.add_edge(ids[0], ids[2], 2); // 1→3
+    g.add_edge(ids[0], ids[3], 1); // 1→4
+    g.add_edge(ids[0], ids[4], 1); // 1→5  (w=1: P2 can start node 5 at 2)
+    g.add_edge(ids[0], ids[5], 1); // 1→6
+    g.add_edge(ids[4], ids[6], 2); // 5→7  (w=2: comm delay seen in Fig. 4)
+    g.add_edge(ids[5], ids[6], 1); // 6→7
+    g.add_edge(ids[1], ids[7], 1); // 2→8
+    g.add_edge(ids[2], ids[7], 1); // 3→8
+    g.add_edge(ids[3], ids[8], 1); // 4→9
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_query() {
+        let mut g = Dag::new();
+        let a = g.add_node("a", 3);
+        let b = g.add_node("b", 4);
+        g.add_edge(a, b, 2);
+        assert_eq!(g.n(), 2);
+        assert_eq!(g.edge_count(), 1);
+        assert_eq!(g.wcet(a), 3);
+        assert_eq!(g.edge_weight(a, b), Some(2));
+        assert_eq!(g.edge_weight(b, a), None);
+        assert_eq!(g.children(a), &[(b, 2)]);
+        assert_eq!(g.parents(b), &[(a, 2)]);
+        assert_eq!(g.sources(), vec![a]);
+        assert_eq!(g.sinks(), vec![b]);
+        assert_eq!(g.total_wcet(), 7);
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let g = paper_example_dag();
+        let order = g.topo_order();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; g.n()];
+            for (i, &v) in order.iter().enumerate() {
+                p[v] = i;
+            }
+            p
+        };
+        for (u, v, _) in g.edges() {
+            assert!(pos[u] < pos[v], "edge {u}->{v} violates topo order");
+        }
+    }
+
+    #[test]
+    fn acyclicity() {
+        let g = paper_example_dag();
+        assert!(g.is_acyclic());
+    }
+
+    #[test]
+    fn example_dag_shape() {
+        let g = paper_example_dag();
+        assert_eq!(g.n(), 9);
+        // Fig. 3's graph has several sinks before the one-sink transform.
+        assert!(g.sinks().len() > 1);
+        // §4.2 Observation 1: maximal parallelism of the Fig. 3 graph is 5.
+        assert_eq!(g.width(), 5);
+    }
+
+    #[test]
+    fn width_of_chain_is_one() {
+        let mut g = Dag::new();
+        let a = g.add_node("a", 1);
+        let b = g.add_node("b", 1);
+        let c = g.add_node("c", 1);
+        g.add_edge(a, b, 1);
+        g.add_edge(b, c, 1);
+        assert_eq!(g.width(), 1);
+    }
+
+    #[test]
+    fn width_of_independent_nodes() {
+        let mut g = Dag::new();
+        for i in 0..4 {
+            g.add_node(format!("{i}"), 1);
+        }
+        assert_eq!(g.width(), 4);
+    }
+
+    #[test]
+    fn density_formula() {
+        let mut g = Dag::new();
+        let a = g.add_node("a", 1);
+        let b = g.add_node("b", 1);
+        let c = g.add_node("c", 1);
+        g.add_edge(a, b, 1);
+        g.add_edge(a, c, 1);
+        // 2 edges / (3·2/2 = 3) = 2/3
+        assert!((g.density() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dot_contains_nodes_and_edges() {
+        let g = paper_example_dag();
+        let dot = g.to_dot();
+        assert!(dot.contains("digraph"));
+        assert!(dot.contains("n0 -> n1"));
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate edge")]
+    fn duplicate_edge_panics() {
+        let mut g = Dag::new();
+        let a = g.add_node("a", 1);
+        let b = g.add_node("b", 1);
+        g.add_edge(a, b, 1);
+        g.add_edge(a, b, 2);
+    }
+}

@@ -1,0 +1,57 @@
+//! One-sink transform (§2.2, Fig. 3 red part).
+//!
+//! All schedulers assume a unique sink node `s` (constraint (6) pins the
+//! sink to a single instance). Any DAG is made single-sink by adding a
+//! zero-WCET virtual node fed by every original sink over zero-latency
+//! edges, which leaves every makespan unchanged.
+
+use super::{Dag, NodeId};
+
+/// Ensure `g` has exactly one sink. Returns the sink's id, adding a virtual
+/// `__sink__` node (t = 0, incoming w = 0) when the graph has several.
+pub fn ensure_single_sink(g: &mut Dag) -> NodeId {
+    let sinks = g.sinks();
+    assert!(!sinks.is_empty(), "empty graph has no sink");
+    if sinks.len() == 1 {
+        return sinks[0];
+    }
+    let s = g.add_node("__sink__", 0);
+    for v in sinks {
+        g.add_edge(v, s, 0);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{critical_path_len, paper_example_dag};
+
+    #[test]
+    fn already_single_sink_is_identity() {
+        let mut g = Dag::new();
+        let a = g.add_node("a", 1);
+        let b = g.add_node("b", 1);
+        g.add_edge(a, b, 1);
+        let n_before = g.n();
+        assert_eq!(ensure_single_sink(&mut g), b);
+        assert_eq!(g.n(), n_before);
+    }
+
+    #[test]
+    fn example_dag_gets_virtual_sink() {
+        let mut g = paper_example_dag();
+        let cp_before = critical_path_len(&g);
+        let s = ensure_single_sink(&mut g);
+        assert_eq!(g.n(), 10);
+        assert_eq!(g.sinks(), vec![s]);
+        assert_eq!(g.wcet(s), 0);
+        // Zero-weight additions leave the critical path unchanged.
+        assert_eq!(critical_path_len(&g), cp_before);
+        // Every former sink now feeds s.
+        assert_eq!(g.parents(s).len(), 3);
+        for &(_, w) in g.parents(s) {
+            assert_eq!(w, 0);
+        }
+    }
+}

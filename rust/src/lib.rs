@@ -1,0 +1,29 @@
+//! `acetone-rs` — reproduction of *Extension of ACETONE C code generator
+//! for multi-core architectures* (Aït-Aïssa et al., CS.DC 2026) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! * **Layer 3** (this crate): DAG scheduling (ISH/DSH/CP/B&B), the
+//!   multi-core platform model with flag-protocol synchronization, the
+//!   ACETONE-style parallel C code generator, a static WCET analyzer, and a
+//!   PJRT-backed parallel inference engine.
+//! * **Layer 2** (`python/compile/model.py`): JAX per-layer and full-model
+//!   functions, AOT-lowered once to HLO text artifacts.
+//! * **Layer 1** (`python/compile/kernels/`): Pallas kernels for the
+//!   compute hot-spots, validated against a pure-jnp oracle.
+//!
+//! Python never runs on the inference path: the Rust binary loads the HLO
+//! artifacts through PJRT and is self-contained afterwards.
+
+pub mod daggen;
+pub mod graph;
+pub mod sched;
+pub mod util;
+
+pub mod codegen;
+pub mod comm;
+pub mod exec;
+pub mod metrics;
+pub mod nn;
+pub mod runtime;
+pub mod sim;
+pub mod wcet;

@@ -1,0 +1,307 @@
+//! `acetone` — command-line interface of the coordinator.
+//!
+//! Subcommands (args are `--key value` pairs; see `acetone help`):
+//!
+//! * `export-models`  — write the model-zoo JSONs consumed by the Python
+//!                      AOT path (`make artifacts` runs this first);
+//! * `schedule`       — schedule a model or random DAG with any solver and
+//!                      print the Gantt chart + makespan/speedup;
+//! * `wcet`           — static WCET analysis (Table 1/2 style) + the §5.4
+//!                      global composition for a parallel schedule;
+//! * `simulate`       — run the cycle-level platform simulator (Table 3);
+//! * `run`            — parallel PJRT inference over the AOT artifacts,
+//!                      numerics checked against the single-core artifact;
+//! * `codegen`        — emit ACETONE-style parallel C code;
+//! * `dag`            — generate a §4.1 random DAG (DOT output).
+
+use acetone::graph::ensure_single_sink;
+use acetone::nn::{eval::Tensor, model_json, numel, weights, zoo, Network};
+use acetone::sched::{
+    bnb::ChouChung,
+    cp::{CpConfig, CpSolver},
+    dsh::Dsh,
+    hybrid::Hybrid,
+    ish::Ish,
+    Scheduler,
+};
+use acetone::wcet::CostModel;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::time::Duration;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// `--key value` argument bag.
+struct Opts(HashMap<String, String>);
+
+impl Opts {
+    fn parse(rest: &[String]) -> Result<Self> {
+        let mut map = HashMap::new();
+        let mut i = 0;
+        while i < rest.len() {
+            let k = rest[i]
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got {}", rest[i]))?;
+            let v = rest
+                .get(i + 1)
+                .ok_or_else(|| anyhow!("missing value for --{k}"))?;
+            map.insert(k.to_string(), v.clone());
+            i += 2;
+        }
+        Ok(Self(map))
+    }
+    fn get(&self, k: &str) -> Option<&str> {
+        self.0.get(k).map(String::as_str)
+    }
+    fn usize(&self, k: &str, default: usize) -> usize {
+        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    fn u64(&self, k: &str, default: u64) -> u64 {
+        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    fn f64(&self, k: &str, default: f64) -> f64 {
+        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+/// Resolve a zoo model by name; suffix `:paper` selects the paper-scale
+/// variant (WCET analysis only), default is the executable tiny scale.
+fn model_by_name(name: &str) -> Result<Network> {
+    let (base, scale) = match name.split_once(':') {
+        Some((b, "paper")) => (b, zoo::Scale::Paper),
+        Some((b, "tiny")) => (b, zoo::Scale::Tiny),
+        Some((_, other)) => bail!("unknown scale {other} (tiny|paper)"),
+        None => (name, zoo::Scale::Tiny),
+    };
+    Ok(match base {
+        "lenet5" => zoo::lenet5(scale),
+        "lenet5_split" => zoo::lenet5_split(scale),
+        "googlenet" => zoo::googlenet(scale),
+        "mlp" => zoo::mlp("mlp", &[64, 128, 64, 10]),
+        other => bail!("unknown model {other} (lenet5|lenet5_split|googlenet|mlp)"),
+    })
+}
+
+fn solver_by_name(name: &str, timeout: Duration) -> Result<Box<dyn Scheduler>> {
+    Ok(match name {
+        "ish" => Box::new(Ish),
+        "dsh" => Box::new(Dsh),
+        "cp" | "improved" => Box::new(CpSolver::new(CpConfig::improved(timeout))),
+        "tang" => Box::new(CpSolver::new(CpConfig::tang(timeout))),
+        "bnb" => Box::new(ChouChung { timeout }),
+        "hybrid" => Box::new(Hybrid { cp_timeout: timeout }),
+        other => bail!("unknown algo {other} (ish|dsh|cp|tang|bnb|hybrid)"),
+    })
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let opts = Opts::parse(&args[1.min(args.len())..])?;
+    match cmd {
+        "export-models" => export_models(&opts),
+        "schedule" => schedule_cmd(&opts),
+        "wcet" => wcet_cmd(&opts),
+        "simulate" => simulate_cmd(&opts),
+        "run" => run_cmd(&opts),
+        "codegen" => codegen_cmd(&opts),
+        "dag" => dag_cmd(&opts),
+        _ => {
+            println!(
+                "acetone — parallel C/PJRT inference for certifiable DNNs\n\
+                 \n\
+                 usage: acetone <cmd> [--key value]...\n\
+                 \n\
+                 export-models --dir D                 write model zoo JSONs\n\
+                 schedule --model M|--nodes N --cores C --algo A [--timeout S] [--seed S]\n\
+                 wcet --cores C [--model googlenet:paper]\n\
+                 simulate --model M --cores C [--jitter J] [--seed S]\n\
+                 run --model M --cores C [--artifacts DIR] [--algo A]\n\
+                 codegen --model M --cores C --out DIR\n\
+                 dag --nodes N [--seed S] [--density D]   (prints DOT)\n"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn export_models(opts: &Opts) -> Result<()> {
+    let dir = opts.get("dir").unwrap_or("artifacts/models");
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {dir}"))?;
+    for net in [
+        zoo::lenet5(zoo::Scale::Tiny),
+        zoo::lenet5_split(zoo::Scale::Tiny),
+        zoo::googlenet(zoo::Scale::Tiny),
+        zoo::mlp("mlp", &[64, 128, 64, 10]),
+    ] {
+        let path = format!("{dir}/{}.json", net.name);
+        std::fs::write(&path, model_json::to_json(&net).to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn load_graph(opts: &Opts) -> Result<(acetone::graph::Dag, Option<Network>)> {
+    if let Some(m) = opts.get("model") {
+        let net = model_by_name(m)?;
+        let g = net.to_dag(&CostModel::default());
+        Ok((g, Some(net)))
+    } else {
+        let n = opts.usize("nodes", 20);
+        let seed = opts.u64("seed", 1);
+        let mut cfg = acetone::daggen::DagGenConfig::paper(n);
+        cfg.density = opts.f64("density", 0.10);
+        Ok((acetone::daggen::generate(&cfg, seed), None))
+    }
+}
+
+fn schedule_cmd(opts: &Opts) -> Result<()> {
+    let (mut g, _) = load_graph(opts)?;
+    ensure_single_sink(&mut g);
+    let m = opts.usize("cores", 4);
+    let timeout = Duration::from_secs(opts.u64("timeout", 10));
+    let solver = solver_by_name(opts.get("algo").unwrap_or("dsh"), timeout)?;
+    let r = solver.schedule(&g, m);
+    acetone::sched::check_valid(&g, &r.schedule)
+        .map_err(|e| anyhow!("solver produced invalid schedule: {e}"))?;
+    println!(
+        "{} on {m} cores: makespan={} speedup={:.3} duplicates={} optimal={} time={:?} explored={}",
+        solver.name(),
+        r.schedule.makespan(),
+        r.schedule.speedup(&g),
+        r.schedule.duplication_count(),
+        r.optimal,
+        r.solve_time,
+        r.explored,
+    );
+    if g.n() <= 64 && g.total_wcet() <= 512 {
+        println!("{}", r.schedule.gantt(&g));
+    }
+    Ok(())
+}
+
+fn wcet_cmd(opts: &Opts) -> Result<()> {
+    let name = opts.get("model").unwrap_or("googlenet:paper");
+    let net = model_by_name(name)?;
+    let cm = CostModel::default();
+    let table = acetone::wcet::layer_table(&net, &cm);
+    let mut t = acetone::metrics::Table::new(&["Layer Name", "WCET [cycles]"]);
+    let mut total = 0u64;
+    for (lname, cycles) in &table {
+        t.row(vec![lname.clone(), acetone::metrics::sci(*cycles as f64)]);
+        total += cycles;
+    }
+    t.row(vec!["Total Sum".into(), acetone::metrics::sci(total as f64)]);
+    println!("{}", t.markdown());
+
+    let m = opts.usize("cores", 4);
+    let g = net.to_dag(&cm);
+    let sched = Dsh.schedule(&g, m).schedule;
+    let shapes = net.shapes();
+    let bytes = move |v: usize| numel(&shapes[v]) * 4;
+    let composed = acetone::wcet::compose_global(&g, &sched, &cm, &bytes);
+    let serial = acetone::wcet::serial_global(&g);
+    println!(
+        "global WCET: serial={} parallel({m} cores)={} gain={:.1}%",
+        acetone::metrics::sci(serial as f64),
+        acetone::metrics::sci(composed.makespan as f64),
+        100.0 * (1.0 - composed.makespan as f64 / serial as f64)
+    );
+    Ok(())
+}
+
+fn simulate_cmd(opts: &Opts) -> Result<()> {
+    let name = opts.get("model").unwrap_or("googlenet:paper");
+    let net = model_by_name(name)?;
+    let cm = CostModel::default();
+    let g = net.to_dag(&cm);
+    let m = opts.usize("cores", 4);
+    let sched = Dsh.schedule(&g, m).schedule;
+    let shapes = net.shapes();
+    let mut machine = acetone::sim::Machine::exact(sim_comm_cost);
+    for (i, s) in shapes.iter().enumerate() {
+        machine.payload_bytes.insert(i, numel(s) * 4);
+    }
+    machine.jitter = opts.f64("jitter", 0.0);
+    machine.seed = opts.u64("seed", 0);
+    let serial = acetone::sim::simulate_serial(&g, &machine);
+    let par = acetone::sim::simulate(&g, &sched, &machine);
+    println!(
+        "simulated: serial={} parallel={} speedup={:.3} wait={}",
+        serial.makespan,
+        par.makespan,
+        par.speedup(serial.makespan),
+        par.total_wait
+    );
+    Ok(())
+}
+
+/// Communication cost for the simulator CLI: the default CostModel's
+/// Table-2 bound applied to the payload size.
+fn sim_comm_cost(bytes: usize) -> u64 {
+    CostModel::default().comm_wcet(bytes)
+}
+
+fn run_cmd(opts: &Opts) -> Result<()> {
+    let name = opts.get("model").unwrap_or("lenet5_split");
+    let net = model_by_name(name)?;
+    let m = opts.usize("cores", 2);
+    let dir = opts.get("artifacts").unwrap_or("artifacts");
+    let manifest = acetone::runtime::Manifest::load(dir)?;
+    let mm = manifest
+        .models
+        .get(&net.name)
+        .ok_or_else(|| anyhow!("model {} not in manifest", net.name))?;
+    let g = net.to_dag(&CostModel::default());
+    let timeout = Duration::from_secs(opts.u64("timeout", 5));
+    let solver = solver_by_name(opts.get("algo").unwrap_or("dsh"), timeout)?;
+    let sched = solver.schedule(&g, m).schedule;
+    let shapes = net.shapes();
+    let input = Tensor::new(
+        shapes[0].clone(),
+        weights::input_tensor(numel(&shapes[0]), mm.seed),
+    );
+    let (par_out, report) = acetone::exec::run_parallel(&net, &sched, mm, dir, &input)?;
+    let (ref_out, ref_wall) = acetone::exec::run_full(mm, dir, &input)?;
+    let max_err = par_out
+        .data
+        .iter()
+        .zip(&ref_out.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!(
+        "{} on {m} cores: wall={:?} single-core-artifact={:?} max|Δ|={max_err:.2e}",
+        net.name, report.wall, ref_wall
+    );
+    if max_err > 1e-3 {
+        bail!("numerics mismatch vs single-core artifact");
+    }
+    println!("numerics OK ({} steps)", report.steps.len());
+    Ok(())
+}
+
+fn codegen_cmd(opts: &Opts) -> Result<()> {
+    let name = opts.get("model").unwrap_or("lenet5_split");
+    let net = model_by_name(name)?;
+    let m = opts.usize("cores", 2);
+    let out = opts.get("out").unwrap_or("generated_c");
+    let g = net.to_dag(&CostModel::default());
+    let sched = Dsh.schedule(&g, m).schedule;
+    let dir = acetone::codegen::generate_project(&net, &sched, 42, std::path::Path::new(out))?;
+    println!("generated C project at {}", dir.display());
+    Ok(())
+}
+
+fn dag_cmd(opts: &Opts) -> Result<()> {
+    let n = opts.usize("nodes", 20);
+    let mut cfg = acetone::daggen::DagGenConfig::paper(n);
+    cfg.density = opts.f64("density", 0.10);
+    let g = acetone::daggen::generate(&cfg, opts.u64("seed", 1));
+    println!("{}", g.to_dot());
+    Ok(())
+}

@@ -1,0 +1,147 @@
+//! Evaluation metrics & table emission shared by the `figures` harness and
+//! the benches: speedup aggregation (Eq. 15), timing statistics, and
+//! markdown/CSV rendering.
+
+use std::time::Duration;
+
+/// Mean of a sample.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Geometric mean (speedup aggregation across a graph set).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Mean duration in seconds.
+pub fn mean_secs(ds: &[Duration]) -> f64 {
+    mean(&ds.iter().map(|d| d.as_secs_f64()).collect::<Vec<_>>())
+}
+
+/// Format cycles in the paper's scientific style (`2.90e10`).
+pub fn sci(x: f64) -> String {
+    if x == 0.0 {
+        return "0".to_string();
+    }
+    let exp = x.abs().log10().floor() as i32;
+    let mant = x / 10f64.powi(exp);
+    format!("{mant:.2}e{exp}")
+}
+
+/// A simple markdown table builder.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as github-flavoured markdown.
+    pub fn markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(String::len).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let inner: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{c:<w$}", w = widths[i]))
+                .collect();
+            format!("| {} |", inner.join(" | "))
+        };
+        let mut out = fmt_row(&self.header);
+        out.push('\n');
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&fmt_row(&sep));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV (for plotting).
+    pub fn csv(&self) -> String {
+        let mut out = self.header.join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write CSV under `results/` (created if needed).
+    pub fn write_csv(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all("results")?;
+        let path = std::path::Path::new("results").join(format!("{name}.csv"));
+        std::fs::write(&path, self.csv())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((stddev(&[1.0, 3.0]) - std::f64::consts::SQRT_2).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn sci_format() {
+        assert_eq!(sci(2.9e10), "2.90e10");
+        assert_eq!(sci(0.0), "0");
+        assert_eq!(sci(358_000.0), "3.58e5");
+    }
+
+    #[test]
+    fn table_markdown_and_csv() {
+        let mut t = Table::new(&["layer", "wcet"]);
+        t.row(vec!["conv_1".into(), "8.16e9".into()]);
+        let md = t.markdown();
+        assert!(md.contains("| conv_1"));
+        assert!(md.lines().count() == 3);
+        assert!(t.csv().contains("conv_1,8.16e9"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+}

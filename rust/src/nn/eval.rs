@@ -1,0 +1,320 @@
+//! Pure-Rust reference interpreter.
+//!
+//! The numerics oracle of the whole stack: the generated C code
+//! (`crate::codegen`) and the PJRT-executed JAX/Pallas artifacts
+//! (`crate::runtime`) are both compared against this implementation.
+//! Semantics follow JAX/XLA conventions (NHWC, SAME padding split
+//! before/after) so all three agree to rounding error.
+
+use super::{numel, weights, Network, Op, Padding};
+
+/// A dense f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(numel(&shape), data.len());
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = numel(&shape);
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    #[inline]
+    fn at3(&self, h: isize, w: isize, c: usize) -> f32 {
+        // Out-of-bounds reads = zero padding.
+        let (hh, ww, cc) = (self.shape[0] as isize, self.shape[1] as isize, self.shape[2]);
+        if h < 0 || w < 0 || h >= hh || w >= ww {
+            0.0
+        } else {
+            self.data[((h as usize * self.shape[1]) + w as usize) * cc + c]
+        }
+    }
+}
+
+/// SAME-padding offsets (JAX convention: pad_total = (out−1)·s + k − in,
+/// split floor-before / rest-after).
+fn pad_before(input: usize, k: usize, stride: usize, padding: Padding, out: usize) -> isize {
+    match padding {
+        Padding::Valid => 0,
+        Padding::Same => {
+            let total = ((out - 1) * stride + k).saturating_sub(input);
+            (total / 2) as isize
+        }
+    }
+}
+
+/// Evaluate one operator.
+pub fn eval_op(
+    name: &str,
+    op: &Op,
+    inputs: &[&Tensor],
+    out_shape: &[usize],
+    seed: u64,
+) -> Tensor {
+    match op {
+        Op::Input { .. } => inputs[0].clone(),
+        Op::Split | Op::Output => inputs[0].clone(),
+        Op::Reshape { shape } => Tensor::new(shape.clone(), inputs[0].data.clone()),
+        Op::Concat => {
+            let (h, w) = (out_shape[0], out_shape[1]);
+            let mut out = Tensor::zeros(out_shape.to_vec());
+            for hh in 0..h {
+                for ww in 0..w {
+                    let mut c_off = 0;
+                    for t in inputs {
+                        let tc = t.shape[2];
+                        for c in 0..tc {
+                            out.data[((hh * w) + ww) * out_shape[2] + c_off + c] =
+                                t.at3(hh as isize, ww as isize, c);
+                        }
+                        c_off += tc;
+                    }
+                }
+            }
+            out
+        }
+        Op::MaxPool { k, stride, padding } => {
+            pool(inputs[0], *k, *stride, *padding, out_shape, true)
+        }
+        Op::AvgPool { k, stride, padding } => {
+            pool(inputs[0], *k, *stride, *padding, out_shape, false)
+        }
+        Op::Conv2D { out_ch, kh, kw, stride, padding, relu } => {
+            let x = inputs[0];
+            let ins = vec![x.shape.clone()];
+            let p = weights::layer_params(name, op, &ins, seed);
+            let cin = x.shape[2];
+            let (oh, ow) = (out_shape[0], out_shape[1]);
+            let ph = pad_before(x.shape[0], *kh, *stride, *padding, oh);
+            let pw = pad_before(x.shape[1], *kw, *stride, *padding, ow);
+            let mut out = Tensor::zeros(out_shape.to_vec());
+            for o_h in 0..oh {
+                for o_w in 0..ow {
+                    for oc in 0..*out_ch {
+                        let mut acc = p.bias[oc];
+                        for i_kh in 0..*kh {
+                            for i_kw in 0..*kw {
+                                let ih = (o_h * stride + i_kh) as isize - ph;
+                                let iw = (o_w * stride + i_kw) as isize - pw;
+                                for ic in 0..cin {
+                                    let wgt = p.kernel
+                                        [((i_kh * kw + i_kw) * cin + ic) * out_ch + oc];
+                                    acc += x.at3(ih, iw, ic) * wgt;
+                                }
+                            }
+                        }
+                        if *relu {
+                            acc = acc.max(0.0);
+                        }
+                        out.data[((o_h * ow) + o_w) * out_ch + oc] = acc;
+                    }
+                }
+            }
+            out
+        }
+        Op::Dense { units, relu } => {
+            let x = inputs[0];
+            let ins = vec![x.shape.clone()];
+            let p = weights::layer_params(name, op, &ins, seed);
+            let inn = x.shape[0];
+            let mut out = Tensor::zeros(vec![*units]);
+            for u in 0..*units {
+                let mut acc = p.bias[u];
+                for i in 0..inn {
+                    acc += x.data[i] * p.kernel[i * units + u];
+                }
+                if *relu {
+                    acc = acc.max(0.0);
+                }
+                out.data[u] = acc;
+            }
+            out
+        }
+    }
+}
+
+fn pool(
+    x: &Tensor,
+    k: usize,
+    stride: usize,
+    padding: Padding,
+    out_shape: &[usize],
+    is_max: bool,
+) -> Tensor {
+    let (oh, ow, c) = (out_shape[0], out_shape[1], out_shape[2]);
+    let ph = pad_before(x.shape[0], k, stride, padding, oh);
+    let pw = pad_before(x.shape[1], k, stride, padding, ow);
+    let mut out = Tensor::zeros(out_shape.to_vec());
+    for o_h in 0..oh {
+        for o_w in 0..ow {
+            for cc in 0..c {
+                let mut acc = if is_max { f32::NEG_INFINITY } else { 0.0 };
+                let mut count = 0usize;
+                for i_kh in 0..k {
+                    for i_kw in 0..k {
+                        let ih = (o_h * stride + i_kh) as isize - ph;
+                        let iw = (o_w * stride + i_kw) as isize - pw;
+                        if ih < 0
+                            || iw < 0
+                            || ih >= x.shape[0] as isize
+                            || iw >= x.shape[1] as isize
+                        {
+                            continue; // padding excluded from both pools
+                        }
+                        let v = x.at3(ih, iw, cc);
+                        if is_max {
+                            acc = acc.max(v);
+                        } else {
+                            acc += v;
+                        }
+                        count += 1;
+                    }
+                }
+                out.data[((o_h * ow) + o_w) * c + cc] = if is_max {
+                    acc
+                } else if count > 0 {
+                    acc / count as f32
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+    out
+}
+
+/// Run the whole network on `input`, returning every layer's output.
+pub fn eval_all(net: &Network, input: &Tensor, seed: u64) -> Vec<Tensor> {
+    let shapes = net.shapes();
+    let mut outs: Vec<Tensor> = Vec::with_capacity(net.layers.len());
+    for (i, layer) in net.layers.iter().enumerate() {
+        let t = if matches!(layer.op, Op::Input { .. }) {
+            assert_eq!(input.shape, shapes[i], "input shape mismatch");
+            input.clone()
+        } else {
+            let ins: Vec<&Tensor> = layer.inputs.iter().map(|&j| &outs[j]).collect();
+            eval_op(&layer.name, &layer.op, &ins, &shapes[i], seed)
+        };
+        outs.push(t);
+    }
+    outs
+}
+
+/// Run the network and return only the Output layer's tensor.
+pub fn eval(net: &Network, input: &Tensor, seed: u64) -> Tensor {
+    eval_all(net, input, seed).pop().expect("non-empty network")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{zoo, Network, Op, Padding};
+
+    #[test]
+    fn identity_ops_pass_through() {
+        let x = Tensor::new(vec![2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]);
+        let s = eval_op("s", &Op::Split, &[&x], &[2, 2, 1], 0);
+        assert_eq!(s, x);
+        let r = eval_op("r", &Op::Reshape { shape: vec![4] }, &[&x], &[4], 0);
+        assert_eq!(r.shape, vec![4]);
+        assert_eq!(r.data, x.data);
+    }
+
+    #[test]
+    fn maxpool_2x2() {
+        let x = Tensor::new(vec![2, 2, 1], vec![1.0, 5.0, 3.0, 2.0]);
+        let y = eval_op(
+            "p",
+            &Op::MaxPool { k: 2, stride: 2, padding: Padding::Valid },
+            &[&x],
+            &[1, 1, 1],
+            0,
+        );
+        assert_eq!(y.data, vec![5.0]);
+    }
+
+    #[test]
+    fn avgpool_global() {
+        let x = Tensor::new(vec![2, 2, 2], vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0]);
+        let y = eval_op(
+            "p",
+            &Op::AvgPool { k: 2, stride: 2, padding: Padding::Valid },
+            &[&x],
+            &[1, 1, 2],
+            0,
+        );
+        assert_eq!(y.data, vec![2.5, 25.0]);
+    }
+
+    #[test]
+    fn concat_interleaves_channels() {
+        let a = Tensor::new(vec![1, 1, 2], vec![1.0, 2.0]);
+        let b = Tensor::new(vec![1, 1, 1], vec![9.0]);
+        let y = eval_op("c", &Op::Concat, &[&a, &b], &[1, 1, 3], 0);
+        assert_eq!(y.data, vec![1.0, 2.0, 9.0]);
+    }
+
+    #[test]
+    fn conv_1x1_is_channel_mix() {
+        // 1×1 conv on a 1×1 image = dense over channels: verify against a
+        // hand computation using the deterministic weights.
+        let op = Op::Conv2D { out_ch: 2, kh: 1, kw: 1, stride: 1, padding: Padding::Valid, relu: false };
+        let x = Tensor::new(vec![1, 1, 3], vec![1.0, -2.0, 0.5]);
+        let p = weights::layer_params("cx", &op, &[vec![1, 1, 3]], 7);
+        let y = eval_op("cx", &op, &[&x], &[1, 1, 2], 7);
+        for oc in 0..2 {
+            let expect = p.bias[oc]
+                + x.data[0] * p.kernel[oc]
+                + x.data[1] * p.kernel[2 + oc]
+                + x.data[2] * p.kernel[4 + oc];
+            assert!((y.data[oc] - expect).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let op = Op::Dense { units: 8, relu: true };
+        let x = Tensor::new(vec![16], (0..16).map(|i| (i as f32) - 8.0).collect());
+        let mut net = Network::new("t");
+        let i = net.add("in", Op::Input { shape: vec![16] }, vec![]);
+        let d = net.add("d", op, vec![i]);
+        net.add("o", Op::Output, vec![d]);
+        let y = eval(&net, &x, 3);
+        assert!(y.data.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn full_lenet_runs_and_is_finite() {
+        let net = zoo::lenet5(zoo::Scale::Tiny);
+        let shapes = net.shapes();
+        let x = Tensor::new(
+            shapes[0].clone(),
+            weights::input_tensor(crate::nn::numel(&shapes[0]), 11),
+        );
+        let y = eval(&net, &x, 11);
+        assert_eq!(y.shape, vec![10]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+        // Not all equal (the network actually computes something).
+        assert!(y.data.iter().any(|&v| (v - y.data[0]).abs() > 1e-9));
+    }
+
+    #[test]
+    fn split_lenet_matches_width() {
+        let net = zoo::lenet5_split(zoo::Scale::Tiny);
+        let shapes = net.shapes();
+        let x = Tensor::new(
+            shapes[0].clone(),
+            weights::input_tensor(crate::nn::numel(&shapes[0]), 5),
+        );
+        let y = eval(&net, &x, 5);
+        assert_eq!(y.shape, vec![10]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,211 @@
+//! Neural-network intermediate representation (the ACETONE application
+//! model, §2.2 / §5.1).
+//!
+//! A [`Network`] is an ordered list of [`Layer`]s, each naming its input
+//! layers — a DAG of operators. The set of operators matches what the
+//! paper's networks need (LeNet-5, the split LeNet-5 of Fig. 2, and the
+//! GoogLeNet-style network of Fig. 10): convolution, pooling, dense,
+//! concat, split, reshape, plus explicit Input/Output layers as in
+//! ACETONE's generated code (Algorithm 1).
+//!
+//! Sub-modules:
+//! * [`shapes`] — shape inference for every operator;
+//! * [`eval`] — a pure-Rust reference interpreter (the numerics oracle for
+//!   both the generated C code and the PJRT executor);
+//! * [`weights`] — deterministic parameter generation shared bit-for-bit
+//!   with the Python AOT path;
+//! * [`zoo`] — the paper's model architectures;
+//! * [`model_json`] — a JSON model format + parser (ACETONE ingests JSON
+//!   descriptions; ours is a minimal analogue).
+
+pub mod eval;
+pub mod model_json;
+pub mod shapes;
+pub mod transform;
+pub mod weights;
+pub mod zoo;
+
+use crate::graph::Dag;
+use crate::wcet::CostModel;
+
+/// Padding mode for convolution/pooling (the two modes ACETONE emits).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Padding {
+    /// Output spatial size = ceil(in / stride), zero-padded.
+    Same,
+    /// No padding: output = floor((in − k) / stride) + 1.
+    Valid,
+}
+
+/// One operator. Tensors are NHWC without the batch dimension — `[H, W, C]`
+/// for feature maps, `[N]` after flattening.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// External input (shape `[H, W, C]` or `[N]`).
+    Input { shape: Vec<usize> },
+    /// 2-D convolution, kernel `[kh, kw, cin, cout]`, optional fused ReLU.
+    Conv2D {
+        out_ch: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        padding: Padding,
+        relu: bool,
+    },
+    /// Max pooling.
+    MaxPool { k: usize, stride: usize, padding: Padding },
+    /// Average pooling (`k == input size` ⇒ global average pool).
+    AvgPool { k: usize, stride: usize, padding: Padding },
+    /// Fully connected layer (`gemm` in the paper's Table 1).
+    Dense { units: usize, relu: bool },
+    /// Channel-axis concatenation of all inputs.
+    Concat,
+    /// Identity fan-out (Fig. 2's Split layer): copies its input so that
+    /// several parallel branches can consume it.
+    Split,
+    /// Dimension change without element movement — zero WCET in Table 1.
+    Reshape { shape: Vec<usize> },
+    /// Copies the final tensor into the caller's output buffer.
+    Output,
+}
+
+/// A named layer and the indices of the layers producing its inputs.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub op: Op,
+    pub inputs: Vec<usize>,
+}
+
+/// An offline-trained feed-forward network (CNN or MLP).
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), layers: Vec::new() }
+    }
+
+    /// Append a layer; returns its index.
+    pub fn add(&mut self, name: impl Into<String>, op: Op, inputs: Vec<usize>) -> usize {
+        let idx = self.layers.len();
+        for &i in &inputs {
+            assert!(i < idx, "layer input {i} must precede layer {idx}");
+        }
+        self.layers.push(Layer { name: name.into(), op, inputs });
+        idx
+    }
+
+    /// Indices of layers consuming layer `i`'s output.
+    pub fn consumers(&self, i: usize) -> Vec<usize> {
+        (0..self.layers.len())
+            .filter(|&j| self.layers[j].inputs.contains(&i))
+            .collect()
+    }
+
+    /// Output shapes of every layer (shape inference).
+    pub fn shapes(&self) -> Vec<Vec<usize>> {
+        shapes::infer(self)
+    }
+
+    /// Number of parameters (weights + biases) of the whole network.
+    pub fn param_count(&self) -> usize {
+        let shp = self.shapes();
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| weights::param_count(&l.op, &self.input_shapes(i, &shp)))
+            .sum()
+    }
+
+    /// Input shapes of layer `i`, given all layer output shapes.
+    pub fn input_shapes(&self, i: usize, shapes: &[Vec<usize>]) -> Vec<Vec<usize>> {
+        self.layers[i]
+            .inputs
+            .iter()
+            .map(|&j| shapes[j].clone())
+            .collect()
+    }
+
+    /// Lower the network to the task DAG of §2.2: one node per layer,
+    /// `t(v)` from the WCET cost model, `w(e)` = the §5.2 communication
+    /// cost of shipping the producer's output tensor between cores.
+    pub fn to_dag(&self, cm: &CostModel) -> Dag {
+        let shapes = self.shapes();
+        let mut g = Dag::new();
+        for (i, l) in self.layers.iter().enumerate() {
+            let ins = self.input_shapes(i, &shapes);
+            let t = cm.layer_wcet(&l.op, &ins, &shapes[i]);
+            g.add_node(l.name.clone(), t);
+        }
+        for (i, l) in self.layers.iter().enumerate() {
+            for &j in &l.inputs {
+                let bytes = shapes[j].iter().product::<usize>() * 4;
+                g.add_edge(j, i, cm.comm_wcet(bytes));
+            }
+        }
+        g
+    }
+
+    /// Total bytes of the largest inter-layer tensor (memory planning).
+    pub fn max_tensor_bytes(&self) -> usize {
+        self.shapes()
+            .iter()
+            .map(|s| s.iter().product::<usize>() * 4)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Element count of a shape.
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wcet::CostModel;
+
+    #[test]
+    fn build_and_consumers() {
+        let mut n = Network::new("t");
+        let i = n.add("in", Op::Input { shape: vec![4, 4, 1] }, vec![]);
+        let s = n.add("split", Op::Split, vec![i]);
+        let a = n.add(
+            "conv_a",
+            Op::Conv2D { out_ch: 2, kh: 3, kw: 3, stride: 1, padding: Padding::Same, relu: true },
+            vec![s],
+        );
+        let b = n.add(
+            "conv_b",
+            Op::Conv2D { out_ch: 2, kh: 3, kw: 3, stride: 1, padding: Padding::Same, relu: true },
+            vec![s],
+        );
+        let c = n.add("cat", Op::Concat, vec![a, b]);
+        let o = n.add("out", Op::Output, vec![c]);
+        assert_eq!(n.consumers(s), vec![a, b]);
+        assert_eq!(n.consumers(c), vec![o]);
+    }
+
+    #[test]
+    fn to_dag_preserves_structure() {
+        let n = zoo::lenet5_split(zoo::Scale::Tiny);
+        let g = n.to_dag(&CostModel::default());
+        assert_eq!(g.n(), n.layers.len());
+        assert!(g.is_acyclic());
+        assert!(g.single_sink().is_some());
+        // Fig. 2: the split architecture has width ≥ 2.
+        assert!(g.width() >= 2, "width {}", g.width());
+    }
+
+    #[test]
+    #[should_panic(expected = "must precede")]
+    fn forward_reference_rejected() {
+        let mut n = Network::new("bad");
+        n.add("x", Op::Split, vec![3]);
+    }
+}

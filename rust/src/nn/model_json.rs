@@ -1,0 +1,212 @@
+//! JSON model format (ACETONE's input side, §5.1).
+//!
+//! ACETONE parses NNet/ONNX/H5/JSON descriptions into its internal layer
+//! objects; this module provides the JSON analogue for ours:
+//!
+//! ```json
+//! {"name": "lenet5", "layers": [
+//!    {"name": "input",  "op": "input",  "shape": [28,28,1], "inputs": []},
+//!    {"name": "conv_1", "op": "conv2d", "out_ch": 6, "k": 5, "stride": 1,
+//!     "padding": "same", "relu": true, "inputs": ["input"]},
+//!    ...
+//! ]}
+//! ```
+
+use super::{Network, Op, Padding};
+use crate::util::json::Json;
+
+/// Serialize a network to the JSON model format.
+pub fn to_json(net: &Network) -> Json {
+    let layers: Vec<Json> = net
+        .layers
+        .iter()
+        .map(|l| {
+            let mut fields: Vec<(&str, Json)> = vec![
+                ("name", Json::Str(l.name.clone())),
+                (
+                    "inputs",
+                    Json::Arr(
+                        l.inputs
+                            .iter()
+                            .map(|&i| Json::Str(net.layers[i].name.clone()))
+                            .collect(),
+                    ),
+                ),
+            ];
+            match &l.op {
+                Op::Input { shape } => {
+                    fields.push(("op", Json::Str("input".into())));
+                    fields.push(("shape", shape_json(shape)));
+                }
+                Op::Conv2D { out_ch, kh, kw, stride, padding, relu } => {
+                    fields.push(("op", Json::Str("conv2d".into())));
+                    fields.push(("out_ch", Json::Num(*out_ch as f64)));
+                    fields.push(("kh", Json::Num(*kh as f64)));
+                    fields.push(("kw", Json::Num(*kw as f64)));
+                    fields.push(("stride", Json::Num(*stride as f64)));
+                    fields.push(("padding", pad_json(*padding)));
+                    fields.push(("relu", Json::Bool(*relu)));
+                }
+                Op::MaxPool { k, stride, padding } => {
+                    fields.push(("op", Json::Str("maxpool".into())));
+                    fields.push(("k", Json::Num(*k as f64)));
+                    fields.push(("stride", Json::Num(*stride as f64)));
+                    fields.push(("padding", pad_json(*padding)));
+                }
+                Op::AvgPool { k, stride, padding } => {
+                    fields.push(("op", Json::Str("avgpool".into())));
+                    fields.push(("k", Json::Num(*k as f64)));
+                    fields.push(("stride", Json::Num(*stride as f64)));
+                    fields.push(("padding", pad_json(*padding)));
+                }
+                Op::Dense { units, relu } => {
+                    fields.push(("op", Json::Str("dense".into())));
+                    fields.push(("units", Json::Num(*units as f64)));
+                    fields.push(("relu", Json::Bool(*relu)));
+                }
+                Op::Concat => fields.push(("op", Json::Str("concat".into()))),
+                Op::Split => fields.push(("op", Json::Str("split".into()))),
+                Op::Reshape { shape } => {
+                    fields.push(("op", Json::Str("reshape".into())));
+                    fields.push(("shape", shape_json(shape)));
+                }
+                Op::Output => fields.push(("op", Json::Str("output".into()))),
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    Json::obj(vec![
+        ("name", Json::Str(net.name.clone())),
+        ("layers", Json::Arr(layers)),
+    ])
+}
+
+fn shape_json(s: &[usize]) -> Json {
+    Json::Arr(s.iter().map(|&d| Json::Num(d as f64)).collect())
+}
+
+fn pad_json(p: Padding) -> Json {
+    Json::Str(match p {
+        Padding::Same => "same".into(),
+        Padding::Valid => "valid".into(),
+    })
+}
+
+/// Parse a network from the JSON model format.
+pub fn from_json(doc: &Json) -> Result<Network, String> {
+    let name = doc
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or("missing network name")?;
+    let layers = doc
+        .get("layers")
+        .and_then(Json::as_arr)
+        .ok_or("missing layers array")?;
+    let mut net = Network::new(name);
+    let mut index: std::collections::HashMap<String, usize> = Default::default();
+    for (li, l) in layers.iter().enumerate() {
+        let lname = l
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("layer {li}: missing name"))?;
+        let op_name = l
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("layer {lname}: missing op"))?;
+        let num = |key: &str| -> Result<usize, String> {
+            l.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| format!("layer {lname}: missing {key}"))
+        };
+        let pad = |key: &str| -> Result<Padding, String> {
+            match l.get(key).and_then(Json::as_str) {
+                Some("same") => Ok(Padding::Same),
+                Some("valid") => Ok(Padding::Valid),
+                other => Err(format!("layer {lname}: bad padding {other:?}")),
+            }
+        };
+        let boolean = |key: &str| -> bool {
+            matches!(l.get(key), Some(Json::Bool(true)))
+        };
+        let shape = |key: &str| -> Result<Vec<usize>, String> {
+            l.get(key)
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .ok_or_else(|| format!("layer {lname}: missing {key}"))
+        };
+        let op = match op_name {
+            "input" => Op::Input { shape: shape("shape")? },
+            "conv2d" => Op::Conv2D {
+                out_ch: num("out_ch")?,
+                kh: num("kh")?,
+                kw: num("kw")?,
+                stride: num("stride")?,
+                padding: pad("padding")?,
+                relu: boolean("relu"),
+            },
+            "maxpool" => Op::MaxPool { k: num("k")?, stride: num("stride")?, padding: pad("padding")? },
+            "avgpool" => Op::AvgPool { k: num("k")?, stride: num("stride")?, padding: pad("padding")? },
+            "dense" => Op::Dense { units: num("units")?, relu: boolean("relu") },
+            "concat" => Op::Concat,
+            "split" => Op::Split,
+            "reshape" => Op::Reshape { shape: shape("shape")? },
+            "output" => Op::Output,
+            other => return Err(format!("layer {lname}: unknown op {other}")),
+        };
+        let inputs: Vec<usize> = l
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("layer {lname}: missing inputs"))?
+            .iter()
+            .map(|j| {
+                j.as_str()
+                    .and_then(|s| index.get(s).copied())
+                    .ok_or_else(|| format!("layer {lname}: unknown input {j:?}"))
+            })
+            .collect::<Result<_, _>>()?;
+        let idx = net.add(lname, op, inputs);
+        index.insert(lname.to_string(), idx);
+    }
+    Ok(net)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::zoo::{googlenet, lenet5_split, Scale};
+
+    #[test]
+    fn roundtrip_lenet_split() {
+        let net = lenet5_split(Scale::Tiny);
+        let doc = to_json(&net);
+        let parsed = from_json(&Json::parse(&doc.to_string()).unwrap()).unwrap();
+        assert_eq!(parsed.name, net.name);
+        assert_eq!(parsed.layers.len(), net.layers.len());
+        assert_eq!(parsed.shapes(), net.shapes());
+        for (a, b) in parsed.layers.iter().zip(&net.layers) {
+            assert_eq!(a.op, b.op, "layer {}", a.name);
+            assert_eq!(a.inputs, b.inputs);
+        }
+    }
+
+    #[test]
+    fn roundtrip_googlenet() {
+        let net = googlenet(Scale::Paper);
+        let doc = to_json(&net).to_string();
+        let parsed = from_json(&Json::parse(&doc).unwrap()).unwrap();
+        assert_eq!(parsed.shapes(), net.shapes());
+    }
+
+    #[test]
+    fn rejects_unknown_op() {
+        let src = r#"{"name":"x","layers":[{"name":"a","op":"wat","inputs":[]}]}"#;
+        let err = from_json(&Json::parse(src).unwrap()).unwrap_err();
+        assert!(err.contains("unknown op"));
+    }
+
+    #[test]
+    fn rejects_unknown_input_reference() {
+        let src = r#"{"name":"x","layers":[{"name":"a","op":"output","inputs":["nope"]}]}"#;
+        assert!(from_json(&Json::parse(src).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,151 @@
+//! Shape inference for the operator set.
+
+use super::{numel, Network, Op, Padding};
+
+/// Spatial output size for one dimension.
+pub fn conv_out_dim(input: usize, k: usize, stride: usize, padding: Padding) -> usize {
+    match padding {
+        Padding::Same => (input + stride - 1) / stride,
+        Padding::Valid => {
+            assert!(input >= k, "kernel {k} larger than input {input}");
+            (input - k) / stride + 1
+        }
+    }
+}
+
+/// Infer the output shape of every layer in order.
+///
+/// Panics on malformed networks (wrong input arity, rank mismatches,
+/// reshape element-count mismatch) — model construction errors, caught at
+/// build time exactly like ACETONE's parser would.
+pub fn infer(net: &Network) -> Vec<Vec<usize>> {
+    let mut out: Vec<Vec<usize>> = Vec::with_capacity(net.layers.len());
+    for (idx, layer) in net.layers.iter().enumerate() {
+        let ins: Vec<&Vec<usize>> = layer.inputs.iter().map(|&j| &out[j]).collect();
+        let shape = match &layer.op {
+            Op::Input { shape } => {
+                assert!(ins.is_empty(), "{}: Input takes no inputs", layer.name);
+                shape.clone()
+            }
+            Op::Conv2D { out_ch, kh, kw, stride, padding, .. } => {
+                assert_eq!(ins.len(), 1, "{}: Conv2D takes one input", layer.name);
+                let s = ins[0];
+                assert_eq!(s.len(), 3, "{}: Conv2D needs [H,W,C]", layer.name);
+                vec![
+                    conv_out_dim(s[0], *kh, *stride, *padding),
+                    conv_out_dim(s[1], *kw, *stride, *padding),
+                    *out_ch,
+                ]
+            }
+            Op::MaxPool { k, stride, padding } | Op::AvgPool { k, stride, padding } => {
+                assert_eq!(ins.len(), 1, "{}: pool takes one input", layer.name);
+                let s = ins[0];
+                assert_eq!(s.len(), 3, "{}: pool needs [H,W,C]", layer.name);
+                vec![
+                    conv_out_dim(s[0], *k, *stride, *padding),
+                    conv_out_dim(s[1], *k, *stride, *padding),
+                    s[2],
+                ]
+            }
+            Op::Dense { units, .. } => {
+                assert_eq!(ins.len(), 1, "{}: Dense takes one input", layer.name);
+                assert_eq!(ins[0].len(), 1, "{}: Dense needs a flat input", layer.name);
+                vec![*units]
+            }
+            Op::Concat => {
+                assert!(ins.len() >= 2, "{}: Concat needs ≥2 inputs", layer.name);
+                let first = ins[0];
+                assert_eq!(first.len(), 3, "{}: Concat needs [H,W,C]", layer.name);
+                let mut ch = 0;
+                for s in &ins {
+                    assert_eq!(s[0], first[0], "{}: height mismatch", layer.name);
+                    assert_eq!(s[1], first[1], "{}: width mismatch", layer.name);
+                    ch += s[2];
+                }
+                vec![first[0], first[1], ch]
+            }
+            Op::Split => {
+                assert_eq!(ins.len(), 1, "{}: Split takes one input", layer.name);
+                ins[0].clone()
+            }
+            Op::Reshape { shape } => {
+                assert_eq!(ins.len(), 1, "{}: Reshape takes one input", layer.name);
+                assert_eq!(
+                    numel(ins[0]),
+                    numel(shape),
+                    "{}: reshape element count mismatch",
+                    layer.name
+                );
+                shape.clone()
+            }
+            Op::Output => {
+                assert_eq!(ins.len(), 1, "{}: Output takes one input", layer.name);
+                ins[0].clone()
+            }
+        };
+        debug_assert!(!shape.is_empty(), "layer {idx} produced empty shape");
+        out.push(shape);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Network, Op, Padding};
+
+    #[test]
+    fn conv_dims() {
+        assert_eq!(conv_out_dim(28, 5, 1, Padding::Valid), 24);
+        assert_eq!(conv_out_dim(28, 5, 1, Padding::Same), 28);
+        assert_eq!(conv_out_dim(224, 7, 2, Padding::Same), 112);
+        assert_eq!(conv_out_dim(28, 2, 2, Padding::Valid), 14);
+    }
+
+    #[test]
+    fn lenet_like_shapes() {
+        let mut n = Network::new("t");
+        let i = n.add("in", Op::Input { shape: vec![28, 28, 1] }, vec![]);
+        let c1 = n.add(
+            "c1",
+            Op::Conv2D { out_ch: 6, kh: 5, kw: 5, stride: 1, padding: Padding::Same, relu: true },
+            vec![i],
+        );
+        let p1 = n.add("p1", Op::MaxPool { k: 2, stride: 2, padding: Padding::Valid }, vec![c1]);
+        let f = n.add("f", Op::Reshape { shape: vec![14 * 14 * 6] }, vec![p1]);
+        let d = n.add("d", Op::Dense { units: 10, relu: false }, vec![f]);
+        let _o = n.add("o", Op::Output, vec![d]);
+        let s = n.shapes();
+        assert_eq!(s[c1], vec![28, 28, 6]);
+        assert_eq!(s[p1], vec![14, 14, 6]);
+        assert_eq!(s[d], vec![10]);
+    }
+
+    #[test]
+    fn concat_sums_channels() {
+        let mut n = Network::new("t");
+        let i = n.add("in", Op::Input { shape: vec![8, 8, 3] }, vec![]);
+        let s = n.add("s", Op::Split, vec![i]);
+        let a = n.add(
+            "a",
+            Op::Conv2D { out_ch: 4, kh: 1, kw: 1, stride: 1, padding: Padding::Same, relu: false },
+            vec![s],
+        );
+        let b = n.add(
+            "b",
+            Op::Conv2D { out_ch: 5, kh: 1, kw: 1, stride: 1, padding: Padding::Same, relu: false },
+            vec![s],
+        );
+        let c = n.add("c", Op::Concat, vec![a, b]);
+        assert_eq!(n.shapes()[c], vec![8, 8, 9]);
+    }
+
+    #[test]
+    #[should_panic(expected = "element count mismatch")]
+    fn bad_reshape_panics() {
+        let mut n = Network::new("t");
+        let i = n.add("in", Op::Input { shape: vec![4, 4, 1] }, vec![]);
+        n.add("r", Op::Reshape { shape: vec![17] }, vec![i]);
+        n.shapes();
+    }
+}

@@ -1,0 +1,142 @@
+//! Model-level parallelization transforms (§2.2).
+//!
+//! The paper leaves architecture modifications "to the user": Fig. 2 splits
+//! LeNet-5's first stage into two branches, and §3.2 notes that "the
+//! operation behind some layers, such as the convolution layer, can be
+//! divided into smaller operations, increasing the number of tasks to be
+//! scheduled" (finer parallelization). This module implements that
+//! transform: every eligible convolution is split into `k` output-channel
+//! partitions running in parallel, re-joined by a Concat — semantically
+//! identical to the original network **given per-partition weights**, and
+//! exactly the Fig. 2 pattern generalized.
+//!
+//! Note on weights: partitions draw fresh deterministic weights from their
+//! own names (this is a *architecture* exploration tool, like Fig. 2's
+//! modified LeNet-5, which also isn't weight-compatible with Fig. 1's).
+//! Numeric equivalence with the unsplit network is therefore not expected;
+//! DAG-shape properties are what the transform is for.
+
+use super::{Network, Op};
+
+/// Split every Conv2D with ≥ `min_ch` output channels into `parts`
+/// channel-partitioned parallel convolutions + a Concat, widening the task
+/// graph for multi-core scheduling. Returns the transformed network.
+pub fn split_convs(net: &Network, parts: usize, min_ch: usize) -> Network {
+    assert!(parts >= 2, "parts must be ≥ 2");
+    let mut out = Network::new(format!("{}_split{}", net.name, parts));
+    // Map original layer index → index of its output in the new network.
+    let mut remap: Vec<usize> = Vec::with_capacity(net.layers.len());
+    for l in &net.layers {
+        let new_inputs: Vec<usize> = l.inputs.iter().map(|&i| remap[i]).collect();
+        match &l.op {
+            Op::Conv2D { out_ch, kh, kw, stride, padding, relu }
+                if *out_ch >= min_ch && *out_ch >= parts =>
+            {
+                let base = *out_ch / parts;
+                let extra = *out_ch % parts;
+                let mut pieces = Vec::with_capacity(parts);
+                for p in 0..parts {
+                    let ch = base + usize::from(p < extra);
+                    let piece = out.add(
+                        format!("{}/part{}", l.name, p),
+                        Op::Conv2D {
+                            out_ch: ch,
+                            kh: *kh,
+                            kw: *kw,
+                            stride: *stride,
+                            padding: *padding,
+                            relu: *relu,
+                        },
+                        new_inputs.clone(),
+                    );
+                    pieces.push(piece);
+                }
+                let cat = out.add(format!("{}/concat", l.name), Op::Concat, pieces);
+                remap.push(cat);
+            }
+            op => {
+                let idx = out.add(l.name.clone(), op.clone(), new_inputs);
+                remap.push(idx);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::zoo::{lenet5, Scale};
+    use crate::sched::dsh::Dsh;
+    use crate::sched::Scheduler;
+    use crate::wcet::CostModel;
+
+    #[test]
+    fn shapes_preserved() {
+        let net = lenet5(Scale::Tiny);
+        let split = split_convs(&net, 2, 2);
+        assert_eq!(
+            net.shapes().last().unwrap(),
+            split.shapes().last().unwrap(),
+            "output shape must survive the transform"
+        );
+        assert!(split.layers.len() > net.layers.len());
+    }
+
+    #[test]
+    fn widens_the_task_graph() {
+        // The paper's motivation: sequential LeNet-5 (width 1) becomes
+        // schedulable in parallel after splitting.
+        let cm = CostModel::default();
+        let net = lenet5(Scale::Tiny);
+        assert_eq!(net.to_dag(&cm).width(), 1);
+        let split = split_convs(&net, 3, 2);
+        let w = split.to_dag(&cm).width();
+        assert!(w >= 3, "width {w} after 3-way split");
+    }
+
+    #[test]
+    fn split_network_schedules_faster() {
+        let cm = CostModel::default();
+        let net = lenet5(Scale::Paper);
+        let split = split_convs(&net, 4, 4);
+        let g0 = net.to_dag(&cm);
+        let g1 = split.to_dag(&cm);
+        let base = Dsh.schedule(&g0, 4).schedule.speedup(&g0);
+        let fine = Dsh.schedule(&g1, 4).schedule.speedup(&g1);
+        assert!(
+            fine > base,
+            "finer tasks must improve speedup: {fine:.3} vs {base:.3}"
+        );
+    }
+
+    #[test]
+    fn channel_partition_sums_to_original() {
+        let net = lenet5(Scale::Tiny); // conv_1 has 3 channels
+        let split = split_convs(&net, 2, 2);
+        let shp = split.shapes();
+        let cat = split
+            .layers
+            .iter()
+            .position(|l| l.name == "conv_1/concat")
+            .expect("conv_1 split");
+        assert_eq!(shp[cat][2], 3, "3 = 2 + 1 channels");
+    }
+
+    #[test]
+    fn runs_numerically() {
+        use crate::nn::{eval, numel, weights};
+        let net = split_convs(&lenet5(Scale::Tiny), 2, 2);
+        let shp = net.shapes();
+        let x = eval::Tensor::new(shp[0].clone(), weights::input_tensor(numel(&shp[0]), 3));
+        let y = eval::eval(&net, &x, 3);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn small_convs_untouched() {
+        let net = lenet5(Scale::Tiny);
+        let split = split_convs(&net, 2, 100); // min_ch above everything
+        assert_eq!(split.layers.len(), net.layers.len());
+    }
+}

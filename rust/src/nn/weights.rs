@@ -1,0 +1,113 @@
+//! Deterministic network parameters.
+//!
+//! Weights are a pure function of `(network seed, layer name)`: a SplitMix64
+//! stream seeded by the FNV-1a hash of the layer name XOR the network seed,
+//! drained in a fixed order (kernel row-major `[kh][kw][cin][cout]`, then
+//! biases; Dense: `[in][out]`, then biases). `python/compile/weights.py`
+//! mirrors this exactly, so the JAX-AOT'd model and the generated C code
+//! share parameters with **zero** interchange files.
+
+use super::{Op};
+use crate::util::rng::SplitMix64;
+
+/// Weight scale (uniform in `[-SCALE, SCALE)`), kept small so deep nets
+/// don't saturate in f32.
+pub const SCALE: f32 = 0.25;
+
+/// Parameters of one layer: flattened kernel + biases (empty for
+/// parameter-free ops).
+#[derive(Debug, Clone, Default)]
+pub struct LayerParams {
+    pub kernel: Vec<f32>,
+    pub bias: Vec<f32>,
+}
+
+/// Number of parameters a layer owns given its input shapes.
+pub fn param_count(op: &Op, input_shapes: &[Vec<usize>]) -> usize {
+    match op {
+        Op::Conv2D { out_ch, kh, kw, .. } => {
+            let cin = input_shapes[0][2];
+            kh * kw * cin * out_ch + out_ch
+        }
+        Op::Dense { units, .. } => {
+            let inn = input_shapes[0][0];
+            inn * units + units
+        }
+        _ => 0,
+    }
+}
+
+/// Generate a layer's parameters deterministically.
+pub fn layer_params(name: &str, op: &Op, input_shapes: &[Vec<usize>], seed: u64) -> LayerParams {
+    let mut rng = SplitMix64::new(SplitMix64::seed_from_name(name, seed));
+    match op {
+        Op::Conv2D { out_ch, kh, kw, .. } => {
+            let cin = input_shapes[0][2];
+            // Fan-in-scaled uniform init so activations stay O(1).
+            let fan_in = (kh * kw * cin) as f32;
+            let scale = SCALE / fan_in.sqrt();
+            let kernel = (0..kh * kw * cin * out_ch)
+                .map(|_| rng.weight_f32(scale))
+                .collect();
+            let bias = (0..*out_ch).map(|_| rng.weight_f32(scale)).collect();
+            LayerParams { kernel, bias }
+        }
+        Op::Dense { units, .. } => {
+            let inn = input_shapes[0][0];
+            let scale = SCALE / (inn as f32).sqrt();
+            let kernel = (0..inn * units).map(|_| rng.weight_f32(scale)).collect();
+            let bias = (0..*units).map(|_| rng.weight_f32(scale)).collect();
+            LayerParams { kernel, bias }
+        }
+        _ => LayerParams::default(),
+    }
+}
+
+/// Deterministic input tensor (the synthetic workload the examples use).
+pub fn input_tensor(numel: usize, seed: u64) -> Vec<f32> {
+    let mut rng = SplitMix64::new(SplitMix64::seed_from_name("__input__", seed));
+    (0..numel).map(|_| rng.weight_f32(1.0)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Padding;
+
+    #[test]
+    fn conv_param_count() {
+        let op = Op::Conv2D { out_ch: 8, kh: 3, kw: 3, stride: 1, padding: Padding::Same, relu: true };
+        let n = param_count(&op, &[vec![8, 8, 4]]);
+        assert_eq!(n, 3 * 3 * 4 * 8 + 8);
+        let p = layer_params("c", &op, &[vec![8, 8, 4]], 42);
+        assert_eq!(p.kernel.len(), 288);
+        assert_eq!(p.bias.len(), 8);
+    }
+
+    #[test]
+    fn deterministic_and_name_sensitive() {
+        let op = Op::Dense { units: 4, relu: false };
+        let a = layer_params("gemm", &op, &[vec![10]], 1);
+        let b = layer_params("gemm", &op, &[vec![10]], 1);
+        assert_eq!(a.kernel, b.kernel);
+        let c = layer_params("gemm2", &op, &[vec![10]], 1);
+        assert_ne!(a.kernel, c.kernel);
+        let d = layer_params("gemm", &op, &[vec![10]], 2);
+        assert_ne!(a.kernel, d.kernel);
+    }
+
+    #[test]
+    fn parameter_free_ops() {
+        assert_eq!(param_count(&Op::Split, &[vec![4, 4, 1]]), 0);
+        assert_eq!(param_count(&Op::Concat, &[vec![4, 4, 1], vec![4, 4, 1]]), 0);
+        let p = layer_params("s", &Op::Split, &[vec![4, 4, 1]], 0);
+        assert!(p.kernel.is_empty() && p.bias.is_empty());
+    }
+
+    #[test]
+    fn input_tensor_bounded() {
+        let x = input_tensor(100, 7);
+        assert_eq!(x.len(), 100);
+        assert!(x.iter().all(|v| (-1.0..1.0).contains(v)));
+    }
+}

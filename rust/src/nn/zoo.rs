@@ -1,0 +1,263 @@
+//! The paper's model architectures.
+//!
+//! Every builder takes a [`Scale`]:
+//! * [`Scale::Paper`] — the dimensions the paper analyzes (GoogLeNet-style
+//!   224×224×3 input, Table 1 magnitudes). Used for WCET analysis only —
+//!   never executed.
+//! * [`Scale::Tiny`] — small dimensions that execute in milliseconds; used
+//!   by the PJRT runtime, the generated C code and all numeric tests.
+
+use super::{Network, Op, Padding};
+
+/// Model size preset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Paper,
+    Tiny,
+}
+
+fn conv(out_ch: usize, k: usize, stride: usize, padding: Padding) -> Op {
+    Op::Conv2D { out_ch, kh: k, kw: k, stride, padding, relu: true }
+}
+
+/// Classic LeNet-5 (Fig. 1): a purely sequential CNN — deliberately
+/// unparallelizable (width 1), the paper's motivating example.
+pub fn lenet5(scale: Scale) -> Network {
+    let mut n = Network::new("lenet5");
+    let (hw, c1, c2, d1, d2) = match scale {
+        Scale::Paper => (28, 6, 16, 120, 84),
+        Scale::Tiny => (12, 3, 6, 24, 16),
+    };
+    let i = n.add("input", Op::Input { shape: vec![hw, hw, 1] }, vec![]);
+    let c1l = n.add("conv_1", conv(c1, 5, 1, Padding::Same), vec![i]);
+    let p1 = n.add("maxpool_1", Op::MaxPool { k: 2, stride: 2, padding: Padding::Valid }, vec![c1l]);
+    let c2l = n.add("conv_2", conv(c2, 5, 1, Padding::Same), vec![p1]);
+    let p2 = n.add("maxpool_2", Op::MaxPool { k: 2, stride: 2, padding: Padding::Valid }, vec![c2l]);
+    let flat = hw / 4 * (hw / 4) * c2;
+    let r = n.add("reshape", Op::Reshape { shape: vec![flat] }, vec![p2]);
+    let d1l = n.add("dense_1", Op::Dense { units: d1, relu: true }, vec![r]);
+    let d2l = n.add("dense_2", Op::Dense { units: d2, relu: true }, vec![d1l]);
+    let d3 = n.add("dense_3", Op::Dense { units: 10, relu: false }, vec![d2l]);
+    n.add("output", Op::Output, vec![d3]);
+    n
+}
+
+/// Modified LeNet-5 (Fig. 2): the first conv+pool stage is split into two
+/// parallel half-width branches (as in Gauffriau et al. [8]), re-joined by
+/// a Concat — the architecture Algorithms 1–3 generate code for.
+pub fn lenet5_split(scale: Scale) -> Network {
+    let mut n = Network::new("lenet5_split");
+    let (hw, c1, c2, d1, d2) = match scale {
+        Scale::Paper => (28, 6, 16, 120, 84),
+        Scale::Tiny => (12, 4, 6, 24, 16),
+    };
+    let half = c1 / 2;
+    let i = n.add("input", Op::Input { shape: vec![hw, hw, 1] }, vec![]);
+    let s = n.add("split", Op::Split, vec![i]);
+    let ct = n.add("conv_1_top", conv(half, 5, 1, Padding::Same), vec![s]);
+    let cb = n.add("conv_1_bot", conv(c1 - half, 5, 1, Padding::Same), vec![s]);
+    let pt = n.add("maxpool_1_top", Op::MaxPool { k: 2, stride: 2, padding: Padding::Valid }, vec![ct]);
+    let pb = n.add("maxpool_1_bot", Op::MaxPool { k: 2, stride: 2, padding: Padding::Valid }, vec![cb]);
+    let cat = n.add("concat", Op::Concat, vec![pt, pb]);
+    let c2l = n.add("conv_2", conv(c2, 5, 1, Padding::Same), vec![cat]);
+    let p2 = n.add("maxpool_2", Op::MaxPool { k: 2, stride: 2, padding: Padding::Valid }, vec![c2l]);
+    let flat = hw / 4 * (hw / 4) * c2;
+    let r = n.add("reshape", Op::Reshape { shape: vec![flat] }, vec![p2]);
+    let d1l = n.add("dense_1", Op::Dense { units: d1, relu: true }, vec![r]);
+    let d2l = n.add("dense_2", Op::Dense { units: d2, relu: true }, vec![d1l]);
+    let d3 = n.add("dense_3", Op::Dense { units: 10, relu: false }, vec![d2l]);
+    n.add("output", Op::Output, vec![d3]);
+    n
+}
+
+/// Channel widths of one inception module (branch a, b1→b2, c1→c2,
+/// maxpool→d — the "four independent branches" of Fig. 10).
+struct InceptionCfg {
+    a: usize,
+    b1: usize,
+    b2: usize,
+    c1: usize,
+    c2: usize,
+    d: usize,
+}
+
+/// Append an inception module reading layer `input`; returns the concat id.
+fn inception(n: &mut Network, prefix: &str, input: usize, cfg: &InceptionCfg) -> usize {
+    let a = n.add(format!("{prefix}/conv_a"), conv(cfg.a, 1, 1, Padding::Same), vec![input]);
+    let b1 = n.add(format!("{prefix}/conv_b1"), conv(cfg.b1, 1, 1, Padding::Same), vec![input]);
+    let b2 = n.add(format!("{prefix}/conv_b2"), conv(cfg.b2, 3, 1, Padding::Same), vec![b1]);
+    let c1 = n.add(format!("{prefix}/conv_c1"), conv(cfg.c1, 1, 1, Padding::Same), vec![input]);
+    let c2 = n.add(format!("{prefix}/conv_c2"), conv(cfg.c2, 5, 1, Padding::Same), vec![c1]);
+    let mp = n.add(
+        format!("{prefix}/maxpool"),
+        Op::MaxPool { k: 3, stride: 1, padding: Padding::Same },
+        vec![input],
+    );
+    let d = n.add(format!("{prefix}/conv_d"), conv(cfg.d, 1, 1, Padding::Same), vec![mp]);
+    n.add(format!("{prefix}/concat"), Op::Concat, vec![a, b2, c2, d])
+}
+
+/// The GoogLeNet-based network of Fig. 10 / Table 1: stem (conv_1 …
+/// maxpool_2), two inception modules, global average pool, gemm.
+pub fn googlenet(scale: Scale) -> Network {
+    let mut n = Network::new("googlenet");
+    match scale {
+        Scale::Paper => {
+            let i = n.add("input", Op::Input { shape: vec![224, 224, 3] }, vec![]);
+            let c1 = n.add("conv_1", conv(64, 7, 2, Padding::Same), vec![i]);
+            let p1 = n.add("maxpool_1", Op::MaxPool { k: 3, stride: 2, padding: Padding::Same }, vec![c1]);
+            let c2 = n.add("conv_2", conv(192, 3, 1, Padding::Same), vec![p1]);
+            let p2 = n.add("maxpool_2", Op::MaxPool { k: 3, stride: 2, padding: Padding::Same }, vec![c2]);
+            let inc1 = inception(
+                &mut n,
+                "inception_1",
+                p2,
+                &InceptionCfg { a: 64, b1: 96, b2: 128, c1: 16, c2: 32, d: 32 },
+            );
+            let inc2 = inception(
+                &mut n,
+                "inception_2",
+                inc1,
+                &InceptionCfg { a: 128, b1: 128, b2: 192, c1: 32, c2: 96, d: 64 },
+            );
+            // 28×28 → global average pool.
+            let ap = n.add("avgpool", Op::AvgPool { k: 28, stride: 28, padding: Padding::Valid }, vec![inc2]);
+            let r = n.add("reshape", Op::Reshape { shape: vec![480] }, vec![ap]);
+            let g = n.add("gemm", Op::Dense { units: 1000, relu: false }, vec![r]);
+            n.add("output", Op::Output, vec![g]);
+        }
+        Scale::Tiny => {
+            let i = n.add("input", Op::Input { shape: vec![32, 32, 3] }, vec![]);
+            let c1 = n.add("conv_1", conv(8, 7, 2, Padding::Same), vec![i]);
+            let p1 = n.add("maxpool_1", Op::MaxPool { k: 3, stride: 2, padding: Padding::Same }, vec![c1]);
+            let c2 = n.add("conv_2", conv(16, 3, 1, Padding::Same), vec![p1]);
+            let p2 = n.add("maxpool_2", Op::MaxPool { k: 3, stride: 2, padding: Padding::Same }, vec![c2]);
+            let inc1 = inception(
+                &mut n,
+                "inception_1",
+                p2,
+                &InceptionCfg { a: 8, b1: 8, b2: 12, c1: 4, c2: 6, d: 6 },
+            );
+            let inc2 = inception(
+                &mut n,
+                "inception_2",
+                inc1,
+                &InceptionCfg { a: 12, b1: 12, b2: 16, c1: 6, c2: 8, d: 8 },
+            );
+            let ap = n.add("avgpool", Op::AvgPool { k: 4, stride: 4, padding: Padding::Valid }, vec![inc2]);
+            let r = n.add("reshape", Op::Reshape { shape: vec![44] }, vec![ap]);
+            let g = n.add("gemm", Op::Dense { units: 10, relu: false }, vec![r]);
+            n.add("output", Op::Output, vec![g]);
+        }
+    }
+    n
+}
+
+/// A plain multilayer perceptron: `sizes[0]` inputs, hidden ReLU layers,
+/// linear head (the "simply an MLP" case of §2.2).
+pub fn mlp(name: &str, sizes: &[usize]) -> Network {
+    assert!(sizes.len() >= 2);
+    let mut n = Network::new(name);
+    let mut prev = n.add("input", Op::Input { shape: vec![sizes[0]] }, vec![]);
+    for (li, &units) in sizes[1..].iter().enumerate() {
+        let last = li == sizes.len() - 2;
+        prev = n.add(
+            format!("dense_{}", li + 1),
+            Op::Dense { units, relu: !last },
+            vec![prev],
+        );
+    }
+    n.add("output", Op::Output, vec![prev]);
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wcet::CostModel;
+
+    #[test]
+    fn lenet5_is_sequential() {
+        let g = lenet5(Scale::Tiny).to_dag(&CostModel::default());
+        assert_eq!(g.width(), 1, "Fig. 1: LeNet-5 is purely sequential");
+    }
+
+    #[test]
+    fn split_lenet_has_two_branches() {
+        let g = lenet5_split(Scale::Tiny).to_dag(&CostModel::default());
+        assert_eq!(g.width(), 2, "Fig. 2: two parallel branches");
+    }
+
+    #[test]
+    fn googlenet_layer_names_match_table1() {
+        let n = googlenet(Scale::Paper);
+        let names: Vec<&str> = n.layers.iter().map(|l| l.name.as_str()).collect();
+        for expect in [
+            "input",
+            "conv_1",
+            "maxpool_1",
+            "conv_2",
+            "maxpool_2",
+            "inception_1/conv_a",
+            "inception_1/conv_b1",
+            "inception_1/conv_b2",
+            "inception_1/conv_c1",
+            "inception_1/conv_c2",
+            "inception_1/maxpool",
+            "inception_1/conv_d",
+            "inception_1/concat",
+            "inception_2/conv_a",
+            "inception_2/concat",
+            "avgpool",
+            "reshape",
+            "gemm",
+            "output",
+        ] {
+            assert!(names.contains(&expect), "missing layer {expect}");
+        }
+    }
+
+    #[test]
+    fn googlenet_width_is_four() {
+        // Fig. 10: the inception module has four independent branches.
+        let g = googlenet(Scale::Paper).to_dag(&CostModel::default());
+        assert_eq!(g.width(), 4);
+    }
+
+    #[test]
+    fn googlenet_shapes_paper_scale() {
+        let n = googlenet(Scale::Paper);
+        let s = n.shapes();
+        let by_name = |name: &str| {
+            let i = n.layers.iter().position(|l| l.name == name).unwrap();
+            s[i].clone()
+        };
+        assert_eq!(by_name("conv_1"), vec![112, 112, 64]);
+        assert_eq!(by_name("maxpool_2"), vec![28, 28, 192]);
+        assert_eq!(by_name("inception_1/concat"), vec![28, 28, 256]);
+        assert_eq!(by_name("inception_2/concat"), vec![28, 28, 480]);
+        assert_eq!(by_name("gemm"), vec![1000]);
+    }
+
+    #[test]
+    fn mlp_shapes() {
+        let n = mlp("m", &[64, 32, 10]);
+        let s = n.shapes();
+        assert_eq!(s.last().unwrap(), &vec![10]);
+        assert_eq!(n.param_count(), 64 * 32 + 32 + 32 * 10 + 10);
+    }
+
+    #[test]
+    fn tiny_googlenet_runs() {
+        use crate::nn::{eval, numel, weights};
+        let n = googlenet(Scale::Tiny);
+        let shapes = n.shapes();
+        let x = eval::Tensor::new(
+            shapes[0].clone(),
+            weights::input_tensor(numel(&shapes[0]), 1),
+        );
+        let y = eval::eval(&n, &x, 1);
+        assert_eq!(y.shape, vec![10]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,187 @@
+//! PJRT runtime: load the AOT-compiled HLO text artifacts and execute them
+//! from Rust. Python is never on this path — artifacts are produced once by
+//! `make artifacts` (`python/compile/aot.py`).
+//!
+//! One compiled executable per *compute* layer (conv/dense/pool) plus one
+//! `full` executable per model for the single-core reference. Interchange
+//! is HLO **text** (xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit-id
+//! protos; the text parser reassigns ids).
+
+use crate::nn::eval::Tensor;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: HashMap<String, ModelManifest>,
+}
+
+/// Artifact info of one model.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub seed: u64,
+    /// Layer name → (artifact path, input shapes, output shape).
+    pub layers: HashMap<String, LayerArtifact>,
+    pub full: LayerArtifact,
+    /// Output shape of every layer (incl. memory ops).
+    pub all_shapes: HashMap<String, Vec<usize>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct LayerArtifact {
+    pub path: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub output: Vec<usize>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let doc = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let mut models = HashMap::new();
+        let Some(Json::Obj(model_map)) = doc.get("models") else {
+            bail!("manifest: missing models object");
+        };
+        for (name, m) in model_map {
+            let seed = m
+                .get("seed")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("{name}: missing seed"))? as u64;
+            let mut layers = HashMap::new();
+            if let Some(Json::Obj(lmap)) = m.get("layers") {
+                for (lname, l) in lmap {
+                    layers.insert(lname.clone(), parse_artifact(l)?);
+                }
+            }
+            let full = parse_artifact_full(m.get("full").ok_or_else(|| anyhow!("missing full"))?)?;
+            let mut all_shapes = HashMap::new();
+            if let Some(Json::Obj(smap)) = m.get("all_shapes") {
+                for (lname, s) in smap {
+                    all_shapes.insert(lname.clone(), shape_vec(s)?);
+                }
+            }
+            models.insert(name.clone(), ModelManifest { seed, layers, full, all_shapes });
+        }
+        Ok(Self { dir, models })
+    }
+}
+
+fn shape_vec(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(Json::as_usize).collect())
+        .ok_or_else(|| anyhow!("bad shape {j:?}"))
+}
+
+fn parse_artifact(j: &Json) -> Result<LayerArtifact> {
+    Ok(LayerArtifact {
+        path: j
+            .get("artifact")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("missing artifact path"))?
+            .to_string(),
+        inputs: j
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(|s| shape_vec(s).ok()).collect())
+            .unwrap_or_default(),
+        output: shape_vec(j.get("output").ok_or_else(|| anyhow!("missing output"))?)?,
+    })
+}
+
+fn parse_artifact_full(j: &Json) -> Result<LayerArtifact> {
+    Ok(LayerArtifact {
+        path: j
+            .get("artifact")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("missing artifact path"))?
+            .to_string(),
+        inputs: vec![shape_vec(j.get("input").ok_or_else(|| anyhow!("missing input"))?)?],
+        output: shape_vec(j.get("output").ok_or_else(|| anyhow!("missing output"))?)?,
+    })
+}
+
+/// A PJRT CPU client with a cache of compiled executables.
+///
+/// Not `Send`: the parallel engine (`crate::exec`) builds one `Runtime`
+/// per worker thread — each virtual core owns the code it executes, like
+/// each real core owns its `inference_<i>()` in the generated C.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at the artifact directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu().map_err(xe)?,
+            cache: HashMap::new(),
+            dir: artifacts_dir.as_ref().to_path_buf(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO text artifact (cached by relative path).
+    pub fn load(&mut self, rel_path: &str) -> Result<()> {
+        if self.cache.contains_key(rel_path) {
+            return Ok(());
+        }
+        let full = self.dir.join(rel_path);
+        let proto = xla::HloModuleProto::from_text_file(
+            full.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(xe)
+        .with_context(|| format!("loading HLO {full:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(xe)?;
+        self.cache.insert(rel_path.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a loaded artifact on f32 tensors.
+    ///
+    /// All artifacts are lowered with `return_tuple=True`, so the result is
+    /// unwrapped with `to_tuple1`.
+    pub fn execute(&mut self, rel_path: &str, inputs: &[&Tensor]) -> Result<Tensor> {
+        self.load(rel_path)?;
+        let exe = self.cache.get(rel_path).expect("just loaded");
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data).reshape(&dims).map_err(xe)
+            })
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals).map_err(xe)?[0][0]
+            .to_literal_sync()
+            .map_err(xe)?;
+        let out = result.to_tuple1().map_err(xe)?;
+        let shape = out.array_shape().map_err(xe)?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = out.to_vec::<f32>().map_err(xe)?;
+        Ok(Tensor::new(if dims.is_empty() { vec![1] } else { dims }, data))
+    }
+
+    /// Number of compiled executables held.
+    pub fn loaded_count(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// xla::Error → anyhow (xla::Error is not std::error::Error-compatible
+/// across versions; format it).
+fn xe(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e:?}")
+}

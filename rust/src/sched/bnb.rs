@@ -1,0 +1,343 @@
+//! Chou–Chung solution-space exploration (§3.4).
+//!
+//! Branch-and-bound over S-nodes (partial schedule states), with the two
+//! pruning relations of Chou & Chung (1994):
+//!
+//! * **Equivalence** `uEv` (`P(u) = P(v)` and `S(u) = S(v)`): equivalent
+//!   ready nodes with equal WCET are interchangeable, so only the
+//!   lowest-id one is expanded first (symmetry breaking, optimality-safe).
+//! * **State dominance**: two S-nodes covering the same scheduled set with
+//!   the same canonical per-core frontier are redundant; the later one is
+//!   pruned (the paper's shortest-path-over-pruned-tree view).
+//!
+//! Like Chou & Chung's original model, this solver does **not** duplicate
+//! nodes: it finds the optimal *duplication-free* schedule. Empty cores are
+//! interchangeable, so a node is tried on at most one idle core.
+
+use super::{Schedule, Scheduler, SolveResult};
+use crate::graph::{static_levels, Cycles, Dag, NodeId};
+use std::collections::{HashMap, HashSet};
+use std::time::{Duration, Instant};
+
+/// Configurable exact search (duplication-free).
+#[derive(Debug, Clone)]
+pub struct ChouChung {
+    pub timeout: Duration,
+}
+
+impl Default for ChouChung {
+    fn default() -> Self {
+        Self { timeout: Duration::from_secs(60) }
+    }
+}
+
+#[derive(Clone)]
+struct PartialState {
+    /// core/start/finish per scheduled node (usize::MAX = unscheduled).
+    core: Vec<usize>,
+    finish: Vec<Cycles>,
+    avail: Vec<Cycles>,
+    pending_parents: Vec<usize>,
+    scheduled: u32,
+    makespan: Cycles,
+    placements: Vec<(NodeId, usize, Cycles)>,
+}
+
+struct Ctx<'g> {
+    g: &'g Dag,
+    m: usize,
+    levels: Vec<Cycles>,
+    /// Equivalence classes: eq_leader[v] = smallest node with equal parent
+    /// and child sets and equal WCET.
+    eq_leader: Vec<NodeId>,
+    deadline: Instant,
+}
+
+impl Scheduler for ChouChung {
+    fn name(&self) -> &'static str {
+        "BnB-ChouChung"
+    }
+
+    fn schedule(&self, g: &Dag, m: usize) -> SolveResult {
+        let t0 = Instant::now();
+        let levels = static_levels(g);
+        let eq_leader = equivalence_leaders(g);
+        let ctx = Ctx {
+            g,
+            m,
+            levels,
+            eq_leader,
+            deadline: t0 + self.timeout,
+        };
+        // Seed: serial schedule.
+        let mut best = Schedule::new(m);
+        let mut t = 0;
+        for v in g.topo_order() {
+            best.place(g, v, 0, t);
+            t += g.wcet(v);
+        }
+        let mut best_ms = best.makespan();
+
+        let root = PartialState {
+            core: vec![usize::MAX; g.n()],
+            finish: vec![0; g.n()],
+            avail: vec![0; m],
+            pending_parents: (0..g.n()).map(|v| g.parents(v).len()).collect(),
+            scheduled: 0,
+            makespan: 0,
+            placements: Vec::new(),
+        };
+        let mut seen: HashMap<u64, HashSet<u64>> = HashMap::new();
+        let mut explored = 0u64;
+        let mut timed_out = false;
+        dfs(
+            &ctx,
+            root,
+            &mut best,
+            &mut best_ms,
+            &mut seen,
+            &mut explored,
+            &mut timed_out,
+        );
+        SolveResult {
+            schedule: best,
+            optimal: !timed_out,
+            solve_time: t0.elapsed(),
+            explored,
+        }
+    }
+}
+
+/// For each node, the smallest node with identical parent set, child set
+/// and WCET (the `uEv` relation of §3.4 extended with equal cost).
+fn equivalence_leaders(g: &Dag) -> Vec<NodeId> {
+    let mut key: Vec<(Vec<NodeId>, Vec<NodeId>, Cycles)> = Vec::with_capacity(g.n());
+    for v in 0..g.n() {
+        let mut ps: Vec<NodeId> = g.parents(v).iter().map(|&(u, _)| u).collect();
+        let mut cs: Vec<NodeId> = g.children(v).iter().map(|&(c, _)| c).collect();
+        ps.sort_unstable();
+        cs.sort_unstable();
+        key.push((ps, cs, g.wcet(v)));
+    }
+    (0..g.n())
+        .map(|v| (0..=v).find(|&u| key[u] == key[v]).unwrap())
+        .collect()
+}
+
+fn dfs(
+    ctx: &Ctx<'_>,
+    st: PartialState,
+    best: &mut Schedule,
+    best_ms: &mut Cycles,
+    seen: &mut HashMap<u64, HashSet<u64>>,
+    explored: &mut u64,
+    timed_out: &mut bool,
+) {
+    *explored += 1;
+    if *explored % 512 == 0 && Instant::now() >= ctx.deadline {
+        *timed_out = true;
+    }
+    if *timed_out {
+        return;
+    }
+    let g = ctx.g;
+    let n = g.n();
+    if st.placements.len() == n {
+        if st.makespan < *best_ms {
+            *best_ms = st.makespan;
+            let mut sched = Schedule::new(ctx.m);
+            for &(v, c, s) in &st.placements {
+                sched.place(g, v, c, s);
+            }
+            *best = sched;
+        }
+        return;
+    }
+    // Lower bound: any unscheduled node still needs its level below it, and
+    // cannot start before its latest scheduled parent's finish.
+    let mut lb = st.makespan;
+    for v in 0..n {
+        if st.core[v] == usize::MAX {
+            let est = g
+                .parents(v)
+                .iter()
+                .filter(|&&(u, _)| st.core[u] != usize::MAX)
+                .map(|&(u, _)| st.finish[u])
+                .max()
+                .unwrap_or(0);
+            lb = lb.max(est + ctx.levels[v]);
+        }
+    }
+    if lb >= *best_ms {
+        return;
+    }
+    // State-dominance memoization on the canonical signature.
+    let sig = signature(ctx, &st);
+    let entry = seen.entry(st.scheduled as u64).or_default();
+    if !entry.insert(sig) {
+        return; // an equivalent S-node was already expanded
+    }
+
+    // Ready nodes, with equivalence symmetry breaking: among unscheduled
+    // equivalent nodes only the leader (smallest id) is expandable now.
+    let ready: Vec<NodeId> = (0..n)
+        .filter(|&v| st.core[v] == usize::MAX && st.pending_parents[v] == 0)
+        .filter(|&v| {
+            let l = ctx.eq_leader[v];
+            l == v || st.core[l] != usize::MAX || {
+                // leader not ready/unscheduled elsewhere? expand leader only
+                // if it is also ready; otherwise v stands in for it.
+                st.pending_parents[l] != 0
+            }
+        })
+        .collect();
+    // Order by level (highest first) for good first dives.
+    let mut ready = ready;
+    ready.sort_by_key(|&v| std::cmp::Reverse(ctx.levels[v]));
+
+    for &v in &ready {
+        let mut tried_idle = false;
+        for p in 0..ctx.m {
+            let idle = st.avail[p] == 0 && !st.placements.iter().any(|&(_, c, _)| c == p);
+            if idle {
+                if tried_idle {
+                    continue; // empty cores are interchangeable
+                }
+                tried_idle = true;
+            }
+            let data = g
+                .parents(v)
+                .iter()
+                .map(|&(u, w)| {
+                    st.finish[u] + if st.core[u] == p { 0 } else { w }
+                })
+                .max()
+                .unwrap_or(0);
+            let start = st.avail[p].max(data);
+            let fin = start + g.wcet(v);
+            if fin.max(st.makespan) >= *best_ms {
+                continue;
+            }
+            let mut child = st.clone();
+            child.core[v] = p;
+            child.finish[v] = fin;
+            child.avail[p] = fin;
+            child.scheduled |= 1 << (v % 32); // coarse; sig handles the rest
+            child.makespan = child.makespan.max(fin);
+            child.placements.push((v, p, start));
+            for &(c, _) in g.children(v) {
+                child.pending_parents[c] -= 1;
+            }
+            dfs(ctx, child, best, best_ms, seen, explored, timed_out);
+            if *timed_out {
+                return;
+            }
+        }
+    }
+}
+
+/// Canonical signature of an S-node: the scheduled set plus, per core, the
+/// finish/core data of nodes that still have unscheduled children (the
+/// frontier that future decisions can observe). Cores sorted to factor out
+/// core symmetry.
+fn signature(ctx: &Ctx<'_>, st: &PartialState) -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut per_core: Vec<Vec<(NodeId, Cycles)>> = vec![Vec::new(); ctx.m];
+    for &(v, c, _) in &st.placements {
+        if ctx
+            .g
+            .children(v)
+            .iter()
+            .any(|&(ch, _)| st.core[ch] == usize::MAX)
+        {
+            per_core[c].push((v, st.finish[v]));
+        }
+    }
+    let mut cores: Vec<(Cycles, Vec<(NodeId, Cycles)>)> = per_core
+        .into_iter()
+        .enumerate()
+        .map(|(c, mut v)| {
+            v.sort_unstable();
+            (st.avail[c], v)
+        })
+        .collect();
+    cores.sort();
+    let mut hasher = std::collections::hash_map::DefaultHasher::new();
+    for &(v, c, s) in st.placements.iter() {
+        // scheduled set (exact, not the coarse bitmask)
+        (v, c == usize::MAX, s == Cycles::MAX).hash(&mut hasher);
+        v.hash(&mut hasher);
+    }
+    cores.hash(&mut hasher);
+    hasher.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{paper_example_dag, Dag};
+    use crate::sched::{check_valid, ish::Ish};
+
+    #[test]
+    fn chain_serial_optimal() {
+        let mut g = Dag::new();
+        let a = g.add_node("a", 2);
+        let b = g.add_node("b", 3);
+        g.add_edge(a, b, 7);
+        let r = ChouChung::default().schedule(&g, 2);
+        assert!(r.optimal);
+        assert_eq!(r.schedule.makespan(), 5);
+        assert_eq!(check_valid(&g, &r.schedule), Ok(()));
+    }
+
+    #[test]
+    fn fork_uses_two_cores() {
+        let mut g = Dag::new();
+        let a = g.add_node("a", 1);
+        let b = g.add_node("b", 4);
+        let c = g.add_node("c", 4);
+        g.add_edge(a, b, 1);
+        g.add_edge(a, c, 1);
+        let r = ChouChung::default().schedule(&g, 2);
+        assert!(r.optimal);
+        // a@0..1; b local 1..5; c remote starts 2..6 → 6.
+        assert_eq!(r.schedule.makespan(), 6);
+    }
+
+    #[test]
+    fn no_duplication_ever() {
+        let g = paper_example_dag();
+        let r = ChouChung::default().schedule(&g, 3);
+        assert_eq!(r.schedule.duplication_count(), 0);
+        assert_eq!(check_valid(&g, &r.schedule), Ok(()));
+    }
+
+    #[test]
+    fn at_least_as_good_as_ish() {
+        let g = paper_example_dag();
+        for m in 2..=3 {
+            let ish = Ish.schedule(&g, m).schedule.makespan();
+            let r = ChouChung::default().schedule(&g, m);
+            assert!(r.optimal, "m={m} should finish in time");
+            assert!(r.schedule.makespan() <= ish, "m={m}");
+        }
+    }
+
+    #[test]
+    fn equivalence_classes_detected() {
+        // b and c are E-equivalent (same parents, same children, same t).
+        let mut g = Dag::new();
+        let a = g.add_node("a", 1);
+        let b = g.add_node("b", 2);
+        let c = g.add_node("c", 2);
+        let d = g.add_node("d", 1);
+        g.add_edge(a, b, 1);
+        g.add_edge(a, c, 1);
+        g.add_edge(b, d, 1);
+        g.add_edge(c, d, 1);
+        let leaders = equivalence_leaders(&g);
+        assert_eq!(leaders[b], b);
+        assert_eq!(leaders[c], b);
+        assert_eq!(leaders[a], a);
+    }
+}

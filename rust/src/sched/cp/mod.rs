@@ -1,0 +1,391 @@
+//! Constraint-programming exact solver (§3.1–3.2).
+//!
+//! An in-house branch-and-bound constraint solver over the paper's decision
+//! variables, supporting **both** encodings so the §4.3 comparison can be
+//! reproduced with identical search machinery:
+//!
+//! * [`Encoding::Tang`] — Tang et al.'s formulation: assignment variables
+//!   `x_{v,p}` **plus** the 4-D communication variables `d_{a_i,b_j}`
+//!   (constraints (1)–(8)). The `d` tensor multiplies the branching space
+//!   by `|E|·m²`, which is exactly why it scales poorly.
+//! * [`Encoding::Improved`] — the paper's reworked model: only `x`, `s`, `f`,
+//!   with the duplication upper bound (9), same-core / earliest-finish
+//!   timing rules (10)–(11) and the split completion-time definition
+//!   (12)–(13). Communication sources are implied (earliest finishing
+//!   instance), not branched on.
+//!
+//! Search: DFS over binary decisions (x, then d for Tang, then dynamic
+//! disjunctive-order decisions per constraint (4)), with interval
+//! propagation on start-time bounds, an incumbent upper bound, and a
+//! critical-path-based lower bound for pruning. A wall-clock timeout makes
+//! the solver *anytime*: on expiry it returns the best schedule found so
+//! far with `optimal = false`, mirroring CP Optimizer's behaviour in §4.3.
+
+mod state;
+
+pub use state::Encoding;
+use state::State;
+
+use super::{check_valid, prune_redundant, Schedule, Scheduler, SolveResult};
+use crate::graph::{critical_path_len, static_levels, Cycles, Dag};
+use std::time::{Duration, Instant};
+
+/// Solver configuration.
+#[derive(Debug, Clone)]
+pub struct CpConfig {
+    pub encoding: Encoding,
+    /// Wall-clock budget; on expiry the best incumbent is returned.
+    pub timeout: Duration,
+    /// Optional warm-start schedule (§4.3's suggested hybrid): its makespan
+    /// seeds the incumbent so the solver only explores improvements.
+    pub warm_start: Option<Schedule>,
+}
+
+impl CpConfig {
+    pub fn improved(timeout: Duration) -> Self {
+        Self { encoding: Encoding::Improved, timeout, warm_start: None }
+    }
+    pub fn tang(timeout: Duration) -> Self {
+        Self { encoding: Encoding::Tang, timeout, warm_start: None }
+    }
+}
+
+/// The CP solver (implements [`Scheduler`] for the evaluation harness).
+#[derive(Debug, Clone)]
+pub struct CpSolver {
+    pub cfg: CpConfig,
+}
+
+impl CpSolver {
+    pub fn new(cfg: CpConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Solve and additionally report whether the search space was exhausted
+    /// (proving optimality) and whether any leaf beyond the warm start was
+    /// reached ("found a solution" in the §4.3 sense).
+    pub fn solve(&self, g: &Dag, m: usize) -> CpOutcome {
+        let t0 = Instant::now();
+        let deadline = t0 + self.cfg.timeout;
+        let sink = g
+            .single_sink()
+            .expect("CP solver requires a single-sink DAG (use ensure_single_sink)");
+        let levels = static_levels(g);
+        let cp_lb = critical_path_len(g);
+
+        // Incumbent: warm start if provided, else the trivial serial
+        // schedule (always valid) so `best` is never empty.
+        let mut best = match &self.cfg.warm_start {
+            Some(s) => s.clone(),
+            None => serial_schedule(g, m),
+        };
+        let mut best_ms = best.makespan();
+        let mut found_leaf = false;
+
+        let mut search = Search {
+            g,
+            m,
+            levels: &levels,
+            encoding: self.cfg.encoding,
+            deadline,
+            explored: 0,
+            timed_out: false,
+            best_ms: &mut best_ms,
+            best: &mut best,
+            found_leaf: &mut found_leaf,
+        };
+        let root = State::root(g, m, sink, self.cfg.encoding);
+        let exhausted = if *search.best_ms <= cp_lb {
+            true // warm start already matches the absolute lower bound
+        } else {
+            search.dfs(root)
+        };
+        let optimal = exhausted && !search.timed_out;
+        let explored = search.explored;
+        CpOutcome {
+            result: SolveResult {
+                schedule: best,
+                optimal,
+                solve_time: t0.elapsed(),
+                explored,
+            },
+            found_solution: found_leaf || self.cfg.warm_start.is_some(),
+            timed_out: t0.elapsed() >= self.cfg.timeout,
+        }
+    }
+}
+
+/// Extended solve report for the §4.3 evaluation.
+#[derive(Debug, Clone)]
+pub struct CpOutcome {
+    pub result: SolveResult,
+    /// Did the search itself reach a feasible leaf (vs. only the seed)?
+    pub found_solution: bool,
+    pub timed_out: bool,
+}
+
+impl Scheduler for CpSolver {
+    fn name(&self) -> &'static str {
+        match self.cfg.encoding {
+            Encoding::Tang => "CP-Tang",
+            Encoding::Improved => "CP-improved",
+        }
+    }
+    fn schedule(&self, g: &Dag, m: usize) -> SolveResult {
+        self.solve(g, m).result
+    }
+}
+
+/// Everything on one core, topological order — the fallback incumbent.
+fn serial_schedule(g: &Dag, m: usize) -> Schedule {
+    let mut s = Schedule::new(m);
+    let mut t = 0;
+    for v in g.topo_order() {
+        s.place(g, v, 0, t);
+        t += g.wcet(v);
+    }
+    s
+}
+
+struct Search<'a> {
+    g: &'a Dag,
+    m: usize,
+    levels: &'a [Cycles],
+    encoding: Encoding,
+    deadline: Instant,
+    explored: u64,
+    timed_out: bool,
+    best_ms: &'a mut Cycles,
+    best: &'a mut Schedule,
+    found_leaf: &'a mut bool,
+}
+
+impl<'a> Search<'a> {
+    /// Returns true if the subtree was fully explored (no timeout cut).
+    fn dfs(&mut self, mut st: State) -> bool {
+        self.explored += 1;
+        if self.explored % 256 == 0 && Instant::now() >= self.deadline {
+            self.timed_out = true;
+            return false;
+        }
+        if self.timed_out {
+            return false;
+        }
+        // Propagate to fixpoint under the current incumbent bound.
+        if !st.propagate(self.g, self.m, self.levels, self.encoding, *self.best_ms) {
+            return true; // infeasible or dominated: pruned subtree, fully explored
+        }
+        // Lower bound pruning.
+        if st.lower_bound(self.g, self.m, self.levels) >= *self.best_ms {
+            return true;
+        }
+        // Branch on the next undecided binary (greedy value first).
+        if let Some((var, first)) = st.pick_branch(self.g, self.m, self.encoding) {
+            let mut complete = true;
+            for val in [first, 1 - first] {
+                let mut child = st.clone();
+                if child.assign(var, val) {
+                    complete &= self.dfs(child);
+                }
+                if self.timed_out {
+                    return false;
+                }
+            }
+            return complete;
+        }
+        // All binaries fixed. First, the primal heuristic: greedily
+        // sequence this assignment into a feasible incumbent — the exact
+        // order-branching below then searches only for improvements.
+        if st.is_assignment_complete() {
+            let mut sched = st.greedy_complete(self.g, self.m, self.levels);
+            prune_redundant(self.g, &mut sched);
+            if check_valid(self.g, &sched).is_ok() {
+                *self.found_leaf = true;
+                let ms = sched.makespan();
+                if ms < *self.best_ms {
+                    *self.best_ms = ms;
+                    *self.best = sched;
+                }
+            }
+            if st.lower_bound(self.g, self.m, self.levels) >= *self.best_ms {
+                return true; // the heuristic already matched the bound here
+            }
+        }
+        // Resolve disjunctive overlaps exactly (constraint (4)).
+        if let Some((core, a, b)) = st.pick_overlap(self.g, self.m) {
+            let mut complete = true;
+            for &(x, y) in &[(a, b), (b, a)] {
+                let mut child = st.clone();
+                child.add_order(core, x, y);
+                complete &= self.dfs(child);
+                if self.timed_out {
+                    return false;
+                }
+            }
+            return complete;
+        }
+        // Leaf: left-shift every assigned instance to its lower bound.
+        let mut sched = st.extract(self.g, self.m);
+        prune_redundant(self.g, &mut sched);
+        if check_valid(self.g, &sched).is_ok() {
+            *self.found_leaf = true;
+            let ms = sched.makespan();
+            if ms < *self.best_ms {
+                *self.best_ms = ms;
+                *self.best = sched;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{ensure_single_sink, paper_example_dag, Dag};
+    use crate::sched::dsh::Dsh;
+    use std::time::Duration;
+
+    fn solve(g: &Dag, m: usize, enc: Encoding, secs: u64) -> CpOutcome {
+        let cfg = CpConfig {
+            encoding: enc,
+            timeout: Duration::from_secs(secs),
+            warm_start: None,
+        };
+        CpSolver::new(cfg).solve(g, m)
+    }
+
+    fn chain3() -> Dag {
+        let mut g = Dag::new();
+        let a = g.add_node("a", 2);
+        let b = g.add_node("b", 3);
+        let c = g.add_node("c", 1);
+        g.add_edge(a, b, 5);
+        g.add_edge(b, c, 5);
+        g
+    }
+
+    #[test]
+    fn chain_is_serial_optimal() {
+        let g = chain3();
+        for enc in [Encoding::Improved, Encoding::Tang] {
+            let out = solve(&g, 2, enc, 10);
+            assert!(out.result.optimal, "{enc:?} must prove optimality");
+            assert_eq!(out.result.schedule.makespan(), 6, "{enc:?}");
+        }
+    }
+
+    #[test]
+    fn fork_parallelizes_optimally() {
+        // a → {b, c} → d with zero-ish comm: two cores overlap b and c.
+        let mut g = Dag::new();
+        let a = g.add_node("a", 1);
+        let b = g.add_node("b", 4);
+        let c = g.add_node("c", 4);
+        let d = g.add_node("d", 1);
+        g.add_edge(a, b, 1);
+        g.add_edge(a, c, 1);
+        g.add_edge(b, d, 1);
+        g.add_edge(c, d, 1);
+        for enc in [Encoding::Improved, Encoding::Tang] {
+            let out = solve(&g, 2, enc, 20);
+            assert!(out.result.optimal, "{enc:?}");
+            // Optimum: duplicate a on both cores (or pay w=1 once):
+            // a@0..1 | b 1..5 on P1, a 0..1, c 1..5 on P2, d 6..7 → 7.
+            // Without duplication: a, b on P1 (0..5), c starts 2..6, d at 7.
+            let ms = out.result.schedule.makespan();
+            assert_eq!(ms, 7, "{enc:?} got {ms}");
+        }
+    }
+
+    #[test]
+    fn duplication_found_when_profitable() {
+        // a → b and a → c, heavy comm: optimal duplicates a on both cores.
+        let mut g = Dag::new();
+        let a = g.add_node("a", 1);
+        let b = g.add_node("b", 5);
+        let c = g.add_node("c", 5);
+        let s = g.add_node("s", 0);
+        g.add_edge(a, b, 100);
+        g.add_edge(a, c, 100);
+        g.add_edge(b, s, 0);
+        g.add_edge(c, s, 0);
+        let out = solve(&g, 2, Encoding::Improved, 20);
+        assert!(out.result.optimal);
+        assert_eq!(out.result.schedule.makespan(), 6);
+        assert!(out.result.schedule.duplication_count() >= 1);
+    }
+
+    #[test]
+    fn matches_or_beats_dsh_on_example_dag() {
+        // §4.3 Observation 2: the exact solver's plateau is at least DSH's.
+        let mut g = paper_example_dag();
+        ensure_single_sink(&mut g);
+        for m in 2..=3 {
+            let dsh = Dsh.schedule(&g, m).schedule.makespan();
+            let out = solve(&g, m, Encoding::Improved, 30);
+            let cp = out.result.schedule.makespan();
+            assert!(cp <= dsh, "m={m}: CP {cp} > DSH {dsh}");
+            assert!(check_valid(&g, &out.result.schedule).is_ok());
+        }
+    }
+
+    #[test]
+    fn tang_and_improved_agree_on_optimum() {
+        let mut g = Dag::new();
+        let a = g.add_node("a", 2);
+        let b = g.add_node("b", 3);
+        let c = g.add_node("c", 2);
+        let d = g.add_node("d", 1);
+        g.add_edge(a, b, 2);
+        g.add_edge(a, c, 2);
+        g.add_edge(b, d, 1);
+        g.add_edge(c, d, 1);
+        let imp = solve(&g, 2, Encoding::Improved, 20);
+        let tang = solve(&g, 2, Encoding::Tang, 60);
+        assert!(imp.result.optimal && tang.result.optimal);
+        assert_eq!(
+            imp.result.schedule.makespan(),
+            tang.result.schedule.makespan()
+        );
+    }
+
+    #[test]
+    fn timeout_returns_best_found() {
+        let mut g = crate::daggen::generate(&crate::daggen::DagGenConfig::paper(20), 5);
+        ensure_single_sink(&mut g);
+        let cfg = CpConfig {
+            encoding: Encoding::Improved,
+            timeout: Duration::from_millis(200),
+            warm_start: None,
+        };
+        let out = CpSolver::new(cfg).solve(&g, 4);
+        // Whatever happened, we must hold a valid schedule.
+        assert!(check_valid(&g, &out.result.schedule).is_ok());
+        assert!(out.result.schedule.makespan() <= g.total_wcet());
+    }
+
+    #[test]
+    fn warm_start_bounds_result() {
+        let mut g = paper_example_dag();
+        ensure_single_sink(&mut g);
+        let dsh = Dsh.schedule(&g, 2).schedule;
+        let dsh_ms = dsh.makespan();
+        let cfg = CpConfig {
+            encoding: Encoding::Improved,
+            timeout: Duration::from_secs(10),
+            warm_start: Some(dsh),
+        };
+        let out = CpSolver::new(cfg).solve(&g, 2);
+        assert!(out.result.schedule.makespan() <= dsh_ms);
+    }
+
+    #[test]
+    fn sink_never_duplicated() {
+        // Constraint (6).
+        let mut g = paper_example_dag();
+        let s = ensure_single_sink(&mut g);
+        let out = solve(&g, 3, Encoding::Improved, 20);
+        assert_eq!(out.result.schedule.instances(s).len(), 1);
+    }
+}

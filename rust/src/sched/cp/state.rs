@@ -1,0 +1,620 @@
+//! Solver state and propagation for the two CP encodings.
+
+use crate::graph::{Cycles, Dag, NodeId};
+use crate::sched::Schedule;
+use std::sync::Arc;
+
+/// Which constraint formulation the solver enforces (§3.1 vs §3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Encoding {
+    /// Tang et al.: x + 4-D communication variables d (constraints 1–8).
+    Tang,
+    /// The paper's improved model: x only, earliest-finish communication
+    /// semantics (constraints 1, 4, 6, 9–13).
+    Improved,
+}
+
+/// A binary decision variable (flat index into the state vectors).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bin {
+    /// Assignment x_{v,p}: index = v·m + p.
+    X(usize),
+    /// Communication d for (edge, i, j): index = e·m² + i·m + j.
+    D(usize),
+}
+
+/// Static context shared by all states of one solve.
+struct Ctx {
+    n: usize,
+    m: usize,
+    sink: NodeId,
+    edges: Vec<(NodeId, NodeId, Cycles)>,
+    /// Duplication cap per node: constraint (9) `card(children)` for the
+    /// improved encoding; `m` (no cap beyond one-per-core) for Tang.
+    max_dup: Vec<usize>,
+    topo: Vec<NodeId>,
+}
+
+/// A partial assignment: ternary binaries + start-time interval bounds +
+/// committed same-core orderings.
+#[derive(Clone)]
+pub struct State {
+    ctx: Arc<Ctx>,
+    /// x_{v,p} ∈ {-1 unset, 0, 1}.
+    x: Vec<i8>,
+    /// d_{e,i,j} (Tang only; empty vec for Improved).
+    d: Vec<i8>,
+    /// Conditional start-time bounds: valid whenever the instance is
+    /// assigned (x ≠ 0). Unassigned instances are ignored at extraction.
+    s_lb: Vec<Cycles>,
+    s_ub: Vec<Cycles>,
+    /// Committed disjunctions: (core, a, b) ⇒ f_{a,core} ≤ s_{b,core}.
+    orders: Vec<(u16, u16, u16)>,
+}
+
+impl State {
+    pub fn root(g: &Dag, m: usize, sink: NodeId, encoding: Encoding) -> Self {
+        let n = g.n();
+        let edges: Vec<_> = g.edges().collect();
+        let max_dup: Vec<usize> = (0..n)
+            .map(|v| {
+                if v == sink {
+                    1
+                } else {
+                    match encoding {
+                        Encoding::Improved => g.children(v).len().max(1).min(m),
+                        Encoding::Tang => m,
+                    }
+                }
+            })
+            .collect();
+        let ctx = Arc::new(Ctx { n, m, sink, edges: edges.clone(), max_dup, topo: g.topo_order() });
+        let horizon = g.total_wcet();
+        let d_len = match encoding {
+            Encoding::Tang => edges.len() * m * m,
+            Encoding::Improved => 0,
+        };
+        State {
+            ctx,
+            x: vec![-1; n * m],
+            d: vec![-1; d_len],
+            s_lb: vec![0; n * m],
+            s_ub: vec![horizon; n * m],
+            orders: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn xi(&self, v: NodeId, p: usize) -> i8 {
+        self.x[v * self.ctx.m + p]
+    }
+
+    #[inline]
+    fn di(&self, e: usize, i: usize, j: usize) -> i8 {
+        self.d[e * self.ctx.m * self.ctx.m + i * self.ctx.m + j]
+    }
+
+    /// Fix a binary; false when it contradicts an existing assignment.
+    pub fn assign(&mut self, var: Bin, val: i8) -> bool {
+        let slot = match var {
+            Bin::X(i) => &mut self.x[i],
+            Bin::D(i) => &mut self.d[i],
+        };
+        if *slot == -1 {
+            *slot = val;
+            true
+        } else {
+            *slot == val
+        }
+    }
+
+    /// Commit an ordering decision (branching on constraint (4)).
+    pub fn add_order(&mut self, core: usize, a: NodeId, b: NodeId) {
+        self.orders.push((core as u16, a as u16, b as u16));
+    }
+
+    /// Run every propagator to fixpoint under the incumbent bound `ub`.
+    /// Returns false when the state is infeasible (or cannot beat `ub`).
+    pub fn propagate(
+        &mut self,
+        g: &Dag,
+        m: usize,
+        levels: &[Cycles],
+        encoding: Encoding,
+        ub: Cycles,
+    ) -> bool {
+        let n = self.ctx.n;
+        for _round in 0..4 * (n + self.orders.len() + 4) {
+            let mut changed = false;
+
+            // Makespan bound: s_{v,p} + lvl(v) ≤ ub − 1 for assignable
+            // instances (lvl = remaining compute chain incl. v).
+            for v in 0..n {
+                for p in 0..m {
+                    let idx = v * m + p;
+                    if self.x[idx] == 0 {
+                        continue;
+                    }
+                    match (ub - 1).checked_sub(levels[v]) {
+                        Some(cap) if cap >= self.s_lb[idx] => {
+                            if self.s_ub[idx] > cap {
+                                self.s_ub[idx] = cap;
+                                changed = true;
+                            }
+                        }
+                        _ => {
+                            // No feasible start on this core.
+                            if self.x[idx] == 1 {
+                                return false;
+                            }
+                            self.x[idx] = 0;
+                            changed = true;
+                        }
+                    }
+                }
+            }
+
+            // Cardinality constraints (1), (6), (9).
+            for v in 0..n {
+                let mut ones = 0;
+                let mut unset = 0;
+                for p in 0..m {
+                    match self.xi(v, p) {
+                        1 => ones += 1,
+                        -1 => unset += 1,
+                        _ => {}
+                    }
+                }
+                let cap = self.ctx.max_dup[v];
+                if ones > cap || ones + unset == 0 {
+                    return false;
+                }
+                if ones == 0 && unset == 1 {
+                    // Forced: exactly one candidate remains (constraint 1).
+                    for p in 0..m {
+                        if self.xi(v, p) == -1 {
+                            self.x[v * m + p] = 1;
+                            changed = true;
+                        }
+                    }
+                } else if ones == cap && unset > 0 {
+                    for p in 0..m {
+                        if self.xi(v, p) == -1 {
+                            self.x[v * m + p] = 0;
+                            changed = true;
+                        }
+                    }
+                }
+            }
+
+            // Edge timing: constraints (10)–(11) (improved) / (5) (Tang).
+            for (e_idx, &(u, v, w)) in self.ctx.edges.iter().enumerate() {
+                for j in 0..m {
+                    if self.xi(v, j) == 0 {
+                        continue;
+                    }
+                    // Earliest possible arrival of u's data at core j over
+                    // all still-candidate supplier instances.
+                    let mut arr = Cycles::MAX;
+                    for i in 0..m {
+                        if self.xi(u, i) == 0 {
+                            continue;
+                        }
+                        if encoding == Encoding::Tang && self.di(e_idx, i, j) == 0 {
+                            continue; // this supplier was branched away
+                        }
+                        let a = self.s_lb[u * m + i]
+                            + g.wcet(u)
+                            + if i == j { 0 } else { w };
+                        arr = arr.min(a);
+                    }
+                    if arr == Cycles::MAX {
+                        if self.xi(v, j) == 1 {
+                            return false; // consumer with no possible supplier
+                        }
+                        self.x[v * m + j] = 0;
+                        changed = true;
+                        continue;
+                    }
+                    let idx = v * m + j;
+                    if self.s_lb[idx] < arr {
+                        self.s_lb[idx] = arr;
+                        changed = true;
+                    }
+                }
+                // Tang back-propagation: a committed supplier must finish in
+                // time for its consumer (tightens s_ub of the supplier).
+                if encoding == Encoding::Tang {
+                    for i in 0..m {
+                        for j in 0..m {
+                            if self.di(e_idx, i, j) != 1 {
+                                continue;
+                            }
+                            let lat = if i == j { 0 } else { w };
+                            let cons_ub = self.s_ub[v * m + j];
+                            match cons_ub.checked_sub(g.wcet(u) + lat) {
+                                Some(cap) => {
+                                    let idx = u * m + i;
+                                    if self.s_ub[idx] > cap {
+                                        self.s_ub[idx] = cap;
+                                        changed = true;
+                                    }
+                                }
+                                None => return false,
+                            }
+                        }
+                    }
+                }
+            }
+
+            // Committed orderings (from constraint (4) branching).
+            for &(c, a, b) in &self.orders.clone() {
+                let (c, a, b) = (c as usize, a as usize, b as usize);
+                let ia = a * m + c;
+                let ib = b * m + c;
+                let lb = self.s_lb[ia] + g.wcet(a);
+                if self.s_lb[ib] < lb {
+                    self.s_lb[ib] = lb;
+                    changed = true;
+                }
+                match self.s_ub[ib].checked_sub(g.wcet(a)) {
+                    Some(cap) if self.s_ub[ia] > cap => {
+                        self.s_ub[ia] = cap;
+                        changed = true;
+                    }
+                    Some(_) => {}
+                    None => return false,
+                }
+            }
+
+            // Window consistency: empty interval kills the instance.
+            for v in 0..n {
+                for p in 0..m {
+                    let idx = v * m + p;
+                    if self.x[idx] != 0 && self.s_lb[idx] > self.s_ub[idx] {
+                        if self.x[idx] == 1 {
+                            return false;
+                        }
+                        self.x[idx] = 0;
+                        changed = true;
+                    }
+                }
+            }
+
+            // Tang d-variable propagation: linking + sums (7)–(8).
+            if encoding == Encoding::Tang && !self.propagate_tang(&mut changed) {
+                return false;
+            }
+
+            // Semi-propagation of the disjunctive constraint (4): commit an
+            // ordering when only one direction remains feasible.
+            if !self.propagate_disjunctive(g, m, &mut changed) {
+                return false;
+            }
+
+            if !changed {
+                return true;
+            }
+        }
+        true // iteration cap: sound (propagation is only ever tightening)
+    }
+
+    fn propagate_tang(&mut self, changed: &mut bool) -> bool {
+        let m = self.ctx.m;
+        let ne = self.ctx.edges.len();
+        // Linking: d=1 ⇒ both endpoints assigned; endpoint=0 ⇒ d=0.
+        for e in 0..ne {
+            let (u, v, _) = self.ctx.edges[e];
+            for i in 0..m {
+                for j in 0..m {
+                    let idx = e * m * m + i * m + j;
+                    match self.d[idx] {
+                        1 => {
+                            for (node, core) in [(u, i), (v, j)] {
+                                match self.xi(node, core) {
+                                    0 => return false,
+                                    -1 => {
+                                        self.x[node * m + core] = 1;
+                                        *changed = true;
+                                    }
+                                    _ => {}
+                                }
+                            }
+                        }
+                        -1 => {
+                            if self.xi(u, i) == 0 || self.xi(v, j) == 0 {
+                                self.d[idx] = 0;
+                                *changed = true;
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+            }
+        }
+        // Constraint (8): assigned consumer ⇒ exactly one supplier per edge.
+        for e in 0..ne {
+            let (_, v, _) = self.ctx.edges[e];
+            for j in 0..m {
+                if self.xi(v, j) != 1 {
+                    continue;
+                }
+                let mut ones = 0;
+                let mut unset = 0;
+                for i in 0..m {
+                    match self.di(e, i, j) {
+                        1 => ones += 1,
+                        -1 => unset += 1,
+                        _ => {}
+                    }
+                }
+                if ones > 1 || ones + unset == 0 {
+                    return false;
+                }
+                if ones == 1 && unset > 0 {
+                    for i in 0..m {
+                        let idx = e * m * m + i * m + j;
+                        if self.d[idx] == -1 {
+                            self.d[idx] = 0;
+                            *changed = true;
+                        }
+                    }
+                } else if ones == 0 && unset == 1 {
+                    for i in 0..m {
+                        let idx = e * m * m + i * m + j;
+                        if self.d[idx] == -1 {
+                            self.d[idx] = 1;
+                            *changed = true;
+                        }
+                    }
+                }
+            }
+        }
+        // Constraint (7): an assigned non-sink instance must send something.
+        for v0 in 0..self.ctx.n {
+            if v0 == self.ctx.sink {
+                continue;
+            }
+            let out_edges: Vec<usize> = self
+                .ctx
+                .edges
+                .iter()
+                .enumerate()
+                .filter(|(_, &(u, _, _))| u == v0)
+                .map(|(e, _)| e)
+                .collect();
+            if out_edges.is_empty() {
+                continue;
+            }
+            for i in 0..self.ctx.m {
+                if self.xi(v0, i) != 1 {
+                    continue;
+                }
+                let mut possible = 0;
+                for &e in &out_edges {
+                    for j in 0..self.ctx.m {
+                        if self.di(e, i, j) != 0 {
+                            possible += 1;
+                        }
+                    }
+                }
+                if possible == 0 {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Constraint (4): for each pair assigned to the same core, fail when
+    /// neither order fits, auto-commit when exactly one does.
+    fn propagate_disjunctive(&mut self, g: &Dag, m: usize, changed: &mut bool) -> bool {
+        let n = self.ctx.n;
+        for c in 0..m {
+            let on_core: Vec<NodeId> = (0..n).filter(|&v| self.xi(v, c) == 1).collect();
+            for ai in 0..on_core.len() {
+                for bi in ai + 1..on_core.len() {
+                    let (a, b) = (on_core[ai], on_core[bi]);
+                    if self.has_order(c, a, b) || self.has_order(c, b, a) {
+                        continue;
+                    }
+                    let ab_ok =
+                        self.s_lb[a * m + c] + g.wcet(a) <= self.s_ub[b * m + c];
+                    let ba_ok =
+                        self.s_lb[b * m + c] + g.wcet(b) <= self.s_ub[a * m + c];
+                    match (ab_ok, ba_ok) {
+                        (false, false) => return false,
+                        (true, false) => {
+                            self.add_order(c, a, b);
+                            *changed = true;
+                        }
+                        (false, true) => {
+                            self.add_order(c, b, a);
+                            *changed = true;
+                        }
+                        (true, true) => {}
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    fn has_order(&self, c: usize, a: NodeId, b: NodeId) -> bool {
+        self.orders
+            .iter()
+            .any(|&(oc, oa, ob)| oc as usize == c && oa as usize == a && ob as usize == b)
+    }
+
+    /// Critical-path lower bound on the makespan of any completion.
+    pub fn lower_bound(&self, _g: &Dag, m: usize, levels: &[Cycles]) -> Cycles {
+        let mut lb = 0;
+        for v in 0..self.ctx.n {
+            let mut node_lb = Cycles::MAX;
+            for p in 0..m {
+                if self.xi(v, p) != 0 {
+                    node_lb = node_lb.min(self.s_lb[v * m + p]);
+                }
+            }
+            if node_lb != Cycles::MAX {
+                lb = lb.max(node_lb + levels[v]);
+            }
+        }
+        lb
+    }
+
+    /// Next binary to branch on, with the value to try first.
+    ///
+    /// Greedy-guided: nodes in topological order; for a node with no
+    /// committed instance yet, branch on the unset core with the smallest
+    /// start-time lower bound and try 1 first — the first DFS dive then
+    /// mimics a list schedule and lands on a good incumbent immediately
+    /// (the anytime behaviour §4.3 relies on). Duplicate instances and
+    /// Tang communication variables are tried 0-first.
+    pub fn pick_branch(&self, g: &Dag, m: usize, encoding: Encoding) -> Option<(Bin, i8)> {
+        // List-scheduling-style guidance: the score of placing v on p is
+        // max(data-arrival lower bound, committed load of p). Without the
+        // load term every s_lb is 0 at the root and the first dive packs
+        // one core — i.e. the serial schedule.
+        let mut load = vec![0u64; m];
+        for v in 0..self.ctx.n {
+            for p in 0..m {
+                if self.xi(v, p) == 1 {
+                    load[p] += g.wcet(v);
+                }
+            }
+        }
+        for &v in &self.ctx.topo {
+            let has_instance = (0..m).any(|p| self.xi(v, p) == 1);
+            let mut best: Option<(usize, Cycles)> = None;
+            for p in 0..m {
+                if self.xi(v, p) == -1 {
+                    let key = self.s_lb[v * m + p].max(load[p]);
+                    if best.map_or(true, |(_, b)| key < b) {
+                        best = Some((p, key));
+                    }
+                }
+            }
+            if let Some((p, _)) = best {
+                let first = if has_instance { 0 } else { 1 };
+                return Some((Bin::X(v * m + p), first));
+            }
+        }
+        if encoding == Encoding::Tang {
+            for (idx, &val) in self.d.iter().enumerate() {
+                if val == -1 {
+                    return Some((Bin::D(idx), 0));
+                }
+            }
+        }
+        None
+    }
+
+    /// An unordered, possibly-overlapping same-core pair, if any remains.
+    pub fn pick_overlap(&self, g: &Dag, m: usize) -> Option<(usize, NodeId, NodeId)> {
+        let n = self.ctx.n;
+        for c in 0..m {
+            let on_core: Vec<NodeId> = (0..n).filter(|&v| self.xi(v, c) == 1).collect();
+            for ai in 0..on_core.len() {
+                for bi in ai + 1..on_core.len() {
+                    let (a, b) = (on_core[ai], on_core[bi]);
+                    if self.has_order(c, a, b) || self.has_order(c, b, a) {
+                        continue;
+                    }
+                    // Already separated by bounds?
+                    let a_before = self.s_ub[a * m + c] + g.wcet(a) <= self.s_lb[b * m + c];
+                    let b_before = self.s_ub[b * m + c] + g.wcet(b) <= self.s_lb[a * m + c];
+                    if !a_before && !b_before {
+                        // Emit the pair in lb-consistent order so the DFS
+                        // tries the schedule the bounds already suggest.
+                        if self.s_lb[a * m + c] <= self.s_lb[b * m + c] {
+                            return Some((c, a, b));
+                        }
+                        return Some((c, b, a));
+                    }
+                }
+            }
+        }
+        None
+    }
+
+
+
+    /// True when every x (and, for Tang, every d) variable is decided.
+    pub fn is_assignment_complete(&self) -> bool {
+        !self.x.contains(&-1) && !self.d.contains(&-1)
+    }
+
+    /// Primal heuristic: complete a fully-assigned state into a feasible
+    /// schedule by list-scheduling the fixed instances (level-priority,
+    /// earliest-start). Always succeeds on a DAG: instances become ready in
+    /// topological waves. Used by the search as an incumbent source at
+    /// every complete assignment — the exact order-branching below it then
+    /// only has to *improve* on this, which is what makes the solver
+    /// usefully anytime (§4.3).
+    pub fn greedy_complete(&self, g: &Dag, m: usize, levels: &[Cycles]) -> Schedule {
+        let mut sched = Schedule::new(m);
+        let mut remaining: Vec<(NodeId, usize)> = Vec::new();
+        for v in 0..self.ctx.n {
+            for p in 0..m {
+                if self.xi(v, p) == 1 {
+                    remaining.push((v, p));
+                }
+            }
+        }
+        let mut core_avail = vec![0u64; m];
+        let mut done = vec![false; self.ctx.n];
+        while !remaining.is_empty() {
+            // Ready instances: every parent node has some finished instance.
+            let mut best: Option<(usize, Cycles)> = None; // (index, start)
+            for (idx, &(v, p)) in remaining.iter().enumerate() {
+                let mut arrival = Some(0u64);
+                for &(u, w) in g.parents(v) {
+                    match sched.arrival(u, w, p) {
+                        Some(t) if done[u] => {
+                            arrival = arrival.map(|a| a.max(t));
+                        }
+                        _ => {
+                            arrival = None;
+                            break;
+                        }
+                    }
+                }
+                let Some(arr) = arrival else { continue };
+                let start = arr.max(core_avail[p]);
+                let better = match best {
+                    None => true,
+                    Some((bidx, bstart)) => {
+                        let (bv, _) = remaining[bidx];
+                        (start, std::cmp::Reverse(levels[v]), v)
+                            < (bstart, std::cmp::Reverse(levels[bv]), bv)
+                    }
+                };
+                if better {
+                    best = Some((idx, start));
+                }
+            }
+            let (idx, start) = best.expect("a DAG assignment always has a ready instance");
+            let (v, p) = remaining.swap_remove(idx);
+            sched.place(g, v, p, start);
+            core_avail[p] = start + g.wcet(v);
+            done[v] = true;
+        }
+        sched
+    }
+
+    /// Left-shifted schedule: every assigned instance at its lower bound.
+    /// Sound at a leaf because every remaining constraint is a max-plus
+    /// (difference) constraint, whose lb fixpoint is the minimal solution.
+    pub fn extract(&self, g: &Dag, m: usize) -> Schedule {
+        let mut s = Schedule::new(m);
+        for v in 0..self.ctx.n {
+            for p in 0..m {
+                if self.xi(v, p) == 1 {
+                    s.place(g, v, p, self.s_lb[v * m + p]);
+                }
+            }
+        }
+        s
+    }
+}

@@ -1,0 +1,222 @@
+//! Duplication Scheduling Heuristic (Kruatrachue; §3.3, Fig. 5).
+//!
+//! Same level-ordered list skeleton as ISH, but when placing a node on a
+//! core would leave an idle period caused by a communication delay, the
+//! heuristic tries to *duplicate* the critical parent into the hole —
+//! recursively duplicating that parent's own critical parent and so on —
+//! and keeps the copies only if the node's start time improves. Redundant
+//! duplicates are pruned at the end (§2.3).
+
+use super::list::ListState;
+use super::{prune_redundant, Scheduler, SolveResult};
+use crate::graph::{Cycles, Dag, NodeId};
+use std::time::Instant;
+
+/// The DSH solver.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Dsh;
+
+/// Outcome of a duplication attempt on one core.
+struct DupPlan {
+    start: Cycles,
+    /// Duplicates to place, in placement order: (node, start).
+    dups: Vec<(NodeId, Cycles)>,
+}
+
+impl Scheduler for Dsh {
+    fn name(&self) -> &'static str {
+        "DSH"
+    }
+
+    fn schedule(&self, g: &Dag, m: usize) -> SolveResult {
+        let t0 = Instant::now();
+        let mut st = ListState::new(g, m);
+        let mut explored = 0u64;
+        while let Some(v) = st.pop_ready() {
+            // Evaluate every core with its best duplication plan.
+            let mut best: Option<(usize, DupPlan)> = None;
+            for p in 0..st.m {
+                explored += 1;
+                let plan = plan_with_duplication(&st, v, p, &mut explored);
+                let better = match &best {
+                    None => true,
+                    Some((bp, bplan)) => {
+                        (plan.start, plan.dups.len(), p) < (bplan.start, bplan.dups.len(), *bp)
+                    }
+                };
+                if better {
+                    best = Some((p, plan));
+                }
+            }
+            let (p, plan) = best.unwrap();
+            for &(u, s) in &plan.dups {
+                st.commit_duplicate(u, p, s);
+            }
+            st.commit(v, p, plan.start);
+        }
+        let mut schedule = st.schedule;
+        prune_redundant(g, &mut schedule);
+        SolveResult {
+            schedule,
+            optimal: false,
+            solve_time: t0.elapsed(),
+            explored,
+        }
+    }
+}
+
+/// Compute the earliest start of `v` on `p`, optionally duplicating
+/// ancestors into the idle period before it (Kruatrachue's
+/// duplication-first step).
+///
+/// Works on a scratch copy of the partial schedule: repeatedly identify the
+/// *critical parent* (the one whose data arrival equals the start time and
+/// which has no instance on `p`), tentatively copy it onto `p` as early as
+/// its own inputs allow — recursing on its own comm delay via the outer
+/// loop, since a committed copy becomes part of the scratch schedule — and
+/// keep the copy only if `v`'s start strictly improves.
+fn plan_with_duplication(
+    st: &ListState<'_>,
+    v: NodeId,
+    p: usize,
+    explored: &mut u64,
+) -> DupPlan {
+    let g = st.g;
+    let mut scratch = st.schedule.clone();
+    let mut avail = st.core_avail[p];
+    let mut dups: Vec<(NodeId, Cycles)> = Vec::new();
+
+    let data_ready = |sch: &super::Schedule, node: NodeId, core: usize| -> Cycles {
+        g.parents(node)
+            .iter()
+            .map(|&(u, w)| sch.arrival(u, w, core).expect("parents scheduled"))
+            .max()
+            .unwrap_or(0)
+    };
+
+    let mut start = avail.max(data_ready(&scratch, v, p));
+    loop {
+        *explored += 1;
+        if start <= avail {
+            break; // no idle period → nothing to gain
+        }
+        // Critical parent: latest-arriving parent without an instance on p.
+        let crit = g
+            .parents(v)
+            .iter()
+            .filter(|&&(u, w)| {
+                scratch.arrival(u, w, p).unwrap() == start
+                    && !scratch.placements.iter().any(|q| q.node == u && q.core == p)
+            })
+            .map(|&(u, _)| u)
+            .next();
+        let Some(u) = crit else { break };
+        // Tentative copy of u on p, as early as its own inputs allow.
+        // Trial by place/remove instead of cloning the schedule — this is
+        // the hot loop of the whole heuristic (§Perf log).
+        let s_u = avail.max(data_ready(&scratch, u, p));
+        let f_u = s_u + g.wcet(u);
+        scratch.place(g, u, p, s_u);
+        let new_start = f_u.max(data_ready(&scratch, v, p));
+        if new_start < start {
+            dups.push((u, s_u));
+            avail = f_u;
+            start = new_start;
+            // Loop again: either another parent is now critical, or u's own
+            // start could be improved by duplicating *its* parents — that
+            // shows up as `start > avail` with a new critical parent, i.e.
+            // the recursion of the paper realized iteratively.
+        } else {
+            scratch.remove(u, p, s_u);
+            break;
+        }
+    }
+    DupPlan { start, dups }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{paper_example_dag, Dag};
+    use crate::sched::{check_valid, ish::Ish};
+
+    #[test]
+    fn valid_on_example_dag() {
+        let g = paper_example_dag();
+        for m in 1..=4 {
+            let r = Dsh.schedule(&g, m);
+            assert_eq!(check_valid(&g, &r.schedule), Ok(()), "m={m}");
+        }
+    }
+
+    #[test]
+    fn duplication_removes_comm_delay() {
+        // Fig. 5's scenario: 1 → 5 with comm delay; duplicating 1 on P2
+        // lets 5 start at t(1) instead of t(1) + w.
+        let mut g = Dag::new();
+        let n1 = g.add_node("1", 1);
+        let n6 = g.add_node("6", 3);
+        let n5 = g.add_node("5", 2);
+        g.add_edge(n1, n6, 1);
+        g.add_edge(n1, n5, 1);
+        let r = Dsh.schedule(&g, 2);
+        assert_eq!(check_valid(&g, &r.schedule), Ok(()));
+        // 5 must start at 1 (local copy of node 1), not at 2 (1 + w).
+        let five = r.schedule.instances(n5);
+        assert_eq!(five.len(), 1);
+        assert_eq!(five[0].start, 1);
+    }
+
+    #[test]
+    fn dsh_at_least_as_good_as_ish_on_examples() {
+        // §4.2 Observation 2 on the paper's own example graph.
+        let g = paper_example_dag();
+        for m in 2..=6 {
+            let ish = Ish.schedule(&g, m).schedule.makespan();
+            let dsh = Dsh.schedule(&g, m).schedule.makespan();
+            assert!(dsh <= ish, "m={m}: DSH {dsh} > ISH {ish}");
+        }
+    }
+
+    #[test]
+    fn single_core_equals_total_wcet() {
+        let g = paper_example_dag();
+        let r = Dsh.schedule(&g, 1);
+        assert_eq!(r.schedule.makespan(), g.total_wcet());
+        assert_eq!(r.schedule.duplication_count(), 0);
+    }
+
+    #[test]
+    fn chain_duplication_recurses() {
+        // a → b → c → v with heavy comm everywhere: DSH should replicate
+        // the whole chain onto the second branch's core when profitable.
+        let mut g = Dag::new();
+        let a = g.add_node("a", 1);
+        let b = g.add_node("b", 1);
+        let other = g.add_node("other", 9); // keeps core 0 busy
+        let v = g.add_node("v", 1);
+        g.add_edge(a, b, 8);
+        g.add_edge(a, other, 8);
+        g.add_edge(b, v, 8);
+        let r = Dsh.schedule(&g, 2);
+        assert_eq!(check_valid(&g, &r.schedule), Ok(()));
+        // Without duplication v waits for b over comm-8 links; with chain
+        // duplication everything on one core finishes by 1+1+1(+other).
+        assert!(
+            r.schedule.makespan() <= 10,
+            "makespan {} — duplication chain not applied",
+            r.schedule.makespan()
+        );
+    }
+
+    #[test]
+    fn pruning_leaves_valid_schedule() {
+        let g = paper_example_dag();
+        let r = Dsh.schedule(&g, 4);
+        assert_eq!(check_valid(&g, &r.schedule), Ok(()));
+        // Every node still present.
+        for v in 0..g.n() {
+            assert!(!r.schedule.instances(v).is_empty());
+        }
+    }
+}

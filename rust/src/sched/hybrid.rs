@@ -1,0 +1,82 @@
+//! Hybrid solver suggested in §4.3: "a call to DSH gives a first schedule,
+//! which is then used as a starting point by the solver".
+//!
+//! DSH runs first (fast, near-optimal); its makespan seeds the CP solver's
+//! incumbent, so the exact search only ever explores strictly-improving
+//! schedules and inherits DSH's answer when the budget runs out.
+
+use super::cp::{CpConfig, CpSolver, Encoding};
+use super::dsh::Dsh;
+use super::{Scheduler, SolveResult};
+use crate::graph::Dag;
+use std::time::{Duration, Instant};
+
+/// DSH warm start + improved-encoding CP refinement.
+#[derive(Debug, Clone)]
+pub struct Hybrid {
+    /// Budget for the CP refinement phase (DSH itself is unbudgeted: it is
+    /// orders of magnitude faster, §4.2 Observation 3).
+    pub cp_timeout: Duration,
+}
+
+impl Default for Hybrid {
+    fn default() -> Self {
+        Self { cp_timeout: Duration::from_secs(10) }
+    }
+}
+
+impl Scheduler for Hybrid {
+    fn name(&self) -> &'static str {
+        "Hybrid-DSH+CP"
+    }
+
+    fn schedule(&self, g: &Dag, m: usize) -> SolveResult {
+        let t0 = Instant::now();
+        let seed = Dsh.schedule(g, m);
+        let cfg = CpConfig {
+            encoding: Encoding::Improved,
+            timeout: self.cp_timeout,
+            warm_start: Some(seed.schedule.clone()),
+        };
+        let out = CpSolver::new(cfg).solve(g, m);
+        let mut res = out.result;
+        res.solve_time = t0.elapsed();
+        res.explored += seed.explored;
+        res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{ensure_single_sink, paper_example_dag};
+    use crate::sched::{check_valid, dsh::Dsh};
+
+    #[test]
+    fn hybrid_never_worse_than_dsh() {
+        let mut g = paper_example_dag();
+        ensure_single_sink(&mut g);
+        for m in 2..=4 {
+            let dsh = Dsh.schedule(&g, m).schedule.makespan();
+            let hy = Hybrid::default().schedule(&g, m);
+            assert!(hy.schedule.makespan() <= dsh, "m={m}");
+            assert_eq!(check_valid(&g, &hy.schedule), Ok(()));
+        }
+    }
+
+    #[test]
+    fn hybrid_reaches_optimum_on_small_graph() {
+        let mut g = crate::graph::Dag::new();
+        let a = g.add_node("a", 1);
+        let b = g.add_node("b", 4);
+        let c = g.add_node("c", 4);
+        let d = g.add_node("d", 1);
+        g.add_edge(a, b, 1);
+        g.add_edge(a, c, 1);
+        g.add_edge(b, d, 1);
+        g.add_edge(c, d, 1);
+        let hy = Hybrid::default().schedule(&g, 2);
+        assert!(hy.optimal);
+        assert_eq!(hy.schedule.makespan(), 7);
+    }
+}

@@ -1,0 +1,160 @@
+//! Insertion Scheduling Heuristic (Kruatrachue; §3.3, Fig. 4).
+//!
+//! Plain level-ordered list scheduling, plus an *insertion step*: whenever
+//! placing a node leaves an idle period on the chosen core (typically while
+//! waiting for a remote parent's data), the heuristic scans the ready queue
+//! for lower-level nodes that fit in the hole without delaying the current
+//! node, and schedules them there.
+
+use super::list::ListState;
+use super::{Scheduler, SolveResult};
+use crate::graph::{Dag, NodeId};
+use std::time::Instant;
+
+/// The ISH solver.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Ish;
+
+impl Scheduler for Ish {
+    fn name(&self) -> &'static str {
+        "ISH"
+    }
+
+    fn schedule(&self, g: &Dag, m: usize) -> SolveResult {
+        let t0 = Instant::now();
+        let mut st = ListState::new(g, m);
+        let mut explored = 0u64;
+        while let Some(v) = st.pop_ready() {
+            explored += 1;
+            let (p, start) = st.best_core(v);
+            let gap_start = st.core_avail[p];
+            st.commit(v, p, start);
+            // Insertion step: fill [gap_start, start) with ready nodes.
+            fill_gap(&mut st, p, gap_start, start, &mut explored);
+        }
+        SolveResult {
+            schedule: st.schedule,
+            optimal: false,
+            solve_time: t0.elapsed(),
+            explored,
+        }
+    }
+}
+
+/// Try to schedule ready nodes inside the idle interval `[from, until)` of
+/// core `p`, preserving every already-placed start time. Nodes are tried in
+/// queue (level) order; each successful insertion may release new ready
+/// nodes, so the scan restarts until nothing fits.
+fn fill_gap(
+    st: &mut ListState<'_>,
+    p: usize,
+    mut from: crate::graph::Cycles,
+    until: crate::graph::Cycles,
+    explored: &mut u64,
+) {
+    loop {
+        let mut inserted: Option<(NodeId, crate::graph::Cycles)> = None;
+        for idx in 0..st.ready.len() {
+            let u = st.ready[idx];
+            *explored += 1;
+            let s = from.max(st.data_ready(u, p));
+            if s + st.g.wcet(u) <= until {
+                st.ready.remove(idx);
+                inserted = Some((u, s));
+                break;
+            }
+        }
+        match inserted {
+            Some((u, s)) => {
+                // commit() advances core_avail past the inserted node; the
+                // node already placed at `until` keeps its start because the
+                // insertion was only accepted when it fits entirely before.
+                st.schedule.place(st.g, u, p, s);
+                st.scheduled[u] = true;
+                for &(c, _) in st.g.children(u) {
+                    st.pending_parents[c] -= 1;
+                    if st.pending_parents[c] == 0 {
+                        let lvl = st.levels[c];
+                        let key = (std::cmp::Reverse(lvl), c);
+                        let pos = st
+                            .ready
+                            .partition_point(|&x| (std::cmp::Reverse(st.levels[x]), x) < key);
+                        st.ready.insert(pos, c);
+                    }
+                }
+                from = s + st.g.wcet(u);
+                if from >= until {
+                    break;
+                }
+            }
+            None => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{paper_example_dag, Dag};
+    use crate::sched::check_valid;
+
+    #[test]
+    fn valid_on_example_dag() {
+        let g = paper_example_dag();
+        for m in 1..=4 {
+            let r = Ish.schedule(&g, m);
+            assert_eq!(check_valid(&g, &r.schedule), Ok(()), "m={m}");
+        }
+    }
+
+    #[test]
+    fn single_core_equals_total_wcet() {
+        let g = paper_example_dag();
+        let r = Ish.schedule(&g, 1);
+        assert_eq!(r.schedule.makespan(), g.total_wcet());
+    }
+
+    #[test]
+    fn never_slower_than_single_core() {
+        let g = paper_example_dag();
+        for m in 2..=8 {
+            let r = Ish.schedule(&g, m);
+            assert!(r.schedule.makespan() <= g.total_wcet());
+        }
+    }
+
+    #[test]
+    fn insertion_fills_comm_gap() {
+        // Fig. 4's scenario: a fan-out where waiting for a remote parent
+        // leaves a hole that a short independent ready node can fill.
+        let mut g = Dag::new();
+        let a = g.add_node("a", 1);
+        let b = g.add_node("b", 5); // long branch, goes to the other core
+        let c = g.add_node("c", 3); // successor waiting on b's data
+        let d = g.add_node("d", 1); // short filler
+        g.add_edge(a, b, 1);
+        g.add_edge(a, d, 1);
+        g.add_edge(b, c, 4);
+        let r = Ish.schedule(&g, 2);
+        assert_eq!(check_valid(&g, &r.schedule), Ok(()));
+        // d must not extend the makespan: it fits in some idle slot.
+        let ms = r.schedule.makespan();
+        assert!(ms <= 1 + 5 + 4 + 3, "makespan {ms}");
+    }
+
+    #[test]
+    fn no_duplication_in_ish() {
+        let g = paper_example_dag();
+        for m in 2..=6 {
+            let r = Ish.schedule(&g, m);
+            assert_eq!(r.schedule.duplication_count(), 0);
+        }
+    }
+
+    #[test]
+    fn all_nodes_scheduled_exactly_once() {
+        let g = paper_example_dag();
+        let r = Ish.schedule(&g, 3);
+        assert_eq!(r.schedule.placements.len(), g.n());
+    }
+}

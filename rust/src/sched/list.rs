@@ -1,0 +1,173 @@
+//! Shared framework for the Kruatrachue list-scheduling heuristics (§3.3).
+//!
+//! Both ISH and DSH follow the same skeleton: assign each node a static
+//! level (longest compute path to a leaf), keep the ready nodes in a queue
+//! ordered by level, repeatedly pick the front node, choose the core that
+//! minimizes its start time, and place it.
+
+use super::Schedule;
+use crate::graph::{static_levels, Cycles, Dag, NodeId};
+
+/// Mutable state threaded through a list-scheduling run.
+pub struct ListState<'g> {
+    pub g: &'g Dag,
+    pub m: usize,
+    /// Static level of every node (priority; higher = more urgent).
+    pub levels: Vec<Cycles>,
+    /// Partial schedule under construction.
+    pub schedule: Schedule,
+    /// Earliest free instant of each core.
+    pub core_avail: Vec<Cycles>,
+    /// Whether each node has been scheduled (first instance placed).
+    pub scheduled: Vec<bool>,
+    /// Count of still-unscheduled parents per node.
+    pub pending_parents: Vec<usize>,
+    /// Ready queue, kept sorted by (level desc, id asc).
+    pub ready: Vec<NodeId>,
+}
+
+impl<'g> ListState<'g> {
+    pub fn new(g: &'g Dag, m: usize) -> Self {
+        assert!(m >= 1);
+        let levels = static_levels(g);
+        let pending_parents: Vec<usize> = (0..g.n()).map(|v| g.parents(v).len()).collect();
+        let mut ready: Vec<NodeId> =
+            (0..g.n()).filter(|&v| pending_parents[v] == 0).collect();
+        ready.sort_by_key(|&v| (std::cmp::Reverse(levels[v]), v));
+        Self {
+            g,
+            m,
+            levels,
+            schedule: Schedule::new(m),
+            core_avail: vec![0; m],
+            scheduled: vec![false; g.n()],
+            pending_parents,
+            ready,
+        }
+    }
+
+    /// Pop the highest-level ready node.
+    pub fn pop_ready(&mut self) -> Option<NodeId> {
+        if self.ready.is_empty() {
+            None
+        } else {
+            Some(self.ready.remove(0))
+        }
+    }
+
+    /// Earliest time all of `v`'s inputs are available on core `p`, given
+    /// the instances placed so far (duplicates included). `None` for source
+    /// nodes resolves to 0.
+    pub fn data_ready(&self, v: NodeId, p: usize) -> Cycles {
+        self.g
+            .parents(v)
+            .iter()
+            .map(|&(u, w)| {
+                self.schedule
+                    .arrival(u, w, p)
+                    .expect("list scheduling only considers ready nodes")
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Earliest start of `v` on core `p` without duplication: data arrival
+    /// vs. core availability.
+    pub fn est(&self, v: NodeId, p: usize) -> Cycles {
+        self.core_avail[p].max(self.data_ready(v, p))
+    }
+
+    /// Core minimizing `est(v, ·)` (ties → lowest id), with the start time.
+    pub fn best_core(&self, v: NodeId) -> (usize, Cycles) {
+        (0..self.m)
+            .map(|p| (p, self.est(v, p)))
+            .min_by_key(|&(p, t)| (t, p))
+            .unwrap()
+    }
+
+    /// Commit the *first* instance of `v` on `p` at `start`: records the
+    /// placement, advances the core cursor and releases children whose
+    /// parents are now all scheduled.
+    pub fn commit(&mut self, v: NodeId, p: usize, start: Cycles) {
+        debug_assert!(!self.scheduled[v], "node {v} scheduled twice");
+        debug_assert!(start >= self.core_avail[p]);
+        self.schedule.place(self.g, v, p, start);
+        self.core_avail[p] = start + self.g.wcet(v);
+        self.scheduled[v] = true;
+        for &(c, _) in self.g.children(v) {
+            self.pending_parents[c] -= 1;
+            if self.pending_parents[c] == 0 {
+                self.insert_ready(c);
+            }
+        }
+    }
+
+    /// Place a *duplicate* instance (does not mark the node scheduled and
+    /// does not release children — the first instance already did).
+    pub fn commit_duplicate(&mut self, v: NodeId, p: usize, start: Cycles) {
+        debug_assert!(self.scheduled[v]);
+        debug_assert!(start >= self.core_avail[p]);
+        self.schedule.place(self.g, v, p, start);
+        self.core_avail[p] = start + self.g.wcet(v);
+    }
+
+    fn insert_ready(&mut self, v: NodeId) {
+        let key = (std::cmp::Reverse(self.levels[v]), v);
+        let pos = self
+            .ready
+            .partition_point(|&u| (std::cmp::Reverse(self.levels[u]), u) < key);
+        self.ready.insert(pos, v);
+    }
+
+    /// True when a node already has an instance on core `p`.
+    pub fn on_core(&self, v: NodeId, p: usize) -> bool {
+        self.schedule
+            .placements
+            .iter()
+            .any(|q| q.node == v && q.core == p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::paper_example_dag;
+
+    #[test]
+    fn ready_queue_ordered_by_level() {
+        let g = paper_example_dag();
+        let mut st = ListState::new(&g, 2);
+        // Only node 1 (id 0) is initially ready.
+        assert_eq!(st.pop_ready(), Some(0));
+        st.commit(0, 0, 0);
+        // All of 1's children become ready, highest level first.
+        let lv = st.levels.clone();
+        let mut prev = Cycles::MAX;
+        for &v in &st.ready {
+            assert!(lv[v] <= prev);
+            prev = lv[v];
+        }
+    }
+
+    #[test]
+    fn est_accounts_for_comm() {
+        let g = paper_example_dag();
+        let mut st = ListState::new(&g, 2);
+        st.pop_ready();
+        st.commit(0, 0, 0); // node 1 on P1, finish 1
+        // Node 5 (id 4) on P1: data local at 1. On P2: 1 + w(1) = 2.
+        assert_eq!(st.est(4, 0), 1);
+        assert_eq!(st.est(4, 1), 2);
+    }
+
+    #[test]
+    fn commit_advances_core_and_releases_children() {
+        let g = paper_example_dag();
+        let mut st = ListState::new(&g, 2);
+        st.pop_ready();
+        st.commit(0, 0, 0);
+        assert_eq!(st.core_avail[0], 1);
+        assert!(st.ready.contains(&5)); // node 6
+        assert!(st.ready.contains(&4)); // node 5
+    }
+}

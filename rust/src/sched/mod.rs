@@ -1,0 +1,268 @@
+//! Offline DAG scheduling (§2.3, §3): schedule representation, validity
+//! rules, makespan/speedup metrics, and the solvers.
+//!
+//! A schedule is a tuple `(Sc_1, …, Sc_m)` of per-core sub-schedules; each
+//! sub-schedule is a list of `(node, start)` pairs. Nodes may be duplicated
+//! across cores (at most once per core) to elide communication latency.
+
+pub mod bnb;
+pub mod cp;
+pub mod dsh;
+pub mod hybrid;
+pub mod ish;
+pub mod list;
+mod program;
+mod validity;
+
+pub use program::{derive_comms, derive_programs, CommOp, CoreProgram, CoreStep};
+pub use validity::{check_valid, prune_redundant, ValidityError};
+
+use crate::graph::{Cycles, Dag, NodeId};
+
+/// One scheduled instance of a node on a core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    pub node: NodeId,
+    pub core: usize,
+    pub start: Cycles,
+    pub finish: Cycles,
+}
+
+/// A static, non-preemptive multi-core schedule (§2.3).
+#[derive(Debug, Clone, Default)]
+pub struct Schedule {
+    /// Number of cores `m`.
+    pub m: usize,
+    /// All placements; kept sorted by `(core, start)`.
+    pub placements: Vec<Placement>,
+}
+
+impl Schedule {
+    pub fn new(m: usize) -> Self {
+        Self { m, placements: Vec::new() }
+    }
+
+    /// Add an instance of `node` on `core` at `start` (finish = start + t).
+    /// Insertion keeps the `(core, start)` order — O(log P) search instead
+    /// of the full re-sort this used to do (hot in DSH's trial loop).
+    pub fn place(&mut self, g: &Dag, node: NodeId, core: usize, start: Cycles) {
+        assert!(core < self.m, "core {core} out of range (m={})", self.m);
+        let p = Placement {
+            node,
+            core,
+            start,
+            finish: start + g.wcet(node),
+        };
+        let key = (p.core, p.start, p.node);
+        let pos = self
+            .placements
+            .partition_point(|q| (q.core, q.start, q.node) < key);
+        self.placements.insert(pos, p);
+    }
+
+    /// Re-sort placements by `(core, start)`.
+    pub fn normalize(&mut self) {
+        self.placements.sort_by_key(|p| (p.core, p.start, p.node));
+    }
+
+    /// Remove one exact placement (used by DSH's trial-and-revert loop —
+    /// cheaper than cloning the schedule per candidate duplication).
+    pub fn remove(&mut self, node: NodeId, core: usize, start: Cycles) -> bool {
+        match self
+            .placements
+            .iter()
+            .position(|p| p.node == node && p.core == core && p.start == start)
+        {
+            Some(i) => {
+                self.placements.remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Sub-schedule of one core, in start order.
+    pub fn core(&self, c: usize) -> Vec<Placement> {
+        self.placements.iter().copied().filter(|p| p.core == c).collect()
+    }
+
+    /// All instances of a node.
+    pub fn instances(&self, v: NodeId) -> Vec<Placement> {
+        self.placements.iter().copied().filter(|p| p.node == v).collect()
+    }
+
+    /// Latest finish time over all placements.
+    pub fn makespan(&self) -> Cycles {
+        self.placements.iter().map(|p| p.finish).max().unwrap_or(0)
+    }
+
+    /// Eq. (15): single-core makespan (Σ t(v)) over this schedule's makespan.
+    pub fn speedup(&self, g: &Dag) -> f64 {
+        let ms = self.makespan();
+        if ms == 0 {
+            return 1.0;
+        }
+        g.total_wcet() as f64 / ms as f64
+    }
+
+    /// Number of duplicate placements (instances beyond the first of each
+    /// node) — the paper's Observation 4 memory-footprint overhead.
+    pub fn duplication_count(&self) -> usize {
+        let mut per_node = std::collections::HashMap::new();
+        for p in &self.placements {
+            *per_node.entry(p.node).or_insert(0usize) += 1;
+        }
+        per_node.values().map(|&k| k - 1).sum()
+    }
+
+    /// Cores that actually received work.
+    pub fn used_cores(&self) -> usize {
+        let mut used = vec![false; self.m];
+        for p in &self.placements {
+            used[p.core] = true;
+        }
+        used.iter().filter(|&&u| u).count()
+    }
+
+    /// Earliest data-arrival time of parent `u`'s output at core `q`,
+    /// considering every instance of `u`: same-core instances deliver at
+    /// `finish`, remote instances at `finish + w` (§2.3 / constraint (11)).
+    pub fn arrival(&self, u: NodeId, w: Cycles, q: usize) -> Option<Cycles> {
+        self.placements
+            .iter()
+            .filter(|p| p.node == u)
+            .map(|p| if p.core == q { p.finish } else { p.finish + w })
+            .min()
+    }
+
+    /// The instance of `u` that realizes [`Self::arrival`] (ties prefer the
+    /// same core, then the lowest core id) — the communication source used
+    /// by the simulator, the executor and the code generator.
+    pub fn arrival_source(&self, u: NodeId, w: Cycles, q: usize) -> Option<Placement> {
+        self.placements
+            .iter()
+            .filter(|p| p.node == u)
+            .min_by_key(|p| {
+                let t = if p.core == q { p.finish } else { p.finish + w };
+                (t, p.core != q, p.core)
+            })
+            .copied()
+    }
+
+    /// ASCII Gantt chart in the style of the paper's Figs. 4–5.
+    pub fn gantt(&self, g: &Dag) -> String {
+        let ms = self.makespan();
+        let mut out = String::new();
+        out.push_str("time ");
+        for c in 0..self.m {
+            out.push_str(&format!("| P{:<4}", c + 1));
+        }
+        out.push('\n');
+        for t in 0..ms {
+            out.push_str(&format!("{t:>4} "));
+            for c in 0..self.m {
+                let cell = self
+                    .placements
+                    .iter()
+                    .find(|p| p.core == c && p.start <= t && t < p.finish)
+                    .map(|p| g.name(p.node).to_string())
+                    .unwrap_or_default();
+                out.push_str(&format!("| {cell:<4}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Outcome of a solver run: the schedule plus solve metadata.
+#[derive(Debug, Clone)]
+pub struct SolveResult {
+    pub schedule: Schedule,
+    /// Proven optimal (exact solvers only; heuristics always report false).
+    pub optimal: bool,
+    /// Wall time spent computing the schedule.
+    pub solve_time: std::time::Duration,
+    /// Search statistics for the evaluation (nodes explored, etc.).
+    pub explored: u64,
+}
+
+/// Common interface over all solvers so the evaluation harness (Figs. 7–8)
+/// can sweep them uniformly.
+pub trait Scheduler {
+    /// Human-readable solver name ("ISH", "DSH", "CP-improved", …).
+    fn name(&self) -> &'static str;
+    /// Compute a valid schedule of `g` on `m` cores.
+    fn schedule(&self, g: &Dag, m: usize) -> SolveResult;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::paper_example_dag;
+
+    fn tiny() -> Dag {
+        let mut g = Dag::new();
+        let a = g.add_node("a", 2);
+        let b = g.add_node("b", 3);
+        g.add_edge(a, b, 4);
+        g
+    }
+
+    #[test]
+    fn place_and_makespan() {
+        let g = tiny();
+        let mut s = Schedule::new(2);
+        s.place(&g, 0, 0, 0);
+        s.place(&g, 1, 0, 2);
+        assert_eq!(s.makespan(), 5);
+        assert_eq!(s.core(0).len(), 2);
+        assert_eq!(s.core(1).len(), 0);
+        assert_eq!(s.used_cores(), 1);
+    }
+
+    #[test]
+    fn speedup_single_core_is_one() {
+        let g = tiny();
+        let mut s = Schedule::new(1);
+        s.place(&g, 0, 0, 0);
+        s.place(&g, 1, 0, 2);
+        assert!((s.speedup(&g) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn arrival_prefers_cheapest_instance() {
+        let g = tiny();
+        let mut s = Schedule::new(2);
+        s.place(&g, 0, 0, 0); // finish 2 on core 0
+        s.place(&g, 0, 1, 5); // duplicate, finish 7 on core 1
+        // At core 1: remote instance arrives at 2+4=6, local at 7 → 6.
+        assert_eq!(s.arrival(0, 4, 1), Some(6));
+        // At core 0: local at 2.
+        assert_eq!(s.arrival(0, 4, 0), Some(2));
+        let src = s.arrival_source(0, 4, 0).unwrap();
+        assert_eq!(src.core, 0);
+    }
+
+    #[test]
+    fn duplication_count() {
+        let g = tiny();
+        let mut s = Schedule::new(2);
+        s.place(&g, 0, 0, 0);
+        s.place(&g, 0, 1, 0);
+        s.place(&g, 1, 0, 2);
+        assert_eq!(s.duplication_count(), 1);
+    }
+
+    #[test]
+    fn gantt_renders() {
+        let g = paper_example_dag();
+        let mut s = Schedule::new(2);
+        s.place(&g, 0, 0, 0);
+        s.place(&g, 5, 0, 1);
+        s.place(&g, 4, 1, 2);
+        let chart = s.gantt(&g);
+        assert!(chart.contains("P1"));
+        assert!(chart.contains('6'));
+    }
+}

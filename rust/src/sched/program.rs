@@ -1,0 +1,318 @@
+//! Per-core program derivation: from a valid [`Schedule`] to the ordered
+//! step lists (§5.3) that the simulator (`crate::sim`), the parallel PJRT
+//! executor (`crate::exec`) and the C code generator (`crate::codegen`) all
+//! share.
+//!
+//! Each cross-core data transfer becomes a *Writing* operator on the source
+//! core and a *Reading* operator on the destination core (§5.2). Every
+//! ordered pair of cores `(i, j)` owns a single flag + a single buffer;
+//! messages on the channel are identified by sequence number, and the
+//! writer may not overwrite data that has not been consumed yet.
+
+use super::Schedule;
+use crate::graph::{Cycles, Dag, NodeId};
+use std::collections::HashMap;
+
+/// A cross-core communication derived from a schedule: the output of the
+/// producer instance of `src` on `src_core` is shipped to `dst_core`, where
+/// one or more instances consume it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CommOp {
+    /// Producing node.
+    pub src: NodeId,
+    /// First consuming node on the destination core (for naming/reporting).
+    pub dst: NodeId,
+    pub src_core: usize,
+    pub dst_core: usize,
+    /// Sequence number on the `(src_core → dst_core)` channel.
+    pub seq: usize,
+    /// Edge latency `w(e)` (cycles charged by the platform model).
+    pub latency: Cycles,
+    /// Producer instance finish time (send is ready from here).
+    pub ready: Cycles,
+    /// Earliest consumer start time (receive deadline in the schedule).
+    pub deadline: Cycles,
+}
+
+impl CommOp {
+    /// Paper naming convention `source_destination_identifier` (Fig. 11),
+    /// e.g. `2_0_b` = channel 2→0, second message.
+    pub fn tag(&self) -> String {
+        let ident = (b'a' + (self.seq % 26) as u8) as char;
+        format!("{}_{}_{}", self.src_core, self.dst_core, ident)
+    }
+}
+
+/// One step of a per-core program.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CoreStep {
+    /// Execute a node instance.
+    Compute { node: NodeId, start: Cycles, finish: Cycles },
+    /// Writing operator: publish `src`'s output into the channel buffer
+    /// (waits for the flag to be in writing state, then flags the reader).
+    Write { comm: CommOp },
+    /// Reading operator: wait for the flag, copy the channel buffer into
+    /// the local buffer of `src`'s output.
+    Read { comm: CommOp },
+}
+
+/// Ordered step list of one core.
+#[derive(Debug, Clone, Default)]
+pub struct CoreProgram {
+    pub core: usize,
+    pub steps: Vec<CoreStep>,
+}
+
+/// Derive all cross-core communications implied by a schedule.
+///
+/// For every instance `(v, q)` and every parent `u`, the data source is the
+/// instance of `u` with minimal arrival at `q` ([`Schedule::arrival_source`],
+/// matching constraint (11)'s earliest-finish semantics). Transfers with the
+/// same producer instance and destination core are merged: the channel
+/// carries the data once and all same-core consumers share the local copy.
+/// Channel sequence numbers follow consumer start order, which is the order
+/// the reader's program consumes them in.
+pub fn derive_comms(g: &Dag, s: &Schedule) -> Vec<CommOp> {
+    // (src node, src core, src start, dst core) → (latency, ready, deadline, first consumer)
+    let mut merged: HashMap<(NodeId, usize, Cycles, usize), (Cycles, Cycles, Cycles, NodeId)> =
+        HashMap::new();
+    for p in &s.placements {
+        for &(u, w) in g.parents(p.node) {
+            let src = s
+                .arrival_source(u, w, p.core)
+                .expect("valid schedule: parent instance exists");
+            if src.core == p.core {
+                continue;
+            }
+            let key = (u, src.core, src.start, p.core);
+            let entry = merged
+                .entry(key)
+                .or_insert((w, src.finish, p.start, p.node));
+            entry.0 = entry.0.max(w);
+            entry.2 = entry.2.min(p.start);
+            if p.start < entry.2 || (p.start == entry.2 && p.node < entry.3) {
+                entry.3 = p.node;
+            }
+        }
+    }
+    let mut comms: Vec<CommOp> = merged
+        .into_iter()
+        .map(|((src, src_core, _, dst_core), (latency, ready, deadline, dst))| CommOp {
+            src,
+            dst,
+            src_core,
+            dst_core,
+            seq: 0,
+            latency,
+            ready,
+            deadline,
+        })
+        .collect();
+    // Sequence per channel in PRODUCER-finish order. This is the writer's
+    // natural program order (writes sit right after their producers), so a
+    // Writing operator never has to reorder messages. The reader drains the
+    // channel in the same order, hoisting early reads before late consumers
+    // (see derive_programs) — consumer-ordered channels can deadlock the
+    // single-buffer protocol when writer and reader orders disagree.
+    comms.sort_by_key(|c| (c.src_core, c.dst_core, c.ready, c.deadline, c.src));
+    let mut per_channel: HashMap<(usize, usize), usize> = HashMap::new();
+    for c in comms.iter_mut() {
+        let seq = per_channel.entry((c.src_core, c.dst_core)).or_insert(0);
+        c.seq = *seq;
+        *seq += 1;
+    }
+    comms
+}
+
+/// Derive the per-core step lists.
+///
+/// * `Compute` steps follow the sub-schedule start order.
+/// * Each message inserts a `Read` on the destination core immediately
+///   before its first consumer, ordered by arrival time among reads of the
+///   same consumer.
+/// * Each message inserts a `Write` on the source core after the producer
+///   finishes; per-channel writes are forced into channel (sequence) order
+///   — the single-buffer protocol requires writer and reader to agree —
+///   so a write's sort key is the max producer finish over the channel
+///   prefix (§5.5 Observation 3: this is the "check before Writing" delay).
+pub fn derive_programs(g: &Dag, s: &Schedule) -> Vec<CoreProgram> {
+    let comms = derive_comms(g, s);
+    // Sort key: (time, priority, tiebreak). Writes=0 at their ready time,
+    // reads=1 just before their consumer, computes=2 at their start.
+    let mut events: Vec<(usize, (Cycles, u8, Cycles, usize), CoreStep)> = Vec::new();
+
+    for p in &s.placements {
+        events.push((
+            p.core,
+            (p.start, 2, 0, p.node),
+            CoreStep::Compute { node: p.node, start: p.start, finish: p.finish },
+        ));
+    }
+
+    // DEADLOCK-FREEDOM (proved by induction over the event keys):
+    // * channel order == producer-finish order, so a Write sits right
+    //   after its producer at key (pf, prio 0);
+    // * Reads are EAGER: keyed at the same producer-finish time (pf,
+    //   prio 1) on the reader core — the reader drains each channel in
+    //   write order, as soon as the schedule says the data exists, always
+    //   before the consumer (whose start ≥ pf + w, and computes have
+    //   prio 2).
+    // Every wait edge then strictly decreases the (key, prio) order:
+    // Read(k) → Write(k) drops prio 1→0 at equal key; Write(k) →
+    // Read(k−1) (single-buffer back-pressure) drops to pf(k−1) < pf(k);
+    // computes never block. A minimal-key blocked step is therefore a
+    // contradiction, so the programs always run to completion. (Keying
+    // reads at consumer start instead admits AB-BA cycles between two
+    // cores' Write/Read pairs — caught by prop_programs_* in
+    // rust/tests/sched_proptest.rs.)
+    let mut ordered = comms.clone();
+    ordered.sort_by_key(|c| (c.src_core, c.dst_core, c.seq));
+    for c in &ordered {
+        events.push((
+            c.src_core,
+            (c.ready, 0, c.seq as Cycles, c.dst_core),
+            CoreStep::Write { comm: c.clone() },
+        ));
+        events.push((
+            c.dst_core,
+            (c.ready, 1, c.src_core as Cycles, c.seq),
+            CoreStep::Read { comm: c.clone() },
+        ));
+    }
+
+    events.sort_by(|a, b| (a.0, &a.1).cmp(&(b.0, &b.1)));
+    let mut programs: Vec<CoreProgram> = (0..s.m)
+        .map(|core| CoreProgram { core, steps: Vec::new() })
+        .collect();
+    for (core, _, step) in events {
+        programs[core].steps.push(step);
+    }
+    programs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Dag;
+
+    /// a on core 0; b,c on core 1 both consuming a.
+    fn fanout_sched() -> (Dag, Schedule) {
+        let mut g = Dag::new();
+        let a = g.add_node("a", 2);
+        let b = g.add_node("b", 1);
+        let c = g.add_node("c", 1);
+        g.add_edge(a, b, 3);
+        g.add_edge(a, c, 3);
+        let mut s = Schedule::new(2);
+        s.place(&g, a, 0, 0); // finish 2
+        s.place(&g, b, 1, 5); // 2+3=5
+        s.place(&g, c, 1, 6);
+        (g, s)
+    }
+
+    #[test]
+    fn same_core_needs_no_comm() {
+        let mut g = Dag::new();
+        let a = g.add_node("a", 1);
+        let b = g.add_node("b", 1);
+        g.add_edge(a, b, 5);
+        let mut s = Schedule::new(2);
+        s.place(&g, a, 0, 0);
+        s.place(&g, b, 0, 1);
+        assert!(derive_comms(&g, &s).is_empty());
+    }
+
+    #[test]
+    fn shared_destination_is_merged() {
+        let (g, s) = fanout_sched();
+        let comms = derive_comms(&g, &s);
+        // b and c both read a's output on core 1 → ONE transfer.
+        assert_eq!(comms.len(), 1);
+        let c = &comms[0];
+        assert_eq!((c.src_core, c.dst_core), (0, 1));
+        assert_eq!(c.seq, 0);
+        assert_eq!(c.tag(), "0_1_a");
+        assert_eq!(c.ready, 2);
+        assert_eq!(c.deadline, 5);
+    }
+
+    #[test]
+    fn duplication_elides_comm() {
+        let mut g = Dag::new();
+        let a = g.add_node("a", 1);
+        let b = g.add_node("b", 1);
+        g.add_edge(a, b, 10);
+        let mut s = Schedule::new(2);
+        s.place(&g, a, 0, 0);
+        s.place(&g, a, 1, 0); // duplicate on b's core
+        s.place(&g, b, 1, 1);
+        assert!(derive_comms(&g, &s).is_empty(), "local duplicate is the source");
+    }
+
+    #[test]
+    fn channel_sequence_numbers_increment() {
+        let mut g = Dag::new();
+        let a = g.add_node("a", 1);
+        let b = g.add_node("b", 1);
+        let c = g.add_node("c", 1);
+        let d = g.add_node("d", 1);
+        g.add_edge(a, c, 1);
+        g.add_edge(b, d, 1);
+        let mut s = Schedule::new(2);
+        s.place(&g, a, 0, 0);
+        s.place(&g, b, 0, 1);
+        s.place(&g, c, 1, 2);
+        s.place(&g, d, 1, 3);
+        let comms = derive_comms(&g, &s);
+        assert_eq!(comms.len(), 2);
+        assert_eq!(comms[0].seq, 0);
+        assert_eq!(comms[1].seq, 1);
+        assert_eq!(comms[0].tag(), "0_1_a");
+        assert_eq!(comms[1].tag(), "0_1_b");
+    }
+
+    #[test]
+    fn programs_have_write_and_read_in_order() {
+        let (g, s) = fanout_sched();
+        let progs = derive_programs(&g, &s);
+        assert_eq!(progs.len(), 2);
+        // Core 0: compute a, then write.
+        let kinds0: Vec<&str> = progs[0]
+            .steps
+            .iter()
+            .map(|st| match st {
+                CoreStep::Compute { .. } => "c",
+                CoreStep::Write { .. } => "w",
+                CoreStep::Read { .. } => "r",
+            })
+            .collect();
+        assert_eq!(kinds0, vec!["c", "w"]);
+        // Core 1: read, then compute b, compute c (read shared).
+        let kinds1: Vec<&str> = progs[1]
+            .steps
+            .iter()
+            .map(|st| match st {
+                CoreStep::Compute { .. } => "c",
+                CoreStep::Write { .. } => "w",
+                CoreStep::Read { .. } => "r",
+            })
+            .collect();
+        assert_eq!(kinds1, vec!["r", "c", "c"]);
+    }
+
+    #[test]
+    fn read_precedes_its_consumer() {
+        let (g, s) = fanout_sched();
+        let progs = derive_programs(&g, &s);
+        let steps = &progs[1].steps;
+        let read_pos = steps
+            .iter()
+            .position(|st| matches!(st, CoreStep::Read { .. }))
+            .unwrap();
+        let b_pos = steps
+            .iter()
+            .position(|st| matches!(st, CoreStep::Compute { node: 1, .. }))
+            .unwrap();
+        assert!(read_pos < b_pos);
+    }
+}

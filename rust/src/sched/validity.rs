@@ -1,0 +1,266 @@
+//! Schedule validity rules (§2.3) and redundant-duplicate pruning.
+
+use super::{Placement, Schedule};
+use crate::graph::{Dag, NodeId};
+
+/// A violation of the §2.3 validity rules.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ValidityError {
+    /// Two placements overlap in time on one core.
+    Overlap { core: usize, a: NodeId, b: NodeId },
+    /// A node has no instance at all.
+    Missing { node: NodeId },
+    /// A node appears more than once in one sub-schedule.
+    DuplicateOnCore { core: usize, node: NodeId },
+    /// An instance starts before all parent data is available.
+    DataNotReady { node: NodeId, core: usize },
+    /// A placement references a core ≥ m.
+    CoreOutOfRange { core: usize },
+    /// finish ≠ start + t(v) (non-preemptive rule, constraint (2)/(12)).
+    BadDuration { node: NodeId, core: usize },
+}
+
+impl std::fmt::Display for ValidityError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+/// Check every §2.3 rule:
+/// 1. at most one task per core at any instant;
+/// 2. an instance starts only after every parent's data has arrived
+///    (same-core: parent finish; cross-core: earliest instance finish + w);
+/// 3. every node present at least once, at most once per sub-schedule;
+/// 4. non-preemption: finish = start + t.
+pub fn check_valid(g: &Dag, s: &Schedule) -> Result<(), ValidityError> {
+    let mut present = vec![0usize; g.n()];
+    for p in &s.placements {
+        if p.core >= s.m {
+            return Err(ValidityError::CoreOutOfRange { core: p.core });
+        }
+        if p.finish != p.start + g.wcet(p.node) {
+            return Err(ValidityError::BadDuration { node: p.node, core: p.core });
+        }
+        present[p.node] += 1;
+    }
+    for v in 0..g.n() {
+        if present[v] == 0 {
+            return Err(ValidityError::Missing { node: v });
+        }
+    }
+    // At-most-once per core + no overlap.
+    for c in 0..s.m {
+        let sub = s.core(c);
+        for i in 0..sub.len() {
+            for j in i + 1..sub.len() {
+                if sub[i].node == sub[j].node {
+                    return Err(ValidityError::DuplicateOnCore { core: c, node: sub[i].node });
+                }
+            }
+        }
+        for w in sub.windows(2) {
+            if w[0].finish > w[1].start {
+                return Err(ValidityError::Overlap {
+                    core: c,
+                    a: w[0].node,
+                    b: w[1].node,
+                });
+            }
+        }
+    }
+    // Data availability.
+    for p in &s.placements {
+        for &(u, w) in g.parents(p.node) {
+            match s.arrival(u, w, p.core) {
+                Some(t) if t <= p.start => {}
+                _ => {
+                    return Err(ValidityError::DataNotReady { node: p.node, core: p.core });
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Remove redundant duplicates (§2.3: "a duplication providing no gain is
+/// called redundant and is to be removed").
+///
+/// An instance is *useful* if it is the communication source
+/// ([`Schedule::arrival_source`]) for some consumer instance, or if it is
+/// the only instance of its node, or if its node is a sink. Removing an
+/// unused instance cannot invalidate others (sources are min-arrival, and
+/// dropping a non-source only widens choices), but removals can cascade —
+/// a duplicate that only fed a removed duplicate — so we iterate to a
+/// fixpoint.
+pub fn prune_redundant(g: &Dag, s: &mut Schedule) -> usize {
+    let mut removed_total = 0;
+    loop {
+        let mut useful: Vec<bool> = s
+            .placements
+            .iter()
+            .map(|p| g.children(p.node).is_empty())
+            .collect();
+        // Unique instances are trivially useful.
+        for (i, p) in s.placements.iter().enumerate() {
+            if s.placements.iter().filter(|q| q.node == p.node).count() == 1 {
+                useful[i] = true;
+            }
+        }
+        // Mark every consumer's chosen source.
+        for p in s.placements.clone() {
+            for &(u, w) in g.parents(p.node) {
+                if let Some(src) = s.arrival_source(u, w, p.core) {
+                    if let Some(idx) = s
+                        .placements
+                        .iter()
+                        .position(|q| q.node == src.node && q.core == src.core && q.start == src.start)
+                    {
+                        useful[idx] = true;
+                    }
+                }
+            }
+        }
+        let before = s.placements.len();
+        let kept: Vec<Placement> = s
+            .placements
+            .iter()
+            .zip(&useful)
+            .filter(|(_, &u)| u)
+            .map(|(p, _)| *p)
+            .collect();
+        let removed = before - kept.len();
+        s.placements = kept;
+        removed_total += removed;
+        if removed == 0 {
+            break;
+        }
+    }
+    removed_total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Dag;
+
+    fn chain() -> Dag {
+        let mut g = Dag::new();
+        let a = g.add_node("a", 2);
+        let b = g.add_node("b", 3);
+        g.add_edge(a, b, 4);
+        g
+    }
+
+    #[test]
+    fn valid_single_core() {
+        let g = chain();
+        let mut s = Schedule::new(1);
+        s.place(&g, 0, 0, 0);
+        s.place(&g, 1, 0, 2);
+        assert_eq!(check_valid(&g, &s), Ok(()));
+    }
+
+    #[test]
+    fn detects_missing_node() {
+        let g = chain();
+        let mut s = Schedule::new(1);
+        s.place(&g, 0, 0, 0);
+        assert_eq!(check_valid(&g, &s), Err(ValidityError::Missing { node: 1 }));
+    }
+
+    #[test]
+    fn detects_overlap() {
+        let g = chain();
+        let mut s = Schedule::new(1);
+        s.place(&g, 0, 0, 0);
+        s.place(&g, 1, 0, 1); // overlaps a's [0,2)
+        assert!(matches!(check_valid(&g, &s), Err(ValidityError::Overlap { .. })));
+    }
+
+    #[test]
+    fn detects_comm_violation() {
+        let g = chain();
+        let mut s = Schedule::new(2);
+        s.place(&g, 0, 0, 0); // finish 2 on core 0
+        s.place(&g, 1, 1, 3); // needs 2 + w(4) = 6 on core 1
+        assert!(matches!(
+            check_valid(&g, &s),
+            Err(ValidityError::DataNotReady { node: 1, core: 1 })
+        ));
+        let mut ok = Schedule::new(2);
+        ok.place(&g, 0, 0, 0);
+        ok.place(&g, 1, 1, 6);
+        assert_eq!(check_valid(&g, &ok), Ok(()));
+    }
+
+    #[test]
+    fn detects_duplicate_on_core() {
+        let g = chain();
+        let mut s = Schedule::new(1);
+        s.place(&g, 0, 0, 0);
+        s.place(&g, 0, 0, 2);
+        s.place(&g, 1, 0, 4);
+        assert!(matches!(
+            check_valid(&g, &s),
+            Err(ValidityError::DuplicateOnCore { node: 0, .. })
+        ));
+    }
+
+    #[test]
+    fn duplication_allowed_across_cores() {
+        let g = chain();
+        let mut s = Schedule::new(2);
+        s.place(&g, 0, 0, 0);
+        s.place(&g, 0, 1, 0); // duplicate of a on core 1
+        s.place(&g, 1, 1, 2); // b reads local copy: start 2 ok
+        assert_eq!(check_valid(&g, &s), Ok(()));
+    }
+
+    #[test]
+    fn prune_removes_useless_duplicate() {
+        let g = chain();
+        let mut s = Schedule::new(2);
+        s.place(&g, 0, 0, 0); // a on core 0
+        s.place(&g, 0, 1, 0); // useless duplicate: nobody on core 1 reads it
+        s.place(&g, 1, 0, 2); // b local on core 0
+        let removed = prune_redundant(&g, &mut s);
+        assert_eq!(removed, 1);
+        assert_eq!(s.placements.len(), 2);
+        assert_eq!(check_valid(&g, &s), Ok(()));
+    }
+
+    #[test]
+    fn prune_keeps_useful_duplicate() {
+        let g = chain();
+        let mut s = Schedule::new(2);
+        s.place(&g, 0, 0, 0);
+        s.place(&g, 0, 1, 0); // duplicate feeding b locally
+        s.place(&g, 1, 1, 2);
+        let removed = prune_redundant(&g, &mut s);
+        // The core-0 instance of `a` is now useless instead.
+        assert_eq!(removed, 1);
+        assert!(s.placements.iter().any(|p| p.node == 0 && p.core == 1));
+        assert_eq!(check_valid(&g, &s), Ok(()));
+    }
+
+    #[test]
+    fn prune_cascades() {
+        // a → b → c, with a+b duplicated on core 1 but c reading from core 0.
+        let mut g = Dag::new();
+        let a = g.add_node("a", 1);
+        let b = g.add_node("b", 1);
+        let c = g.add_node("c", 1);
+        g.add_edge(a, b, 10);
+        g.add_edge(b, c, 10);
+        let mut s = Schedule::new(2);
+        s.place(&g, a, 0, 0);
+        s.place(&g, b, 0, 1);
+        s.place(&g, c, 0, 2);
+        // chain duplicated on core 1; nothing consumes it
+        s.place(&g, a, 1, 0);
+        s.place(&g, b, 1, 1);
+        let removed = prune_redundant(&g, &mut s);
+        assert_eq!(removed, 2, "b-dup removal must cascade to a-dup");
+        assert_eq!(s.placements.len(), 3);
+    }
+}

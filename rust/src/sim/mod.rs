@@ -1,0 +1,394 @@
+//! Cycle-level multi-core platform simulator (the Keystone II substitute).
+//!
+//! Executes the per-core programs derived from a schedule
+//! ([`crate::sched::derive_programs`]) under the **full** §5.2 flag
+//! protocol, including the single-buffer back-pressure that makes a
+//! Writing operator wait for the reader of the previous message — the
+//! effect the paper measures in §5.5 Observation 3 (predicted 46 % segment
+//! gain → observed 31 %).
+//!
+//! The simulator is deterministic given a seed. Two optional effects model
+//! the target's measured behaviour (Table 3):
+//! * **jitter** — each step's cost is scaled by `U[1, 1+jitter)`, standing
+//!   in for cache/DRAM variation on the real board;
+//! * **copy contention** — memory-bound copy layers (Input/Split/Concat)
+//!   are scaled by a contention factor when several cores are active
+//!   (Table 3's Input layer runs 3.4× slower multi-core: all four cores
+//!   stream the input simultaneously over one bus).
+
+use crate::graph::{Cycles, Dag, NodeId};
+use crate::sched::{derive_programs, CoreStep, Schedule};
+use crate::util::rng::SplitMix64;
+use std::collections::HashMap;
+
+/// Platform configuration (§2.1's UMA multi-core).
+#[derive(Debug, Clone)]
+pub struct Machine {
+    /// Cost of the data-handling part of a Write/Read operator, as a
+    /// function of the payload bytes (usually `CostModel::comm_wcet`).
+    pub comm_cycles: fn(usize) -> Cycles,
+    /// Payload size per producing node (bytes).
+    pub payload_bytes: HashMap<NodeId, usize>,
+    /// Multiplicative execution-time jitter bound (0.0 = WCET-exact run).
+    pub jitter: f64,
+    /// Slow-down factor applied to copy-class nodes while >1 core is busy.
+    pub copy_contention: f64,
+    /// Node ids considered copy-class (memory-bound) for contention.
+    pub copy_nodes: Vec<NodeId>,
+    /// RNG seed for jitter.
+    pub seed: u64,
+    /// Buffer slots per channel. 1 = the paper's single-buffer protocol
+    /// (§5.2); larger values model the non-blocking-write schemes the
+    /// paper lists as future work (a writer only stalls once `capacity`
+    /// messages are in flight). See `figures ablation-buffers`.
+    pub channel_capacity: usize,
+}
+
+impl Machine {
+    /// WCET-exact machine: no jitter, no contention, fixed comm cost.
+    pub fn exact(comm_cycles: fn(usize) -> Cycles) -> Self {
+        Self {
+            comm_cycles,
+            payload_bytes: HashMap::new(),
+            jitter: 0.0,
+            copy_contention: 1.0,
+            copy_nodes: Vec::new(),
+            seed: 0,
+            channel_capacity: 1,
+        }
+    }
+
+    fn payload(&self, node: NodeId) -> usize {
+        self.payload_bytes.get(&node).copied().unwrap_or(0)
+    }
+}
+
+/// One executed step in a core's timeline.
+#[derive(Debug, Clone)]
+pub struct TimelineEntry {
+    pub desc: String,
+    pub node: Option<NodeId>,
+    pub start: Cycles,
+    pub end: Cycles,
+    /// Cycles spent spinning on a flag before the operation proper.
+    pub wait: Cycles,
+}
+
+/// Simulation output.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub makespan: Cycles,
+    pub per_core: Vec<Vec<TimelineEntry>>,
+    /// Per node: maximum observed compute duration over instances
+    /// (Table 3 reports the highest instance when duplicated).
+    pub node_cycles: HashMap<NodeId, Cycles>,
+    /// Total cycles all cores spent waiting on flags.
+    pub total_wait: Cycles,
+    /// Writer-side stalls only (buffer not yet consumed — §5.5 Obs 3);
+    /// the rest of `total_wait` is readers waiting on data.
+    pub write_wait: Cycles,
+}
+
+impl SimReport {
+    /// Eq. (15) against a serial baseline.
+    pub fn speedup(&self, serial: Cycles) -> f64 {
+        serial as f64 / self.makespan as f64
+    }
+}
+
+/// Simulate a schedule on the machine. Panics on protocol deadlock (which
+/// a valid schedule-derived program can't produce — a panic here indicates
+/// a scheduler bug, and the tests rely on that).
+pub fn simulate(g: &Dag, schedule: &Schedule, machine: &Machine) -> SimReport {
+    let programs = derive_programs(g, schedule);
+    let m = programs.len();
+    let mut pc = vec![0usize; m];
+    let mut clock = vec![0u64; m];
+    let mut timeline: Vec<Vec<TimelineEntry>> = vec![Vec::new(); m];
+    // Channel state: completion times of finished writes/reads, in
+    // sequence order (generalizes the single flag to `channel_capacity`
+    // in-flight messages).
+    #[derive(Default)]
+    struct Chan {
+        write_done: Vec<Cycles>,
+        read_done: Vec<Cycles>,
+    }
+    let mut chans: HashMap<(usize, usize), Chan> = HashMap::new();
+    let cap = machine.channel_capacity.max(1);
+    let mut node_cycles: HashMap<NodeId, Cycles> = HashMap::new();
+    let mut total_wait = 0u64;
+    let mut write_wait = 0u64;
+    let mut rng = SplitMix64::new(machine.seed ^ 0x5157);
+
+    let jittered = |rng: &mut SplitMix64, base: Cycles, m_cfg: &Machine| -> Cycles {
+        if m_cfg.jitter == 0.0 {
+            base
+        } else {
+            let u = rng.next_f64();
+            (base as f64 * (1.0 + m_cfg.jitter * u)).round() as Cycles
+        }
+    };
+
+    loop {
+        // Pick, among runnable steps, the one on the least-advanced core —
+        // a deterministic scheduling of the event loop.
+        let mut progressed = false;
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by_key(|&c| (clock[c], c));
+        for &c in &order {
+            if pc[c] >= programs[c].steps.len() {
+                continue;
+            }
+            match &programs[c].steps[pc[c]] {
+                CoreStep::Compute { node, .. } => {
+                    let mut cost = jittered(&mut rng, g.wcet(*node), machine);
+                    // Copy-class contention: any other core still running?
+                    let others_busy = (0..m).any(|o| {
+                        o != c && pc[o] < programs[o].steps.len()
+                    });
+                    if others_busy
+                        && machine.copy_contention > 1.0
+                        && machine.copy_nodes.contains(node)
+                    {
+                        cost = (cost as f64 * machine.copy_contention).round() as Cycles;
+                    }
+                    let start = clock[c];
+                    clock[c] += cost;
+                    timeline[c].push(TimelineEntry {
+                        desc: g.name(*node).to_string(),
+                        node: Some(*node),
+                        start,
+                        end: clock[c],
+                        wait: 0,
+                    });
+                    let e = node_cycles.entry(*node).or_insert(0);
+                    *e = (*e).max(cost);
+                    pc[c] += 1;
+                    progressed = true;
+                }
+                CoreStep::Write { comm } => {
+                    let key = (comm.src_core, comm.dst_core);
+                    let chan = chans.entry(key).or_default();
+                    // In-order writes; at most `cap` unconsumed messages.
+                    let writable = chan.write_done.len() == comm.seq
+                        && comm.seq < chan.read_done.len() + cap;
+                    if writable {
+                        // If the buffer slot was freed later than we arrive,
+                        // we wait — §5.5 Obs. 3's write-side delay.
+                        let freed_at = if comm.seq >= cap {
+                            chan.read_done[comm.seq - cap]
+                        } else {
+                            0
+                        };
+                        let ready_at = freed_at.max(clock[c]);
+                        let wait = ready_at - clock[c];
+                        let cost =
+                            jittered(&mut rng, (machine.comm_cycles)(machine.payload(comm.src)), machine);
+                        let start = clock[c];
+                        clock[c] = ready_at + cost;
+                        chan.write_done.push(clock[c]);
+                        timeline[c].push(TimelineEntry {
+                            desc: format!("Write {}", comm.tag()),
+                            node: None,
+                            start,
+                            end: clock[c],
+                            wait,
+                        });
+                        total_wait += wait;
+                        write_wait += wait;
+                        pc[c] += 1;
+                        progressed = true;
+                    }
+                }
+                CoreStep::Read { comm } => {
+                    let key = (comm.src_core, comm.dst_core);
+                    let chan = chans.entry(key).or_default();
+                    let readable = chan.read_done.len() == comm.seq
+                        && chan.write_done.len() > comm.seq;
+                    if readable {
+                        let ready_at = chan.write_done[comm.seq].max(clock[c]);
+                        let wait = ready_at - clock[c];
+                        let cost =
+                            jittered(&mut rng, (machine.comm_cycles)(machine.payload(comm.src)), machine);
+                        let start = clock[c];
+                        clock[c] = ready_at + cost;
+                        chan.read_done.push(clock[c]);
+                        timeline[c].push(TimelineEntry {
+                            desc: format!("Read {}", comm.tag()),
+                            node: None,
+                            start,
+                            end: clock[c],
+                            wait,
+                        });
+                        total_wait += wait;
+                        pc[c] += 1;
+                        progressed = true;
+                    }
+                }
+            }
+        }
+        if pc.iter().enumerate().all(|(c, &p)| p == programs[c].steps.len()) {
+            break;
+        }
+        if !progressed {
+            panic!(
+                "simulator deadlock: pcs={pc:?} — \
+                 schedule-derived programs must be deadlock-free"
+            );
+        }
+    }
+
+    SimReport {
+        makespan: clock.into_iter().max().unwrap_or(0),
+        per_core: timeline,
+        node_cycles,
+        total_wait,
+        write_wait,
+    }
+}
+
+/// Simulate the serial (single-core) execution of the whole DAG — the
+/// baseline of Eq. (15) and Table 3's "Single-core" column.
+pub fn simulate_serial(g: &Dag, machine: &Machine) -> SimReport {
+    let mut s = Schedule::new(1);
+    let mut t = 0;
+    for v in g.topo_order() {
+        s.place(g, v, 0, t);
+        t += g.wcet(v);
+    }
+    simulate(g, &s, machine)
+}
+
+fn zero_comm(_: usize) -> Cycles {
+    0
+}
+
+/// Convenience: WCET-exact machine with zero-cost communication (pure
+/// schedule replay, useful for validating schedulers against `makespan()`).
+pub fn replay_machine() -> Machine {
+    Machine::exact(zero_comm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::paper_example_dag;
+    use crate::sched::dsh::Dsh;
+    use crate::sched::ish::Ish;
+    use crate::sched::Scheduler;
+
+    fn fixed_comm(_: usize) -> Cycles {
+        3
+    }
+
+    #[test]
+    fn serial_run_sums_wcets() {
+        let g = paper_example_dag();
+        let r = simulate_serial(&g, &replay_machine());
+        assert_eq!(r.makespan, g.total_wcet());
+        assert_eq!(r.total_wait, 0);
+    }
+
+    #[test]
+    fn parallel_replay_close_to_schedule_makespan() {
+        // With zero comm cost the simulated makespan can beat the schedule
+        // (events fire as soon as flags allow) but never exceed it by the
+        // protocol's serialization alone on ISH schedules (no duplication).
+        let g = paper_example_dag();
+        for m in 2..=4 {
+            let sched = Ish.schedule(&g, m).schedule;
+            let r = simulate(&g, &sched, &replay_machine());
+            // Zero-latency sim: schedule makespan assumed comm w(e) > 0,
+            // so the sim can only be faster or equal.
+            assert!(
+                r.makespan <= sched.makespan(),
+                "m={m}: sim {} > sched {}",
+                r.makespan,
+                sched.makespan()
+            );
+        }
+    }
+
+    #[test]
+    fn comm_cost_appears_in_timeline() {
+        let mut g = crate::graph::Dag::new();
+        let a = g.add_node("a", 2);
+        let b = g.add_node("b", 3);
+        g.add_edge(a, b, 5);
+        let mut s = Schedule::new(2);
+        s.place(&g, a, 0, 0);
+        s.place(&g, b, 1, 7);
+        let mut machine = Machine::exact(fixed_comm);
+        machine.payload_bytes.insert(a, 16);
+        let r = simulate(&g, &s, &machine);
+        // Core 0: a (2) + write (3) = 5. Core 1: read ends 2+3+3=8? No —
+        // read waits for write completion at 5, then costs 3 → 8; b: 8+3=11.
+        assert_eq!(r.makespan, 11);
+        let core1: Vec<&str> = r.per_core[1].iter().map(|e| e.desc.as_str()).collect();
+        assert_eq!(core1, vec!["Read 0_1_a", "b"]);
+        assert!(r.total_wait > 0, "reader must have waited for the writer");
+    }
+
+    #[test]
+    fn single_buffer_backpressure_delays_writer() {
+        // Two messages on the same channel: the writer cannot publish msg 1
+        // until the reader consumed msg 0 (§5.2).
+        let mut g = crate::graph::Dag::new();
+        let a = g.add_node("a", 1);
+        let b = g.add_node("b", 1);
+        let c = g.add_node("c", 10); // delays the reads on core 1
+        let d = g.add_node("d", 1);
+        let e = g.add_node("e", 1);
+        g.add_edge(a, d, 1);
+        g.add_edge(b, e, 1);
+        g.add_edge(a, c, 1); // keeps c on core 1 busy first? c independent
+        let mut s = Schedule::new(2);
+        s.place(&g, a, 0, 0);
+        s.place(&g, b, 0, 1);
+        s.place(&g, c, 1, 1); // c runs long on core 1
+        s.place(&g, d, 1, 11);
+        s.place(&g, e, 1, 12);
+        let machine = Machine::exact(fixed_comm);
+        let r = simulate(&g, &s, &machine);
+        // Writer core 0 writes msg0 (for d) at 1+3=4; then must wait for
+        // the reader (busy running c until 11 + read latency) before msg1.
+        let writes: Vec<&TimelineEntry> = r.per_core[0]
+            .iter()
+            .filter(|t| t.desc.starts_with("Write"))
+            .collect();
+        assert_eq!(writes.len(), 2);
+        assert!(
+            writes[1].wait > 0,
+            "second write must block on the unconsumed buffer: {writes:?}"
+        );
+    }
+
+    #[test]
+    fn jitter_changes_times_but_not_correctness() {
+        let g = paper_example_dag();
+        let sched = Dsh.schedule(&g, 3).schedule;
+        let mut machine = replay_machine();
+        machine.jitter = 0.3;
+        machine.seed = 9;
+        let r1 = simulate(&g, &sched, &machine);
+        machine.seed = 10;
+        let r2 = simulate(&g, &sched, &machine);
+        assert!(r1.makespan != r2.makespan || r1.total_wait != r2.total_wait);
+        // All nodes executed.
+        for v in 0..g.n() {
+            assert!(r1.node_cycles.contains_key(&v), "node {v} missing");
+        }
+    }
+
+    #[test]
+    fn copy_contention_slows_marked_nodes() {
+        let g = paper_example_dag();
+        let sched = Dsh.schedule(&g, 2).schedule;
+        let base = simulate(&g, &sched, &replay_machine());
+        let mut machine = replay_machine();
+        machine.copy_contention = 3.0;
+        machine.copy_nodes = vec![0];
+        let slow = simulate(&g, &sched, &machine);
+        assert!(slow.node_cycles[&0] >= base.node_cycles[&0]);
+    }
+}

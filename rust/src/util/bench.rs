@@ -1,0 +1,70 @@
+//! Micro benchmark harness (criterion is unavailable offline).
+//!
+//! Warmup + N timed iterations, reporting mean / p50 / p95 / min. Used by
+//! the `rust/benches/*.rs` targets (built with `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Timing summary of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchStats {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} iters={:<5} mean={:>12?} p50={:>12?} p95={:>12?} min={:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p95, self.min
+        )
+    }
+}
+
+/// Run `f` for `warmup` unmeasured + `iters` measured iterations.
+/// `f` should return something the optimizer can't discard; we black-box it.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        mean: total / iters as u32,
+        p50: samples[iters / 2],
+        p95: samples[(iters * 95 / 100).min(iters - 1)],
+        min: samples[0],
+    }
+}
+
+/// Prevent the optimizer from eliding a value (std::hint::black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered() {
+        let s = bench("noop", 2, 50, || 1 + 1);
+        assert!(s.min <= s.p50);
+        assert!(s.p50 <= s.p95);
+        assert_eq!(s.iters, 50);
+        assert!(s.row().contains("noop"));
+    }
+}

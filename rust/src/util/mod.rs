@@ -1,0 +1,9 @@
+//! In-house substrates replacing unavailable crates (offline build):
+//! a deterministic PRNG (shared bit-for-bit with the Python compile path
+//! for weight generation), a minimal JSON reader/writer, a micro bench
+//! harness, and a tiny property-testing loop.
+
+pub mod bench;
+pub mod json;
+pub mod proptest;
+pub mod rng;

@@ -1,0 +1,47 @@
+//! Tiny property-testing loop (the proptest crate is unavailable offline).
+//!
+//! `for_all_seeds` runs a property over a deterministic seed stream and, on
+//! failure, reports the offending seed so the case can be replayed as a
+//! normal unit test. No shrinking — generators here are parameterized by a
+//! seed, which is already a minimal reproducer.
+
+/// Run `prop(seed)` for `cases` deterministic seeds; panic with the failing
+/// seed on the first violation.
+pub fn for_all_seeds(name: &str, cases: u64, mut prop: impl FnMut(u64)) {
+    for seed in 0..cases {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(seed)));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        for_all_seeds("trivial", 32, |seed| assert!(seed < 32));
+    }
+
+    #[test]
+    fn reports_failing_seed() {
+        let r = std::panic::catch_unwind(|| {
+            for_all_seeds("fails-at-5", 10, |seed| assert!(seed != 5, "boom"));
+        });
+        let msg = match r {
+            Err(e) => e
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default(),
+            Ok(_) => panic!("expected failure"),
+        };
+        assert!(msg.contains("seed 5"), "{msg}");
+    }
+}

@@ -1,0 +1,71 @@
+//! End-to-end C code generation: emit → gcc → run → self-check (the
+//! generated main.c compares against expected outputs embedded from the
+//! Rust oracle and prints OK / MISMATCH).
+
+use acetone::codegen::generate_project;
+use acetone::nn::zoo::{self, Scale};
+use acetone::sched::dsh::Dsh;
+use acetone::sched::ish::Ish;
+use acetone::sched::Scheduler;
+use acetone::wcet::CostModel;
+use std::path::PathBuf;
+use std::process::Command;
+
+fn build_and_run(net: &acetone::nn::Network, m: usize, solver: &dyn Scheduler, tag: &str) {
+    let g = net.to_dag(&CostModel::default());
+    let sched = solver.schedule(&g, m).schedule;
+    let dir: PathBuf = std::env::temp_dir().join(format!(
+        "acetone_cgen_{}_{tag}_{}",
+        net.name,
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    generate_project(net, &sched, 42, &dir).expect("codegen");
+    let cc = Command::new("make")
+        .current_dir(&dir)
+        .output()
+        .expect("running make (cc) on the generated project");
+    assert!(
+        cc.status.success(),
+        "C compile failed:\n{}",
+        String::from_utf8_lossy(&cc.stderr)
+    );
+    let run = Command::new(dir.join("inference"))
+        .output()
+        .expect("running generated inference");
+    let stdout = String::from_utf8_lossy(&run.stdout);
+    assert!(
+        run.status.success() && stdout.contains("OK"),
+        "self-check failed ({}):\n{stdout}",
+        net.name
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn lenet5_split_two_cores_dsh() {
+    build_and_run(&zoo::lenet5_split(Scale::Tiny), 2, &Dsh, "dsh2");
+}
+
+#[test]
+fn lenet5_split_three_cores_ish() {
+    build_and_run(&zoo::lenet5_split(Scale::Tiny), 3, &Ish, "ish3");
+}
+
+#[test]
+fn googlenet_four_cores_dsh() {
+    // The paper's §5.5 configuration: Fig. 10's network on 4 cores.
+    build_and_run(&zoo::googlenet(Scale::Tiny), 4, &Dsh, "dsh4");
+}
+
+#[test]
+fn lenet5_sequential_single_core() {
+    // m = 1 degenerates to the original ACETONE output (plus the
+    // sequential baseline that is always emitted).
+    build_and_run(&zoo::lenet5(Scale::Tiny), 1, &Ish, "seq1");
+}
+
+#[test]
+fn mlp_two_cores() {
+    build_and_run(&zoo::mlp("mlp", &[64, 128, 64, 10]), 2, &Dsh, "mlp2");
+}

@@ -1,0 +1,117 @@
+//! The paper's worked examples (Figs. 3–6) and the §4.2/§4.3 observations,
+//! reproduced as executable assertions on the Fig. 3 nine-node DAG.
+
+use acetone::graph::{critical_path_len, ensure_single_sink, paper_example_dag};
+use acetone::sched::bnb::ChouChung;
+use acetone::sched::cp::{CpConfig, CpSolver, Encoding};
+use acetone::sched::dsh::Dsh;
+use acetone::sched::ish::Ish;
+use acetone::sched::{check_valid, Scheduler};
+use std::time::Duration;
+
+#[test]
+fn fig3_shape() {
+    let g = paper_example_dag();
+    assert_eq!(g.n(), 9);
+    assert_eq!(g.width(), 5, "maximal parallelism of the Fig. 3 graph (§4.2 Obs 1)");
+    let mut g2 = g.clone();
+    let s = ensure_single_sink(&mut g2);
+    assert_eq!(g2.n(), 10);
+    assert_eq!(g2.single_sink(), Some(s));
+}
+
+#[test]
+fn fig4_ish_fills_idle_slot() {
+    // ISH on two cores: waiting for node 5's data creates an idle slot on
+    // the core that will run node 7; a short ready node is inserted there
+    // instead of stretching the makespan.
+    let g = paper_example_dag();
+    let ish = Ish.schedule(&g, 2);
+    assert_eq!(check_valid(&g, &ish.schedule), Ok(()));
+    // Without the insertion step a naive list schedule leaves the gap
+    // empty; with it, total idle time before the last finish must be small.
+    let ms = ish.schedule.makespan();
+    let busy: u64 = ish
+        .schedule
+        .placements
+        .iter()
+        .map(|p| p.finish - p.start)
+        .sum();
+    let idle = 2 * ms - busy;
+    assert!(
+        idle <= ms,
+        "ISH left too much idle time: idle={idle} makespan={ms}"
+    );
+}
+
+#[test]
+fn fig5_dsh_duplicates_node1() {
+    // DSH on two cores duplicates the root (node 1) onto the second core
+    // to elide the 1→5 communication delay (Fig. 5).
+    let g = paper_example_dag();
+    let dsh = Dsh.schedule(&g, 2);
+    assert_eq!(check_valid(&g, &dsh.schedule), Ok(()));
+    let ish = Ish.schedule(&g, 2);
+    assert!(
+        dsh.schedule.makespan() <= ish.schedule.makespan(),
+        "§4.2 Obs 2: DSH ≥ ISH"
+    );
+}
+
+#[test]
+fn fig6_exact_search_is_optimal() {
+    let g = paper_example_dag();
+    let bnb = ChouChung { timeout: Duration::from_secs(60) }.schedule(&g, 2);
+    assert!(bnb.optimal);
+    // The duplication-free optimum can't beat the critical path.
+    assert!(bnb.schedule.makespan() >= critical_path_len(&g));
+    // And can't be worse than ISH (also duplication-free).
+    assert!(bnb.schedule.makespan() <= Ish.schedule(&g, 2).schedule.makespan());
+}
+
+#[test]
+fn speedup_plateaus_at_graph_width() {
+    // §4.2 Observation 1: more cores than the maximal parallelism give no
+    // further speedup.
+    let g = paper_example_dag();
+    let width = g.width();
+    let at_width = Dsh.schedule(&g, width).schedule.makespan();
+    for extra in 1..=3 {
+        let ms = Dsh.schedule(&g, width + extra).schedule.makespan();
+        assert!(
+            ms >= at_width.saturating_sub(0) && ms <= at_width,
+            "m={} makespan {} vs plateau {}",
+            width + extra,
+            ms,
+            at_width
+        );
+    }
+}
+
+#[test]
+fn cp_improved_at_least_matches_dsh_plateau() {
+    // §4.3 Observation 2: the exact solver reaches the plateau value with
+    // fewer cores than DSH needs.
+    let mut g = paper_example_dag();
+    ensure_single_sink(&mut g);
+    let cp = CpSolver::new(CpConfig {
+        encoding: Encoding::Improved,
+        timeout: Duration::from_secs(60),
+        warm_start: None,
+    });
+    for m in 2..=3 {
+        let opt = cp.schedule(&g, m).schedule.makespan();
+        let dsh = Dsh.schedule(&g, m).schedule.makespan();
+        assert!(opt <= dsh, "m={m}: CP {opt} > DSH {dsh}");
+    }
+}
+
+#[test]
+fn sink_single_instance_constraint6() {
+    let mut g = paper_example_dag();
+    let s = ensure_single_sink(&mut g);
+    for m in 2..=4 {
+        let sched = Dsh.schedule(&g, m).schedule;
+        assert_eq!(sched.instances(s).len(), 1, "constraint (6), m={m}");
+    }
+}

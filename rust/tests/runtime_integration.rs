@@ -1,0 +1,119 @@
+//! PJRT runtime integration: artifacts load, the full-model artifact
+//! matches the Rust oracle, and the parallel flag-protocol engine matches
+//! the full-model artifact. Skipped (with a message) until
+//! `make artifacts` has produced `artifacts/manifest.json`.
+
+use acetone::exec::{run_full, run_parallel};
+use acetone::nn::eval::{eval, Tensor};
+use acetone::nn::zoo::{self, Scale};
+use acetone::nn::{numel, weights};
+use acetone::runtime::Manifest;
+use acetone::sched::dsh::Dsh;
+use acetone::sched::Scheduler;
+use acetone::wcet::CostModel;
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+fn max_err(a: &Tensor, b: &Tensor) -> f32 {
+    assert_eq!(a.shape, b.shape);
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+#[test]
+fn full_artifact_matches_rust_oracle() {
+    let Some(manifest) = manifest() else { return };
+    for (name, net) in [
+        ("lenet5", zoo::lenet5(Scale::Tiny)),
+        ("lenet5_split", zoo::lenet5_split(Scale::Tiny)),
+        ("googlenet", zoo::googlenet(Scale::Tiny)),
+        ("mlp", zoo::mlp("mlp", &[64, 128, 64, 10])),
+    ] {
+        let mm = manifest.models.get(name).expect(name);
+        let shapes = net.shapes();
+        let input = Tensor::new(
+            shapes[0].clone(),
+            weights::input_tensor(numel(&shapes[0]), mm.seed),
+        );
+        let (pjrt_out, _) = run_full(mm, "artifacts", &input).expect(name);
+        let oracle = eval(&net, &input, mm.seed);
+        let err = max_err(&pjrt_out, &oracle);
+        assert!(err < 1e-3, "{name}: PJRT vs oracle max|Δ| = {err}");
+    }
+}
+
+#[test]
+fn parallel_engine_matches_full_artifact() {
+    let Some(manifest) = manifest() else { return };
+    for (name, net, m) in [
+        ("lenet5_split", zoo::lenet5_split(Scale::Tiny), 2),
+        ("googlenet", zoo::googlenet(Scale::Tiny), 4),
+    ] {
+        let mm = manifest.models.get(name).expect(name);
+        let g = net.to_dag(&CostModel::default());
+        let sched = Dsh.schedule(&g, m).schedule;
+        let shapes = net.shapes();
+        let input = Tensor::new(
+            shapes[0].clone(),
+            weights::input_tensor(numel(&shapes[0]), mm.seed),
+        );
+        let (par, report) = run_parallel(&net, &sched, mm, "artifacts", &input).expect(name);
+        let (full, _) = run_full(mm, "artifacts", &input).expect(name);
+        let err = max_err(&par, &full);
+        assert!(err < 1e-3, "{name} m={m}: parallel vs full max|Δ| = {err}");
+        assert!(!report.steps.is_empty());
+    }
+}
+
+#[test]
+fn manifest_shapes_match_zoo() {
+    let Some(manifest) = manifest() else { return };
+    let net = zoo::googlenet(Scale::Tiny);
+    let mm = manifest.models.get("googlenet").unwrap();
+    let shapes = net.shapes();
+    for (i, l) in net.layers.iter().enumerate() {
+        let s = mm.all_shapes.get(&l.name).unwrap_or_else(|| {
+            panic!("manifest missing shape for {}", l.name)
+        });
+        assert_eq!(s, &shapes[i], "layer {}", l.name);
+    }
+}
+
+#[test]
+fn runtime_rejects_missing_artifact() {
+    let Some(_) = manifest() else { return };
+    let mut rt = acetone::runtime::Runtime::new("artifacts").unwrap();
+    assert!(rt.load("nope/missing.hlo.txt").is_err());
+}
+
+#[test]
+fn persistent_engine_matches_one_shot() {
+    let Some(manifest) = manifest() else { return };
+    let net = zoo::lenet5_split(Scale::Tiny);
+    let mm = manifest.models.get("lenet5_split").unwrap();
+    let g = net.to_dag(&CostModel::default());
+    let sched = Dsh.schedule(&g, 2).schedule;
+    let shapes = net.shapes();
+    let engine = acetone::exec::Engine::new(&net, &sched, mm, "artifacts").unwrap();
+    for req in 0..4u64 {
+        let input = Tensor::new(
+            shapes[0].clone(),
+            weights::input_tensor(numel(&shapes[0]), mm.seed ^ req),
+        );
+        let out = engine.infer(&input).unwrap();
+        let (full, _) = run_full(mm, "artifacts", &input).unwrap();
+        let err = max_err(&out, &full);
+        assert!(err < 1e-3, "req {req}: engine vs full max|Δ| = {err}");
+    }
+}

@@ -1,0 +1,177 @@
+//! Cross-solver integration over the §4.1 random-DAG workload.
+
+use acetone::daggen::{generate, DagGenConfig};
+use acetone::graph::critical_path_len;
+use acetone::sched::cp::{CpConfig, CpSolver, Encoding};
+use acetone::sched::dsh::Dsh;
+use acetone::sched::hybrid::Hybrid;
+use acetone::sched::ish::Ish;
+use acetone::sched::{check_valid, Scheduler};
+use std::time::Duration;
+
+#[test]
+fn heuristics_valid_on_paper_workload() {
+    for nodes in [20, 50] {
+        let cfg = DagGenConfig::paper(nodes);
+        for seed in 0..5 {
+            let g = generate(&cfg, seed);
+            for m in [2, 4, 8] {
+                for solver in [&Ish as &dyn Scheduler, &Dsh] {
+                    let r = solver.schedule(&g, m);
+                    assert_eq!(
+                        check_valid(&g, &r.schedule),
+                        Ok(()),
+                        "{} n={nodes} seed={seed} m={m}",
+                        solver.name()
+                    );
+                    assert!(r.schedule.makespan() <= g.total_wcet());
+                    assert!(r.schedule.makespan() >= critical_path_len(&g));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn dsh_dominates_ish_in_aggregate() {
+    // §4.2 Observation 2 over a graph set: DSH's mean speedup ≥ ISH's.
+    let cfg = DagGenConfig::paper(50);
+    let mut ish_total = 0.0;
+    let mut dsh_total = 0.0;
+    for seed in 0..10 {
+        let g = generate(&cfg, seed);
+        ish_total += Ish.schedule(&g, 8).schedule.speedup(&g);
+        dsh_total += Dsh.schedule(&g, 8).schedule.speedup(&g);
+    }
+    assert!(
+        dsh_total >= ish_total * 0.999,
+        "DSH {dsh_total} < ISH {ish_total}"
+    );
+}
+
+#[test]
+fn cp_improved_beats_or_matches_heuristics_small() {
+    let cfg = DagGenConfig::paper(10);
+    let cp = CpSolver::new(CpConfig {
+        encoding: Encoding::Improved,
+        timeout: Duration::from_secs(20),
+        warm_start: None,
+    });
+    for seed in 0..3 {
+        let g = generate(&cfg, seed);
+        let best_h = Dsh
+            .schedule(&g, 2)
+            .schedule
+            .makespan()
+            .min(Ish.schedule(&g, 2).schedule.makespan());
+        let r = cp.schedule(&g, 2);
+        assert_eq!(check_valid(&g, &r.schedule), Ok(()), "seed={seed}");
+        assert!(
+            r.schedule.makespan() <= best_h,
+            "seed={seed}: CP {} > best heuristic {}",
+            r.schedule.makespan(),
+            best_h
+        );
+    }
+}
+
+#[test]
+fn tang_and_improved_agree_when_both_finish() {
+    let cfg = DagGenConfig::paper(6);
+    for seed in 0..3 {
+        let g = generate(&cfg, seed);
+        let imp = CpSolver::new(CpConfig {
+            encoding: Encoding::Improved,
+            timeout: Duration::from_secs(30),
+            warm_start: None,
+        })
+        .solve(&g, 2);
+        let tang = CpSolver::new(CpConfig {
+            encoding: Encoding::Tang,
+            timeout: Duration::from_secs(60),
+            warm_start: None,
+        })
+        .solve(&g, 2);
+        if imp.result.optimal && tang.result.optimal {
+            assert_eq!(
+                imp.result.schedule.makespan(),
+                tang.result.schedule.makespan(),
+                "seed={seed}"
+            );
+        }
+    }
+}
+
+#[test]
+fn hybrid_improves_or_matches_dsh_on_set() {
+    let cfg = DagGenConfig::paper(20);
+    for seed in 0..4 {
+        let g = generate(&cfg, seed);
+        let dsh = Dsh.schedule(&g, 4).schedule.makespan();
+        let hy = Hybrid { cp_timeout: Duration::from_secs(2) }.schedule(&g, 4);
+        assert!(hy.schedule.makespan() <= dsh, "seed={seed}");
+        assert_eq!(check_valid(&g, &hy.schedule), Ok(()));
+    }
+}
+
+#[test]
+fn single_core_always_serial() {
+    let cfg = DagGenConfig::paper(30);
+    let g = generate(&cfg, 9);
+    for solver in [&Ish as &dyn Scheduler, &Dsh] {
+        let r = solver.schedule(&g, 1);
+        assert_eq!(r.schedule.makespan(), g.total_wcet(), "{}", solver.name());
+    }
+}
+
+#[test]
+fn cp_anytime_quality_regression() {
+    // Regression for the primal heuristic + load-aware branching guide:
+    // within a short budget the improved CP solver must produce a clearly
+    // parallel schedule (it used to return the serial incumbent).
+    let mut g = generate(&DagGenConfig::paper(20), 0xA11);
+    acetone::graph::ensure_single_sink(&mut g);
+    let out = CpSolver::new(CpConfig {
+        encoding: Encoding::Improved,
+        timeout: Duration::from_secs(5),
+        warm_start: None,
+    })
+    .solve(&g, 4);
+    assert!(out.found_solution, "search must reach feasible leaves");
+    let speedup = out.result.schedule.speedup(&g);
+    assert!(speedup > 1.5, "anytime speedup regressed: {speedup}");
+}
+
+#[test]
+fn bnb_never_worse_than_ish() {
+    // ChouChung is the duplication-free optimum; ISH is duplication-free,
+    // so BnB ≤ ISH whenever it completes.
+    use acetone::sched::bnb::ChouChung;
+    let cfg = DagGenConfig::paper(12);
+    for seed in 0..3 {
+        let g = generate(&cfg, seed);
+        let bnb = ChouChung { timeout: Duration::from_secs(20) }.schedule(&g, 2);
+        if bnb.optimal {
+            let ish = Ish.schedule(&g, 2).schedule.makespan();
+            assert!(bnb.schedule.makespan() <= ish, "seed={seed}");
+            assert_eq!(check_valid(&g, &bnb.schedule), Ok(()));
+        }
+    }
+}
+
+#[test]
+fn speedup_plateau_on_random_sets() {
+    // §4.2 Observation 1 on random graphs: speedup at 20 cores ≈ speedup
+    // at width cores (within rounding), for DSH.
+    let cfg = DagGenConfig::paper(30);
+    for seed in 0..3 {
+        let g = generate(&cfg, seed);
+        let w = g.width().min(20).max(1);
+        let at_w = Dsh.schedule(&g, w).schedule.makespan();
+        let at_20 = Dsh.schedule(&g, 20).schedule.makespan();
+        assert!(
+            at_20 as f64 >= at_w as f64 * 0.85,
+            "seed={seed}: plateau violated ({at_20} vs {at_w} at width {w})"
+        );
+    }
+}

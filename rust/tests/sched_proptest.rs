@@ -1,0 +1,122 @@
+//! Property-based tests over the scheduling invariants (in-house harness —
+//! the proptest crate is unavailable offline; see util::proptest).
+
+use acetone::daggen::{generate, DagGenConfig};
+use acetone::sched::dsh::Dsh;
+use acetone::sched::ish::Ish;
+use acetone::sched::{check_valid, derive_comms, derive_programs, CoreStep, Scheduler};
+use acetone::sim::{replay_machine, simulate};
+use acetone::util::proptest::for_all_seeds;
+
+fn random_cfg(seed: u64) -> (DagGenConfig, usize) {
+    let nodes = 5 + (seed % 40) as usize;
+    let m = 1 + (seed % 7) as usize;
+    let mut cfg = DagGenConfig::paper(nodes);
+    cfg.density = 0.05 + (seed % 5) as f64 * 0.06;
+    (cfg, m)
+}
+
+#[test]
+fn prop_schedules_always_valid() {
+    for_all_seeds("schedules valid", 60, |seed| {
+        let (cfg, m) = random_cfg(seed);
+        let g = generate(&cfg, seed);
+        for solver in [&Ish as &dyn Scheduler, &Dsh] {
+            let r = solver.schedule(&g, m);
+            assert_eq!(
+                check_valid(&g, &r.schedule),
+                Ok(()),
+                "{} seed={seed} m={m}",
+                solver.name()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_makespan_bounds() {
+    // critical path ≤ makespan ≤ serial sum, for every solver/DAG/m.
+    for_all_seeds("makespan bounds", 60, |seed| {
+        let (cfg, m) = random_cfg(seed);
+        let g = generate(&cfg, seed);
+        let cp = acetone::graph::critical_path_len(&g);
+        for solver in [&Ish as &dyn Scheduler, &Dsh] {
+            let ms = solver.schedule(&g, m).schedule.makespan();
+            assert!(ms >= cp, "{} seed={seed}", solver.name());
+            assert!(ms <= g.total_wcet(), "{} seed={seed}", solver.name());
+        }
+    });
+}
+
+#[test]
+fn prop_more_cores_never_hurt_much() {
+    // Monotonicity isn't guaranteed for greedy list scheduling, but m+1
+    // cores must never be MUCH worse: bound the anomaly factor.
+    for_all_seeds("cores monotone-ish", 30, |seed| {
+        let cfg = DagGenConfig::paper(20 + (seed % 20) as usize);
+        let g = generate(&cfg, seed);
+        let m2 = Dsh.schedule(&g, 2).schedule.makespan() as f64;
+        let m8 = Dsh.schedule(&g, 8).schedule.makespan() as f64;
+        assert!(m8 <= m2 * 1.25, "seed={seed}: m8={m8} m2={m2}");
+    });
+}
+
+#[test]
+fn prop_programs_cover_schedule_and_simulate_deadlock_free() {
+    for_all_seeds("programs simulate", 300, |seed| {
+        let (cfg, m) = random_cfg(seed);
+        let g = generate(&cfg, seed);
+        let sched = Dsh.schedule(&g, m).schedule;
+        let programs = derive_programs(&g, &sched);
+        // Every placement appears exactly once as a Compute step.
+        let computes: usize = programs
+            .iter()
+            .flat_map(|p| &p.steps)
+            .filter(|s| matches!(s, CoreStep::Compute { .. }))
+            .count();
+        assert_eq!(computes, sched.placements.len(), "seed={seed}");
+        // Writes and reads pair 1:1 per comm op.
+        let comms = derive_comms(&g, &sched);
+        let writes = programs
+            .iter()
+            .flat_map(|p| &p.steps)
+            .filter(|s| matches!(s, CoreStep::Write { .. }))
+            .count();
+        let reads = programs
+            .iter()
+            .flat_map(|p| &p.steps)
+            .filter(|s| matches!(s, CoreStep::Read { .. }))
+            .count();
+        assert_eq!(writes, comms.len());
+        assert_eq!(reads, comms.len());
+        // The full flag protocol must run to completion (panics on deadlock).
+        let report = simulate(&g, &sched, &replay_machine());
+        assert!(report.makespan > 0 || g.total_wcet() == 0);
+    });
+}
+
+#[test]
+fn prop_prune_preserves_validity() {
+    for_all_seeds("prune validity", 40, |seed| {
+        let (cfg, m) = random_cfg(seed);
+        let g = generate(&cfg, seed);
+        let mut sched = Dsh.schedule(&g, m).schedule;
+        // prune_redundant is already applied by DSH; a second application
+        // must be a no-op fixpoint.
+        let removed = acetone::sched::prune_redundant(&g, &mut sched);
+        assert_eq!(removed, 0, "seed={seed}: prune not idempotent");
+        assert_eq!(check_valid(&g, &sched), Ok(()));
+    });
+}
+
+#[test]
+fn prop_daggen_always_single_sink_acyclic() {
+    for_all_seeds("daggen wellformed", 100, |seed| {
+        let nodes = 2 + (seed % 100) as usize;
+        let mut cfg = DagGenConfig::paper(nodes.max(2));
+        cfg.density = (seed % 10) as f64 / 10.0;
+        let g = generate(&cfg, seed);
+        assert!(g.is_acyclic());
+        assert!(g.single_sink().is_some());
+    });
+}
