@@ -1,39 +1,50 @@
 //! Bench: L3 hot paths for the §Perf optimization loop — DSH inner
 //! machinery, CP propagation, program derivation, simulator event loop,
 //! validity checking.
+//!
+//! Besides the console table, the run writes `BENCH_hotpath.json` at the
+//! repo root (name + mean/p50/p95/min in ns per case) so the perf
+//! trajectory is machine-readable across PRs.
 
 use acetone::daggen::{generate, DagGenConfig};
 use acetone::sched::cp::{CpConfig, CpSolver};
 use acetone::sched::dsh::Dsh;
 use acetone::sched::{check_valid, derive_programs, Scheduler};
 use acetone::sim::{replay_machine, simulate};
-use acetone::util::bench::bench;
+use acetone::util::bench::{bench, write_json, BenchStats};
 use std::time::Duration;
 
 fn main() {
     println!("# hotpath bench\n");
+    let mut all: Vec<BenchStats> = Vec::new();
+    let mut record = |s: BenchStats| {
+        println!("{}", s.row());
+        all.push(s);
+    };
+
     let g50 = generate(&DagGenConfig::paper(50), 1);
     let g100 = generate(&DagGenConfig::paper(100), 2);
 
-    let s = bench("dsh n=50 m=8", 3, 30, || Dsh.schedule(&g50, 8).schedule.makespan());
-    println!("{}", s.row());
-    let s = bench("dsh n=100 m=20", 1, 8, || Dsh.schedule(&g100, 20).schedule.makespan());
-    println!("{}", s.row());
+    record(bench("dsh n=50 m=8", 3, 30, || Dsh.schedule(&g50, 8).schedule.makespan()));
+    record(bench("dsh n=100 m=20", 1, 8, || Dsh.schedule(&g100, 20).schedule.makespan()));
 
     let sched = Dsh.schedule(&g100, 8).schedule;
-    let s = bench("derive_programs n=100 m=8", 3, 200, || derive_programs(&g100, &sched).len());
-    println!("{}", s.row());
-    let s = bench("check_valid n=100 m=8", 3, 200, || check_valid(&g100, &sched).is_ok());
-    println!("{}", s.row());
-    let s = bench("simulate n=100 m=8", 3, 100, || {
+    record(bench("derive_programs n=100 m=8", 3, 200, || derive_programs(&g100, &sched).len()));
+    record(bench("check_valid n=100 m=8", 3, 200, || check_valid(&g100, &sched).is_ok()));
+    record(bench("simulate n=100 m=8", 3, 100, || {
         simulate(&g100, &sched, &replay_machine()).makespan
-    });
-    println!("{}", s.row());
+    }));
+    record(bench("width n=100", 3, 200, || g100.width()));
 
     let g10 = generate(&DagGenConfig::paper(10), 3);
     let cp = CpSolver::new(CpConfig::improved(Duration::from_secs(30)));
-    let s = bench("cp-improved n=10 m=2 (to optimal)", 1, 5, || {
+    record(bench("cp-improved n=10 m=2 (to optimal)", 1, 5, || {
         cp.schedule(&g10, 2).schedule.makespan()
-    });
-    println!("{}", s.row());
+    }));
+
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+    match write_json(out, "hotpath", &all) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\nfailed to write {out}: {e}"),
+    }
 }

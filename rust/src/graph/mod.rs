@@ -178,46 +178,59 @@ impl Dag {
     /// number of cores beyond which speedup plateaus.
     ///
     /// Computed exactly via Dilworth's theorem: width = |V| − (maximum
-    /// matching in the bipartite graph of the transitive closure).
+    /// matching in the bipartite graph of the transitive closure). The
+    /// closure is built on u64-word bitset rows — one reverse-topological
+    /// pass OR-ing child rows, O(|E|·n/64) instead of the old
+    /// `Vec<Vec<bool>>` construction's O(n³) bit-at-a-time copies — and the
+    /// augmenting-path matching walks set bits word by word.
     pub fn width(&self) -> usize {
         let n = self.n();
-        // Transitive closure by DFS from each node (n ≤ a few hundred).
-        let mut reach = vec![vec![false; n]; n];
+        if n == 0 {
+            return 0;
+        }
+        let words = (n + 63) / 64;
+        // reach[u*words ..][..] = bitset of nodes reachable from u.
+        let mut reach = vec![0u64; n * words];
         for u in self.topo_order().into_iter().rev() {
             for &(v, _) in &self.children[u] {
-                reach[u][v] = true;
-                for x in 0..n {
-                    if reach[v][x] {
-                        reach[u][x] = true;
-                    }
+                reach[u * words + v / 64] |= 1 << (v % 64);
+                for w in 0..words {
+                    let child_row = reach[v * words + w];
+                    reach[u * words + w] |= child_row;
                 }
             }
         }
         // Hopcroft–Karp is overkill: simple Hungarian augmenting paths.
-        let mut match_r: Vec<Option<usize>> = vec![None; n];
         fn try_assign(
             u: usize,
-            reach: &[Vec<bool>],
+            reach: &[u64],
+            words: usize,
             visited: &mut [bool],
             match_r: &mut [Option<usize>],
         ) -> bool {
-            for v in 0..reach.len() {
-                if reach[u][v] && !visited[v] {
-                    visited[v] = true;
-                    if match_r[v].is_none()
-                        || try_assign(match_r[v].unwrap(), reach, visited, match_r)
-                    {
-                        match_r[v] = Some(u);
-                        return true;
+            for w in 0..words {
+                let mut bits = reach[u * words + w];
+                while bits != 0 {
+                    let v = w * 64 + bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    if !visited[v] {
+                        visited[v] = true;
+                        if match_r[v].is_none()
+                            || try_assign(match_r[v].unwrap(), reach, words, visited, match_r)
+                        {
+                            match_r[v] = Some(u);
+                            return true;
+                        }
                     }
                 }
             }
             false
         }
+        let mut match_r: Vec<Option<usize>> = vec![None; n];
         let mut matched = 0;
         for u in 0..n {
             let mut visited = vec![false; n];
-            if try_assign(u, &reach, &mut visited, &mut match_r) {
+            if try_assign(u, &reach, words, &mut visited, &mut match_r) {
                 matched += 1;
             }
         }
@@ -225,9 +238,15 @@ impl Dag {
     }
 
     /// Edge density as defined by Eq. (14): `|E| / (|V|(|V|−1)/2)`.
+    /// Graphs with fewer than two nodes have no possible edge; their
+    /// density is defined as 0 (the naive formula divides by zero).
     pub fn density(&self) -> f64 {
-        let n = self.n() as f64;
-        self.edge_count() as f64 / (n * (n - 1.0) / 2.0)
+        let n = self.n();
+        if n <= 1 {
+            return 0.0;
+        }
+        let pairs = (n * (n - 1) / 2) as f64;
+        self.edge_count() as f64 / pairs
     }
 
     /// Graphviz DOT rendering (node label = `name\nt(v)`, edge label = `w`).
@@ -351,6 +370,38 @@ mod tests {
             g.add_node(format!("{i}"), 1);
         }
         assert_eq!(g.width(), 4);
+    }
+
+    #[test]
+    fn density_degenerate_graphs_are_zero() {
+        let g = Dag::new();
+        assert_eq!(g.density(), 0.0, "empty graph");
+        let mut g1 = Dag::new();
+        g1.add_node("solo", 1);
+        assert_eq!(g1.density(), 0.0, "single node");
+        assert!(g1.density().is_finite());
+    }
+
+    #[test]
+    fn width_of_empty_graph_is_zero() {
+        assert_eq!(Dag::new().width(), 0);
+    }
+
+    #[test]
+    fn width_with_many_nodes_crosses_word_boundary() {
+        // 70 independent nodes (> one u64 word) plus a chain: the bitset
+        // rows must track bits beyond index 63.
+        let mut g = Dag::new();
+        for i in 0..70 {
+            g.add_node(format!("{i}"), 1);
+        }
+        assert_eq!(g.width(), 70);
+        let mut chain = Dag::new();
+        let ids: Vec<NodeId> = (0..70).map(|i| chain.add_node(format!("{i}"), 1)).collect();
+        for w in ids.windows(2) {
+            chain.add_edge(w[0], w[1], 1);
+        }
+        assert_eq!(chain.width(), 1);
     }
 
     #[test]

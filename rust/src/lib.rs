@@ -13,6 +13,16 @@
 //!
 //! Python never runs on the inference path: the Rust binary loads the HLO
 //! artifacts through PJRT and is self-contained afterwards.
+//!
+//! The scheduling core ([`sched::Schedule`]) is an *indexed* data
+//! structure: per-core start-ordered timelines, per-node instance lists, a
+//! (node, core) membership bitset and running makespan/duplication
+//! counters, all maintained incrementally by `place`/`remove`. Every hot
+//! consumer — the DSH duplication trial loop, `check_valid`,
+//! `derive_programs`, the simulator event loop and the CP primal
+//! heuristic — queries it in O(#instances-of-node) or O(1) instead of a
+//! linear scan over all placements; `sched`'s module docs list the exact
+//! complexity guarantees.
 
 pub mod daggen;
 pub mod graph;

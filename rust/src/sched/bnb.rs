@@ -37,6 +37,9 @@ struct PartialState {
     core: Vec<usize>,
     finish: Vec<Cycles>,
     avail: Vec<Cycles>,
+    /// Whether a core has received any placement — O(1) idle test in the
+    /// branching loop (was a linear scan over `placements`).
+    core_used: Vec<bool>,
     pending_parents: Vec<usize>,
     scheduled: u32,
     makespan: Cycles,
@@ -82,6 +85,7 @@ impl Scheduler for ChouChung {
             core: vec![usize::MAX; g.n()],
             finish: vec![0; g.n()],
             avail: vec![0; m],
+            core_used: vec![false; m],
             pending_parents: (0..g.n()).map(|v| g.parents(v).len()).collect(),
             scheduled: 0,
             makespan: 0,
@@ -198,7 +202,7 @@ fn dfs(
     for &v in &ready {
         let mut tried_idle = false;
         for p in 0..ctx.m {
-            let idle = st.avail[p] == 0 && !st.placements.iter().any(|&(_, c, _)| c == p);
+            let idle = st.avail[p] == 0 && !st.core_used[p];
             if idle {
                 if tried_idle {
                     continue; // empty cores are interchangeable
@@ -222,6 +226,7 @@ fn dfs(
             child.core[v] = p;
             child.finish[v] = fin;
             child.avail[p] = fin;
+            child.core_used[p] = true;
             child.scheduled |= 1 << (v % 32); // coarse; sig handles the rest
             child.makespan = child.makespan.max(fin);
             child.placements.push((v, p, start));

@@ -552,6 +552,11 @@ impl State {
     /// every complete assignment — the exact order-branching below it then
     /// only has to *improve* on this, which is what makes the solver
     /// usefully anytime (§4.3).
+    ///
+    /// Runs once per complete assignment, i.e. on the search's hot path:
+    /// each `Schedule::arrival` probe below is O(#instances-of-parent) on
+    /// the indexed schedule (it was a scan over every placement), so one
+    /// completion costs O(P² · deg) in the worst case instead of O(P³).
     pub fn greedy_complete(&self, g: &Dag, m: usize, levels: &[Cycles]) -> Schedule {
         let mut sched = Schedule::new(m);
         let mut remaining: Vec<(NodeId, usize)> = Vec::new();

@@ -37,7 +37,7 @@ impl Scheduler for Dsh {
             let mut best: Option<(usize, DupPlan)> = None;
             for p in 0..st.m {
                 explored += 1;
-                let plan = plan_with_duplication(&st, v, p, &mut explored);
+                let plan = plan_with_duplication(&mut st, v, p, &mut explored);
                 let better = match &best {
                     None => true,
                     Some((bp, bplan)) => {
@@ -69,55 +69,50 @@ impl Scheduler for Dsh {
 /// ancestors into the idle period before it (Kruatrachue's
 /// duplication-first step).
 ///
-/// Works on a scratch copy of the partial schedule: repeatedly identify the
-/// *critical parent* (the one whose data arrival equals the start time and
-/// which has no instance on `p`), tentatively copy it onto `p` as early as
-/// its own inputs allow — recursing on its own comm delay via the outer
-/// loop, since a committed copy becomes part of the scratch schedule — and
-/// keep the copy only if `v`'s start strictly improves.
+/// Trials run **in place** on `st.schedule` via `place`/`remove` and are
+/// fully reverted before returning — the indexed schedule makes both
+/// operations cheap, so no per-candidate clone of the whole schedule is
+/// needed (this loop runs n·m times per solve and was the hot spot of the
+/// entire heuristic). The caller re-places the winning plan's duplicates.
+///
+/// The loop repeatedly identifies the *critical parent* (the one whose
+/// data arrival equals the start time and which has no instance on `p`),
+/// tentatively copies it onto `p` as early as its own inputs allow —
+/// recursing on its own comm delay via the outer loop, since a committed
+/// copy becomes part of the trial schedule — and keeps the copy only if
+/// `v`'s start strictly improves.
 fn plan_with_duplication(
-    st: &ListState<'_>,
+    st: &mut ListState<'_>,
     v: NodeId,
     p: usize,
     explored: &mut u64,
 ) -> DupPlan {
     let g = st.g;
-    let mut scratch = st.schedule.clone();
     let mut avail = st.core_avail[p];
     let mut dups: Vec<(NodeId, Cycles)> = Vec::new();
 
-    let data_ready = |sch: &super::Schedule, node: NodeId, core: usize| -> Cycles {
-        g.parents(node)
-            .iter()
-            .map(|&(u, w)| sch.arrival(u, w, core).expect("parents scheduled"))
-            .max()
-            .unwrap_or(0)
-    };
-
-    let mut start = avail.max(data_ready(&scratch, v, p));
+    let mut start = avail.max(st.data_ready(v, p));
     loop {
         *explored += 1;
         if start <= avail {
             break; // no idle period → nothing to gain
         }
-        // Critical parent: latest-arriving parent without an instance on p.
+        // Critical parent: latest-arriving parent without an instance on p
+        // (an O(1) bitset test on the indexed schedule).
         let crit = g
             .parents(v)
             .iter()
             .filter(|&&(u, w)| {
-                scratch.arrival(u, w, p).unwrap() == start
-                    && !scratch.placements.iter().any(|q| q.node == u && q.core == p)
+                st.schedule.arrival(u, w, p).unwrap() == start && !st.schedule.on_core(u, p)
             })
             .map(|&(u, _)| u)
             .next();
         let Some(u) = crit else { break };
         // Tentative copy of u on p, as early as its own inputs allow.
-        // Trial by place/remove instead of cloning the schedule — this is
-        // the hot loop of the whole heuristic (§Perf log).
-        let s_u = avail.max(data_ready(&scratch, u, p));
+        let s_u = avail.max(st.data_ready(u, p));
         let f_u = s_u + g.wcet(u);
-        scratch.place(g, u, p, s_u);
-        let new_start = f_u.max(data_ready(&scratch, v, p));
+        st.schedule.place(g, u, p, s_u);
+        let new_start = f_u.max(st.data_ready(v, p));
         if new_start < start {
             dups.push((u, s_u));
             avail = f_u;
@@ -127,9 +122,14 @@ fn plan_with_duplication(
             // shows up as `start > avail` with a new critical parent, i.e.
             // the recursion of the paper realized iteratively.
         } else {
-            scratch.remove(u, p, s_u);
+            st.schedule.remove(u, p, s_u);
             break;
         }
+    }
+    // Revert the kept trial copies; the caller commits the winning plan.
+    for &(u, s) in dups.iter().rev() {
+        let removed = st.schedule.remove(u, p, s);
+        debug_assert!(removed, "trial duplicate vanished during planning");
     }
     DupPlan { start, dups }
 }
@@ -207,6 +207,25 @@ mod tests {
             "makespan {} — duplication chain not applied",
             r.schedule.makespan()
         );
+    }
+
+    #[test]
+    fn planning_leaves_schedule_untouched() {
+        // plan_with_duplication trials in place; after a full solve every
+        // rejected trial must have been reverted — verified indirectly by
+        // validity plus directly here on a one-step state.
+        let g = paper_example_dag();
+        let mut st = ListState::new(&g, 2);
+        let v = st.pop_ready().unwrap();
+        st.commit(v, 0, 0);
+        let before: Vec<_> = st.schedule.iter().copied().collect();
+        let next = st.pop_ready().unwrap();
+        let mut explored = 0u64;
+        for p in 0..2 {
+            let _ = plan_with_duplication(&mut st, next, p, &mut explored);
+            let after: Vec<_> = st.schedule.iter().copied().collect();
+            assert_eq!(before, after, "trial on core {p} leaked placements");
+        }
     }
 
     #[test]

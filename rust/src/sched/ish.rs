@@ -8,7 +8,7 @@
 
 use super::list::ListState;
 use super::{Scheduler, SolveResult};
-use crate::graph::{Dag, NodeId};
+use crate::graph::{Cycles, Dag, NodeId};
 use std::time::Instant;
 
 /// The ISH solver.
@@ -43,45 +43,37 @@ impl Scheduler for Ish {
 
 /// Try to schedule ready nodes inside the idle interval `[from, until)` of
 /// core `p`, preserving every already-placed start time. Nodes are tried in
-/// queue (level) order; each successful insertion may release new ready
+/// priority (level) order by draining the ready heap; candidates that don't
+/// fit are pushed back. Each successful insertion may release new ready
 /// nodes, so the scan restarts until nothing fits.
 fn fill_gap(
     st: &mut ListState<'_>,
     p: usize,
-    mut from: crate::graph::Cycles,
-    until: crate::graph::Cycles,
+    mut from: Cycles,
+    until: Cycles,
     explored: &mut u64,
 ) {
     loop {
-        let mut inserted: Option<(NodeId, crate::graph::Cycles)> = None;
-        for idx in 0..st.ready.len() {
-            let u = st.ready[idx];
+        let mut skipped: Vec<NodeId> = Vec::new();
+        let mut inserted: Option<(NodeId, Cycles)> = None;
+        while let Some(u) = st.pop_ready() {
             *explored += 1;
             let s = from.max(st.data_ready(u, p));
             if s + st.g.wcet(u) <= until {
-                st.ready.remove(idx);
                 inserted = Some((u, s));
                 break;
             }
+            skipped.push(u);
+        }
+        for u in skipped {
+            st.push_ready(u);
         }
         match inserted {
             Some((u, s)) => {
-                // commit() advances core_avail past the inserted node; the
-                // node already placed at `until` keeps its start because the
-                // insertion was only accepted when it fits entirely before.
-                st.schedule.place(st.g, u, p, s);
-                st.scheduled[u] = true;
-                for &(c, _) in st.g.children(u) {
-                    st.pending_parents[c] -= 1;
-                    if st.pending_parents[c] == 0 {
-                        let lvl = st.levels[c];
-                        let key = (std::cmp::Reverse(lvl), c);
-                        let pos = st
-                            .ready
-                            .partition_point(|&x| (std::cmp::Reverse(st.levels[x]), x) < key);
-                        st.ready.insert(pos, c);
-                    }
-                }
+                // The inserted node fits entirely before `until`, so the
+                // node already placed there keeps its start; the core
+                // cursor is untouched (the gap sits before it).
+                st.commit_inserted(u, p, s);
                 from = s + st.g.wcet(u);
                 if from >= until {
                     break;
@@ -155,6 +147,6 @@ mod tests {
     fn all_nodes_scheduled_exactly_once() {
         let g = paper_example_dag();
         let r = Ish.schedule(&g, 3);
-        assert_eq!(r.schedule.placements.len(), g.n());
+        assert_eq!(r.schedule.len(), g.n());
     }
 }

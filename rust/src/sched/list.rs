@@ -1,12 +1,40 @@
 //! Shared framework for the Kruatrachue list-scheduling heuristics (§3.3).
 //!
 //! Both ISH and DSH follow the same skeleton: assign each node a static
-//! level (longest compute path to a leaf), keep the ready nodes in a queue
-//! ordered by level, repeatedly pick the front node, choose the core that
-//! minimizes its start time, and place it.
+//! level (longest compute path to a leaf), keep the ready nodes in a
+//! priority queue ordered by level, repeatedly pick the front node, choose
+//! the core that minimizes its start time, and place it.
+//!
+//! The ready queue is a binary heap keyed by `(level desc, id asc)` —
+//! O(log n) push/pop instead of the former sorted `Vec` whose
+//! `Vec::remove(0)` front-pop shifted the whole queue on every node.
 
 use super::Schedule;
 use crate::graph::{static_levels, Cycles, Dag, NodeId};
+use std::collections::BinaryHeap;
+
+/// Heap entry: max-heap on `(level, Reverse(id))`, so `pop` yields the
+/// highest level and breaks ties toward the smallest node id — the exact
+/// order the sorted ready queue used to produce.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Ready {
+    level: Cycles,
+    v: NodeId,
+}
+
+impl Ord for Ready {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.level
+            .cmp(&other.level)
+            .then_with(|| other.v.cmp(&self.v))
+    }
+}
+
+impl PartialOrd for Ready {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
 
 /// Mutable state threaded through a list-scheduling run.
 pub struct ListState<'g> {
@@ -22,8 +50,8 @@ pub struct ListState<'g> {
     pub scheduled: Vec<bool>,
     /// Count of still-unscheduled parents per node.
     pub pending_parents: Vec<usize>,
-    /// Ready queue, kept sorted by (level desc, id asc).
-    pub ready: Vec<NodeId>,
+    /// Ready queue: max-heap by (level desc, id asc).
+    ready: BinaryHeap<Ready>,
 }
 
 impl<'g> ListState<'g> {
@@ -31,9 +59,10 @@ impl<'g> ListState<'g> {
         assert!(m >= 1);
         let levels = static_levels(g);
         let pending_parents: Vec<usize> = (0..g.n()).map(|v| g.parents(v).len()).collect();
-        let mut ready: Vec<NodeId> =
-            (0..g.n()).filter(|&v| pending_parents[v] == 0).collect();
-        ready.sort_by_key(|&v| (std::cmp::Reverse(levels[v]), v));
+        let ready: BinaryHeap<Ready> = (0..g.n())
+            .filter(|&v| pending_parents[v] == 0)
+            .map(|v| Ready { level: levels[v], v })
+            .collect();
         Self {
             g,
             m,
@@ -46,13 +75,24 @@ impl<'g> ListState<'g> {
         }
     }
 
-    /// Pop the highest-level ready node.
+    /// Pop the highest-level ready node (ties → lowest id).
     pub fn pop_ready(&mut self) -> Option<NodeId> {
-        if self.ready.is_empty() {
-            None
-        } else {
-            Some(self.ready.remove(0))
-        }
+        self.ready.pop().map(|r| r.v)
+    }
+
+    /// (Re-)insert a node into the ready queue.
+    pub fn push_ready(&mut self, v: NodeId) {
+        self.ready.push(Ready { level: self.levels[v], v });
+    }
+
+    /// Number of ready nodes.
+    pub fn ready_len(&self) -> usize {
+        self.ready.len()
+    }
+
+    /// Ready node ids in no particular order (test/diagnostic helper).
+    pub fn ready_nodes(&self) -> Vec<NodeId> {
+        self.ready.iter().map(|r| r.v).collect()
     }
 
     /// Earliest time all of `v`'s inputs are available on core `p`, given
@@ -94,12 +134,7 @@ impl<'g> ListState<'g> {
         self.schedule.place(self.g, v, p, start);
         self.core_avail[p] = start + self.g.wcet(v);
         self.scheduled[v] = true;
-        for &(c, _) in self.g.children(v) {
-            self.pending_parents[c] -= 1;
-            if self.pending_parents[c] == 0 {
-                self.insert_ready(c);
-            }
-        }
+        self.release_children(v);
     }
 
     /// Place a *duplicate* instance (does not mark the node scheduled and
@@ -111,20 +146,29 @@ impl<'g> ListState<'g> {
         self.core_avail[p] = start + self.g.wcet(v);
     }
 
-    fn insert_ready(&mut self, v: NodeId) {
-        let key = (std::cmp::Reverse(self.levels[v]), v);
-        let pos = self
-            .ready
-            .partition_point(|&u| (std::cmp::Reverse(self.levels[u]), u) < key);
-        self.ready.insert(pos, v);
+    /// Commit `v` *inside* an idle gap of core `p` at `start`, without
+    /// advancing the core cursor (the gap sits before `core_avail[p]`).
+    /// Used by ISH's insertion step.
+    pub fn commit_inserted(&mut self, v: NodeId, p: usize, start: Cycles) {
+        debug_assert!(!self.scheduled[v], "node {v} scheduled twice");
+        self.schedule.place(self.g, v, p, start);
+        self.scheduled[v] = true;
+        self.release_children(v);
     }
 
-    /// True when a node already has an instance on core `p`.
+    fn release_children(&mut self, v: NodeId) {
+        for &(c, _) in self.g.children(v) {
+            self.pending_parents[c] -= 1;
+            if self.pending_parents[c] == 0 {
+                self.push_ready(c);
+            }
+        }
+    }
+
+    /// True when a node already has an instance on core `p` — O(1) via the
+    /// schedule's membership bitset.
     pub fn on_core(&self, v: NodeId, p: usize) -> bool {
-        self.schedule
-            .placements
-            .iter()
-            .any(|q| q.node == v && q.core == p)
+        self.schedule.on_core(v, p)
     }
 }
 
@@ -134,19 +178,35 @@ mod tests {
     use crate::graph::paper_example_dag;
 
     #[test]
-    fn ready_queue_ordered_by_level() {
+    fn ready_queue_pops_by_level() {
         let g = paper_example_dag();
         let mut st = ListState::new(&g, 2);
         // Only node 1 (id 0) is initially ready.
         assert_eq!(st.pop_ready(), Some(0));
         st.commit(0, 0, 0);
-        // All of 1's children become ready, highest level first.
+        // All of 1's children pop highest level first, ids break ties.
         let lv = st.levels.clone();
         let mut prev = Cycles::MAX;
-        for &v in &st.ready {
-            assert!(lv[v] <= prev);
+        let mut prev_id = 0;
+        while let Some(v) = st.pop_ready() {
+            assert!(
+                lv[v] < prev || (lv[v] == prev && v > prev_id),
+                "heap order violated at {v}"
+            );
             prev = lv[v];
+            prev_id = v;
         }
+    }
+
+    #[test]
+    fn push_ready_reinserts() {
+        let g = paper_example_dag();
+        let mut st = ListState::new(&g, 2);
+        let v = st.pop_ready().unwrap();
+        assert_eq!(st.ready_len(), 0);
+        st.push_ready(v);
+        assert_eq!(st.ready_len(), 1);
+        assert_eq!(st.pop_ready(), Some(v));
     }
 
     #[test]
@@ -167,7 +227,20 @@ mod tests {
         st.pop_ready();
         st.commit(0, 0, 0);
         assert_eq!(st.core_avail[0], 1);
-        assert!(st.ready.contains(&5)); // node 6
-        assert!(st.ready.contains(&4)); // node 5
+        let ready = st.ready_nodes();
+        assert!(ready.contains(&5)); // node 6
+        assert!(ready.contains(&4)); // node 5
+    }
+
+    #[test]
+    fn on_core_tracks_duplicates() {
+        let g = paper_example_dag();
+        let mut st = ListState::new(&g, 2);
+        st.pop_ready();
+        st.commit(0, 0, 0);
+        assert!(st.on_core(0, 0));
+        assert!(!st.on_core(0, 1));
+        st.commit_duplicate(0, 1, 0);
+        assert!(st.on_core(0, 1));
     }
 }

@@ -4,6 +4,31 @@
 //! A schedule is a tuple `(Sc_1, …, Sc_m)` of per-core sub-schedules; each
 //! sub-schedule is a list of `(node, start)` pairs. Nodes may be duplicated
 //! across cores (at most once per core) to elide communication latency.
+//!
+//! # Indexed layout
+//!
+//! [`Schedule`] is an *indexed* structure, not a flat placement list. It
+//! maintains, incrementally under [`Schedule::place`] / [`Schedule::remove`]:
+//!
+//! * **`by_core`** — one start-ordered timeline per core, so
+//!   [`Schedule::core`] returns a borrowed slice in O(1) and ordered
+//!   traversal ([`Schedule::iter`]) needs no sort;
+//! * **`by_node`** — the instance list of every node, so
+//!   [`Schedule::arrival`] / [`Schedule::arrival_source`] cost
+//!   O(#instances-of-node) instead of a linear scan over every placement
+//!   (the previous representation made DSH's duplication trial loop,
+//!   `check_valid`, `derive_programs` and the simulator superlinear in
+//!   schedule size);
+//! * a **(node, core) membership bitset**, making [`Schedule::on_core`]
+//!   O(1) — the inner predicate of both DSH's critical-parent search and
+//!   the list-scheduling skeleton;
+//! * a **running makespan** and a **running duplication count**, making
+//!   [`Schedule::makespan`] / [`Schedule::duplication_count`] O(1).
+//!
+//! `place` and `remove` are O(log k) search + O(k) shift within the two
+//! affected index rows (k = instances on one core / of one node), and
+//! `remove` only rescans for the makespan when the removed instance was
+//! the latest finisher.
 
 pub mod bnb;
 pub mod cp;
@@ -28,23 +53,53 @@ pub struct Placement {
     pub finish: Cycles,
 }
 
-/// A static, non-preemptive multi-core schedule (§2.3).
+/// A static, non-preemptive multi-core schedule (§2.3), indexed by core
+/// and by node (see the module docs for the complexity guarantees).
 #[derive(Debug, Clone, Default)]
 pub struct Schedule {
     /// Number of cores `m`.
     pub m: usize,
-    /// All placements; kept sorted by `(core, start)`.
-    pub placements: Vec<Placement>,
+    /// Per-core timelines, each sorted by `(start, node)`.
+    by_core: Vec<Vec<Placement>>,
+    /// Per-node instance lists, each sorted by `(core, start)`.
+    by_node: Vec<Vec<Placement>>,
+    /// Membership bitset over `node * m + core`.
+    member: Vec<u64>,
+    /// Total number of placements.
+    len: usize,
+    /// Running count of instances beyond the first of each node.
+    dups: usize,
+    /// Running max finish time.
+    makespan: Cycles,
 }
 
 impl Schedule {
     pub fn new(m: usize) -> Self {
-        Self { m, placements: Vec::new() }
+        Self {
+            m,
+            by_core: vec![Vec::new(); m],
+            by_node: Vec::new(),
+            member: Vec::new(),
+            len: 0,
+            dups: 0,
+            makespan: 0,
+        }
+    }
+
+    /// Grow the node-indexed structures to cover node id `v`.
+    fn ensure_node(&mut self, v: NodeId) {
+        if self.by_node.len() <= v {
+            self.by_node.resize_with(v + 1, Vec::new);
+            let words = ((v + 1) * self.m + 63) / 64;
+            if self.member.len() < words {
+                self.member.resize(words, 0);
+            }
+        }
     }
 
     /// Add an instance of `node` on `core` at `start` (finish = start + t).
-    /// Insertion keeps the `(core, start)` order — O(log P) search instead
-    /// of the full re-sort this used to do (hot in DSH's trial loop).
+    /// All indexes are maintained incrementally: O(log k) search + O(k)
+    /// shift in the core timeline and the node instance list.
     pub fn place(&mut self, g: &Dag, node: NodeId, core: usize, start: Cycles) {
         assert!(core < self.m, "core {core} out of range (m={})", self.m);
         let p = Placement {
@@ -53,47 +108,105 @@ impl Schedule {
             start,
             finish: start + g.wcet(node),
         };
-        let key = (p.core, p.start, p.node);
-        let pos = self
-            .placements
-            .partition_point(|q| (q.core, q.start, q.node) < key);
-        self.placements.insert(pos, p);
-    }
-
-    /// Re-sort placements by `(core, start)`.
-    pub fn normalize(&mut self) {
-        self.placements.sort_by_key(|p| (p.core, p.start, p.node));
-    }
-
-    /// Remove one exact placement (used by DSH's trial-and-revert loop —
-    /// cheaper than cloning the schedule per candidate duplication).
-    pub fn remove(&mut self, node: NodeId, core: usize, start: Cycles) -> bool {
-        match self
-            .placements
-            .iter()
-            .position(|p| p.node == node && p.core == core && p.start == start)
-        {
-            Some(i) => {
-                self.placements.remove(i);
-                true
-            }
-            None => false,
+        self.ensure_node(node);
+        let row = &mut self.by_core[core];
+        let pos = row.partition_point(|q| (q.start, q.node) < (start, node));
+        row.insert(pos, p);
+        let insts = &mut self.by_node[node];
+        if !insts.is_empty() {
+            self.dups += 1;
+        }
+        let pos = insts.partition_point(|q| (q.core, q.start) < (core, start));
+        insts.insert(pos, p);
+        let bit = node * self.m + core;
+        self.member[bit / 64] |= 1 << (bit % 64);
+        self.len += 1;
+        if p.finish > self.makespan {
+            self.makespan = p.finish;
         }
     }
 
-    /// Sub-schedule of one core, in start order.
-    pub fn core(&self, c: usize) -> Vec<Placement> {
-        self.placements.iter().copied().filter(|p| p.core == c).collect()
+    /// Remove one exact placement (used by DSH's trial-and-revert loop —
+    /// cheaper than cloning the schedule per candidate duplication). Both
+    /// index rows are located by `partition_point` binary search; only a
+    /// removal of the latest finisher rescans for the new makespan.
+    pub fn remove(&mut self, node: NodeId, core: usize, start: Cycles) -> bool {
+        if node >= self.by_node.len() {
+            return false;
+        }
+        let insts = &mut self.by_node[node];
+        let pos = insts.partition_point(|q| (q.core, q.start) < (core, start));
+        if pos >= insts.len() || insts[pos].core != core || insts[pos].start != start {
+            return false;
+        }
+        let removed = insts.remove(pos);
+        if !self.by_node[node].is_empty() {
+            self.dups -= 1;
+        }
+        let row = &mut self.by_core[core];
+        let rpos = row.partition_point(|q| (q.start, q.node) < (start, node));
+        debug_assert!(
+            rpos < row.len() && row[rpos].start == start && row[rpos].node == node,
+            "by_core/by_node indexes out of sync"
+        );
+        row.remove(rpos);
+        self.len -= 1;
+        if !self.by_node[node].iter().any(|q| q.core == core) {
+            let bit = node * self.m + core;
+            self.member[bit / 64] &= !(1 << (bit % 64));
+        }
+        if removed.finish == self.makespan {
+            self.makespan = self.iter().map(|p| p.finish).max().unwrap_or(0);
+        }
+        true
     }
 
-    /// All instances of a node.
-    pub fn instances(&self, v: NodeId) -> Vec<Placement> {
-        self.placements.iter().copied().filter(|p| p.node == v).collect()
+    /// Sub-schedule of one core, in `(start, node)` order — a borrowed
+    /// slice, no allocation.
+    pub fn core(&self, c: usize) -> &[Placement] {
+        &self.by_core[c]
     }
 
-    /// Latest finish time over all placements.
+    /// All instances of a node, in `(core, start)` order — a borrowed
+    /// slice, no allocation.
+    pub fn instances(&self, v: NodeId) -> &[Placement] {
+        match self.by_node.get(v) {
+            Some(row) => row.as_slice(),
+            None => &[],
+        }
+    }
+
+    /// All placements in `(core, start, node)` order.
+    pub fn iter(&self) -> impl Iterator<Item = &Placement> + '_ {
+        self.by_core.iter().flatten()
+    }
+
+    /// Total number of placements (instances, duplicates included).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// True when `v` already has an instance on core `p` — O(1) bitset test.
+    /// Out-of-range cores are simply not occupied (the bit index would
+    /// alias into another node's range otherwise).
+    pub fn on_core(&self, v: NodeId, p: usize) -> bool {
+        if p >= self.m {
+            return false;
+        }
+        let bit = v * self.m + p;
+        self.member
+            .get(bit / 64)
+            .map_or(false, |w| (w >> (bit % 64)) & 1 == 1)
+    }
+
+    /// Latest finish time over all placements — O(1), maintained by
+    /// `place`/`remove`.
     pub fn makespan(&self) -> Cycles {
-        self.placements.iter().map(|p| p.finish).max().unwrap_or(0)
+        self.makespan
     }
 
     /// Eq. (15): single-core makespan (Σ t(v)) over this schedule's makespan.
@@ -106,31 +219,24 @@ impl Schedule {
     }
 
     /// Number of duplicate placements (instances beyond the first of each
-    /// node) — the paper's Observation 4 memory-footprint overhead.
+    /// node) — the paper's Observation 4 memory-footprint overhead. O(1),
+    /// maintained by `place`/`remove`.
     pub fn duplication_count(&self) -> usize {
-        let mut per_node = std::collections::HashMap::new();
-        for p in &self.placements {
-            *per_node.entry(p.node).or_insert(0usize) += 1;
-        }
-        per_node.values().map(|&k| k - 1).sum()
+        self.dups
     }
 
     /// Cores that actually received work.
     pub fn used_cores(&self) -> usize {
-        let mut used = vec![false; self.m];
-        for p in &self.placements {
-            used[p.core] = true;
-        }
-        used.iter().filter(|&&u| u).count()
+        self.by_core.iter().filter(|row| !row.is_empty()).count()
     }
 
     /// Earliest data-arrival time of parent `u`'s output at core `q`,
     /// considering every instance of `u`: same-core instances deliver at
     /// `finish`, remote instances at `finish + w` (§2.3 / constraint (11)).
+    /// O(#instances-of-`u`).
     pub fn arrival(&self, u: NodeId, w: Cycles, q: usize) -> Option<Cycles> {
-        self.placements
+        self.instances(u)
             .iter()
-            .filter(|p| p.node == u)
             .map(|p| if p.core == q { p.finish } else { p.finish + w })
             .min()
     }
@@ -138,10 +244,10 @@ impl Schedule {
     /// The instance of `u` that realizes [`Self::arrival`] (ties prefer the
     /// same core, then the lowest core id) — the communication source used
     /// by the simulator, the executor and the code generator.
+    /// O(#instances-of-`u`).
     pub fn arrival_source(&self, u: NodeId, w: Cycles, q: usize) -> Option<Placement> {
-        self.placements
+        self.instances(u)
             .iter()
-            .filter(|p| p.node == u)
             .min_by_key(|p| {
                 let t = if p.core == q { p.finish } else { p.finish + w };
                 (t, p.core != q, p.core)
@@ -149,7 +255,9 @@ impl Schedule {
             .copied()
     }
 
-    /// ASCII Gantt chart in the style of the paper's Figs. 4–5.
+    /// ASCII Gantt chart in the style of the paper's Figs. 4–5. Walks each
+    /// core timeline with a cursor: O(makespan · m + placements) instead of
+    /// a full placement scan per cell.
     pub fn gantt(&self, g: &Dag) -> String {
         let ms = self.makespan();
         let mut out = String::new();
@@ -158,15 +266,21 @@ impl Schedule {
             out.push_str(&format!("| P{:<4}", c + 1));
         }
         out.push('\n');
+        let mut cursor = vec![0usize; self.m];
         for t in 0..ms {
             out.push_str(&format!("{t:>4} "));
             for c in 0..self.m {
-                let cell = self
-                    .placements
-                    .iter()
-                    .find(|p| p.core == c && p.start <= t && t < p.finish)
-                    .map(|p| g.name(p.node).to_string())
-                    .unwrap_or_default();
+                let row = &self.by_core[c];
+                let mut i = cursor[c];
+                while i < row.len() && row[i].finish <= t {
+                    i += 1;
+                }
+                cursor[c] = i;
+                let cell = if i < row.len() && row[i].start <= t && t < row[i].finish {
+                    g.name(row[i].node)
+                } else {
+                    ""
+                };
                 out.push_str(&format!("| {cell:<4}"));
             }
             out.push('\n');
@@ -219,6 +333,7 @@ mod tests {
         assert_eq!(s.core(0).len(), 2);
         assert_eq!(s.core(1).len(), 0);
         assert_eq!(s.used_cores(), 1);
+        assert_eq!(s.len(), 2);
     }
 
     #[test]
@@ -252,6 +367,60 @@ mod tests {
         s.place(&g, 0, 1, 0);
         s.place(&g, 1, 0, 2);
         assert_eq!(s.duplication_count(), 1);
+    }
+
+    #[test]
+    fn on_core_membership_tracks_place_and_remove() {
+        let g = tiny();
+        let mut s = Schedule::new(3);
+        assert!(!s.on_core(0, 0));
+        s.place(&g, 0, 0, 0);
+        s.place(&g, 0, 2, 4);
+        assert!(s.on_core(0, 0));
+        assert!(!s.on_core(0, 1));
+        assert!(s.on_core(0, 2));
+        assert!(s.remove(0, 2, 4));
+        assert!(!s.on_core(0, 2));
+        assert!(s.on_core(0, 0));
+        // Unknown node ids and out-of-range cores are simply absent.
+        assert!(!s.on_core(99, 0));
+        assert!(!s.on_core(0, 99));
+    }
+
+    #[test]
+    fn remove_maintains_indexes_and_makespan() {
+        let g = tiny();
+        let mut s = Schedule::new(2);
+        s.place(&g, 0, 0, 0); // finish 2
+        s.place(&g, 1, 0, 2); // finish 5
+        s.place(&g, 0, 1, 4); // duplicate, finish 6
+        assert_eq!(s.makespan(), 6);
+        assert_eq!(s.duplication_count(), 1);
+        // Removing the latest finisher rescans the makespan.
+        assert!(s.remove(0, 1, 4));
+        assert_eq!(s.makespan(), 5);
+        assert_eq!(s.duplication_count(), 0);
+        assert_eq!(s.len(), 2);
+        // A second removal of the same placement fails.
+        assert!(!s.remove(0, 1, 4));
+        // Order of the core-0 timeline intact.
+        let starts: Vec<Cycles> = s.core(0).iter().map(|p| p.start).collect();
+        assert_eq!(starts, vec![0, 2]);
+    }
+
+    #[test]
+    fn iter_is_core_start_ordered() {
+        let g = tiny();
+        let mut s = Schedule::new(2);
+        s.place(&g, 1, 1, 7);
+        s.place(&g, 0, 0, 3);
+        s.place(&g, 1, 0, 0);
+        let keys: Vec<(usize, Cycles, NodeId)> =
+            s.iter().map(|p| (p.core, p.start, p.node)).collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+        assert_eq!(keys.len(), 3);
     }
 
     #[test]

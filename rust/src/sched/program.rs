@@ -76,7 +76,7 @@ pub fn derive_comms(g: &Dag, s: &Schedule) -> Vec<CommOp> {
     // (src node, src core, src start, dst core) → (latency, ready, deadline, first consumer)
     let mut merged: HashMap<(NodeId, usize, Cycles, usize), (Cycles, Cycles, Cycles, NodeId)> =
         HashMap::new();
-    for p in &s.placements {
+    for p in s.iter() {
         for &(u, w) in g.parents(p.node) {
             let src = s
                 .arrival_source(u, w, p.core)
@@ -141,7 +141,7 @@ pub fn derive_programs(g: &Dag, s: &Schedule) -> Vec<CoreProgram> {
     // reads=1 just before their consumer, computes=2 at their start.
     let mut events: Vec<(usize, (Cycles, u8, Cycles, usize), CoreStep)> = Vec::new();
 
-    for p in &s.placements {
+    for p in s.iter() {
         events.push((
             p.core,
             (p.start, 2, 0, p.node),

@@ -1,7 +1,14 @@
 //! Schedule validity rules (§2.3) and redundant-duplicate pruning.
+//!
+//! Both passes lean on the indexed [`Schedule`]: per-core timelines are
+//! borrowed slices, per-core duplicate detection is a single stamped scan
+//! (the old pairwise check was O(P²)), uniqueness queries are O(1) via
+//! `instances`, and every `arrival`/`arrival_source` costs
+//! O(#instances-of-node).
 
 use super::{Placement, Schedule};
-use crate::graph::{Dag, NodeId};
+use crate::graph::{Cycles, Dag, NodeId};
+use std::collections::HashMap;
 
 /// A violation of the §2.3 validity rules.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -34,7 +41,7 @@ impl std::fmt::Display for ValidityError {
 /// 4. non-preemption: finish = start + t.
 pub fn check_valid(g: &Dag, s: &Schedule) -> Result<(), ValidityError> {
     let mut present = vec![0usize; g.n()];
-    for p in &s.placements {
+    for p in s.iter() {
         if p.core >= s.m {
             return Err(ValidityError::CoreOutOfRange { core: p.core });
         }
@@ -48,15 +55,16 @@ pub fn check_valid(g: &Dag, s: &Schedule) -> Result<(), ValidityError> {
             return Err(ValidityError::Missing { node: v });
         }
     }
-    // At-most-once per core + no overlap.
+    // At-most-once per core + no overlap: one stamped pass over each
+    // (start-ordered) core timeline.
+    let mut seen_on = vec![usize::MAX; g.n()];
     for c in 0..s.m {
         let sub = s.core(c);
-        for i in 0..sub.len() {
-            for j in i + 1..sub.len() {
-                if sub[i].node == sub[j].node {
-                    return Err(ValidityError::DuplicateOnCore { core: c, node: sub[i].node });
-                }
+        for p in sub {
+            if seen_on[p.node] == c {
+                return Err(ValidityError::DuplicateOnCore { core: c, node: p.node });
             }
+            seen_on[p.node] = c;
         }
         for w in sub.windows(2) {
             if w[0].finish > w[1].start {
@@ -69,7 +77,7 @@ pub fn check_valid(g: &Dag, s: &Schedule) -> Result<(), ValidityError> {
         }
     }
     // Data availability.
-    for p in &s.placements {
+    for p in s.iter() {
         for &(u, w) in g.parents(p.node) {
             match s.arrival(u, w, p.core) {
                 Some(t) if t <= p.start => {}
@@ -95,41 +103,35 @@ pub fn check_valid(g: &Dag, s: &Schedule) -> Result<(), ValidityError> {
 pub fn prune_redundant(g: &Dag, s: &mut Schedule) -> usize {
     let mut removed_total = 0;
     loop {
-        let mut useful: Vec<bool> = s
-            .placements
-            .iter()
-            .map(|p| g.children(p.node).is_empty())
-            .collect();
-        // Unique instances are trivially useful.
-        for (i, p) in s.placements.iter().enumerate() {
-            if s.placements.iter().filter(|q| q.node == p.node).count() == 1 {
-                useful[i] = true;
-            }
+        let all: Vec<Placement> = s.iter().copied().collect();
+        // First master-order index of each (node, core, start) key, so a
+        // source placement is resolved in O(1) instead of a linear scan.
+        let mut index_of: HashMap<(NodeId, usize, Cycles), usize> = HashMap::new();
+        for (i, p) in all.iter().enumerate() {
+            index_of.entry((p.node, p.core, p.start)).or_insert(i);
         }
+        let mut useful: Vec<bool> = all
+            .iter()
+            .map(|p| g.children(p.node).is_empty() || s.instances(p.node).len() == 1)
+            .collect();
         // Mark every consumer's chosen source.
-        for p in s.placements.clone() {
+        for p in &all {
             for &(u, w) in g.parents(p.node) {
                 if let Some(src) = s.arrival_source(u, w, p.core) {
-                    if let Some(idx) = s
-                        .placements
-                        .iter()
-                        .position(|q| q.node == src.node && q.core == src.core && q.start == src.start)
-                    {
+                    if let Some(&idx) = index_of.get(&(src.node, src.core, src.start)) {
                         useful[idx] = true;
                     }
                 }
             }
         }
-        let before = s.placements.len();
-        let kept: Vec<Placement> = s
-            .placements
-            .iter()
-            .zip(&useful)
-            .filter(|(_, &u)| u)
-            .map(|(p, _)| *p)
-            .collect();
-        let removed = before - kept.len();
-        s.placements = kept;
+        let mut removed = 0;
+        for (p, &keep) in all.iter().zip(&useful) {
+            if !keep {
+                let ok = s.remove(p.node, p.core, p.start);
+                debug_assert!(ok, "pruned placement missing from schedule");
+                removed += 1;
+            }
+        }
         removed_total += removed;
         if removed == 0 {
             break;
@@ -225,7 +227,7 @@ mod tests {
         s.place(&g, 1, 0, 2); // b local on core 0
         let removed = prune_redundant(&g, &mut s);
         assert_eq!(removed, 1);
-        assert_eq!(s.placements.len(), 2);
+        assert_eq!(s.len(), 2);
         assert_eq!(check_valid(&g, &s), Ok(()));
     }
 
@@ -239,7 +241,7 @@ mod tests {
         let removed = prune_redundant(&g, &mut s);
         // The core-0 instance of `a` is now useless instead.
         assert_eq!(removed, 1);
-        assert!(s.placements.iter().any(|p| p.node == 0 && p.core == 1));
+        assert!(s.iter().any(|p| p.node == 0 && p.core == 1));
         assert_eq!(check_valid(&g, &s), Ok(()));
     }
 
@@ -261,6 +263,6 @@ mod tests {
         s.place(&g, b, 1, 1);
         let removed = prune_redundant(&g, &mut s);
         assert_eq!(removed, 2, "b-dup removal must cascade to a-dup");
-        assert_eq!(s.placements.len(), 3);
+        assert_eq!(s.len(), 3);
     }
 }

@@ -1,8 +1,11 @@
 //! Micro benchmark harness (criterion is unavailable offline).
 //!
 //! Warmup + N timed iterations, reporting mean / p50 / p95 / min. Used by
-//! the `rust/benches/*.rs` targets (built with `harness = false`).
+//! the `rust/benches/*.rs` targets (built with `harness = false`). Each
+//! bench can additionally persist its stats as JSON ([`write_json`]) so the
+//! perf trajectory across PRs is machine-readable.
 
+use super::json::Json;
 use std::time::{Duration, Instant};
 
 /// Timing summary of one benchmark case.
@@ -23,6 +26,36 @@ impl BenchStats {
             self.name, self.iters, self.mean, self.p50, self.p95, self.min
         )
     }
+
+    /// JSON object with all durations in integral nanoseconds.
+    pub fn json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_ns", Json::Num(self.mean.as_nanos() as f64)),
+            ("p50_ns", Json::Num(self.p50.as_nanos() as f64)),
+            ("p95_ns", Json::Num(self.p95.as_nanos() as f64)),
+            ("min_ns", Json::Num(self.min.as_nanos() as f64)),
+        ])
+    }
+}
+
+/// Serialize a bench run (`{"bench": name, "cases": [...]}`) to a string.
+pub fn json_report(bench_name: &str, stats: &[BenchStats]) -> String {
+    Json::obj(vec![
+        ("bench", Json::Str(bench_name.to_string())),
+        ("cases", Json::Arr(stats.iter().map(BenchStats::json).collect())),
+    ])
+    .to_string()
+}
+
+/// Write a bench run's JSON report to `path`.
+pub fn write_json(
+    path: impl AsRef<std::path::Path>,
+    bench_name: &str,
+    stats: &[BenchStats],
+) -> std::io::Result<()> {
+    std::fs::write(path, json_report(bench_name, stats))
 }
 
 /// Run `f` for `warmup` unmeasured + `iters` measured iterations.
@@ -66,5 +99,22 @@ mod tests {
         assert!(s.p50 <= s.p95);
         assert_eq!(s.iters, 50);
         assert!(s.row().contains("noop"));
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        let s = bench("case-a", 1, 10, || 2 * 2);
+        let text = json_report("hotpath", &[s.clone()]);
+        let doc = Json::parse(&text).expect("valid JSON");
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("hotpath"));
+        let cases = doc.get("cases").and_then(Json::as_arr).expect("cases");
+        assert_eq!(cases.len(), 1);
+        assert_eq!(cases[0].get("name").and_then(Json::as_str), Some("case-a"));
+        let mean = cases[0].get("mean_ns").and_then(Json::as_f64).expect("mean_ns");
+        assert!(mean >= 0.0);
+        assert_eq!(
+            cases[0].get("iters").and_then(Json::as_usize),
+            Some(s.iters)
+        );
     }
 }

@@ -31,12 +31,7 @@ fn fig4_ish_fills_idle_slot() {
     // Without the insertion step a naive list schedule leaves the gap
     // empty; with it, total idle time before the last finish must be small.
     let ms = ish.schedule.makespan();
-    let busy: u64 = ish
-        .schedule
-        .placements
-        .iter()
-        .map(|p| p.finish - p.start)
-        .sum();
+    let busy: u64 = ish.schedule.iter().map(|p| p.finish - p.start).sum();
     let idle = 2 * ms - busy;
     assert!(
         idle <= ms,

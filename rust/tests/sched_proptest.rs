@@ -74,7 +74,7 @@ fn prop_programs_cover_schedule_and_simulate_deadlock_free() {
             .flat_map(|p| &p.steps)
             .filter(|s| matches!(s, CoreStep::Compute { .. }))
             .count();
-        assert_eq!(computes, sched.placements.len(), "seed={seed}");
+        assert_eq!(computes, sched.len(), "seed={seed}");
         // Writes and reads pair 1:1 per comm op.
         let comms = derive_comms(&g, &sched);
         let writes = programs

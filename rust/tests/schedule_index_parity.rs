@@ -1,0 +1,545 @@
+//! Behavioral-parity tests for the indexed [`Schedule`] core.
+//!
+//! The schedule was restructured from one flat `Vec<Placement>` with
+//! linear-scan queries into per-node / per-core indexes with incremental
+//! maintenance. These tests pin the refactor to the pre-refactor behavior
+//! with an executable oracle: a `Ref*` reimplementation of the original
+//! flat-vector schedule *and* of the original ISH/DSH drivers (sorted-Vec
+//! ready queue, clone-per-trial DSH planning), copied verbatim from the
+//! seed. Every query and every heuristic output must match exactly —
+//! makespans byte-identical, placement lists identical.
+
+use acetone::daggen::{generate, DagGenConfig};
+use acetone::graph::{paper_example_dag, static_levels, Cycles, Dag, NodeId};
+use acetone::sched::dsh::Dsh;
+use acetone::sched::ish::Ish;
+use acetone::sched::{Placement, Schedule, Scheduler};
+use acetone::util::proptest::for_all_seeds;
+use acetone::util::rng::SplitMix64;
+
+// ---------------------------------------------------------------------------
+// Reference (pre-refactor) schedule: flat sorted Vec + linear scans.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Default)]
+struct RefSchedule {
+    m: usize,
+    /// All placements; kept sorted by `(core, start, node)`.
+    placements: Vec<Placement>,
+}
+
+impl RefSchedule {
+    fn new(m: usize) -> Self {
+        Self { m, placements: Vec::new() }
+    }
+
+    fn place(&mut self, g: &Dag, node: NodeId, core: usize, start: Cycles) {
+        assert!(core < self.m);
+        let p = Placement { node, core, start, finish: start + g.wcet(node) };
+        let key = (p.core, p.start, p.node);
+        let pos = self
+            .placements
+            .partition_point(|q| (q.core, q.start, q.node) < key);
+        self.placements.insert(pos, p);
+    }
+
+    fn remove(&mut self, node: NodeId, core: usize, start: Cycles) -> bool {
+        match self
+            .placements
+            .iter()
+            .position(|p| p.node == node && p.core == core && p.start == start)
+        {
+            Some(i) => {
+                self.placements.remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn instances(&self, v: NodeId) -> Vec<Placement> {
+        self.placements.iter().copied().filter(|p| p.node == v).collect()
+    }
+
+    fn core(&self, c: usize) -> Vec<Placement> {
+        self.placements.iter().copied().filter(|p| p.core == c).collect()
+    }
+
+    fn makespan(&self) -> Cycles {
+        self.placements.iter().map(|p| p.finish).max().unwrap_or(0)
+    }
+
+    fn duplication_count(&self) -> usize {
+        let mut per_node = std::collections::HashMap::new();
+        for p in &self.placements {
+            *per_node.entry(p.node).or_insert(0usize) += 1;
+        }
+        per_node.values().map(|&k| k - 1).sum()
+    }
+
+    fn used_cores(&self) -> usize {
+        let mut used = vec![false; self.m];
+        for p in &self.placements {
+            used[p.core] = true;
+        }
+        used.iter().filter(|&&u| u).count()
+    }
+
+    fn arrival(&self, u: NodeId, w: Cycles, q: usize) -> Option<Cycles> {
+        self.placements
+            .iter()
+            .filter(|p| p.node == u)
+            .map(|p| if p.core == q { p.finish } else { p.finish + w })
+            .min()
+    }
+
+    fn arrival_source(&self, u: NodeId, w: Cycles, q: usize) -> Option<Placement> {
+        self.placements
+            .iter()
+            .filter(|p| p.node == u)
+            .min_by_key(|p| {
+                let t = if p.core == q { p.finish } else { p.finish + w };
+                (t, p.core != q, p.core)
+            })
+            .copied()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference (pre-refactor) list-scheduling state: sorted-Vec ready queue.
+// ---------------------------------------------------------------------------
+
+struct RefListState<'g> {
+    g: &'g Dag,
+    m: usize,
+    levels: Vec<Cycles>,
+    schedule: RefSchedule,
+    core_avail: Vec<Cycles>,
+    scheduled: Vec<bool>,
+    pending_parents: Vec<usize>,
+    ready: Vec<NodeId>,
+}
+
+impl<'g> RefListState<'g> {
+    fn new(g: &'g Dag, m: usize) -> Self {
+        let levels = static_levels(g);
+        let pending_parents: Vec<usize> = (0..g.n()).map(|v| g.parents(v).len()).collect();
+        let mut ready: Vec<NodeId> =
+            (0..g.n()).filter(|&v| pending_parents[v] == 0).collect();
+        ready.sort_by_key(|&v| (std::cmp::Reverse(levels[v]), v));
+        Self {
+            g,
+            m,
+            levels,
+            schedule: RefSchedule::new(m),
+            core_avail: vec![0; m],
+            scheduled: vec![false; g.n()],
+            pending_parents,
+            ready,
+        }
+    }
+
+    fn pop_ready(&mut self) -> Option<NodeId> {
+        if self.ready.is_empty() {
+            None
+        } else {
+            Some(self.ready.remove(0))
+        }
+    }
+
+    fn data_ready(&self, v: NodeId, p: usize) -> Cycles {
+        self.g
+            .parents(v)
+            .iter()
+            .map(|&(u, w)| self.schedule.arrival(u, w, p).expect("parents scheduled"))
+            .max()
+            .unwrap_or(0)
+    }
+
+    fn est(&self, v: NodeId, p: usize) -> Cycles {
+        self.core_avail[p].max(self.data_ready(v, p))
+    }
+
+    fn best_core(&self, v: NodeId) -> (usize, Cycles) {
+        (0..self.m)
+            .map(|p| (p, self.est(v, p)))
+            .min_by_key(|&(p, t)| (t, p))
+            .unwrap()
+    }
+
+    fn insert_ready(&mut self, v: NodeId) {
+        let key = (std::cmp::Reverse(self.levels[v]), v);
+        let pos = self
+            .ready
+            .partition_point(|&u| (std::cmp::Reverse(self.levels[u]), u) < key);
+        self.ready.insert(pos, v);
+    }
+
+    fn commit(&mut self, v: NodeId, p: usize, start: Cycles) {
+        self.schedule.place(self.g, v, p, start);
+        self.core_avail[p] = start + self.g.wcet(v);
+        self.scheduled[v] = true;
+        for &(c, _) in self.g.children(v) {
+            self.pending_parents[c] -= 1;
+            if self.pending_parents[c] == 0 {
+                self.insert_ready(c);
+            }
+        }
+    }
+
+    fn commit_duplicate(&mut self, v: NodeId, p: usize, start: Cycles) {
+        self.schedule.place(self.g, v, p, start);
+        self.core_avail[p] = start + self.g.wcet(v);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference ISH (sorted-Vec ready queue, in-queue gap scan).
+// ---------------------------------------------------------------------------
+
+fn ref_ish(g: &Dag, m: usize) -> RefSchedule {
+    let mut st = RefListState::new(g, m);
+    while let Some(v) = st.pop_ready() {
+        let (p, start) = st.best_core(v);
+        let gap_start = st.core_avail[p];
+        st.commit(v, p, start);
+        ref_fill_gap(&mut st, p, gap_start, start);
+    }
+    st.schedule
+}
+
+fn ref_fill_gap(st: &mut RefListState<'_>, p: usize, mut from: Cycles, until: Cycles) {
+    loop {
+        let mut inserted: Option<(NodeId, Cycles)> = None;
+        for idx in 0..st.ready.len() {
+            let u = st.ready[idx];
+            let s = from.max(st.data_ready(u, p));
+            if s + st.g.wcet(u) <= until {
+                st.ready.remove(idx);
+                inserted = Some((u, s));
+                break;
+            }
+        }
+        match inserted {
+            Some((u, s)) => {
+                st.schedule.place(st.g, u, p, s);
+                st.scheduled[u] = true;
+                for &(c, _) in st.g.children(u) {
+                    st.pending_parents[c] -= 1;
+                    if st.pending_parents[c] == 0 {
+                        st.insert_ready(c);
+                    }
+                }
+                from = s + st.g.wcet(u);
+                if from >= until {
+                    break;
+                }
+            }
+            None => break,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference DSH (clone-per-trial planning, linear `on_core` scans).
+// ---------------------------------------------------------------------------
+
+struct RefDupPlan {
+    start: Cycles,
+    dups: Vec<(NodeId, Cycles)>,
+}
+
+fn ref_dsh(g: &Dag, m: usize) -> RefSchedule {
+    let mut st = RefListState::new(g, m);
+    while let Some(v) = st.pop_ready() {
+        let mut best: Option<(usize, RefDupPlan)> = None;
+        for p in 0..st.m {
+            let plan = ref_plan_with_duplication(&st, v, p);
+            let better = match &best {
+                None => true,
+                Some((bp, bplan)) => {
+                    (plan.start, plan.dups.len(), p) < (bplan.start, bplan.dups.len(), *bp)
+                }
+            };
+            if better {
+                best = Some((p, plan));
+            }
+        }
+        let (p, plan) = best.unwrap();
+        for &(u, s) in &plan.dups {
+            st.commit_duplicate(u, p, s);
+        }
+        st.commit(v, p, plan.start);
+    }
+    let mut schedule = st.schedule;
+    ref_prune_redundant(g, &mut schedule);
+    schedule
+}
+
+fn ref_plan_with_duplication(st: &RefListState<'_>, v: NodeId, p: usize) -> RefDupPlan {
+    let g = st.g;
+    let mut scratch = st.schedule.clone();
+    let mut avail = st.core_avail[p];
+    let mut dups: Vec<(NodeId, Cycles)> = Vec::new();
+
+    let data_ready = |sch: &RefSchedule, node: NodeId, core: usize| -> Cycles {
+        g.parents(node)
+            .iter()
+            .map(|&(u, w)| sch.arrival(u, w, core).expect("parents scheduled"))
+            .max()
+            .unwrap_or(0)
+    };
+
+    let mut start = avail.max(data_ready(&scratch, v, p));
+    loop {
+        if start <= avail {
+            break;
+        }
+        let crit = g
+            .parents(v)
+            .iter()
+            .filter(|&&(u, w)| {
+                scratch.arrival(u, w, p).unwrap() == start
+                    && !scratch.placements.iter().any(|q| q.node == u && q.core == p)
+            })
+            .map(|&(u, _)| u)
+            .next();
+        let Some(u) = crit else { break };
+        let s_u = avail.max(data_ready(&scratch, u, p));
+        let f_u = s_u + g.wcet(u);
+        scratch.place(g, u, p, s_u);
+        let new_start = f_u.max(data_ready(&scratch, v, p));
+        if new_start < start {
+            dups.push((u, s_u));
+            avail = f_u;
+            start = new_start;
+        } else {
+            scratch.remove(u, p, s_u);
+            break;
+        }
+    }
+    RefDupPlan { start, dups }
+}
+
+fn ref_prune_redundant(g: &Dag, s: &mut RefSchedule) -> usize {
+    let mut removed_total = 0;
+    loop {
+        let mut useful: Vec<bool> = s
+            .placements
+            .iter()
+            .map(|p| g.children(p.node).is_empty())
+            .collect();
+        for (i, p) in s.placements.iter().enumerate() {
+            if s.placements.iter().filter(|q| q.node == p.node).count() == 1 {
+                useful[i] = true;
+            }
+        }
+        for p in s.placements.clone() {
+            for &(u, w) in g.parents(p.node) {
+                if let Some(src) = s.arrival_source(u, w, p.core) {
+                    if let Some(idx) = s.placements.iter().position(|q| {
+                        q.node == src.node && q.core == src.core && q.start == src.start
+                    }) {
+                        useful[idx] = true;
+                    }
+                }
+            }
+        }
+        let before = s.placements.len();
+        let kept: Vec<Placement> = s
+            .placements
+            .iter()
+            .zip(&useful)
+            .filter(|(_, &u)| u)
+            .map(|(p, _)| *p)
+            .collect();
+        let removed = before - kept.len();
+        s.placements = kept;
+        removed_total += removed;
+        if removed == 0 {
+            break;
+        }
+    }
+    removed_total
+}
+
+// ---------------------------------------------------------------------------
+// Comparison helpers.
+// ---------------------------------------------------------------------------
+
+fn indexed_placements(s: &Schedule) -> Vec<Placement> {
+    s.iter().copied().collect()
+}
+
+/// Full query-surface comparison between the indexed and the reference
+/// schedule holding the same placements.
+fn assert_query_parity(g: &Dag, idx: &Schedule, re: &RefSchedule, ctx: &str) {
+    assert_eq!(idx.len(), re.placements.len(), "{ctx}: len");
+    assert_eq!(indexed_placements(idx), re.placements, "{ctx}: placements");
+    assert_eq!(idx.makespan(), re.makespan(), "{ctx}: makespan");
+    assert_eq!(idx.duplication_count(), re.duplication_count(), "{ctx}: dups");
+    assert_eq!(idx.used_cores(), re.used_cores(), "{ctx}: used_cores");
+    for c in 0..idx.m {
+        assert_eq!(idx.core(c).to_vec(), re.core(c), "{ctx}: core {c}");
+    }
+    for u in 0..g.n() {
+        assert_eq!(idx.instances(u).to_vec(), re.instances(u), "{ctx}: instances {u}");
+        let on: Vec<usize> = (0..idx.m).filter(|&p| idx.on_core(u, p)).collect();
+        let ref_on: Vec<usize> = (0..re.m)
+            .filter(|&p| re.placements.iter().any(|q| q.node == u && q.core == p))
+            .collect();
+        assert_eq!(on, ref_on, "{ctx}: on_core {u}");
+        for q in 0..idx.m {
+            for w in [0, 1, 3, 9] {
+                assert_eq!(idx.arrival(u, w, q), re.arrival(u, w, q), "{ctx}: arrival({u},{w},{q})");
+                assert_eq!(
+                    idx.arrival_source(u, w, q),
+                    re.arrival_source(u, w, q),
+                    "{ctx}: arrival_source({u},{w},{q})"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Properties.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_indexed_queries_match_reference_under_place_and_remove() {
+    for_all_seeds("indexed schedule queries", 60, |seed| {
+        let n = 5 + (seed % 40) as usize;
+        let m = 1 + (seed % 7) as usize;
+        let mut cfg = DagGenConfig::paper(n);
+        cfg.density = 0.05 + (seed % 5) as f64 * 0.06;
+        let g = generate(&cfg, seed);
+        let mut rng = SplitMix64::new(seed ^ 0xC0FFEE);
+
+        let mut idx = Schedule::new(m);
+        let mut re = RefSchedule::new(m);
+        let mut cursor = vec![0u64; m];
+        // First instances in topological order, on random cores.
+        for v in g.topo_order() {
+            let p = rng.next_below(m as u64) as usize;
+            let start = cursor[p] + rng.next_below(4);
+            idx.place(&g, v, p, start);
+            re.place(&g, v, p, start);
+            cursor[p] = start + g.wcet(v);
+        }
+        // Random duplicates (at most one per (node, core), like real
+        // schedules).
+        for _ in 0..(g.n() / 3 + 1) {
+            let v = rng.next_below(g.n() as u64) as usize;
+            let p = rng.next_below(m as u64) as usize;
+            if idx.on_core(v, p) {
+                continue;
+            }
+            let start = cursor[p] + rng.next_below(4);
+            idx.place(&g, v, p, start);
+            re.place(&g, v, p, start);
+            cursor[p] = start + g.wcet(v);
+        }
+        assert_query_parity(&g, &idx, &re, &format!("seed {seed} after place"));
+
+        // Random removals (including the makespan-setting tail).
+        for round in 0..3 {
+            let all = indexed_placements(&idx);
+            if all.is_empty() {
+                break;
+            }
+            let victim = all[rng.next_below(all.len() as u64) as usize];
+            assert_eq!(
+                idx.remove(victim.node, victim.core, victim.start),
+                re.remove(victim.node, victim.core, victim.start),
+                "seed {seed} remove round {round}"
+            );
+            assert_query_parity(&g, &idx, &re, &format!("seed {seed} after remove {round}"));
+        }
+        // Removing something absent fails on both.
+        assert!(!idx.remove(0, 0, 999_999));
+        assert!(!re.remove(0, 0, 999_999));
+    });
+}
+
+#[test]
+fn prop_ish_identical_to_prerefactor_reference() {
+    for_all_seeds("ISH parity", 40, |seed| {
+        let n = 5 + (seed % 40) as usize;
+        let m = 1 + (seed % 7) as usize;
+        let mut cfg = DagGenConfig::paper(n);
+        cfg.density = 0.05 + (seed % 5) as f64 * 0.06;
+        let g = generate(&cfg, seed);
+        let new = Ish.schedule(&g, m).schedule;
+        let old = ref_ish(&g, m);
+        assert_eq!(new.makespan(), old.makespan(), "seed={seed} m={m}");
+        assert_eq!(indexed_placements(&new), old.placements, "seed={seed} m={m}");
+    });
+}
+
+#[test]
+fn prop_dsh_identical_to_prerefactor_reference() {
+    for_all_seeds("DSH parity", 40, |seed| {
+        let n = 5 + (seed % 40) as usize;
+        let m = 1 + (seed % 7) as usize;
+        let mut cfg = DagGenConfig::paper(n);
+        cfg.density = 0.05 + (seed % 5) as f64 * 0.06;
+        let g = generate(&cfg, seed);
+        let new = Dsh.schedule(&g, m).schedule;
+        let old = ref_dsh(&g, m);
+        assert_eq!(new.makespan(), old.makespan(), "seed={seed} m={m}");
+        assert_eq!(indexed_placements(&new), old.placements, "seed={seed} m={m}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Golden instances (the issue's acceptance set).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn golden_paper_example_dag() {
+    let g = paper_example_dag();
+    for m in 1..=6 {
+        let ish = Ish.schedule(&g, m).schedule;
+        let dsh = Dsh.schedule(&g, m).schedule;
+        assert_eq!(ish.makespan(), ref_ish(&g, m).makespan(), "ISH m={m}");
+        assert_eq!(dsh.makespan(), ref_dsh(&g, m).makespan(), "DSH m={m}");
+    }
+    // Literal goldens: single-core list scheduling is the serial order
+    // (Σ t(v) = 16), and ISH on two cores reproduces Fig. 4's makespan.
+    assert_eq!(Ish.schedule(&g, 1).schedule.makespan(), 16);
+    assert_eq!(Dsh.schedule(&g, 1).schedule.makespan(), 16);
+    assert_eq!(Ish.schedule(&g, 2).schedule.makespan(), 9);
+}
+
+#[test]
+fn golden_paper50_seeds_1_to_5() {
+    let cfg = DagGenConfig::paper(50);
+    for seed in 1..=5 {
+        let g = generate(&cfg, seed);
+        for m in [2, 8] {
+            let ish = Ish.schedule(&g, m).schedule;
+            let old_ish = ref_ish(&g, m);
+            assert_eq!(ish.makespan(), old_ish.makespan(), "ISH seed={seed} m={m}");
+            assert_eq!(indexed_placements(&ish), old_ish.placements, "ISH seed={seed} m={m}");
+            let dsh = Dsh.schedule(&g, m).schedule;
+            let old_dsh = ref_dsh(&g, m);
+            assert_eq!(dsh.makespan(), old_dsh.makespan(), "DSH seed={seed} m={m}");
+            assert_eq!(indexed_placements(&dsh), old_dsh.placements, "DSH seed={seed} m={m}");
+        }
+    }
+}
+
+#[test]
+fn golden_paper100_bench_case() {
+    // The `dsh n=100 m=20` hotpath-bench case must keep its pre-refactor
+    // answer while getting faster.
+    let cfg = DagGenConfig::paper(100);
+    for seed in 1..=2 {
+        let g = generate(&cfg, seed);
+        let new = Dsh.schedule(&g, 20).schedule;
+        let old = ref_dsh(&g, 20);
+        assert_eq!(new.makespan(), old.makespan(), "seed={seed}");
+        assert_eq!(indexed_placements(&new), old.placements, "seed={seed}");
+    }
+}

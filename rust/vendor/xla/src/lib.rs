@@ -1,0 +1,134 @@
+//! Compile-time stub of the `xla` (xla_extension / PJRT) binding surface
+//! used by `acetone::runtime`. The workspace must build offline with no
+//! registry access, so this crate provides the exact types and signatures
+//! the runtime calls, with every entry point failing at *runtime* with an
+//! `Unavailable` error. The PJRT-backed tests all skip unless AOT
+//! artifacts exist, so a default `cargo test` never hits these paths.
+//!
+//! To run real PJRT inference, replace the `xla` path dependency in
+//! `rust/Cargo.toml` with the actual xla_extension bindings — the API
+//! here matches the subset acetone uses (client/compile/execute/literal).
+
+/// Error type mirroring `xla::Error`'s role (Debug-formatted by callers).
+#[derive(Debug, Clone)]
+pub enum Error {
+    Unavailable(&'static str),
+}
+
+const UNAVAILABLE: Error =
+    Error::Unavailable("PJRT stub: built without the xla_extension bindings");
+
+/// PJRT CPU client (stub: construction fails).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, Error> {
+        Err(UNAVAILABLE)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(UNAVAILABLE)
+    }
+}
+
+/// Parsed HLO module (stub: parsing fails).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self, Error> {
+        Err(UNAVAILABLE)
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _private: () }
+    }
+}
+
+/// A compiled executable (stub: never constructed, execution fails).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(UNAVAILABLE)
+    }
+}
+
+/// A device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(UNAVAILABLE)
+    }
+}
+
+/// A host literal (stub: shape/data queries fail).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Self {
+        Self { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Err(UNAVAILABLE)
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal, Error> {
+        Err(UNAVAILABLE)
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        Err(UNAVAILABLE)
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(UNAVAILABLE)
+    }
+}
+
+/// Shape of an array literal.
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_is_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+        let lit = Literal::vec1(&[1.0]);
+        assert!(lit.reshape(&[1]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}
