@@ -17,6 +17,7 @@ fn main() {
                 encoding: enc,
                 timeout: Duration::from_secs(30),
                 warm_start: None,
+                node_limit: None,
             });
             let s = bench(&format!("{:?} n={n} m={m}", enc), 1, 5, || {
                 solver.schedule(&g, m).schedule.makespan()

@@ -7,9 +7,10 @@
 //! trajectory is machine-readable across PRs.
 
 use acetone::daggen::{generate, DagGenConfig};
-use acetone::sched::cp::{CpConfig, CpSolver};
+use acetone::sched::bnb::ChouChung;
+use acetone::sched::cp::{CpConfig, CpSolver, Encoding};
 use acetone::sched::dsh::Dsh;
-use acetone::sched::{check_valid, derive_programs, Scheduler};
+use acetone::sched::{check_valid, derive_programs, prune_redundant, Scheduler};
 use acetone::sim::{replay_machine, simulate};
 use acetone::util::bench::{bench, write_json, BenchStats};
 use std::time::Duration;
@@ -40,6 +41,36 @@ fn main() {
     let cp = CpSolver::new(CpConfig::improved(Duration::from_secs(30)));
     record(bench("cp-improved n=10 m=2 (to optimal)", 1, 5, || {
         cp.schedule(&g10, 2).schedule.makespan()
+    }));
+
+    // Deep-search branch cost: a fixed node budget makes the explored
+    // tree identical across machines and runs, so these cases measure
+    // exactly the per-branch work the trail/undo scheme optimizes.
+    let g30 = generate(&DagGenConfig::paper(30), 4);
+    let mut g30s = g30.clone();
+    acetone::graph::ensure_single_sink(&mut g30s);
+    let cp_deep = CpSolver::new(CpConfig {
+        encoding: Encoding::Improved,
+        timeout: Duration::from_secs(3600),
+        warm_start: None,
+        node_limit: Some(4_000),
+    });
+    record(bench("cp-improved n=30 m=4 (4k-node budget)", 1, 5, || {
+        cp_deep.schedule(&g30s, 4).schedule.makespan()
+    }));
+    let bnb_deep = ChouChung {
+        timeout: Duration::from_secs(3600),
+        node_limit: Some(20_000),
+    };
+    record(bench("bnb n=30 m=4 (20k-node budget)", 1, 5, || {
+        bnb_deep.schedule(&g30, 4).schedule.makespan()
+    }));
+
+    // Duplicate pruning on a duplication-heavy DSH schedule (clone cost
+    // included on both sides of any future comparison).
+    record(bench("prune_redundant n=100 m=8", 3, 100, || {
+        let mut s = sched.clone();
+        prune_redundant(&g100, &mut s)
     }));
 
     let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");

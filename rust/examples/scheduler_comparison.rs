@@ -26,7 +26,7 @@ fn main() {
         let solvers: Vec<Box<dyn Scheduler>> = vec![
             Box::new(Ish),
             Box::new(Dsh),
-            Box::new(ChouChung { timeout: Duration::from_secs(10) }),
+            Box::new(ChouChung { timeout: Duration::from_secs(10), node_limit: None }),
             Box::new(CpSolver::new(CpConfig::improved(Duration::from_secs(10)))),
             Box::new(CpSolver::new(CpConfig::tang(Duration::from_secs(10)))),
             Box::new(Hybrid { cp_timeout: Duration::from_secs(5) }),

@@ -1,0 +1,250 @@
+//! Bench-regression guard for CI.
+//!
+//! Compares a fresh `BENCH_hotpath.json` (written by
+//! `cargo bench --bench hotpath`) against a committed
+//! `BENCH_baseline.json` and fails (exit 1) when any case's mean
+//! regresses by more than the allowed ratio (default 1.25 = +25%).
+//!
+//! ```text
+//! cargo run --release --bin bench_guard -- \
+//!     BENCH_baseline.json BENCH_hotpath.json --max-regress 1.25
+//! ```
+//!
+//! A missing baseline is not a failure: the guard prints a seeding notice
+//! and exits 0, and the CI workflow commits the fresh results as the
+//! first baseline. Cases present on only one side are reported but never
+//! fail the run (benches evolve; the guard only judges shared cases).
+
+use acetone::util::json::Json;
+use std::process::ExitCode;
+
+/// Comparison verdict for one shared bench case.
+#[derive(Debug, Clone, PartialEq)]
+struct CaseCmp {
+    name: String,
+    base_mean_ns: f64,
+    fresh_mean_ns: f64,
+    /// fresh / base (>1 = slower than baseline).
+    ratio: f64,
+    regressed: bool,
+}
+
+/// Extract `name → mean_ns` from a bench report (`{"bench":…, "cases":[…]}`).
+fn case_means(report: &Json) -> Result<Vec<(String, f64)>, String> {
+    let cases = report
+        .get("cases")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "report has no 'cases' array".to_string())?;
+    let mut out = Vec::with_capacity(cases.len());
+    for c in cases {
+        let name = c
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "case without 'name'".to_string())?;
+        let mean = c
+            .get("mean_ns")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("case '{name}' without numeric 'mean_ns'"))?;
+        out.push((name.to_string(), mean));
+    }
+    Ok(out)
+}
+
+/// Compare shared cases; `max_ratio` is the allowed fresh/base mean ratio.
+fn compare(baseline: &Json, fresh: &Json, max_ratio: f64) -> Result<Vec<CaseCmp>, String> {
+    let base = case_means(baseline)?;
+    let new = case_means(fresh)?;
+    let mut out = Vec::new();
+    for (name, fresh_mean) in &new {
+        if let Some((_, base_mean)) = base.iter().find(|(n, _)| n == name) {
+            // A zero-mean baseline case can only happen on a clock bug;
+            // treat it as incomparable rather than dividing by zero.
+            let ratio = if *base_mean > 0.0 { fresh_mean / base_mean } else { 1.0 };
+            out.push(CaseCmp {
+                name: name.clone(),
+                base_mean_ns: *base_mean,
+                fresh_mean_ns: *fresh_mean,
+                ratio,
+                regressed: ratio > max_ratio,
+            });
+        }
+    }
+    Ok(out)
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.2}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.2}µs", ns / 1e3)
+    } else {
+        format!("{ns:.0}ns")
+    }
+}
+
+fn run(baseline_path: &str, fresh_path: &str, max_ratio: f64) -> Result<bool, String> {
+    if !std::path::Path::new(baseline_path).exists() {
+        println!(
+            "bench_guard: no baseline at {baseline_path} — nothing to compare.\n\
+             Seed it by committing the fresh results:\n    cp {fresh_path} {baseline_path}"
+        );
+        return Ok(true);
+    }
+    let base_text = std::fs::read_to_string(baseline_path)
+        .map_err(|e| format!("read {baseline_path}: {e}"))?;
+    let fresh_text = std::fs::read_to_string(fresh_path)
+        .map_err(|e| format!("read {fresh_path}: {e}"))?;
+    let baseline = Json::parse(&base_text).map_err(|e| format!("parse {baseline_path}: {e}"))?;
+    let fresh = Json::parse(&fresh_text).map_err(|e| format!("parse {fresh_path}: {e}"))?;
+    let cmps = compare(&baseline, &fresh, max_ratio)?;
+    if cmps.is_empty() {
+        return Err("no shared cases between baseline and fresh report".to_string());
+    }
+    println!(
+        "bench_guard: {} shared case(s), fail threshold mean > {:.0}% of baseline\n",
+        cmps.len(),
+        max_ratio * 100.0
+    );
+    let mut ok = true;
+    for c in &cmps {
+        let verdict = if c.regressed { "REGRESSED" } else { "ok" };
+        println!(
+            "  {:<44} base={:>10} fresh={:>10} ratio={:>5.2} {}",
+            c.name,
+            fmt_ns(c.base_mean_ns),
+            fmt_ns(c.fresh_mean_ns),
+            c.ratio,
+            verdict
+        );
+        ok &= !c.regressed;
+    }
+    let fresh_names = case_means(&fresh)?;
+    for (name, _) in case_means(&baseline)? {
+        if !fresh_names.iter().any(|(n, _)| *n == name) {
+            println!("  note: baseline case '{name}' missing from fresh run");
+        }
+    }
+    for (name, _) in &fresh_names {
+        if !cmps.iter().any(|c| &c.name == name) {
+            println!("  note: new case '{name}' has no baseline yet");
+        }
+    }
+    Ok(ok)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut paths = Vec::new();
+    let mut max_ratio = 1.25f64;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--max-regress" {
+            match args.get(i + 1).and_then(|s| s.parse::<f64>().ok()) {
+                Some(r) if r > 0.0 => max_ratio = r,
+                _ => {
+                    eprintln!("bench_guard: --max-regress needs a positive number");
+                    return ExitCode::from(2);
+                }
+            }
+            i += 2;
+        } else {
+            paths.push(args[i].clone());
+            i += 1;
+        }
+    }
+    if paths.len() != 2 {
+        eprintln!("usage: bench_guard <baseline.json> <fresh.json> [--max-regress 1.25]");
+        return ExitCode::from(2);
+    }
+    match run(&paths[0], &paths[1], max_ratio) {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => {
+            eprintln!("\nbench_guard: FAIL — at least one case regressed past the threshold");
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("bench_guard: error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(cases: &[(&str, f64)]) -> Json {
+        Json::obj(vec![
+            ("bench", Json::Str("hotpath".into())),
+            (
+                "cases",
+                Json::Arr(
+                    cases
+                        .iter()
+                        .map(|(n, m)| {
+                            Json::obj(vec![
+                                ("name", Json::Str((*n).into())),
+                                ("mean_ns", Json::Num(*m)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    #[test]
+    fn flags_only_cases_past_threshold() {
+        let base = report(&[("a", 100.0), ("b", 100.0), ("c", 100.0)]);
+        let fresh = report(&[("a", 120.0), ("b", 130.0), ("c", 90.0)]);
+        let cmps = compare(&base, &fresh, 1.25).expect("comparable");
+        assert_eq!(cmps.len(), 3);
+        assert!(!cmps[0].regressed, "20% is under the 25% threshold");
+        assert!(cmps[1].regressed, "30% is over");
+        assert!(!cmps[2].regressed, "improvements never fail");
+    }
+
+    #[test]
+    fn unshared_cases_are_ignored() {
+        let base = report(&[("gone", 100.0), ("kept", 100.0)]);
+        let fresh = report(&[("kept", 100.0), ("new", 5000.0)]);
+        let cmps = compare(&base, &fresh, 1.25).expect("comparable");
+        assert_eq!(cmps.len(), 1);
+        assert_eq!(cmps[0].name, "kept");
+        assert!(!cmps[0].regressed);
+    }
+
+    #[test]
+    fn zero_baseline_mean_is_incomparable_not_a_crash() {
+        let base = report(&[("a", 0.0)]);
+        let fresh = report(&[("a", 50.0)]);
+        let cmps = compare(&base, &fresh, 1.25).expect("comparable");
+        assert!(!cmps[0].regressed);
+        assert_eq!(cmps[0].ratio, 1.0);
+    }
+
+    #[test]
+    fn malformed_reports_error_cleanly() {
+        let no_cases = Json::obj(vec![("bench", Json::Str("x".into()))]);
+        assert!(compare(&no_cases, &no_cases, 1.25).is_err());
+        let bad_case = Json::obj(vec![(
+            "cases",
+            Json::Arr(vec![Json::obj(vec![("name", Json::Str("a".into()))])]),
+        )]);
+        assert!(compare(&bad_case, &bad_case, 1.25).is_err());
+    }
+
+    #[test]
+    fn real_bench_report_round_trips_through_guard() {
+        // The guard must accept exactly what util::bench emits.
+        use acetone::util::bench::{bench, json_report};
+        let s = bench("case-a", 1, 5, || 2 + 2);
+        let text = json_report("hotpath", &[s]);
+        let doc = Json::parse(&text).expect("valid JSON");
+        let cmps = compare(&doc, &doc, 1.25).expect("self-compare");
+        assert_eq!(cmps.len(), 1);
+        assert!(!cmps[0].regressed, "a report never regresses against itself");
+    }
+}

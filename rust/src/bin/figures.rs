@@ -150,6 +150,7 @@ fn fig8(quick: bool) {
                     encoding: Encoding::Improved,
                     timeout,
                     warm_start: None,
+                    node_limit: None,
                 });
                 let out = solver.solve(g, m);
                 speedups.push(out.result.schedule.speedup(g));
@@ -199,6 +200,7 @@ fn tang_vs_improved(quick: bool) {
                     encoding: enc,
                     timeout,
                     warm_start: None,
+                    node_limit: None,
                 })
                 .solve(g, m);
                 found += out.found_solution as usize;
@@ -719,6 +721,7 @@ fn hybrid_cmp(quick: bool) {
                 encoding: Encoding::Improved,
                 timeout: budget,
                 warm_start: None,
+                node_limit: None,
             })),
             Box::new(Hybrid { cp_timeout: budget }),
         ];

@@ -94,7 +94,7 @@ fn solver_by_name(name: &str, timeout: Duration) -> Result<Box<dyn Scheduler>> {
         "dsh" => Box::new(Dsh),
         "cp" | "improved" => Box::new(CpSolver::new(CpConfig::improved(timeout))),
         "tang" => Box::new(CpSolver::new(CpConfig::tang(timeout))),
-        "bnb" => Box::new(ChouChung { timeout }),
+        "bnb" => Box::new(ChouChung { timeout, node_limit: None }),
         "hybrid" => Box::new(Hybrid { cp_timeout: timeout }),
         other => bail!("unknown algo {other} (ish|dsh|cp|tang|bnb|hybrid)"),
     })

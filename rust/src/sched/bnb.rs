@@ -13,7 +13,19 @@
 //! Like Chou & Chung's original model, this solver does **not** duplicate
 //! nodes: it finds the optimal *duplication-free* schedule. Empty cores are
 //! interchangeable, so a node is tried on at most one idle core.
+//!
+//! The expansion loop is trail-based: a placement mutates one shared
+//! [`PartialState`] and is undone on backtrack (no clone per expansion),
+//! and the lower bound is maintained **incrementally** — placing `v`
+//! folds `est[c] + level(c)` in for each child `c` and the new finish
+//! time, which provably equals the former full re-scan
+//! (`max(makespan, max over unscheduled v of est(v) + level(v))`)
+//! because levels carry no communication terms: a scheduled node's
+//! stale term is always dominated by a child term or the makespan.
+//! The pre-trail clone-per-expansion search is preserved as
+//! [`ChouChung::schedule_reference`], the differential-testing oracle.
 
+use super::trail::{BnbOp, Mark, Trail};
 use super::{Schedule, Scheduler, SolveResult};
 use crate::graph::{static_levels, Cycles, Dag, NodeId};
 use std::collections::{HashMap, HashSet};
@@ -23,11 +35,14 @@ use std::time::{Duration, Instant};
 #[derive(Debug, Clone)]
 pub struct ChouChung {
     pub timeout: Duration,
+    /// Optional deterministic cap on explored S-nodes (reproducible
+    /// anytime runs for the differential tests and the bench guard).
+    pub node_limit: Option<u64>,
 }
 
 impl Default for ChouChung {
     fn default() -> Self {
-        Self { timeout: Duration::from_secs(60) }
+        Self { timeout: Duration::from_secs(60), node_limit: None }
     }
 }
 
@@ -44,6 +59,105 @@ struct PartialState {
     scheduled: u32,
     makespan: Cycles,
     placements: Vec<(NodeId, usize, Cycles)>,
+    /// Earliest start per node: max finish over its *scheduled* parents.
+    /// Maintained incrementally (trailed) when a parent is placed.
+    est: Vec<Cycles>,
+    /// Incremental lower bound — equal to the full re-scan at every
+    /// S-node (see the module docs); `debug_assert`ed against it.
+    lb: Cycles,
+    /// Undo log for the trail-based expansion loop.
+    trail: Trail<BnbOp>,
+}
+
+impl PartialState {
+    fn root(g: &Dag, m: usize, levels: &[Cycles]) -> Self {
+        Self {
+            core: vec![usize::MAX; g.n()],
+            finish: vec![0; g.n()],
+            avail: vec![0; m],
+            core_used: vec![false; m],
+            pending_parents: (0..g.n()).map(|v| g.parents(v).len()).collect(),
+            scheduled: 0,
+            makespan: 0,
+            placements: Vec::new(),
+            est: vec![0; g.n()],
+            // At the root every node is unscheduled with est 0, so the
+            // scan collapses to the longest static level.
+            lb: levels.iter().copied().max().unwrap_or(0),
+            trail: Trail::new(),
+        }
+    }
+
+    /// Place `v` on `p`, recording every clobbered scalar on the trail.
+    /// O(out-degree of `v`) — this is the whole per-branch cost.
+    fn apply_place(
+        &mut self,
+        g: &Dag,
+        levels: &[Cycles],
+        v: NodeId,
+        p: usize,
+        start: Cycles,
+        fin: Cycles,
+    ) {
+        self.trail.push(BnbOp::Place {
+            node: v as u32,
+            core: p as u32,
+            prev_avail: self.avail[p],
+            prev_used: self.core_used[p],
+            prev_makespan: self.makespan,
+            prev_scheduled: self.scheduled,
+            prev_lb: self.lb,
+        });
+        self.core[v] = p;
+        self.finish[v] = fin;
+        self.avail[p] = fin;
+        self.core_used[p] = true;
+        self.scheduled |= 1 << (v % 32); // coarse; sig handles the rest
+        self.makespan = self.makespan.max(fin);
+        self.lb = self.lb.max(fin);
+        self.placements.push((v, p, start));
+        for &(c, _) in g.children(v) {
+            self.pending_parents[c] -= 1;
+            if self.est[c] < fin {
+                self.trail.push(BnbOp::Est { node: c as u32, prev: self.est[c] });
+                self.est[c] = fin;
+            }
+            self.lb = self.lb.max(self.est[c] + levels[c]);
+        }
+    }
+
+    /// Undo every trailed write back to `mark` (the inverse of exactly one
+    /// `apply_place` in this solver's discipline).
+    fn undo_to(&mut self, g: &Dag, mark: Mark) {
+        while self.trail.above(mark) {
+            match self.trail.pop().expect("trail entries above mark") {
+                BnbOp::Est { node, prev } => self.est[node as usize] = prev,
+                BnbOp::Place {
+                    node,
+                    core,
+                    prev_avail,
+                    prev_used,
+                    prev_makespan,
+                    prev_scheduled,
+                    prev_lb,
+                } => {
+                    let v = node as usize;
+                    let p = core as usize;
+                    self.core[v] = usize::MAX;
+                    self.finish[v] = 0;
+                    self.avail[p] = prev_avail;
+                    self.core_used[p] = prev_used;
+                    self.makespan = prev_makespan;
+                    self.scheduled = prev_scheduled;
+                    self.lb = prev_lb;
+                    self.placements.pop();
+                    for &(c, _) in g.children(v) {
+                        self.pending_parents[c] += 1;
+                    }
+                }
+            }
+        }
+    }
 }
 
 struct Ctx<'g> {
@@ -54,14 +168,42 @@ struct Ctx<'g> {
     /// and child sets and equal WCET.
     eq_leader: Vec<NodeId>,
     deadline: Instant,
+    node_limit: Option<u64>,
 }
 
-impl Scheduler for ChouChung {
-    fn name(&self) -> &'static str {
-        "BnB-ChouChung"
+/// Mutable search bookkeeping shared by both DFS variants.
+struct SearchState {
+    best: Schedule,
+    best_ms: Cycles,
+    seen: HashMap<u64, HashSet<u64>>,
+    explored: u64,
+    timed_out: bool,
+    budget_out: bool,
+}
+
+impl SearchState {
+    fn stopped(&self) -> bool {
+        self.timed_out || self.budget_out
     }
 
-    fn schedule(&self, g: &Dag, m: usize) -> SolveResult {
+    /// Count the node and fire the stop conditions; false = unwind.
+    fn enter_node(&mut self, ctx: &Ctx<'_>) -> bool {
+        self.explored += 1;
+        if let Some(limit) = ctx.node_limit {
+            if self.explored > limit {
+                self.budget_out = true;
+                return false;
+            }
+        }
+        if self.explored % 512 == 0 && Instant::now() >= ctx.deadline {
+            self.timed_out = true;
+        }
+        !self.stopped()
+    }
+}
+
+impl ChouChung {
+    fn run(&self, g: &Dag, m: usize, reference: bool) -> SolveResult {
         let t0 = Instant::now();
         let levels = static_levels(g);
         let eq_leader = equivalence_leaders(g);
@@ -71,6 +213,7 @@ impl Scheduler for ChouChung {
             levels,
             eq_leader,
             deadline: t0 + self.timeout,
+            node_limit: self.node_limit,
         };
         // Seed: serial schedule.
         let mut best = Schedule::new(m);
@@ -79,36 +222,45 @@ impl Scheduler for ChouChung {
             best.place(g, v, 0, t);
             t += g.wcet(v);
         }
-        let mut best_ms = best.makespan();
-
-        let root = PartialState {
-            core: vec![usize::MAX; g.n()],
-            finish: vec![0; g.n()],
-            avail: vec![0; m],
-            core_used: vec![false; m],
-            pending_parents: (0..g.n()).map(|v| g.parents(v).len()).collect(),
-            scheduled: 0,
-            makespan: 0,
-            placements: Vec::new(),
+        let best_ms = best.makespan();
+        let mut search = SearchState {
+            best,
+            best_ms,
+            seen: HashMap::new(),
+            explored: 0,
+            timed_out: false,
+            budget_out: false,
         };
-        let mut seen: HashMap<u64, HashSet<u64>> = HashMap::new();
-        let mut explored = 0u64;
-        let mut timed_out = false;
-        dfs(
-            &ctx,
-            root,
-            &mut best,
-            &mut best_ms,
-            &mut seen,
-            &mut explored,
-            &mut timed_out,
-        );
-        SolveResult {
-            schedule: best,
-            optimal: !timed_out,
-            solve_time: t0.elapsed(),
-            explored,
+        let mut root = PartialState::root(g, m, &ctx.levels);
+        if reference {
+            dfs_reference(&ctx, root, &mut search);
+        } else {
+            dfs(&ctx, &mut root, &mut search);
         }
+        SolveResult {
+            schedule: search.best,
+            optimal: !search.timed_out && !search.budget_out,
+            solve_time: t0.elapsed(),
+            explored: search.explored,
+        }
+    }
+
+    /// Clone-per-expansion reference search with the full lower-bound
+    /// re-scan: byte-for-byte the pre-trail implementation, kept as the
+    /// oracle for the differential parity tests.
+    #[doc(hidden)]
+    pub fn schedule_reference(&self, g: &Dag, m: usize) -> SolveResult {
+        self.run(g, m, true)
+    }
+}
+
+impl Scheduler for ChouChung {
+    fn name(&self) -> &'static str {
+        "BnB-ChouChung"
+    }
+
+    fn schedule(&self, g: &Dag, m: usize) -> SolveResult {
+        self.run(g, m, false)
     }
 }
 
@@ -128,39 +280,14 @@ fn equivalence_leaders(g: &Dag) -> Vec<NodeId> {
         .collect()
 }
 
-fn dfs(
-    ctx: &Ctx<'_>,
-    st: PartialState,
-    best: &mut Schedule,
-    best_ms: &mut Cycles,
-    seen: &mut HashMap<u64, HashSet<u64>>,
-    explored: &mut u64,
-    timed_out: &mut bool,
-) {
-    *explored += 1;
-    if *explored % 512 == 0 && Instant::now() >= ctx.deadline {
-        *timed_out = true;
-    }
-    if *timed_out {
-        return;
-    }
+/// The full lower-bound re-scan the incremental `st.lb` replaces: any
+/// unscheduled node still needs its level below it, and cannot start
+/// before its latest scheduled parent's finish. Used by the reference
+/// search and as the `debug_assert` witness in the trail search.
+fn scan_lower_bound(ctx: &Ctx<'_>, st: &PartialState) -> Cycles {
     let g = ctx.g;
-    let n = g.n();
-    if st.placements.len() == n {
-        if st.makespan < *best_ms {
-            *best_ms = st.makespan;
-            let mut sched = Schedule::new(ctx.m);
-            for &(v, c, s) in &st.placements {
-                sched.place(g, v, c, s);
-            }
-            *best = sched;
-        }
-        return;
-    }
-    // Lower bound: any unscheduled node still needs its level below it, and
-    // cannot start before its latest scheduled parent's finish.
     let mut lb = st.makespan;
-    for v in 0..n {
+    for v in 0..g.n() {
         if st.core[v] == usize::MAX {
             let est = g
                 .parents(v)
@@ -172,19 +299,14 @@ fn dfs(
             lb = lb.max(est + ctx.levels[v]);
         }
     }
-    if lb >= *best_ms {
-        return;
-    }
-    // State-dominance memoization on the canonical signature.
-    let sig = signature(ctx, &st);
-    let entry = seen.entry(st.scheduled as u64).or_default();
-    if !entry.insert(sig) {
-        return; // an equivalent S-node was already expanded
-    }
+    lb
+}
 
-    // Ready nodes, with equivalence symmetry breaking: among unscheduled
-    // equivalent nodes only the leader (smallest id) is expandable now.
-    let ready: Vec<NodeId> = (0..n)
+/// Ready nodes under equivalence symmetry breaking, ordered by level
+/// (highest first) for good first dives. Shared by both DFS variants.
+fn ready_nodes(ctx: &Ctx<'_>, st: &PartialState) -> Vec<NodeId> {
+    let n = ctx.g.n();
+    let mut ready: Vec<NodeId> = (0..n)
         .filter(|&v| st.core[v] == usize::MAX && st.pending_parents[v] == 0)
         .filter(|&v| {
             let l = ctx.eq_leader[v];
@@ -195,11 +317,49 @@ fn dfs(
             }
         })
         .collect();
-    // Order by level (highest first) for good first dives.
-    let mut ready = ready;
     ready.sort_by_key(|&v| std::cmp::Reverse(ctx.levels[v]));
+    ready
+}
 
-    for &v in &ready {
+/// Leaf/dominance prologue shared by both DFS variants. Returns false
+/// when the node is a leaf, bound-pruned or dominance-pruned (the caller
+/// backtracks immediately).
+fn expandable(ctx: &Ctx<'_>, st: &PartialState, search: &mut SearchState) -> bool {
+    let g = ctx.g;
+    if st.placements.len() == g.n() {
+        if st.makespan < search.best_ms {
+            search.best_ms = st.makespan;
+            let mut sched = Schedule::new(ctx.m);
+            for &(v, c, s) in &st.placements {
+                sched.place(g, v, c, s);
+            }
+            search.best = sched;
+        }
+        return false;
+    }
+    // Lower bound pruning — st.lb is maintained incrementally and must
+    // equal the full re-scan at every S-node.
+    debug_assert_eq!(st.lb, scan_lower_bound(ctx, st), "incremental lb diverged");
+    if st.lb >= search.best_ms {
+        return false;
+    }
+    // State-dominance memoization on the canonical signature.
+    let sig = signature(ctx, st);
+    let entry = search.seen.entry(st.scheduled as u64).or_default();
+    entry.insert(sig)
+}
+
+/// Trail-based DFS: expansions mutate one shared `PartialState` and undo
+/// to a mark on backtrack — no clone per expansion.
+fn dfs(ctx: &Ctx<'_>, st: &mut PartialState, search: &mut SearchState) {
+    if !search.enter_node(ctx) {
+        return;
+    }
+    let g = ctx.g;
+    if !expandable(ctx, st, search) {
+        return;
+    }
+    for &v in &ready_nodes(ctx, st) {
         let mut tried_idle = false;
         for p in 0..ctx.m {
             let idle = st.avail[p] == 0 && !st.core_used[p];
@@ -212,29 +372,62 @@ fn dfs(
             let data = g
                 .parents(v)
                 .iter()
-                .map(|&(u, w)| {
-                    st.finish[u] + if st.core[u] == p { 0 } else { w }
-                })
+                .map(|&(u, w)| st.finish[u] + if st.core[u] == p { 0 } else { w })
                 .max()
                 .unwrap_or(0);
             let start = st.avail[p].max(data);
             let fin = start + g.wcet(v);
-            if fin.max(st.makespan) >= *best_ms {
+            if fin.max(st.makespan) >= search.best_ms {
+                continue;
+            }
+            let mark = st.trail.mark();
+            st.apply_place(g, &ctx.levels, v, p, start, fin);
+            dfs(ctx, st, search);
+            st.undo_to(g, mark);
+            if search.stopped() {
+                return;
+            }
+        }
+    }
+}
+
+/// Pre-trail reference DFS: clones `PartialState` per expansion and
+/// re-scans the lower bound (inside `expandable`'s debug assert the two
+/// agree; here the clone path exercises the same shared prologue).
+fn dfs_reference(ctx: &Ctx<'_>, st: PartialState, search: &mut SearchState) {
+    if !search.enter_node(ctx) {
+        return;
+    }
+    let g = ctx.g;
+    if !expandable(ctx, &st, search) {
+        return;
+    }
+    for &v in &ready_nodes(ctx, &st) {
+        let mut tried_idle = false;
+        for p in 0..ctx.m {
+            let idle = st.avail[p] == 0 && !st.core_used[p];
+            if idle {
+                if tried_idle {
+                    continue;
+                }
+                tried_idle = true;
+            }
+            let data = g
+                .parents(v)
+                .iter()
+                .map(|&(u, w)| st.finish[u] + if st.core[u] == p { 0 } else { w })
+                .max()
+                .unwrap_or(0);
+            let start = st.avail[p].max(data);
+            let fin = start + g.wcet(v);
+            if fin.max(st.makespan) >= search.best_ms {
                 continue;
             }
             let mut child = st.clone();
-            child.core[v] = p;
-            child.finish[v] = fin;
-            child.avail[p] = fin;
-            child.core_used[p] = true;
-            child.scheduled |= 1 << (v % 32); // coarse; sig handles the rest
-            child.makespan = child.makespan.max(fin);
-            child.placements.push((v, p, start));
-            for &(c, _) in g.children(v) {
-                child.pending_parents[c] -= 1;
-            }
-            dfs(ctx, child, best, best_ms, seen, explored, timed_out);
-            if *timed_out {
+            child.trail.clear();
+            child.apply_place(g, &ctx.levels, v, p, start, fin);
+            dfs_reference(ctx, child, search);
+            if search.stopped() {
                 return;
             }
         }
@@ -322,10 +515,27 @@ mod tests {
         let g = paper_example_dag();
         for m in 2..=3 {
             let ish = Ish.schedule(&g, m).schedule.makespan();
-            let r = ChouChung::default().schedule(&g, m);
+            let r = ChouChung { timeout: Duration::from_secs(20), node_limit: None }
+                .schedule(&g, m);
             assert!(r.optimal, "m={m} should finish in time");
             assert!(r.schedule.makespan() <= ish, "m={m}");
         }
+    }
+
+    #[test]
+    fn node_limit_caps_exploration_deterministically() {
+        let g = crate::daggen::generate(&crate::daggen::DagGenConfig::paper(30), 4);
+        let solver = ChouChung {
+            timeout: Duration::from_secs(3600),
+            node_limit: Some(2000),
+        };
+        let a = solver.schedule(&g, 4);
+        let b = solver.schedule(&g, 4);
+        assert!(!a.optimal, "budget cut must not claim optimality");
+        assert_eq!(a.explored, 2001, "stops right after the budget");
+        assert_eq!(a.explored, b.explored);
+        assert_eq!(a.schedule.makespan(), b.schedule.makespan());
+        assert_eq!(check_valid(&g, &a.schedule), Ok(()));
     }
 
     #[test]

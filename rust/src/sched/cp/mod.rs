@@ -20,6 +20,12 @@
 //! critical-path-based lower bound for pruning. A wall-clock timeout makes
 //! the solver *anytime*: on expiry it returns the best schedule found so
 //! far with `optimal = false`, mirroring CP Optimizer's behaviour in §4.3.
+//!
+//! The DFS branches on **one shared [`State`] with a trail**: a decision
+//! takes a mark, mutates, recurses, and undoes to the mark — O(changes)
+//! per branch. The former clone-per-branch search is preserved verbatim
+//! as [`CpSolver::solve_reference`], the oracle for the differential
+//! parity tests (`tests/trail_search_parity.rs`).
 
 mod state;
 
@@ -39,14 +45,19 @@ pub struct CpConfig {
     /// Optional warm-start schedule (§4.3's suggested hybrid): its makespan
     /// seeds the incumbent so the solver only explores improvements.
     pub warm_start: Option<Schedule>,
+    /// Optional deterministic cap on explored search nodes. Unlike the
+    /// wall-clock timeout, a node budget makes anytime runs exactly
+    /// reproducible — the differential tests and the bench guard rely on
+    /// it. `None` leaves the search bounded by `timeout` alone.
+    pub node_limit: Option<u64>,
 }
 
 impl CpConfig {
     pub fn improved(timeout: Duration) -> Self {
-        Self { encoding: Encoding::Improved, timeout, warm_start: None }
+        Self { encoding: Encoding::Improved, timeout, warm_start: None, node_limit: None }
     }
     pub fn tang(timeout: Duration) -> Self {
-        Self { encoding: Encoding::Tang, timeout, warm_start: None }
+        Self { encoding: Encoding::Tang, timeout, warm_start: None, node_limit: None }
     }
 }
 
@@ -65,6 +76,20 @@ impl CpSolver {
     /// (proving optimality) and whether any leaf beyond the warm start was
     /// reached ("found a solution" in the §4.3 sense).
     pub fn solve(&self, g: &Dag, m: usize) -> CpOutcome {
+        self.run(g, m, false)
+    }
+
+    /// Clone-per-branch reference search: byte-for-byte the pre-trail
+    /// implementation, kept as the oracle for the differential parity
+    /// tests. Explores the identical tree in the identical order as
+    /// [`CpSolver::solve`], so makespans, placements and explored counts
+    /// must match exactly.
+    #[doc(hidden)]
+    pub fn solve_reference(&self, g: &Dag, m: usize) -> CpOutcome {
+        self.run(g, m, true)
+    }
+
+    fn run(&self, g: &Dag, m: usize, reference: bool) -> CpOutcome {
         let t0 = Instant::now();
         let deadline = t0 + self.cfg.timeout;
         let sink = g
@@ -88,19 +113,24 @@ impl CpSolver {
             levels: &levels,
             encoding: self.cfg.encoding,
             deadline,
+            node_limit: self.cfg.node_limit,
             explored: 0,
             timed_out: false,
+            budget_out: false,
             best_ms: &mut best_ms,
             best: &mut best,
             found_leaf: &mut found_leaf,
         };
-        let root = State::root(g, m, sink, self.cfg.encoding);
         let exhausted = if *search.best_ms <= cp_lb {
             true // warm start already matches the absolute lower bound
+        } else if reference {
+            let root = State::root(g, m, sink, self.cfg.encoding);
+            search.dfs_reference(root)
         } else {
-            search.dfs(root)
+            let mut root = State::root(g, m, sink, self.cfg.encoding);
+            search.dfs(&mut root)
         };
-        let optimal = exhausted && !search.timed_out;
+        let optimal = exhausted && !search.timed_out && !search.budget_out;
         let explored = search.explored;
         CpOutcome {
             result: SolveResult {
@@ -153,25 +183,61 @@ struct Search<'a> {
     levels: &'a [Cycles],
     encoding: Encoding,
     deadline: Instant,
+    node_limit: Option<u64>,
     explored: u64,
     timed_out: bool,
+    budget_out: bool,
     best_ms: &'a mut Cycles,
     best: &'a mut Schedule,
     found_leaf: &'a mut bool,
 }
 
 impl<'a> Search<'a> {
-    /// Returns true if the subtree was fully explored (no timeout cut).
-    fn dfs(&mut self, mut st: State) -> bool {
+    /// True once either stop condition fired; the search unwinds.
+    fn stopped(&self) -> bool {
+        self.timed_out || self.budget_out
+    }
+
+    /// Shared prologue of both searches: count the node, fire the stop
+    /// conditions. Returns false when the search must unwind.
+    fn enter_node(&mut self) -> bool {
         self.explored += 1;
+        if let Some(limit) = self.node_limit {
+            if self.explored > limit {
+                self.budget_out = true;
+                return false;
+            }
+        }
         if self.explored % 256 == 0 && Instant::now() >= self.deadline {
             self.timed_out = true;
             return false;
         }
-        if self.timed_out {
+        !self.stopped()
+    }
+
+    /// Shared leaf handling: prune duplicates, validate, update incumbent.
+    fn offer_incumbent(&mut self, mut sched: Schedule) {
+        prune_redundant(self.g, &mut sched);
+        if check_valid(self.g, &sched).is_ok() {
+            *self.found_leaf = true;
+            let ms = sched.makespan();
+            if ms < *self.best_ms {
+                *self.best_ms = ms;
+                *self.best = sched;
+            }
+        }
+    }
+
+    /// Trail-based DFS: branches mutate `st` in place and undo to a mark
+    /// on backtrack — no `State` clone anywhere in the loop. Returns true
+    /// if the subtree was fully explored (no timeout/budget cut).
+    fn dfs(&mut self, st: &mut State) -> bool {
+        if !self.enter_node() {
             return false;
         }
-        // Propagate to fixpoint under the current incumbent bound.
+        // Propagate to fixpoint under the current incumbent bound. All
+        // prunings are trailed, so the caller's undo removes them even on
+        // the infeasible path.
         if !st.propagate(self.g, self.m, self.levels, self.encoding, *self.best_ms) {
             return true; // infeasible or dominated: pruned subtree, fully explored
         }
@@ -183,11 +249,12 @@ impl<'a> Search<'a> {
         if let Some((var, first)) = st.pick_branch(self.g, self.m, self.encoding) {
             let mut complete = true;
             for val in [first, 1 - first] {
-                let mut child = st.clone();
-                if child.assign(var, val) {
-                    complete &= self.dfs(child);
+                let mark = st.mark();
+                if st.assign(var, val) {
+                    complete &= self.dfs(st);
                 }
-                if self.timed_out {
+                st.undo_to(mark);
+                if self.stopped() {
                     return false;
                 }
             }
@@ -197,16 +264,7 @@ impl<'a> Search<'a> {
         // sequence this assignment into a feasible incumbent — the exact
         // order-branching below then searches only for improvements.
         if st.is_assignment_complete() {
-            let mut sched = st.greedy_complete(self.g, self.m, self.levels);
-            prune_redundant(self.g, &mut sched);
-            if check_valid(self.g, &sched).is_ok() {
-                *self.found_leaf = true;
-                let ms = sched.makespan();
-                if ms < *self.best_ms {
-                    *self.best_ms = ms;
-                    *self.best = sched;
-                }
-            }
+            self.offer_incumbent(st.greedy_complete(self.g, self.m, self.levels));
             if st.lower_bound(self.g, self.m, self.levels) >= *self.best_ms {
                 return true; // the heuristic already matched the bound here
             }
@@ -215,26 +273,68 @@ impl<'a> Search<'a> {
         if let Some((core, a, b)) = st.pick_overlap(self.g, self.m) {
             let mut complete = true;
             for &(x, y) in &[(a, b), (b, a)] {
-                let mut child = st.clone();
-                child.add_order(core, x, y);
-                complete &= self.dfs(child);
-                if self.timed_out {
+                let mark = st.mark();
+                st.add_order(core, x, y);
+                complete &= self.dfs(st);
+                st.undo_to(mark);
+                if self.stopped() {
                     return false;
                 }
             }
             return complete;
         }
         // Leaf: left-shift every assigned instance to its lower bound.
-        let mut sched = st.extract(self.g, self.m);
-        prune_redundant(self.g, &mut sched);
-        if check_valid(self.g, &sched).is_ok() {
-            *self.found_leaf = true;
-            let ms = sched.makespan();
-            if ms < *self.best_ms {
-                *self.best_ms = ms;
-                *self.best = sched;
+        self.offer_incumbent(st.extract(self.g, self.m));
+        true
+    }
+
+    /// Pre-trail reference search: clones the whole `State` per branch.
+    /// Must remain semantically identical to [`Search::dfs`] — it exists
+    /// only as the differential oracle.
+    fn dfs_reference(&mut self, mut st: State) -> bool {
+        if !self.enter_node() {
+            return false;
+        }
+        if !st.propagate(self.g, self.m, self.levels, self.encoding, *self.best_ms) {
+            return true;
+        }
+        if st.lower_bound(self.g, self.m, self.levels) >= *self.best_ms {
+            return true;
+        }
+        if let Some((var, first)) = st.pick_branch(self.g, self.m, self.encoding) {
+            let mut complete = true;
+            for val in [first, 1 - first] {
+                let mut child = st.clone();
+                child.reset_trail();
+                if child.assign(var, val) {
+                    complete &= self.dfs_reference(child);
+                }
+                if self.stopped() {
+                    return false;
+                }
+            }
+            return complete;
+        }
+        if st.is_assignment_complete() {
+            self.offer_incumbent(st.greedy_complete(self.g, self.m, self.levels));
+            if st.lower_bound(self.g, self.m, self.levels) >= *self.best_ms {
+                return true;
             }
         }
+        if let Some((core, a, b)) = st.pick_overlap(self.g, self.m) {
+            let mut complete = true;
+            for &(x, y) in &[(a, b), (b, a)] {
+                let mut child = st.clone();
+                child.reset_trail();
+                child.add_order(core, x, y);
+                complete &= self.dfs_reference(child);
+                if self.stopped() {
+                    return false;
+                }
+            }
+            return complete;
+        }
+        self.offer_incumbent(st.extract(self.g, self.m));
         true
     }
 }
@@ -251,6 +351,7 @@ mod tests {
             encoding: enc,
             timeout: Duration::from_secs(secs),
             warm_start: None,
+            node_limit: None,
         };
         CpSolver::new(cfg).solve(g, m)
     }
@@ -358,11 +459,31 @@ mod tests {
             encoding: Encoding::Improved,
             timeout: Duration::from_millis(200),
             warm_start: None,
+            node_limit: None,
         };
         let out = CpSolver::new(cfg).solve(&g, 4);
         // Whatever happened, we must hold a valid schedule.
         assert!(check_valid(&g, &out.result.schedule).is_ok());
         assert!(out.result.schedule.makespan() <= g.total_wcet());
+    }
+
+    #[test]
+    fn node_limit_caps_exploration_deterministically() {
+        let mut g = crate::daggen::generate(&crate::daggen::DagGenConfig::paper(20), 5);
+        ensure_single_sink(&mut g);
+        let cfg = CpConfig {
+            encoding: Encoding::Improved,
+            timeout: Duration::from_secs(3600),
+            warm_start: None,
+            node_limit: Some(500),
+        };
+        let a = CpSolver::new(cfg.clone()).solve(&g, 4);
+        let b = CpSolver::new(cfg).solve(&g, 4);
+        assert!(!a.result.optimal, "budget cut must not claim optimality");
+        assert_eq!(a.result.explored, 501, "stops right after the budget");
+        assert_eq!(a.result.explored, b.result.explored);
+        assert_eq!(a.result.schedule.makespan(), b.result.schedule.makespan());
+        assert!(check_valid(&g, &a.result.schedule).is_ok());
     }
 
     #[test]
@@ -375,6 +496,7 @@ mod tests {
             encoding: Encoding::Improved,
             timeout: Duration::from_secs(10),
             warm_start: Some(dsh),
+            node_limit: None,
         };
         let out = CpSolver::new(cfg).solve(&g, 2);
         assert!(out.result.schedule.makespan() <= dsh_ms);

@@ -1,6 +1,14 @@
 //! Solver state and propagation for the two CP encodings.
+//!
+//! Every domain-changing mutation (ternary assignment, bound tightening,
+//! order-literal commit) is recorded on a [`Trail`], so the DFS in
+//! `cp::mod` branches by mutating **one** shared state and undoing to a
+//! mark on backtrack — O(changes) per branch instead of the former
+//! clone-per-branch O(state-size). `Clone` is kept only for the
+//! clone-based reference search used as the differential-testing oracle.
 
 use crate::graph::{Cycles, Dag, NodeId};
+use crate::sched::trail::{CpOp, Mark, Trail};
 use crate::sched::Schedule;
 use std::sync::Arc;
 
@@ -36,7 +44,7 @@ struct Ctx {
 }
 
 /// A partial assignment: ternary binaries + start-time interval bounds +
-/// committed same-core orderings.
+/// committed same-core orderings, with a trail of reversible writes.
 #[derive(Clone)]
 pub struct State {
     ctx: Arc<Ctx>,
@@ -50,6 +58,9 @@ pub struct State {
     s_ub: Vec<Cycles>,
     /// Committed disjunctions: (core, a, b) ⇒ f_{a,core} ≤ s_{b,core}.
     orders: Vec<(u16, u16, u16)>,
+    /// Undo log: every mutation of the five fields above is recorded here
+    /// so the search can backtrack without cloning.
+    trail: Trail<CpOp>,
 }
 
 impl State {
@@ -81,6 +92,7 @@ impl State {
             s_lb: vec![0; n * m],
             s_ub: vec![horizon; n * m],
             orders: Vec::new(),
+            trail: Trail::new(),
         }
     }
 
@@ -94,27 +106,92 @@ impl State {
         self.d[e * self.ctx.m * self.ctx.m + i * self.ctx.m + j]
     }
 
+    // ---- Reversible writes (every mutation goes through the trail) ----
+
+    #[inline]
+    fn set_x(&mut self, idx: usize, val: i8) {
+        self.trail.push(CpOp::X { idx: idx as u32, prev: self.x[idx] });
+        self.x[idx] = val;
+    }
+
+    #[inline]
+    fn set_d(&mut self, idx: usize, val: i8) {
+        self.trail.push(CpOp::D { idx: idx as u32, prev: self.d[idx] });
+        self.d[idx] = val;
+    }
+
+    #[inline]
+    fn set_lb(&mut self, idx: usize, val: Cycles) {
+        self.trail.push(CpOp::Lb { idx: idx as u32, prev: self.s_lb[idx] });
+        self.s_lb[idx] = val;
+    }
+
+    #[inline]
+    fn set_ub(&mut self, idx: usize, val: Cycles) {
+        self.trail.push(CpOp::Ub { idx: idx as u32, prev: self.s_ub[idx] });
+        self.s_ub[idx] = val;
+    }
+
+    /// Trail position before a branch; pass back to [`State::undo_to`].
+    pub fn mark(&self) -> Mark {
+        self.trail.mark()
+    }
+
+    /// Backtrack: pop every trailed write newer than `mark`, restoring the
+    /// previous value of each touched cell (LIFO, so multiple writes to
+    /// one cell unwind correctly).
+    pub fn undo_to(&mut self, mark: Mark) {
+        while self.trail.above(mark) {
+            match self.trail.pop().expect("trail entries above mark") {
+                CpOp::X { idx, prev } => self.x[idx as usize] = prev,
+                CpOp::D { idx, prev } => self.d[idx as usize] = prev,
+                CpOp::Lb { idx, prev } => self.s_lb[idx as usize] = prev,
+                CpOp::Ub { idx, prev } => self.s_ub[idx as usize] = prev,
+                CpOp::Order => {
+                    self.orders.pop();
+                }
+            }
+        }
+    }
+
+    /// Forget undo history (clone-based reference search only: it never
+    /// undoes, and must not drag a growing log through every clone).
+    pub(super) fn reset_trail(&mut self) {
+        self.trail.clear();
+    }
+
     /// Fix a binary; false when it contradicts an existing assignment.
     pub fn assign(&mut self, var: Bin, val: i8) -> bool {
-        let slot = match var {
-            Bin::X(i) => &mut self.x[i],
-            Bin::D(i) => &mut self.d[i],
-        };
-        if *slot == -1 {
-            *slot = val;
-            true
-        } else {
-            *slot == val
+        match var {
+            Bin::X(i) => {
+                if self.x[i] == -1 {
+                    self.set_x(i, val);
+                    true
+                } else {
+                    self.x[i] == val
+                }
+            }
+            Bin::D(i) => {
+                if self.d[i] == -1 {
+                    self.set_d(i, val);
+                    true
+                } else {
+                    self.d[i] == val
+                }
+            }
         }
     }
 
     /// Commit an ordering decision (branching on constraint (4)).
     pub fn add_order(&mut self, core: usize, a: NodeId, b: NodeId) {
+        self.trail.push(CpOp::Order);
         self.orders.push((core as u16, a as u16, b as u16));
     }
 
     /// Run every propagator to fixpoint under the incumbent bound `ub`.
     /// Returns false when the state is infeasible (or cannot beat `ub`).
+    /// All prunings land on the trail, so a failed propagation is undone
+    /// by the caller's `undo_to` like any other branch.
     pub fn propagate(
         &mut self,
         g: &Dag,
@@ -123,7 +200,8 @@ impl State {
         encoding: Encoding,
         ub: Cycles,
     ) -> bool {
-        let n = self.ctx.n;
+        let ctx = Arc::clone(&self.ctx);
+        let n = ctx.n;
         for _round in 0..4 * (n + self.orders.len() + 4) {
             let mut changed = false;
 
@@ -138,7 +216,7 @@ impl State {
                     match (ub - 1).checked_sub(levels[v]) {
                         Some(cap) if cap >= self.s_lb[idx] => {
                             if self.s_ub[idx] > cap {
-                                self.s_ub[idx] = cap;
+                                self.set_ub(idx, cap);
                                 changed = true;
                             }
                         }
@@ -147,7 +225,7 @@ impl State {
                             if self.x[idx] == 1 {
                                 return false;
                             }
-                            self.x[idx] = 0;
+                            self.set_x(idx, 0);
                             changed = true;
                         }
                     }
@@ -165,7 +243,7 @@ impl State {
                         _ => {}
                     }
                 }
-                let cap = self.ctx.max_dup[v];
+                let cap = ctx.max_dup[v];
                 if ones > cap || ones + unset == 0 {
                     return false;
                 }
@@ -173,14 +251,14 @@ impl State {
                     // Forced: exactly one candidate remains (constraint 1).
                     for p in 0..m {
                         if self.xi(v, p) == -1 {
-                            self.x[v * m + p] = 1;
+                            self.set_x(v * m + p, 1);
                             changed = true;
                         }
                     }
                 } else if ones == cap && unset > 0 {
                     for p in 0..m {
                         if self.xi(v, p) == -1 {
-                            self.x[v * m + p] = 0;
+                            self.set_x(v * m + p, 0);
                             changed = true;
                         }
                     }
@@ -188,7 +266,7 @@ impl State {
             }
 
             // Edge timing: constraints (10)–(11) (improved) / (5) (Tang).
-            for (e_idx, &(u, v, w)) in self.ctx.edges.iter().enumerate() {
+            for (e_idx, &(u, v, w)) in ctx.edges.iter().enumerate() {
                 for j in 0..m {
                     if self.xi(v, j) == 0 {
                         continue;
@@ -212,13 +290,13 @@ impl State {
                         if self.xi(v, j) == 1 {
                             return false; // consumer with no possible supplier
                         }
-                        self.x[v * m + j] = 0;
+                        self.set_x(v * m + j, 0);
                         changed = true;
                         continue;
                     }
                     let idx = v * m + j;
                     if self.s_lb[idx] < arr {
-                        self.s_lb[idx] = arr;
+                        self.set_lb(idx, arr);
                         changed = true;
                     }
                 }
@@ -236,7 +314,7 @@ impl State {
                                 Some(cap) => {
                                     let idx = u * m + i;
                                     if self.s_ub[idx] > cap {
-                                        self.s_ub[idx] = cap;
+                                        self.set_ub(idx, cap);
                                         changed = true;
                                     }
                                 }
@@ -247,19 +325,23 @@ impl State {
                 }
             }
 
-            // Committed orderings (from constraint (4) branching).
-            for &(c, a, b) in &self.orders.clone() {
+            // Committed orderings (from constraint (4) branching). Indexed
+            // iteration: propagation only appends to `orders` (never here),
+            // so the former per-round `self.orders.clone()` was pure
+            // allocation overhead.
+            for k in 0..self.orders.len() {
+                let (c, a, b) = self.orders[k];
                 let (c, a, b) = (c as usize, a as usize, b as usize);
                 let ia = a * m + c;
                 let ib = b * m + c;
                 let lb = self.s_lb[ia] + g.wcet(a);
                 if self.s_lb[ib] < lb {
-                    self.s_lb[ib] = lb;
+                    self.set_lb(ib, lb);
                     changed = true;
                 }
                 match self.s_ub[ib].checked_sub(g.wcet(a)) {
                     Some(cap) if self.s_ub[ia] > cap => {
-                        self.s_ub[ia] = cap;
+                        self.set_ub(ia, cap);
                         changed = true;
                     }
                     Some(_) => {}
@@ -275,7 +357,7 @@ impl State {
                         if self.x[idx] == 1 {
                             return false;
                         }
-                        self.x[idx] = 0;
+                        self.set_x(idx, 0);
                         changed = true;
                     }
                 }
@@ -314,7 +396,7 @@ impl State {
                                 match self.xi(node, core) {
                                     0 => return false,
                                     -1 => {
-                                        self.x[node * m + core] = 1;
+                                        self.set_x(node * m + core, 1);
                                         *changed = true;
                                     }
                                     _ => {}
@@ -323,7 +405,7 @@ impl State {
                         }
                         -1 => {
                             if self.xi(u, i) == 0 || self.xi(v, j) == 0 {
-                                self.d[idx] = 0;
+                                self.set_d(idx, 0);
                                 *changed = true;
                             }
                         }
@@ -355,7 +437,7 @@ impl State {
                     for i in 0..m {
                         let idx = e * m * m + i * m + j;
                         if self.d[idx] == -1 {
-                            self.d[idx] = 0;
+                            self.set_d(idx, 0);
                             *changed = true;
                         }
                     }
@@ -363,7 +445,7 @@ impl State {
                     for i in 0..m {
                         let idx = e * m * m + i * m + j;
                         if self.d[idx] == -1 {
-                            self.d[idx] = 1;
+                            self.set_d(idx, 1);
                             *changed = true;
                         }
                     }
@@ -538,8 +620,6 @@ impl State {
         None
     }
 
-
-
     /// True when every x (and, for Tang, every d) variable is decided.
     pub fn is_assignment_complete(&self) -> bool {
         !self.x.contains(&-1) && !self.d.contains(&-1)
@@ -621,5 +701,105 @@ impl State {
             }
         }
         s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::daggen::{generate, DagGenConfig};
+    use crate::graph::{ensure_single_sink, static_levels};
+    use crate::util::proptest::for_all_seeds;
+    use crate::util::rng::SplitMix64;
+
+    type Snapshot = (Vec<i8>, Vec<i8>, Vec<Cycles>, Vec<Cycles>, Vec<(u16, u16, u16)>);
+
+    fn snapshot(st: &State) -> Snapshot {
+        (
+            st.x.clone(),
+            st.d.clone(),
+            st.s_lb.clone(),
+            st.s_ub.clone(),
+            st.orders.clone(),
+        )
+    }
+
+    /// Randomized push/undo round trips over the *real* mutation surface:
+    /// assign + add_order + full propagation, undone level by level, must
+    /// restore the exact field-for-field snapshot taken at each mark.
+    #[test]
+    fn propagate_assign_undo_round_trips() {
+        for_all_seeds("cp-state-undo", 24, |seed| {
+            let mut g = generate(&DagGenConfig::paper(8), seed + 1);
+            ensure_single_sink(&mut g);
+            let sink = g.single_sink().expect("single sink ensured");
+            let levels = static_levels(&g);
+            let m = 2 + (seed as usize % 2);
+            let ub = g.total_wcet() + 1;
+            for encoding in [Encoding::Improved, Encoding::Tang] {
+                let mut rng = SplitMix64::new(seed ^ 0xCAFE);
+                let mut st = State::root(&g, m, sink, encoding);
+                st.propagate(&g, m, &levels, encoding, ub);
+                let root_snap = snapshot(&st);
+                let mut stack: Vec<(Mark, Snapshot)> = Vec::new();
+                for _ in 0..40 {
+                    if rng.next_below(3) < 2 {
+                        // Descend: open a level, make a decision, propagate.
+                        let mark = st.mark();
+                        let snap = snapshot(&st);
+                        let decided = match st.pick_branch(&g, m, encoding) {
+                            Some((var, first)) => {
+                                let val = if rng.next_below(2) == 0 { first } else { 1 - first };
+                                st.assign(var, val)
+                            }
+                            None => match st.pick_overlap(&g, m) {
+                                Some((c, a, b)) => {
+                                    st.add_order(c, a, b);
+                                    true
+                                }
+                                None => false,
+                            },
+                        };
+                        if decided {
+                            st.propagate(&g, m, &levels, encoding, ub);
+                            stack.push((mark, snap));
+                        } else {
+                            st.undo_to(mark);
+                            assert_eq!(snapshot(&st), snap);
+                        }
+                    } else if let Some((mark, snap)) = stack.pop() {
+                        st.undo_to(mark);
+                        assert_eq!(snapshot(&st), snap, "undo must restore the mark snapshot");
+                    }
+                }
+                while let Some((mark, snap)) = stack.pop() {
+                    st.undo_to(mark);
+                    assert_eq!(snapshot(&st), snap);
+                }
+                assert_eq!(snapshot(&st), root_snap, "full unwind must restore the root");
+            }
+        });
+    }
+
+    /// Undo after a *failed* propagation must restore the pre-branch state
+    /// just like a successful one (failure can leave partial prunings).
+    #[test]
+    fn failed_propagation_is_fully_undone() {
+        let mut g = generate(&DagGenConfig::paper(10), 7);
+        ensure_single_sink(&mut g);
+        let sink = g.single_sink().expect("single sink");
+        let levels = static_levels(&g);
+        let m = 2;
+        let encoding = Encoding::Improved;
+        let mut st = State::root(&g, m, sink, encoding);
+        // A 1-above-critical-path bound is almost always infeasible and
+        // forces failures deep in propagation.
+        let tight_ub = crate::graph::critical_path_len(&g) + 1;
+        st.propagate(&g, m, &levels, encoding, g.total_wcet() + 1);
+        let snap = snapshot(&st);
+        let mark = st.mark();
+        let _feasible = st.propagate(&g, m, &levels, encoding, tight_ub);
+        st.undo_to(mark);
+        assert_eq!(snapshot(&st), snap);
     }
 }

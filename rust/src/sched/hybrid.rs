@@ -37,6 +37,7 @@ impl Scheduler for Hybrid {
             encoding: Encoding::Improved,
             timeout: self.cp_timeout,
             warm_start: Some(seed.schedule.clone()),
+            node_limit: None,
         };
         let out = CpSolver::new(cfg).solve(g, m);
         let mut res = out.result;

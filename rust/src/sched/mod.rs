@@ -37,6 +37,7 @@ pub mod hybrid;
 pub mod ish;
 pub mod list;
 mod program;
+pub mod trail;
 mod validity;
 
 pub use program::{derive_comms, derive_programs, CommOp, CoreProgram, CoreStep};

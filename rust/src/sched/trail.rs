@@ -1,0 +1,198 @@
+//! Trail/undo core for the exact solvers (CP DFS and branch-and-bound).
+//!
+//! Both exact searches used to clone their entire state on every branch,
+//! which made a deep dive cost O(state-size) per node. The trail turns a
+//! branch into O(changes): every reversible mutation pushes a typed undo
+//! entry, the search takes a [`Mark`] before branching, and
+//! backtracking pops entries down to the mark, restoring the previous
+//! value of each touched cell.
+//!
+//! The trail itself is generic over the entry type; the two solvers each
+//! define their own typed vocabulary:
+//!
+//! * [`CpOp`] — CP solver entries: domain prunings (`X`/`D` ternaries),
+//!   start-time bound updates (`Lb`/`Ub`) and order literals (`Order`,
+//!   undone by popping the order stack).
+//! * [`BnbOp`] — branch-and-bound entries: a placement record carrying
+//!   every scalar it clobbered (core availability, makespan, incremental
+//!   lower bound) plus earliest-start bound updates (`Est`).
+//!
+//! Invariants: entries are popped in strict LIFO order, and `undo_to`
+//! never pops past the given mark. A mark taken at depth `d` remains
+//! valid while the search is at depth ≥ `d`.
+
+use crate::graph::Cycles;
+
+/// A position in the trail, taken before a branch and passed back to
+/// [`Trail::pop`]-loops (or [`Trail::undo_to`]) on backtrack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Mark(usize);
+
+/// Generic LIFO undo log.
+#[derive(Debug, Clone, Default)]
+pub struct Trail<E> {
+    log: Vec<E>,
+}
+
+impl<E> Trail<E> {
+    pub fn new() -> Self {
+        Self { log: Vec::new() }
+    }
+
+    /// Current position; everything pushed after this is undone by
+    /// [`Trail::undo_to`] with the returned mark.
+    pub fn mark(&self) -> Mark {
+        Mark(self.log.len())
+    }
+
+    /// Record one reversible operation.
+    pub fn push(&mut self, entry: E) {
+        self.log.push(entry);
+    }
+
+    /// True while entries newer than `mark` remain.
+    pub fn above(&self, mark: Mark) -> bool {
+        self.log.len() > mark.0
+    }
+
+    /// Pop the newest entry (the caller applies its inverse).
+    pub fn pop(&mut self) -> Option<E> {
+        self.log.pop()
+    }
+
+    /// Pop every entry newer than `mark`, newest first, feeding each to
+    /// `apply` (which performs the inverse mutation).
+    pub fn undo_to(&mut self, mark: Mark, mut apply: impl FnMut(E)) {
+        while self.log.len() > mark.0 {
+            let e = self.log.pop().expect("trail shrank below its own len");
+            apply(e);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.log.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.log.is_empty()
+    }
+
+    /// Drop the whole log (used by the clone-based reference searches,
+    /// which never undo and must not carry a growing log through clones).
+    pub fn clear(&mut self) {
+        self.log.clear();
+    }
+}
+
+/// One reversible CP-solver mutation (see `cp::State`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CpOp {
+    /// Assignment ternary `x[idx]` changed; `prev` restores it.
+    X { idx: u32, prev: i8 },
+    /// Tang communication ternary `d[idx]` changed.
+    D { idx: u32, prev: i8 },
+    /// Start-time lower bound `s_lb[idx]` tightened.
+    Lb { idx: u32, prev: Cycles },
+    /// Start-time upper bound `s_ub[idx]` tightened.
+    Ub { idx: u32, prev: Cycles },
+    /// An order literal was pushed onto the order stack; undo pops it.
+    Order,
+}
+
+/// One reversible branch-and-bound mutation (see `bnb`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BnbOp {
+    /// `node` was placed on `core`; the fields carry every scalar the
+    /// placement clobbered. Undo also pops the placement list, resets
+    /// `core[node]`/`finish[node]` and re-increments the children's
+    /// pending-parent counters.
+    Place {
+        node: u32,
+        core: u32,
+        prev_avail: Cycles,
+        prev_used: bool,
+        prev_makespan: Cycles,
+        prev_scheduled: u32,
+        prev_lb: Cycles,
+    },
+    /// Earliest-start bound `est[node]` was raised to the placed
+    /// parent's finish; `prev` restores it.
+    Est { node: u32, prev: Cycles },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::for_all_seeds;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn mark_and_undo_restore_lifo() {
+        let mut t: Trail<(usize, i32)> = Trail::new();
+        let mut cells = vec![0i32; 4];
+        let set = |t: &mut Trail<(usize, i32)>, c: &mut Vec<i32>, i: usize, v: i32| {
+            t.push((i, c[i]));
+            c[i] = v;
+        };
+        set(&mut t, &mut cells, 0, 7);
+        let m = t.mark();
+        set(&mut t, &mut cells, 1, 8);
+        set(&mut t, &mut cells, 0, 9);
+        assert_eq!(cells, vec![9, 8, 0, 0]);
+        t.undo_to(m, |(i, prev)| cells[i] = prev);
+        assert_eq!(cells, vec![7, 0, 0, 0]);
+        assert_eq!(t.len(), 1);
+        t.undo_to(Mark(0), |(i, prev)| cells[i] = prev);
+        assert_eq!(cells, vec![0, 0, 0, 0]);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn undo_to_is_noop_at_current_mark() {
+        let mut t: Trail<u8> = Trail::new();
+        t.push(1);
+        let m = t.mark();
+        t.undo_to(m, |_| panic!("nothing newer than the mark"));
+        assert_eq!(t.len(), 1);
+    }
+
+    /// Randomized push/undo round trips: a register file mutated through
+    /// the trail must, after undoing to any earlier mark, be identical to
+    /// the snapshot taken at that mark.
+    #[test]
+    fn random_round_trips_restore_snapshots() {
+        for_all_seeds("trail-round-trip", 64, |seed| {
+            let mut rng = SplitMix64::new(seed.wrapping_mul(0x51ED) ^ 0x7A11);
+            let mut t: Trail<(usize, u64)> = Trail::new();
+            let mut cells = vec![0u64; 8];
+            // Stack of (mark, snapshot-at-mark).
+            let mut stack: Vec<(Mark, Vec<u64>)> = Vec::new();
+            for _ in 0..200 {
+                match rng.next_below(3) {
+                    0 => {
+                        // Open a new decision level.
+                        stack.push((t.mark(), cells.clone()));
+                    }
+                    1 => {
+                        // Reversible write.
+                        let i = rng.next_below(8) as usize;
+                        t.push((i, cells[i]));
+                        cells[i] = rng.next_u64();
+                    }
+                    _ => {
+                        // Backtrack one level and compare to the snapshot.
+                        if let Some((m, snap)) = stack.pop() {
+                            t.undo_to(m, |(i, prev)| cells[i] = prev);
+                            assert_eq!(cells, snap, "undo must restore the mark snapshot");
+                        }
+                    }
+                }
+            }
+            // Unwind everything that remains, oldest mark last.
+            while let Some((m, snap)) = stack.pop() {
+                t.undo_to(m, |(i, prev)| cells[i] = prev);
+                assert_eq!(cells, snap);
+            }
+        });
+    }
+}

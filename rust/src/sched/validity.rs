@@ -4,7 +4,9 @@
 //! borrowed slices, per-core duplicate detection is a single stamped scan
 //! (the old pairwise check was O(P²)), uniqueness queries are O(1) via
 //! `instances`, and every `arrival`/`arrival_source` costs
-//! O(#instances-of-node).
+//! O(#instances-of-node). [`prune_redundant`] resolves source links once
+//! and cascades removals through a dirty worklist instead of re-scanning
+//! every placement per fixpoint round.
 
 use super::{Placement, Schedule};
 use crate::graph::{Cycles, Dag, NodeId};
@@ -98,43 +100,78 @@ pub fn check_valid(g: &Dag, s: &Schedule) -> Result<(), ValidityError> {
 /// the only instance of its node, or if its node is a sink. Removing an
 /// unused instance cannot invalidate others (sources are min-arrival, and
 /// dropping a non-source only widens choices), but removals can cascade —
-/// a duplicate that only fed a removed duplicate — so we iterate to a
-/// fixpoint.
+/// a duplicate that only fed a removed duplicate.
+///
+/// **Incremental:** source links and per-source support counts are
+/// resolved once against the full schedule; removals then propagate
+/// through a dirty worklist (a removed consumer decrements the support of
+/// each source it fed, and a source dropping to zero support joins the
+/// worklist). Total cost is O(placements · in-degree) plus O(1) amortized
+/// per cascade step — the former fixpoint re-scanned every placement per
+/// round, making pruning quadratic in cascade depth. Source links are
+/// stable under these removals (only never-chosen instances are removed,
+/// and shrinking a candidate set cannot change its argmin), so the
+/// one-shot resolution computes the identical fixpoint.
 pub fn prune_redundant(g: &Dag, s: &mut Schedule) -> usize {
-    let mut removed_total = 0;
-    loop {
-        let all: Vec<Placement> = s.iter().copied().collect();
-        // First master-order index of each (node, core, start) key, so a
-        // source placement is resolved in O(1) instead of a linear scan.
-        let mut index_of: HashMap<(NodeId, usize, Cycles), usize> = HashMap::new();
-        for (i, p) in all.iter().enumerate() {
-            index_of.entry((p.node, p.core, p.start)).or_insert(i);
-        }
-        let mut useful: Vec<bool> = all
-            .iter()
-            .map(|p| g.children(p.node).is_empty() || s.instances(p.node).len() == 1)
-            .collect();
-        // Mark every consumer's chosen source.
-        for p in &all {
-            for &(u, w) in g.parents(p.node) {
-                if let Some(src) = s.arrival_source(u, w, p.core) {
-                    if let Some(&idx) = index_of.get(&(src.node, src.core, src.start)) {
-                        useful[idx] = true;
-                    }
+    let all: Vec<Placement> = s.iter().copied().collect();
+    // First master-order index of each (node, core, start) key, so a
+    // source placement is resolved in O(1) instead of a linear scan.
+    let mut index_of: HashMap<(NodeId, usize, Cycles), usize> = HashMap::new();
+    for (i, p) in all.iter().enumerate() {
+        index_of.entry((p.node, p.core, p.start)).or_insert(i);
+    }
+    // feeds[i]: indices of the source placements consumer i reads from;
+    // supports[j]: how many (consumer, edge) pairs currently source j.
+    let mut feeds: Vec<Vec<usize>> = vec![Vec::new(); all.len()];
+    let mut supports: Vec<usize> = vec![0; all.len()];
+    for (i, p) in all.iter().enumerate() {
+        for &(u, w) in g.parents(p.node) {
+            if let Some(src) = s.arrival_source(u, w, p.core) {
+                if let Some(&j) = index_of.get(&(src.node, src.core, src.start)) {
+                    feeds[i].push(j);
+                    supports[j] += 1;
                 }
             }
         }
-        let mut removed = 0;
-        for (p, &keep) in all.iter().zip(&useful) {
-            if !keep {
-                let ok = s.remove(p.node, p.core, p.start);
-                debug_assert!(ok, "pruned placement missing from schedule");
-                removed += 1;
+    }
+    // Permanently useful: sink instances and sole instances of a node.
+    let mut live_of_node: Vec<usize> = vec![0; g.n()];
+    for p in &all {
+        live_of_node[p.node] += 1;
+    }
+    let mut pinned: Vec<bool> = all
+        .iter()
+        .map(|p| g.children(p.node).is_empty() || live_of_node[p.node] == 1)
+        .collect();
+    let mut alive = vec![true; all.len()];
+    // Dirty worklist: seeded with every initially unsupported instance,
+    // then fed by cascades.
+    let mut worklist: Vec<usize> =
+        (0..all.len()).filter(|&i| supports[i] == 0 && !pinned[i]).collect();
+    let mut removed_total = 0;
+    while let Some(i) = worklist.pop() {
+        if !alive[i] || pinned[i] || supports[i] > 0 {
+            continue; // pinned or re-supported since it was queued
+        }
+        let p = all[i];
+        let ok = s.remove(p.node, p.core, p.start);
+        debug_assert!(ok, "pruned placement missing from schedule");
+        alive[i] = false;
+        removed_total += 1;
+        live_of_node[p.node] -= 1;
+        if live_of_node[p.node] == 1 {
+            // The survivor is now the node's only instance: pin it.
+            if let Some(last) = s.instances(p.node).first() {
+                if let Some(&j) = index_of.get(&(last.node, last.core, last.start)) {
+                    pinned[j] = true;
+                }
             }
         }
-        removed_total += removed;
-        if removed == 0 {
-            break;
+        for &j in &feeds[i] {
+            supports[j] -= 1;
+            if supports[j] == 0 && alive[j] && !pinned[j] {
+                worklist.push(j);
+            }
         }
     }
     removed_total
@@ -264,5 +301,80 @@ mod tests {
         let removed = prune_redundant(&g, &mut s);
         assert_eq!(removed, 2, "b-dup removal must cascade to a-dup");
         assert_eq!(s.len(), 3);
+    }
+
+    /// The pre-worklist implementation: full usefulness re-scan per
+    /// fixpoint round. Kept test-local as the differential oracle.
+    fn prune_redundant_rounds(g: &Dag, s: &mut Schedule) -> usize {
+        let mut removed_total = 0;
+        loop {
+            let all: Vec<Placement> = s.iter().copied().collect();
+            let mut index_of = std::collections::HashMap::new();
+            for (i, p) in all.iter().enumerate() {
+                index_of.entry((p.node, p.core, p.start)).or_insert(i);
+            }
+            let mut useful: Vec<bool> = all
+                .iter()
+                .map(|p| g.children(p.node).is_empty() || s.instances(p.node).len() == 1)
+                .collect();
+            for p in &all {
+                for &(u, w) in g.parents(p.node) {
+                    if let Some(src) = s.arrival_source(u, w, p.core) {
+                        if let Some(&idx) = index_of.get(&(src.node, src.core, src.start)) {
+                            useful[idx] = true;
+                        }
+                    }
+                }
+            }
+            let mut removed = 0;
+            for (p, &keep) in all.iter().zip(&useful) {
+                if !keep {
+                    assert!(s.remove(p.node, p.core, p.start));
+                    removed += 1;
+                }
+            }
+            removed_total += removed;
+            if removed == 0 {
+                break;
+            }
+        }
+        removed_total
+    }
+
+    /// Worklist prune must match the round-based fixpoint on randomized
+    /// schedules salted with redundant duplicates.
+    #[test]
+    fn worklist_matches_round_fixpoint_on_random_schedules() {
+        use crate::daggen::{generate, DagGenConfig};
+        use crate::sched::ish::Ish;
+        use crate::sched::Scheduler;
+        use crate::util::proptest::for_all_seeds;
+        use crate::util::rng::SplitMix64;
+
+        for_all_seeds("prune-parity", 24, |seed| {
+            let g = generate(&DagGenConfig::paper(20), seed + 1);
+            let m = 3 + (seed as usize % 2);
+            let base = Ish.schedule(&g, m).schedule;
+            // Salt with duplicates: extra instances appended past the
+            // makespan so they are unsupported unless something reads them.
+            let mut rng = SplitMix64::new(seed ^ 0xD09E);
+            let mut salted = base.clone();
+            let horizon = salted.makespan() + 1;
+            for k in 0..8u64 {
+                let v = rng.next_below(g.n() as u64) as usize;
+                let c = rng.next_below(m as u64) as usize;
+                if !salted.on_core(v, c) {
+                    salted.place(&g, v, c, horizon + k * 100);
+                }
+            }
+            let mut a = salted.clone();
+            let mut b = salted;
+            let removed_worklist = prune_redundant(&g, &mut a);
+            let removed_rounds = prune_redundant_rounds(&g, &mut b);
+            assert_eq!(removed_worklist, removed_rounds, "removed counts diverge");
+            let pa: Vec<Placement> = a.iter().copied().collect();
+            let pb: Vec<Placement> = b.iter().copied().collect();
+            assert_eq!(pa, pb, "surviving placements diverge");
+        });
     }
 }

@@ -56,6 +56,7 @@ fn cp_improved_beats_or_matches_heuristics_small() {
         encoding: Encoding::Improved,
         timeout: Duration::from_secs(20),
         warm_start: None,
+        node_limit: None,
     });
     for seed in 0..3 {
         let g = generate(&cfg, seed);
@@ -84,12 +85,14 @@ fn tang_and_improved_agree_when_both_finish() {
             encoding: Encoding::Improved,
             timeout: Duration::from_secs(30),
             warm_start: None,
+            node_limit: None,
         })
         .solve(&g, 2);
         let tang = CpSolver::new(CpConfig {
             encoding: Encoding::Tang,
             timeout: Duration::from_secs(60),
             warm_start: None,
+            node_limit: None,
         })
         .solve(&g, 2);
         if imp.result.optimal && tang.result.optimal {
@@ -135,6 +138,7 @@ fn cp_anytime_quality_regression() {
         encoding: Encoding::Improved,
         timeout: Duration::from_secs(5),
         warm_start: None,
+        node_limit: None,
     })
     .solve(&g, 4);
     assert!(out.found_solution, "search must reach feasible leaves");
@@ -150,7 +154,7 @@ fn bnb_never_worse_than_ish() {
     let cfg = DagGenConfig::paper(12);
     for seed in 0..3 {
         let g = generate(&cfg, seed);
-        let bnb = ChouChung { timeout: Duration::from_secs(20) }.schedule(&g, 2);
+        let bnb = ChouChung { timeout: Duration::from_secs(20), node_limit: None }.schedule(&g, 2);
         if bnb.optimal {
             let ish = Ish.schedule(&g, 2).schedule.makespan();
             assert!(bnb.schedule.makespan() <= ish, "seed={seed}");

@@ -1,0 +1,142 @@
+//! Differential tests: the trail-based exact searches must be
+//! byte-identical to the preserved clone-per-branch reference
+//! implementations — same makespans, same placement lists, same explored
+//! counts, same optimality verdicts.
+//!
+//! Small instances are solved to proven optimality; `paper(50)` instances
+//! use a deterministic node budget (`node_limit`) with an unreachable
+//! wall-clock timeout, so both searches cut at exactly the same tree
+//! node regardless of machine speed.
+
+use acetone::daggen::{generate, DagGenConfig};
+use acetone::graph::{ensure_single_sink, paper_example_dag, Cycles, Dag};
+use acetone::sched::bnb::ChouChung;
+use acetone::sched::cp::{CpConfig, CpSolver, Encoding};
+use acetone::sched::{check_valid, Schedule, Scheduler};
+use std::time::Duration;
+
+/// Full placement list in the schedule's deterministic master order.
+fn placements(s: &Schedule) -> Vec<(usize, usize, Cycles, Cycles)> {
+    s.iter().map(|p| (p.core, p.node, p.start, p.finish)).collect()
+}
+
+fn assert_cp_parity(g: &Dag, m: usize, cfg: &CpConfig, label: &str) {
+    let trail = CpSolver::new(cfg.clone()).solve(g, m);
+    let reference = CpSolver::new(cfg.clone()).solve_reference(g, m);
+    assert_eq!(
+        trail.result.explored, reference.result.explored,
+        "{label}: explored counts diverge — the searches walked different trees"
+    );
+    assert_eq!(trail.result.optimal, reference.result.optimal, "{label}: optimality");
+    assert_eq!(
+        trail.result.schedule.makespan(),
+        reference.result.schedule.makespan(),
+        "{label}: makespan"
+    );
+    assert_eq!(
+        placements(&trail.result.schedule),
+        placements(&reference.result.schedule),
+        "{label}: placement lists"
+    );
+    assert!(check_valid(g, &trail.result.schedule).is_ok(), "{label}: validity");
+}
+
+fn assert_bnb_parity(g: &Dag, m: usize, solver: &ChouChung, label: &str) {
+    let trail = solver.schedule(g, m);
+    let reference = solver.schedule_reference(g, m);
+    assert_eq!(
+        trail.explored, reference.explored,
+        "{label}: explored counts diverge — the searches walked different trees"
+    );
+    assert_eq!(trail.optimal, reference.optimal, "{label}: optimality");
+    assert_eq!(trail.schedule.makespan(), reference.schedule.makespan(), "{label}: makespan");
+    assert_eq!(
+        placements(&trail.schedule),
+        placements(&reference.schedule),
+        "{label}: placement lists"
+    );
+    assert!(check_valid(g, &trail.schedule).is_ok(), "{label}: validity");
+}
+
+#[test]
+fn cp_paper_example_full_solve_parity() {
+    let mut g = paper_example_dag();
+    ensure_single_sink(&mut g);
+    for m in 2..=3 {
+        let cfg = CpConfig {
+            encoding: Encoding::Improved,
+            timeout: Duration::from_secs(120),
+            warm_start: None,
+            node_limit: None,
+        };
+        assert_cp_parity(&g, m, &cfg, &format!("cp improved m={m}"));
+    }
+}
+
+#[test]
+fn cp_tang_budgeted_parity() {
+    // The Tang encoding exercises the d-variable propagators and their
+    // undo entries; a node budget keeps the doubled (trail + reference)
+    // run cheap while still covering thousands of branch/undo cycles.
+    let mut g = paper_example_dag();
+    ensure_single_sink(&mut g);
+    let cfg = CpConfig {
+        encoding: Encoding::Tang,
+        timeout: Duration::from_secs(3600),
+        warm_start: None,
+        node_limit: Some(4000),
+    };
+    assert_cp_parity(&g, 2, &cfg, "cp tang paper-example");
+}
+
+#[test]
+fn cp_paper50_budgeted_parity() {
+    for seed in 1..=5u64 {
+        let mut g = generate(&DagGenConfig::paper(50), seed);
+        ensure_single_sink(&mut g);
+        let cfg = CpConfig {
+            encoding: Encoding::Improved,
+            timeout: Duration::from_secs(3600),
+            warm_start: None,
+            node_limit: Some(1500),
+        };
+        assert_cp_parity(&g, 4, &cfg, &format!("cp paper(50) seed={seed}"));
+    }
+}
+
+#[test]
+fn bnb_paper_example_full_solve_parity() {
+    let g = paper_example_dag();
+    for m in 2..=3 {
+        let solver = ChouChung { timeout: Duration::from_secs(120), node_limit: None };
+        assert_bnb_parity(&g, m, &solver, &format!("bnb m={m}"));
+    }
+}
+
+#[test]
+fn bnb_paper50_budgeted_parity() {
+    for seed in 1..=5u64 {
+        let g = generate(&DagGenConfig::paper(50), seed);
+        let solver = ChouChung {
+            timeout: Duration::from_secs(3600),
+            node_limit: Some(3000),
+        };
+        assert_bnb_parity(&g, 4, &solver, &format!("bnb paper(50) seed={seed}"));
+    }
+}
+
+#[test]
+fn warm_started_cp_parity() {
+    // The hybrid path (warm start seeding the incumbent) must also agree.
+    use acetone::sched::dsh::Dsh;
+    let mut g = generate(&DagGenConfig::paper(30), 9);
+    ensure_single_sink(&mut g);
+    let warm = Dsh.schedule(&g, 3).schedule;
+    let cfg = CpConfig {
+        encoding: Encoding::Improved,
+        timeout: Duration::from_secs(3600),
+        warm_start: Some(warm),
+        node_limit: Some(1000),
+    };
+    assert_cp_parity(&g, 3, &cfg, "cp warm-started paper(30)");
+}

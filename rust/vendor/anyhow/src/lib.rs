@@ -84,6 +84,22 @@ macro_rules! bail {
     };
 }
 
+/// Early-return with an [`Error`] when a condition does not hold
+/// (anyhow's `ensure!`).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)+) => {
+        if !$cond {
+            $crate::bail!($($t)+);
+        }
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,6 +127,14 @@ mod tests {
             bail!("stop {}", 3);
         }
         assert_eq!(bails().unwrap_err().to_string(), "stop 3");
+        fn ensures(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {}", x);
+            ensure!(x != 7);
+            Ok(x)
+        }
+        assert_eq!(ensures(3).unwrap(), 3);
+        assert_eq!(ensures(12).unwrap_err().to_string(), "x too big: 12");
+        assert!(ensures(7).unwrap_err().to_string().contains("x != 7"));
     }
 
     #[test]
