@@ -10,6 +10,7 @@ use acetone::daggen::{generate, DagGenConfig};
 use acetone::sched::bnb::ChouChung;
 use acetone::sched::cp::{CpConfig, CpSolver, Encoding};
 use acetone::sched::dsh::Dsh;
+use acetone::sched::portfolio::{Portfolio, PortfolioConfig};
 use acetone::sched::{check_valid, derive_programs, prune_redundant, Scheduler};
 use acetone::sim::{replay_machine, simulate};
 use acetone::util::bench::{bench, write_json, BenchStats};
@@ -61,9 +62,42 @@ fn main() {
     let bnb_deep = ChouChung {
         timeout: Duration::from_secs(3600),
         node_limit: Some(20_000),
+        ..Default::default()
     };
     record(bench("bnb n=30 m=4 (20k-node budget)", 1, 5, || {
         bnb_deep.schedule(&g30, 4).schedule.makespan()
+    }));
+
+    // Parallel portfolio: heuristic race + multi-root exact stages with a
+    // deterministic per-worker (per subtree root) node budget — the
+    // measured search tree is identical across machines, runs and worker
+    // counts; only the wall clock varies. Two workers keep the case
+    // meaningful on any CI runner.
+    let portfolio_cfg = PortfolioConfig {
+        workers: 2,
+        root_target: 8,
+        exact_timeout: Duration::from_secs(3600),
+        node_limit_per_root: Some(500),
+        hybrid_node_limit: Some(500),
+        ..Default::default()
+    };
+    record(bench("portfolio n=30 m=4 (500/root budget)", 1, 5, || {
+        Portfolio::new(portfolio_cfg.clone())
+            .solve(&g30s, 4)
+            .result
+            .schedule
+            .makespan()
+    }));
+
+    // Schedule-cache hit path: the second solve of an identical DAG must
+    // skip the search entirely — this case measures the canonical-key
+    // hash + cache lookup, i.e. the per-request serving cost.
+    let warm = Portfolio::new(portfolio_cfg.clone());
+    warm.solve(&g30s, 4);
+    record(bench("portfolio cache hit n=30 m=4", 10, 200, || {
+        let out = warm.solve(&g30s, 4);
+        assert!(out.from_cache);
+        out.result.schedule.makespan()
     }));
 
     // Duplicate pruning on a duplication-heavy DSH schedule (clone cost

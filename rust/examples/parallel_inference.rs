@@ -13,8 +13,7 @@ use acetone::exec::{run_full, run_parallel};
 use acetone::nn::eval::{eval, Tensor};
 use acetone::nn::{numel, weights, zoo};
 use acetone::runtime::Manifest;
-use acetone::sched::dsh::Dsh;
-use acetone::sched::Scheduler;
+use acetone::sched::portfolio::{Portfolio, PortfolioConfig};
 use acetone::wcet::CostModel;
 use std::time::Instant;
 
@@ -24,11 +23,27 @@ fn main() -> anyhow::Result<()> {
     let mm = manifest.models.get("googlenet").expect("googlenet artifacts");
     let g = net.to_dag(&CostModel::default());
     let m = 4;
-    let sched = Dsh.schedule(&g, m).schedule;
+    // The serving entry point: the deterministic parallel portfolio. A
+    // node budget (not the wall clock) bounds the exact stages, so the
+    // schedule is identical on every machine; the second solve of the
+    // same DAG below is answered from the cache — exactly what a server
+    // does per request once a model is deployed.
+    let portfolio = Portfolio::new(PortfolioConfig {
+        node_limit_per_root: Some(2_000),
+        ..Default::default()
+    });
+    let sched = portfolio.solve(&g, m).result.schedule;
+    // A repeat request is normally a cache hit; a wall-clock-cut first
+    // solve (e.g. a very slow debug run) is deliberately not cached, so
+    // report rather than assert.
+    let replay = portfolio.solve(&g, m);
     println!(
-        "googlenet (tiny) on {m} virtual cores: schedule makespan {} cycles, {} comms",
+        "googlenet (tiny) on {m} virtual cores: schedule makespan {} cycles, {} comms \
+         (repeat request from cache: {}, stats: {:?})",
         sched.makespan(),
-        acetone::sched::derive_comms(&g, &sched).len()
+        acetone::sched::derive_comms(&g, &sched).len(),
+        replay.from_cache,
+        portfolio.cache_stats(),
     );
 
     let shapes = net.shapes();

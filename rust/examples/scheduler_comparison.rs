@@ -10,8 +10,10 @@ use acetone::metrics::Table;
 use acetone::sched::bnb::ChouChung;
 use acetone::sched::cp::{CpConfig, CpSolver, Encoding};
 use acetone::sched::dsh::Dsh;
+use acetone::sched::hlfet::Hlfet;
 use acetone::sched::hybrid::Hybrid;
 use acetone::sched::ish::Ish;
+use acetone::sched::portfolio::{Portfolio, PortfolioConfig};
 use acetone::sched::{check_valid, Scheduler};
 use std::time::Duration;
 
@@ -24,12 +26,17 @@ fn main() {
     for (name, g, m) in [("Fig. 3 example", &fig3, 2), ("random n=20 (§4.1)", &rand20, 4)] {
         println!("\n### {name} on {m} cores (total WCET {} cycles)\n", g.total_wcet());
         let solvers: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(Hlfet),
             Box::new(Ish),
             Box::new(Dsh),
-            Box::new(ChouChung { timeout: Duration::from_secs(10), node_limit: None }),
+            Box::new(ChouChung { timeout: Duration::from_secs(10), ..Default::default() }),
             Box::new(CpSolver::new(CpConfig::improved(Duration::from_secs(10)))),
             Box::new(CpSolver::new(CpConfig::tang(Duration::from_secs(10)))),
-            Box::new(Hybrid { cp_timeout: Duration::from_secs(5) }),
+            Box::new(Hybrid { cp_timeout: Duration::from_secs(5), cp_node_limit: None }),
+            Box::new(Portfolio::new(PortfolioConfig {
+                exact_timeout: Duration::from_secs(10),
+                ..Default::default()
+            })),
         ];
         let mut t = Table::new(&["solver", "makespan", "speedup", "dups", "optimal", "time", "explored"]);
         for s in solvers {

@@ -23,6 +23,14 @@
 //! heuristic — queries it in O(#instances-of-node) or O(1) instead of a
 //! linear scan over all placements; `sched`'s module docs list the exact
 //! complexity guarantees.
+//!
+//! [`sched::portfolio`] is the serving-oriented entry point: a
+//! deterministic parallel portfolio that races every heuristic on worker
+//! threads, splits both exact searches into disjoint subtrees
+//! (multi-root trail search sharing an `AtomicU64` incumbent), reduces
+//! the candidates in a fixed `(makespan, placement)` order — so the
+//! answer is byte-identical for any worker count — and memoizes solves
+//! in a canonical-keyed schedule cache.
 
 pub mod daggen;
 pub mod graph;

@@ -20,8 +20,10 @@ use acetone::sched::{
     bnb::ChouChung,
     cp::{CpConfig, CpSolver},
     dsh::Dsh,
+    hlfet::Hlfet,
     hybrid::Hybrid,
     ish::Ish,
+    portfolio::{Portfolio, PortfolioConfig},
     Scheduler,
 };
 use acetone::wcet::CostModel;
@@ -90,13 +92,18 @@ fn model_by_name(name: &str) -> Result<Network> {
 
 fn solver_by_name(name: &str, timeout: Duration) -> Result<Box<dyn Scheduler>> {
     Ok(match name {
+        "hlfet" => Box::new(Hlfet),
         "ish" => Box::new(Ish),
         "dsh" => Box::new(Dsh),
         "cp" | "improved" => Box::new(CpSolver::new(CpConfig::improved(timeout))),
         "tang" => Box::new(CpSolver::new(CpConfig::tang(timeout))),
-        "bnb" => Box::new(ChouChung { timeout, node_limit: None }),
-        "hybrid" => Box::new(Hybrid { cp_timeout: timeout }),
-        other => bail!("unknown algo {other} (ish|dsh|cp|tang|bnb|hybrid)"),
+        "bnb" => Box::new(ChouChung { timeout, ..Default::default() }),
+        "hybrid" => Box::new(Hybrid { cp_timeout: timeout, cp_node_limit: None }),
+        "portfolio" => Box::new(Portfolio::new(PortfolioConfig {
+            exact_timeout: timeout,
+            ..Default::default()
+        })),
+        other => bail!("unknown algo {other} (hlfet|ish|dsh|cp|tang|bnb|hybrid|portfolio)"),
     })
 }
 
@@ -119,6 +126,7 @@ fn dispatch(args: &[String]) -> Result<()> {
                  \n\
                  export-models --dir D                 write model zoo JSONs\n\
                  schedule --model M|--nodes N --cores C --algo A [--timeout S] [--seed S]\n\
+                 \x20   (algo: hlfet|ish|dsh|cp|tang|bnb|hybrid|portfolio)\n\
                  wcet --cores C [--model googlenet:paper]\n\
                  simulate --model M --cores C [--jitter J] [--seed S]\n\
                  run --model M --cores C [--artifacts DIR] [--algo A]\n\

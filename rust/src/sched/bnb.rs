@@ -25,11 +25,17 @@
 //! The pre-trail clone-per-expansion search is preserved as
 //! [`ChouChung::schedule_reference`], the differential-testing oracle.
 
+use super::portfolio::{Incumbent, SubtreeOutcome};
 use super::trail::{BnbOp, Mark, Trail};
 use super::{Schedule, Scheduler, SolveResult};
 use crate::graph::{static_levels, Cycles, Dag, NodeId};
 use std::collections::{HashMap, HashSet};
 use std::time::{Duration, Instant};
+
+/// Default capacity of the state-dominance memo (signature count). Large
+/// enough that no test or bench workload ever evicts, so search trees are
+/// unchanged unless a caller opts into a tighter bound.
+pub const DEFAULT_MEMO_CAPACITY: usize = 1 << 20;
 
 /// Configurable exact search (duplication-free).
 #[derive(Debug, Clone)]
@@ -38,11 +44,80 @@ pub struct ChouChung {
     /// Optional deterministic cap on explored S-nodes (reproducible
     /// anytime runs for the differential tests and the bench guard).
     pub node_limit: Option<u64>,
+    /// Capacity bound on the dominance memo: long anytime runs used to
+    /// grow `seen` without bound (one signature per non-pruned S-node).
+    /// When the memo reaches this many signatures it is cleared in one
+    /// deterministic generation flush — losing only *pruning* power,
+    /// never soundness — and refills. See [`DominanceMemo`].
+    pub memo_capacity: usize,
 }
 
 impl Default for ChouChung {
     fn default() -> Self {
-        Self { timeout: Duration::from_secs(60), node_limit: None }
+        Self {
+            timeout: Duration::from_secs(60),
+            node_limit: None,
+            memo_capacity: DEFAULT_MEMO_CAPACITY,
+        }
+    }
+}
+
+/// Capacity-bounded state-dominance memo.
+///
+/// Signatures are grouped by the coarse scheduled-set mask (the former
+/// `HashMap<u64, HashSet<u64>>` layout). The total signature count is
+/// bounded by `cap`: on overflow the whole memo is flushed — a
+/// *generation clear*, chosen over per-entry eviction because it is
+/// deterministic (no dependence on `HashMap` iteration order, which is
+/// randomized per process) and O(1) amortized. A flushed signature may be
+/// re-inserted later, so a dominated state can be re-explored; that only
+/// costs time, never optimality.
+#[derive(Debug, Clone)]
+pub struct DominanceMemo {
+    groups: HashMap<u64, HashSet<u64>>,
+    len: usize,
+    cap: usize,
+    peak: usize,
+    flushes: u64,
+}
+
+impl DominanceMemo {
+    pub fn new(cap: usize) -> Self {
+        Self { groups: HashMap::new(), len: 0, cap: cap.max(1), peak: 0, flushes: 0 }
+    }
+
+    /// Record `sig` under `group`; returns true when it was not already
+    /// present (the caller expands the node) and false when the state is
+    /// dominated by an earlier visit. A duplicate is a pure lookup: it
+    /// never triggers the capacity flush (the memo would not grow).
+    pub fn insert(&mut self, group: u64, sig: u64) -> bool {
+        if self.groups.get(&group).map_or(false, |set| set.contains(&sig)) {
+            return false;
+        }
+        if self.len >= self.cap {
+            self.groups.clear();
+            self.len = 0;
+            self.flushes += 1;
+        }
+        self.groups.entry(group).or_default().insert(sig);
+        self.len += 1;
+        self.peak = self.peak.max(self.len);
+        true
+    }
+
+    /// Signatures currently held (≤ capacity at all times).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// High-water mark of [`DominanceMemo::len`] over the memo's lifetime.
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+
+    /// Number of generation flushes triggered by the capacity bound.
+    pub fn flushes(&self) -> u64 {
+        self.flushes
     }
 }
 
@@ -163,19 +238,25 @@ impl PartialState {
 struct Ctx<'g> {
     g: &'g Dag,
     m: usize,
-    levels: Vec<Cycles>,
+    levels: &'g [Cycles],
     /// Equivalence classes: eq_leader[v] = smallest node with equal parent
     /// and child sets and equal WCET.
-    eq_leader: Vec<NodeId>,
+    eq_leader: &'g [NodeId],
     deadline: Instant,
     node_limit: Option<u64>,
+    /// Portfolio hook: the cross-worker incumbent. Improvements are
+    /// always published to it; it is *consulted* for pruning only when
+    /// `consult_shared` is set (live bound sharing trades byte-level
+    /// placement determinism for extra pruning — see `sched::portfolio`).
+    shared: Option<&'g Incumbent>,
+    consult_shared: bool,
 }
 
 /// Mutable search bookkeeping shared by both DFS variants.
 struct SearchState {
     best: Schedule,
     best_ms: Cycles,
-    seen: HashMap<u64, HashSet<u64>>,
+    seen: DominanceMemo,
     explored: u64,
     timed_out: bool,
     budget_out: bool,
@@ -184,6 +265,16 @@ struct SearchState {
 impl SearchState {
     fn stopped(&self) -> bool {
         self.timed_out || self.budget_out
+    }
+
+    /// Upper bound used for pruning: the local incumbent, tightened by
+    /// the cross-worker bound when live sharing is enabled. With sharing
+    /// off (every sequential solve) this is exactly `best_ms`.
+    fn cap(&self, ctx: &Ctx<'_>) -> Cycles {
+        match ctx.shared {
+            Some(inc) if ctx.consult_shared => self.best_ms.min(inc.bound()),
+            _ => self.best_ms,
+        }
     }
 
     /// Count the node and fire the stop conditions; false = unwind.
@@ -205,15 +296,16 @@ impl SearchState {
 impl ChouChung {
     fn run(&self, g: &Dag, m: usize, reference: bool) -> SolveResult {
         let t0 = Instant::now();
-        let levels = static_levels(g);
-        let eq_leader = equivalence_leaders(g);
+        let prep = StagePrep::new(g);
         let ctx = Ctx {
             g,
             m,
-            levels,
-            eq_leader,
+            levels: &prep.levels,
+            eq_leader: &prep.eq_leader,
             deadline: t0 + self.timeout,
             node_limit: self.node_limit,
+            shared: None,
+            consult_shared: false,
         };
         // Seed: serial schedule.
         let mut best = Schedule::new(m);
@@ -226,12 +318,12 @@ impl ChouChung {
         let mut search = SearchState {
             best,
             best_ms,
-            seen: HashMap::new(),
+            seen: DominanceMemo::new(self.memo_capacity),
             explored: 0,
             timed_out: false,
             budget_out: false,
         };
-        let mut root = PartialState::root(g, m, &ctx.levels);
+        let mut root = PartialState::root(g, m, ctx.levels);
         if reference {
             dfs_reference(&ctx, root, &mut search);
         } else {
@@ -302,6 +394,22 @@ fn scan_lower_bound(ctx: &Ctx<'_>, st: &PartialState) -> Cycles {
     lb
 }
 
+/// Earliest start of `v` on core `p` given the current partial state:
+/// core availability vs. data arrival over scheduled parents (same-core
+/// parents deliver at `finish`, remote ones at `finish + w`). This is
+/// THE branching rule — shared by `dfs`, `dfs_reference`,
+/// `replay_prefix` and `enumerate_prefixes` so the sequential search,
+/// the prefix replay and the multi-root enumeration cannot drift apart.
+fn earliest_start(g: &Dag, st: &PartialState, v: NodeId, p: usize) -> Cycles {
+    let data = g
+        .parents(v)
+        .iter()
+        .map(|&(u, w)| st.finish[u] + if st.core[u] == p { 0 } else { w })
+        .max()
+        .unwrap_or(0);
+    st.avail[p].max(data)
+}
+
 /// Ready nodes under equivalence symmetry breaking, ordered by level
 /// (highest first) for good first dives. Shared by both DFS variants.
 fn ready_nodes(ctx: &Ctx<'_>, st: &PartialState) -> Vec<NodeId> {
@@ -334,19 +442,21 @@ fn expandable(ctx: &Ctx<'_>, st: &PartialState, search: &mut SearchState) -> boo
                 sched.place(g, v, c, s);
             }
             search.best = sched;
+            if let Some(inc) = ctx.shared {
+                inc.offer(st.makespan);
+            }
         }
         return false;
     }
     // Lower bound pruning — st.lb is maintained incrementally and must
     // equal the full re-scan at every S-node.
     debug_assert_eq!(st.lb, scan_lower_bound(ctx, st), "incremental lb diverged");
-    if st.lb >= search.best_ms {
+    if st.lb >= search.cap(ctx) {
         return false;
     }
     // State-dominance memoization on the canonical signature.
     let sig = signature(ctx, st);
-    let entry = search.seen.entry(st.scheduled as u64).or_default();
-    entry.insert(sig)
+    search.seen.insert(st.scheduled as u64, sig)
 }
 
 /// Trail-based DFS: expansions mutate one shared `PartialState` and undo
@@ -369,19 +479,13 @@ fn dfs(ctx: &Ctx<'_>, st: &mut PartialState, search: &mut SearchState) {
                 }
                 tried_idle = true;
             }
-            let data = g
-                .parents(v)
-                .iter()
-                .map(|&(u, w)| st.finish[u] + if st.core[u] == p { 0 } else { w })
-                .max()
-                .unwrap_or(0);
-            let start = st.avail[p].max(data);
+            let start = earliest_start(g, st, v, p);
             let fin = start + g.wcet(v);
-            if fin.max(st.makespan) >= search.best_ms {
+            if fin.max(st.makespan) >= search.cap(ctx) {
                 continue;
             }
             let mark = st.trail.mark();
-            st.apply_place(g, &ctx.levels, v, p, start, fin);
+            st.apply_place(g, ctx.levels, v, p, start, fin);
             dfs(ctx, st, search);
             st.undo_to(g, mark);
             if search.stopped() {
@@ -412,25 +516,172 @@ fn dfs_reference(ctx: &Ctx<'_>, st: PartialState, search: &mut SearchState) {
                 }
                 tried_idle = true;
             }
-            let data = g
-                .parents(v)
-                .iter()
-                .map(|&(u, w)| st.finish[u] + if st.core[u] == p { 0 } else { w })
-                .max()
-                .unwrap_or(0);
-            let start = st.avail[p].max(data);
+            let start = earliest_start(g, &st, v, p);
             let fin = start + g.wcet(v);
-            if fin.max(st.makespan) >= search.best_ms {
+            if fin.max(st.makespan) >= search.cap(ctx) {
                 continue;
             }
             let mut child = st.clone();
             child.trail.clear();
-            child.apply_place(g, &ctx.levels, v, p, start, fin);
+            child.apply_place(g, ctx.levels, v, p, start, fin);
             dfs_reference(ctx, child, search);
             if search.stopped() {
                 return;
             }
         }
+    }
+}
+
+// ------------------------------------------------------------------------
+// Multi-root hooks for `sched::portfolio`: split the search tree into
+// disjoint subtrees by enumerating the first branching decisions, then
+// solve one subtree per task with its own trail-backed state.
+
+/// One branching prefix: the first `(node, core)` decisions of the DFS,
+/// in the exact order the sequential search would enumerate them.
+pub(crate) type BnbPrefix = Vec<(NodeId, usize)>;
+
+/// Replay a prefix on a fresh root state, recomputing each start time the
+/// same way the DFS branching loop does.
+fn replay_prefix(g: &Dag, levels: &[Cycles], st: &mut PartialState, prefix: &[(NodeId, usize)]) {
+    for &(v, p) in prefix {
+        let start = earliest_start(g, st, v, p);
+        let fin = start + g.wcet(v);
+        st.apply_place(g, levels, v, p, start, fin);
+    }
+}
+
+/// Enumerate disjoint subtree roots: breadth-first expansion of the first
+/// branching decisions (same child order as the DFS, pruned against the
+/// fixed bound `b0`) until at least `target` roots exist or `max_depth`
+/// levels were expanded. Coverage argument: the prunings applied are the
+/// lower bound, the cannot-beat-`b0` skip, **and the DFS's two symmetry
+/// breaks** (one idle core tried, equivalence-leader filtering in
+/// [`ready_nodes`]) — so the union of the returned subtrees covers a
+/// symmetry representative of every improving schedule, exactly the set
+/// the sequential search explores. Any change to the symmetry breaking
+/// in `dfs`/`ready_nodes` must be mirrored here (and vice versa) or
+/// multi-root/sequential parity silently breaks. Fully deterministic.
+pub(crate) fn enumerate_prefixes(
+    g: &Dag,
+    m: usize,
+    prep: &StagePrep,
+    b0: Cycles,
+    target: usize,
+    max_depth: usize,
+) -> Vec<BnbPrefix> {
+    let ctx = Ctx {
+        g,
+        m,
+        levels: &prep.levels,
+        eq_leader: &prep.eq_leader,
+        deadline: Instant::now() + Duration::from_secs(3600),
+        node_limit: None,
+        shared: None,
+        consult_shared: false,
+    };
+    let mut terminals: Vec<BnbPrefix> = Vec::new();
+    let mut frontier: Vec<BnbPrefix> = vec![Vec::new()];
+    for _depth in 0..max_depth {
+        if terminals.len() + frontier.len() >= target || frontier.is_empty() {
+            break;
+        }
+        let mut next: Vec<BnbPrefix> = Vec::new();
+        for prefix in frontier {
+            let mut st = PartialState::root(g, m, ctx.levels);
+            replay_prefix(g, ctx.levels, &mut st, &prefix);
+            if st.placements.len() == g.n() {
+                // Complete schedule: keep it as a (leaf) task.
+                terminals.push(prefix);
+                continue;
+            }
+            if st.lb >= b0 {
+                continue; // proven: nothing better than b0 below here
+            }
+            for &v in &ready_nodes(&ctx, &st) {
+                let mut tried_idle = false;
+                for p in 0..m {
+                    let idle = st.avail[p] == 0 && !st.core_used[p];
+                    if idle {
+                        if tried_idle {
+                            continue;
+                        }
+                        tried_idle = true;
+                    }
+                    let start = earliest_start(g, &st, v, p);
+                    let fin = start + g.wcet(v);
+                    if fin.max(st.makespan) >= b0 {
+                        continue;
+                    }
+                    let mut child = prefix.clone();
+                    child.push((v, p));
+                    next.push(child);
+                }
+            }
+        }
+        frontier = next;
+    }
+    terminals.extend(frontier);
+    terminals
+}
+
+/// Precomputed per-graph context shared by every subtree task of one
+/// stage (levels + O(n²) equivalence classes are computed once, not per
+/// task).
+pub(crate) struct StagePrep {
+    pub(crate) levels: Vec<Cycles>,
+    pub(crate) eq_leader: Vec<NodeId>,
+}
+
+impl StagePrep {
+    pub(crate) fn new(g: &Dag) -> Self {
+        Self { levels: static_levels(g), eq_leader: equivalence_leaders(g) }
+    }
+}
+
+/// Solve one subtree to exhaustion (or budget/deadline): fresh trail-backed
+/// state, the prefix replayed, then the ordinary trail DFS. Improvements
+/// are published to `shared`; pruning consults it only when
+/// `consult_shared` (live bound sharing, non-byte-deterministic). `best`
+/// is `Some` only when a schedule strictly better than `b0` was found.
+pub(crate) fn solve_prefix(
+    g: &Dag,
+    m: usize,
+    prep: &StagePrep,
+    prefix: &[(NodeId, usize)],
+    b0: Cycles,
+    shared: Option<&Incumbent>,
+    consult_shared: bool,
+    node_limit: Option<u64>,
+    deadline: Instant,
+    memo_capacity: usize,
+) -> SubtreeOutcome {
+    let ctx = Ctx {
+        g,
+        m,
+        levels: &prep.levels,
+        eq_leader: &prep.eq_leader,
+        deadline,
+        node_limit,
+        shared,
+        consult_shared,
+    };
+    let mut st = PartialState::root(g, m, ctx.levels);
+    replay_prefix(g, ctx.levels, &mut st, prefix);
+    let mut search = SearchState {
+        best: Schedule::new(m),
+        best_ms: b0,
+        seen: DominanceMemo::new(memo_capacity),
+        explored: 0,
+        timed_out: false,
+        budget_out: false,
+    };
+    dfs(&ctx, &mut st, &mut search);
+    SubtreeOutcome {
+        best: if search.best_ms < b0 { Some(search.best) } else { None },
+        exhausted: !search.timed_out && !search.budget_out,
+        timed_out: search.timed_out,
+        explored: search.explored,
     }
 }
 
@@ -515,7 +766,7 @@ mod tests {
         let g = paper_example_dag();
         for m in 2..=3 {
             let ish = Ish.schedule(&g, m).schedule.makespan();
-            let r = ChouChung { timeout: Duration::from_secs(20), node_limit: None }
+            let r = ChouChung { timeout: Duration::from_secs(20), ..Default::default() }
                 .schedule(&g, m);
             assert!(r.optimal, "m={m} should finish in time");
             assert!(r.schedule.makespan() <= ish, "m={m}");
@@ -528,6 +779,7 @@ mod tests {
         let solver = ChouChung {
             timeout: Duration::from_secs(3600),
             node_limit: Some(2000),
+            ..Default::default()
         };
         let a = solver.schedule(&g, 4);
         let b = solver.schedule(&g, 4);
@@ -536,6 +788,75 @@ mod tests {
         assert_eq!(a.explored, b.explored);
         assert_eq!(a.schedule.makespan(), b.schedule.makespan());
         assert_eq!(check_valid(&g, &a.schedule), Ok(()));
+    }
+
+    #[test]
+    fn memo_stays_under_capacity_across_long_insert_streams() {
+        // 10× the capacity in distinct signatures: the generation flush
+        // must keep the held count under the cap at every step.
+        let cap = 64;
+        let mut memo = DominanceMemo::new(cap);
+        for i in 0..(10 * cap as u64) {
+            assert!(memo.insert(i % 7, i), "distinct signatures are always fresh");
+            assert!(memo.len() <= cap, "cap violated at insert {i}");
+        }
+        assert!(memo.flushes() >= 9, "ten caps of inserts need ≥9 flushes");
+        assert!(memo.peak() <= cap);
+        // A flushed signature re-inserts as fresh (re-exploration, sound).
+        assert!(memo.insert(0, 0));
+    }
+
+    #[test]
+    fn memo_deduplicates_within_a_generation() {
+        let mut memo = DominanceMemo::new(16);
+        assert!(memo.insert(1, 42));
+        assert!(!memo.insert(1, 42), "second visit is dominated");
+        assert!(memo.insert(2, 42), "same signature, different group");
+        assert_eq!(memo.len(), 2);
+    }
+
+    #[test]
+    fn tight_memo_capacity_still_finds_paper_example_optimum() {
+        // A cap far below the search's signature count forces many
+        // generation flushes mid-run; the optimum must be unaffected
+        // (the memo only prunes re-visits, it never cuts new ground).
+        let g = paper_example_dag();
+        for m in 2..=3 {
+            let loose = ChouChung::default().schedule(&g, m);
+            let tight = ChouChung { memo_capacity: 32, ..Default::default() }.schedule(&g, m);
+            assert!(loose.optimal && tight.optimal, "m={m}");
+            assert_eq!(loose.schedule.makespan(), tight.schedule.makespan(), "m={m}");
+            assert_eq!(check_valid(&g, &tight.schedule), Ok(()));
+        }
+    }
+
+    #[test]
+    fn multiroot_subtrees_cover_the_optimum() {
+        // Union of the enumerated subtrees must contain the optimal
+        // schedule: solving every prefix against the serial bound and
+        // reducing by makespan equals the sequential solver's optimum.
+        let g = paper_example_dag();
+        let m = 2;
+        let seq = ChouChung::default().schedule(&g, m);
+        assert!(seq.optimal);
+        let b0 = g.total_wcet(); // serial incumbent, same seed as `run`
+        let prep = StagePrep::new(&g);
+        let prefixes = enumerate_prefixes(&g, m, &prep, b0, 8, 4);
+        assert!(prefixes.len() > 1, "paper example must split into several roots");
+        let deadline = Instant::now() + Duration::from_secs(120);
+        let mut best: Option<Cycles> = None;
+        let mut exhausted = true;
+        for p in &prefixes {
+            let out = solve_prefix(&g, m, &prep, p, b0, None, false, None, deadline, 1 << 16);
+            exhausted &= out.exhausted;
+            if let Some(s) = out.best {
+                assert_eq!(check_valid(&g, &s), Ok(()));
+                let ms = s.makespan();
+                best = Some(best.map_or(ms, |b: Cycles| b.min(ms)));
+            }
+        }
+        assert!(exhausted);
+        assert_eq!(best, Some(seq.schedule.makespan()));
     }
 
     #[test]

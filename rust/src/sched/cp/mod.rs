@@ -30,8 +30,10 @@
 mod state;
 
 pub use state::Encoding;
+pub(crate) use state::Bin;
 use state::State;
 
+use super::portfolio::{Incumbent, SubtreeOutcome};
 use super::{check_valid, prune_redundant, Schedule, Scheduler, SolveResult};
 use crate::graph::{critical_path_len, static_levels, Cycles, Dag};
 use std::time::{Duration, Instant};
@@ -120,6 +122,8 @@ impl CpSolver {
             best_ms: &mut best_ms,
             best: &mut best,
             found_leaf: &mut found_leaf,
+            shared: None,
+            consult_shared: false,
         };
         let exhausted = if *search.best_ms <= cp_lb {
             true // warm start already matches the absolute lower bound
@@ -190,12 +194,29 @@ struct Search<'a> {
     best_ms: &'a mut Cycles,
     best: &'a mut Schedule,
     found_leaf: &'a mut bool,
+    /// Portfolio hook: the cross-worker incumbent. Improvements are
+    /// always published; it is consulted for pruning/propagation only
+    /// when `consult_shared` (live bound sharing — see `sched::portfolio`
+    /// for the determinism trade-off).
+    shared: Option<&'a Incumbent>,
+    consult_shared: bool,
 }
 
 impl<'a> Search<'a> {
     /// True once either stop condition fired; the search unwinds.
     fn stopped(&self) -> bool {
         self.timed_out || self.budget_out
+    }
+
+    /// Upper bound used for propagation and pruning: the local incumbent,
+    /// tightened by the cross-worker bound when live sharing is enabled.
+    /// With sharing off (every sequential solve) this is exactly
+    /// `best_ms`, so the trail/reference parity is untouched.
+    fn cap(&self) -> Cycles {
+        match self.shared {
+            Some(inc) if self.consult_shared => (*self.best_ms).min(inc.bound()),
+            _ => *self.best_ms,
+        }
     }
 
     /// Shared prologue of both searches: count the node, fire the stop
@@ -224,6 +245,9 @@ impl<'a> Search<'a> {
             if ms < *self.best_ms {
                 *self.best_ms = ms;
                 *self.best = sched;
+                if let Some(inc) = self.shared {
+                    inc.offer(ms);
+                }
             }
         }
     }
@@ -238,11 +262,11 @@ impl<'a> Search<'a> {
         // Propagate to fixpoint under the current incumbent bound. All
         // prunings are trailed, so the caller's undo removes them even on
         // the infeasible path.
-        if !st.propagate(self.g, self.m, self.levels, self.encoding, *self.best_ms) {
+        if !st.propagate(self.g, self.m, self.levels, self.encoding, self.cap()) {
             return true; // infeasible or dominated: pruned subtree, fully explored
         }
         // Lower bound pruning.
-        if st.lower_bound(self.g, self.m, self.levels) >= *self.best_ms {
+        if st.lower_bound(self.g, self.m, self.levels) >= self.cap() {
             return true;
         }
         // Branch on the next undecided binary (greedy value first).
@@ -265,7 +289,7 @@ impl<'a> Search<'a> {
         // order-branching below then searches only for improvements.
         if st.is_assignment_complete() {
             self.offer_incumbent(st.greedy_complete(self.g, self.m, self.levels));
-            if st.lower_bound(self.g, self.m, self.levels) >= *self.best_ms {
+            if st.lower_bound(self.g, self.m, self.levels) >= self.cap() {
                 return true; // the heuristic already matched the bound here
             }
         }
@@ -295,10 +319,10 @@ impl<'a> Search<'a> {
         if !self.enter_node() {
             return false;
         }
-        if !st.propagate(self.g, self.m, self.levels, self.encoding, *self.best_ms) {
+        if !st.propagate(self.g, self.m, self.levels, self.encoding, self.cap()) {
             return true;
         }
-        if st.lower_bound(self.g, self.m, self.levels) >= *self.best_ms {
+        if st.lower_bound(self.g, self.m, self.levels) >= self.cap() {
             return true;
         }
         if let Some((var, first)) = st.pick_branch(self.g, self.m, self.encoding) {
@@ -317,7 +341,7 @@ impl<'a> Search<'a> {
         }
         if st.is_assignment_complete() {
             self.offer_incumbent(st.greedy_complete(self.g, self.m, self.levels));
-            if st.lower_bound(self.g, self.m, self.levels) >= *self.best_ms {
+            if st.lower_bound(self.g, self.m, self.levels) >= self.cap() {
                 return true;
             }
         }
@@ -336,6 +360,152 @@ impl<'a> Search<'a> {
         }
         self.offer_incumbent(st.extract(self.g, self.m));
         true
+    }
+}
+
+// ------------------------------------------------------------------------
+// Multi-root hooks for `sched::portfolio`: split the CP search into
+// disjoint subtrees along the first binary decisions.
+
+/// One branching prefix: the first `(variable, value)` decisions of the
+/// DFS, in the exact order the sequential search would take them.
+pub(crate) type CpPrefix = Vec<(Bin, i8)>;
+
+/// Replay a prefix on `st`, interleaving the node-entry propagation (with
+/// the fixed bound `b0`) exactly as the DFS would. Returns false when
+/// propagation or the assignment proves the subtree contains no schedule
+/// better than `b0` — i.e. the subtree is exhausted with nothing found.
+fn replay_cp_prefix(
+    st: &mut State,
+    g: &Dag,
+    m: usize,
+    levels: &[Cycles],
+    encoding: Encoding,
+    b0: Cycles,
+    prefix: &[(Bin, i8)],
+) -> bool {
+    for &(var, val) in prefix {
+        if !st.propagate(g, m, levels, encoding, b0) {
+            return false;
+        }
+        if !st.assign(var, val) {
+            return false;
+        }
+    }
+    true
+}
+
+/// Enumerate disjoint subtree roots: breadth-first expansion of the first
+/// binary decisions (both values of each `pick_branch` variable, in the
+/// DFS's value order) until at least `target` roots exist or `max_depth`
+/// levels were expanded. Prefixes dropped along the way are *proven* to
+/// contain nothing better than `b0` (failed propagation / lower-bound
+/// cut), so the returned subtrees jointly cover every improving
+/// schedule. Fully deterministic: only the fixed bound `b0` is consulted.
+pub(crate) fn enumerate_prefixes(
+    g: &Dag,
+    m: usize,
+    encoding: Encoding,
+    levels: &[Cycles],
+    b0: Cycles,
+    target: usize,
+    max_depth: usize,
+) -> Vec<CpPrefix> {
+    let sink = g
+        .single_sink()
+        .expect("CP multi-root split requires a single-sink DAG");
+    let mut terminals: Vec<CpPrefix> = Vec::new();
+    let mut frontier: Vec<CpPrefix> = vec![Vec::new()];
+    for _depth in 0..max_depth {
+        if terminals.len() + frontier.len() >= target || frontier.is_empty() {
+            break;
+        }
+        let mut next: Vec<CpPrefix> = Vec::new();
+        for prefix in frontier {
+            let mut st = State::root(g, m, sink, encoding);
+            if !replay_cp_prefix(&mut st, g, m, levels, encoding, b0, &prefix) {
+                continue; // proven empty below b0
+            }
+            if !st.propagate(g, m, levels, encoding, b0) {
+                continue;
+            }
+            if st.lower_bound(g, m, levels) >= b0 {
+                continue;
+            }
+            match st.pick_branch(g, m, encoding) {
+                Some((var, first)) => {
+                    let mut a = prefix.clone();
+                    a.push((var, first));
+                    next.push(a);
+                    let mut b = prefix;
+                    b.push((var, 1 - first));
+                    next.push(b);
+                }
+                // No binary left: order-branching / leaf territory — keep
+                // the prefix as its own task.
+                None => terminals.push(prefix),
+            }
+        }
+        frontier = next;
+    }
+    terminals.extend(frontier);
+    terminals
+}
+
+/// Solve one subtree to exhaustion (or budget/deadline): fresh state, the
+/// prefix replayed under the fixed bound `b0`, then the ordinary trail
+/// DFS. Improvements are published to `shared`; pruning/propagation
+/// consults it only when `consult_shared` (live bound sharing,
+/// non-byte-deterministic). `best` is `Some` only when a schedule
+/// strictly better than `b0` was found.
+pub(crate) fn solve_prefix(
+    g: &Dag,
+    m: usize,
+    encoding: Encoding,
+    levels: &[Cycles],
+    prefix: &[(Bin, i8)],
+    b0: Cycles,
+    shared: Option<&Incumbent>,
+    consult_shared: bool,
+    node_limit: Option<u64>,
+    deadline: Instant,
+) -> SubtreeOutcome {
+    let sink = g
+        .single_sink()
+        .expect("CP multi-root split requires a single-sink DAG");
+    let mut best = Schedule::new(m);
+    let mut best_ms = b0;
+    let mut found_leaf = false;
+    let mut st = State::root(g, m, sink, encoding);
+    if !replay_cp_prefix(&mut st, g, m, levels, encoding, b0, prefix) {
+        return SubtreeOutcome { best: None, exhausted: true, timed_out: false, explored: 0 };
+    }
+    let mut search = Search {
+        g,
+        m,
+        levels,
+        encoding,
+        deadline,
+        node_limit,
+        explored: 0,
+        timed_out: false,
+        budget_out: false,
+        best_ms: &mut best_ms,
+        best: &mut best,
+        found_leaf: &mut found_leaf,
+        shared,
+        consult_shared,
+    };
+    let exhausted = search.dfs(&mut st);
+    let cut = search.timed_out || search.budget_out;
+    let timed_out = search.timed_out;
+    let explored = search.explored;
+    drop(search);
+    SubtreeOutcome {
+        best: if best_ms < b0 { Some(best) } else { None },
+        exhausted: exhausted && !cut,
+        timed_out,
+        explored,
     }
 }
 
@@ -500,6 +670,47 @@ mod tests {
         };
         let out = CpSolver::new(cfg).solve(&g, 2);
         assert!(out.result.schedule.makespan() <= dsh_ms);
+    }
+
+    #[test]
+    fn multiroot_subtrees_cover_the_optimum() {
+        // Union of the enumerated subtrees must contain the optimal
+        // schedule: solving every prefix against the serial bound and
+        // reducing by makespan equals the sequential solver's optimum.
+        let mut g = paper_example_dag();
+        ensure_single_sink(&mut g);
+        let m = 2;
+        let seq = solve(&g, m, Encoding::Improved, 60);
+        assert!(seq.result.optimal);
+        let b0 = serial_schedule(&g, m).makespan();
+        let levels = static_levels(&g);
+        let prefixes = enumerate_prefixes(&g, m, Encoding::Improved, &levels, b0, 8, 6);
+        assert!(prefixes.len() > 1, "paper example must split into several roots");
+        let deadline = Instant::now() + Duration::from_secs(120);
+        let mut best: Option<Cycles> = None;
+        let mut exhausted = true;
+        for p in &prefixes {
+            let out = solve_prefix(
+                &g,
+                m,
+                Encoding::Improved,
+                &levels,
+                p,
+                b0,
+                None,
+                false,
+                None,
+                deadline,
+            );
+            exhausted &= out.exhausted;
+            if let Some(s) = out.best {
+                assert!(check_valid(&g, &s).is_ok());
+                let ms = s.makespan();
+                best = Some(best.map_or(ms, |b: Cycles| b.min(ms)));
+            }
+        }
+        assert!(exhausted);
+        assert_eq!(best, Some(seq.result.schedule.makespan()));
     }
 
     #[test]

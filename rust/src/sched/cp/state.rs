@@ -41,6 +41,9 @@ struct Ctx {
     /// improved encoding; `m` (no cap beyond one-per-core) for Tang.
     max_dup: Vec<usize>,
     topo: Vec<NodeId>,
+    /// Node WCETs, copied in so reversible-load maintenance (and its
+    /// undo) needs no `&Dag`.
+    wcet: Vec<Cycles>,
 }
 
 /// A partial assignment: ternary binaries + start-time interval bounds +
@@ -58,7 +61,12 @@ pub struct State {
     s_ub: Vec<Cycles>,
     /// Committed disjunctions: (core, a, b) ⇒ f_{a,core} ≤ s_{b,core}.
     orders: Vec<(u16, u16, u16)>,
-    /// Undo log: every mutation of the five fields above is recorded here
+    /// Per-core committed compute load: `Σ t(v)` over `x_{v,p} = 1`.
+    /// Maintained incrementally by [`State::set_x`] and restored by
+    /// [`State::undo_to`], so `pick_branch` no longer re-scans the whole
+    /// `x` matrix (O(n·m) per search node — a ROADMAP hot spot).
+    load: Vec<Cycles>,
+    /// Undo log: every mutation of the fields above is recorded here
     /// so the search can backtrack without cloning.
     trail: Trail<CpOp>,
 }
@@ -79,7 +87,15 @@ impl State {
                 }
             })
             .collect();
-        let ctx = Arc::new(Ctx { n, m, sink, edges: edges.clone(), max_dup, topo: g.topo_order() });
+        let ctx = Arc::new(Ctx {
+            n,
+            m,
+            sink,
+            edges: edges.clone(),
+            max_dup,
+            topo: g.topo_order(),
+            wcet: (0..n).map(|v| g.wcet(v)).collect(),
+        });
         let horizon = g.total_wcet();
         let d_len = match encoding {
             Encoding::Tang => edges.len() * m * m,
@@ -92,6 +108,7 @@ impl State {
             s_lb: vec![0; n * m],
             s_ub: vec![horizon; n * m],
             orders: Vec::new(),
+            load: vec![0; m],
             trail: Trail::new(),
         }
     }
@@ -111,6 +128,14 @@ impl State {
     #[inline]
     fn set_x(&mut self, idx: usize, val: i8) {
         self.trail.push(CpOp::X { idx: idx as u32, prev: self.x[idx] });
+        let p = idx % self.ctx.m;
+        let t = self.ctx.wcet[idx / self.ctx.m];
+        if self.x[idx] == 1 {
+            self.load[p] -= t;
+        }
+        if val == 1 {
+            self.load[p] += t;
+        }
         self.x[idx] = val;
     }
 
@@ -143,7 +168,18 @@ impl State {
     pub fn undo_to(&mut self, mark: Mark) {
         while self.trail.above(mark) {
             match self.trail.pop().expect("trail entries above mark") {
-                CpOp::X { idx, prev } => self.x[idx as usize] = prev,
+                CpOp::X { idx, prev } => {
+                    let idx = idx as usize;
+                    let p = idx % self.ctx.m;
+                    let t = self.ctx.wcet[idx / self.ctx.m];
+                    if self.x[idx] == 1 {
+                        self.load[p] -= t;
+                    }
+                    if prev == 1 {
+                        self.load[p] += t;
+                    }
+                    self.x[idx] = prev;
+                }
                 CpOp::D { idx, prev } => self.d[idx as usize] = prev,
                 CpOp::Lb { idx, prev } => self.s_lb[idx as usize] = prev,
                 CpOp::Ub { idx, prev } => self.s_ub[idx as usize] = prev,
@@ -558,14 +594,13 @@ impl State {
         // max(data-arrival lower bound, committed load of p). Without the
         // load term every s_lb is 0 at the root and the first dive packs
         // one core — i.e. the serial schedule.
-        let mut load = vec![0u64; m];
-        for v in 0..self.ctx.n {
-            for p in 0..m {
-                if self.xi(v, p) == 1 {
-                    load[p] += g.wcet(v);
-                }
-            }
-        }
+        //
+        // The committed loads are maintained on the trail (see
+        // `State::load`) instead of being re-scanned O(n·m) here, on the
+        // hot path of every search node; the assert pins the incremental
+        // values to the scan they replaced.
+        debug_assert_eq!(self.load, self.scan_load(g, m), "incremental load diverged");
+        let load = &self.load;
         for &v in &self.ctx.topo {
             let has_instance = (0..m).any(|p| self.xi(v, p) == 1);
             let mut best: Option<(usize, Cycles)> = None;
@@ -590,6 +625,20 @@ impl State {
             }
         }
         None
+    }
+
+    /// The O(n·m) committed-load scan the trailed `load` vector replaced;
+    /// kept as the `debug_assert` witness in `pick_branch`.
+    fn scan_load(&self, g: &Dag, m: usize) -> Vec<Cycles> {
+        let mut load = vec![0u64; m];
+        for v in 0..self.ctx.n {
+            for p in 0..m {
+                if self.xi(v, p) == 1 {
+                    load[p] += g.wcet(v);
+                }
+            }
+        }
+        load
     }
 
     /// An unordered, possibly-overlapping same-core pair, if any remains.
@@ -712,7 +761,14 @@ mod tests {
     use crate::util::proptest::for_all_seeds;
     use crate::util::rng::SplitMix64;
 
-    type Snapshot = (Vec<i8>, Vec<i8>, Vec<Cycles>, Vec<Cycles>, Vec<(u16, u16, u16)>);
+    type Snapshot = (
+        Vec<i8>,
+        Vec<i8>,
+        Vec<Cycles>,
+        Vec<Cycles>,
+        Vec<(u16, u16, u16)>,
+        Vec<Cycles>,
+    );
 
     fn snapshot(st: &State) -> Snapshot {
         (
@@ -721,6 +777,7 @@ mod tests {
             st.s_lb.clone(),
             st.s_ub.clone(),
             st.orders.clone(),
+            st.load.clone(),
         )
     }
 
@@ -801,5 +858,44 @@ mod tests {
         let _feasible = st.propagate(&g, m, &levels, encoding, tight_ub);
         st.undo_to(mark);
         assert_eq!(snapshot(&st), snap);
+    }
+
+    /// The trailed per-core loads must equal the full x-matrix scan at
+    /// every point of a propagate/assign/undo round trip.
+    #[test]
+    fn incremental_load_matches_scan() {
+        for_all_seeds("cp-load-parity", 12, |seed| {
+            let mut g = generate(&DagGenConfig::paper(10), seed + 3);
+            ensure_single_sink(&mut g);
+            let sink = g.single_sink().expect("single sink");
+            let levels = static_levels(&g);
+            let m = 2 + (seed as usize % 3);
+            let ub = g.total_wcet() + 1;
+            let encoding = Encoding::Improved;
+            let mut rng = SplitMix64::new(seed ^ 0x10AD);
+            let mut st = State::root(&g, m, sink, encoding);
+            let mut marks = Vec::new();
+            for _ in 0..30 {
+                assert_eq!(st.load, st.scan_load(&g, m));
+                if rng.next_below(3) < 2 {
+                    let mark = st.mark();
+                    if let Some((var, first)) = st.pick_branch(&g, m, encoding) {
+                        let val = if rng.next_below(2) == 0 { first } else { 1 - first };
+                        st.assign(var, val);
+                        st.propagate(&g, m, &levels, encoding, ub);
+                        marks.push(mark);
+                    } else {
+                        st.undo_to(mark);
+                    }
+                } else if let Some(mark) = marks.pop() {
+                    st.undo_to(mark);
+                }
+            }
+            while let Some(mark) = marks.pop() {
+                st.undo_to(mark);
+                assert_eq!(st.load, st.scan_load(&g, m));
+            }
+            assert_eq!(st.load, vec![0; m], "full unwind restores empty loads");
+        });
     }
 }

@@ -1,0 +1,93 @@
+//! Highest Level First with Estimated Times (Adam/Chandy/Dickson; the
+//! baseline Kruatrachue's §3.3 heuristics extend).
+//!
+//! Plain level-ordered list scheduling: pop the highest-level ready node,
+//! place it on the core minimizing its earliest start, repeat. No
+//! insertion step (ISH) and no duplication (DSH) — which makes it the
+//! cheapest member of the `sched::portfolio` heuristic race and a useful
+//! floor in the solver comparisons.
+
+use super::list::ListState;
+use super::{Scheduler, SolveResult};
+use crate::graph::Dag;
+use std::time::Instant;
+
+/// The HLFET solver.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Hlfet;
+
+impl Scheduler for Hlfet {
+    fn name(&self) -> &'static str {
+        "HLFET"
+    }
+
+    fn schedule(&self, g: &Dag, m: usize) -> SolveResult {
+        let t0 = Instant::now();
+        let mut st = ListState::new(g, m);
+        let mut explored = 0u64;
+        while let Some(v) = st.pop_ready() {
+            explored += 1;
+            let (p, start) = st.best_core(v);
+            st.commit(v, p, start);
+        }
+        SolveResult {
+            schedule: st.schedule,
+            optimal: false,
+            solve_time: t0.elapsed(),
+            explored,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::paper_example_dag;
+    use crate::sched::{check_valid, ish::Ish};
+
+    #[test]
+    fn valid_on_example_dag() {
+        let g = paper_example_dag();
+        for m in 1..=4 {
+            let r = Hlfet.schedule(&g, m);
+            assert_eq!(check_valid(&g, &r.schedule), Ok(()), "m={m}");
+            assert_eq!(r.schedule.len(), g.n());
+            assert_eq!(r.schedule.duplication_count(), 0);
+        }
+    }
+
+    #[test]
+    fn single_core_equals_total_wcet() {
+        let g = paper_example_dag();
+        let r = Hlfet.schedule(&g, 1);
+        assert_eq!(r.schedule.makespan(), g.total_wcet());
+    }
+
+    #[test]
+    fn comparable_to_ish_on_paper_example() {
+        // ISH is HLFET plus gap insertion. Insertion is not a theorem-level
+        // improvement (list-scheduling anomalies exist), so don't pin an
+        // inequality — pin that both produce sane schedules of the same
+        // node set, and that HLFET never duplicates.
+        let g = paper_example_dag();
+        for m in 2..=6 {
+            let hlfet = Hlfet.schedule(&g, m).schedule;
+            let ish = Ish.schedule(&g, m).schedule;
+            assert!(hlfet.makespan() <= g.total_wcet(), "m={m}");
+            assert_eq!(hlfet.len(), ish.len(), "m={m}: same node set scheduled");
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let g = crate::daggen::generate(&crate::daggen::DagGenConfig::paper(30), 11);
+        let a = Hlfet.schedule(&g, 4);
+        let b = Hlfet.schedule(&g, 4);
+        let pa: Vec<_> = a.schedule.iter().copied().collect();
+        let pb: Vec<_> = b.schedule.iter().copied().collect();
+        assert_eq!(pa.len(), pb.len());
+        for (x, y) in pa.iter().zip(&pb) {
+            assert_eq!((x.node, x.core, x.start), (y.node, y.core, y.start));
+        }
+    }
+}

@@ -17,11 +17,16 @@ pub struct Hybrid {
     /// Budget for the CP refinement phase (DSH itself is unbudgeted: it is
     /// orders of magnitude faster, §4.2 Observation 3).
     pub cp_timeout: Duration,
+    /// Optional deterministic node budget for the CP refinement: with a
+    /// budget (instead of the wall clock) as the binding cut, a
+    /// truncated hybrid result is reproducible across machines — the
+    /// same discipline `sched::portfolio` uses for its racers.
+    pub cp_node_limit: Option<u64>,
 }
 
 impl Default for Hybrid {
     fn default() -> Self {
-        Self { cp_timeout: Duration::from_secs(10) }
+        Self { cp_timeout: Duration::from_secs(10), cp_node_limit: None }
     }
 }
 
@@ -37,7 +42,7 @@ impl Scheduler for Hybrid {
             encoding: Encoding::Improved,
             timeout: self.cp_timeout,
             warm_start: Some(seed.schedule.clone()),
-            node_limit: None,
+            node_limit: self.cp_node_limit,
         };
         let out = CpSolver::new(cfg).solve(g, m);
         let mut res = out.result;
@@ -63,6 +68,19 @@ mod tests {
             assert!(hy.schedule.makespan() <= dsh, "m={m}");
             assert_eq!(check_valid(&g, &hy.schedule), Ok(()));
         }
+    }
+
+    #[test]
+    fn node_budgeted_hybrid_is_reproducible() {
+        // With the node budget (not the wall clock) as the binding cut,
+        // two runs must walk the identical CP tree.
+        let g = crate::daggen::generate(&crate::daggen::DagGenConfig::paper(30), 5);
+        let h = Hybrid { cp_timeout: Duration::from_secs(3600), cp_node_limit: Some(300) };
+        let a = h.schedule(&g, 4);
+        let b = h.schedule(&g, 4);
+        assert_eq!(a.explored, b.explored);
+        assert_eq!(a.schedule.makespan(), b.schedule.makespan());
+        assert_eq!(check_valid(&g, &a.schedule), Ok(()));
     }
 
     #[test]

@@ -29,13 +29,26 @@
 //! affected index rows (k = instances on one core / of one node), and
 //! `remove` only rescans for the makespan when the removed instance was
 //! the latest finisher.
+//!
+//! # Solvers
+//!
+//! Heuristics: [`hlfet`] (plain level-ordered list scheduling), [`ish`]
+//! (plus gap insertion), [`dsh`] (plus critical-parent duplication),
+//! [`hybrid`] (DSH warm start + CP refinement). Exact: [`bnb`]
+//! (Chou–Chung, duplication-free) and [`cp`] (both §3.1/§3.2 encodings),
+//! both trail-based ([`trail`]). [`portfolio`] races all of them across
+//! worker threads behind one deterministic `solve()` with a schedule
+//! cache — the recommended entry point when the caller just wants the
+//! best schedule the crate can find.
 
 pub mod bnb;
 pub mod cp;
 pub mod dsh;
+pub mod hlfet;
 pub mod hybrid;
 pub mod ish;
 pub mod list;
+pub mod portfolio;
 mod program;
 pub mod trail;
 mod validity;

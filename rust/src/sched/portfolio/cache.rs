@@ -1,0 +1,189 @@
+//! Schedule cache: canonical-keyed memoization of portfolio solves.
+//!
+//! The serving scenario issues the *same* network DAG over and over (one
+//! schedule per deployed model × core count); solving it once and
+//! replaying the cached schedule turns every repeat request into a hash
+//! lookup. Keys are the full canonical encoding of `(DAG structure,
+//! WCETs, edge latencies, m, solver configuration)` — the cost model is
+//! already folded into the DAG's weights by `Network::to_dag`, so
+//! DAG + m + config is exactly "same problem". Storing the complete key
+//! (not a 64-bit digest) rules out hash-collision false hits.
+
+use super::super::Schedule;
+use crate::graph::Dag;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+/// Canonical cache key: `[n, m, salt…, per-node wcet + out-edges…]`.
+/// Structurally identical DAGs produce identical keys regardless of node
+/// names; any difference in shape, weights, core count or solver salt
+/// produces a different key.
+pub fn canonical_key(g: &Dag, m: usize, salt: &[u64]) -> Vec<u64> {
+    let mut key = Vec::with_capacity(2 + salt.len() + 2 * g.n() + 2 * g.edge_count());
+    key.push(g.n() as u64);
+    key.push(m as u64);
+    key.extend_from_slice(salt);
+    for v in 0..g.n() {
+        key.push(g.wcet(v));
+        key.push(g.children(v).len() as u64);
+        for &(c, w) in g.children(v) {
+            key.push(c as u64);
+            key.push(w);
+        }
+    }
+    key
+}
+
+/// A cached solve: everything needed to answer a repeat request without
+/// searching.
+#[derive(Debug, Clone)]
+pub struct CachedSolve {
+    pub schedule: Schedule,
+    pub optimal: bool,
+}
+
+/// Hit/miss/eviction counters (monotonic over the cache's lifetime).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub len: usize,
+}
+
+struct Inner {
+    /// Entries are `Arc`ed so a hit is a refcount bump under the lock —
+    /// the deep `Schedule` copy (if the caller needs one) happens outside.
+    map: HashMap<Vec<u64>, Arc<CachedSolve>>,
+    /// Insertion order for FIFO eviction (deterministic, unlike iterating
+    /// the randomized-seed `HashMap`).
+    order: VecDeque<Vec<u64>>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Capacity-bounded, thread-safe schedule cache (FIFO eviction).
+pub struct ScheduleCache {
+    inner: Mutex<Inner>,
+    capacity: usize,
+}
+
+impl ScheduleCache {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                order: VecDeque::new(),
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Look a key up, counting the hit or miss. A hit costs one `Arc`
+    /// clone while the lock is held.
+    pub fn get(&self, key: &[u64]) -> Option<Arc<CachedSolve>> {
+        let mut inner = self.inner.lock().expect("cache mutex");
+        match inner.map.get(key).cloned() {
+            Some(hit) => {
+                inner.hits += 1;
+                Some(hit)
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a solve, evicting the oldest entry when full. Re-inserting
+    /// an existing key overwrites in place (no second order slot).
+    pub fn insert(&self, key: Vec<u64>, value: CachedSolve) {
+        let value = Arc::new(value);
+        let mut inner = self.inner.lock().expect("cache mutex");
+        if inner.map.insert(key.clone(), value).is_some() {
+            return;
+        }
+        inner.order.push_back(key);
+        if inner.order.len() > self.capacity {
+            if let Some(old) = inner.order.pop_front() {
+                inner.map.remove(&old);
+                inner.evictions += 1;
+            }
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().expect("cache mutex");
+        CacheStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            len: inner.map.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::paper_example_dag;
+
+    fn dummy(ms_seed: u64) -> CachedSolve {
+        let g = paper_example_dag();
+        let mut s = Schedule::new(2);
+        s.place(&g, 0, 0, ms_seed);
+        CachedSolve { schedule: s, optimal: false }
+    }
+
+    #[test]
+    fn key_distinguishes_m_and_weights() {
+        let g = paper_example_dag();
+        let k1 = canonical_key(&g, 2, &[0]);
+        let k2 = canonical_key(&g, 3, &[0]);
+        let k3 = canonical_key(&g, 2, &[1]);
+        assert_ne!(k1, k2, "core count is part of the key");
+        assert_ne!(k1, k3, "config salt is part of the key");
+        let mut g2 = paper_example_dag();
+        g2.set_wcet(0, 99);
+        assert_ne!(k1, canonical_key(&g2, 2, &[0]), "WCETs are part of the key");
+        // Names are not: structural twins share a key.
+        assert_eq!(k1, canonical_key(&paper_example_dag(), 2, &[0]));
+    }
+
+    #[test]
+    fn hit_miss_and_eviction_counters() {
+        let g = paper_example_dag();
+        let cache = ScheduleCache::new(2);
+        let k1 = canonical_key(&g, 2, &[]);
+        let k2 = canonical_key(&g, 3, &[]);
+        let k3 = canonical_key(&g, 4, &[]);
+        assert!(cache.get(&k1).is_none());
+        cache.insert(k1.clone(), dummy(1));
+        assert!(cache.get(&k1).is_some());
+        cache.insert(k2.clone(), dummy(2));
+        cache.insert(k3.clone(), dummy(3)); // evicts k1 (FIFO)
+        assert!(cache.get(&k1).is_none(), "oldest entry evicted");
+        assert!(cache.get(&k2).is_some() && cache.get(&k3).is_some());
+        let stats = cache.stats();
+        assert_eq!(stats.hits, 3);
+        assert_eq!(stats.misses, 3);
+        assert_eq!(stats.evictions, 1);
+        assert_eq!(stats.len, 2);
+    }
+
+    #[test]
+    fn reinsert_overwrites_without_duplicate_order_slot() {
+        let g = paper_example_dag();
+        let cache = ScheduleCache::new(2);
+        let k = canonical_key(&g, 2, &[]);
+        cache.insert(k.clone(), dummy(1));
+        cache.insert(k.clone(), dummy(2));
+        assert_eq!(cache.stats().len, 1);
+        let hit = cache.get(&k).expect("present");
+        assert_eq!(hit.schedule.iter().next().map(|p| p.start), Some(2));
+    }
+}

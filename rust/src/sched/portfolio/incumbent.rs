@@ -1,0 +1,69 @@
+//! The shared incumbent bound: one `AtomicU64` every portfolio worker
+//! publishes improvements to, and (in live-sharing mode) prunes against.
+
+use crate::graph::Cycles;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Cross-worker upper bound on the makespan, monotonically decreasing.
+///
+/// `offer` is a lock-free CAS-min (`fetch_min`), so concurrent workers
+/// can publish without ever raising the bound; `bound` is a plain
+/// acquire load. The portfolio always *publishes* improvements here; it
+/// *consults* the bound for pruning only in live-sharing mode, because a
+/// timing-dependent bound makes per-worker explored sets (and therefore
+/// budgeted cuts) racy — see the `sched::portfolio` module docs.
+#[derive(Debug)]
+pub struct Incumbent {
+    bound: AtomicU64,
+}
+
+impl Incumbent {
+    /// Start from a known upper bound (the heuristic-race winner).
+    pub fn new(initial: Cycles) -> Self {
+        Self { bound: AtomicU64::new(initial) }
+    }
+
+    /// Current best makespan found anywhere.
+    pub fn bound(&self) -> Cycles {
+        self.bound.load(Ordering::Acquire)
+    }
+
+    /// Publish a makespan; returns true when it strictly improved the
+    /// shared bound (lock-free, never raises it).
+    pub fn offer(&self, ms: Cycles) -> bool {
+        self.bound.fetch_min(ms, Ordering::AcqRel) > ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offer_is_monotone_min() {
+        let inc = Incumbent::new(100);
+        assert_eq!(inc.bound(), 100);
+        assert!(inc.offer(90));
+        assert!(!inc.offer(95), "worse offers never move the bound");
+        assert_eq!(inc.bound(), 90);
+        assert!(!inc.offer(90), "equal offers are not improvements");
+        assert!(inc.offer(10));
+        assert_eq!(inc.bound(), 10);
+    }
+
+    #[test]
+    fn concurrent_offers_settle_on_the_minimum() {
+        let inc = Incumbent::new(u64::MAX);
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let inc = &inc;
+                s.spawn(move || {
+                    for i in 0..1000u64 {
+                        inc.offer(1 + ((i * 7 + t * 13) % 500));
+                    }
+                });
+            }
+        });
+        assert_eq!(inc.bound(), 1);
+    }
+}

@@ -1,0 +1,592 @@
+//! `sched::portfolio` — deterministic parallel solver portfolio.
+//!
+//! One `solve()` entry point that races every solver in the crate across
+//! worker threads and returns the best schedule found, byte-identically
+//! for **any** worker count:
+//!
+//! 1. **Heuristic race** — HLFET, ISH, DSH and the DSH+CP hybrid run
+//!    concurrently (one task each); the winner under the deterministic
+//!    reduction order becomes the incumbent and seeds the shared bound.
+//! 2. **Parallel exact stage** — the Chou–Chung branch-and-bound and the
+//!    improved-encoding CP search are each split into disjoint subtrees
+//!    by enumerating their first branching decisions (*multi-root
+//!    splitting*, `bnb::enumerate_prefixes` / `cp::enumerate_prefixes`).
+//!    Every subtree is an independent task with its own trail-backed
+//!    state (no clone-per-branch, per the PR-2 trail core) pulled by the
+//!    worker pool; improvements are published to a shared
+//!    [`Incumbent`] (`AtomicU64`). The BnB stage runs first and its
+//!    (deterministic) result tightens the bound the CP stage starts
+//!    from, so the CP workers prune against the best schedule found
+//!    anywhere earlier in the pipeline.
+//! 3. **Deterministic reduction** — candidates are compared by
+//!    `(makespan, placement list)` lexicographically, in a fixed
+//!    candidate order. Because every task is a pure function of
+//!    `(subtree, initial bound, budget)` and the reduction ignores
+//!    completion order, the returned schedule is byte-identical for 1,
+//!    2 or 8 workers (pinned by `tests/portfolio_determinism.rs`).
+//! 4. **Schedule cache** — solves are memoized under a canonical
+//!    `(DAG, m, config)` key ([`canonical_key`]); repeat requests
+//!    for the same network (the serving scenario) skip the search
+//!    entirely. The worker count is deliberately *not* part of the key:
+//!    results are worker-count-invariant by construction.
+//!
+//! # Determinism vs. live bound sharing
+//!
+//! By default each exact task prunes against
+//! `min(initial incumbent, its own local best)` — both deterministic —
+//! and only *publishes* to the shared [`Incumbent`]. Setting
+//! [`PortfolioConfig::share_bound`] makes tasks also *consult* the live
+//! shared bound: strictly more pruning and the classic portfolio
+//! speed-up, at the cost of byte-level placement determinism (the final
+//! **makespan** is still the same on exhaustive runs; which of several
+//! equal-makespan placements survives becomes timing-dependent, and
+//! budgeted cuts land at timing-dependent tree nodes). Wall-clock
+//! timeouts are a safety valve with the same caveat: determinism is
+//! guaranteed when node budgets (or exhaustion) are the binding cut.
+
+mod cache;
+mod incumbent;
+mod pool;
+
+pub use cache::{canonical_key, CacheStats, CachedSolve, ScheduleCache};
+pub use incumbent::Incumbent;
+pub use pool::parallel_map;
+
+use super::bnb;
+use super::cp;
+use super::cp::{CpConfig, CpSolver, Encoding};
+use super::dsh::Dsh;
+use super::hlfet::Hlfet;
+use super::ish::Ish;
+use super::{check_valid, Schedule, Scheduler, SolveResult};
+use crate::graph::{critical_path_len, ensure_single_sink, static_levels, Cycles, Dag, NodeId};
+use std::time::{Duration, Instant};
+
+/// Result of solving one subtree task (shared by the BnB and CP hooks).
+#[derive(Debug, Clone)]
+pub struct SubtreeOutcome {
+    /// A schedule strictly better than the task's initial bound, if any.
+    pub best: Option<Schedule>,
+    /// True when the subtree was fully explored (no budget/deadline cut).
+    pub exhausted: bool,
+    /// True when the wall-clock deadline (not a node budget) cut the
+    /// task — the one cut that makes a result machine-dependent.
+    pub timed_out: bool,
+    /// Search nodes entered by this task.
+    pub explored: u64,
+}
+
+/// Portfolio configuration. The defaults are fully deterministic; see the
+/// module docs for the [`PortfolioConfig::share_bound`] trade-off.
+#[derive(Debug, Clone)]
+pub struct PortfolioConfig {
+    /// Worker threads; 0 = `available_parallelism()` capped at 8. Never
+    /// affects the result, only wall-clock time.
+    pub workers: usize,
+    /// Minimum number of disjoint subtree roots to split each exact
+    /// search into (before proven-empty roots are dropped).
+    pub root_target: usize,
+    /// Depth cap on the root-splitting enumeration.
+    pub max_split_depth: usize,
+    /// Wall-clock safety valve for each exact stage.
+    pub exact_timeout: Duration,
+    /// Deterministic node budget *per subtree task*; `None` runs each
+    /// subtree to exhaustion (bounded by `exact_timeout`).
+    pub node_limit_per_root: Option<u64>,
+    /// Live bound sharing: exact tasks also prune against the shared
+    /// `AtomicU64` bound (faster, but placement-level determinism is
+    /// only guaranteed with this off — module docs).
+    pub share_bound: bool,
+    /// Run the duplication-free Chou–Chung BnB stage.
+    pub use_bnb: bool,
+    /// Run the CP stage (required for the `optimal` proof: only CP
+    /// covers the full duplication-aware schedule space).
+    pub use_cp: bool,
+    /// CP encoding for the exact stage.
+    pub encoding: Encoding,
+    /// Node budget of the CP refinement inside the heuristic-race hybrid
+    /// (a wall-clock budget there would be non-deterministic).
+    pub hybrid_node_limit: Option<u64>,
+    /// Dominance-memo capacity per BnB task (see `bnb::DominanceMemo`).
+    pub memo_capacity: usize,
+    /// Schedule-cache capacity (number of cached DAG/m/config keys).
+    pub cache_capacity: usize,
+}
+
+impl Default for PortfolioConfig {
+    fn default() -> Self {
+        Self {
+            workers: 0,
+            root_target: 16,
+            max_split_depth: 6,
+            exact_timeout: Duration::from_secs(10),
+            node_limit_per_root: None,
+            share_bound: false,
+            use_bnb: true,
+            use_cp: true,
+            encoding: Encoding::Improved,
+            hybrid_node_limit: Some(2_000),
+            memo_capacity: bnb::DEFAULT_MEMO_CAPACITY,
+            cache_capacity: 128,
+        }
+    }
+}
+
+impl PortfolioConfig {
+    /// Cache-key salt: every config field that can change the *result*.
+    /// Worker count and wall-clock timeouts are deliberately excluded
+    /// (worker-count invariance is guaranteed; timeouts are a safety
+    /// valve, not part of the problem identity).
+    fn salt(&self) -> Vec<u64> {
+        vec![
+            self.use_bnb as u64,
+            self.use_cp as u64,
+            self.share_bound as u64,
+            match self.encoding {
+                Encoding::Improved => 0,
+                Encoding::Tang => 1,
+            },
+            self.root_target as u64,
+            self.max_split_depth as u64,
+            self.node_limit_per_root.is_some() as u64,
+            self.node_limit_per_root.unwrap_or(0),
+            self.hybrid_node_limit.is_some() as u64,
+            self.hybrid_node_limit.unwrap_or(0),
+            self.memo_capacity as u64,
+        ]
+    }
+
+    fn resolved_workers(&self) -> usize {
+        if self.workers > 0 {
+            return self.workers;
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(8)
+    }
+}
+
+/// Extended solve report of one portfolio run.
+#[derive(Debug, Clone)]
+pub struct PortfolioOutcome {
+    pub result: SolveResult,
+    /// True when the schedule came straight from the cache (no search).
+    pub from_cache: bool,
+    /// Which stage-1 racer produced the incumbent ("cache" on a hit).
+    pub incumbent_source: &'static str,
+    /// Number of disjoint BnB subtree roots solved.
+    pub roots_bnb: usize,
+    /// Number of disjoint CP subtree roots solved.
+    pub roots_cp: usize,
+}
+
+/// Outcome of one engine's multi-root exact stage (public so the
+/// differential tests can pit it against the sequential solvers).
+#[derive(Debug, Clone)]
+pub struct ExactStage {
+    /// Best schedule strictly better than the stage's initial bound.
+    pub best: Option<Schedule>,
+    /// True when every subtree was fully explored.
+    pub exhausted: bool,
+    /// True when any subtree was cut by the wall clock (machine-dependent
+    /// result; such solves are not cached).
+    pub timed_out: bool,
+    pub explored: u64,
+    /// Number of subtree roots the search was split into.
+    pub roots: usize,
+}
+
+/// The portfolio solver: one deterministic `solve()` over every engine in
+/// the crate, with a schedule cache. Construct once and reuse — the cache
+/// lives for the solver's lifetime and is thread-safe.
+pub struct Portfolio {
+    pub cfg: PortfolioConfig,
+    cache: ScheduleCache,
+}
+
+impl Default for Portfolio {
+    fn default() -> Self {
+        Self::new(PortfolioConfig::default())
+    }
+}
+
+impl Portfolio {
+    pub fn new(cfg: PortfolioConfig) -> Self {
+        let cache = ScheduleCache::new(cfg.cache_capacity);
+        Self { cfg, cache }
+    }
+
+    /// Cache counters (hits/misses/evictions/entries).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Solve `g` on `m` cores: cache lookup → heuristic race → multi-root
+    /// exact stages → deterministic reduction. Multi-sink DAGs are
+    /// handled internally (a virtual sink is added for the solvers and
+    /// stripped from the returned schedule).
+    pub fn solve(&self, g: &Dag, m: usize) -> PortfolioOutcome {
+        assert!(m >= 1, "portfolio requires at least one core");
+        assert!(g.n() > 0, "portfolio requires a non-empty DAG");
+        let t0 = Instant::now();
+        let key = canonical_key(g, m, &self.cfg.salt());
+        if let Some(hit) = self.cache.get(&key) {
+            // The deep Schedule copy happens here, outside the cache lock.
+            return PortfolioOutcome {
+                result: SolveResult {
+                    schedule: hit.schedule.clone(),
+                    optimal: hit.optimal,
+                    solve_time: t0.elapsed(),
+                    explored: 0,
+                },
+                from_cache: true,
+                incumbent_source: "cache",
+                roots_bnb: 0,
+                roots_cp: 0,
+            };
+        }
+
+        // The exact solvers (and the hybrid racer) need a single sink;
+        // work on an extended clone when necessary and strip the virtual
+        // node from the returned schedule (zero-WCET, zero-latency: the
+        // makespan is unchanged by construction).
+        let stripped = g.single_sink().is_none();
+        let mut scratch = None;
+        let gs: &Dag = if stripped {
+            let mut g2 = g.clone();
+            ensure_single_sink(&mut g2);
+            scratch.insert(g2)
+        } else {
+            g
+        };
+        let workers = self.cfg.resolved_workers();
+
+        // ---- Stage 1: heuristic race ---------------------------------
+        // DSH is computed once and shared: it is both racer #2 and the
+        // hybrid racer's warm start. The hybrid is inlined (warm-started
+        // budgeted CP) rather than going through `Hybrid`, so its
+        // wall-clock cut is observable: a timing-cut racer result must
+        // never be cached.
+        let dsh = Dsh.schedule(gs, m);
+        let race: Vec<(&'static str, SolveResult, bool)> =
+            parallel_map(workers, 4, |i| match i {
+                0 => ("HLFET", Hlfet.schedule(gs, m), false),
+                1 => ("ISH", Ish.schedule(gs, m), false),
+                2 => ("DSH", dsh.clone(), false),
+                _ => {
+                    let out = CpSolver::new(CpConfig {
+                        encoding: self.cfg.encoding,
+                        timeout: self.cfg.exact_timeout,
+                        warm_start: Some(dsh.schedule.clone()),
+                        node_limit: self.cfg.hybrid_node_limit,
+                    })
+                    .solve(gs, m);
+                    ("Hybrid-DSH+CP", out.result, out.timed_out)
+                }
+            });
+        let mut explored: u64 = race.iter().map(|(_, r, _)| r.explored).sum();
+        let race_timed_out = race.iter().any(|&(_, _, cut)| cut);
+        let mut winner = 0;
+        for i in 1..race.len() {
+            if reduction_prefers(&race[i].1.schedule, &race[winner].1.schedule) {
+                winner = i;
+            }
+        }
+        let incumbent_source = race[winner].0;
+        let mut best = race[winner].1.schedule.clone();
+        debug_assert!(check_valid(gs, &best).is_ok(), "race winner invalid");
+
+        // ---- Stage 2: multi-root exact search ------------------------
+        let shared = Incumbent::new(best.makespan());
+        let bnb_stage = if self.cfg.use_bnb {
+            let s = solve_exact_bnb(gs, m, shared.bound(), &shared, &self.cfg);
+            explored += s.explored;
+            if let Some(sched) = &s.best {
+                if reduction_prefers(sched, &best) {
+                    best = sched.clone();
+                }
+            }
+            Some(s)
+        } else {
+            None
+        };
+        // The (deterministic) BnB result tightens the bound CP starts
+        // from: cross-engine bound sharing without a determinism cost.
+        let cp_stage = if self.cfg.use_cp {
+            let s = solve_exact_cp(gs, m, best.makespan(), &shared, &self.cfg);
+            explored += s.explored;
+            if let Some(sched) = &s.best {
+                if reduction_prefers(sched, &best) {
+                    best = sched.clone();
+                }
+            }
+            Some(s)
+        } else {
+            None
+        };
+        // Only CP covers the full duplication-aware space, so only its
+        // exhaustion proves global optimality.
+        let optimal = cp_stage.as_ref().map_or(false, |s| s.exhausted);
+        let timed_out = race_timed_out
+            || bnb_stage.as_ref().map_or(false, |s| s.timed_out)
+            || cp_stage.as_ref().map_or(false, |s| s.timed_out);
+
+        let schedule = if stripped { strip_virtual_sink(g, &best) } else { best };
+        debug_assert!(check_valid(g, &schedule).is_ok(), "portfolio result invalid");
+        // Cache only reproducible results: a wall-clock-cut solve is
+        // machine-dependent and possibly poor (a loaded first request
+        // must not pin a bad schedule for every later request). With
+        // live bound sharing, node budgets cut at timing-dependent tree
+        // nodes too, so a share_bound solve is cacheable only when every
+        // exact subtree was exhausted (the proven result is then unique
+        // in makespan and fixed by the reduction). The deterministic
+        // default (share_bound off) caches exhausted and budget-cut
+        // solves alike.
+        let exact_exhausted = bnb_stage.as_ref().map_or(true, |s| s.exhausted)
+            && cp_stage.as_ref().map_or(true, |s| s.exhausted);
+        let reproducible = !timed_out && (!self.cfg.share_bound || exact_exhausted);
+        if reproducible {
+            self.cache
+                .insert(key, CachedSolve { schedule: schedule.clone(), optimal });
+        }
+        PortfolioOutcome {
+            result: SolveResult {
+                schedule,
+                optimal,
+                solve_time: t0.elapsed(),
+                explored,
+            },
+            from_cache: false,
+            incumbent_source,
+            roots_bnb: bnb_stage.map_or(0, |s| s.roots),
+            roots_cp: cp_stage.map_or(0, |s| s.roots),
+        }
+    }
+}
+
+impl Scheduler for Portfolio {
+    fn name(&self) -> &'static str {
+        "Portfolio"
+    }
+
+    fn schedule(&self, g: &Dag, m: usize) -> SolveResult {
+        self.solve(g, m).result
+    }
+}
+
+/// The deterministic reduction order: `a` replaces `b` iff
+/// `(makespan, placement list)` of `a` is strictly lexicographically
+/// smaller. Candidates are always compared in a fixed order, so ties keep
+/// the earlier candidate and the fold is order-deterministic.
+fn reduction_prefers(a: &Schedule, b: &Schedule) -> bool {
+    // Makespans decide almost every comparison; the O(P) placement keys
+    // are only materialized on a tie.
+    match a.makespan().cmp(&b.makespan()) {
+        std::cmp::Ordering::Less => true,
+        std::cmp::Ordering::Greater => false,
+        std::cmp::Ordering::Equal => placement_key(a) < placement_key(b),
+    }
+}
+
+/// Full placement list in the schedule's `(core, start, node)` master
+/// order — the lexicographic component of the reduction order.
+fn placement_key(s: &Schedule) -> Vec<(usize, NodeId, Cycles, Cycles)> {
+    s.iter().map(|p| (p.core, p.node, p.start, p.finish)).collect()
+}
+
+/// Rebuild a solver schedule over the original graph, dropping the
+/// virtual `__sink__` instance added by the single-sink transform.
+fn strip_virtual_sink(g: &Dag, s: &Schedule) -> Schedule {
+    let mut out = Schedule::new(s.m);
+    for p in s.iter() {
+        if p.node < g.n() {
+            out.place(g, p.node, p.core, p.start);
+        }
+    }
+    out
+}
+
+/// Multi-root Chou–Chung stage: split the duplication-free BnB search
+/// into disjoint subtrees below bound `b0` and solve them across the
+/// worker pool. Public so the differential tests can pit it against the
+/// sequential [`bnb::ChouChung`] solver.
+pub fn solve_exact_bnb(
+    g: &Dag,
+    m: usize,
+    b0: Cycles,
+    shared: &Incumbent,
+    cfg: &PortfolioConfig,
+) -> ExactStage {
+    // Nothing can beat a bound at (or under) the critical path.
+    if b0 <= critical_path_len(g) {
+        return ExactStage { best: None, exhausted: true, timed_out: false, explored: 0, roots: 0 };
+    }
+    let prep = bnb::StagePrep::new(g);
+    let prefixes =
+        bnb::enumerate_prefixes(g, m, &prep, b0, cfg.root_target, cfg.max_split_depth);
+    let deadline = Instant::now() + cfg.exact_timeout;
+    let outcomes = parallel_map(cfg.resolved_workers(), prefixes.len(), |i| {
+        bnb::solve_prefix(
+            g,
+            m,
+            &prep,
+            &prefixes[i],
+            b0,
+            Some(shared),
+            cfg.share_bound,
+            cfg.node_limit_per_root,
+            deadline,
+            cfg.memo_capacity,
+        )
+    });
+    reduce_stage(outcomes, prefixes.len())
+}
+
+/// Multi-root CP stage: split the constraint search into disjoint
+/// subtrees below bound `b0` and solve them across the worker pool.
+/// Requires a single-sink DAG (like the sequential CP solver). Public so
+/// the differential tests can pit it against [`cp::CpSolver`].
+pub fn solve_exact_cp(
+    g: &Dag,
+    m: usize,
+    b0: Cycles,
+    shared: &Incumbent,
+    cfg: &PortfolioConfig,
+) -> ExactStage {
+    if b0 <= critical_path_len(g) {
+        return ExactStage { best: None, exhausted: true, timed_out: false, explored: 0, roots: 0 };
+    }
+    let levels = static_levels(g);
+    let prefixes = cp::enumerate_prefixes(
+        g,
+        m,
+        cfg.encoding,
+        &levels,
+        b0,
+        cfg.root_target,
+        cfg.max_split_depth,
+    );
+    let deadline = Instant::now() + cfg.exact_timeout;
+    let outcomes = parallel_map(cfg.resolved_workers(), prefixes.len(), |i| {
+        cp::solve_prefix(
+            g,
+            m,
+            cfg.encoding,
+            &levels,
+            &prefixes[i],
+            b0,
+            Some(shared),
+            cfg.share_bound,
+            cfg.node_limit_per_root,
+            deadline,
+        )
+    });
+    reduce_stage(outcomes, prefixes.len())
+}
+
+/// Fold subtree outcomes in task order under the deterministic reduction.
+fn reduce_stage(outcomes: Vec<SubtreeOutcome>, roots: usize) -> ExactStage {
+    let mut best: Option<Schedule> = None;
+    let mut exhausted = true;
+    let mut timed_out = false;
+    let mut explored = 0;
+    for out in outcomes {
+        exhausted &= out.exhausted;
+        timed_out |= out.timed_out;
+        explored += out.explored;
+        if let Some(s) = out.best {
+            match &best {
+                Some(b) if !reduction_prefers(&s, b) => {}
+                _ => best = Some(s),
+            }
+        }
+    }
+    ExactStage { best, exhausted, timed_out, explored, roots }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::paper_example_dag;
+
+    fn quick_cfg(workers: usize) -> PortfolioConfig {
+        PortfolioConfig {
+            workers,
+            root_target: 8,
+            exact_timeout: Duration::from_secs(120),
+            hybrid_node_limit: Some(500),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn solves_multi_sink_paper_example_and_strips_virtual_node() {
+        // The raw Fig. 3 graph has three sinks: the portfolio must extend
+        // it internally and return a schedule over the *original* nodes.
+        let g = paper_example_dag();
+        let p = Portfolio::new(quick_cfg(2));
+        let out = p.solve(&g, 2);
+        assert!(!out.from_cache);
+        assert!(out.result.optimal, "paper example must be solved to optimality");
+        assert_eq!(check_valid(&g, &out.result.schedule), Ok(()));
+        assert!(out.result.schedule.iter().all(|pl| pl.node < g.n()));
+    }
+
+    #[test]
+    fn result_is_identical_for_different_worker_counts() {
+        let g = paper_example_dag();
+        let base = Portfolio::new(quick_cfg(1)).solve(&g, 3);
+        for workers in [2, 5] {
+            let out = Portfolio::new(quick_cfg(workers)).solve(&g, 3);
+            assert_eq!(out.result.schedule.makespan(), base.result.schedule.makespan());
+            assert_eq!(
+                placement_key(&out.result.schedule),
+                placement_key(&base.result.schedule),
+                "workers={workers}"
+            );
+        }
+    }
+
+    #[test]
+    fn cache_hit_skips_search() {
+        let g = paper_example_dag();
+        let p = Portfolio::new(quick_cfg(2));
+        let first = p.solve(&g, 2);
+        let second = p.solve(&g, 2);
+        assert!(!first.from_cache);
+        assert!(second.from_cache);
+        assert_eq!(second.incumbent_source, "cache");
+        assert_eq!(second.result.explored, 0, "no search on a hit");
+        assert_eq!(
+            placement_key(&first.result.schedule),
+            placement_key(&second.result.schedule)
+        );
+        assert_eq!(second.result.optimal, first.result.optimal);
+        let stats = p.cache_stats();
+        assert_eq!((stats.hits, stats.misses), (1, 1));
+        // A different core count is a different problem.
+        let third = p.solve(&g, 3);
+        assert!(!third.from_cache);
+    }
+
+    #[test]
+    fn never_worse_than_any_racer() {
+        let g = paper_example_dag();
+        for m in 2..=3 {
+            let out = Portfolio::new(quick_cfg(2)).solve(&g, m);
+            for s in [
+                Hlfet.schedule(&g, m).schedule.makespan(),
+                Ish.schedule(&g, m).schedule.makespan(),
+                Dsh.schedule(&g, m).schedule.makespan(),
+            ] {
+                assert!(out.result.schedule.makespan() <= s, "m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn scheduler_impl_reports_name() {
+        assert_eq!(Portfolio::default().name(), "Portfolio");
+    }
+}

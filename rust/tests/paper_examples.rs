@@ -56,7 +56,8 @@ fn fig5_dsh_duplicates_node1() {
 #[test]
 fn fig6_exact_search_is_optimal() {
     let g = paper_example_dag();
-    let bnb = ChouChung { timeout: Duration::from_secs(60), node_limit: None }.schedule(&g, 2);
+    let bnb =
+        ChouChung { timeout: Duration::from_secs(60), ..Default::default() }.schedule(&g, 2);
     assert!(bnb.optimal);
     // The duplication-free optimum can't beat the critical path.
     assert!(bnb.schedule.makespan() >= critical_path_len(&g));

@@ -1,0 +1,203 @@
+//! Determinism and correctness pins for `sched::portfolio`.
+//!
+//! * **Worker-count byte-parity**: the portfolio must return a schedule
+//!   with an identical `(makespan, placement list)` for 1, 2 and 8
+//!   workers — on the paper's example DAG (full exact solves) and on
+//!   `paper(50)` seeds 1–5 (deterministic per-root node budgets).
+//! * **Exact-stage parity**: each multi-root stage, seeded with the
+//!   serial bound, proves the same optimum as its sequential solver.
+//! * **Cache behavior**: a repeat solve of the same DAG is answered from
+//!   the cache without any search.
+//!
+//! These tests deliberately run under the default libtest thread pool
+//! (no `--test-threads` pinning): worker threads race for real in CI.
+
+use acetone::daggen::{generate, DagGenConfig};
+use acetone::graph::{ensure_single_sink, paper_example_dag, Cycles, Dag};
+use acetone::sched::bnb::ChouChung;
+use acetone::sched::cp::{CpConfig, CpSolver};
+use acetone::sched::portfolio::{
+    solve_exact_bnb, solve_exact_cp, Incumbent, Portfolio, PortfolioConfig,
+};
+use acetone::sched::{check_valid, Schedule, Scheduler};
+use std::time::Duration;
+
+/// Full placement list in the schedule's deterministic master order.
+fn placements(s: &Schedule) -> Vec<(usize, usize, Cycles, Cycles)> {
+    s.iter().map(|p| (p.core, p.node, p.start, p.finish)).collect()
+}
+
+/// Exhaustive-exact configuration (no budgets; huge safety timeout).
+fn full_cfg(workers: usize) -> PortfolioConfig {
+    PortfolioConfig {
+        workers,
+        root_target: 8,
+        exact_timeout: Duration::from_secs(3600),
+        hybrid_node_limit: Some(500),
+        ..Default::default()
+    }
+}
+
+/// Budgeted configuration: every cut is a deterministic node budget, so
+/// results must be byte-identical for any worker count and machine.
+fn budgeted_cfg(workers: usize) -> PortfolioConfig {
+    PortfolioConfig {
+        workers,
+        root_target: 6,
+        exact_timeout: Duration::from_secs(3600),
+        node_limit_per_root: Some(200),
+        hybrid_node_limit: Some(400),
+        ..Default::default()
+    }
+}
+
+type PlacementList = Vec<(usize, usize, Cycles, Cycles)>;
+
+fn solve_fresh(g: &Dag, m: usize, cfg: PortfolioConfig) -> (Cycles, PlacementList, bool) {
+    let out = Portfolio::new(cfg).solve(g, m);
+    assert_eq!(check_valid(g, &out.result.schedule), Ok(()));
+    (
+        out.result.schedule.makespan(),
+        placements(&out.result.schedule),
+        out.result.optimal,
+    )
+}
+
+#[test]
+fn paper_example_byte_identical_for_1_2_8_workers() {
+    // Raw multi-sink Fig. 3 graph: exercises the internal single-sink
+    // extension + strip alongside the worker-count invariance.
+    let g = paper_example_dag();
+    for m in 2..=3 {
+        let (ms1, pl1, opt1) = solve_fresh(&g, m, full_cfg(1));
+        assert!(opt1, "m={m}: full run must prove optimality");
+        for workers in [2, 8] {
+            let (ms, pl, opt) = solve_fresh(&g, m, full_cfg(workers));
+            assert_eq!(ms, ms1, "m={m} workers={workers}: makespan");
+            assert_eq!(pl, pl1, "m={m} workers={workers}: placement list");
+            assert_eq!(opt, opt1, "m={m} workers={workers}: optimality");
+        }
+    }
+}
+
+#[test]
+fn paper50_budgeted_byte_identical_for_1_2_8_workers() {
+    for seed in 1..=5u64 {
+        let g = generate(&DagGenConfig::paper(50), seed);
+        let (ms1, pl1, _) = solve_fresh(&g, 4, budgeted_cfg(1));
+        for workers in [2, 8] {
+            let (ms, pl, _) = solve_fresh(&g, 4, budgeted_cfg(workers));
+            assert_eq!(ms, ms1, "seed={seed} workers={workers}: makespan");
+            assert_eq!(pl, pl1, "seed={seed} workers={workers}: placement list");
+        }
+    }
+}
+
+/// Stage-test configuration: live bound sharing ON, so the disjoint
+/// subtrees prune against each other's discoveries like the sequential
+/// search prunes against its own — the proven *makespan* of an
+/// exhaustive run is deterministic either way (module docs), and this
+/// exercises the `AtomicU64` incumbent under real contention.
+fn stage_cfg(workers: usize) -> PortfolioConfig {
+    PortfolioConfig { share_bound: true, ..full_cfg(workers) }
+}
+
+#[test]
+fn exact_bnb_stage_proves_sequential_bnb_optimum() {
+    let g = paper_example_dag();
+    for m in 2..=3 {
+        let seq = ChouChung::default().schedule(&g, m);
+        assert!(seq.optimal);
+        // Same seed as the sequential solver: the serial schedule.
+        let b0 = g.total_wcet();
+        let shared = Incumbent::new(b0);
+        let stage = solve_exact_bnb(&g, m, b0, &shared, &stage_cfg(2));
+        assert!(stage.exhausted, "m={m}: all subtrees must be exhausted");
+        assert!(stage.roots > 1, "m={m}: the search must actually split");
+        let ms = stage.best.as_ref().map_or(b0, |s| s.makespan());
+        assert_eq!(ms, seq.schedule.makespan(), "m={m}: optimum");
+        if let Some(s) = &stage.best {
+            assert_eq!(check_valid(&g, s), Ok(()));
+            assert_eq!(s.duplication_count(), 0, "BnB space is duplication-free");
+        }
+    }
+}
+
+#[test]
+fn exact_cp_stage_proves_sequential_cp_optimum() {
+    let mut g = paper_example_dag();
+    ensure_single_sink(&mut g);
+    for m in 2..=3 {
+        let seq = CpSolver::new(CpConfig::improved(Duration::from_secs(120))).solve(&g, m);
+        assert!(seq.result.optimal);
+        let b0 = g.total_wcet();
+        let shared = Incumbent::new(b0);
+        let stage = solve_exact_cp(&g, m, b0, &shared, &stage_cfg(2));
+        assert!(stage.exhausted, "m={m}: all subtrees must be exhausted");
+        let ms = stage.best.as_ref().map_or(b0, |s| s.makespan());
+        assert_eq!(ms, seq.result.schedule.makespan(), "m={m}: optimum");
+        if let Some(s) = &stage.best {
+            assert_eq!(check_valid(&g, s), Ok(()));
+        }
+    }
+}
+
+#[test]
+fn portfolio_matches_sequential_cp_optimum_and_proves_it() {
+    let mut g = paper_example_dag();
+    ensure_single_sink(&mut g);
+    for m in 2..=3 {
+        let seq = CpSolver::new(CpConfig::improved(Duration::from_secs(120))).solve(&g, m);
+        assert!(seq.result.optimal);
+        let out = Portfolio::new(full_cfg(2)).solve(&g, m);
+        assert!(out.result.optimal, "m={m}: CP-stage exhaustion proves optimality");
+        assert_eq!(
+            out.result.schedule.makespan(),
+            seq.result.schedule.makespan(),
+            "m={m}"
+        );
+    }
+}
+
+#[test]
+fn second_solve_of_same_dag_is_a_cache_hit_without_search() {
+    let g = generate(&DagGenConfig::paper(50), 1);
+    let p = Portfolio::new(budgeted_cfg(2));
+    let first = p.solve(&g, 4);
+    assert!(!first.from_cache);
+    assert!(first.result.explored > 0);
+    let second = p.solve(&g, 4);
+    assert!(second.from_cache, "same DAG+m+config must hit the cache");
+    assert_eq!(second.result.explored, 0, "a hit performs no search");
+    assert_eq!(second.incumbent_source, "cache");
+    assert_eq!(placements(&first.result.schedule), placements(&second.result.schedule));
+    let stats = p.cache_stats();
+    assert_eq!((stats.hits, stats.misses, stats.len), (1, 1, 1));
+
+    // A structurally different DAG (or different m) misses.
+    let other = generate(&DagGenConfig::paper(50), 2);
+    assert!(!p.solve(&other, 4).from_cache);
+    assert!(!p.solve(&g, 5).from_cache);
+    assert_eq!(p.cache_stats().misses, 3);
+}
+
+#[test]
+fn live_bound_sharing_still_finds_the_proven_optimum() {
+    // share_bound trades placement determinism for pruning, but the
+    // *makespan* of an exhaustive run is still the proven optimum for
+    // every worker count.
+    let g = paper_example_dag();
+    let reference = Portfolio::new(full_cfg(1)).solve(&g, 2);
+    assert!(reference.result.optimal);
+    for workers in [1, 2, 8] {
+        let cfg = PortfolioConfig { share_bound: true, ..full_cfg(workers) };
+        let out = Portfolio::new(cfg).solve(&g, 2);
+        assert!(out.result.optimal, "workers={workers}");
+        assert_eq!(
+            out.result.schedule.makespan(),
+            reference.result.schedule.makespan(),
+            "workers={workers}"
+        );
+        assert_eq!(check_valid(&g, &out.result.schedule), Ok(()));
+    }
+}

@@ -111,7 +111,8 @@ fn hybrid_improves_or_matches_dsh_on_set() {
     for seed in 0..4 {
         let g = generate(&cfg, seed);
         let dsh = Dsh.schedule(&g, 4).schedule.makespan();
-        let hy = Hybrid { cp_timeout: Duration::from_secs(2) }.schedule(&g, 4);
+        let hy = Hybrid { cp_timeout: Duration::from_secs(2), cp_node_limit: None }
+            .schedule(&g, 4);
         assert!(hy.schedule.makespan() <= dsh, "seed={seed}");
         assert_eq!(check_valid(&g, &hy.schedule), Ok(()));
     }
@@ -154,7 +155,8 @@ fn bnb_never_worse_than_ish() {
     let cfg = DagGenConfig::paper(12);
     for seed in 0..3 {
         let g = generate(&cfg, seed);
-        let bnb = ChouChung { timeout: Duration::from_secs(20), node_limit: None }.schedule(&g, 2);
+        let bnb =
+            ChouChung { timeout: Duration::from_secs(20), ..Default::default() }.schedule(&g, 2);
         if bnb.optimal {
             let ish = Ish.schedule(&g, 2).schedule.makespan();
             assert!(bnb.schedule.makespan() <= ish, "seed={seed}");

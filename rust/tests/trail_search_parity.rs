@@ -108,7 +108,7 @@ fn cp_paper50_budgeted_parity() {
 fn bnb_paper_example_full_solve_parity() {
     let g = paper_example_dag();
     for m in 2..=3 {
-        let solver = ChouChung { timeout: Duration::from_secs(120), node_limit: None };
+        let solver = ChouChung { timeout: Duration::from_secs(120), ..Default::default() };
         assert_bnb_parity(&g, m, &solver, &format!("bnb m={m}"));
     }
 }
@@ -120,6 +120,7 @@ fn bnb_paper50_budgeted_parity() {
         let solver = ChouChung {
             timeout: Duration::from_secs(3600),
             node_limit: Some(3000),
+            ..Default::default()
         };
         assert_bnb_parity(&g, 4, &solver, &format!("bnb paper(50) seed={seed}"));
     }
