@@ -5,7 +5,7 @@
 use acetone::daggen::{generate, DagGenConfig};
 use acetone::sched::dsh::Dsh;
 use acetone::sched::ish::Ish;
-use acetone::sched::Scheduler;
+use acetone::sched::{Scheduler, SolveRequest};
 use acetone::util::bench::bench;
 
 fn main() {
@@ -15,11 +15,11 @@ fn main() {
         for m in [2usize, 8, 20] {
             let iters = if n >= 100 { 10 } else { 30 };
             let s = bench(&format!("ISH n={n} m={m}"), 2, iters, || {
-                Ish.schedule(&g, m).schedule.makespan()
+                Ish.solve(&SolveRequest::new(&g, m)).schedule.makespan()
             });
             println!("{}", s.row());
             let s = bench(&format!("DSH n={n} m={m}"), 2, iters, || {
-                Dsh.schedule(&g, m).schedule.makespan()
+                Dsh.solve(&SolveRequest::new(&g, m)).schedule.makespan()
             });
             println!("{}", s.row());
         }

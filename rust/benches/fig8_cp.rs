@@ -3,8 +3,8 @@
 //! numbers reflect search effort, not the cap.
 
 use acetone::daggen::{generate, DagGenConfig};
-use acetone::sched::cp::{CpConfig, CpSolver, Encoding};
-use acetone::sched::Scheduler;
+use acetone::sched::cp::{CpSolver, Encoding};
+use acetone::sched::{Scheduler, SolveRequest};
 use acetone::util::bench::bench;
 use std::time::Duration;
 
@@ -13,14 +13,13 @@ fn main() {
     for (n, m) in [(8usize, 2usize), (10, 2), (12, 2), (10, 3)] {
         let g = generate(&DagGenConfig::paper(n), 0xCE_8 + n as u64);
         for enc in [Encoding::Improved, Encoding::Tang] {
-            let solver = CpSolver::new(CpConfig {
-                encoding: enc,
-                timeout: Duration::from_secs(30),
-                warm_start: None,
-                node_limit: None,
-            });
+            let solver = match enc {
+                Encoding::Improved => CpSolver::improved(),
+                Encoding::Tang => CpSolver::tang(),
+            };
+            let req = SolveRequest::new(&g, m).deadline(Duration::from_secs(30));
             let s = bench(&format!("{:?} n={n} m={m}", enc), 1, 5, || {
-                solver.schedule(&g, m).schedule.makespan()
+                Scheduler::solve(&solver, &req).schedule.makespan()
             });
             println!("{}", s.row());
         }

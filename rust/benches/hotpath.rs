@@ -8,10 +8,10 @@
 
 use acetone::daggen::{generate, DagGenConfig};
 use acetone::sched::bnb::ChouChung;
-use acetone::sched::cp::{CpConfig, CpSolver, Encoding};
+use acetone::sched::cp::CpSolver;
 use acetone::sched::dsh::Dsh;
 use acetone::sched::portfolio::{Portfolio, PortfolioConfig};
-use acetone::sched::{check_valid, derive_programs, prune_redundant, Scheduler};
+use acetone::sched::{check_valid, derive_programs, prune_redundant, Scheduler, SolveRequest};
 use acetone::sim::{replay_machine, simulate};
 use acetone::util::bench::{bench, write_json, BenchStats};
 use std::time::Duration;
@@ -27,10 +27,14 @@ fn main() {
     let g50 = generate(&DagGenConfig::paper(50), 1);
     let g100 = generate(&DagGenConfig::paper(100), 2);
 
-    record(bench("dsh n=50 m=8", 3, 30, || Dsh.schedule(&g50, 8).schedule.makespan()));
-    record(bench("dsh n=100 m=20", 1, 8, || Dsh.schedule(&g100, 20).schedule.makespan()));
+    record(bench("dsh n=50 m=8", 3, 30, || {
+        Dsh.solve(&SolveRequest::new(&g50, 8)).schedule.makespan()
+    }));
+    record(bench("dsh n=100 m=20", 1, 8, || {
+        Dsh.solve(&SolveRequest::new(&g100, 20)).schedule.makespan()
+    }));
 
-    let sched = Dsh.schedule(&g100, 8).schedule;
+    let sched = Dsh.solve(&SolveRequest::new(&g100, 8)).schedule;
     record(bench("derive_programs n=100 m=8", 3, 200, || derive_programs(&g100, &sched).len()));
     record(bench("check_valid n=100 m=8", 3, 200, || check_valid(&g100, &sched).is_ok()));
     record(bench("simulate n=100 m=8", 3, 100, || {
@@ -39,9 +43,11 @@ fn main() {
     record(bench("width n=100", 3, 200, || g100.width()));
 
     let g10 = generate(&DagGenConfig::paper(10), 3);
-    let cp = CpSolver::new(CpConfig::improved(Duration::from_secs(30)));
+    let cp = CpSolver::improved();
     record(bench("cp-improved n=10 m=2 (to optimal)", 1, 5, || {
-        cp.schedule(&g10, 2).schedule.makespan()
+        Scheduler::solve(&cp, &SolveRequest::new(&g10, 2).deadline(Duration::from_secs(30)))
+            .schedule
+            .makespan()
     }));
 
     // Deep-search branch cost: a fixed node budget makes the explored
@@ -50,22 +56,15 @@ fn main() {
     let g30 = generate(&DagGenConfig::paper(30), 4);
     let mut g30s = g30.clone();
     acetone::graph::ensure_single_sink(&mut g30s);
-    let cp_deep = CpSolver::new(CpConfig {
-        encoding: Encoding::Improved,
-        timeout: Duration::from_secs(3600),
-        warm_start: None,
-        node_limit: Some(4_000),
-    });
+    let cp_deep = CpSolver::improved();
     record(bench("cp-improved n=30 m=4 (4k-node budget)", 1, 5, || {
-        cp_deep.schedule(&g30s, 4).schedule.makespan()
+        Scheduler::solve(&cp_deep, &SolveRequest::new(&g30s, 4).node_limit(4_000))
+            .schedule
+            .makespan()
     }));
-    let bnb_deep = ChouChung {
-        timeout: Duration::from_secs(3600),
-        node_limit: Some(20_000),
-        ..Default::default()
-    };
+    let bnb_deep = ChouChung::default();
     record(bench("bnb n=30 m=4 (20k-node budget)", 1, 5, || {
-        bnb_deep.schedule(&g30, 4).schedule.makespan()
+        bnb_deep.solve(&SolveRequest::new(&g30, 4).node_limit(20_000)).schedule.makespan()
     }));
 
     // Parallel portfolio: heuristic race + multi-root exact stages with a
@@ -76,15 +75,14 @@ fn main() {
     let portfolio_cfg = PortfolioConfig {
         workers: 2,
         root_target: 8,
-        exact_timeout: Duration::from_secs(3600),
-        node_limit_per_root: Some(500),
         hybrid_node_limit: Some(500),
         ..Default::default()
     };
+    let portfolio_req = SolveRequest::new(&g30s, 4).node_limit(500);
     record(bench("portfolio n=30 m=4 (500/root budget)", 1, 5, || {
         Portfolio::new(portfolio_cfg.clone())
-            .solve(&g30s, 4)
-            .result
+            .solve_request(&portfolio_req)
+            .report
             .schedule
             .makespan()
     }));
@@ -93,11 +91,11 @@ fn main() {
     // skip the search entirely — this case measures the canonical-key
     // hash + cache lookup, i.e. the per-request serving cost.
     let warm = Portfolio::new(portfolio_cfg.clone());
-    warm.solve(&g30s, 4);
+    warm.solve_request(&portfolio_req);
     record(bench("portfolio cache hit n=30 m=4", 10, 200, || {
-        let out = warm.solve(&g30s, 4);
+        let out = warm.solve_request(&portfolio_req);
         assert!(out.from_cache);
-        out.result.schedule.makespan()
+        out.report.schedule.makespan()
     }));
 
     // Duplicate pruning on a duplication-heavy DSH schedule (clone cost

@@ -5,7 +5,7 @@
 use acetone::nn::eval::Tensor;
 use acetone::nn::{numel, weights, zoo};
 use acetone::sched::dsh::Dsh;
-use acetone::sched::Scheduler;
+use acetone::sched::{Scheduler, SolveRequest};
 use acetone::sim::{simulate, simulate_serial, Machine};
 use acetone::util::bench::bench;
 use acetone::wcet::CostModel;
@@ -20,7 +20,7 @@ fn main() {
     let cm = CostModel::default();
     let g = net.to_dag(&cm);
     let shapes = net.shapes();
-    let sched = Dsh.schedule(&g, 4).schedule;
+    let sched = Dsh.solve(&SolveRequest::new(&g, 4)).schedule;
     let mut machine = Machine::exact(comm);
     for (i, s) in shapes.iter().enumerate() {
         machine.payload_bytes.insert(i, numel(s) * 4);
@@ -39,7 +39,7 @@ fn main() {
         let tiny = zoo::googlenet(zoo::Scale::Tiny);
         let mm = &manifest.models["googlenet"];
         let gt = tiny.to_dag(&cm);
-        let st = Dsh.schedule(&gt, 4).schedule;
+        let st = Dsh.solve(&SolveRequest::new(&gt, 4)).schedule;
         let tshapes = tiny.shapes();
         let input = Tensor::new(
             tshapes[0].clone(),

@@ -7,14 +7,14 @@
 use acetone::codegen::generate_project;
 use acetone::nn::zoo::{lenet5_split, Scale};
 use acetone::sched::dsh::Dsh;
-use acetone::sched::Scheduler;
+use acetone::sched::{Scheduler, SolveRequest};
 use acetone::wcet::CostModel;
 use std::process::Command;
 
 fn main() -> anyhow::Result<()> {
     let net = lenet5_split(Scale::Tiny);
     let g = net.to_dag(&CostModel::default());
-    let sched = Dsh.schedule(&g, 2).schedule;
+    let sched = Dsh.solve(&SolveRequest::new(&g, 2)).schedule;
     let out = std::env::temp_dir().join("acetone_codegen_example");
     let _ = std::fs::remove_dir_all(&out);
     generate_project(&net, &sched, 42, &out)?;

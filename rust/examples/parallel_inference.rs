@@ -13,7 +13,8 @@ use acetone::exec::{run_full, run_parallel};
 use acetone::nn::eval::{eval, Tensor};
 use acetone::nn::{numel, weights, zoo};
 use acetone::runtime::Manifest;
-use acetone::sched::portfolio::{Portfolio, PortfolioConfig};
+use acetone::sched::portfolio::Portfolio;
+use acetone::sched::SolveRequest;
 use acetone::wcet::CostModel;
 use std::time::Instant;
 
@@ -23,25 +24,26 @@ fn main() -> anyhow::Result<()> {
     let mm = manifest.models.get("googlenet").expect("googlenet artifacts");
     let g = net.to_dag(&CostModel::default());
     let m = 4;
-    // The serving entry point: the deterministic parallel portfolio. A
-    // node budget (not the wall clock) bounds the exact stages, so the
-    // schedule is identical on every machine; the second solve of the
-    // same DAG below is answered from the cache — exactly what a server
-    // does per request once a model is deployed.
-    let portfolio = Portfolio::new(PortfolioConfig {
-        node_limit_per_root: Some(2_000),
-        ..Default::default()
-    });
-    let sched = portfolio.solve(&g, m).result.schedule;
+    // The serving entry point: the deterministic parallel portfolio,
+    // driven through the unified request API. The request's node budget
+    // (not the wall clock) bounds the exact stages, so the schedule is
+    // identical on every machine; the second solve of the same request
+    // below is answered from the cache — exactly what a server does per
+    // request once a model is deployed.
+    let portfolio = Portfolio::default();
+    let req = SolveRequest::new(&g, m).node_limit(2_000);
+    let first = portfolio.solve_request(&req);
+    let sched = first.report.schedule;
     // A repeat request is normally a cache hit; a wall-clock-cut first
     // solve (e.g. a very slow debug run) is deliberately not cached, so
     // report rather than assert.
-    let replay = portfolio.solve(&g, m);
+    let replay = portfolio.solve_request(&req);
     println!(
-        "googlenet (tiny) on {m} virtual cores: schedule makespan {} cycles, {} comms \
-         (repeat request from cache: {}, stats: {:?})",
+        "googlenet (tiny) on {m} virtual cores: schedule makespan {} cycles, {} comms, \
+         verdict {:?} (repeat request from cache: {}, stats: {:?})",
         sched.makespan(),
         acetone::sched::derive_comms(&g, &sched).len(),
+        first.report.termination,
         replay.from_cache,
         portfolio.cache_stats(),
     );

@@ -5,7 +5,7 @@
 
 use acetone::nn::{numel, zoo};
 use acetone::sched::dsh::Dsh;
-use acetone::sched::{check_valid, Scheduler};
+use acetone::sched::{check_valid, Scheduler, SolveRequest};
 use acetone::wcet::{compose_global, serial_global, CostModel};
 
 fn main() {
@@ -18,15 +18,17 @@ fn main() {
     let g = net.to_dag(&cm);
     println!("task DAG: {} nodes, {} edges, width {}", g.n(), g.edge_count(), g.width());
 
-    // 3. Schedule on two cores with the Duplication Scheduling Heuristic.
-    let result = Dsh.schedule(&g, 2);
+    // 3. Schedule on two cores with the Duplication Scheduling Heuristic:
+    //    one SolveRequest in, one SolveReport (schedule + verdict + stats) out.
+    let result = Dsh.solve(&SolveRequest::new(&g, 2));
     check_valid(&g, &result.schedule).expect("valid schedule");
     println!(
-        "DSH on 2 cores: makespan {} cycles, speedup {:.2}×, {} duplicate(s), solved in {:?}",
+        "DSH on 2 cores: makespan {} cycles, speedup {:.2}×, {} duplicate(s), {:?} in {:?}",
         result.schedule.makespan(),
         result.schedule.speedup(&g),
         result.schedule.duplication_count(),
-        result.solve_time,
+        result.termination,
+        result.stats.wall,
     );
 
     // 4. Static global WCET of the parallel code (§5.4 composition).

@@ -8,13 +8,13 @@ use acetone::daggen::{generate, DagGenConfig};
 use acetone::graph::{ensure_single_sink, paper_example_dag};
 use acetone::metrics::Table;
 use acetone::sched::bnb::ChouChung;
-use acetone::sched::cp::{CpConfig, CpSolver, Encoding};
+use acetone::sched::cp::CpSolver;
 use acetone::sched::dsh::Dsh;
 use acetone::sched::hlfet::Hlfet;
 use acetone::sched::hybrid::Hybrid;
 use acetone::sched::ish::Ish;
-use acetone::sched::portfolio::{Portfolio, PortfolioConfig};
-use acetone::sched::{check_valid, Scheduler};
+use acetone::sched::portfolio::Portfolio;
+use acetone::sched::{check_valid, Scheduler, SolveRequest};
 use std::time::Duration;
 
 fn main() {
@@ -25,31 +25,30 @@ fn main() {
 
     for (name, g, m) in [("Fig. 3 example", &fig3, 2), ("random n=20 (§4.1)", &rand20, 4)] {
         println!("\n### {name} on {m} cores (total WCET {} cycles)\n", g.total_wcet());
+        // One budgeted request drives every solver — the unified API.
+        let req = SolveRequest::new(g, m).deadline(Duration::from_secs(10));
         let solvers: Vec<Box<dyn Scheduler>> = vec![
             Box::new(Hlfet),
             Box::new(Ish),
             Box::new(Dsh),
-            Box::new(ChouChung { timeout: Duration::from_secs(10), ..Default::default() }),
-            Box::new(CpSolver::new(CpConfig::improved(Duration::from_secs(10)))),
-            Box::new(CpSolver::new(CpConfig::tang(Duration::from_secs(10)))),
-            Box::new(Hybrid { cp_timeout: Duration::from_secs(5), cp_node_limit: None }),
-            Box::new(Portfolio::new(PortfolioConfig {
-                exact_timeout: Duration::from_secs(10),
-                ..Default::default()
-            })),
+            Box::new(ChouChung::default()),
+            Box::new(CpSolver::improved()),
+            Box::new(CpSolver::tang()),
+            Box::new(Hybrid),
+            Box::new(Portfolio::default()),
         ];
-        let mut t = Table::new(&["solver", "makespan", "speedup", "dups", "optimal", "time", "explored"]);
+        let mut t = Table::new(&["solver", "makespan", "speedup", "dups", "verdict", "time", "explored"]);
         for s in solvers {
-            let r = s.schedule(g, m);
+            let r = s.solve(&req);
             check_valid(g, &r.schedule).expect("valid");
             t.row(vec![
                 s.name().into(),
                 r.schedule.makespan().to_string(),
                 format!("{:.3}", r.schedule.speedup(g)),
                 r.schedule.duplication_count().to_string(),
-                r.optimal.to_string(),
-                format!("{:?}", r.solve_time),
-                r.explored.to_string(),
+                format!("{:?}", r.termination),
+                format!("{:?}", r.stats.wall),
+                r.stats.explored.to_string(),
             ]);
         }
         println!("{}", t.markdown());

@@ -7,7 +7,7 @@
 use acetone::metrics::{sci, Table};
 use acetone::nn::{numel, zoo};
 use acetone::sched::dsh::Dsh;
-use acetone::sched::Scheduler;
+use acetone::sched::{Scheduler, SolveRequest};
 use acetone::wcet::{compose_global, layer_table, serial_global, CostModel};
 
 fn main() {
@@ -30,7 +30,7 @@ fn main() {
     let serial = serial_global(&g);
     println!("sequential WCET: {}", sci(serial as f64));
     for m in [2usize, 4, 8] {
-        let sched = Dsh.schedule(&g, m).schedule;
+        let sched = Dsh.solve(&SolveRequest::new(&g, m)).schedule;
         let shapes = shapes.clone();
         let bytes = move |v: usize| numel(&shapes[v]) * 4;
         let composed = compose_global(&g, &sched, &cm, &bytes);

@@ -22,10 +22,10 @@ use acetone::daggen::{generate_set, DagGenConfig};
 use acetone::graph::Dag;
 use acetone::metrics::{geomean, mean, mean_secs, sci, Table};
 use acetone::nn::{numel, zoo};
-use acetone::sched::cp::{CpConfig, CpSolver, Encoding};
+use acetone::sched::cp::{CpSolver, Encoding};
 use acetone::sched::dsh::Dsh;
 use acetone::sched::ish::Ish;
-use acetone::sched::{derive_programs, CoreStep, Scheduler};
+use acetone::sched::{derive_programs, CoreStep, Scheduler, SolveRequest};
 use acetone::sim::{simulate, simulate_serial, Machine};
 use acetone::wcet::{compose_global, layer_table, serial_global, CostModel};
 use std::collections::HashMap;
@@ -100,9 +100,9 @@ fn fig7(quick: bool) {
                 let mut times = Vec::new();
                 let mut dups = Vec::new();
                 for g in &set {
-                    let r = algo.schedule(g, m);
+                    let r = algo.solve(&SolveRequest::new(g, m));
                     speedups.push(r.schedule.speedup(g));
-                    times.push(r.solve_time);
+                    times.push(r.stats.wall);
                     dups.push(r.schedule.duplication_count() as f64);
                 }
                 table.row(vec![
@@ -145,18 +145,13 @@ fn fig8(quick: bool) {
             let mut optimal = 0usize;
             let mut beats_dsh = 0usize;
             for g in &set {
-                let dsh_ms = Dsh.schedule(g, m).schedule.makespan();
-                let solver = CpSolver::new(CpConfig {
-                    encoding: Encoding::Improved,
-                    timeout,
-                    warm_start: None,
-                    node_limit: None,
-                });
-                let out = solver.solve(g, m);
-                speedups.push(out.result.schedule.speedup(g));
-                times.push(out.result.solve_time);
-                optimal += out.result.optimal as usize;
-                beats_dsh += (out.result.schedule.makespan() <= dsh_ms) as usize;
+                let dsh_ms = Dsh.solve(&SolveRequest::new(g, m)).schedule.makespan();
+                let req = SolveRequest::new(g, m).deadline(timeout);
+                let out = Scheduler::solve(&CpSolver::improved(), &req);
+                speedups.push(out.schedule.speedup(g));
+                times.push(out.stats.wall);
+                optimal += out.proven_optimal() as usize;
+                beats_dsh += (out.schedule.makespan() <= dsh_ms) as usize;
             }
             table.row(vec![
                 n.to_string(),
@@ -196,18 +191,16 @@ fn tang_vs_improved(quick: bool) {
             let mut times = Vec::new();
             let mut explored = Vec::new();
             for g in &set {
-                let out = CpSolver::new(CpConfig {
-                    encoding: enc,
-                    timeout,
-                    warm_start: None,
-                    node_limit: None,
-                })
-                .solve(g, m);
-                found += out.found_solution as usize;
-                optimal += out.result.optimal as usize;
-                ms.push(out.result.schedule.makespan() as f64);
-                times.push(out.result.solve_time);
-                explored.push(out.result.explored as f64);
+                let solver = match enc {
+                    Encoding::Tang => CpSolver::tang(),
+                    Encoding::Improved => CpSolver::improved(),
+                };
+                let out = Scheduler::solve(&solver, &SolveRequest::new(g, m).deadline(timeout));
+                found += (out.stats.leaves > 0) as usize;
+                optimal += out.proven_optimal() as usize;
+                ms.push(out.schedule.makespan() as f64);
+                times.push(out.stats.wall);
+                explored.push(out.stats.explored as f64);
             }
             table.row(vec![
                 n.to_string(),
@@ -303,7 +296,7 @@ fn table2() {
     let net = zoo::googlenet(zoo::Scale::Paper);
     let cm = CostModel::default();
     let g = net.to_dag(&cm);
-    let sched = Dsh.schedule(&g, 4).schedule;
+    let sched = Dsh.solve(&SolveRequest::new(&g, 4)).schedule;
     let comms = acetone::sched::derive_comms(&g, &sched);
     let shapes = net.shapes();
     let mut t = Table::new(&["Communication", "payload [KiB]", "ours [cycles]", "paper band"]);
@@ -329,7 +322,7 @@ fn fig11() {
     let net = zoo::googlenet(zoo::Scale::Paper);
     let cm = CostModel::default();
     let g = net.to_dag(&cm);
-    let sched = Dsh.schedule(&g, 4).schedule;
+    let sched = Dsh.solve(&SolveRequest::new(&g, 4)).schedule;
     let programs = derive_programs(&g, &sched);
     let width = 26;
     let rows: Vec<Vec<String>> = programs
@@ -385,7 +378,7 @@ fn sec54() {
     let net = zoo::googlenet(zoo::Scale::Paper);
     let cm = CostModel::default();
     let g = net.to_dag(&cm);
-    let sched = Dsh.schedule(&g, 4).schedule;
+    let sched = Dsh.solve(&SolveRequest::new(&g, 4)).schedule;
     let shapes = net.shapes();
     let bytes = {
         let shapes = shapes.clone();
@@ -457,7 +450,7 @@ fn table3() {
     let cm = CostModel::default();
     let g = net.to_dag(&cm);
     let shapes = net.shapes();
-    let sched = Dsh.schedule(&g, 4).schedule;
+    let sched = Dsh.solve(&SolveRequest::new(&g, 4)).schedule;
 
     // The "measured" machine: execution-time jitter plus copy-contention on
     // the Input layer (Table 3 Obs 1: multi-core interference on the
@@ -552,26 +545,27 @@ fn fig3456() {
     println!("\n## Figures 3–6 — the worked 9-node example\n");
     let g: Dag = acetone::graph::paper_example_dag();
     println!("Fig. 3 DAG ({} nodes, width {}):\n{}", g.n(), g.width(), g.to_dot());
-    let ish = Ish.schedule(&g, 2);
+    let ish = Ish.solve(&SolveRequest::new(&g, 2));
     println!(
         "Fig. 4 — ISH on 2 cores: makespan {} (explored {})\n{}",
         ish.schedule.makespan(),
-        ish.explored,
+        ish.stats.explored,
         ish.schedule.gantt(&g)
     );
-    let dsh = Dsh.schedule(&g, 2);
+    let dsh = Dsh.solve(&SolveRequest::new(&g, 2));
     println!(
         "Fig. 5 — DSH on 2 cores: makespan {} with {} duplicate(s)\n{}",
         dsh.schedule.makespan(),
         dsh.schedule.duplication_count(),
         dsh.schedule.gantt(&g)
     );
-    let bnb = acetone::sched::bnb::ChouChung::default().schedule(&g, 2);
+    let req = SolveRequest::new(&g, 2).deadline(Duration::from_secs(60));
+    let bnb = acetone::sched::bnb::ChouChung::default().solve(&req);
     println!(
-        "Fig. 6 — Chou–Chung exact search: optimal={} makespan {} ({} S-nodes explored)",
-        bnb.optimal,
+        "Fig. 6 — Chou–Chung exact search: {:?} makespan {} ({} S-nodes explored)",
+        bnb.termination,
         bnb.schedule.makespan(),
-        bnb.explored
+        bnb.stats.explored
     );
 }
 
@@ -591,7 +585,7 @@ fn ablation_split() {
         ("split k=8".to_string(), acetone::nn::transform::split_convs(&base, 8, 8)),
     ] {
         let g = net.to_dag(&cm);
-        let sp = Dsh.schedule(&g, 4).schedule.speedup(&g);
+        let sp = Dsh.solve(&SolveRequest::new(&g, 4)).schedule.speedup(&g);
         t.row(vec![
             label,
             g.n().to_string(),
@@ -612,7 +606,7 @@ fn ablation_buffers() {
     let cm = CostModel::default();
     let g = net.to_dag(&cm);
     let shapes = net.shapes();
-    let sched = Dsh.schedule(&g, 4).schedule;
+    let sched = Dsh.solve(&SolveRequest::new(&g, 4)).schedule;
     let mut t = Table::new(&["buffers/channel", "parallel makespan", "gain vs serial", "write-stall cycles", "total wait"]);
     let serial = {
         let mut machine = Machine::exact(table3_comm);
@@ -655,7 +649,7 @@ fn ablation_buffers() {
         let mut ms = Vec::new();
         let mut stalls = Vec::new();
         for g in &set {
-            let sched = Ish.schedule(g, 2).schedule;
+            let sched = Ish.solve(&SolveRequest::new(g, 2)).schedule;
             let mut machine = Machine::exact(unit_comm);
             machine.channel_capacity = cap;
             let r = simulate(g, &sched, &machine);
@@ -685,7 +679,7 @@ fn ablation_margin() {
         let net = zoo::googlenet(zoo::Scale::Paper);
         let g = net.to_dag(&cm);
         let shapes = net.shapes();
-        let sched = Dsh.schedule(&g, 4).schedule;
+        let sched = Dsh.solve(&SolveRequest::new(&g, 4)).schedule;
         let bytes = {
             let shapes = shapes.clone();
             move |v: usize| numel(&shapes[v]) * 4
@@ -710,37 +704,31 @@ fn ablation_margin() {
 /// portfolio that races them all across worker threads.
 fn hybrid_cmp(quick: bool) {
     use acetone::sched::hybrid::Hybrid;
-    use acetone::sched::portfolio::{Portfolio, PortfolioConfig};
+    use acetone::sched::portfolio::Portfolio;
     println!("\n## §4.3 — hybrid DSH+CP and the parallel portfolio vs components\n");
     let graphs = if quick { 3 } else { 5 };
     let budget = Duration::from_secs(if quick { 2 } else { 10 });
+    // One request shape drives every solver: the unified budget carries
+    // the wall-clock safety valve and a deterministic node cut, so the
+    // exact solvers return identical results on any machine and worker
+    // count (see sched::portfolio docs).
+    let node_budget = if quick { 500 } else { 2_000 };
     let mut t = Table::new(&["nodes", "cores", "solver", "makespan(mean)", "time(mean)"]);
     for (n, m) in [(20usize, 4usize), (30, 4)] {
         let set = generate_set(&DagGenConfig::paper(n), 0x4B1D + n as u64, graphs);
         let solvers: Vec<Box<dyn Scheduler>> = vec![
             Box::new(Dsh),
-            Box::new(CpSolver::new(CpConfig {
-                encoding: Encoding::Improved,
-                timeout: budget,
-                warm_start: None,
-                node_limit: None,
-            })),
-            Box::new(Hybrid { cp_timeout: budget, cp_node_limit: None }),
-            Box::new(Portfolio::new(PortfolioConfig {
-                exact_timeout: budget,
-                // Deterministic budgets: identical results on any machine
-                // and worker count (see sched::portfolio docs).
-                node_limit_per_root: Some(if quick { 500 } else { 2_000 }),
-                ..Default::default()
-            })),
+            Box::new(CpSolver::improved()),
+            Box::new(Hybrid),
+            Box::new(Portfolio::default()),
         ];
         for s in solvers {
             let mut ms = Vec::new();
             let mut times = Vec::new();
             for g in &set {
-                let r = s.schedule(g, m);
+                let r = s.solve(&SolveRequest::new(g, m).deadline(budget).node_limit(node_budget));
                 ms.push(r.schedule.makespan() as f64);
-                times.push(r.solve_time);
+                times.push(r.stats.wall);
             }
             t.row(vec![
                 n.to_string(),

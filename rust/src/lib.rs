@@ -24,13 +24,20 @@
 //! linear scan over all placements; `sched`'s module docs list the exact
 //! complexity guarantees.
 //!
+//! Every solver is driven through one request/report API
+//! ([`sched::SolveRequest`] → [`sched::SolveReport`]): a unified budget
+//! (wall-clock safety valve + deterministic node limit), cooperative
+//! cancellation, shared incumbent bounds, and a typed
+//! [`sched::Termination`] verdict with structured search statistics —
+//! the auditable metadata every serving request carries.
+//!
 //! [`sched::portfolio`] is the serving-oriented entry point: a
 //! deterministic parallel portfolio that races every heuristic on worker
 //! threads, splits both exact searches into disjoint subtrees
 //! (multi-root trail search sharing an `AtomicU64` incumbent), reduces
 //! the candidates in a fixed `(makespan, placement)` order — so the
 //! answer is byte-identical for any worker count — and memoizes solves
-//! in a canonical-keyed schedule cache.
+//! in a schedule cache keyed canonically by the resolved request.
 
 pub mod daggen;
 pub mod graph;

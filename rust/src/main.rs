@@ -17,14 +17,8 @@
 use acetone::graph::ensure_single_sink;
 use acetone::nn::{eval::Tensor, model_json, numel, weights, zoo, Network};
 use acetone::sched::{
-    bnb::ChouChung,
-    cp::{CpConfig, CpSolver},
-    dsh::Dsh,
-    hlfet::Hlfet,
-    hybrid::Hybrid,
-    ish::Ish,
-    portfolio::{Portfolio, PortfolioConfig},
-    Scheduler,
+    bnb::ChouChung, cp::CpSolver, dsh::Dsh, hlfet::Hlfet, hybrid::Hybrid, ish::Ish,
+    portfolio::Portfolio, Budget, Scheduler, SolveRequest, Termination,
 };
 use acetone::wcet::CostModel;
 use anyhow::{anyhow, bail, Context, Result};
@@ -61,14 +55,26 @@ impl Opts {
     fn get(&self, k: &str) -> Option<&str> {
         self.0.get(k).map(String::as_str)
     }
-    fn usize(&self, k: &str, default: usize) -> usize {
-        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    /// Parse `--k`; absent → `default`, malformed → hard error naming the
+    /// flag (a silent default on `--budget 2x` would hide the typo).
+    fn parsed<T: std::str::FromStr>(&self, k: &str, default: T) -> Result<T> {
+        self.opt_parsed(k).map(|v| v.unwrap_or(default))
     }
-    fn u64(&self, k: &str, default: u64) -> u64 {
-        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    /// Parse an optional `--k`; absent → `None`, malformed → hard error.
+    fn opt_parsed<T: std::str::FromStr>(&self, k: &str) -> Result<Option<T>> {
+        match self.get(k) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| anyhow!("invalid value for --{k}: {v:?}")),
+        }
     }
-    fn f64(&self, k: &str, default: f64) -> f64 {
-        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    fn usize(&self, k: &str, default: usize) -> Result<usize> {
+        self.parsed(k, default)
+    }
+    fn u64(&self, k: &str, default: u64) -> Result<u64> {
+        self.parsed(k, default)
+    }
+    fn f64(&self, k: &str, default: f64) -> Result<f64> {
+        self.parsed(k, default)
     }
 }
 
@@ -90,21 +96,40 @@ fn model_by_name(name: &str) -> Result<Network> {
     })
 }
 
-fn solver_by_name(name: &str, timeout: Duration) -> Result<Box<dyn Scheduler>> {
+/// Solvers carry no budgets: the deadline and node limit come from the
+/// per-run [`SolveRequest`] assembled by each subcommand.
+fn solver_by_name(name: &str) -> Result<Box<dyn Scheduler>> {
     Ok(match name {
         "hlfet" => Box::new(Hlfet),
         "ish" => Box::new(Ish),
         "dsh" => Box::new(Dsh),
-        "cp" | "improved" => Box::new(CpSolver::new(CpConfig::improved(timeout))),
-        "tang" => Box::new(CpSolver::new(CpConfig::tang(timeout))),
-        "bnb" => Box::new(ChouChung { timeout, ..Default::default() }),
-        "hybrid" => Box::new(Hybrid { cp_timeout: timeout, cp_node_limit: None }),
-        "portfolio" => Box::new(Portfolio::new(PortfolioConfig {
-            exact_timeout: timeout,
-            ..Default::default()
-        })),
+        "cp" | "improved" => Box::new(CpSolver::improved()),
+        "tang" => Box::new(CpSolver::tang()),
+        "bnb" => Box::new(ChouChung::default()),
+        "hybrid" => Box::new(Hybrid),
+        "portfolio" => Box::new(Portfolio::default()),
         other => bail!("unknown algo {other} (hlfet|ish|dsh|cp|tang|bnb|hybrid|portfolio)"),
     })
+}
+
+/// The unified `--timeout` / `--node-limit` budget of a CLI run. A node
+/// budget makes truncated runs machine-independent (the same search tree
+/// everywhere); the timeout stays a wall-clock safety valve.
+fn budget_from(opts: &Opts) -> Result<Budget> {
+    Ok(Budget {
+        deadline: Some(Duration::from_secs(opts.u64("timeout", 10)?)),
+        node_limit: opts.opt_parsed("node-limit")?,
+    })
+}
+
+/// One-word CLI rendering of a termination verdict.
+fn verdict(t: &Termination) -> &'static str {
+    match t {
+        Termination::ProvenOptimal => "proven-optimal",
+        Termination::HeuristicComplete => "heuristic-complete",
+        Termination::BudgetExhausted { .. } => "budget-exhausted",
+        Termination::Cancelled => "cancelled",
+    }
 }
 
 fn dispatch(args: &[String]) -> Result<()> {
@@ -125,12 +150,13 @@ fn dispatch(args: &[String]) -> Result<()> {
                  usage: acetone <cmd> [--key value]...\n\
                  \n\
                  export-models --dir D                 write model zoo JSONs\n\
-                 schedule --model M|--nodes N --cores C --algo A [--timeout S] [--seed S]\n\
-                 \x20   (algo: hlfet|ish|dsh|cp|tang|bnb|hybrid|portfolio)\n\
+                 schedule --model M|--nodes N --cores C --algo A [--timeout S] [--node-limit N] [--seed S]\n\
+                 \x20   (algo: hlfet|ish|dsh|cp|tang|bnb|hybrid|portfolio;\n\
+                 \x20    --node-limit makes truncated exact runs machine-independent)\n\
                  wcet --cores C [--model googlenet:paper]\n\
                  simulate --model M --cores C [--jitter J] [--seed S]\n\
                  run --model M --cores C [--artifacts DIR] [--algo A]\n\
-                 codegen --model M --cores C --out DIR\n\
+                 codegen --model M --cores C --out DIR [--algo A] [--timeout S] [--node-limit N]\n\
                  dag --nodes N [--seed S] [--density D]   (prints DOT)\n"
             );
             Ok(())
@@ -160,10 +186,10 @@ fn load_graph(opts: &Opts) -> Result<(acetone::graph::Dag, Option<Network>)> {
         let g = net.to_dag(&CostModel::default());
         Ok((g, Some(net)))
     } else {
-        let n = opts.usize("nodes", 20);
-        let seed = opts.u64("seed", 1);
+        let n = opts.usize("nodes", 20)?;
+        let seed = opts.u64("seed", 1)?;
         let mut cfg = acetone::daggen::DagGenConfig::paper(n);
-        cfg.density = opts.f64("density", 0.10);
+        cfg.density = opts.f64("density", 0.10)?;
         Ok((acetone::daggen::generate(&cfg, seed), None))
     }
 }
@@ -171,22 +197,28 @@ fn load_graph(opts: &Opts) -> Result<(acetone::graph::Dag, Option<Network>)> {
 fn schedule_cmd(opts: &Opts) -> Result<()> {
     let (mut g, _) = load_graph(opts)?;
     ensure_single_sink(&mut g);
-    let m = opts.usize("cores", 4);
-    let timeout = Duration::from_secs(opts.u64("timeout", 10));
-    let solver = solver_by_name(opts.get("algo").unwrap_or("dsh"), timeout)?;
-    let r = solver.schedule(&g, m);
+    let m = opts.usize("cores", 4)?;
+    let budget = budget_from(opts)?;
+    let solver = solver_by_name(opts.get("algo").unwrap_or("dsh"))?;
+    let r = solver.solve(&SolveRequest::new(&g, m).budget(budget));
     acetone::sched::check_valid(&g, &r.schedule)
         .map_err(|e| anyhow!("solver produced invalid schedule: {e}"))?;
     println!(
-        "{} on {m} cores: makespan={} speedup={:.3} duplicates={} optimal={} time={:?} explored={}",
+        "{} on {m} cores: makespan={} speedup={:.3} duplicates={} verdict={} time={:?} \
+         explored={} pruned={} leaves={}",
         solver.name(),
         r.schedule.makespan(),
         r.schedule.speedup(&g),
         r.schedule.duplication_count(),
-        r.optimal,
-        r.solve_time,
-        r.explored,
+        verdict(&r.termination),
+        r.stats.wall,
+        r.stats.explored,
+        r.stats.pruned,
+        r.stats.leaves,
     );
+    for stage in &r.stats.stages {
+        println!("  stage {:<16} wall={:?} explored={}", stage.name, stage.wall, stage.explored);
+    }
     if g.n() <= 64 && g.total_wcet() <= 512 {
         println!("{}", r.schedule.gantt(&g));
     }
@@ -207,9 +239,9 @@ fn wcet_cmd(opts: &Opts) -> Result<()> {
     t.row(vec!["Total Sum".into(), acetone::metrics::sci(total as f64)]);
     println!("{}", t.markdown());
 
-    let m = opts.usize("cores", 4);
+    let m = opts.usize("cores", 4)?;
     let g = net.to_dag(&cm);
-    let sched = Dsh.schedule(&g, m).schedule;
+    let sched = Dsh.solve(&SolveRequest::new(&g, m)).schedule;
     let shapes = net.shapes();
     let bytes = move |v: usize| numel(&shapes[v]) * 4;
     let composed = acetone::wcet::compose_global(&g, &sched, &cm, &bytes);
@@ -228,15 +260,15 @@ fn simulate_cmd(opts: &Opts) -> Result<()> {
     let net = model_by_name(name)?;
     let cm = CostModel::default();
     let g = net.to_dag(&cm);
-    let m = opts.usize("cores", 4);
-    let sched = Dsh.schedule(&g, m).schedule;
+    let m = opts.usize("cores", 4)?;
+    let sched = Dsh.solve(&SolveRequest::new(&g, m)).schedule;
     let shapes = net.shapes();
     let mut machine = acetone::sim::Machine::exact(sim_comm_cost);
     for (i, s) in shapes.iter().enumerate() {
         machine.payload_bytes.insert(i, numel(s) * 4);
     }
-    machine.jitter = opts.f64("jitter", 0.0);
-    machine.seed = opts.u64("seed", 0);
+    machine.jitter = opts.f64("jitter", 0.0)?;
+    machine.seed = opts.u64("seed", 0)?;
     let serial = acetone::sim::simulate_serial(&g, &machine);
     let par = acetone::sim::simulate(&g, &sched, &machine);
     println!(
@@ -258,7 +290,7 @@ fn sim_comm_cost(bytes: usize) -> u64 {
 fn run_cmd(opts: &Opts) -> Result<()> {
     let name = opts.get("model").unwrap_or("lenet5_split");
     let net = model_by_name(name)?;
-    let m = opts.usize("cores", 2);
+    let m = opts.usize("cores", 2)?;
     let dir = opts.get("artifacts").unwrap_or("artifacts");
     let manifest = acetone::runtime::Manifest::load(dir)?;
     let mm = manifest
@@ -266,9 +298,12 @@ fn run_cmd(opts: &Opts) -> Result<()> {
         .get(&net.name)
         .ok_or_else(|| anyhow!("model {} not in manifest", net.name))?;
     let g = net.to_dag(&CostModel::default());
-    let timeout = Duration::from_secs(opts.u64("timeout", 5));
-    let solver = solver_by_name(opts.get("algo").unwrap_or("dsh"), timeout)?;
-    let sched = solver.schedule(&g, m).schedule;
+    let budget = Budget {
+        deadline: Some(Duration::from_secs(opts.u64("timeout", 5)?)),
+        node_limit: opts.opt_parsed("node-limit")?,
+    };
+    let solver = solver_by_name(opts.get("algo").unwrap_or("dsh"))?;
+    let sched = solver.solve(&SolveRequest::new(&g, m).budget(budget)).schedule;
     let shapes = net.shapes();
     let input = Tensor::new(
         shapes[0].clone(),
@@ -296,20 +331,28 @@ fn run_cmd(opts: &Opts) -> Result<()> {
 fn codegen_cmd(opts: &Opts) -> Result<()> {
     let name = opts.get("model").unwrap_or("lenet5_split");
     let net = model_by_name(name)?;
-    let m = opts.usize("cores", 2);
+    let m = opts.usize("cores", 2)?;
     let out = opts.get("out").unwrap_or("generated_c");
     let g = net.to_dag(&CostModel::default());
-    let sched = Dsh.schedule(&g, m).schedule;
-    let dir = acetone::codegen::generate_project(&net, &sched, 42, std::path::Path::new(out))?;
+    let budget = budget_from(opts)?;
+    let solver = solver_by_name(opts.get("algo").unwrap_or("dsh"))?;
+    let r = solver.solve(&SolveRequest::new(&g, m).budget(budget));
+    println!(
+        "schedule: {} makespan={} verdict={}",
+        solver.name(),
+        r.schedule.makespan(),
+        verdict(&r.termination)
+    );
+    let dir = acetone::codegen::generate_project(&net, &r.schedule, 42, std::path::Path::new(out))?;
     println!("generated C project at {}", dir.display());
     Ok(())
 }
 
 fn dag_cmd(opts: &Opts) -> Result<()> {
-    let n = opts.usize("nodes", 20);
+    let n = opts.usize("nodes", 20)?;
     let mut cfg = acetone::daggen::DagGenConfig::paper(n);
-    cfg.density = opts.f64("density", 0.10);
-    let g = acetone::daggen::generate(&cfg, opts.u64("seed", 1));
+    cfg.density = opts.f64("density", 0.10)?;
+    let g = acetone::daggen::generate(&cfg, opts.u64("seed", 1)?);
     println!("{}", g.to_dot());
     Ok(())
 }

@@ -1,0 +1,438 @@
+//! The unified solver API: one request type in, one report type out.
+//!
+//! Every solver in the crate — the list-scheduling heuristics, both exact
+//! searches, the hybrid and the parallel portfolio — is driven through the
+//! same pair of types:
+//!
+//! * [`SolveRequest`]: the problem (`Dag` + core count `m`) plus a single
+//!   [`Budget`], an optional shared [`Incumbent`] bound, an optional
+//!   [`CancelToken`], and per-solver option overlays ([`CpOptions`],
+//!   [`BnbOptions`], [`PortfolioOptions`]). Built with chainable builder
+//!   methods: `SolveRequest::new(&g, m).deadline(d).node_limit(n)`.
+//! * [`SolveReport`]: the schedule plus a typed [`Termination`] verdict
+//!   (*why* the solver stopped — not just a lossy `optimal` bool) and
+//!   structured [`SearchStats`] (explored/pruned/memo counters, per-stage
+//!   wall times).
+//!
+//! # Budget semantics
+//!
+//! [`Budget::deadline`] is a wall-clock safety valve, measured from each
+//! (sub-)solver's entry; results cut by it are machine-dependent, which the
+//! report records as [`SearchStats::wall_cut`] (the portfolio refuses to
+//! cache such solves). [`Budget::node_limit`] is a *deterministic* cap on
+//! explored search nodes: two runs with the same node budget walk the
+//! identical tree on any machine. The portfolio interprets the node budget
+//! *per subtree root* — the only interpretation that keeps its result
+//! byte-identical for every worker count. The polynomial heuristics run to
+//! completion regardless of budget (they do no search; their verdict is
+//! [`Termination::HeuristicComplete`]) but honor cancellation.
+//!
+//! # Cancellation
+//!
+//! A [`CancelToken`] is a cheap cloneable flag shared between the
+//! requester and the running solver. The exact searches poll it at the
+//! same cadence as the wall-clock deadline; the heuristics poll it once
+//! per scheduled node. A cancelled solver returns its best schedule so far
+//! (exact solvers: the current incumbent, which is always valid; the
+//! heuristics: the serial fallback) under [`Termination::Cancelled`].
+//!
+//! # Incumbent sharing
+//!
+//! [`SolveRequest::incumbent`] lets several concurrent requests share one
+//! monotone upper bound: every solver *publishes* improvements to it.
+//! Setting [`SolveRequest::consult_incumbent`] additionally lets the exact
+//! searches *prune* against the live bound — faster, but the explored tree
+//! then depends on timing (see `sched::portfolio`'s determinism notes).
+
+use super::portfolio::Incumbent;
+use super::{cp::Encoding, Schedule, SolveResult};
+use crate::graph::Dag;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// The unified resource budget of one solve.
+///
+/// `None` in either field means unbounded. See the module docs for the
+/// determinism difference between the two fields.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Budget {
+    /// Wall-clock safety valve (machine-dependent cut).
+    pub deadline: Option<Duration>,
+    /// Deterministic cap on explored search nodes.
+    pub node_limit: Option<u64>,
+}
+
+impl Budget {
+    /// No limits at all: run to exhaustion.
+    pub fn unlimited() -> Self {
+        Self::default()
+    }
+
+    /// True when neither bound is set.
+    pub fn is_unlimited(&self) -> bool {
+        self.deadline.is_none() && self.node_limit.is_none()
+    }
+
+    /// The absolute deadline for a solve starting at `t0` (a far-future
+    /// instant when no wall-clock bound is set).
+    pub(crate) fn deadline_from(&self, t0: Instant) -> Instant {
+        const FAR: Duration = Duration::from_secs(365 * 24 * 3600);
+        match self.deadline {
+            Some(d) => t0.checked_add(d).unwrap_or_else(|| t0 + FAR),
+            None => t0 + FAR,
+        }
+    }
+}
+
+/// Shared cancellation flag: clone it, hand one copy to the request, keep
+/// the other, call [`CancelToken::cancel`] to stop the solve.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request cancellation (idempotent, thread-safe).
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Release);
+    }
+
+    /// Has [`CancelToken::cancel`] been called on any clone?
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::Acquire)
+    }
+}
+
+/// Option overlay for the CP solver (both encodings).
+///
+/// `None` fields fall back to the solver's construction-time defaults.
+#[derive(Debug, Clone, Default)]
+pub struct CpOptions {
+    /// Override the encoding (Tang vs improved, §3.1/§3.2).
+    pub encoding: Option<Encoding>,
+    /// Seed the incumbent with a known schedule (§4.3's hybrid warm
+    /// start): the search then only explores strict improvements.
+    pub warm_start: Option<Schedule>,
+}
+
+/// Option overlay for the Chou–Chung branch-and-bound.
+#[derive(Debug, Clone, Default)]
+pub struct BnbOptions {
+    /// Override the dominance-memo capacity (see `bnb::DominanceMemo`).
+    pub memo_capacity: Option<usize>,
+}
+
+/// Option overlay for the parallel portfolio. `None` fields fall back to
+/// the `PortfolioConfig` the portfolio was constructed with.
+#[derive(Debug, Clone, Default)]
+pub struct PortfolioOptions {
+    /// Worker threads (never affects the result, only wall-clock time).
+    pub workers: Option<usize>,
+    /// Minimum number of disjoint subtree roots per exact stage.
+    pub root_target: Option<usize>,
+    /// Depth cap on the root-splitting enumeration.
+    pub max_split_depth: Option<usize>,
+    /// Live bound sharing (trades placement determinism for pruning).
+    pub share_bound: Option<bool>,
+    /// Run the duplication-free BnB stage.
+    pub use_bnb: Option<bool>,
+    /// Run the CP stage (required for an optimality proof).
+    pub use_cp: Option<bool>,
+    /// Node budget of the hybrid racer's CP refinement.
+    pub hybrid_node_limit: Option<u64>,
+}
+
+/// One solve request: the problem, the budget, the shared-state hooks and
+/// the per-solver option overlays. See the module docs.
+#[derive(Debug, Clone)]
+pub struct SolveRequest<'g> {
+    /// The task DAG to schedule.
+    pub g: &'g Dag,
+    /// Number of cores.
+    pub m: usize,
+    /// The unified resource budget.
+    pub budget: Budget,
+    /// Cross-request monotone upper bound: improvements are published
+    /// here; consulted for pruning only with [`SolveRequest::consult_incumbent`].
+    pub incumbent: Option<Arc<Incumbent>>,
+    /// Let exact searches prune against the live shared bound
+    /// (non-deterministic explored sets — see `sched::portfolio`).
+    pub consult_incumbent: bool,
+    /// Cooperative cancellation flag.
+    pub cancel: Option<CancelToken>,
+    /// CP solver overlay.
+    pub cp: CpOptions,
+    /// Branch-and-bound overlay.
+    pub bnb: BnbOptions,
+    /// Portfolio overlay.
+    pub portfolio: PortfolioOptions,
+}
+
+impl<'g> SolveRequest<'g> {
+    /// An unbudgeted request with default options.
+    pub fn new(g: &'g Dag, m: usize) -> Self {
+        Self {
+            g,
+            m,
+            budget: Budget::default(),
+            incumbent: None,
+            consult_incumbent: false,
+            cancel: None,
+            cp: CpOptions::default(),
+            bnb: BnbOptions::default(),
+            portfolio: PortfolioOptions::default(),
+        }
+    }
+
+    /// Set the wall-clock safety valve.
+    pub fn deadline(mut self, d: Duration) -> Self {
+        self.budget.deadline = Some(d);
+        self
+    }
+
+    /// Set the deterministic node budget.
+    pub fn node_limit(mut self, n: u64) -> Self {
+        self.budget.node_limit = Some(n);
+        self
+    }
+
+    /// Replace the whole budget.
+    pub fn budget(mut self, b: Budget) -> Self {
+        self.budget = b;
+        self
+    }
+
+    /// Attach a shared incumbent bound (publish-only by default).
+    pub fn incumbent(mut self, inc: Arc<Incumbent>) -> Self {
+        self.incumbent = Some(inc);
+        self
+    }
+
+    /// Also prune against the live shared bound (see the module docs).
+    pub fn consult_incumbent(mut self, consult: bool) -> Self {
+        self.consult_incumbent = consult;
+        self
+    }
+
+    /// Attach a cancellation token.
+    pub fn cancel(mut self, token: CancelToken) -> Self {
+        self.cancel = Some(token);
+        self
+    }
+
+    /// Set the CP overlay.
+    pub fn cp(mut self, opts: CpOptions) -> Self {
+        self.cp = opts;
+        self
+    }
+
+    /// Set the branch-and-bound overlay.
+    pub fn bnb(mut self, opts: BnbOptions) -> Self {
+        self.bnb = opts;
+        self
+    }
+
+    /// Set the portfolio overlay.
+    pub fn portfolio(mut self, opts: PortfolioOptions) -> Self {
+        self.portfolio = opts;
+        self
+    }
+
+    /// True once the attached token (if any) has been cancelled.
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.as_ref().map_or(false, CancelToken::is_cancelled)
+    }
+
+    /// A sub-request over the same problem sharing the budget, the
+    /// incumbent and the cancellation token, but with cleared overlays —
+    /// how composite solvers (hybrid, portfolio) delegate to components.
+    pub fn child(&self) -> SolveRequest<'g> {
+        SolveRequest {
+            g: self.g,
+            m: self.m,
+            budget: self.budget.clone(),
+            incumbent: self.incumbent.clone(),
+            consult_incumbent: self.consult_incumbent,
+            cancel: self.cancel.clone(),
+            cp: CpOptions::default(),
+            bnb: BnbOptions::default(),
+            portfolio: PortfolioOptions::default(),
+        }
+    }
+}
+
+/// Why a solve stopped — the typed replacement of the old `optimal` bool.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Termination {
+    /// The search space was exhausted and no better schedule exists:
+    /// the *returned schedule* is proven optimal (over the solver's
+    /// space — only the CP space is duplication-aware).
+    ProvenOptimal,
+    /// The solve ran to completion without an optimality claim for the
+    /// returned schedule: a polynomial heuristic, a portfolio with the
+    /// exact engines disabled, or an exact search that exhausted while
+    /// consulting an external incumbent bound below its own best (the
+    /// bound is proven, the schedule in hand is not).
+    HeuristicComplete,
+    /// The budget cut the search: `nodes` explored in `wall` at the cut.
+    /// Whether the *wall clock* (machine-dependent) or the *node budget*
+    /// (deterministic) was the binding cut is recorded in
+    /// [`SearchStats::wall_cut`].
+    BudgetExhausted { nodes: u64, wall: Duration },
+    /// The request's [`CancelToken`] stopped the solve; the schedule is
+    /// the best found so far (always valid).
+    Cancelled,
+}
+
+impl Termination {
+    /// True only for [`Termination::ProvenOptimal`].
+    pub fn is_optimal(&self) -> bool {
+        matches!(self, Termination::ProvenOptimal)
+    }
+}
+
+/// Wall time and exploration of one internal stage of a composite solve
+/// (e.g. the portfolio's heuristic race, or DSH's pruning pass).
+#[derive(Debug, Clone)]
+pub struct StageStats {
+    pub name: &'static str,
+    pub wall: Duration,
+    pub explored: u64,
+}
+
+/// Structured search statistics of one solve.
+#[derive(Debug, Clone, Default)]
+pub struct SearchStats {
+    /// Search nodes entered (identical across machines under a node
+    /// budget; the audit anchor for deterministic runs).
+    pub explored: u64,
+    /// Subtrees cut by the bound (lower-bound and cannot-improve prunes).
+    pub pruned: u64,
+    /// Feasible leaves reached (0 means the result is the seed/warm start).
+    pub leaves: u64,
+    /// State-dominance memo hits (BnB only).
+    pub memo_hits: u64,
+    /// High-water mark of the dominance memo (BnB only).
+    pub memo_peak: usize,
+    /// Capacity-bound generation flushes of the dominance memo (BnB only).
+    pub memo_flushes: u64,
+    /// True when the wall-clock deadline (not a node budget) was a
+    /// binding cut anywhere — the result is then machine-dependent.
+    pub wall_cut: bool,
+    /// Total wall time of the solve.
+    pub wall: Duration,
+    /// Per-stage wall times, in execution order.
+    pub stages: Vec<StageStats>,
+}
+
+/// Outcome of one solve: schedule + verdict + statistics.
+#[derive(Debug, Clone)]
+pub struct SolveReport {
+    pub schedule: Schedule,
+    pub termination: Termination,
+    pub stats: SearchStats,
+}
+
+impl SolveReport {
+    /// True when the verdict is [`Termination::ProvenOptimal`].
+    pub fn proven_optimal(&self) -> bool {
+        self.termination.is_optimal()
+    }
+
+    /// Downgrade to the legacy [`SolveResult`] (the pre-request API).
+    #[doc(hidden)]
+    pub fn into_legacy(self) -> SolveResult {
+        SolveResult {
+            optimal: self.termination.is_optimal(),
+            solve_time: self.stats.wall,
+            explored: self.stats.explored,
+            schedule: self.schedule,
+        }
+    }
+}
+
+/// Serial fallback report for a solve cancelled before it held any valid
+/// schedule: everything on core 0 in topological order (always valid).
+/// Like every other exit path, it publishes its (weak) makespan to the
+/// request's shared incumbent.
+pub(crate) fn cancelled_fallback(
+    req: &SolveRequest<'_>,
+    t0: Instant,
+    explored: u64,
+) -> SolveReport {
+    let schedule = super::serial_schedule(req.g, req.m);
+    if let Some(inc) = &req.incumbent {
+        inc.offer(schedule.makespan());
+    }
+    SolveReport {
+        schedule,
+        termination: Termination::Cancelled,
+        stats: SearchStats { explored, wall: t0.elapsed(), ..SearchStats::default() },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::paper_example_dag;
+
+    #[test]
+    fn builder_chains_budget_and_hooks() {
+        let g = paper_example_dag();
+        let token = CancelToken::new();
+        let req = SolveRequest::new(&g, 4)
+            .deadline(Duration::from_secs(5))
+            .node_limit(1000)
+            .consult_incumbent(true)
+            .cancel(token.clone());
+        assert_eq!(req.m, 4);
+        assert_eq!(req.budget.deadline, Some(Duration::from_secs(5)));
+        assert_eq!(req.budget.node_limit, Some(1000));
+        assert!(req.consult_incumbent);
+        assert!(!req.is_cancelled());
+        token.cancel();
+        assert!(req.is_cancelled());
+    }
+
+    #[test]
+    fn child_keeps_budget_and_cancel_but_clears_overlays() {
+        let g = paper_example_dag();
+        let req = SolveRequest::new(&g, 2)
+            .node_limit(7)
+            .cp(CpOptions { encoding: Some(Encoding::Tang), warm_start: None });
+        let child = req.child();
+        assert_eq!(child.budget.node_limit, Some(7));
+        assert!(child.cp.encoding.is_none(), "overlays are not inherited");
+    }
+
+    #[test]
+    fn unlimited_budget_has_far_deadline() {
+        let b = Budget::unlimited();
+        assert!(b.is_unlimited());
+        let t0 = Instant::now();
+        assert!(b.deadline_from(t0) > t0 + Duration::from_secs(3600));
+    }
+
+    #[test]
+    fn cancel_token_is_shared_across_clones() {
+        let a = CancelToken::new();
+        let b = a.clone();
+        assert!(!b.is_cancelled());
+        a.cancel();
+        assert!(b.is_cancelled());
+    }
+
+    #[test]
+    fn termination_verdicts() {
+        assert!(Termination::ProvenOptimal.is_optimal());
+        assert!(!Termination::HeuristicComplete.is_optimal());
+        assert!(!Termination::Cancelled.is_optimal());
+        let t = Termination::BudgetExhausted { nodes: 5, wall: Duration::ZERO };
+        assert!(!t.is_optimal());
+    }
+}

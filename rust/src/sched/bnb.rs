@@ -25,9 +25,13 @@
 //! The pre-trail clone-per-expansion search is preserved as
 //! [`ChouChung::schedule_reference`], the differential-testing oracle.
 
+use super::api::CancelToken;
 use super::portfolio::{Incumbent, SubtreeOutcome};
 use super::trail::{BnbOp, Mark, Trail};
-use super::{Schedule, Scheduler, SolveResult};
+use super::{
+    Budget, Schedule, Scheduler, SearchStats, SolveReport, SolveRequest, SolveResult, StageStats,
+    Termination,
+};
 use crate::graph::{static_levels, Cycles, Dag, NodeId};
 use std::collections::{HashMap, HashSet};
 use std::time::{Duration, Instant};
@@ -38,11 +42,17 @@ use std::time::{Duration, Instant};
 pub const DEFAULT_MEMO_CAPACITY: usize = 1 << 20;
 
 /// Configurable exact search (duplication-free).
+///
+/// Budgets come from the [`SolveRequest`]; the memo capacity can be
+/// overridden per request via
+/// [`BnbOptions::memo_capacity`](super::BnbOptions). The `timeout` /
+/// `node_limit` fields below are **legacy-shim budgets**, read only by the
+/// `#[doc(hidden)]` `schedule(g, m)` entry point that the byte-parity
+/// suites pin — [`Scheduler::solve`] ignores them.
 #[derive(Debug, Clone)]
 pub struct ChouChung {
     pub timeout: Duration,
-    /// Optional deterministic cap on explored S-nodes (reproducible
-    /// anytime runs for the differential tests and the bench guard).
+    /// Legacy-shim node budget (see the struct docs).
     pub node_limit: Option<u64>,
     /// Capacity bound on the dominance memo: long anytime runs used to
     /// grow `seen` without bound (one signature per non-pruned S-node).
@@ -250,6 +260,9 @@ struct Ctx<'g> {
     /// placement determinism for extra pruning — see `sched::portfolio`).
     shared: Option<&'g Incumbent>,
     consult_shared: bool,
+    /// Cooperative cancellation flag from the request (polled at the
+    /// same cadence as the wall-clock deadline).
+    cancel: Option<&'g CancelToken>,
 }
 
 /// Mutable search bookkeeping shared by both DFS variants.
@@ -258,13 +271,32 @@ struct SearchState {
     best_ms: Cycles,
     seen: DominanceMemo,
     explored: u64,
+    pruned: u64,
+    memo_hits: u64,
+    leaves: u64,
     timed_out: bool,
     budget_out: bool,
+    cancelled: bool,
 }
 
 impl SearchState {
+    fn new(best: Schedule, best_ms: Cycles, memo_capacity: usize) -> Self {
+        Self {
+            best,
+            best_ms,
+            seen: DominanceMemo::new(memo_capacity),
+            explored: 0,
+            pruned: 0,
+            memo_hits: 0,
+            leaves: 0,
+            timed_out: false,
+            budget_out: false,
+            cancelled: false,
+        }
+    }
+
     fn stopped(&self) -> bool {
-        self.timed_out || self.budget_out
+        self.timed_out || self.budget_out || self.cancelled
     }
 
     /// Upper bound used for pruning: the local incumbent, tightened by
@@ -286,55 +318,81 @@ impl SearchState {
                 return false;
             }
         }
-        if self.explored % 512 == 0 && Instant::now() >= ctx.deadline {
-            self.timed_out = true;
+        if self.explored % 512 == 0 {
+            if ctx.cancel.map_or(false, CancelToken::is_cancelled) {
+                self.cancelled = true;
+            }
+            if Instant::now() >= ctx.deadline {
+                self.timed_out = true;
+            }
         }
         !self.stopped()
     }
 }
 
 impl ChouChung {
-    fn run(&self, g: &Dag, m: usize, reference: bool) -> SolveResult {
+    fn run_req(&self, req: &SolveRequest<'_>, reference: bool) -> SolveReport {
         let t0 = Instant::now();
+        let (g, m) = (req.g, req.m);
         let prep = StagePrep::new(g);
         let ctx = Ctx {
             g,
             m,
             levels: &prep.levels,
             eq_leader: &prep.eq_leader,
-            deadline: t0 + self.timeout,
-            node_limit: self.node_limit,
-            shared: None,
-            consult_shared: false,
+            deadline: req.budget.deadline_from(t0),
+            node_limit: req.budget.node_limit,
+            shared: req.incumbent.as_deref(),
+            consult_shared: req.consult_incumbent,
+            cancel: req.cancel.as_ref(),
         };
         // Seed: serial schedule.
-        let mut best = Schedule::new(m);
-        let mut t = 0;
-        for v in g.topo_order() {
-            best.place(g, v, 0, t);
-            t += g.wcet(v);
-        }
+        let best = super::serial_schedule(g, m);
         let best_ms = best.makespan();
-        let mut search = SearchState {
-            best,
-            best_ms,
-            seen: DominanceMemo::new(self.memo_capacity),
-            explored: 0,
-            timed_out: false,
-            budget_out: false,
-        };
+        let memo_capacity = req.bnb.memo_capacity.unwrap_or(self.memo_capacity);
+        let mut search = SearchState::new(best, best_ms, memo_capacity);
         let mut root = PartialState::root(g, m, ctx.levels);
         if reference {
             dfs_reference(&ctx, root, &mut search);
         } else {
             dfs(&ctx, &mut root, &mut search);
         }
-        SolveResult {
+        let wall = t0.elapsed();
+        // Exhaustion while consulting an external bound below our own
+        // best proves the *bound* optimal, not the schedule in hand.
+        let beaten_externally = ctx.consult_shared
+            && ctx.shared.map_or(false, |inc| inc.bound() < search.best_ms);
+        let termination = if search.cancelled {
+            Termination::Cancelled
+        } else if search.timed_out || search.budget_out {
+            Termination::BudgetExhausted { nodes: search.explored, wall }
+        } else if beaten_externally {
+            Termination::HeuristicComplete
+        } else {
+            Termination::ProvenOptimal
+        };
+        SolveReport {
+            termination,
+            stats: SearchStats {
+                explored: search.explored,
+                pruned: search.pruned,
+                leaves: search.leaves,
+                memo_hits: search.memo_hits,
+                memo_peak: search.seen.peak(),
+                memo_flushes: search.seen.flushes(),
+                wall_cut: search.timed_out,
+                wall,
+                stages: vec![StageStats { name: "bnb-dfs", wall, explored: search.explored }],
+            },
             schedule: search.best,
-            optimal: !search.timed_out && !search.budget_out,
-            solve_time: t0.elapsed(),
-            explored: search.explored,
         }
+    }
+
+    /// The request the legacy `schedule(g, m)` shim pins: the struct's
+    /// own budget fields folded into a [`Budget`].
+    fn legacy_request<'g>(&self, g: &'g Dag, m: usize) -> SolveRequest<'g> {
+        let budget = Budget { deadline: Some(self.timeout), node_limit: self.node_limit };
+        SolveRequest::new(g, m).budget(budget)
     }
 
     /// Clone-per-expansion reference search with the full lower-bound
@@ -342,7 +400,7 @@ impl ChouChung {
     /// oracle for the differential parity tests.
     #[doc(hidden)]
     pub fn schedule_reference(&self, g: &Dag, m: usize) -> SolveResult {
-        self.run(g, m, true)
+        self.run_req(&self.legacy_request(g, m), true).into_legacy()
     }
 }
 
@@ -351,8 +409,13 @@ impl Scheduler for ChouChung {
         "BnB-ChouChung"
     }
 
+    fn solve(&self, req: &SolveRequest<'_>) -> SolveReport {
+        self.run_req(req, false)
+    }
+
+    #[doc(hidden)]
     fn schedule(&self, g: &Dag, m: usize) -> SolveResult {
-        self.run(g, m, false)
+        self.run_req(&self.legacy_request(g, m), false).into_legacy()
     }
 }
 
@@ -435,6 +498,7 @@ fn ready_nodes(ctx: &Ctx<'_>, st: &PartialState) -> Vec<NodeId> {
 fn expandable(ctx: &Ctx<'_>, st: &PartialState, search: &mut SearchState) -> bool {
     let g = ctx.g;
     if st.placements.len() == g.n() {
+        search.leaves += 1;
         if st.makespan < search.best_ms {
             search.best_ms = st.makespan;
             let mut sched = Schedule::new(ctx.m);
@@ -452,11 +516,16 @@ fn expandable(ctx: &Ctx<'_>, st: &PartialState, search: &mut SearchState) -> boo
     // equal the full re-scan at every S-node.
     debug_assert_eq!(st.lb, scan_lower_bound(ctx, st), "incremental lb diverged");
     if st.lb >= search.cap(ctx) {
+        search.pruned += 1;
         return false;
     }
     // State-dominance memoization on the canonical signature.
     let sig = signature(ctx, st);
-    search.seen.insert(st.scheduled as u64, sig)
+    let fresh = search.seen.insert(st.scheduled as u64, sig);
+    if !fresh {
+        search.memo_hits += 1;
+    }
+    fresh
 }
 
 /// Trail-based DFS: expansions mutate one shared `PartialState` and undo
@@ -482,6 +551,7 @@ fn dfs(ctx: &Ctx<'_>, st: &mut PartialState, search: &mut SearchState) {
             let start = earliest_start(g, st, v, p);
             let fin = start + g.wcet(v);
             if fin.max(st.makespan) >= search.cap(ctx) {
+                search.pruned += 1;
                 continue;
             }
             let mark = st.trail.mark();
@@ -519,6 +589,7 @@ fn dfs_reference(ctx: &Ctx<'_>, st: PartialState, search: &mut SearchState) {
             let start = earliest_start(g, &st, v, p);
             let fin = start + g.wcet(v);
             if fin.max(st.makespan) >= search.cap(ctx) {
+                search.pruned += 1;
                 continue;
             }
             let mut child = st.clone();
@@ -579,6 +650,7 @@ pub(crate) fn enumerate_prefixes(
         node_limit: None,
         shared: None,
         consult_shared: false,
+        cancel: None,
     };
     let mut terminals: Vec<BnbPrefix> = Vec::new();
     let mut frontier: Vec<BnbPrefix> = vec![Vec::new()];
@@ -644,6 +716,7 @@ impl StagePrep {
 /// are published to `shared`; pruning consults it only when
 /// `consult_shared` (live bound sharing, non-byte-deterministic). `best`
 /// is `Some` only when a schedule strictly better than `b0` was found.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn solve_prefix(
     g: &Dag,
     m: usize,
@@ -655,6 +728,7 @@ pub(crate) fn solve_prefix(
     node_limit: Option<u64>,
     deadline: Instant,
     memo_capacity: usize,
+    cancel: Option<&CancelToken>,
 ) -> SubtreeOutcome {
     let ctx = Ctx {
         g,
@@ -665,23 +739,23 @@ pub(crate) fn solve_prefix(
         node_limit,
         shared,
         consult_shared,
+        cancel,
     };
     let mut st = PartialState::root(g, m, ctx.levels);
     replay_prefix(g, ctx.levels, &mut st, prefix);
-    let mut search = SearchState {
-        best: Schedule::new(m),
-        best_ms: b0,
-        seen: DominanceMemo::new(memo_capacity),
-        explored: 0,
-        timed_out: false,
-        budget_out: false,
-    };
+    let mut search = SearchState::new(Schedule::new(m), b0, memo_capacity);
     dfs(&ctx, &mut st, &mut search);
     SubtreeOutcome {
-        best: if search.best_ms < b0 { Some(search.best) } else { None },
-        exhausted: !search.timed_out && !search.budget_out,
+        exhausted: !search.stopped(),
         timed_out: search.timed_out,
+        cancelled: search.cancelled,
         explored: search.explored,
+        pruned: search.pruned,
+        leaves: search.leaves,
+        memo_hits: search.memo_hits,
+        memo_peak: search.seen.peak(),
+        memo_flushes: search.seen.flushes(),
+        best: if search.best_ms < b0 { Some(search.best) } else { None },
     }
 }
 
@@ -847,7 +921,7 @@ mod tests {
         let mut best: Option<Cycles> = None;
         let mut exhausted = true;
         for p in &prefixes {
-            let out = solve_prefix(&g, m, &prep, p, b0, None, false, None, deadline, 1 << 16);
+            let out = solve_prefix(&g, m, &prep, p, b0, None, false, None, deadline, 1 << 16, None);
             exhausted &= out.exhausted;
             if let Some(s) = out.best {
                 assert_eq!(check_valid(&g, &s), Ok(()));

@@ -33,24 +33,35 @@ pub use state::Encoding;
 pub(crate) use state::Bin;
 use state::State;
 
+use super::api::CancelToken;
 use super::portfolio::{Incumbent, SubtreeOutcome};
-use super::{check_valid, prune_redundant, Schedule, Scheduler, SolveResult};
+use super::{
+    check_valid, prune_redundant, serial_schedule, Budget, Schedule, Scheduler, SearchStats,
+    SolveReport, SolveRequest, SolveResult, StageStats, Termination,
+};
 use crate::graph::{critical_path_len, static_levels, Cycles, Dag};
 use std::time::{Duration, Instant};
 
-/// Solver configuration.
+/// Legacy default wall-clock budget of the `#[doc(hidden)]` shim entry
+/// points (the request API leaves the budget to the caller).
+const LEGACY_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Solver configuration: the encoding and an optional default warm start.
+///
+/// The `timeout` / `node_limit` fields are **legacy-shim budgets**, read
+/// only by the `#[doc(hidden)]` `solve(g, m)` / `schedule(g, m)` entry
+/// points that the byte-parity suites pin. [`Scheduler::solve`] takes its
+/// budget from the [`SolveRequest`] and can override the encoding and the
+/// warm start per request via [`CpOptions`](super::CpOptions).
 #[derive(Debug, Clone)]
 pub struct CpConfig {
     pub encoding: Encoding,
-    /// Wall-clock budget; on expiry the best incumbent is returned.
+    /// Legacy-shim wall-clock budget (see the struct docs).
     pub timeout: Duration,
-    /// Optional warm-start schedule (§4.3's suggested hybrid): its makespan
+    /// Default warm-start schedule (§4.3's suggested hybrid): its makespan
     /// seeds the incumbent so the solver only explores improvements.
     pub warm_start: Option<Schedule>,
-    /// Optional deterministic cap on explored search nodes. Unlike the
-    /// wall-clock timeout, a node budget makes anytime runs exactly
-    /// reproducible — the differential tests and the bench guard rely on
-    /// it. `None` leaves the search bounded by `timeout` alone.
+    /// Legacy-shim node budget (see the struct docs).
     pub node_limit: Option<u64>,
 }
 
@@ -69,16 +80,38 @@ pub struct CpSolver {
     pub cfg: CpConfig,
 }
 
+/// Internal outcome of one run: the report plus the §4.3 "found a
+/// solution" bit that only the legacy [`CpOutcome`] still exposes
+/// directly (the report records it as `stats.leaves > 0`).
+struct CpRun {
+    report: SolveReport,
+    found_solution: bool,
+}
+
 impl CpSolver {
     pub fn new(cfg: CpConfig) -> Self {
         Self { cfg }
     }
 
-    /// Solve and additionally report whether the search space was exhausted
-    /// (proving optimality) and whether any leaf beyond the warm start was
-    /// reached ("found a solution" in the §4.3 sense).
+    /// Improved-encoding solver with no default warm start (budget the
+    /// solve through the [`SolveRequest`]).
+    pub fn improved() -> Self {
+        Self::new(CpConfig::improved(LEGACY_TIMEOUT))
+    }
+
+    /// Tang-encoding solver with no default warm start (budget the solve
+    /// through the [`SolveRequest`]).
+    pub fn tang() -> Self {
+        Self::new(CpConfig::tang(LEGACY_TIMEOUT))
+    }
+
+    /// Legacy entry point: solve under the config's budget fields and
+    /// additionally report whether the search space was exhausted and
+    /// whether any leaf beyond the warm start was reached. Pinned by the
+    /// byte-parity suites; new code calls [`Scheduler::solve`].
+    #[doc(hidden)]
     pub fn solve(&self, g: &Dag, m: usize) -> CpOutcome {
-        self.run(g, m, false)
+        self.legacy_outcome(self.run_req(&self.legacy_request(g, m), false))
     }
 
     /// Clone-per-branch reference search: byte-for-byte the pre-trail
@@ -88,12 +121,27 @@ impl CpSolver {
     /// must match exactly.
     #[doc(hidden)]
     pub fn solve_reference(&self, g: &Dag, m: usize) -> CpOutcome {
-        self.run(g, m, true)
+        self.legacy_outcome(self.run_req(&self.legacy_request(g, m), true))
     }
 
-    fn run(&self, g: &Dag, m: usize, reference: bool) -> CpOutcome {
+    fn legacy_request<'g>(&self, g: &'g Dag, m: usize) -> SolveRequest<'g> {
+        let budget = Budget { deadline: Some(self.cfg.timeout), node_limit: self.cfg.node_limit };
+        SolveRequest::new(g, m).budget(budget)
+    }
+
+    fn legacy_outcome(&self, run: CpRun) -> CpOutcome {
+        CpOutcome {
+            timed_out: run.report.stats.wall >= self.cfg.timeout,
+            found_solution: run.found_solution,
+            result: run.report.into_legacy(),
+        }
+    }
+
+    fn run_req(&self, req: &SolveRequest<'_>, reference: bool) -> CpRun {
         let t0 = Instant::now();
-        let deadline = t0 + self.cfg.timeout;
+        let (g, m) = (req.g, req.m);
+        let encoding = req.cp.encoding.unwrap_or(self.cfg.encoding);
+        let warm_start = req.cp.warm_start.as_ref().or(self.cfg.warm_start.as_ref());
         let sink = g
             .single_sink()
             .expect("CP solver requires a single-sink DAG (use ensure_single_sink)");
@@ -102,7 +150,7 @@ impl CpSolver {
 
         // Incumbent: warm start if provided, else the trivial serial
         // schedule (always valid) so `best` is never empty.
-        let mut best = match &self.cfg.warm_start {
+        let mut best = match warm_start {
             Some(s) => s.clone(),
             None => serial_schedule(g, m),
         };
@@ -113,43 +161,74 @@ impl CpSolver {
             g,
             m,
             levels: &levels,
-            encoding: self.cfg.encoding,
-            deadline,
-            node_limit: self.cfg.node_limit,
+            encoding,
+            deadline: req.budget.deadline_from(t0),
+            node_limit: req.budget.node_limit,
             explored: 0,
+            pruned: 0,
+            leaves: 0,
             timed_out: false,
             budget_out: false,
+            cancelled: false,
             best_ms: &mut best_ms,
             best: &mut best,
             found_leaf: &mut found_leaf,
-            shared: None,
-            consult_shared: false,
+            shared: req.incumbent.as_deref(),
+            consult_shared: req.consult_incumbent,
+            cancel: req.cancel.as_ref(),
         };
         let exhausted = if *search.best_ms <= cp_lb {
             true // warm start already matches the absolute lower bound
         } else if reference {
-            let root = State::root(g, m, sink, self.cfg.encoding);
+            let root = State::root(g, m, sink, encoding);
             search.dfs_reference(root)
         } else {
-            let mut root = State::root(g, m, sink, self.cfg.encoding);
+            let mut root = State::root(g, m, sink, encoding);
             search.dfs(&mut root)
         };
-        let optimal = exhausted && !search.timed_out && !search.budget_out;
+        let optimal = exhausted && !search.timed_out && !search.budget_out && !search.cancelled;
         let explored = search.explored;
-        CpOutcome {
-            result: SolveResult {
+        let pruned = search.pruned;
+        let leaves = search.leaves;
+        let timed_out = search.timed_out;
+        let cancelled = search.cancelled;
+        drop(search);
+        // Exhaustion while consulting an external bound below our own
+        // best proves the *bound* optimal, not the schedule in hand.
+        let beaten_externally = req.consult_incumbent
+            && req.incumbent.as_ref().map_or(false, |inc| inc.bound() < best_ms);
+        let wall = t0.elapsed();
+        let termination = if cancelled {
+            Termination::Cancelled
+        } else if !optimal {
+            Termination::BudgetExhausted { nodes: explored, wall }
+        } else if beaten_externally {
+            Termination::HeuristicComplete
+        } else {
+            Termination::ProvenOptimal
+        };
+        CpRun {
+            found_solution: found_leaf || warm_start.is_some(),
+            report: SolveReport {
                 schedule: best,
-                optimal,
-                solve_time: t0.elapsed(),
-                explored,
+                termination,
+                stats: SearchStats {
+                    explored,
+                    pruned,
+                    leaves,
+                    wall_cut: timed_out,
+                    wall,
+                    stages: vec![StageStats { name: "cp-dfs", wall, explored }],
+                    ..SearchStats::default()
+                },
             },
-            found_solution: found_leaf || self.cfg.warm_start.is_some(),
-            timed_out: t0.elapsed() >= self.cfg.timeout,
         }
     }
 }
 
-/// Extended solve report for the §4.3 evaluation.
+/// Legacy extended solve report for the §4.3 evaluation — the request API
+/// reports the same facts as [`Termination`] plus `stats.leaves`.
+#[doc(hidden)]
 #[derive(Debug, Clone)]
 pub struct CpOutcome {
     pub result: SolveResult,
@@ -165,20 +244,15 @@ impl Scheduler for CpSolver {
             Encoding::Improved => "CP-improved",
         }
     }
-    fn schedule(&self, g: &Dag, m: usize) -> SolveResult {
-        self.solve(g, m).result
-    }
-}
 
-/// Everything on one core, topological order — the fallback incumbent.
-fn serial_schedule(g: &Dag, m: usize) -> Schedule {
-    let mut s = Schedule::new(m);
-    let mut t = 0;
-    for v in g.topo_order() {
-        s.place(g, v, 0, t);
-        t += g.wcet(v);
+    fn solve(&self, req: &SolveRequest<'_>) -> SolveReport {
+        self.run_req(req, false).report
     }
-    s
+
+    #[doc(hidden)]
+    fn schedule(&self, g: &Dag, m: usize) -> SolveResult {
+        CpSolver::solve(self, g, m).result
+    }
 }
 
 struct Search<'a> {
@@ -189,8 +263,11 @@ struct Search<'a> {
     deadline: Instant,
     node_limit: Option<u64>,
     explored: u64,
+    pruned: u64,
+    leaves: u64,
     timed_out: bool,
     budget_out: bool,
+    cancelled: bool,
     best_ms: &'a mut Cycles,
     best: &'a mut Schedule,
     found_leaf: &'a mut bool,
@@ -200,12 +277,15 @@ struct Search<'a> {
     /// for the determinism trade-off).
     shared: Option<&'a Incumbent>,
     consult_shared: bool,
+    /// Cooperative cancellation flag from the request (polled at the
+    /// same cadence as the wall-clock deadline).
+    cancel: Option<&'a CancelToken>,
 }
 
 impl<'a> Search<'a> {
-    /// True once either stop condition fired; the search unwinds.
+    /// True once any stop condition fired; the search unwinds.
     fn stopped(&self) -> bool {
-        self.timed_out || self.budget_out
+        self.timed_out || self.budget_out || self.cancelled
     }
 
     /// Upper bound used for propagation and pruning: the local incumbent,
@@ -229,9 +309,16 @@ impl<'a> Search<'a> {
                 return false;
             }
         }
-        if self.explored % 256 == 0 && Instant::now() >= self.deadline {
-            self.timed_out = true;
-            return false;
+        if self.explored % 256 == 0 {
+            if self.cancel.map_or(false, CancelToken::is_cancelled) {
+                self.cancelled = true;
+            }
+            if Instant::now() >= self.deadline {
+                self.timed_out = true;
+            }
+            if self.stopped() {
+                return false;
+            }
         }
         !self.stopped()
     }
@@ -241,6 +328,7 @@ impl<'a> Search<'a> {
         prune_redundant(self.g, &mut sched);
         if check_valid(self.g, &sched).is_ok() {
             *self.found_leaf = true;
+            self.leaves += 1;
             let ms = sched.makespan();
             if ms < *self.best_ms {
                 *self.best_ms = ms;
@@ -263,10 +351,12 @@ impl<'a> Search<'a> {
         // prunings are trailed, so the caller's undo removes them even on
         // the infeasible path.
         if !st.propagate(self.g, self.m, self.levels, self.encoding, self.cap()) {
+            self.pruned += 1;
             return true; // infeasible or dominated: pruned subtree, fully explored
         }
         // Lower bound pruning.
         if st.lower_bound(self.g, self.m, self.levels) >= self.cap() {
+            self.pruned += 1;
             return true;
         }
         // Branch on the next undecided binary (greedy value first).
@@ -320,9 +410,11 @@ impl<'a> Search<'a> {
             return false;
         }
         if !st.propagate(self.g, self.m, self.levels, self.encoding, self.cap()) {
+            self.pruned += 1;
             return true;
         }
         if st.lower_bound(self.g, self.m, self.levels) >= self.cap() {
+            self.pruned += 1;
             return true;
         }
         if let Some((var, first)) = st.pick_branch(self.g, self.m, self.encoding) {
@@ -458,6 +550,7 @@ pub(crate) fn enumerate_prefixes(
 /// consults it only when `consult_shared` (live bound sharing,
 /// non-byte-deterministic). `best` is `Some` only when a schedule
 /// strictly better than `b0` was found.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn solve_prefix(
     g: &Dag,
     m: usize,
@@ -469,6 +562,7 @@ pub(crate) fn solve_prefix(
     consult_shared: bool,
     node_limit: Option<u64>,
     deadline: Instant,
+    cancel: Option<&CancelToken>,
 ) -> SubtreeOutcome {
     let sink = g
         .single_sink()
@@ -478,7 +572,18 @@ pub(crate) fn solve_prefix(
     let mut found_leaf = false;
     let mut st = State::root(g, m, sink, encoding);
     if !replay_cp_prefix(&mut st, g, m, levels, encoding, b0, prefix) {
-        return SubtreeOutcome { best: None, exhausted: true, timed_out: false, explored: 0 };
+        return SubtreeOutcome {
+            best: None,
+            exhausted: true,
+            timed_out: false,
+            cancelled: false,
+            explored: 0,
+            pruned: 0,
+            leaves: 0,
+            memo_hits: 0,
+            memo_peak: 0,
+            memo_flushes: 0,
+        };
     }
     let mut search = Search {
         g,
@@ -488,24 +593,37 @@ pub(crate) fn solve_prefix(
         deadline,
         node_limit,
         explored: 0,
+        pruned: 0,
+        leaves: 0,
         timed_out: false,
         budget_out: false,
+        cancelled: false,
         best_ms: &mut best_ms,
         best: &mut best,
         found_leaf: &mut found_leaf,
         shared,
         consult_shared,
+        cancel,
     };
     let exhausted = search.dfs(&mut st);
-    let cut = search.timed_out || search.budget_out;
+    let cut = search.stopped();
     let timed_out = search.timed_out;
+    let cancelled = search.cancelled;
     let explored = search.explored;
+    let pruned = search.pruned;
+    let leaves = search.leaves;
     drop(search);
     SubtreeOutcome {
         best: if best_ms < b0 { Some(best) } else { None },
         exhausted: exhausted && !cut,
         timed_out,
+        cancelled,
         explored,
+        pruned,
+        leaves,
+        memo_hits: 0,
+        memo_peak: 0,
+        memo_flushes: 0,
     }
 }
 
@@ -701,6 +819,7 @@ mod tests {
                 false,
                 None,
                 deadline,
+                None,
             );
             exhausted &= out.exhausted;
             if let Some(s) = out.best {

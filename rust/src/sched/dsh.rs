@@ -7,9 +7,12 @@
 //! and keeps the copies only if the node's start time improves. Redundant
 //! duplicates are pruned at the end (§2.3).
 
+use super::api::cancelled_fallback;
 use super::list::ListState;
-use super::{prune_redundant, Scheduler, SolveResult};
-use crate::graph::{Cycles, Dag, NodeId};
+use super::{
+    prune_redundant, Scheduler, SearchStats, SolveReport, SolveRequest, StageStats, Termination,
+};
+use crate::graph::{Cycles, NodeId};
 use std::time::Instant;
 
 /// The DSH solver.
@@ -28,11 +31,15 @@ impl Scheduler for Dsh {
         "DSH"
     }
 
-    fn schedule(&self, g: &Dag, m: usize) -> SolveResult {
+    fn solve(&self, req: &SolveRequest<'_>) -> SolveReport {
         let t0 = Instant::now();
-        let mut st = ListState::new(g, m);
+        let g = req.g;
+        let mut st = ListState::new(g, req.m);
         let mut explored = 0u64;
         while let Some(v) = st.pop_ready() {
+            if req.is_cancelled() {
+                return cancelled_fallback(req, t0, explored);
+            }
             // Evaluate every core with its best duplication plan.
             let mut best: Option<(usize, DupPlan)> = None;
             for p in 0..st.m {
@@ -54,13 +61,29 @@ impl Scheduler for Dsh {
             }
             st.commit(v, p, plan.start);
         }
+        let t_list = t0.elapsed();
         let mut schedule = st.schedule;
         prune_redundant(g, &mut schedule);
-        SolveResult {
+        if let Some(inc) = &req.incumbent {
+            inc.offer(schedule.makespan());
+        }
+        let wall = t0.elapsed();
+        SolveReport {
             schedule,
-            optimal: false,
-            solve_time: t0.elapsed(),
-            explored,
+            termination: Termination::HeuristicComplete,
+            stats: SearchStats {
+                explored,
+                wall,
+                stages: vec![
+                    StageStats { name: "list-schedule", wall: t_list, explored },
+                    StageStats {
+                        name: "prune-redundant",
+                        wall: wall.saturating_sub(t_list),
+                        explored: 0,
+                    },
+                ],
+                ..SearchStats::default()
+            },
         }
     }
 }

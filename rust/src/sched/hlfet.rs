@@ -7,9 +7,9 @@
 //! cheapest member of the `sched::portfolio` heuristic race and a useful
 //! floor in the solver comparisons.
 
+use super::api::cancelled_fallback;
 use super::list::ListState;
-use super::{Scheduler, SolveResult};
-use crate::graph::Dag;
+use super::{Scheduler, SearchStats, SolveReport, SolveRequest, StageStats, Termination};
 use std::time::Instant;
 
 /// The HLFET solver.
@@ -21,20 +21,31 @@ impl Scheduler for Hlfet {
         "HLFET"
     }
 
-    fn schedule(&self, g: &Dag, m: usize) -> SolveResult {
+    fn solve(&self, req: &SolveRequest<'_>) -> SolveReport {
         let t0 = Instant::now();
-        let mut st = ListState::new(g, m);
+        let mut st = ListState::new(req.g, req.m);
         let mut explored = 0u64;
         while let Some(v) = st.pop_ready() {
+            if req.is_cancelled() {
+                return cancelled_fallback(req, t0, explored);
+            }
             explored += 1;
             let (p, start) = st.best_core(v);
             st.commit(v, p, start);
         }
-        SolveResult {
+        if let Some(inc) = &req.incumbent {
+            inc.offer(st.schedule.makespan());
+        }
+        let wall = t0.elapsed();
+        SolveReport {
             schedule: st.schedule,
-            optimal: false,
-            solve_time: t0.elapsed(),
-            explored,
+            termination: Termination::HeuristicComplete,
+            stats: SearchStats {
+                explored,
+                wall,
+                stages: vec![StageStats { name: "list-schedule", wall, explored }],
+                ..SearchStats::default()
+            },
         }
     }
 }

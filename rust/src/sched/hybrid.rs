@@ -4,51 +4,73 @@
 //! DSH runs first (fast, near-optimal); its makespan seeds the CP solver's
 //! incumbent, so the exact search only ever explores strictly-improving
 //! schedules and inherits DSH's answer when the budget runs out.
+//!
+//! The request's [`Budget`](super::Budget) applies to the CP refinement
+//! (DSH itself is unbudgeted: it is orders of magnitude faster, §4.2
+//! Observation 3) — a deterministic node budget makes a truncated hybrid
+//! result reproducible across machines, the same discipline
+//! `sched::portfolio` uses for its racers. The request's encoding overlay
+//! ([`CpOptions::encoding`](super::CpOptions)) selects the refinement
+//! encoding (default: improved).
 
-use super::cp::{CpConfig, CpSolver, Encoding};
+use super::cp::CpSolver;
 use super::dsh::Dsh;
-use super::{Scheduler, SolveResult};
-use crate::graph::Dag;
-use std::time::{Duration, Instant};
+use super::{CpOptions, Scheduler, SearchStats, SolveReport, SolveRequest, StageStats, Termination};
+use std::time::Instant;
 
-/// DSH warm start + improved-encoding CP refinement.
-#[derive(Debug, Clone)]
-pub struct Hybrid {
-    /// Budget for the CP refinement phase (DSH itself is unbudgeted: it is
-    /// orders of magnitude faster, §4.2 Observation 3).
-    pub cp_timeout: Duration,
-    /// Optional deterministic node budget for the CP refinement: with a
-    /// budget (instead of the wall clock) as the binding cut, a
-    /// truncated hybrid result is reproducible across machines — the
-    /// same discipline `sched::portfolio` uses for its racers.
-    pub cp_node_limit: Option<u64>,
-}
-
-impl Default for Hybrid {
-    fn default() -> Self {
-        Self { cp_timeout: Duration::from_secs(10), cp_node_limit: None }
-    }
-}
+/// DSH warm start + CP refinement. Budgets, cancellation and incumbent
+/// sharing all come from the [`SolveRequest`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Hybrid;
 
 impl Scheduler for Hybrid {
     fn name(&self) -> &'static str {
         "Hybrid-DSH+CP"
     }
 
-    fn schedule(&self, g: &Dag, m: usize) -> SolveResult {
+    fn solve(&self, req: &SolveRequest<'_>) -> SolveReport {
         let t0 = Instant::now();
-        let seed = Dsh.schedule(g, m);
-        let cfg = CpConfig {
-            encoding: Encoding::Improved,
-            timeout: self.cp_timeout,
-            warm_start: Some(seed.schedule.clone()),
-            node_limit: self.cp_node_limit,
+        let mut seed = Dsh.solve(&req.child());
+        if seed.termination == Termination::Cancelled {
+            seed.stats.wall = t0.elapsed();
+            return seed;
+        }
+        let t_dsh = t0.elapsed();
+        let cp_opts = CpOptions { encoding: req.cp.encoding, warm_start: Some(seed.schedule) };
+        let refine = Scheduler::solve(&CpSolver::improved(), &req.child().cp(cp_opts));
+        let wall = t0.elapsed();
+        let explored = seed.stats.explored + refine.stats.explored;
+        let termination = match refine.termination {
+            Termination::ProvenOptimal => Termination::ProvenOptimal,
+            Termination::Cancelled => Termination::Cancelled,
+            // Exhausted under a consulted external bound: no optimality
+            // claim for the schedule in hand (see `Termination` docs).
+            Termination::HeuristicComplete => Termination::HeuristicComplete,
+            Termination::BudgetExhausted { .. } => {
+                Termination::BudgetExhausted { nodes: explored, wall }
+            }
         };
-        let out = CpSolver::new(cfg).solve(g, m);
-        let mut res = out.result;
-        res.solve_time = t0.elapsed();
-        res.explored += seed.explored;
-        res
+        SolveReport {
+            schedule: refine.schedule,
+            termination,
+            stats: SearchStats {
+                explored,
+                wall,
+                stages: vec![
+                    StageStats {
+                        name: "dsh-warm-start",
+                        wall: t_dsh,
+                        explored: seed.stats.explored,
+                    },
+                    StageStats {
+                        name: "cp-refine",
+                        wall: refine.stats.wall,
+                        explored: refine.stats.explored,
+                    },
+                ],
+                ..refine.stats
+            },
+        }
     }
 }
 
@@ -56,7 +78,7 @@ impl Scheduler for Hybrid {
 mod tests {
     use super::*;
     use crate::graph::{ensure_single_sink, paper_example_dag};
-    use crate::sched::{check_valid, dsh::Dsh};
+    use crate::sched::{check_valid, dsh::Dsh, CancelToken};
 
     #[test]
     fn hybrid_never_worse_than_dsh() {
@@ -64,7 +86,7 @@ mod tests {
         ensure_single_sink(&mut g);
         for m in 2..=4 {
             let dsh = Dsh.schedule(&g, m).schedule.makespan();
-            let hy = Hybrid::default().schedule(&g, m);
+            let hy = Hybrid.solve(&SolveRequest::new(&g, m));
             assert!(hy.schedule.makespan() <= dsh, "m={m}");
             assert_eq!(check_valid(&g, &hy.schedule), Ok(()));
         }
@@ -75,11 +97,13 @@ mod tests {
         // With the node budget (not the wall clock) as the binding cut,
         // two runs must walk the identical CP tree.
         let g = crate::daggen::generate(&crate::daggen::DagGenConfig::paper(30), 5);
-        let h = Hybrid { cp_timeout: Duration::from_secs(3600), cp_node_limit: Some(300) };
-        let a = h.schedule(&g, 4);
-        let b = h.schedule(&g, 4);
-        assert_eq!(a.explored, b.explored);
+        let req = SolveRequest::new(&g, 4).node_limit(300);
+        let a = Hybrid.solve(&req);
+        let b = Hybrid.solve(&req);
+        assert_eq!(a.stats.explored, b.stats.explored);
         assert_eq!(a.schedule.makespan(), b.schedule.makespan());
+        assert!(matches!(a.termination, Termination::BudgetExhausted { .. }));
+        assert!(!a.stats.wall_cut, "a node cut is not a wall-clock cut");
         assert_eq!(check_valid(&g, &a.schedule), Ok(()));
     }
 
@@ -94,8 +118,21 @@ mod tests {
         g.add_edge(a, c, 1);
         g.add_edge(b, d, 1);
         g.add_edge(c, d, 1);
-        let hy = Hybrid::default().schedule(&g, 2);
-        assert!(hy.optimal);
+        let hy = Hybrid.solve(&SolveRequest::new(&g, 2));
+        assert_eq!(hy.termination, Termination::ProvenOptimal);
         assert_eq!(hy.schedule.makespan(), 7);
+        assert_eq!(hy.stats.stages.len(), 2, "dsh + cp-refine stage times");
+    }
+
+    #[test]
+    fn pre_cancelled_hybrid_returns_serial_fallback() {
+        let mut g = paper_example_dag();
+        ensure_single_sink(&mut g);
+        let token = CancelToken::new();
+        token.cancel();
+        let hy = Hybrid.solve(&SolveRequest::new(&g, 2).cancel(token));
+        assert_eq!(hy.termination, Termination::Cancelled);
+        assert_eq!(check_valid(&g, &hy.schedule), Ok(()));
+        assert_eq!(hy.schedule.makespan(), g.total_wcet(), "serial fallback");
     }
 }

@@ -6,9 +6,10 @@
 //! for lower-level nodes that fit in the hole without delaying the current
 //! node, and schedules them there.
 
+use super::api::cancelled_fallback;
 use super::list::ListState;
-use super::{Scheduler, SolveResult};
-use crate::graph::{Cycles, Dag, NodeId};
+use super::{Scheduler, SearchStats, SolveReport, SolveRequest, StageStats, Termination};
+use crate::graph::{Cycles, NodeId};
 use std::time::Instant;
 
 /// The ISH solver.
@@ -20,11 +21,14 @@ impl Scheduler for Ish {
         "ISH"
     }
 
-    fn schedule(&self, g: &Dag, m: usize) -> SolveResult {
+    fn solve(&self, req: &SolveRequest<'_>) -> SolveReport {
         let t0 = Instant::now();
-        let mut st = ListState::new(g, m);
+        let mut st = ListState::new(req.g, req.m);
         let mut explored = 0u64;
         while let Some(v) = st.pop_ready() {
+            if req.is_cancelled() {
+                return cancelled_fallback(req, t0, explored);
+            }
             explored += 1;
             let (p, start) = st.best_core(v);
             let gap_start = st.core_avail[p];
@@ -32,11 +36,19 @@ impl Scheduler for Ish {
             // Insertion step: fill [gap_start, start) with ready nodes.
             fill_gap(&mut st, p, gap_start, start, &mut explored);
         }
-        SolveResult {
+        if let Some(inc) = &req.incumbent {
+            inc.offer(st.schedule.makespan());
+        }
+        let wall = t0.elapsed();
+        SolveReport {
             schedule: st.schedule,
-            optimal: false,
-            solve_time: t0.elapsed(),
-            explored,
+            termination: Termination::HeuristicComplete,
+            stats: SearchStats {
+                explored,
+                wall,
+                stages: vec![StageStats { name: "list-schedule", wall, explored }],
+                ..SearchStats::default()
+            },
         }
     }
 }

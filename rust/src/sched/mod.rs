@@ -30,6 +30,34 @@
 //! `remove` only rescans for the makespan when the removed instance was
 //! the latest finisher.
 //!
+//! # The solver API: [`SolveRequest`] in, [`SolveReport`] out
+//!
+//! Every solver implements one trait method,
+//! [`Scheduler::solve`]`(&self, &SolveRequest) -> SolveReport`. The
+//! request carries the problem (`Dag` + `m`), one unified [`Budget`]
+//! (wall-clock deadline as a machine-dependent safety valve, node limit
+//! as a deterministic cut), an optional shared [`Incumbent`] bound, a
+//! [`CancelToken`], and per-solver option overlays. The report carries
+//! the schedule, a typed [`Termination`] verdict saying *why* the search
+//! stopped ([`Termination::ProvenOptimal`],
+//! [`Termination::BudgetExhausted`], [`Termination::Cancelled`],
+//! [`Termination::HeuristicComplete`]) and structured [`SearchStats`]
+//! (explored/pruned/memo counters, per-stage wall times). See [`api`]
+//! for the full semantics.
+//!
+//! ```no_run
+//! use acetone::sched::{Scheduler, SolveRequest};
+//! use acetone::sched::bnb::ChouChung;
+//! # let g = acetone::graph::paper_example_dag();
+//! let report = ChouChung::default()
+//!     .solve(&SolveRequest::new(&g, 2).node_limit(10_000));
+//! println!("{:?}: makespan {}", report.termination, report.schedule.makespan());
+//! ```
+//!
+//! The pre-request entry points (`schedule(g, m)`, the budget fields on
+//! the solver configs) survive only as `#[doc(hidden)]` shims for the
+//! byte-parity differential suites; new code should not use them.
+//!
 //! # Solvers
 //!
 //! Heuristics: [`hlfet`] (plain level-ordered list scheduling), [`ish`]
@@ -37,10 +65,13 @@
 //! [`hybrid`] (DSH warm start + CP refinement). Exact: [`bnb`]
 //! (Chou–Chung, duplication-free) and [`cp`] (both §3.1/§3.2 encodings),
 //! both trail-based ([`trail`]). [`portfolio`] races all of them across
-//! worker threads behind one deterministic `solve()` with a schedule
-//! cache — the recommended entry point when the caller just wants the
-//! best schedule the crate can find.
+//! worker threads behind one deterministic solve with a canonically
+//! request-keyed schedule cache — the recommended entry point when the
+//! caller just wants the best schedule the crate can find.
+//!
+//! [`Incumbent`]: portfolio::Incumbent
 
+pub mod api;
 pub mod bnb;
 pub mod cp;
 pub mod dsh;
@@ -53,6 +84,10 @@ mod program;
 pub mod trail;
 mod validity;
 
+pub use api::{
+    BnbOptions, Budget, CancelToken, CpOptions, PortfolioOptions, SearchStats, SolveReport,
+    SolveRequest, StageStats, Termination,
+};
 pub use program::{derive_comms, derive_programs, CommOp, CoreProgram, CoreStep};
 pub use validity::{check_valid, prune_redundant, ValidityError};
 
@@ -303,7 +338,10 @@ impl Schedule {
     }
 }
 
-/// Outcome of a solver run: the schedule plus solve metadata.
+/// Legacy solve outcome — the lossy predecessor of [`SolveReport`]
+/// (`optimal` cannot say *why* a search stopped). Kept only for the
+/// byte-parity differential suites; new code reads [`SolveReport`].
+#[doc(hidden)]
 #[derive(Debug, Clone)]
 pub struct SolveResult {
     pub schedule: Schedule,
@@ -315,13 +353,37 @@ pub struct SolveResult {
     pub explored: u64,
 }
 
-/// Common interface over all solvers so the evaluation harness (Figs. 7–8)
-/// can sweep them uniformly.
+/// Common interface over all solvers: one [`SolveRequest`] in, one
+/// [`SolveReport`] out. The evaluation harness (Figs. 7–8), the CLI and
+/// the portfolio's racer fan-out all drive solvers through this trait.
 pub trait Scheduler {
     /// Human-readable solver name ("ISH", "DSH", "CP-improved", …).
     fn name(&self) -> &'static str;
-    /// Compute a valid schedule of `g` on `m` cores.
-    fn schedule(&self, g: &Dag, m: usize) -> SolveResult;
+
+    /// Compute a valid schedule of `req.g` on `req.m` cores under the
+    /// request's budget, publishing to its shared incumbent (if any) and
+    /// honoring its cancellation token.
+    fn solve(&self, req: &SolveRequest<'_>) -> SolveReport;
+
+    /// Legacy entry point: an unbudgeted request (solvers with legacy
+    /// budget fields override this to fold them in). Pinned by the
+    /// byte-parity suites; new code calls [`Scheduler::solve`].
+    #[doc(hidden)]
+    fn schedule(&self, g: &Dag, m: usize) -> SolveResult {
+        self.solve(&SolveRequest::new(g, m)).into_legacy()
+    }
+}
+
+/// Everything on one core in topological order — the always-valid
+/// fallback (and the exact solvers' seed incumbent).
+pub(crate) fn serial_schedule(g: &Dag, m: usize) -> Schedule {
+    let mut s = Schedule::new(m);
+    let mut t = 0;
+    for v in g.topo_order() {
+        s.place(g, v, 0, t);
+        t += g.wcet(v);
+    }
+    s
 }
 
 #[cfg(test)]

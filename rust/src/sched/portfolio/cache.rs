@@ -1,28 +1,34 @@
-//! Schedule cache: canonical-keyed memoization of portfolio solves.
+//! Schedule cache: canonical request-keyed memoization of portfolio
+//! solves.
 //!
 //! The serving scenario issues the *same* network DAG over and over (one
 //! schedule per deployed model × core count); solving it once and
 //! replaying the cached schedule turns every repeat request into a hash
 //! lookup. Keys are the full canonical encoding of `(DAG structure,
-//! WCETs, edge latencies, m, solver configuration)` — the cost model is
+//! WCETs, edge latencies, m, resolved request)` — the tag is derived
+//! from the resolved `SolveRequest` (node budget + result-affecting
+//! options, see `Knobs::cache_tag` in the portfolio), **not** from a
+//! hand-rolled config salt, so the legacy config shim and a hand-built
+//! request with the same budget hit the same entry. The cost model is
 //! already folded into the DAG's weights by `Network::to_dag`, so
-//! DAG + m + config is exactly "same problem". Storing the complete key
+//! DAG + m + request is exactly "same problem". Storing the complete key
 //! (not a 64-bit digest) rules out hash-collision false hits.
 
-use super::super::Schedule;
+use super::super::{Schedule, Termination};
 use crate::graph::Dag;
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
 
-/// Canonical cache key: `[n, m, salt…, per-node wcet + out-edges…]`.
-/// Structurally identical DAGs produce identical keys regardless of node
-/// names; any difference in shape, weights, core count or solver salt
-/// produces a different key.
-pub fn canonical_key(g: &Dag, m: usize, salt: &[u64]) -> Vec<u64> {
-    let mut key = Vec::with_capacity(2 + salt.len() + 2 * g.n() + 2 * g.edge_count());
+/// Canonical cache key: `[request-tag…, n, m, per-node wcet + out-edges…]`
+/// (the tag leads with a key-version word). Structurally identical DAGs
+/// produce identical keys regardless of node names; any difference in
+/// shape, weights, core count or result-affecting request field produces
+/// a different key.
+pub fn canonical_key(g: &Dag, m: usize, request_tag: &[u64]) -> Vec<u64> {
+    let mut key = Vec::with_capacity(2 + request_tag.len() + 2 * g.n() + 2 * g.edge_count());
+    key.extend_from_slice(request_tag);
     key.push(g.n() as u64);
     key.push(m as u64);
-    key.extend_from_slice(salt);
     for v in 0..g.n() {
         key.push(g.wcet(v));
         key.push(g.children(v).len() as u64);
@@ -35,11 +41,12 @@ pub fn canonical_key(g: &Dag, m: usize, salt: &[u64]) -> Vec<u64> {
 }
 
 /// A cached solve: everything needed to answer a repeat request without
-/// searching.
+/// searching — the schedule and the original termination verdict (a hit
+/// replays the verdict with zeroed search stats).
 #[derive(Debug, Clone)]
 pub struct CachedSolve {
     pub schedule: Schedule,
-    pub optimal: bool,
+    pub termination: Termination,
 }
 
 /// Hit/miss/eviction counters (monotonic over the cache's lifetime).
@@ -136,7 +143,7 @@ mod tests {
         let g = paper_example_dag();
         let mut s = Schedule::new(2);
         s.place(&g, 0, 0, ms_seed);
-        CachedSolve { schedule: s, optimal: false }
+        CachedSolve { schedule: s, termination: Termination::HeuristicComplete }
     }
 
     #[test]
@@ -146,7 +153,7 @@ mod tests {
         let k2 = canonical_key(&g, 3, &[0]);
         let k3 = canonical_key(&g, 2, &[1]);
         assert_ne!(k1, k2, "core count is part of the key");
-        assert_ne!(k1, k3, "config salt is part of the key");
+        assert_ne!(k1, k3, "the request tag is part of the key");
         let mut g2 = paper_example_dag();
         g2.set_wcet(0, 99);
         assert_ne!(k1, canonical_key(&g2, 2, &[0]), "WCETs are part of the key");

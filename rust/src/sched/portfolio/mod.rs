@@ -1,19 +1,20 @@
 //! `sched::portfolio` — deterministic parallel solver portfolio.
 //!
-//! One `solve()` entry point that races every solver in the crate across
-//! worker threads and returns the best schedule found, byte-identically
-//! for **any** worker count:
+//! One [`Scheduler::solve`] entry point that races every solver in the
+//! crate across worker threads and returns the best schedule found,
+//! byte-identically for **any** worker count:
 //!
-//! 1. **Heuristic race** — HLFET, ISH, DSH and the DSH+CP hybrid run
-//!    concurrently (one task each); the winner under the deterministic
-//!    reduction order becomes the incumbent and seeds the shared bound.
+//! 1. **Heuristic race** — plain request fan-out: HLFET, ISH, DSH and a
+//!    warm-started CP refinement (the §4.3 hybrid) each solve a child
+//!    [`SolveRequest`] concurrently (one task each); the winner under the
+//!    deterministic reduction order becomes the incumbent and seeds the
+//!    shared bound.
 //! 2. **Parallel exact stage** — the Chou–Chung branch-and-bound and the
-//!    improved-encoding CP search are each split into disjoint subtrees
-//!    by enumerating their first branching decisions (*multi-root
-//!    splitting*, `bnb::enumerate_prefixes` / `cp::enumerate_prefixes`).
-//!    Every subtree is an independent task with its own trail-backed
-//!    state (no clone-per-branch, per the PR-2 trail core) pulled by the
-//!    worker pool; improvements are published to a shared
+//!    CP search are each split into disjoint subtrees by enumerating
+//!    their first branching decisions (*multi-root splitting*,
+//!    `bnb::enumerate_prefixes` / `cp::enumerate_prefixes`). Every
+//!    subtree is an independent task with its own trail-backed state
+//!    pulled by the worker pool; improvements are published to a shared
 //!    [`Incumbent`] (`AtomicU64`). The BnB stage runs first and its
 //!    (deterministic) result tightens the bound the CP stage starts
 //!    from, so the CP workers prune against the best schedule found
@@ -24,11 +25,30 @@
 //!    `(subtree, initial bound, budget)` and the reduction ignores
 //!    completion order, the returned schedule is byte-identical for 1,
 //!    2 or 8 workers (pinned by `tests/portfolio_determinism.rs`).
-//! 4. **Schedule cache** — solves are memoized under a canonical
-//!    `(DAG, m, config)` key ([`canonical_key`]); repeat requests
-//!    for the same network (the serving scenario) skip the search
-//!    entirely. The worker count is deliberately *not* part of the key:
-//!    results are worker-count-invariant by construction.
+//! 4. **Schedule cache** — solves are memoized under a canonical key
+//!    derived from the *resolved request* (DAG + `m` + node budget +
+//!    result-affecting options — see [`canonical_key`] and
+//!    `Knobs::cache_tag`); repeat requests for the same network (the
+//!    serving scenario) skip the search entirely. Worker count and the
+//!    wall-clock deadline are deliberately *not* part of the key:
+//!    results are worker-count-invariant by construction, and solves
+//!    actually cut by the wall clock are never cached.
+//!
+//! # Budgets, cancellation, verdicts
+//!
+//! The request's [`Budget`] is interpreted as: `deadline` = wall-clock
+//! safety valve per stage (machine-dependent; such solves are reported
+//! with `stats.wall_cut` and not cached), `node_limit` = deterministic
+//! node budget *per subtree root* (the per-root reading is what keeps
+//! the explored forest worker-count-invariant). The request's
+//! [`CancelToken`] is polled by every racer and subtree task; a
+//! cancelled solve returns the best schedule found so far under
+//! [`Termination::Cancelled`] and is not cached. The verdict is
+//! [`Termination::ProvenOptimal`] exactly when the CP stage exhausted
+//! its space (only CP covers duplication-aware schedules),
+//! [`Termination::HeuristicComplete`] when every enabled stage finished
+//! without an optimality proof (e.g. the exact engines are disabled),
+//! and [`Termination::BudgetExhausted`] when any exact stage was cut.
 //!
 //! # Determinism vs. live bound sharing
 //!
@@ -41,7 +61,7 @@
 //! **makespan** is still the same on exhaustive runs; which of several
 //! equal-makespan placements survives becomes timing-dependent, and
 //! budgeted cuts land at timing-dependent tree nodes). Wall-clock
-//! timeouts are a safety valve with the same caveat: determinism is
+//! deadlines are a safety valve with the same caveat: determinism is
 //! guaranteed when node budgets (or exhaustion) are the binding cut.
 
 mod cache;
@@ -52,13 +72,17 @@ pub use cache::{canonical_key, CacheStats, CachedSolve, ScheduleCache};
 pub use incumbent::Incumbent;
 pub use pool::parallel_map;
 
+use super::api::cancelled_fallback;
 use super::bnb;
 use super::cp;
-use super::cp::{CpConfig, CpSolver, Encoding};
+use super::cp::{CpSolver, Encoding};
 use super::dsh::Dsh;
 use super::hlfet::Hlfet;
 use super::ish::Ish;
-use super::{check_valid, Schedule, Scheduler, SolveResult};
+use super::{
+    check_valid, Budget, CancelToken, CpOptions, Schedule, Scheduler, SearchStats, SolveReport,
+    SolveRequest, SolveResult, StageStats, Termination,
+};
 use crate::graph::{critical_path_len, ensure_single_sink, static_levels, Cycles, Dag, NodeId};
 use std::time::{Duration, Instant};
 
@@ -72,12 +96,32 @@ pub struct SubtreeOutcome {
     /// True when the wall-clock deadline (not a node budget) cut the
     /// task — the one cut that makes a result machine-dependent.
     pub timed_out: bool,
+    /// True when the request's cancellation token cut the task.
+    pub cancelled: bool,
     /// Search nodes entered by this task.
     pub explored: u64,
+    /// Bound-pruned subtrees in this task.
+    pub pruned: u64,
+    /// Feasible leaves reached by this task.
+    pub leaves: u64,
+    /// Dominance-memo hits in this task (BnB only).
+    pub memo_hits: u64,
+    /// Dominance-memo high-water mark of this task (BnB only).
+    pub memo_peak: usize,
+    /// Dominance-memo generation flushes of this task (BnB only).
+    pub memo_flushes: u64,
 }
 
-/// Portfolio configuration. The defaults are fully deterministic; see the
-/// module docs for the [`PortfolioConfig::share_bound`] trade-off.
+/// Portfolio configuration: worker-pool and search-shape knobs. The
+/// defaults are fully deterministic; see the module docs for the
+/// [`PortfolioConfig::share_bound`] trade-off.
+///
+/// `exact_timeout` and `node_limit_per_root` are **legacy-shim budgets**,
+/// read only by the `#[doc(hidden)]` `solve(g, m)` / `schedule(g, m)`
+/// entry points that the byte-parity suites pin — [`Scheduler::solve`]
+/// takes the deadline and the per-root node budget from the request's
+/// [`Budget`], and every other knob here can be overridden per request
+/// via [`PortfolioOptions`](super::PortfolioOptions).
 #[derive(Debug, Clone)]
 pub struct PortfolioConfig {
     /// Worker threads; 0 = `available_parallelism()` capped at 8. Never
@@ -88,10 +132,9 @@ pub struct PortfolioConfig {
     pub root_target: usize,
     /// Depth cap on the root-splitting enumeration.
     pub max_split_depth: usize,
-    /// Wall-clock safety valve for each exact stage.
+    /// Legacy-shim wall-clock budget (see the struct docs).
     pub exact_timeout: Duration,
-    /// Deterministic node budget *per subtree task*; `None` runs each
-    /// subtree to exhaustion (bounded by `exact_timeout`).
+    /// Legacy-shim per-root node budget (see the struct docs).
     pub node_limit_per_root: Option<u64>,
     /// Live bound sharing: exact tasks also prune against the shared
     /// `AtomicU64` bound (faster, but placement-level determinism is
@@ -109,7 +152,7 @@ pub struct PortfolioConfig {
     pub hybrid_node_limit: Option<u64>,
     /// Dominance-memo capacity per BnB task (see `bnb::DominanceMemo`).
     pub memo_capacity: usize,
-    /// Schedule-cache capacity (number of cached DAG/m/config keys).
+    /// Schedule-cache capacity (number of cached request keys).
     pub cache_capacity: usize,
 }
 
@@ -132,13 +175,38 @@ impl Default for PortfolioConfig {
     }
 }
 
-impl PortfolioConfig {
-    /// Cache-key salt: every config field that can change the *result*.
-    /// Worker count and wall-clock timeouts are deliberately excluded
-    /// (worker-count invariance is guaranteed; timeouts are a safety
-    /// valve, not part of the problem identity).
-    fn salt(&self) -> Vec<u64> {
+/// Version tag of the canonical request key (bump when the key layout or
+/// the set of result-affecting knobs changes).
+const KEY_VERSION: u64 = 2;
+
+/// One request's fully-resolved knobs: config defaults overlaid with the
+/// request's [`PortfolioOptions`](super::PortfolioOptions) and budget.
+/// Everything result-affecting in here feeds the canonical cache key.
+#[derive(Debug, Clone)]
+struct Knobs {
+    workers: usize,
+    root_target: usize,
+    max_split_depth: usize,
+    share_bound: bool,
+    use_bnb: bool,
+    use_cp: bool,
+    encoding: Encoding,
+    hybrid_node_limit: Option<u64>,
+    memo_capacity: usize,
+    /// The request's deterministic node budget, applied per subtree root.
+    node_limit_per_root: Option<u64>,
+    /// The request's wall-clock safety valve, applied per stage.
+    deadline: Option<Duration>,
+}
+
+impl Knobs {
+    /// Canonical encoding of every knob that can change the *result* —
+    /// the cache-key tail. Worker count and the wall-clock deadline are
+    /// deliberately excluded (worker-count invariance is guaranteed;
+    /// wall-cut solves are never cached).
+    fn cache_tag(&self) -> Vec<u64> {
         vec![
+            KEY_VERSION,
             self.use_bnb as u64,
             self.use_cp as u64,
             self.share_bound as u64,
@@ -156,21 +224,43 @@ impl PortfolioConfig {
         ]
     }
 
-    fn resolved_workers(&self) -> usize {
-        if self.workers > 0 {
-            return self.workers;
-        }
-        std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
-            .min(8)
+    /// Absolute wall-clock deadline for a stage starting now.
+    fn stage_deadline(&self) -> Instant {
+        Budget { deadline: self.deadline, node_limit: None }.deadline_from(Instant::now())
     }
 }
 
-/// Extended solve report of one portfolio run.
+fn resolve_workers(workers: usize) -> usize {
+    if workers > 0 {
+        return workers;
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8)
+}
+
+/// Legacy extended solve report (the lossy pre-request shape). Pinned by
+/// the byte-parity suites; new code reads [`PortfolioReport`].
+#[doc(hidden)]
 #[derive(Debug, Clone)]
 pub struct PortfolioOutcome {
     pub result: SolveResult,
+    /// True when the schedule came straight from the cache (no search).
+    pub from_cache: bool,
+    /// Which stage-1 racer produced the incumbent ("cache" on a hit).
+    pub incumbent_source: &'static str,
+    /// Number of disjoint BnB subtree roots solved.
+    pub roots_bnb: usize,
+    /// Number of disjoint CP subtree roots solved.
+    pub roots_cp: usize,
+}
+
+/// Rich outcome of one portfolio request: the [`SolveReport`] plus the
+/// portfolio-specific serving metadata.
+#[derive(Debug, Clone)]
+pub struct PortfolioReport {
+    pub report: SolveReport,
     /// True when the schedule came straight from the cache (no search).
     pub from_cache: bool,
     /// Which stage-1 racer produced the incumbent ("cache" on a hit).
@@ -192,12 +282,39 @@ pub struct ExactStage {
     /// True when any subtree was cut by the wall clock (machine-dependent
     /// result; such solves are not cached).
     pub timed_out: bool,
+    /// True when any subtree was cut by the cancellation token.
+    pub cancelled: bool,
     pub explored: u64,
+    pub pruned: u64,
+    pub leaves: u64,
+    pub memo_hits: u64,
+    /// Max dominance-memo high-water mark over the stage's tasks.
+    pub memo_peak: usize,
+    pub memo_flushes: u64,
     /// Number of subtree roots the search was split into.
     pub roots: usize,
 }
 
-/// The portfolio solver: one deterministic `solve()` over every engine in
+impl ExactStage {
+    /// The trivially-exhausted empty stage (bound already at the floor).
+    fn empty() -> Self {
+        Self {
+            best: None,
+            exhausted: true,
+            timed_out: false,
+            cancelled: false,
+            explored: 0,
+            pruned: 0,
+            leaves: 0,
+            memo_hits: 0,
+            memo_peak: 0,
+            memo_flushes: 0,
+            roots: 0,
+        }
+    }
+}
+
+/// The portfolio solver: one deterministic solve over every engine in
 /// the crate, with a schedule cache. Construct once and reuse — the cache
 /// lives for the solver's lifetime and is thread-safe.
 pub struct Portfolio {
@@ -222,26 +339,59 @@ impl Portfolio {
         self.cache.stats()
     }
 
-    /// Solve `g` on `m` cores: cache lookup → heuristic race → multi-root
-    /// exact stages → deterministic reduction. Multi-sink DAGs are
-    /// handled internally (a virtual sink is added for the solvers and
-    /// stripped from the returned schedule).
+    /// Legacy entry point: a request assembled from the config's
+    /// legacy-shim budget fields. Pinned by the byte-parity suites; new
+    /// code builds a [`SolveRequest`] and calls
+    /// [`Portfolio::solve_request`] (or [`Scheduler::solve`]).
+    #[doc(hidden)]
     pub fn solve(&self, g: &Dag, m: usize) -> PortfolioOutcome {
-        assert!(m >= 1, "portfolio requires at least one core");
-        assert!(g.n() > 0, "portfolio requires a non-empty DAG");
+        let budget = Budget {
+            deadline: Some(self.cfg.exact_timeout),
+            node_limit: self.cfg.node_limit_per_root,
+        };
+        let out = self.solve_request(&SolveRequest::new(g, m).budget(budget));
+        PortfolioOutcome {
+            result: out.report.into_legacy(),
+            from_cache: out.from_cache,
+            incumbent_source: out.incumbent_source,
+            roots_bnb: out.roots_bnb,
+            roots_cp: out.roots_cp,
+        }
+    }
+
+    /// Solve one request: cache lookup → heuristic race (request
+    /// fan-out) → multi-root exact stages → deterministic reduction.
+    /// Multi-sink DAGs are handled internally (a virtual sink is added
+    /// for the solvers and stripped from the returned schedule).
+    pub fn solve_request(&self, req: &SolveRequest<'_>) -> PortfolioReport {
+        assert!(req.m >= 1, "portfolio requires at least one core");
+        assert!(req.g.n() > 0, "portfolio requires a non-empty DAG");
         let t0 = Instant::now();
-        let key = canonical_key(g, m, &self.cfg.salt());
+        let (g, m) = (req.g, req.m);
+        let knobs = resolve_knobs(&self.cfg, req);
+        let key = canonical_key(g, m, &knobs.cache_tag());
         if let Some(hit) = self.cache.get(&key) {
             // The deep Schedule copy happens here, outside the cache lock.
-            return PortfolioOutcome {
-                result: SolveResult {
+            if let Some(inc) = &req.incumbent {
+                inc.offer(hit.schedule.makespan());
+            }
+            return PortfolioReport {
+                report: SolveReport {
                     schedule: hit.schedule.clone(),
-                    optimal: hit.optimal,
-                    solve_time: t0.elapsed(),
-                    explored: 0,
+                    termination: hit.termination.clone(),
+                    stats: SearchStats { wall: t0.elapsed(), ..SearchStats::default() },
                 },
                 from_cache: true,
                 incumbent_source: "cache",
+                roots_bnb: 0,
+                roots_cp: 0,
+            };
+        }
+        if req.is_cancelled() {
+            return PortfolioReport {
+                report: cancelled_fallback(req, t0, 0),
+                from_cache: false,
+                incumbent_source: "cancelled",
                 roots_bnb: 0,
                 roots_cp: 0,
             };
@@ -260,33 +410,43 @@ impl Portfolio {
         } else {
             g
         };
-        let workers = self.cfg.resolved_workers();
 
-        // ---- Stage 1: heuristic race ---------------------------------
+        // ---- Stage 1: heuristic race (request fan-out) ---------------
+        // Each racer solves a child request over the (extended) graph.
         // DSH is computed once and shared: it is both racer #2 and the
-        // hybrid racer's warm start. The hybrid is inlined (warm-started
-        // budgeted CP) rather than going through `Hybrid`, so its
-        // wall-clock cut is observable: a timing-cut racer result must
-        // never be cached.
-        let dsh = Dsh.schedule(gs, m);
-        let race: Vec<(&'static str, SolveResult, bool)> =
-            parallel_map(workers, 4, |i| match i {
-                0 => ("HLFET", Hlfet.schedule(gs, m), false),
-                1 => ("ISH", Ish.schedule(gs, m), false),
-                2 => ("DSH", dsh.clone(), false),
-                _ => {
-                    let out = CpSolver::new(CpConfig {
-                        encoding: self.cfg.encoding,
-                        timeout: self.cfg.exact_timeout,
-                        warm_start: Some(dsh.schedule.clone()),
-                        node_limit: self.cfg.hybrid_node_limit,
-                    })
-                    .solve(gs, m);
-                    ("Hybrid-DSH+CP", out.result, out.timed_out)
-                }
-            });
-        let mut explored: u64 = race.iter().map(|(_, r, _)| r.explored).sum();
-        let race_timed_out = race.iter().any(|&(_, _, cut)| cut);
+        // hybrid racer's warm start. The hybrid racer is a warm-started
+        // budgeted CP request, so its wall-clock cut is observable in
+        // `stats.wall_cut`: a timing-cut racer result must never be
+        // cached.
+        let mut heur_req = SolveRequest::new(gs, m);
+        if let Some(c) = &req.cancel {
+            heur_req = heur_req.cancel(c.clone());
+        }
+        let hybrid_req = heur_req
+            .clone()
+            .budget(Budget { deadline: knobs.deadline, node_limit: knobs.hybrid_node_limit })
+            .cp(CpOptions { encoding: Some(knobs.encoding), warm_start: None });
+        let t_race = Instant::now();
+        let dsh = Dsh.solve(&heur_req);
+        let race: Vec<(&'static str, SolveReport)> = parallel_map(knobs.workers, 4, |i| match i {
+            0 => ("HLFET", Hlfet.solve(&heur_req)),
+            1 => ("ISH", Ish.solve(&heur_req)),
+            2 => ("DSH", dsh.clone()),
+            _ => {
+                let mut r = hybrid_req.clone();
+                r.cp.warm_start = Some(dsh.schedule.clone());
+                ("Hybrid-DSH+CP", Scheduler::solve(&CpSolver::improved(), &r))
+            }
+        });
+        let race_wall = t_race.elapsed();
+        let mut explored: u64 = race.iter().map(|(_, r)| r.stats.explored).sum();
+        let mut pruned: u64 = race.iter().map(|(_, r)| r.stats.pruned).sum();
+        let mut memo_hits: u64 = race.iter().map(|(_, r)| r.stats.memo_hits).sum();
+        let mut memo_flushes: u64 = race.iter().map(|(_, r)| r.stats.memo_flushes).sum();
+        let mut memo_peak: usize = race.iter().map(|(_, r)| r.stats.memo_peak).max().unwrap_or(0);
+        let mut leaves: u64 = race.iter().map(|(_, r)| r.stats.leaves).sum();
+        let race_wall_cut = race.iter().any(|(_, r)| r.stats.wall_cut);
+        let race_cancelled = race.iter().any(|(_, r)| r.termination == Termination::Cancelled);
         let mut winner = 0;
         for i in 1..race.len() {
             if reduction_prefers(&race[i].1.schedule, &race[winner].1.schedule) {
@@ -295,13 +455,49 @@ impl Portfolio {
         }
         let incumbent_source = race[winner].0;
         let mut best = race[winner].1.schedule.clone();
+        let mut stages = vec![StageStats { name: "race", wall: race_wall, explored }];
+        if race_cancelled {
+            let schedule = if stripped { strip_virtual_sink(g, &best) } else { best };
+            if let Some(inc) = &req.incumbent {
+                inc.offer(schedule.makespan());
+            }
+            return PortfolioReport {
+                report: SolveReport {
+                    schedule,
+                    termination: Termination::Cancelled,
+                    stats: SearchStats {
+                        explored,
+                        pruned,
+                        leaves,
+                        memo_hits,
+                        memo_peak,
+                        memo_flushes,
+                        wall: t0.elapsed(),
+                        stages,
+                        ..SearchStats::default()
+                    },
+                },
+                from_cache: false,
+                incumbent_source,
+                roots_bnb: 0,
+                roots_cp: 0,
+            };
+        }
         debug_assert!(check_valid(gs, &best).is_ok(), "race winner invalid");
 
         // ---- Stage 2: multi-root exact search ------------------------
+        let cancel = req.cancel.as_ref();
         let shared = Incumbent::new(best.makespan());
-        let bnb_stage = if self.cfg.use_bnb {
-            let s = solve_exact_bnb(gs, m, shared.bound(), &shared, &self.cfg);
+        let bnb_stage = if knobs.use_bnb && !req.is_cancelled() {
+            let t = Instant::now();
+            let s = exact_bnb_stage(gs, m, shared.bound(), &shared, &knobs, cancel);
+            stages.push(StageStats { name: "bnb-stage", wall: t.elapsed(), explored: s.explored });
             explored += s.explored;
+            pruned += s.pruned;
+            leaves += s.leaves;
+            memo_hits += s.memo_hits;
+            memo_peak = memo_peak.max(s.memo_peak);
+            memo_flushes += s.memo_flushes;
             if let Some(sched) = &s.best {
                 if reduction_prefers(sched, &best) {
                     best = sched.clone();
@@ -313,9 +509,16 @@ impl Portfolio {
         };
         // The (deterministic) BnB result tightens the bound CP starts
         // from: cross-engine bound sharing without a determinism cost.
-        let cp_stage = if self.cfg.use_cp {
-            let s = solve_exact_cp(gs, m, best.makespan(), &shared, &self.cfg);
+        let cp_stage = if knobs.use_cp && !req.is_cancelled() {
+            let t = Instant::now();
+            let s = exact_cp_stage(gs, m, best.makespan(), &shared, &knobs, cancel);
+            stages.push(StageStats { name: "cp-stage", wall: t.elapsed(), explored: s.explored });
             explored += s.explored;
+            pruned += s.pruned;
+            leaves += s.leaves;
+            memo_hits += s.memo_hits;
+            memo_peak = memo_peak.max(s.memo_peak);
+            memo_flushes += s.memo_flushes;
             if let Some(sched) = &s.best {
                 if reduction_prefers(sched, &best) {
                     best = sched.clone();
@@ -328,34 +531,64 @@ impl Portfolio {
         // Only CP covers the full duplication-aware space, so only its
         // exhaustion proves global optimality.
         let optimal = cp_stage.as_ref().map_or(false, |s| s.exhausted);
-        let timed_out = race_timed_out
+        let wall_cut = race_wall_cut
             || bnb_stage.as_ref().map_or(false, |s| s.timed_out)
             || cp_stage.as_ref().map_or(false, |s| s.timed_out);
+        let cancelled = req.is_cancelled()
+            || bnb_stage.as_ref().map_or(false, |s| s.cancelled)
+            || cp_stage.as_ref().map_or(false, |s| s.cancelled);
+        let exact_exhausted = bnb_stage.as_ref().map_or(true, |s| s.exhausted)
+            && cp_stage.as_ref().map_or(true, |s| s.exhausted);
 
         let schedule = if stripped { strip_virtual_sink(g, &best) } else { best };
         debug_assert!(check_valid(g, &schedule).is_ok(), "portfolio result invalid");
-        // Cache only reproducible results: a wall-clock-cut solve is
-        // machine-dependent and possibly poor (a loaded first request
-        // must not pin a bad schedule for every later request). With
-        // live bound sharing, node budgets cut at timing-dependent tree
-        // nodes too, so a share_bound solve is cacheable only when every
-        // exact subtree was exhausted (the proven result is then unique
-        // in makespan and fixed by the reduction). The deterministic
-        // default (share_bound off) caches exhausted and budget-cut
-        // solves alike.
-        let exact_exhausted = bnb_stage.as_ref().map_or(true, |s| s.exhausted)
-            && cp_stage.as_ref().map_or(true, |s| s.exhausted);
-        let reproducible = !timed_out && (!self.cfg.share_bound || exact_exhausted);
-        if reproducible {
-            self.cache
-                .insert(key, CachedSolve { schedule: schedule.clone(), optimal });
+        let wall = t0.elapsed();
+        let termination = if cancelled {
+            Termination::Cancelled
+        } else if optimal {
+            Termination::ProvenOptimal
+        } else if !exact_exhausted || knobs.use_cp {
+            // A stage was cut, or CP ran without exhausting its space.
+            Termination::BudgetExhausted { nodes: explored, wall }
+        } else {
+            // Every enabled stage finished; no optimality proof exists
+            // (the CP stage — the only duplication-complete one — is off).
+            Termination::HeuristicComplete
+        };
+        if let Some(inc) = &req.incumbent {
+            inc.offer(schedule.makespan());
         }
-        PortfolioOutcome {
-            result: SolveResult {
+        // Cache only reproducible results: a wall-clock-cut or cancelled
+        // solve is machine-dependent and possibly poor (a loaded first
+        // request must not pin a bad schedule for every later request).
+        // With live bound sharing, node budgets cut at timing-dependent
+        // tree nodes too, so a share_bound solve is cacheable only when
+        // every exact subtree was exhausted (the proven result is then
+        // unique in makespan and fixed by the reduction). The
+        // deterministic default (share_bound off) caches exhausted and
+        // budget-cut solves alike.
+        let reproducible = !wall_cut && !cancelled && (!knobs.share_bound || exact_exhausted);
+        if reproducible {
+            self.cache.insert(
+                key,
+                CachedSolve { schedule: schedule.clone(), termination: termination.clone() },
+            );
+        }
+        PortfolioReport {
+            report: SolveReport {
                 schedule,
-                optimal,
-                solve_time: t0.elapsed(),
-                explored,
+                termination,
+                stats: SearchStats {
+                    explored,
+                    pruned,
+                    leaves,
+                    memo_hits,
+                    memo_peak,
+                    memo_flushes,
+                    wall_cut,
+                    wall,
+                    stages,
+                },
             },
             from_cache: false,
             incumbent_source,
@@ -370,8 +603,13 @@ impl Scheduler for Portfolio {
         "Portfolio"
     }
 
+    fn solve(&self, req: &SolveRequest<'_>) -> SolveReport {
+        self.solve_request(req).report
+    }
+
+    #[doc(hidden)]
     fn schedule(&self, g: &Dag, m: usize) -> SolveResult {
-        self.solve(g, m).result
+        Portfolio::solve(self, g, m).result
     }
 }
 
@@ -407,10 +645,38 @@ fn strip_virtual_sink(g: &Dag, s: &Schedule) -> Schedule {
     out
 }
 
-/// Multi-root Chou–Chung stage: split the duplication-free BnB search
-/// into disjoint subtrees below bound `b0` and solve them across the
-/// worker pool. Public so the differential tests can pit it against the
-/// sequential [`bnb::ChouChung`] solver.
+/// Resolve config defaults against a request's overlays and budget —
+/// the single config-to-knobs mapping (the request path and the pinned
+/// legacy stage wrappers both go through here, so they cannot drift).
+fn resolve_knobs(cfg: &PortfolioConfig, req: &SolveRequest<'_>) -> Knobs {
+    let o = &req.portfolio;
+    Knobs {
+        workers: resolve_workers(o.workers.unwrap_or(cfg.workers)),
+        root_target: o.root_target.unwrap_or(cfg.root_target),
+        max_split_depth: o.max_split_depth.unwrap_or(cfg.max_split_depth),
+        share_bound: o.share_bound.unwrap_or(cfg.share_bound),
+        use_bnb: o.use_bnb.unwrap_or(cfg.use_bnb),
+        use_cp: o.use_cp.unwrap_or(cfg.use_cp),
+        encoding: req.cp.encoding.unwrap_or(cfg.encoding),
+        hybrid_node_limit: o.hybrid_node_limit.or(cfg.hybrid_node_limit),
+        memo_capacity: req.bnb.memo_capacity.unwrap_or(cfg.memo_capacity),
+        node_limit_per_root: req.budget.node_limit,
+        deadline: req.budget.deadline,
+    }
+}
+
+/// Knobs equivalent of a legacy [`PortfolioConfig`] (budget fields
+/// folded into a request) — the pinned stage entry points below run
+/// through the same [`resolve_knobs`] mapping as the request path.
+fn legacy_knobs(g: &Dag, cfg: &PortfolioConfig) -> Knobs {
+    let budget = Budget { deadline: Some(cfg.exact_timeout), node_limit: cfg.node_limit_per_root };
+    resolve_knobs(cfg, &SolveRequest::new(g, 1).budget(budget))
+}
+
+/// Multi-root Chou–Chung stage under a legacy config: split the
+/// duplication-free BnB search into disjoint subtrees below bound `b0`
+/// and solve them across the worker pool. Public so the differential
+/// tests can pit it against the sequential `bnb::ChouChung` solver.
 pub fn solve_exact_bnb(
     g: &Dag,
     m: usize,
@@ -418,35 +684,14 @@ pub fn solve_exact_bnb(
     shared: &Incumbent,
     cfg: &PortfolioConfig,
 ) -> ExactStage {
-    // Nothing can beat a bound at (or under) the critical path.
-    if b0 <= critical_path_len(g) {
-        return ExactStage { best: None, exhausted: true, timed_out: false, explored: 0, roots: 0 };
-    }
-    let prep = bnb::StagePrep::new(g);
-    let prefixes =
-        bnb::enumerate_prefixes(g, m, &prep, b0, cfg.root_target, cfg.max_split_depth);
-    let deadline = Instant::now() + cfg.exact_timeout;
-    let outcomes = parallel_map(cfg.resolved_workers(), prefixes.len(), |i| {
-        bnb::solve_prefix(
-            g,
-            m,
-            &prep,
-            &prefixes[i],
-            b0,
-            Some(shared),
-            cfg.share_bound,
-            cfg.node_limit_per_root,
-            deadline,
-            cfg.memo_capacity,
-        )
-    });
-    reduce_stage(outcomes, prefixes.len())
+    exact_bnb_stage(g, m, b0, shared, &legacy_knobs(g, cfg), None)
 }
 
-/// Multi-root CP stage: split the constraint search into disjoint
-/// subtrees below bound `b0` and solve them across the worker pool.
-/// Requires a single-sink DAG (like the sequential CP solver). Public so
-/// the differential tests can pit it against [`cp::CpSolver`].
+/// Multi-root CP stage under a legacy config: split the constraint
+/// search into disjoint subtrees below bound `b0` and solve them across
+/// the worker pool. Requires a single-sink DAG (like the sequential CP
+/// solver). Public so the differential tests can pit it against
+/// `cp::CpSolver`.
 pub fn solve_exact_cp(
     g: &Dag,
     m: usize,
@@ -454,32 +699,78 @@ pub fn solve_exact_cp(
     shared: &Incumbent,
     cfg: &PortfolioConfig,
 ) -> ExactStage {
+    exact_cp_stage(g, m, b0, shared, &legacy_knobs(g, cfg), None)
+}
+
+fn exact_bnb_stage(
+    g: &Dag,
+    m: usize,
+    b0: Cycles,
+    shared: &Incumbent,
+    knobs: &Knobs,
+    cancel: Option<&CancelToken>,
+) -> ExactStage {
+    // Nothing can beat a bound at (or under) the critical path.
     if b0 <= critical_path_len(g) {
-        return ExactStage { best: None, exhausted: true, timed_out: false, explored: 0, roots: 0 };
+        return ExactStage::empty();
+    }
+    let prep = bnb::StagePrep::new(g);
+    let prefixes =
+        bnb::enumerate_prefixes(g, m, &prep, b0, knobs.root_target, knobs.max_split_depth);
+    let deadline = knobs.stage_deadline();
+    let outcomes = parallel_map(knobs.workers, prefixes.len(), |i| {
+        bnb::solve_prefix(
+            g,
+            m,
+            &prep,
+            &prefixes[i],
+            b0,
+            Some(shared),
+            knobs.share_bound,
+            knobs.node_limit_per_root,
+            deadline,
+            knobs.memo_capacity,
+            cancel,
+        )
+    });
+    reduce_stage(outcomes, prefixes.len())
+}
+
+fn exact_cp_stage(
+    g: &Dag,
+    m: usize,
+    b0: Cycles,
+    shared: &Incumbent,
+    knobs: &Knobs,
+    cancel: Option<&CancelToken>,
+) -> ExactStage {
+    if b0 <= critical_path_len(g) {
+        return ExactStage::empty();
     }
     let levels = static_levels(g);
     let prefixes = cp::enumerate_prefixes(
         g,
         m,
-        cfg.encoding,
+        knobs.encoding,
         &levels,
         b0,
-        cfg.root_target,
-        cfg.max_split_depth,
+        knobs.root_target,
+        knobs.max_split_depth,
     );
-    let deadline = Instant::now() + cfg.exact_timeout;
-    let outcomes = parallel_map(cfg.resolved_workers(), prefixes.len(), |i| {
+    let deadline = knobs.stage_deadline();
+    let outcomes = parallel_map(knobs.workers, prefixes.len(), |i| {
         cp::solve_prefix(
             g,
             m,
-            cfg.encoding,
+            knobs.encoding,
             &levels,
             &prefixes[i],
             b0,
             Some(shared),
-            cfg.share_bound,
-            cfg.node_limit_per_root,
+            knobs.share_bound,
+            knobs.node_limit_per_root,
             deadline,
+            cancel,
         )
     });
     reduce_stage(outcomes, prefixes.len())
@@ -487,22 +778,25 @@ pub fn solve_exact_cp(
 
 /// Fold subtree outcomes in task order under the deterministic reduction.
 fn reduce_stage(outcomes: Vec<SubtreeOutcome>, roots: usize) -> ExactStage {
-    let mut best: Option<Schedule> = None;
-    let mut exhausted = true;
-    let mut timed_out = false;
-    let mut explored = 0;
+    let mut stage = ExactStage { roots, ..ExactStage::empty() };
     for out in outcomes {
-        exhausted &= out.exhausted;
-        timed_out |= out.timed_out;
-        explored += out.explored;
+        stage.exhausted &= out.exhausted;
+        stage.timed_out |= out.timed_out;
+        stage.cancelled |= out.cancelled;
+        stage.explored += out.explored;
+        stage.pruned += out.pruned;
+        stage.leaves += out.leaves;
+        stage.memo_hits += out.memo_hits;
+        stage.memo_peak = stage.memo_peak.max(out.memo_peak);
+        stage.memo_flushes += out.memo_flushes;
         if let Some(s) = out.best {
-            match &best {
+            match &stage.best {
                 Some(b) if !reduction_prefers(&s, b) => {}
-                _ => best = Some(s),
+                _ => stage.best = Some(s),
             }
         }
     }
-    ExactStage { best, exhausted, timed_out, explored, roots }
+    stage
 }
 
 #[cfg(test)]
@@ -568,6 +862,66 @@ mod tests {
         // A different core count is a different problem.
         let third = p.solve(&g, 3);
         assert!(!third.from_cache);
+    }
+
+    #[test]
+    fn request_path_and_legacy_shim_share_one_cache_entry() {
+        // The cache key is derived canonically from the resolved request,
+        // so the legacy shim (config budgets folded into a request) and a
+        // hand-built request with the same budget must collide — and the
+        // request path must return the identical placements.
+        let g = paper_example_dag();
+        let p = Portfolio::new(quick_cfg(2));
+        let legacy = p.solve(&g, 2);
+        assert!(!legacy.from_cache);
+        let req = SolveRequest::new(&g, 2).deadline(Duration::from_secs(120));
+        let replay = p.solve_request(&req);
+        assert!(replay.from_cache, "equivalent request must hit the legacy entry");
+        assert_eq!(
+            placement_key(&legacy.result.schedule),
+            placement_key(&replay.report.schedule)
+        );
+        assert!(replay.report.proven_optimal());
+        // A different node budget is a different problem → miss.
+        let other = p.solve_request(&SolveRequest::new(&g, 2).node_limit(50));
+        assert!(!other.from_cache);
+    }
+
+    #[test]
+    fn report_carries_verdict_and_stage_times() {
+        let g = paper_example_dag();
+        let p = Portfolio::new(quick_cfg(2));
+        let out = p.solve_request(&SolveRequest::new(&g, 2).deadline(Duration::from_secs(120)));
+        assert_eq!(out.report.termination, Termination::ProvenOptimal);
+        let names: Vec<&str> = out.report.stats.stages.iter().map(|s| s.name).collect();
+        assert_eq!(names, ["race", "bnb-stage", "cp-stage"]);
+        assert!(out.report.stats.explored > 0);
+        assert!(!out.report.stats.wall_cut);
+    }
+
+    #[test]
+    fn pre_cancelled_request_returns_fallback_without_search() {
+        let g = paper_example_dag();
+        let p = Portfolio::new(quick_cfg(2));
+        let token = CancelToken::new();
+        token.cancel();
+        let out = p.solve_request(&SolveRequest::new(&g, 2).cancel(token));
+        assert_eq!(out.report.termination, Termination::Cancelled);
+        assert_eq!(check_valid(&g, &out.report.schedule), Ok(()));
+        assert_eq!(out.report.stats.explored, 0);
+        // Cancelled solves are never cached.
+        let again = p.solve_request(&SolveRequest::new(&g, 2));
+        assert!(!again.from_cache);
+    }
+
+    #[test]
+    fn disabled_exact_engines_report_heuristic_complete() {
+        let g = paper_example_dag();
+        let p = Portfolio::new(PortfolioConfig { use_bnb: false, use_cp: false, ..quick_cfg(1) });
+        let out = p.solve_request(&SolveRequest::new(&g, 2));
+        assert_eq!(out.report.termination, Termination::HeuristicComplete);
+        assert_eq!(check_valid(&g, &out.report.schedule), Ok(()));
+        assert_eq!(out.roots_bnb + out.roots_cp, 0);
     }
 
     #[test]

@@ -1,0 +1,307 @@
+//! Differential tests for the request/report API redesign: for every
+//! solver, the new `Scheduler::solve(&SolveRequest)` entry point must
+//! return **byte-identical** schedules (makespan + placement lists) and
+//! identical explored counts to the legacy `schedule(g, m)` /
+//! `solve(g, m)` shims it replaced, and the [`Termination`] verdict must
+//! agree with the legacy `optimal` bool.
+//!
+//! Workloads follow the pinned byte-parity suites: the paper's Fig. 3
+//! example (full exact solves) and `paper(50)` seeds 1–3 under
+//! deterministic node budgets (unreachable wall-clock deadlines), so
+//! both entry points cut at exactly the same tree node on any machine.
+
+use acetone::daggen::{generate, DagGenConfig};
+use acetone::graph::{ensure_single_sink, paper_example_dag, Cycles, Dag};
+use acetone::sched::bnb::ChouChung;
+use acetone::sched::cp::{CpConfig, CpSolver, Encoding};
+use acetone::sched::dsh::Dsh;
+use acetone::sched::hlfet::Hlfet;
+use acetone::sched::hybrid::Hybrid;
+use acetone::sched::ish::Ish;
+use acetone::sched::portfolio::{Portfolio, PortfolioConfig};
+use acetone::sched::{
+    check_valid, CpOptions, Schedule, Scheduler, SolveReport, SolveRequest, Termination,
+};
+use std::time::Duration;
+
+/// Unreachable wall-clock deadline: every cut below is a node budget.
+const SAFE: Duration = Duration::from_secs(3600);
+
+/// Full placement list in the schedule's deterministic master order.
+fn placements(s: &Schedule) -> Vec<(usize, usize, Cycles, Cycles)> {
+    s.iter().map(|p| (p.core, p.node, p.start, p.finish)).collect()
+}
+
+/// The two workload families of the parity suites.
+fn workloads() -> Vec<(String, Dag)> {
+    let mut w = vec![("paper-example".to_string(), paper_example_dag())];
+    for seed in 1..=3u64 {
+        w.push((format!("paper(50) seed={seed}"), generate(&DagGenConfig::paper(50), seed)));
+    }
+    w
+}
+
+fn assert_report_matches_legacy(
+    label: &str,
+    g: &Dag,
+    report: &SolveReport,
+    legacy: &acetone::sched::SolveResult,
+) {
+    assert_eq!(
+        report.stats.explored, legacy.explored,
+        "{label}: explored counts diverge — the entry points walked different trees"
+    );
+    assert_eq!(
+        report.proven_optimal(),
+        legacy.optimal,
+        "{label}: verdict vs legacy optimal bool"
+    );
+    assert_eq!(report.schedule.makespan(), legacy.schedule.makespan(), "{label}: makespan");
+    assert_eq!(
+        placements(&report.schedule),
+        placements(&legacy.schedule),
+        "{label}: placement lists"
+    );
+    assert!(check_valid(g, &report.schedule).is_ok(), "{label}: validity");
+}
+
+#[test]
+fn heuristics_request_parity() {
+    for (label, g) in workloads() {
+        for m in [2usize, 4] {
+            let req = SolveRequest::new(&g, m);
+            for solver in [&Hlfet as &dyn Scheduler, &Ish, &Dsh] {
+                let report = solver.solve(&req);
+                let legacy = solver.schedule(&g, m);
+                assert_eq!(
+                    report.termination,
+                    Termination::HeuristicComplete,
+                    "{label} {} m={m}",
+                    solver.name()
+                );
+                assert_report_matches_legacy(
+                    &format!("{label} {} m={m}", solver.name()),
+                    &g,
+                    &report,
+                    &legacy,
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn bnb_request_parity_under_node_budgets() {
+    for (label, g) in workloads() {
+        // Full solve on the small example (m kept low: debug-profile CI),
+        // deterministic node budgets on paper(50).
+        let (budget, m) = if g.n() <= 10 { (None, 2usize) } else { (Some(3000u64), 4) };
+        let legacy_solver = ChouChung { timeout: SAFE, node_limit: budget, ..Default::default() };
+        let legacy = legacy_solver.schedule(&g, m);
+        let mut req = SolveRequest::new(&g, m).deadline(SAFE);
+        if let Some(n) = budget {
+            req = req.node_limit(n);
+        }
+        let report = ChouChung::default().solve(&req);
+        match budget {
+            None => assert_eq!(report.termination, Termination::ProvenOptimal, "{label}"),
+            Some(n) => assert_eq!(
+                report.termination,
+                Termination::BudgetExhausted { nodes: n + 1, wall: report.stats.wall },
+                "{label}: stops right after the budget"
+            ),
+        }
+        assert!(!report.stats.wall_cut, "{label}: node cuts are not wall cuts");
+        assert_report_matches_legacy(&format!("{label} bnb"), &g, &report, &legacy);
+    }
+}
+
+#[test]
+fn cp_request_parity_under_node_budgets() {
+    for (label, mut g) in workloads() {
+        ensure_single_sink(&mut g);
+        for encoding in [Encoding::Improved, Encoding::Tang] {
+            // The Tang d-tensor explodes on n=50; keep Tang to the
+            // example, and always under a node budget (its full tree is
+            // huge even there — same discipline as trail_search_parity).
+            if encoding == Encoding::Tang && g.n() > 11 {
+                continue;
+            }
+            let budget = match encoding {
+                Encoding::Tang => Some(4000u64),
+                Encoding::Improved if g.n() > 11 => Some(1500u64),
+                Encoding::Improved => None,
+            };
+            let legacy = CpSolver::new(CpConfig {
+                encoding,
+                timeout: SAFE,
+                warm_start: None,
+                node_limit: budget,
+            })
+            .solve(&g, 3);
+            let solver = match encoding {
+                Encoding::Improved => CpSolver::improved(),
+                Encoding::Tang => CpSolver::tang(),
+            };
+            let mut req = SolveRequest::new(&g, 3).deadline(SAFE);
+            if let Some(n) = budget {
+                req = req.node_limit(n);
+            }
+            let report = Scheduler::solve(&solver, &req);
+            assert_eq!(
+                report.stats.leaves > 0,
+                legacy.found_solution,
+                "{label} {encoding:?}: leaves vs found_solution"
+            );
+            assert_report_matches_legacy(
+                &format!("{label} cp-{encoding:?}"),
+                &g,
+                &report,
+                &legacy.result,
+            );
+        }
+    }
+}
+
+#[test]
+fn cp_encoding_overlay_matches_dedicated_solver() {
+    // The request's CpOptions overlay must select the same search as a
+    // solver constructed for that encoding.
+    let mut g = paper_example_dag();
+    ensure_single_sink(&mut g);
+    let via_overlay = Scheduler::solve(
+        &CpSolver::improved(),
+        &SolveRequest::new(&g, 2)
+            .deadline(SAFE)
+            .node_limit(2000)
+            .cp(CpOptions { encoding: Some(Encoding::Tang), warm_start: None }),
+    );
+    let dedicated = Scheduler::solve(
+        &CpSolver::tang(),
+        &SolveRequest::new(&g, 2).deadline(SAFE).node_limit(2000),
+    );
+    assert_eq!(via_overlay.stats.explored, dedicated.stats.explored);
+    assert_eq!(placements(&via_overlay.schedule), placements(&dedicated.schedule));
+}
+
+#[test]
+fn hybrid_request_matches_manual_dsh_plus_warm_started_cp() {
+    // The hybrid is pinned to its pre-redesign composition: DSH, then a
+    // CP refinement warm-started on DSH's schedule under the request's
+    // budget, with explored counts summed.
+    for (label, mut g) in workloads() {
+        ensure_single_sink(&mut g);
+        let budget = 1000u64;
+        let warm = Dsh.schedule(&g, 3).schedule;
+        let legacy = CpSolver::new(CpConfig {
+            encoding: Encoding::Improved,
+            timeout: SAFE,
+            warm_start: Some(warm),
+            node_limit: Some(budget),
+        })
+        .solve(&g, 3);
+        let report = Hybrid.solve(&SolveRequest::new(&g, 3).deadline(SAFE).node_limit(budget));
+        let dsh_explored = Dsh.schedule(&g, 3).explored;
+        assert_eq!(
+            report.stats.explored,
+            legacy.result.explored + dsh_explored,
+            "{label}: hybrid explored = DSH + CP refinement"
+        );
+        assert_eq!(report.proven_optimal(), legacy.result.optimal, "{label}");
+        assert_eq!(
+            placements(&report.schedule),
+            placements(&legacy.result.schedule),
+            "{label}: placement lists"
+        );
+        assert!(check_valid(&g, &report.schedule).is_ok(), "{label}");
+    }
+}
+
+#[test]
+fn portfolio_request_parity_with_legacy_config_budgets() {
+    // A Portfolio driven through a hand-built request must return the
+    // byte-identical result of the legacy path that folds the same
+    // budgets in from PortfolioConfig.
+    for (label, g) in workloads() {
+        let legacy_cfg = PortfolioConfig {
+            workers: 2,
+            root_target: 6,
+            exact_timeout: SAFE,
+            node_limit_per_root: Some(200),
+            hybrid_node_limit: Some(400),
+            ..Default::default()
+        };
+        let legacy = Portfolio::new(legacy_cfg).solve(&g, 4);
+        let req_cfg = PortfolioConfig {
+            workers: 2,
+            root_target: 6,
+            hybrid_node_limit: Some(400),
+            ..Default::default()
+        };
+        let req = SolveRequest::new(&g, 4).deadline(SAFE).node_limit(200);
+        let report = Portfolio::new(req_cfg).solve_request(&req);
+        assert!(!report.from_cache, "{label}");
+        assert_eq!(report.report.stats.explored, legacy.result.explored, "{label}: explored");
+        assert_eq!(report.report.proven_optimal(), legacy.result.optimal, "{label}: verdict");
+        assert_eq!(
+            placements(&report.report.schedule),
+            placements(&legacy.result.schedule),
+            "{label}: placement lists"
+        );
+        assert!(check_valid(&g, &report.report.schedule).is_ok(), "{label}");
+    }
+}
+
+#[test]
+fn consulted_incumbent_never_certifies_a_beaten_schedule() {
+    // An external bound below everything reachable empties the search
+    // via pruning; exhaustion then proves the *bound* optimal, not the
+    // serial seed the solver still holds — the verdict must not be
+    // ProvenOptimal.
+    use acetone::sched::portfolio::Incumbent;
+    use std::sync::Arc;
+    let g = paper_example_dag();
+    let inc = Arc::new(Incumbent::new(1));
+    let req = SolveRequest::new(&g, 2).deadline(SAFE).incumbent(inc).consult_incumbent(true);
+    let report = ChouChung::default().solve(&req);
+    assert_eq!(report.termination, Termination::HeuristicComplete);
+    assert!(check_valid(&g, &report.schedule).is_ok());
+
+    let mut gs = paper_example_dag();
+    ensure_single_sink(&mut gs);
+    let inc = Arc::new(Incumbent::new(1));
+    let req = SolveRequest::new(&gs, 2).deadline(SAFE).incumbent(inc).consult_incumbent(true);
+    let report = Scheduler::solve(&CpSolver::improved(), &req);
+    assert_eq!(report.termination, Termination::HeuristicComplete);
+    assert!(check_valid(&gs, &report.schedule).is_ok());
+}
+
+#[test]
+fn trait_object_fan_out_drives_every_solver() {
+    // The serving scenario: one request, every solver behind `dyn
+    // Scheduler`. All must return valid schedules and honest verdicts.
+    let mut g = paper_example_dag();
+    ensure_single_sink(&mut g);
+    let req = SolveRequest::new(&g, 2).deadline(SAFE).node_limit(5000);
+    let solvers: Vec<Box<dyn Scheduler>> = vec![
+        Box::new(Hlfet),
+        Box::new(Ish),
+        Box::new(Dsh),
+        Box::new(ChouChung::default()),
+        Box::new(CpSolver::improved()),
+        Box::new(Hybrid),
+        Box::new(Portfolio::default()),
+    ];
+    for solver in solvers {
+        let report = solver.solve(&req);
+        assert!(check_valid(&g, &report.schedule).is_ok(), "{}", solver.name());
+        match report.termination {
+            Termination::HeuristicComplete => {
+                assert!(matches!(solver.name(), "HLFET" | "ISH" | "DSH"), "{}", solver.name())
+            }
+            Termination::ProvenOptimal | Termination::BudgetExhausted { .. } => {}
+            Termination::Cancelled => panic!("{}: nothing was cancelled", solver.name()),
+        }
+        assert!(report.stats.explored > 0, "{}", solver.name());
+    }
+}

@@ -6,7 +6,7 @@ use acetone::sched::cp::{CpConfig, CpSolver, Encoding};
 use acetone::sched::dsh::Dsh;
 use acetone::sched::hybrid::Hybrid;
 use acetone::sched::ish::Ish;
-use acetone::sched::{check_valid, Scheduler};
+use acetone::sched::{check_valid, Scheduler, SolveRequest};
 use std::time::Duration;
 
 #[test]
@@ -111,8 +111,7 @@ fn hybrid_improves_or_matches_dsh_on_set() {
     for seed in 0..4 {
         let g = generate(&cfg, seed);
         let dsh = Dsh.schedule(&g, 4).schedule.makespan();
-        let hy = Hybrid { cp_timeout: Duration::from_secs(2), cp_node_limit: None }
-            .schedule(&g, 4);
+        let hy = Hybrid.solve(&SolveRequest::new(&g, 4).deadline(Duration::from_secs(2)));
         assert!(hy.schedule.makespan() <= dsh, "seed={seed}");
         assert_eq!(check_valid(&g, &hy.schedule), Ok(()));
     }
