@@ -7,10 +7,12 @@
 //! trajectory is machine-readable across PRs.
 
 use acetone::daggen::{generate, DagGenConfig};
+use acetone::graph::Dag;
 use acetone::sched::bnb::ChouChung;
 use acetone::sched::cp::CpSolver;
 use acetone::sched::dsh::Dsh;
 use acetone::sched::portfolio::{Portfolio, PortfolioConfig};
+use acetone::sched::serve::{BatchRequest, BatchSolver};
 use acetone::sched::{check_valid, derive_programs, prune_redundant, Scheduler, SolveRequest};
 use acetone::sim::{replay_machine, simulate};
 use acetone::util::bench::{bench, write_json, BenchStats};
@@ -96,6 +98,30 @@ fn main() {
         let out = warm.solve_request(&portfolio_req);
         assert!(out.from_cache);
         out.report.schedule.makespan()
+    }));
+
+    // Batched serving with dedup: 16 requests over 4 distinct problems,
+    // each under a deterministic 200-node/root budget, so the measured
+    // search work is machine-independent. A fresh BatchSolver per
+    // iteration keeps the cache cold — the case measures canonical-key
+    // dedup + fan-out + the 4 real solves (batch workers = 2, like the
+    // portfolio cases above).
+    let serve_dags: Vec<Dag> =
+        (0..4u64).map(|s| generate(&DagGenConfig::paper(20), 10 + s)).collect();
+    let serve_cfg = PortfolioConfig {
+        root_target: 6,
+        hybrid_node_limit: Some(200),
+        ..Default::default()
+    };
+    record(bench("serve batch=16 dedup", 1, 5, || {
+        let mut batch = BatchRequest::new().workers(2);
+        for i in 0..16 {
+            batch = batch.push(SolveRequest::new(&serve_dags[i % 4], 4).node_limit(200));
+        }
+        let out = BatchSolver::new(serve_cfg.clone()).solve_batch(&batch);
+        assert_eq!(out.stats.distinct, 4);
+        assert_eq!(out.stats.deduped, 12);
+        out.reports.len()
     }));
 
     // Duplicate pruning on a duplication-heavy DSH schedule (clone cost

@@ -37,7 +37,17 @@
 //! (multi-root trail search sharing an `AtomicU64` incumbent), reduces
 //! the candidates in a fixed `(makespan, placement)` order — so the
 //! answer is byte-identical for any worker count — and memoizes solves
-//! in a schedule cache keyed canonically by the resolved request.
+//! in a two-tier schedule cache keyed canonically by the resolved
+//! request (in-memory FIFO over an optional persistent on-disk store).
+//! [`sched::serve`] batches many requests over it: dedup by canonical
+//! key, one shared worker pool, input-order reports.
+//!
+//! ---
+//!
+//! The full pipeline walk below is `ARCHITECTURE.md` at the repository
+//! root, included verbatim so the rustdoc CI job (`-D warnings`)
+//! link-checks it and `cargo test` runs its examples.
+#![doc = include_str!("../../ARCHITECTURE.md")]
 
 pub mod daggen;
 pub mod graph;

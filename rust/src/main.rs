@@ -12,18 +12,62 @@
 //! * `run`            — parallel PJRT inference over the AOT artifacts,
 //!                      numerics checked against the single-core artifact;
 //! * `codegen`        — emit ACETONE-style parallel C code;
+//! * `serve`          — batch-solve a JSONL stream of scheduling requests
+//!                      through the portfolio, deduplicated, optionally
+//!                      over a persistent `--cache-dir` schedule cache;
 //! * `dag`            — generate a §4.1 random DAG (DOT output).
 
 use acetone::graph::ensure_single_sink;
 use acetone::nn::{eval::Tensor, model_json, numel, weights, zoo, Network};
+use acetone::sched::portfolio::PortfolioConfig;
+use acetone::sched::serve::{BatchRequest, BatchSolver};
 use acetone::sched::{
     bnb::ChouChung, cp::CpSolver, dsh::Dsh, hlfet::Hlfet, hybrid::Hybrid, ish::Ish,
     portfolio::Portfolio, Budget, Scheduler, SolveRequest, Termination,
 };
+use acetone::util::json::Json;
 use acetone::wcet::CostModel;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::time::Duration;
+
+/// The `help` text: every subcommand with every `--flag` it parses. The
+/// `help_covers_every_parsed_flag` test scrapes this file for option
+/// accessors and fails when a parsed flag is missing here, so the text
+/// cannot silently drift from the parser.
+const HELP: &str = "\
+acetone — parallel C/PJRT inference for certifiable DNNs
+
+usage: acetone <cmd> [--key value]...
+
+export-models --dir D
+    write the model-zoo JSONs consumed by the Python AOT path
+schedule --model M | --nodes N [--seed S] [--density D]
+         --cores C --algo A [--timeout S] [--node-limit N]
+    schedule a model or random DAG, print makespan/speedup/verdict + Gantt
+    (algo: hlfet|ish|dsh|cp|tang|bnb|hybrid|portfolio; a --node-limit
+     makes truncated exact runs machine-independent)
+wcet --cores C [--model googlenet:paper]
+    static per-layer WCET table + the global composition for a schedule
+simulate --model M --cores C [--jitter J] [--seed S]
+    cycle-level platform simulation (Table 3)
+run --model M --cores C [--artifacts DIR] [--algo A] [--timeout S] [--node-limit N]
+    parallel PJRT inference over the AOT artifacts, numerics-checked
+codegen --model M --cores C --out DIR [--algo A] [--timeout S] [--node-limit N]
+    emit the ACETONE-style parallel C project
+serve --requests FILE.jsonl [--cores C] [--workers W] [--cache-dir DIR]
+      [--timeout S] [--node-limit N]
+    batch-solve a JSONL request stream through the portfolio: requests
+    are deduplicated by canonical key, fanned out over one worker pool
+    and answered in input order; with --cache-dir, solved schedules
+    (verdicts included) persist across processes. Each line is one JSON
+    object using the schedule flags as keys: {\"model\": \"lenet5\"} or
+    {\"nodes\": 50, \"seed\": 1, \"density\": 0.1}, plus optional
+    \"cores\", \"node-limit\", \"timeout\" overriding the CLI defaults.
+dag --nodes N [--seed S] [--density D]
+    generate a §4.1 random DAG (DOT output)
+";
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -142,23 +186,10 @@ fn dispatch(args: &[String]) -> Result<()> {
         "simulate" => simulate_cmd(&opts),
         "run" => run_cmd(&opts),
         "codegen" => codegen_cmd(&opts),
+        "serve" => serve_cmd(&opts),
         "dag" => dag_cmd(&opts),
         _ => {
-            println!(
-                "acetone — parallel C/PJRT inference for certifiable DNNs\n\
-                 \n\
-                 usage: acetone <cmd> [--key value]...\n\
-                 \n\
-                 export-models --dir D                 write model zoo JSONs\n\
-                 schedule --model M|--nodes N --cores C --algo A [--timeout S] [--node-limit N] [--seed S]\n\
-                 \x20   (algo: hlfet|ish|dsh|cp|tang|bnb|hybrid|portfolio;\n\
-                 \x20    --node-limit makes truncated exact runs machine-independent)\n\
-                 wcet --cores C [--model googlenet:paper]\n\
-                 simulate --model M --cores C [--jitter J] [--seed S]\n\
-                 run --model M --cores C [--artifacts DIR] [--algo A]\n\
-                 codegen --model M --cores C --out DIR [--algo A] [--timeout S] [--node-limit N]\n\
-                 dag --nodes N [--seed S] [--density D]   (prints DOT)\n"
-            );
+            println!("{HELP}");
             Ok(())
         }
     }
@@ -348,6 +379,117 @@ fn codegen_cmd(opts: &Opts) -> Result<()> {
     Ok(())
 }
 
+/// One parsed line of the `serve` JSONL stream: the problem is
+/// materialized into an owned `Dag` first (requests borrow them).
+struct ServeSpec {
+    g: acetone::graph::Dag,
+    m: usize,
+    budget: Budget,
+}
+
+/// A non-negative integer field of a serve request line. Fractional or
+/// negative numbers hard-error with the line number — the same rule the
+/// `Opts` accessors apply to CLI flags (a silent `0.5 → 0` would turn a
+/// typo into an already-expired deadline or a zero-node budget).
+fn json_u64(v: &Json, key: &str, lineno: usize) -> Result<Option<u64>> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(x) => match x.as_f64() {
+            Some(f) if f >= 0.0 && f.fract() == 0.0 && f <= u64::MAX as f64 => Ok(Some(f as u64)),
+            _ => bail!("requests line {lineno}: {key:?} must be a non-negative integer"),
+        },
+    }
+}
+
+/// Read a `serve` request stream: one JSON object per line, using the
+/// `schedule` flags as keys (`model` *or* `nodes`/`seed`/`density`, plus
+/// optional `cores`, `node-limit`, `timeout`). Blank lines and `#`
+/// comment lines are skipped.
+fn parse_serve_stream(text: &str, opts: &Opts) -> Result<Vec<ServeSpec>> {
+    let default_cores = opts.usize("cores", 4)?;
+    let default_timeout = opts.u64("timeout", 10)?;
+    let default_node_limit: Option<u64> = opts.opt_parsed("node-limit")?;
+    let mut specs = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        let lineno = lineno + 1;
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let v = Json::parse(line).map_err(|e| anyhow!("requests line {lineno}: {e}"))?;
+        let g = if let Some(name) = v.get("model").and_then(Json::as_str) {
+            model_by_name(name)?.to_dag(&CostModel::default())
+        } else if let Some(n) = json_u64(&v, "nodes", lineno)? {
+            if n == 0 {
+                bail!("requests line {lineno}: \"nodes\" must be >= 1");
+            }
+            let mut cfg = acetone::daggen::DagGenConfig::paper(n as usize);
+            if let Some(d) = v.get("density").and_then(Json::as_f64) {
+                cfg.density = d;
+            }
+            let seed = json_u64(&v, "seed", lineno)?.unwrap_or(1);
+            acetone::daggen::generate(&cfg, seed)
+        } else {
+            bail!("requests line {lineno}: need \"model\" or \"nodes\"");
+        };
+        // Validate here with the line number rather than letting the
+        // portfolio's `m >= 1` assertion abort the whole batch.
+        let m = json_u64(&v, "cores", lineno)?.map(|c| c as usize).unwrap_or(default_cores);
+        if m == 0 {
+            bail!("requests line {lineno}: \"cores\" must be >= 1");
+        }
+        let budget = Budget {
+            deadline: Some(Duration::from_secs(
+                json_u64(&v, "timeout", lineno)?.unwrap_or(default_timeout),
+            )),
+            node_limit: json_u64(&v, "node-limit", lineno)?.or(default_node_limit),
+        };
+        specs.push(ServeSpec { g, m, budget });
+    }
+    Ok(specs)
+}
+
+fn serve_cmd(opts: &Opts) -> Result<()> {
+    let path = opts
+        .get("requests")
+        .ok_or_else(|| anyhow!("--requests FILE.jsonl required (one request object per line)"))?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let specs = parse_serve_stream(&text, opts)?;
+    if specs.is_empty() {
+        bail!("{path} contains no requests");
+    }
+    let workers = opts.usize("workers", 0)?;
+    let cfg = PortfolioConfig {
+        cache_dir: opts.get("cache-dir").map(PathBuf::from),
+        ..PortfolioConfig::default()
+    };
+    let server = BatchSolver::new(cfg);
+    let mut batch = BatchRequest::new().workers(workers);
+    for spec in &specs {
+        batch = batch.push(SolveRequest::new(&spec.g, spec.m).budget(spec.budget.clone()));
+    }
+    let out = server.solve_batch(&batch);
+    for (i, served) in out.reports.iter().enumerate() {
+        let r = &served.report;
+        println!(
+            "#{i:<4} {:<9} makespan={:<8} verdict={:<18} explored={:<8} wall={:?}",
+            served.source.as_str(),
+            r.schedule.makespan(),
+            verdict(&r.termination),
+            r.stats.explored,
+            r.stats.wall
+        );
+    }
+    let s = out.stats;
+    println!(
+        "batch: {} requests → {} distinct solves ({} deduped, {} cache hits, \
+         {} cancelled, {} DAG groups) in {:?}",
+        s.requests, s.distinct, s.deduped, s.cache_hits, s.cancelled, s.dag_groups, s.wall
+    );
+    println!("cache: {:?}", server.portfolio().cache_stats());
+    Ok(())
+}
+
 fn dag_cmd(opts: &Opts) -> Result<()> {
     let n = opts.usize("nodes", 20)?;
     let mut cfg = acetone::daggen::DagGenConfig::paper(n);
@@ -355,4 +497,85 @@ fn dag_cmd(opts: &Opts) -> Result<()> {
     let g = acetone::daggen::generate(&cfg, opts.u64("seed", 1)?);
     println!("{}", g.to_dot());
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Scrape every flag name this file parses: any string literal fed to
+    /// an `Opts`/`Json` accessor (`get`/`usize`/`u64`/`f64`/`opt_parsed`/
+    /// `parsed`) names one. The serve JSONL keys deliberately reuse the
+    /// flag names, so one scrape covers both surfaces.
+    fn parsed_flags() -> std::collections::BTreeSet<String> {
+        let src = include_str!("main.rs");
+        let mut flags = std::collections::BTreeSet::new();
+        for accessor in ["get", "usize", "u64", "f64", "opt_parsed", "parsed"] {
+            let needle = format!(".{accessor}(\"");
+            let mut rest = src;
+            while let Some(at) = rest.find(&needle) {
+                rest = &rest[at + needle.len()..];
+                let end = rest.find('"').expect("unterminated flag literal");
+                flags.insert(rest[..end].to_string());
+            }
+        }
+        flags
+    }
+
+    #[test]
+    fn help_covers_every_parsed_flag() {
+        let flags = parsed_flags();
+        // Scraper sanity: flags only this PR introduced must be seen.
+        assert!(flags.contains("cache-dir"), "scraper missed serve flags: {flags:?}");
+        assert!(flags.contains("node-limit"), "scraper missed budget flags: {flags:?}");
+        for flag in &flags {
+            assert!(
+                HELP.contains(&format!("--{flag}")) || HELP.contains(&format!("\"{flag}\"")),
+                "--{flag} is parsed but undocumented in HELP"
+            );
+        }
+    }
+
+    #[test]
+    fn help_covers_every_subcommand() {
+        // Keep in sync with the `dispatch` match — the help text must
+        // name each arm.
+        let subcommands =
+            ["export-models", "schedule", "wcet", "simulate", "run", "codegen", "serve", "dag"];
+        for cmd in subcommands {
+            assert!(HELP.contains(cmd), "subcommand {cmd} missing from HELP");
+        }
+    }
+
+    #[test]
+    fn serve_stream_parses_defaults_and_overrides() {
+        let args = ["--cores", "3", "--node-limit", "500"].map(String::from);
+        let opts = Opts::parse(&args).unwrap();
+        let text = "\n# comment\n{\"nodes\": 12, \"seed\": 2}\n\
+                    {\"nodes\": 8, \"cores\": 2, \"node-limit\": 9, \"timeout\": 1}\n";
+        let specs = parse_serve_stream(text, &opts).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].g.n(), 12);
+        assert_eq!(specs[0].m, 3, "CLI default applies");
+        assert_eq!(specs[0].budget.node_limit, Some(500));
+        assert_eq!(specs[1].m, 2, "per-line override wins");
+        assert_eq!(specs[1].budget.node_limit, Some(9));
+        assert_eq!(specs[1].budget.deadline, Some(Duration::from_secs(1)));
+    }
+
+    #[test]
+    fn serve_stream_rejects_garbage() {
+        let opts = Opts::parse(&[]).unwrap();
+        assert!(parse_serve_stream("{\"cores\": 2}", &opts).is_err(), "no problem given");
+        assert!(parse_serve_stream("not json", &opts).is_err());
+        // Degenerate problems error with the line number instead of
+        // tripping the portfolio's asserts mid-batch.
+        assert!(parse_serve_stream("{\"nodes\": 5, \"cores\": 0}", &opts).is_err());
+        assert!(parse_serve_stream("{\"nodes\": 5, \"cores\": -3}", &opts).is_err());
+        assert!(parse_serve_stream("{\"nodes\": 0}", &opts).is_err());
+        // Fractional or negative budgets hard-error rather than silently
+        // truncating to an expired deadline / zero-node budget.
+        assert!(parse_serve_stream("{\"nodes\": 5, \"timeout\": 0.5}", &opts).is_err());
+        assert!(parse_serve_stream("{\"nodes\": 5, \"node-limit\": -5}", &opts).is_err());
+    }
 }

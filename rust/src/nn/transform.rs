@@ -64,6 +64,9 @@ pub fn split_convs(net: &Network, parts: usize, min_ch: usize) -> Network {
 }
 
 #[cfg(test)]
+// These tests pin the deprecated legacy entry points byte-identically
+// until the parity suites retire them.
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::nn::zoo::{lenet5, Scale};

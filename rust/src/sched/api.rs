@@ -87,6 +87,17 @@ impl Budget {
 
 /// Shared cancellation flag: clone it, hand one copy to the request, keep
 /// the other, call [`CancelToken::cancel`] to stop the solve.
+///
+/// ```
+/// use acetone::graph::paper_example_dag;
+/// use acetone::sched::{hlfet::Hlfet, CancelToken, Scheduler, SolveRequest, Termination};
+///
+/// let g = paper_example_dag();
+/// let token = CancelToken::new();
+/// token.cancel(); // the client went away before the solve started
+/// let report = Hlfet.solve(&SolveRequest::new(&g, 2).cancel(token));
+/// assert_eq!(report.termination, Termination::Cancelled);
+/// ```
 #[derive(Debug, Clone, Default)]
 pub struct CancelToken {
     flag: Arc<AtomicBool>,
@@ -105,6 +116,15 @@ impl CancelToken {
     /// Has [`CancelToken::cancel`] been called on any clone?
     pub fn is_cancelled(&self) -> bool {
         self.flag.load(Ordering::Acquire)
+    }
+
+    /// True when `self` and `other` are clones of one token (they share
+    /// the underlying flag). `sched::serve` uses this to decide whether
+    /// a deduplicated batch solve may adopt its clients' token: only
+    /// when *every* client handed in the same flag can one cancellation
+    /// safely abandon the shared solve.
+    pub fn same_flag(&self, other: &CancelToken) -> bool {
+        Arc::ptr_eq(&self.flag, &other.flag)
     }
 }
 
@@ -149,6 +169,17 @@ pub struct PortfolioOptions {
 
 /// One solve request: the problem, the budget, the shared-state hooks and
 /// the per-solver option overlays. See the module docs.
+///
+/// ```
+/// use acetone::graph::paper_example_dag;
+/// use acetone::sched::{dsh::Dsh, Scheduler, SolveRequest, Termination};
+///
+/// let g = paper_example_dag();
+/// let req = SolveRequest::new(&g, 2).node_limit(10_000);
+/// let report = Dsh.solve(&req);
+/// assert_eq!(report.termination, Termination::HeuristicComplete);
+/// assert!(report.schedule.makespan() <= g.total_wcet());
+/// ```
 #[derive(Debug, Clone)]
 pub struct SolveRequest<'g> {
     /// The task DAG to schedule.
@@ -331,6 +362,17 @@ pub struct SearchStats {
 }
 
 /// Outcome of one solve: schedule + verdict + statistics.
+///
+/// ```
+/// use acetone::graph::paper_example_dag;
+/// use acetone::sched::{bnb::ChouChung, Scheduler, SolveRequest};
+///
+/// let g = paper_example_dag();
+/// let report = ChouChung::default().solve(&SolveRequest::new(&g, 2));
+/// assert!(report.proven_optimal(), "the small example solves exactly");
+/// assert!(report.stats.explored > 0);
+/// assert!(report.schedule.makespan() < g.total_wcet());
+/// ```
 #[derive(Debug, Clone)]
 pub struct SolveReport {
     pub schedule: Schedule,

@@ -110,6 +110,9 @@ impl CpSolver {
     /// whether any leaf beyond the warm start was reached. Pinned by the
     /// byte-parity suites; new code calls [`Scheduler::solve`].
     #[doc(hidden)]
+    #[deprecated(note = "legacy pre-request shim kept for the pinned byte-parity \
+                         suites; build a SolveRequest and call Scheduler::solve — \
+                         retire together with the parity suites")]
     pub fn solve(&self, g: &Dag, m: usize) -> CpOutcome {
         self.legacy_outcome(self.run_req(&self.legacy_request(g, m), false))
     }
@@ -120,6 +123,9 @@ impl CpSolver {
     /// [`CpSolver::solve`], so makespans, placements and explored counts
     /// must match exactly.
     #[doc(hidden)]
+    #[deprecated(note = "clone-per-branch differential oracle pinned by \
+                         tests/trail_search_parity.rs; retire together with \
+                         that suite")]
     pub fn solve_reference(&self, g: &Dag, m: usize) -> CpOutcome {
         self.legacy_outcome(self.run_req(&self.legacy_request(g, m), true))
     }
@@ -250,6 +256,7 @@ impl Scheduler for CpSolver {
     }
 
     #[doc(hidden)]
+    #[allow(deprecated)] // the legacy override forwards to the legacy shim
     fn schedule(&self, g: &Dag, m: usize) -> SolveResult {
         CpSolver::solve(self, g, m).result
     }
@@ -628,6 +635,9 @@ pub(crate) fn solve_prefix(
 }
 
 #[cfg(test)]
+// These tests pin the deprecated legacy entry points byte-identically
+// until the parity suites retire them.
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::graph::{ensure_single_sink, paper_example_dag, Dag};

@@ -158,6 +158,9 @@ fn plan_with_duplication(
 }
 
 #[cfg(test)]
+// These tests pin the deprecated legacy entry points byte-identically
+// until the parity suites retire them.
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::graph::{paper_example_dag, Dag};

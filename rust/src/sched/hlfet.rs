@@ -51,6 +51,9 @@ impl Scheduler for Hlfet {
 }
 
 #[cfg(test)]
+// These tests pin the deprecated legacy entry points byte-identically
+// until the parity suites retire them.
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::graph::paper_example_dag;

@@ -75,6 +75,9 @@ impl Scheduler for Hybrid {
 }
 
 #[cfg(test)]
+// These tests pin the deprecated legacy entry points byte-identically
+// until the parity suites retire them.
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::graph::{ensure_single_sink, paper_example_dag};

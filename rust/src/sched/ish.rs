@@ -97,6 +97,9 @@ fn fill_gap(
 }
 
 #[cfg(test)]
+// These tests pin the deprecated legacy entry points byte-identically
+// until the parity suites retire them.
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::graph::{paper_example_dag, Dag};

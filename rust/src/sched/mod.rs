@@ -45,7 +45,7 @@
 //! (explored/pruned/memo counters, per-stage wall times). See [`api`]
 //! for the full semantics.
 //!
-//! ```no_run
+//! ```
 //! use acetone::sched::{Scheduler, SolveRequest};
 //! use acetone::sched::bnb::ChouChung;
 //! # let g = acetone::graph::paper_example_dag();
@@ -55,8 +55,10 @@
 //! ```
 //!
 //! The pre-request entry points (`schedule(g, m)`, the budget fields on
-//! the solver configs) survive only as `#[doc(hidden)]` shims for the
-//! byte-parity differential suites; new code should not use them.
+//! the solver configs) survive only as `#[doc(hidden)]` +
+//! `#[deprecated]` shims pinned by the byte-parity differential suites
+//! (which opt in via `#[allow(deprecated)]`); new code cannot adopt
+//! them without tripping the `-D warnings` CI lint.
 //!
 //! # Solvers
 //!
@@ -66,8 +68,11 @@
 //! (Chou–Chung, duplication-free) and [`cp`] (both §3.1/§3.2 encodings),
 //! both trail-based ([`trail`]). [`portfolio`] races all of them across
 //! worker threads behind one deterministic solve with a canonically
-//! request-keyed schedule cache — the recommended entry point when the
-//! caller just wants the best schedule the crate can find.
+//! request-keyed schedule cache (optionally persistent across process
+//! restarts) — the recommended entry point when the caller just wants
+//! the best schedule the crate can find. [`serve`] batches many
+//! requests over the portfolio: dedup by canonical key, one shared
+//! worker pool, per-request budgets/cancellation, input-order reports.
 //!
 //! [`Incumbent`]: portfolio::Incumbent
 
@@ -81,6 +86,7 @@ pub mod ish;
 pub mod list;
 pub mod portfolio;
 mod program;
+pub mod serve;
 pub mod trail;
 mod validity;
 
@@ -150,13 +156,15 @@ impl Schedule {
     /// All indexes are maintained incrementally: O(log k) search + O(k)
     /// shift in the core timeline and the node instance list.
     pub fn place(&mut self, g: &Dag, node: NodeId, core: usize, start: Cycles) {
+        self.place_raw(node, core, start, start + g.wcet(node));
+    }
+
+    /// [`Schedule::place`] with an explicit finish time — the decoder of
+    /// the persistent schedule cache rebuilds placements from stored
+    /// records and has no `Dag` at hand to recompute `start + t(v)`.
+    pub(crate) fn place_raw(&mut self, node: NodeId, core: usize, start: Cycles, finish: Cycles) {
         assert!(core < self.m, "core {core} out of range (m={})", self.m);
-        let p = Placement {
-            node,
-            core,
-            start,
-            finish: start + g.wcet(node),
-        };
+        let p = Placement { node, core, start, finish };
         self.ensure_node(node);
         let row = &mut self.by_core[core];
         let pos = row.partition_point(|q| (q.start, q.node) < (start, node));
@@ -356,6 +364,16 @@ pub struct SolveResult {
 /// Common interface over all solvers: one [`SolveRequest`] in, one
 /// [`SolveReport`] out. The evaluation harness (Figs. 7–8), the CLI and
 /// the portfolio's racer fan-out all drive solvers through this trait.
+///
+/// ```
+/// use acetone::graph::paper_example_dag;
+/// use acetone::sched::{check_valid, ish::Ish, Scheduler, SolveRequest};
+///
+/// let g = paper_example_dag();
+/// let report = Ish.solve(&SolveRequest::new(&g, 3));
+/// assert_eq!(check_valid(&g, &report.schedule), Ok(()));
+/// println!("{} → makespan {}", Ish.name(), report.schedule.makespan());
+/// ```
 pub trait Scheduler {
     /// Human-readable solver name ("ISH", "DSH", "CP-improved", …).
     fn name(&self) -> &'static str;
@@ -369,6 +387,9 @@ pub trait Scheduler {
     /// budget fields override this to fold them in). Pinned by the
     /// byte-parity suites; new code calls [`Scheduler::solve`].
     #[doc(hidden)]
+    #[deprecated(note = "legacy pre-request shim kept for the pinned byte-parity \
+                         suites; build a SolveRequest and call Scheduler::solve — \
+                         retire together with the parity suites")]
     fn schedule(&self, g: &Dag, m: usize) -> SolveResult {
         self.solve(&SolveRequest::new(g, m)).into_legacy()
     }

@@ -1,5 +1,5 @@
 //! Schedule cache: canonical request-keyed memoization of portfolio
-//! solves.
+//! solves — a bounded in-memory L1 over an optional persistent L2.
 //!
 //! The serving scenario issues the *same* network DAG over and over (one
 //! schedule per deployed model × core count); solving it once and
@@ -13,10 +13,32 @@
 //! already folded into the DAG's weights by `Network::to_dag`, so
 //! DAG + m + request is exactly "same problem". Storing the complete key
 //! (not a 64-bit digest) rules out hash-collision false hits.
+//!
+//! # Tiering
+//!
+//! The FIFO-bounded in-memory map is the **L1**. A cache built with
+//! [`ScheduleCache::with_persistent`] additionally owns a
+//! [`PersistentStore`](super::PersistentStore) **L2** (append-only
+//! `schedules.bin` + index in a cache directory): every insert is also
+//! appended to disk, an L1 miss falls through to the L2 and promotes the
+//! hit back into the L1, and because the canonical key is
+//! process-independent, a restarted server answers repeat requests
+//! without re-solving. L1 eviction never loses data — the entry stays
+//! readable from the L2.
+//!
+//! L2 disk I/O (append on insert, read on an L1 miss) happens while the
+//! cache mutex is held: a hot L1 hit is still just a map lookup + `Arc`
+//! bump, but concurrent solvers briefly queue behind a cold-tier read
+//! or an insert's append. That keeps the tiers strictly ordered (no
+//! lost-update window between L1 and L2) and is the right trade for a
+//! cache whose misses cost whole solver searches; the index rewrite is
+//! amortized (see `PersistentStore::insert`) so inserts stay O(record).
 
+use super::persist::PersistentStore;
 use super::super::{Schedule, Termination};
 use crate::graph::Dag;
 use std::collections::{HashMap, VecDeque};
+use std::path::Path;
 use std::sync::{Arc, Mutex};
 
 /// Canonical cache key: `[request-tag…, n, m, per-node wcet + out-edges…]`
@@ -50,12 +72,22 @@ pub struct CachedSolve {
 }
 
 /// Hit/miss/eviction counters (monotonic over the cache's lifetime).
+/// `hits` counts hits from either tier; `l2_hits` is the subset answered
+/// by the persistent store after an L1 miss.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
     pub len: usize,
+    /// Hits answered by the persistent L2 (0 without a cache directory).
+    pub l2_hits: u64,
+    /// Solves currently readable from the persistent L2.
+    pub persisted: usize,
+    /// Stale files / corrupt records the L2 ignored (never a panic).
+    pub skipped: u64,
+    /// L2 I/O errors downgraded to miss/no-persist.
+    pub io_errors: u64,
 }
 
 struct Inner {
@@ -65,57 +97,112 @@ struct Inner {
     /// Insertion order for FIFO eviction (deterministic, unlike iterating
     /// the randomized-seed `HashMap`).
     order: VecDeque<Vec<u64>>,
+    /// Persistent L2 (see the module docs); `None` = in-memory only.
+    l2: Option<PersistentStore>,
     hits: u64,
     misses: u64,
     evictions: u64,
+    l2_hits: u64,
 }
 
-/// Capacity-bounded, thread-safe schedule cache (FIFO eviction).
+/// Thread-safe two-tier schedule cache: capacity-bounded in-memory L1
+/// (FIFO eviction) over an optional persistent on-disk L2.
 pub struct ScheduleCache {
     inner: Mutex<Inner>,
     capacity: usize,
 }
 
 impl ScheduleCache {
+    /// In-memory cache only (no persistence).
     pub fn new(capacity: usize) -> Self {
+        Self::build(capacity, None)
+    }
+
+    /// Cache backed by a persistent store in `dir` (created on demand):
+    /// inserts are appended to disk and hits survive process restarts.
+    /// Opening never fails — a stale or corrupt store degrades to empty
+    /// with [`CacheStats::skipped`] / [`CacheStats::io_errors`] counters.
+    ///
+    /// ```
+    /// use acetone::sched::portfolio::{canonical_key, CachedSolve, ScheduleCache};
+    /// use acetone::sched::{Schedule, Termination};
+    /// use acetone::util::tempdir::TempDir;
+    /// let dir = TempDir::new("acetone-cache-doc").unwrap();
+    /// let g = acetone::graph::paper_example_dag();
+    /// let key = canonical_key(&g, 2, &[]);
+    /// {
+    ///     let cache = ScheduleCache::with_persistent(8, dir.path());
+    ///     let mut s = Schedule::new(2);
+    ///     s.place(&g, 0, 0, 0);
+    ///     cache.insert(key.clone(), CachedSolve {
+    ///         schedule: s,
+    ///         termination: Termination::ProvenOptimal,
+    ///     });
+    /// }
+    /// // A fresh cache over the same directory still answers the key.
+    /// let reopened = ScheduleCache::with_persistent(8, dir.path());
+    /// let hit = reopened.get(&key).expect("survived the restart");
+    /// assert_eq!(hit.termination, Termination::ProvenOptimal);
+    /// assert_eq!(reopened.stats().l2_hits, 1);
+    /// ```
+    pub fn with_persistent(capacity: usize, dir: impl AsRef<Path>) -> Self {
+        Self::build(capacity, Some(PersistentStore::open(dir)))
+    }
+
+    fn build(capacity: usize, l2: Option<PersistentStore>) -> Self {
         Self {
             inner: Mutex::new(Inner {
                 map: HashMap::new(),
                 order: VecDeque::new(),
+                l2,
                 hits: 0,
                 misses: 0,
                 evictions: 0,
+                l2_hits: 0,
             }),
             capacity: capacity.max(1),
         }
     }
 
-    /// Look a key up, counting the hit or miss. A hit costs one `Arc`
-    /// clone while the lock is held.
+    /// Look a key up, counting the hit or miss. An L1 hit costs one `Arc`
+    /// clone while the lock is held; an L1 miss falls through to the
+    /// persistent L2 (when configured) and promotes the decoded solve
+    /// back into the L1.
     pub fn get(&self, key: &[u64]) -> Option<Arc<CachedSolve>> {
         let mut inner = self.inner.lock().expect("cache mutex");
-        match inner.map.get(key).cloned() {
-            Some(hit) => {
-                inner.hits += 1;
-                Some(hit)
-            }
-            None => {
-                inner.misses += 1;
-                None
-            }
+        if let Some(hit) = inner.map.get(key).cloned() {
+            inner.hits += 1;
+            return Some(hit);
         }
+        if let Some(solve) = inner.l2.as_mut().and_then(|l2| l2.get(key)) {
+            inner.hits += 1;
+            inner.l2_hits += 1;
+            let value = Arc::new(solve);
+            Self::insert_l1(&mut inner, self.capacity, key.to_vec(), value.clone());
+            return Some(value);
+        }
+        inner.misses += 1;
+        None
     }
 
-    /// Insert a solve, evicting the oldest entry when full. Re-inserting
-    /// an existing key overwrites in place (no second order slot).
+    /// Insert a solve, evicting the oldest L1 entry when full (an evicted
+    /// entry stays readable from the L2). Re-inserting an existing key
+    /// overwrites the L1 in place (no second order slot); the append-only
+    /// L2 keeps its first record.
     pub fn insert(&self, key: Vec<u64>, value: CachedSolve) {
-        let value = Arc::new(value);
         let mut inner = self.inner.lock().expect("cache mutex");
+        if let Some(l2) = inner.l2.as_mut() {
+            l2.insert(&key, &value);
+        }
+        Self::insert_l1(&mut inner, self.capacity, key, Arc::new(value));
+    }
+
+    fn insert_l1(inner: &mut Inner, capacity: usize, key: Vec<u64>, value: Arc<CachedSolve>) {
         if inner.map.insert(key.clone(), value).is_some() {
             return;
         }
         inner.order.push_back(key);
-        if inner.order.len() > self.capacity {
+        if inner.order.len() > capacity {
             if let Some(old) = inner.order.pop_front() {
                 inner.map.remove(&old);
                 inner.evictions += 1;
@@ -125,11 +212,16 @@ impl ScheduleCache {
 
     pub fn stats(&self) -> CacheStats {
         let inner = self.inner.lock().expect("cache mutex");
+        let l2 = inner.l2.as_ref().map(PersistentStore::stats).unwrap_or_default();
         CacheStats {
             hits: inner.hits,
             misses: inner.misses,
             evictions: inner.evictions,
             len: inner.map.len(),
+            l2_hits: inner.l2_hits,
+            persisted: l2.entries,
+            skipped: l2.skipped,
+            io_errors: l2.io_errors,
         }
     }
 }
@@ -180,6 +272,43 @@ mod tests {
         assert_eq!(stats.misses, 3);
         assert_eq!(stats.evictions, 1);
         assert_eq!(stats.len, 2);
+    }
+
+    #[test]
+    fn l2_answers_after_l1_eviction_and_promotes_back() {
+        let g = paper_example_dag();
+        let dir = crate::util::tempdir::TempDir::new("acetone-cache").unwrap();
+        let cache = ScheduleCache::with_persistent(1, dir.path());
+        let k1 = canonical_key(&g, 2, &[]);
+        let k2 = canonical_key(&g, 3, &[]);
+        cache.insert(k1.clone(), dummy(1));
+        cache.insert(k2.clone(), dummy(2)); // evicts k1 from the L1 only
+        assert_eq!(cache.stats().evictions, 1);
+        let hit = cache.get(&k1).expect("still readable from the L2");
+        assert_eq!(hit.schedule.iter().next().map(|p| p.start), Some(1));
+        let stats = cache.stats();
+        assert_eq!(stats.l2_hits, 1);
+        assert_eq!(stats.hits, 1);
+        assert_eq!(stats.persisted, 2);
+        // The promote displaced k2; a repeat k1 get is now a pure L1 hit.
+        assert!(cache.get(&k1).is_some());
+        assert_eq!(cache.stats().l2_hits, 1, "second get served by the L1");
+    }
+
+    #[test]
+    fn persistent_tier_survives_cache_reconstruction() {
+        let g = paper_example_dag();
+        let dir = crate::util::tempdir::TempDir::new("acetone-cache").unwrap();
+        let k = canonical_key(&g, 2, &[7]);
+        {
+            let cache = ScheduleCache::with_persistent(4, dir.path());
+            cache.insert(k.clone(), dummy(3));
+        }
+        let cache = ScheduleCache::with_persistent(4, dir.path());
+        assert_eq!(cache.stats().persisted, 1);
+        let hit = cache.get(&k).expect("hit across restart");
+        assert_eq!(hit.schedule.iter().next().map(|p| p.start), Some(3));
+        assert_eq!(hit.termination, Termination::HeuristicComplete);
     }
 
     #[test]

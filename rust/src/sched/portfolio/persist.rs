@@ -1,0 +1,657 @@
+//! Persistent tier of the schedule cache: an append-only on-disk store
+//! so cache hits survive process restarts.
+//!
+//! The serving scenario deploys the *same* networks over and over across
+//! process lifetimes (rolling restarts, horizontal replicas, `acetone
+//! serve` invocations); the canonical request key
+//! ([`canonical_key`](super::canonical_key), `Knobs::cache_tag`,
+//! [`KEY_VERSION`](super::KEY_VERSION)) is process-independent by
+//! construction, so a solve computed yesterday answers today's request.
+//! This module stores those solves in a cache directory:
+//!
+//! * **`schedules.bin`** — the record log. A 3-word versioned header
+//!   (magic, format version, [`KEY_VERSION`](super::KEY_VERSION))
+//!   followed by append-only records, each `[payload-length, key,
+//!   termination, schedule, checksum]` as little-endian `u64` words.
+//!   Inserts append; nothing is ever rewritten in place.
+//! * **`schedules.idx`** — the lookup index (keys + byte offsets into
+//!   the log), rewritten atomically via temp-file + rename on an
+//!   amortized schedule (every append while the store is small, then at
+//!   power-of-two sizes). On open, a consistent index makes startup
+//!   O(index); a missing/stale/corrupt index falls back to a full log
+//!   scan and is rebuilt.
+//!
+//! # Failure containment
+//!
+//! The store never panics and never fails a solve over an I/O problem:
+//!
+//! * a header with the wrong magic, format version or `KEY_VERSION`
+//!   (e.g. a cache directory left by an older build) marks the whole
+//!   file **stale**: it is ignored, counted in
+//!   [`PersistStats::skipped`], and replaced by a fresh empty store via
+//!   temp-file + rename;
+//! * a **corrupt or torn record** (crash mid-append, bad checksum)
+//!   ends the scan: the valid prefix is kept, the tail is counted as
+//!   skipped and healed away by an atomic rewrite of the prefix;
+//! * any I/O error downgrades the operation (a failed read is a miss, a
+//!   failed append is simply not persisted) and is counted in
+//!   [`PersistStats::io_errors`].
+
+use super::cache::CachedSolve;
+use super::super::{Schedule, Termination};
+use super::KEY_VERSION;
+use std::collections::HashMap;
+use std::fs;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+/// `b"ACETSCHE"` — first word of `schedules.bin`.
+const MAGIC_BIN: u64 = u64::from_le_bytes(*b"ACETSCHE");
+/// `b"ACETSIDX"` — first word of `schedules.idx`.
+const MAGIC_IDX: u64 = u64::from_le_bytes(*b"ACETSIDX");
+/// On-disk layout version (bump on any record/header layout change).
+const FORMAT_VERSION: u64 = 1;
+/// Words in the bin header (magic, format, key version).
+const HEADER_WORDS: usize = 3;
+/// Upper bound on one record's payload words — a length word beyond this
+/// is treated as corruption rather than attempted as an allocation.
+const MAX_RECORD_WORDS: u64 = 1 << 24;
+
+/// Counters of the persistent tier (monotonic over the store's lifetime,
+/// except `entries`/`bin_bytes` which track current state).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PersistStats {
+    /// Records currently indexed (readable solves on disk).
+    pub entries: usize,
+    /// Stale files and corrupt/torn records ignored (never a panic).
+    pub skipped: u64,
+    /// I/O errors downgraded to miss/no-persist.
+    pub io_errors: u64,
+    /// Current size of `schedules.bin` in bytes.
+    pub bin_bytes: u64,
+}
+
+/// The append-only on-disk schedule store. Not internally synchronized:
+/// the owning [`ScheduleCache`](super::ScheduleCache) serializes access
+/// behind its mutex.
+///
+/// **Sharing**: the supported mode is one writer per cache directory.
+/// Concurrent writers do not corrupt each other's *indexed* records
+/// (appends are indexed at the real end-of-file offset and entries are
+/// verified by key on read), but a reopen that catches a sibling's
+/// append mid-write will treat the half-written tail as torn and heal
+/// it away. Serving replicas should each point at their own directory
+/// (or share a pre-warmed read-mostly one).
+#[derive(Debug)]
+pub struct PersistentStore {
+    dir: PathBuf,
+    bin: PathBuf,
+    idx: PathBuf,
+    /// key → byte offset of the record's length word in `schedules.bin`.
+    index: HashMap<Vec<u64>, u64>,
+    /// Valid length of `schedules.bin` (append position).
+    bin_len: u64,
+    skipped: u64,
+    io_errors: u64,
+    /// Set after an unrecoverable write error: reads keep working off the
+    /// index, further appends are dropped (counted as io_errors).
+    append_broken: bool,
+}
+
+impl PersistentStore {
+    /// Open (or create) the store under `dir`. Infallible by design:
+    /// every failure mode degrades to an empty or partial store with the
+    /// corresponding [`PersistStats`] counter incremented.
+    pub fn open(dir: impl AsRef<Path>) -> Self {
+        let dir = dir.as_ref().to_path_buf();
+        let mut store = Self {
+            bin: dir.join("schedules.bin"),
+            idx: dir.join("schedules.idx"),
+            dir,
+            index: HashMap::new(),
+            bin_len: (HEADER_WORDS * 8) as u64,
+            skipped: 0,
+            io_errors: 0,
+            append_broken: false,
+        };
+        if fs::create_dir_all(&store.dir).is_err() {
+            store.io_errors += 1;
+            store.append_broken = true;
+            return store;
+        }
+        match fs::read(&store.bin) {
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                store.write_fresh();
+            }
+            Err(_) => {
+                store.io_errors += 1;
+                store.append_broken = true;
+            }
+            Ok(bytes) => {
+                if !header_ok(&bytes) {
+                    // Stale or foreign file: ignored, replaced atomically.
+                    store.skipped += 1;
+                    store.write_fresh();
+                } else if !store.load_index(&bytes) {
+                    store.scan_log(&bytes);
+                }
+            }
+        }
+        store
+    }
+
+    /// The cache directory this store lives in.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Number of solves currently readable from disk.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    pub fn stats(&self) -> PersistStats {
+        PersistStats {
+            entries: self.index.len(),
+            skipped: self.skipped,
+            io_errors: self.io_errors,
+            bin_bytes: self.bin_len,
+        }
+    }
+
+    /// Read one solve back. A decode failure un-indexes the record and
+    /// reports a miss (counted), never an error.
+    pub fn get(&mut self, key: &[u64]) -> Option<CachedSolve> {
+        let offset = *self.index.get(key)?;
+        match self.read_record_at(offset) {
+            Some((stored_key, solve)) if stored_key == key => Some(solve),
+            _ => {
+                self.io_errors += 1;
+                self.index.remove(key);
+                None
+            }
+        }
+    }
+
+    /// Append one solve (no-op when the key is already stored: the log
+    /// is append-only and the first write wins, like the L1 cache).
+    ///
+    /// The record is indexed at the file's *actual* end-of-file offset,
+    /// not at this handle's view of the length: if another handle (a
+    /// second replica sharing the cache directory) appended since we
+    /// opened, our record still lands — and is indexed — where it really
+    /// is, and the sibling's records are picked up by the next open's
+    /// scan. Concurrent writers are tolerated this far; the supported
+    /// mode is still one writer per directory (see the module docs).
+    pub fn insert(&mut self, key: &[u64], value: &CachedSolve) {
+        if self.append_broken || self.index.contains_key(key) {
+            return;
+        }
+        let record = encode_record(key, value);
+        let appended = fs::OpenOptions::new()
+            .append(true)
+            .create(true)
+            .open(&self.bin)
+            .and_then(|mut f| {
+                let at = f.seek(SeekFrom::End(0))?;
+                f.write_all(&record)?;
+                Ok(at)
+            });
+        let offset = match appended {
+            Ok(at) => at,
+            Err(_) => {
+                // The log may now carry a torn tail; stop appending in
+                // this process (the next open heals the file).
+                self.io_errors += 1;
+                self.append_broken = true;
+                return;
+            }
+        };
+        self.index.insert(key.to_vec(), offset);
+        self.bin_len = offset + record.len() as u64;
+        // Amortize the index rewrite: every insert while the store is
+        // small (tests and typical serving stores see a fresh index),
+        // then only at power-of-two sizes — O(total entries) index bytes
+        // over the store's lifetime instead of O(entries²). A stale
+        // index is only a slower open: the length check rejects it and
+        // the log scan rebuilds it.
+        if self.index.len() <= 64 || self.index.len().is_power_of_two() {
+            self.write_index();
+        }
+    }
+
+    /// Replace `schedules.bin` with a fresh header-only file, atomically.
+    fn write_fresh(&mut self) {
+        let mut bytes = Vec::with_capacity(HEADER_WORDS * 8);
+        for w in [MAGIC_BIN, FORMAT_VERSION, KEY_VERSION] {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        self.index.clear();
+        self.bin_len = bytes.len() as u64;
+        if write_atomic(&self.bin, &bytes).is_err() {
+            self.io_errors += 1;
+            self.append_broken = true;
+        } else {
+            self.write_index();
+        }
+    }
+
+    /// Try the fast open path: a `schedules.idx` whose header matches and
+    /// whose recorded log length equals the actual file. Returns false
+    /// (leaving the index empty) when the caller must fall back to a
+    /// full log scan.
+    fn load_index(&mut self, bin_bytes: &[u8]) -> bool {
+        let Ok(idx_bytes) = fs::read(&self.idx) else {
+            return false;
+        };
+        let Some(words) = as_words(&idx_bytes) else {
+            return false;
+        };
+        if words.len() < 5
+            || words[0] != MAGIC_IDX
+            || words[1] != FORMAT_VERSION
+            || words[2] != KEY_VERSION
+            || words[3] != bin_bytes.len() as u64
+        {
+            return false;
+        }
+        let n_entries = words[4] as usize;
+        let mut pos = 5;
+        let mut index = HashMap::with_capacity(n_entries);
+        for _ in 0..n_entries {
+            let Some(&key_len) = words.get(pos) else {
+                return false;
+            };
+            let key_len = key_len as usize;
+            if key_len > words.len() {
+                return false;
+            }
+            let Some(key) = words.get(pos + 1..pos + 1 + key_len) else {
+                return false;
+            };
+            let Some(&offset) = words.get(pos + 1 + key_len) else {
+                return false;
+            };
+            if offset >= bin_bytes.len() as u64 {
+                return false;
+            }
+            index.insert(key.to_vec(), offset);
+            pos += 2 + key_len;
+        }
+        if pos != words.len() {
+            return false;
+        }
+        self.index = index;
+        self.bin_len = bin_bytes.len() as u64;
+        true
+    }
+
+    /// Full log scan: index every valid record, heal a corrupt/torn tail
+    /// by atomically rewriting the valid prefix.
+    fn scan_log(&mut self, bytes: &[u8]) {
+        self.index.clear();
+        let mut pos = HEADER_WORDS * 8;
+        let mut torn = false;
+        while pos < bytes.len() {
+            match decode_record(&bytes[pos..]) {
+                Some((consumed, key, _)) => {
+                    // Later records win (only possible after a crash
+                    // between append and index rewrite).
+                    self.index.insert(key, pos as u64);
+                    pos += consumed;
+                }
+                None => {
+                    torn = true;
+                    break;
+                }
+            }
+        }
+        self.bin_len = pos as u64;
+        if torn {
+            // Everything past the first bad word is suspect in an
+            // append-only log: keep the valid prefix, drop the tail.
+            self.skipped += 1;
+            if write_atomic(&self.bin, &bytes[..pos]).is_err() {
+                self.io_errors += 1;
+                self.append_broken = true;
+            }
+        }
+        self.write_index();
+    }
+
+    /// Rewrite `schedules.idx` via temp-file + rename. Pure acceleration:
+    /// a failure is counted and the next open scans the log instead.
+    fn write_index(&mut self) {
+        let mut words: Vec<u64> = vec![
+            MAGIC_IDX,
+            FORMAT_VERSION,
+            KEY_VERSION,
+            self.bin_len,
+            self.index.len() as u64,
+        ];
+        // Deterministic entry order (HashMap iteration is seeded per
+        // process): sort by offset, i.e. log append order.
+        let mut entries: Vec<(&Vec<u64>, &u64)> = self.index.iter().collect();
+        entries.sort_by_key(|&(_, &off)| off);
+        for (key, &offset) in entries {
+            words.push(key.len() as u64);
+            words.extend_from_slice(key);
+            words.push(offset);
+        }
+        let mut bytes = Vec::with_capacity(words.len() * 8);
+        for w in words {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        if write_atomic(&self.idx, &bytes).is_err() {
+            self.io_errors += 1;
+        }
+    }
+
+    /// Read and decode the record whose length word sits at `offset`.
+    fn read_record_at(&self, offset: u64) -> Option<(Vec<u64>, CachedSolve)> {
+        let mut f = fs::File::open(&self.bin).ok()?;
+        f.seek(SeekFrom::Start(offset)).ok()?;
+        let mut len_word = [0u8; 8];
+        f.read_exact(&mut len_word).ok()?;
+        let payload_words = u64::from_le_bytes(len_word);
+        if payload_words > MAX_RECORD_WORDS {
+            return None;
+        }
+        let mut payload = vec![0u8; payload_words as usize * 8];
+        f.read_exact(&mut payload).ok()?;
+        let mut record = len_word.to_vec();
+        record.extend_from_slice(&payload);
+        decode_record(&record).map(|(_, key, solve)| (key, solve))
+    }
+}
+
+/// Interpret a byte slice as little-endian u64 words (None on ragged length).
+fn as_words(bytes: &[u8]) -> Option<Vec<u64>> {
+    if bytes.len() % 8 != 0 {
+        return None;
+    }
+    Some(
+        bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().expect("8-byte chunk")))
+            .collect(),
+    )
+}
+
+fn header_ok(bytes: &[u8]) -> bool {
+    bytes.len() >= HEADER_WORDS * 8
+        && bytes[..8] == MAGIC_BIN.to_le_bytes()
+        && bytes[8..16] == FORMAT_VERSION.to_le_bytes()
+        && bytes[16..24] == KEY_VERSION.to_le_bytes()
+}
+
+/// Write `bytes` to `path` atomically: temp file in the same directory,
+/// then rename over the target (readers never observe a partial file).
+/// The temp name embeds the target's extension and the pid, so the bin
+/// and idx writes never share a temp file — neither with each other nor
+/// with another process on the same directory (a same-named temp could
+/// otherwise be renamed over the wrong target mid-race, destroying the
+/// log). Stale temps from a crash are harmless: never read, overwritten
+/// by the next same-pid write.
+fn write_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    let ext = path.extension().and_then(|e| e.to_str()).unwrap_or("dat");
+    let tmp = path.with_extension(format!("{ext}.tmp{}", std::process::id()));
+    fs::write(&tmp, bytes)?;
+    fs::rename(&tmp, path)
+}
+
+/// FNV-1a over u64 words — the per-record corruption checksum.
+fn checksum(words: &[u64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+fn termination_words(t: &Termination) -> [u64; 3] {
+    match t {
+        Termination::ProvenOptimal => [0, 0, 0],
+        Termination::HeuristicComplete => [1, 0, 0],
+        Termination::BudgetExhausted { nodes, wall } => {
+            [2, *nodes, wall.as_nanos().min(u64::MAX as u128) as u64]
+        }
+        // Cancelled solves are never cached, but the codec is total.
+        Termination::Cancelled => [3, 0, 0],
+    }
+}
+
+fn termination_from(words: [u64; 3]) -> Option<Termination> {
+    Some(match words[0] {
+        0 => Termination::ProvenOptimal,
+        1 => Termination::HeuristicComplete,
+        2 => Termination::BudgetExhausted {
+            nodes: words[1],
+            wall: Duration::from_nanos(words[2]),
+        },
+        3 => Termination::Cancelled,
+        _ => return None,
+    })
+}
+
+/// Record layout (little-endian u64 words):
+/// `[payload_words] [key_len, key…, term(3), m, n_placements,
+///  (node, core, start, finish)…, checksum]` — `payload_words` counts
+/// everything after itself, checksum included; the checksum covers the
+/// length word and the payload before it.
+fn encode_record(key: &[u64], value: &CachedSolve) -> Vec<u8> {
+    let s = &value.schedule;
+    let mut payload: Vec<u64> = Vec::with_capacity(key.len() + 6 + 4 * s.len());
+    payload.push(key.len() as u64);
+    payload.extend_from_slice(key);
+    payload.extend_from_slice(&termination_words(&value.termination));
+    payload.push(s.m as u64);
+    payload.push(s.len() as u64);
+    for p in s.iter() {
+        payload.extend_from_slice(&[p.node as u64, p.core as u64, p.start, p.finish]);
+    }
+    let mut words: Vec<u64> = Vec::with_capacity(payload.len() + 2);
+    words.push(payload.len() as u64 + 1); // + checksum word
+    words.extend_from_slice(&payload);
+    words.push(checksum(&words));
+    let mut bytes = Vec::with_capacity(words.len() * 8);
+    for w in words {
+        bytes.extend_from_slice(&w.to_le_bytes());
+    }
+    bytes
+}
+
+/// Decode one record from the head of `bytes`; `None` on any structural
+/// problem (short read, absurd length, checksum mismatch, bad field).
+/// Returns `(bytes consumed, key, solve)`.
+fn decode_record(bytes: &[u8]) -> Option<(usize, Vec<u64>, CachedSolve)> {
+    if bytes.len() < 8 {
+        return None;
+    }
+    let payload_words = u64::from_le_bytes(bytes[..8].try_into().expect("8 bytes"));
+    if payload_words > MAX_RECORD_WORDS {
+        return None;
+    }
+    let total = (payload_words as usize + 1) * 8;
+    if bytes.len() < total {
+        return None;
+    }
+    let words = as_words(&bytes[..total]).expect("total is word-aligned");
+    let (body, tail) = words.split_at(words.len() - 1);
+    if checksum(body) != tail[0] {
+        return None;
+    }
+    // body = [payload_words, key_len, key…, term(3), m, n_pl, placements…]
+    let mut pos = 1;
+    let key_len = *body.get(pos)? as usize;
+    pos += 1;
+    if key_len > body.len() {
+        return None;
+    }
+    let key = body.get(pos..pos + key_len)?.to_vec();
+    pos += key_len;
+    let term = termination_from([*body.get(pos)?, *body.get(pos + 1)?, *body.get(pos + 2)?])?;
+    pos += 3;
+    let m = *body.get(pos)? as usize;
+    let n_pl = *body.get(pos + 1)? as usize;
+    pos += 2;
+    if m == 0 || n_pl > body.len() || body.len() != pos + 4 * n_pl {
+        return None;
+    }
+    let mut schedule = Schedule::new(m);
+    for i in 0..n_pl {
+        let p = &body[pos + 4 * i..pos + 4 * (i + 1)];
+        let (node, core, start, finish) = (p[0] as usize, p[1] as usize, p[2], p[3]);
+        if core >= m || finish < start {
+            return None;
+        }
+        schedule.place_raw(node, core, start, finish);
+    }
+    Some((total, key, CachedSolve { schedule, termination: term }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::paper_example_dag;
+    use crate::util::tempdir::TempDir;
+
+    fn sample_solve(seed: u64) -> CachedSolve {
+        let g = paper_example_dag();
+        let mut s = Schedule::new(2);
+        s.place(&g, 0, 0, seed);
+        s.place(&g, 1, 1, seed + 3);
+        CachedSolve {
+            schedule: s,
+            termination: Termination::BudgetExhausted {
+                nodes: 40 + seed,
+                wall: Duration::from_millis(7),
+            },
+        }
+    }
+
+    fn placements(s: &Schedule) -> Vec<(usize, usize, u64, u64)> {
+        s.iter().map(|p| (p.core, p.node, p.start, p.finish)).collect()
+    }
+
+    #[test]
+    fn record_codec_round_trips() {
+        let solve = sample_solve(5);
+        let key = vec![KEY_VERSION, 1, 2, 3];
+        let bytes = encode_record(&key, &solve);
+        let (consumed, k, back) = decode_record(&bytes).expect("valid record");
+        assert_eq!(consumed, bytes.len());
+        assert_eq!(k, key);
+        assert_eq!(placements(&back.schedule), placements(&solve.schedule));
+        assert_eq!(back.termination, solve.termination);
+        // A single flipped byte is caught by the checksum.
+        let mut bad = bytes.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x40;
+        assert!(decode_record(&bad).is_none());
+    }
+
+    #[test]
+    fn survives_reopen() {
+        let dir = TempDir::new("acetone-persist").unwrap();
+        let key = vec![KEY_VERSION, 9];
+        {
+            let mut store = PersistentStore::open(dir.path());
+            assert!(store.is_empty());
+            store.insert(&key, &sample_solve(1));
+            assert_eq!(store.len(), 1);
+        }
+        let mut store = PersistentStore::open(dir.path());
+        assert_eq!(store.len(), 1);
+        let hit = store.get(&key).expect("persisted entry");
+        assert_eq!(placements(&hit.schedule), placements(&sample_solve(1).schedule));
+        assert_eq!(hit.termination, sample_solve(1).termination);
+        assert_eq!(store.stats().skipped, 0);
+        assert!(store.get(&[KEY_VERSION, 8]).is_none(), "unknown key misses");
+    }
+
+    #[test]
+    fn reopen_without_index_scans_the_log() {
+        let dir = TempDir::new("acetone-persist").unwrap();
+        let key = vec![KEY_VERSION, 1, 2];
+        {
+            let mut store = PersistentStore::open(dir.path());
+            store.insert(&key, &sample_solve(2));
+        }
+        fs::remove_file(dir.path().join("schedules.idx")).unwrap();
+        let mut store = PersistentStore::open(dir.path());
+        assert_eq!(store.len(), 1);
+        assert!(store.get(&key).is_some());
+        // The scan rebuilt the index file.
+        assert!(dir.path().join("schedules.idx").exists());
+    }
+
+    #[test]
+    fn stale_key_version_is_ignored_with_counter() {
+        let dir = TempDir::new("acetone-persist").unwrap();
+        let mut bytes = Vec::new();
+        for w in [MAGIC_BIN, FORMAT_VERSION, KEY_VERSION + 1] {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        fs::write(dir.path().join("schedules.bin"), &bytes).unwrap();
+        let mut store = PersistentStore::open(dir.path());
+        assert_eq!(store.len(), 0);
+        assert_eq!(store.stats().skipped, 1, "stale file counted, not loaded");
+        // The store healed itself and is fully usable.
+        let key = vec![KEY_VERSION, 4];
+        store.insert(&key, &sample_solve(3));
+        assert!(store.get(&key).is_some());
+    }
+
+    #[test]
+    fn corrupt_header_is_ignored_with_counter() {
+        let dir = TempDir::new("acetone-persist").unwrap();
+        fs::write(dir.path().join("schedules.bin"), b"not a schedule store at all").unwrap();
+        let store = PersistentStore::open(dir.path());
+        assert_eq!(store.len(), 0);
+        assert_eq!(store.stats().skipped, 1);
+    }
+
+    #[test]
+    fn torn_tail_is_healed_keeping_the_valid_prefix() {
+        let dir = TempDir::new("acetone-persist").unwrap();
+        let key = vec![KEY_VERSION, 7];
+        {
+            let mut store = PersistentStore::open(dir.path());
+            store.insert(&key, &sample_solve(4));
+        }
+        // Simulate a crash mid-append: garbage after the valid record,
+        // and an index that no longer matches the log length.
+        let bin = dir.path().join("schedules.bin");
+        let mut bytes = fs::read(&bin).unwrap();
+        let good_len = bytes.len();
+        bytes.extend_from_slice(&[0xde, 0xad, 0xbe, 0xef, 0, 0, 0, 0, 1, 2, 3]);
+        fs::write(&bin, &bytes).unwrap();
+        let mut store = PersistentStore::open(dir.path());
+        assert_eq!(store.len(), 1, "valid prefix survives");
+        assert!(store.get(&key).is_some());
+        assert_eq!(store.stats().skipped, 1, "torn tail counted once");
+        assert_eq!(fs::read(&bin).unwrap().len(), good_len, "tail healed away atomically");
+    }
+
+    #[test]
+    fn insert_is_append_only_first_write_wins() {
+        let dir = TempDir::new("acetone-persist").unwrap();
+        let key = vec![KEY_VERSION, 2];
+        let mut store = PersistentStore::open(dir.path());
+        store.insert(&key, &sample_solve(1));
+        let before = store.stats().bin_bytes;
+        store.insert(&key, &sample_solve(9));
+        assert_eq!(store.stats().bin_bytes, before, "duplicate key not re-appended");
+        let hit = store.get(&key).unwrap();
+        assert_eq!(placements(&hit.schedule), placements(&sample_solve(1).schedule));
+    }
+}

@@ -1,0 +1,557 @@
+//! `sched::serve` — batched solving over the portfolio and its
+//! persistent schedule cache.
+//!
+//! One serving tick rarely carries a single scheduling problem: a model
+//! deployment asks for every layer-partition of a zoo entry at once, N
+//! clients ask for the same deployed network, a sweep asks for one DAG
+//! at several core counts. [`BatchSolver::solve_batch`] takes such a
+//! [`BatchRequest`] (many [`SolveRequest`]s) and answers all of them in
+//! one deterministic pass:
+//!
+//! 1. **Dedup** — every request is reduced to its canonical cache key
+//!    ([`Portfolio::request_key`]): the full encoding of the DAG, core
+//!    count and every result-affecting knob. Requests with equal keys
+//!    are the *same problem* and are solved once; the duplicates replay
+//!    the group's report ([`ServeSource::Deduped`]).
+//! 2. **Fan-out over one pool** — the distinct solves run across one
+//!    shared worker pool ([`parallel_map`]): the batch's worker budget
+//!    is split between the outer fan-out and each solve's inner
+//!    portfolio stages, so a batch never multiplies thread counts.
+//!    Worker counts never affect any result (the portfolio guarantee),
+//!    so the split is purely a latency knob.
+//! 3. **Shared incumbent per identical-DAG group** — distinct solves
+//!    over the same `(DAG, m)` (e.g. the same network under different
+//!    node budgets) publish their best makespans to one shared
+//!    [`Incumbent`]. Publishing is one-way by design: *consulting* a
+//!    live cross-request bound would make each solve's explored tree
+//!    depend on its siblings' completion order, and batch determinism
+//!    (below) is worth more in serving than the extra pruning.
+//! 4. **Per-request budgets and cancellation** — each request keeps its
+//!    own [`Budget`](super::Budget) (the node limit is part of the dedup
+//!    key; the wall-clock deadline is not, and a group adopts the most
+//!    permissive deadline among its live clients so one short safety
+//!    valve cannot cut a solve a sibling still wants). A client whose
+//!    [`CancelToken`] is already cancelled at dispatch is answered with
+//!    the serial fallback ([`ServeSource::Cancelled`]) and its group is
+//!    solved only if other clients still want it — a fully-cancelled
+//!    group is abandoned without poisoning the rest of the batch. A
+//!    group whose live clients all share one token clone adopts it, so
+//!    a client that goes away mid-solve aborts exactly its own solve.
+//! 5. **Input-order reports** — [`BatchOutcome::reports`] lines up with
+//!    the input requests, whatever the completion order.
+//!
+//! # Determinism
+//!
+//! For a fixed batch (no cancellations racing the solve), the returned
+//! reports are **byte-identical for any worker count**: dedup order is
+//! input order, every distinct solve is the worker-count-invariant
+//! portfolio, bound sharing is publish-only, and assembly is by index —
+//! pinned by `tests/serve_determinism.rs` at 1/2/8 workers. The
+//! persistent cache composes with this: a batch served from a reused
+//! cache directory replays the same schedules and verdicts byte-for-byte
+//! ([`ServeSource::CacheHit`]).
+
+use super::api::cancelled_fallback;
+use super::portfolio::{
+    parallel_map, resolve_workers, Incumbent, Portfolio, PortfolioConfig, PortfolioReport,
+    TAG_WORDS,
+};
+use super::{CancelToken, SolveReport, SolveRequest};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Many solve requests submitted as one serving batch.
+///
+/// `workers` bounds the *total* worker pool of the batch (outer fan-out
+/// × inner portfolio stages); 0 falls back to the portfolio
+/// configuration's worker resolution.
+#[derive(Debug, Clone, Default)]
+pub struct BatchRequest<'g> {
+    pub requests: Vec<SolveRequest<'g>>,
+    pub workers: usize,
+}
+
+impl<'g> BatchRequest<'g> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_requests(requests: Vec<SolveRequest<'g>>) -> Self {
+        Self { requests, workers: 0 }
+    }
+
+    /// Append one request (builder style).
+    pub fn push(mut self, req: SolveRequest<'g>) -> Self {
+        self.requests.push(req);
+        self
+    }
+
+    /// Bound the batch's total worker pool.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+/// How one request of a batch was answered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeSource {
+    /// First client of its dedup group: the solve actually ran here.
+    Solved,
+    /// First client of its dedup group, answered by the schedule cache
+    /// (in-memory or persistent tier) without any search.
+    CacheHit,
+    /// Duplicate of an earlier request in the batch: replays the group's
+    /// report verbatim (stats included — don't sum them across a batch).
+    Deduped,
+    /// The client's token was already cancelled at dispatch: answered
+    /// with the serial fallback schedule, its group solve untouched.
+    Cancelled,
+}
+
+impl ServeSource {
+    /// One-word rendering for logs and the CLI.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ServeSource::Solved => "solved",
+            ServeSource::CacheHit => "cache-hit",
+            ServeSource::Deduped => "deduped",
+            ServeSource::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// One request's answer: the report plus how it was obtained.
+#[derive(Debug, Clone)]
+pub struct ServedReport {
+    pub report: SolveReport,
+    pub source: ServeSource,
+}
+
+/// Batch-level accounting.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BatchStats {
+    /// Requests in the batch.
+    pub requests: usize,
+    /// Distinct solves dispatched after dedup (cache hits included,
+    /// fully-cancelled groups excluded).
+    pub distinct: usize,
+    /// Requests answered by replaying an earlier group member's report.
+    pub deduped: usize,
+    /// Distinct solves answered by the schedule cache without a search.
+    pub cache_hits: usize,
+    /// Requests already cancelled at dispatch (serial-fallback answers).
+    pub cancelled: usize,
+    /// Identical-`(DAG, m)` groups sharing one incumbent bound.
+    pub dag_groups: usize,
+    /// Wall time of the whole batch.
+    pub wall: Duration,
+}
+
+/// Per-request reports (input order) plus the batch accounting.
+#[derive(Debug, Clone)]
+pub struct BatchOutcome {
+    pub reports: Vec<ServedReport>,
+    pub stats: BatchStats,
+}
+
+/// The batch solving front-end: a [`Portfolio`] (with its schedule
+/// cache, persistent when configured) behind a dedup + fan-out layer.
+/// Construct once per process and reuse — batches share the cache.
+///
+/// ```
+/// use acetone::graph::paper_example_dag;
+/// use acetone::sched::portfolio::PortfolioConfig;
+/// use acetone::sched::serve::{BatchRequest, BatchSolver, ServeSource};
+/// use acetone::sched::SolveRequest;
+///
+/// let g = paper_example_dag();
+/// let server = BatchSolver::new(PortfolioConfig {
+///     root_target: 6,
+///     hybrid_node_limit: Some(200),
+///     ..PortfolioConfig::default()
+/// });
+/// // Three client requests, two of them the same problem.
+/// let batch = BatchRequest::new()
+///     .push(SolveRequest::new(&g, 2).node_limit(500))
+///     .push(SolveRequest::new(&g, 3).node_limit(500))
+///     .push(SolveRequest::new(&g, 2).node_limit(500))
+///     .workers(2);
+/// let out = server.solve_batch(&batch);
+/// assert_eq!(out.reports.len(), 3);
+/// assert_eq!(out.stats.distinct, 2, "the duplicate was deduplicated");
+/// assert_eq!(out.reports[2].source, ServeSource::Deduped);
+/// // Input order is preserved: requests 0 and 2 got the same schedule.
+/// assert_eq!(
+///     out.reports[0].report.schedule.makespan(),
+///     out.reports[2].report.schedule.makespan()
+/// );
+/// ```
+pub struct BatchSolver {
+    portfolio: Portfolio,
+}
+
+impl BatchSolver {
+    /// A solver over a fresh [`Portfolio`] with the given configuration
+    /// (set [`PortfolioConfig::cache_dir`] to serve over a persistent
+    /// schedule cache).
+    pub fn new(cfg: PortfolioConfig) -> Self {
+        Self { portfolio: Portfolio::new(cfg) }
+    }
+
+    /// Wrap an existing portfolio (sharing its warm schedule cache).
+    pub fn with_portfolio(portfolio: Portfolio) -> Self {
+        Self { portfolio }
+    }
+
+    /// The underlying portfolio (e.g. for [`Portfolio::cache_stats`]).
+    pub fn portfolio(&self) -> &Portfolio {
+        &self.portfolio
+    }
+
+    /// Solve a whole batch; see the module docs for the pipeline and the
+    /// determinism contract.
+    pub fn solve_batch(&self, batch: &BatchRequest<'_>) -> BatchOutcome {
+        let t0 = Instant::now();
+        let reqs = &batch.requests;
+        let n = reqs.len();
+        if n == 0 {
+            return BatchOutcome {
+                reports: Vec::new(),
+                stats: BatchStats { wall: t0.elapsed(), ..BatchStats::default() },
+            };
+        }
+
+        // 1. Canonical identity, then dedup groups in first-appearance
+        // order (a pure function of the input batch).
+        let keys: Vec<Vec<u64>> = reqs.iter().map(|r| self.portfolio.request_key(r)).collect();
+        let mut group_of_key: HashMap<&[u64], usize> = HashMap::new();
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        for (i, key) in keys.iter().enumerate() {
+            let g = *group_of_key.entry(key.as_slice()).or_insert_with(|| {
+                groups.push(Vec::new());
+                groups.len() - 1
+            });
+            groups[g].push(i);
+        }
+
+        // 2. One shared incumbent per identical-(DAG, m) group: distinct
+        // solves of the same problem under different knobs publish their
+        // bounds to one place (publish-only — module docs). The problem
+        // identity is the canonical key minus its fixed-length knob tag,
+        // already computed in step 1 — no second walk over each DAG.
+        let mut incumbents: HashMap<&[u64], Arc<Incumbent>> = HashMap::new();
+        let incumbent_of: Vec<Arc<Incumbent>> = groups
+            .iter()
+            .map(|members| {
+                incumbents
+                    .entry(&keys[members[0]][TAG_WORDS..])
+                    .or_insert_with(|| Arc::new(Incumbent::new(u64::MAX)))
+                    .clone()
+            })
+            .collect();
+        let dag_groups = incumbents.len();
+
+        // 3. Dispatch plan per group: which clients are still live, the
+        // effective deadline (most permissive among live clients), and
+        // the group token (only when every live client shares one flag).
+        struct Plan {
+            live: Vec<usize>,
+            deadline: Option<Duration>,
+            cancel: Option<CancelToken>,
+        }
+        let plans: Vec<Plan> = groups
+            .iter()
+            .map(|members| {
+                let live: Vec<usize> =
+                    members.iter().copied().filter(|&i| !reqs[i].is_cancelled()).collect();
+                let deadline = group_deadline(reqs, &live);
+                let cancel = shared_token(live.iter().map(|&i| reqs[i].cancel.as_ref()));
+                Plan { live, deadline, cancel }
+            })
+            .collect();
+        let to_solve = plans.iter().filter(|p| !p.live.is_empty()).count();
+
+        // 4. Fan the distinct solves out over one pool, splitting the
+        // worker budget between the fan-out and each solve's stages.
+        let pool = if batch.workers > 0 { batch.workers } else { self.portfolio.cfg.workers };
+        let outer = resolve_workers(pool);
+        let inner = (outer / to_solve.max(1)).max(1);
+        let results: Vec<Option<PortfolioReport>> = parallel_map(outer, plans.len(), |u| {
+            let plan = &plans[u];
+            // A fully-cancelled group is abandoned: no one wants it.
+            let rep = *plan.live.first()?;
+            let mut child = reqs[rep].clone();
+            child.budget.deadline = plan.deadline;
+            child.cancel = plan.cancel.clone();
+            if child.incumbent.is_none() {
+                child.incumbent = Some(incumbent_of[u].clone());
+            }
+            child.portfolio.workers = Some(inner);
+            Some(self.portfolio.solve_request(&child))
+        });
+
+        // 5. Assemble the answers back into input order.
+        let mut reports: Vec<Option<ServedReport>> = (0..n).map(|_| None).collect();
+        let mut stats = BatchStats {
+            requests: n,
+            distinct: to_solve,
+            dag_groups,
+            ..BatchStats::default()
+        };
+        for (u, members) in groups.iter().enumerate() {
+            let mut first_live = true;
+            for &i in members {
+                let served = if !plans[u].live.contains(&i) {
+                    stats.cancelled += 1;
+                    ServedReport {
+                        report: cancelled_fallback(&reqs[i], t0, 0),
+                        source: ServeSource::Cancelled,
+                    }
+                } else {
+                    let pr = results[u].as_ref().expect("live group was solved");
+                    // Every solve exit path publishes to the request's
+                    // incumbent (the api.rs contract) — including clients
+                    // answered by dedup, whose own request the portfolio
+                    // never saw. The group incumbent gets the bound too
+                    // (the solve published there only when the
+                    // representative carried no incumbent of its own).
+                    let ms = pr.report.schedule.makespan();
+                    if let Some(inc) = &reqs[i].incumbent {
+                        inc.offer(ms);
+                    }
+                    incumbent_of[u].offer(ms);
+                    let source = if first_live {
+                        first_live = false;
+                        if pr.from_cache {
+                            stats.cache_hits += 1;
+                            ServeSource::CacheHit
+                        } else {
+                            ServeSource::Solved
+                        }
+                    } else {
+                        stats.deduped += 1;
+                        ServeSource::Deduped
+                    };
+                    ServedReport { report: pr.report.clone(), source }
+                };
+                reports[i] = Some(served);
+            }
+        }
+        stats.wall = t0.elapsed();
+        BatchOutcome {
+            reports: reports.into_iter().map(|r| r.expect("every request answered")).collect(),
+            stats,
+        }
+    }
+}
+
+/// Effective deadline of a group solve: the most permissive among the
+/// live clients (`None` — no valve at all — once any client is
+/// unbounded). A shorter sibling valve must never cut a solve another
+/// client still wants.
+fn group_deadline(reqs: &[SolveRequest<'_>], live: &[usize]) -> Option<Duration> {
+    let mut max = Duration::ZERO;
+    for &i in live {
+        max = max.max(reqs[i].budget.deadline?);
+    }
+    Some(max)
+}
+
+/// The single token shared by every live client of a group, if there is
+/// one: `Some` only when each client handed in a clone of the same flag.
+fn shared_token<'a>(
+    mut tokens: impl Iterator<Item = Option<&'a CancelToken>>,
+) -> Option<CancelToken> {
+    let first = tokens.next()??.clone();
+    for t in tokens {
+        if !t.map_or(false, |t| t.same_flag(&first)) {
+            return None;
+        }
+    }
+    Some(first)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::daggen::{generate, DagGenConfig};
+    use crate::graph::{paper_example_dag, Cycles};
+    use crate::sched::{check_valid, Schedule, Termination};
+
+    fn quick_cfg() -> PortfolioConfig {
+        PortfolioConfig {
+            root_target: 6,
+            hybrid_node_limit: Some(200),
+            exact_timeout: Duration::from_secs(120),
+            ..PortfolioConfig::default()
+        }
+    }
+
+    fn placements(s: &Schedule) -> Vec<(usize, usize, Cycles, Cycles)> {
+        s.iter().map(|p| (p.core, p.node, p.start, p.finish)).collect()
+    }
+
+    #[test]
+    fn dedups_identical_requests_and_preserves_input_order() {
+        let g = paper_example_dag();
+        let h = generate(&DagGenConfig::paper(20), 3);
+        let server = BatchSolver::new(quick_cfg());
+        let batch = BatchRequest::new()
+            .push(SolveRequest::new(&g, 2).node_limit(300))
+            .push(SolveRequest::new(&h, 4).node_limit(300))
+            .push(SolveRequest::new(&g, 2).node_limit(300))
+            .push(SolveRequest::new(&g, 2).node_limit(300))
+            .workers(2);
+        let out = server.solve_batch(&batch);
+        assert_eq!(out.reports.len(), 4);
+        assert_eq!(out.stats.distinct, 2);
+        assert_eq!(out.stats.deduped, 2);
+        assert_eq!(out.stats.dag_groups, 2);
+        assert_eq!(out.reports[0].source, ServeSource::Solved);
+        assert_eq!(out.reports[1].source, ServeSource::Solved);
+        assert_eq!(out.reports[2].source, ServeSource::Deduped);
+        assert_eq!(out.reports[3].source, ServeSource::Deduped);
+        // Duplicates replay the group result byte-for-byte.
+        for i in [2, 3] {
+            assert_eq!(
+                placements(&out.reports[i].report.schedule),
+                placements(&out.reports[0].report.schedule)
+            );
+            assert_eq!(out.reports[i].report.termination, out.reports[0].report.termination);
+        }
+        // Request 1 is a different DAG: its schedule covers h, not g.
+        assert_eq!(check_valid(&h, &out.reports[1].report.schedule), Ok(()));
+    }
+
+    #[test]
+    fn second_batch_is_served_from_the_cache() {
+        let g = paper_example_dag();
+        let server = BatchSolver::new(quick_cfg());
+        let batch = BatchRequest::from_requests(vec![SolveRequest::new(&g, 2).node_limit(300)]);
+        let first = server.solve_batch(&batch);
+        assert_eq!(first.reports[0].source, ServeSource::Solved);
+        let second = server.solve_batch(&batch);
+        assert_eq!(second.reports[0].source, ServeSource::CacheHit);
+        assert_eq!(second.stats.cache_hits, 1);
+        assert_eq!(
+            placements(&second.reports[0].report.schedule),
+            placements(&first.reports[0].report.schedule)
+        );
+        assert_eq!(
+            second.reports[0].report.termination,
+            first.reports[0].report.termination,
+            "a cache hit replays the verdict"
+        );
+    }
+
+    #[test]
+    fn cancelled_client_gets_fallback_without_poisoning_the_batch() {
+        let g = paper_example_dag();
+        let h = generate(&DagGenConfig::paper(15), 5);
+        let server = BatchSolver::new(quick_cfg());
+        let token = CancelToken::new();
+        token.cancel();
+        let batch = BatchRequest::new()
+            .push(SolveRequest::new(&g, 2).node_limit(300).cancel(token.clone()))
+            .push(SolveRequest::new(&h, 3).node_limit(300));
+        let out = server.solve_batch(&batch);
+        assert_eq!(out.reports[0].source, ServeSource::Cancelled);
+        assert_eq!(out.reports[0].report.termination, Termination::Cancelled);
+        assert_eq!(check_valid(&g, &out.reports[0].report.schedule), Ok(()));
+        // The sibling request is completely unaffected.
+        assert_eq!(out.reports[1].source, ServeSource::Solved);
+        assert_ne!(out.reports[1].report.termination, Termination::Cancelled);
+        assert_eq!(out.stats.cancelled, 1);
+        assert_eq!(out.stats.distinct, 1, "the cancelled group was abandoned");
+        // An abandoned solve is never cached: a later live request for
+        // the same problem really solves.
+        let req = SolveRequest::new(&g, 2).node_limit(300);
+        let retry = server.solve_batch(&BatchRequest::from_requests(vec![req]));
+        assert_eq!(retry.reports[0].source, ServeSource::Solved);
+    }
+
+    #[test]
+    fn cancelled_duplicate_leaves_live_duplicate_solving() {
+        // Two clients for the same problem, one already gone at dispatch:
+        // the group still solves for the live one, and the dead one gets
+        // the fallback.
+        let g = paper_example_dag();
+        let server = BatchSolver::new(quick_cfg());
+        let token = CancelToken::new();
+        token.cancel();
+        let batch = BatchRequest::new()
+            .push(SolveRequest::new(&g, 2).node_limit(300).cancel(token))
+            .push(SolveRequest::new(&g, 2).node_limit(300));
+        let out = server.solve_batch(&batch);
+        assert_eq!(out.reports[0].source, ServeSource::Cancelled);
+        assert_eq!(out.reports[1].source, ServeSource::Solved);
+        assert_ne!(out.reports[1].report.termination, Termination::Cancelled);
+        assert_eq!(out.stats.distinct, 1);
+        assert_eq!(out.stats.deduped, 0, "the dead client is not a dedup answer");
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let server = BatchSolver::new(quick_cfg());
+        let out = server.solve_batch(&BatchRequest::new());
+        assert!(out.reports.is_empty());
+        assert_eq!(out.stats.requests, 0);
+        assert_eq!(out.stats.distinct, 0);
+    }
+
+    #[test]
+    fn mixed_core_counts_share_one_dag_group() {
+        // Same DAG at m=2 and m=3: two distinct solves, two DAG groups
+        // (m is part of the problem identity), plus one at a different
+        // node budget sharing the (g, 2) group.
+        let g = paper_example_dag();
+        let server = BatchSolver::new(quick_cfg());
+        let batch = BatchRequest::new()
+            .push(SolveRequest::new(&g, 2).node_limit(300))
+            .push(SolveRequest::new(&g, 3).node_limit(300))
+            .push(SolveRequest::new(&g, 2).node_limit(50));
+        let out = server.solve_batch(&batch);
+        assert_eq!(out.stats.distinct, 3, "different budgets are different solves");
+        assert_eq!(out.stats.dag_groups, 2, "(g,2) solves share one incumbent group");
+        for r in &out.reports {
+            assert_eq!(check_valid(&g, &r.report.schedule), Ok(()));
+        }
+    }
+
+    #[test]
+    fn every_live_client_incumbent_receives_the_bound() {
+        // A deduplicated client's own incumbent must still see the solved
+        // bound (the api.rs "every exit path publishes" contract), even
+        // though the portfolio only ever saw the group representative.
+        let g = paper_example_dag();
+        let server = BatchSolver::new(quick_cfg());
+        let inc = Arc::new(Incumbent::new(u64::MAX));
+        let batch = BatchRequest::new()
+            .push(SolveRequest::new(&g, 2).node_limit(300))
+            .push(SolveRequest::new(&g, 2).node_limit(300).incumbent(inc.clone()));
+        let out = server.solve_batch(&batch);
+        assert_eq!(out.reports[1].source, ServeSource::Deduped);
+        assert_eq!(inc.bound(), out.reports[1].report.schedule.makespan());
+    }
+
+    #[test]
+    fn shared_token_requires_one_flag_across_all_clients() {
+        let a = CancelToken::new();
+        let b = CancelToken::new();
+        assert!(shared_token([Some(&a), Some(&a.clone())].into_iter()).is_some());
+        assert!(shared_token([Some(&a), Some(&b)].into_iter()).is_none());
+        assert!(shared_token([Some(&a), None].into_iter()).is_none());
+        assert!(shared_token([None::<&CancelToken>].into_iter()).is_none());
+        assert!(shared_token(std::iter::empty()).is_none());
+    }
+}

@@ -178,6 +178,9 @@ pub fn prune_redundant(g: &Dag, s: &mut Schedule) -> usize {
 }
 
 #[cfg(test)]
+// These tests pin the deprecated legacy entry points byte-identically
+// until the parity suites retire them.
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::graph::Dag;

@@ -270,6 +270,9 @@ pub fn replay_machine() -> Machine {
 }
 
 #[cfg(test)]
+// These tests pin the deprecated legacy entry points byte-identically
+// until the parity suites retire them.
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::graph::paper_example_dag;

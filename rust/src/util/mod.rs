@@ -1,9 +1,10 @@
 //! In-house substrates replacing unavailable crates (offline build):
 //! a deterministic PRNG (shared bit-for-bit with the Python compile path
 //! for weight generation), a minimal JSON reader/writer, a micro bench
-//! harness, and a tiny property-testing loop.
+//! harness, a tiny property-testing loop, and scoped temp directories.
 
 pub mod bench;
 pub mod json;
 pub mod proptest;
 pub mod rng;
+pub mod tempdir;

@@ -1,0 +1,67 @@
+//! Scoped temporary directories (the offline registry has no `tempfile`).
+//!
+//! Used by the persistent schedule-cache tests and doctests: create a
+//! unique directory under the system temp root, hand out its path, and
+//! remove the whole tree on drop. Uniqueness comes from the process id
+//! plus a process-local counter, so concurrent test binaries (and
+//! concurrent tests within one binary) never collide.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A directory under `std::env::temp_dir()` that is deleted on drop.
+///
+/// ```
+/// use acetone::util::tempdir::TempDir;
+/// let dir = TempDir::new("acetone-doc").unwrap();
+/// std::fs::write(dir.path().join("x.txt"), "hello").unwrap();
+/// assert!(dir.path().join("x.txt").exists());
+/// ```
+#[derive(Debug)]
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    /// Create a fresh `"{prefix}-{pid}-{n}"` directory in the temp root.
+    pub fn new(prefix: &str) -> std::io::Result<Self> {
+        let id = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let pid = std::process::id();
+        let path = std::env::temp_dir().join(format!("{prefix}-{pid}-{id}"));
+        // A leftover from a crashed previous run with the same pid is
+        // stale by definition: clear it so the directory starts empty.
+        let _ = std::fs::remove_dir_all(&path);
+        std::fs::create_dir_all(&path)?;
+        Ok(Self { path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn creates_unique_dirs_and_cleans_up() {
+        let a = TempDir::new("acetone-test").unwrap();
+        let b = TempDir::new("acetone-test").unwrap();
+        assert_ne!(a.path(), b.path());
+        assert!(a.path().is_dir());
+        let kept = a.path().to_path_buf();
+        std::fs::write(kept.join("f"), "x").unwrap();
+        drop(a);
+        assert!(!kept.exists(), "dropped TempDir removes its tree");
+        assert!(b.path().is_dir());
+    }
+}

@@ -195,6 +195,9 @@ pub fn serial_global(g: &Dag) -> Cycles {
 }
 
 #[cfg(test)]
+// These tests pin the deprecated legacy entry points byte-identically
+// until the parity suites retire them.
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::nn::zoo::{googlenet, Scale};

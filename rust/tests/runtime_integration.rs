@@ -1,3 +1,8 @@
+// The legacy pre-request entry points exercised below are deprecated in
+// favor of SolveRequest/Scheduler::solve; this suite deliberately keeps
+// pinning them byte-identically until they are retired together.
+#![allow(deprecated)]
+
 //! PJRT runtime integration: artifacts load, the full-model artifact
 //! matches the Rust oracle, and the parallel flag-protocol engine matches
 //! the full-model artifact. Skipped (with a message) until

@@ -1,3 +1,8 @@
+// The legacy pre-request entry points exercised below are deprecated in
+// favor of SolveRequest/Scheduler::solve; this suite deliberately keeps
+// pinning them byte-identically until they are retired together.
+#![allow(deprecated)]
+
 //! Cross-solver integration over the §4.1 random-DAG workload.
 
 use acetone::daggen::{generate, DagGenConfig};

@@ -1,0 +1,149 @@
+//! Determinism pins for `sched::serve`, the batched solving front-end.
+//!
+//! * **Worker-count byte-parity**: a batch containing duplicate requests
+//!   over `paper(50)` seeds 1–3 (deterministic node budgets) must return
+//!   byte-identical per-request reports — schedule placements, verdict,
+//!   explored counts, dedup sources — for 1, 2 and 8 workers.
+//! * **Cold-start cache reuse**: a fresh `BatchSolver` over the same
+//!   `--cache-dir` answers every distinct request from the persistent
+//!   cache, replaying schedules *and* verdicts byte-for-byte.
+//!
+//! Like the portfolio suite, these run under the default libtest thread
+//! pool so worker threads race for real.
+
+use acetone::daggen::{generate, DagGenConfig};
+use acetone::graph::{paper_example_dag, Cycles, Dag};
+use acetone::sched::portfolio::PortfolioConfig;
+use acetone::sched::serve::{BatchOutcome, BatchRequest, BatchSolver, ServeSource};
+use acetone::sched::{check_valid, Schedule, SolveRequest, Termination};
+use acetone::util::tempdir::TempDir;
+
+fn cfg() -> PortfolioConfig {
+    PortfolioConfig { root_target: 6, hybrid_node_limit: Some(400), ..PortfolioConfig::default() }
+}
+
+/// Everything that must be byte-identical across worker counts for one
+/// request: the verdict kind (+ its deterministic node count), the full
+/// placement list, and the deterministic search counters. Wall-clock
+/// fields are excluded — they are the one legitimately varying part.
+type ReportSig = (u8, u64, Vec<(usize, usize, Cycles, Cycles)>, u64, &'static str);
+
+fn verdict_sig(t: &Termination) -> (u8, u64) {
+    match t {
+        Termination::ProvenOptimal => (0, 0),
+        Termination::HeuristicComplete => (1, 0),
+        Termination::BudgetExhausted { nodes, .. } => (2, *nodes),
+        Termination::Cancelled => (3, 0),
+    }
+}
+
+fn placements(s: &Schedule) -> Vec<(usize, usize, Cycles, Cycles)> {
+    s.iter().map(|p| (p.core, p.node, p.start, p.finish)).collect()
+}
+
+fn signatures(out: &BatchOutcome) -> Vec<ReportSig> {
+    out.reports
+        .iter()
+        .map(|r| {
+            let (kind, nodes) = verdict_sig(&r.report.termination);
+            (
+                kind,
+                nodes,
+                placements(&r.report.schedule),
+                r.report.stats.explored,
+                r.source.as_str(),
+            )
+        })
+        .collect()
+}
+
+/// The pinned batch: three distinct `paper(50)` problems under a
+/// deterministic 200-node/root budget, with duplicates interleaved.
+fn paper50_batch(dags: &[Dag]) -> BatchRequest<'_> {
+    let mut batch = BatchRequest::new();
+    for &i in &[0usize, 1, 2, 0, 1, 0] {
+        batch = batch.push(SolveRequest::new(&dags[i], 4).node_limit(200));
+    }
+    batch
+}
+
+#[test]
+fn paper50_batch_byte_identical_for_1_2_8_workers() {
+    let dags: Vec<Dag> = (1..=3u64).map(|s| generate(&DagGenConfig::paper(50), s)).collect();
+    let base = BatchSolver::new(cfg()).solve_batch(&paper50_batch(&dags).workers(1));
+    assert_eq!(base.stats.requests, 6);
+    assert_eq!(base.stats.distinct, 3);
+    assert_eq!(base.stats.deduped, 3);
+    for (i, r) in base.reports.iter().enumerate() {
+        let g = &dags[[0usize, 1, 2, 0, 1, 0][i]];
+        assert_eq!(check_valid(g, &r.report.schedule), Ok(()), "request {i}");
+    }
+    let base_sigs = signatures(&base);
+    for workers in [2, 8] {
+        let out = BatchSolver::new(cfg()).solve_batch(&paper50_batch(&dags).workers(workers));
+        assert_eq!(signatures(&out), base_sigs, "workers={workers}");
+        assert_eq!(stats_no_wall(&out), stats_no_wall(&base), "workers={workers}");
+    }
+}
+
+/// `BatchStats` minus the wall clock (the one legitimately varying
+/// field), for cross-run comparison.
+fn stats_no_wall(out: &BatchOutcome) -> (usize, usize, usize, usize, usize, usize) {
+    let s = out.stats;
+    (s.requests, s.distinct, s.deduped, s.cache_hits, s.cancelled, s.dag_groups)
+}
+
+#[test]
+fn full_exact_batch_byte_identical_for_1_2_8_workers() {
+    // The paper example solves to proven optimality: the batch must
+    // replay the identical optimal schedule and verdict at any worker
+    // count, duplicates included.
+    let g = paper_example_dag();
+    let make = || {
+        BatchRequest::new()
+            .push(SolveRequest::new(&g, 2))
+            .push(SolveRequest::new(&g, 3))
+            .push(SolveRequest::new(&g, 2))
+    };
+    let base = BatchSolver::new(cfg()).solve_batch(&make().workers(1));
+    assert!(base.reports[0].report.proven_optimal());
+    assert_eq!(base.reports[2].source, ServeSource::Deduped);
+    let base_sigs = signatures(&base);
+    for workers in [2, 8] {
+        let out = BatchSolver::new(cfg()).solve_batch(&make().workers(workers));
+        assert_eq!(signatures(&out), base_sigs, "workers={workers}");
+    }
+}
+
+#[test]
+fn cold_start_over_cache_dir_replays_schedules_and_verdicts() {
+    let dags: Vec<Dag> = (1..=3u64).map(|s| generate(&DagGenConfig::paper(50), s)).collect();
+    let dir = TempDir::new("acetone-serve-cache").unwrap();
+    let with_dir = || PortfolioConfig { cache_dir: Some(dir.path().to_path_buf()), ..cfg() };
+
+    let warm = BatchSolver::new(with_dir()).solve_batch(&paper50_batch(&dags).workers(2));
+    assert_eq!(warm.stats.cache_hits, 0, "first pass really solves");
+    assert_eq!(warm.stats.distinct, 3);
+
+    // A fresh solver over the same directory simulates a process
+    // restart: empty L1, warm persistent L2.
+    let cold = BatchSolver::new(with_dir());
+    let replay = cold.solve_batch(&paper50_batch(&dags).workers(2));
+    assert_eq!(replay.stats.cache_hits, 3, "every distinct solve is a cache hit");
+    for (i, (a, b)) in warm.reports.iter().zip(&replay.reports).enumerate() {
+        assert_eq!(
+            placements(&a.report.schedule),
+            placements(&b.report.schedule),
+            "request {i}: identical bytes across the restart"
+        );
+        assert_eq!(a.report.termination, b.report.termination, "request {i}: verdict replayed");
+    }
+    // The first member of each group is a CacheHit, duplicates dedup.
+    assert_eq!(replay.reports[0].source, ServeSource::CacheHit);
+    assert_eq!(replay.reports[3].source, ServeSource::Deduped);
+    let stats = cold.portfolio().cache_stats();
+    assert_eq!(stats.l2_hits, 3, "hits came from the persistent tier");
+    assert_eq!(stats.skipped, 0);
+    // A hit replays with zero search work.
+    assert_eq!(replay.reports[0].report.stats.explored, 0);
+}
