@@ -13,7 +13,10 @@ use acetone::sched::cp::CpSolver;
 use acetone::sched::dsh::Dsh;
 use acetone::sched::portfolio::{Portfolio, PortfolioConfig};
 use acetone::sched::serve::{BatchRequest, BatchSolver};
-use acetone::sched::{check_valid, derive_programs, prune_redundant, Scheduler, SolveRequest};
+use acetone::sched::{
+    check_valid, derive_programs, prune_redundant, Scheduler, SearchOptions, SolveReport,
+    SolveRequest,
+};
 use acetone::sim::{replay_machine, simulate};
 use acetone::util::bench::{bench, write_json, BenchStats};
 use std::time::Duration;
@@ -67,6 +70,39 @@ fn main() {
     let bnb_deep = ChouChung::default();
     record(bench("bnb n=30 m=4 (20k-node budget)", 1, 5, || {
         bnb_deep.solve(&SolveRequest::new(&g30, 4).node_limit(20_000)).schedule.makespan()
+    }));
+
+    // Hard instances, conflict-driven learning off vs on, under the same
+    // fixed node budget — the walls are comparable (same worst-case node
+    // count) and the SearchStats comparison printed after the table
+    // shows what the no-goods bought machine-independently: fewer
+    // explored nodes when a side exhausts early, a better incumbent at
+    // the cut otherwise.
+    let g40 = generate(&DagGenConfig::paper(40), 5);
+    let mut g40s = g40.clone();
+    acetone::graph::ensure_single_sink(&mut g40s);
+    let learn = SearchOptions {
+        nogood_capacity: Some(1 << 12),
+        restarts: Some(true),
+        activity: Some(true),
+    };
+    let cp_hard = CpSolver::improved();
+    let cp_off = SolveRequest::new(&g40s, 6).node_limit(10_000);
+    let cp_on = SolveRequest::new(&g40s, 6).node_limit(10_000).search(learn.clone());
+    record(bench("cp n=40 m=6 (10k budget, learn-off)", 1, 5, || {
+        Scheduler::solve(&cp_hard, &cp_off).schedule.makespan()
+    }));
+    record(bench("cp n=40 m=6 (10k budget, learn-on)", 1, 5, || {
+        Scheduler::solve(&cp_hard, &cp_on).schedule.makespan()
+    }));
+    let bnb_hard = ChouChung::default();
+    let bnb_off = SolveRequest::new(&g40, 6).node_limit(30_000);
+    let bnb_on = SolveRequest::new(&g40, 6).node_limit(30_000).search(learn.clone());
+    record(bench("bnb n=40 m=6 (30k budget, learn-off)", 1, 5, || {
+        bnb_hard.solve(&bnb_off).schedule.makespan()
+    }));
+    record(bench("bnb n=40 m=6 (30k budget, learn-on)", 1, 5, || {
+        bnb_hard.solve(&bnb_on).schedule.makespan()
     }));
 
     // Parallel portfolio: heuristic race + multi-root exact stages with a
@@ -130,6 +166,34 @@ fn main() {
         let mut s = sched.clone();
         prune_redundant(&g100, &mut s)
     }));
+
+    // Machine-independent learning effect: one solve per side, reported
+    // from SearchStats rather than wall clock.
+    println!("\n# learning effect on the hard instances (SearchStats)\n");
+    let learn_line = |label: &str, off: &SolveReport, on: &SolveReport| {
+        let fewer = 100.0 * (1.0 - on.stats.explored as f64 / off.stats.explored.max(1) as f64);
+        println!(
+            "{label}: learn-off explored={} makespan={} | learn-on explored={} \
+             ({fewer:+.1}% fewer) makespan={} nogoods={} hits={} restarts={}",
+            off.stats.explored,
+            off.schedule.makespan(),
+            on.stats.explored,
+            on.schedule.makespan(),
+            on.stats.nogoods_recorded,
+            on.stats.nogood_hits,
+            on.stats.restarts,
+        );
+    };
+    learn_line(
+        "cp  n=40 m=6 @10k",
+        &Scheduler::solve(&cp_hard, &cp_off),
+        &Scheduler::solve(&cp_hard, &cp_on),
+    );
+    learn_line(
+        "bnb n=40 m=6 @30k",
+        &bnb_hard.solve(&bnb_off),
+        &bnb_hard.solve(&bnb_on),
+    );
 
     let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
     match write_json(out, "hotpath", &all) {

@@ -27,6 +27,15 @@ struct CaseCmp {
     /// fresh / base (>1 = slower than baseline).
     ratio: f64,
     regressed: bool,
+    /// Mean dropped past the symmetric margin (ratio < 1/max_ratio):
+    /// reported so wins are as visible in CI logs as losses, and a
+    /// stale baseline hiding headroom gets noticed and re-seeded.
+    improved: bool,
+}
+
+/// Signed mean delta in percent (+ = slower than baseline).
+fn delta_pct(ratio: f64) -> f64 {
+    (ratio - 1.0) * 100.0
 }
 
 /// Extract `name → mean_ns` from a bench report (`{"bench":…, "cases":[…]}`).
@@ -66,6 +75,7 @@ fn compare(baseline: &Json, fresh: &Json, max_ratio: f64) -> Result<Vec<CaseCmp>
                 fresh_mean_ns: *fresh_mean,
                 ratio,
                 regressed: ratio > max_ratio,
+                improved: ratio < 1.0 / max_ratio,
             });
         }
     }
@@ -109,17 +119,31 @@ fn run(baseline_path: &str, fresh_path: &str, max_ratio: f64) -> Result<bool, St
     );
     let mut ok = true;
     for c in &cmps {
-        let verdict = if c.regressed { "REGRESSED" } else { "ok" };
+        let verdict = if c.regressed {
+            "REGRESSED"
+        } else if c.improved {
+            "improved"
+        } else {
+            "ok"
+        };
         println!(
-            "  {:<44} base={:>10} fresh={:>10} ratio={:>5.2} {}",
+            "  {:<44} base={:>10} fresh={:>10} Δmean={:>+7.1}% {}",
             c.name,
             fmt_ns(c.base_mean_ns),
             fmt_ns(c.fresh_mean_ns),
-            c.ratio,
+            delta_pct(c.ratio),
             verdict
         );
         ok &= !c.regressed;
     }
+    let improved = cmps.iter().filter(|c| c.improved).count();
+    let regressed = cmps.iter().filter(|c| c.regressed).count();
+    let mean_delta = cmps.iter().map(|c| delta_pct(c.ratio)).sum::<f64>() / cmps.len() as f64;
+    println!(
+        "\n  summary: {improved} improved, {regressed} regressed, {} within noise; \
+         mean Δ over shared cases {mean_delta:+.1}%",
+        cmps.len() - improved - regressed
+    );
     let fresh_names = case_means(&fresh)?;
     for (name, _) in case_means(&baseline)? {
         if !fresh_names.iter().any(|(n, _)| *n == name) {
@@ -197,13 +221,23 @@ mod tests {
 
     #[test]
     fn flags_only_cases_past_threshold() {
-        let base = report(&[("a", 100.0), ("b", 100.0), ("c", 100.0)]);
-        let fresh = report(&[("a", 120.0), ("b", 130.0), ("c", 90.0)]);
+        let base = report(&[("a", 100.0), ("b", 100.0), ("c", 100.0), ("d", 100.0)]);
+        let fresh = report(&[("a", 120.0), ("b", 130.0), ("c", 90.0), ("d", 70.0)]);
         let cmps = compare(&base, &fresh, 1.25).expect("comparable");
-        assert_eq!(cmps.len(), 3);
+        assert_eq!(cmps.len(), 4);
         assert!(!cmps[0].regressed, "20% is under the 25% threshold");
         assert!(cmps[1].regressed, "30% is over");
         assert!(!cmps[2].regressed, "improvements never fail");
+        assert!(!cmps[2].improved, "-10% is inside the symmetric noise margin");
+        assert!(cmps[3].improved, "-30% is a reportable improvement");
+        assert!(!cmps[3].regressed);
+    }
+
+    #[test]
+    fn deltas_are_signed_percentages() {
+        assert!((delta_pct(1.30) - 30.0).abs() < 1e-9);
+        assert!((delta_pct(0.70) + 30.0).abs() < 1e-9);
+        assert_eq!(delta_pct(1.0), 0.0);
     }
 
     #[test]

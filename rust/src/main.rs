@@ -23,7 +23,7 @@ use acetone::sched::portfolio::PortfolioConfig;
 use acetone::sched::serve::{BatchRequest, BatchSolver};
 use acetone::sched::{
     bnb::ChouChung, cp::CpSolver, dsh::Dsh, hlfet::Hlfet, hybrid::Hybrid, ish::Ish,
-    portfolio::Portfolio, Budget, Scheduler, SolveRequest, Termination,
+    portfolio::Portfolio, Budget, Scheduler, SearchOptions, SolveRequest, Termination,
 };
 use acetone::util::json::Json;
 use acetone::wcet::CostModel;
@@ -57,14 +57,16 @@ run --model M --cores C [--artifacts DIR] [--algo A] [--timeout S] [--node-limit
 codegen --model M --cores C --out DIR [--algo A] [--timeout S] [--node-limit N]
     emit the ACETONE-style parallel C project
 serve --requests FILE.jsonl [--cores C] [--workers W] [--cache-dir DIR]
-      [--timeout S] [--node-limit N]
+      [--timeout S] [--node-limit N] [--nogood-capacity K]
     batch-solve a JSONL request stream through the portfolio: requests
     are deduplicated by canonical key, fanned out over one worker pool
     and answered in input order; with --cache-dir, solved schedules
     (verdicts included) persist across processes. Each line is one JSON
     object using the schedule flags as keys: {\"model\": \"lenet5\"} or
     {\"nodes\": 50, \"seed\": 1, \"density\": 0.1}, plus optional
-    \"cores\", \"node-limit\", \"timeout\" overriding the CLI defaults.
+    \"cores\", \"node-limit\", \"timeout\", \"nogood-capacity\"
+    overriding the CLI defaults (a no-good capacity > 0 turns on
+    conflict-driven learning in the exact stages for that request).
 dag --nodes N [--seed S] [--density D]
     generate a §4.1 random DAG (DOT output)
 ";
@@ -250,6 +252,16 @@ fn schedule_cmd(opts: &Opts) -> Result<()> {
     for stage in &r.stats.stages {
         println!("  stage {:<16} wall={:?} explored={}", stage.name, stage.wall, stage.explored);
     }
+    if r.stats.nogoods_recorded > 0 || r.stats.restarts > 0 {
+        println!(
+            "  learning: nogoods={} hits={} flushes={} restarts={} max-depth={}",
+            r.stats.nogoods_recorded,
+            r.stats.nogood_hits,
+            r.stats.nogood_flushes,
+            r.stats.restarts,
+            r.stats.max_depth
+        );
+    }
     if g.n() <= 64 && g.total_wcet() <= 512 {
         println!("{}", r.schedule.gantt(&g));
     }
@@ -385,6 +397,9 @@ struct ServeSpec {
     g: acetone::graph::Dag,
     m: usize,
     budget: Budget,
+    /// `nogood-capacity` key: a capacity > 0 turns on conflict-driven
+    /// learning in the exact stages for this request.
+    nogood_capacity: Option<u64>,
 }
 
 /// A non-negative integer field of a serve request line. Fractional or
@@ -409,6 +424,7 @@ fn parse_serve_stream(text: &str, opts: &Opts) -> Result<Vec<ServeSpec>> {
     let default_cores = opts.usize("cores", 4)?;
     let default_timeout = opts.u64("timeout", 10)?;
     let default_node_limit: Option<u64> = opts.opt_parsed("node-limit")?;
+    let default_nogood_capacity: Option<u64> = opts.opt_parsed("nogood-capacity")?;
     let mut specs = Vec::new();
     for (lineno, raw) in text.lines().enumerate() {
         let line = raw.trim();
@@ -444,7 +460,9 @@ fn parse_serve_stream(text: &str, opts: &Opts) -> Result<Vec<ServeSpec>> {
             )),
             node_limit: json_u64(&v, "node-limit", lineno)?.or(default_node_limit),
         };
-        specs.push(ServeSpec { g, m, budget });
+        let nogood_capacity =
+            json_u64(&v, "nogood-capacity", lineno)?.or(default_nogood_capacity);
+        specs.push(ServeSpec { g, m, budget, nogood_capacity });
     }
     Ok(specs)
 }
@@ -466,17 +484,25 @@ fn serve_cmd(opts: &Opts) -> Result<()> {
     let server = BatchSolver::new(cfg);
     let mut batch = BatchRequest::new().workers(workers);
     for spec in &specs {
-        batch = batch.push(SolveRequest::new(&spec.g, spec.m).budget(spec.budget.clone()));
+        let mut req = SolveRequest::new(&spec.g, spec.m).budget(spec.budget.clone());
+        if let Some(cap) = spec.nogood_capacity {
+            req = req.search(SearchOptions {
+                nogood_capacity: Some(cap as usize),
+                ..SearchOptions::default()
+            });
+        }
+        batch = batch.push(req);
     }
     let out = server.solve_batch(&batch);
     for (i, served) in out.reports.iter().enumerate() {
         let r = &served.report;
         println!(
-            "#{i:<4} {:<9} makespan={:<8} verdict={:<18} explored={:<8} wall={:?}",
+            "#{i:<4} {:<9} makespan={:<8} verdict={:<18} explored={:<8} nogoods={:<6} wall={:?}",
             served.source.as_str(),
             r.schedule.makespan(),
             verdict(&r.termination),
             r.stats.explored,
+            r.stats.nogoods_recorded,
             r.stats.wall
         );
     }
@@ -549,18 +575,22 @@ mod tests {
 
     #[test]
     fn serve_stream_parses_defaults_and_overrides() {
-        let args = ["--cores", "3", "--node-limit", "500"].map(String::from);
+        let args = ["--cores", "3", "--node-limit", "500", "--nogood-capacity", "64"]
+            .map(String::from);
         let opts = Opts::parse(&args).unwrap();
         let text = "\n# comment\n{\"nodes\": 12, \"seed\": 2}\n\
-                    {\"nodes\": 8, \"cores\": 2, \"node-limit\": 9, \"timeout\": 1}\n";
+                    {\"nodes\": 8, \"cores\": 2, \"node-limit\": 9, \"timeout\": 1, \
+                     \"nogood-capacity\": 9}\n";
         let specs = parse_serve_stream(text, &opts).unwrap();
         assert_eq!(specs.len(), 2);
         assert_eq!(specs[0].g.n(), 12);
         assert_eq!(specs[0].m, 3, "CLI default applies");
         assert_eq!(specs[0].budget.node_limit, Some(500));
+        assert_eq!(specs[0].nogood_capacity, Some(64), "CLI default applies");
         assert_eq!(specs[1].m, 2, "per-line override wins");
         assert_eq!(specs[1].budget.node_limit, Some(9));
         assert_eq!(specs[1].budget.deadline, Some(Duration::from_secs(1)));
+        assert_eq!(specs[1].nogood_capacity, Some(9), "per-line override wins");
     }
 
     #[test]
@@ -577,5 +607,8 @@ mod tests {
         // truncating to an expired deadline / zero-node budget.
         assert!(parse_serve_stream("{\"nodes\": 5, \"timeout\": 0.5}", &opts).is_err());
         assert!(parse_serve_stream("{\"nodes\": 5, \"node-limit\": -5}", &opts).is_err());
+        // The learning knob follows the same non-negative-integer rule.
+        assert!(parse_serve_stream("{\"nodes\": 5, \"nogood-capacity\": -1}", &opts).is_err());
+        assert!(parse_serve_stream("{\"nodes\": 5, \"nogood-capacity\": 0.5}", &opts).is_err());
     }
 }

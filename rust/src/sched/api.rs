@@ -147,6 +147,35 @@ pub struct BnbOptions {
     pub memo_capacity: Option<usize>,
 }
 
+/// Option overlay for the conflict-driven-learning machinery of both
+/// exact searches (see `sched::cdcl`). Every field defaults to `None` =
+/// **off**: a request without search options walks the exact same tree
+/// as the learning-free search, byte for byte — the parity suites pin
+/// this. The portfolio folds these into its cache tag because they
+/// change the explored tree (and therefore budgeted results).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SearchOptions {
+    /// Capacity of the no-good store (deterministic generation flush,
+    /// like the BnB dominance memo). `None` or `Some(0)` disables
+    /// no-good recording.
+    pub nogood_capacity: Option<usize>,
+    /// Deterministic Luby restarts keyed on explored-node counts (never
+    /// wall clock); the incumbent and learned no-goods survive restarts.
+    pub restarts: Option<bool>,
+    /// Activity-based (VSIDS-style, fixed-point) branching: prefer the
+    /// hottest conflict variable, static heuristic as tie-break.
+    pub activity: Option<bool>,
+}
+
+impl SearchOptions {
+    /// True when any learning feature is requested.
+    pub fn any_enabled(&self) -> bool {
+        self.nogood_capacity.map_or(false, |c| c > 0)
+            || self.restarts == Some(true)
+            || self.activity == Some(true)
+    }
+}
+
 /// Option overlay for the parallel portfolio. `None` fields fall back to
 /// the `PortfolioConfig` the portfolio was constructed with.
 #[derive(Debug, Clone, Default)]
@@ -202,6 +231,8 @@ pub struct SolveRequest<'g> {
     pub bnb: BnbOptions,
     /// Portfolio overlay.
     pub portfolio: PortfolioOptions,
+    /// Conflict-driven-learning overlay (both exact searches).
+    pub search: SearchOptions,
 }
 
 impl<'g> SolveRequest<'g> {
@@ -217,6 +248,7 @@ impl<'g> SolveRequest<'g> {
             cp: CpOptions::default(),
             bnb: BnbOptions::default(),
             portfolio: PortfolioOptions::default(),
+            search: SearchOptions::default(),
         }
     }
 
@@ -274,6 +306,12 @@ impl<'g> SolveRequest<'g> {
         self
     }
 
+    /// Set the conflict-driven-learning overlay.
+    pub fn search(mut self, opts: SearchOptions) -> Self {
+        self.search = opts;
+        self
+    }
+
     /// True once the attached token (if any) has been cancelled.
     pub fn is_cancelled(&self) -> bool {
         self.cancel.as_ref().map_or(false, CancelToken::is_cancelled)
@@ -293,6 +331,7 @@ impl<'g> SolveRequest<'g> {
             cp: CpOptions::default(),
             bnb: BnbOptions::default(),
             portfolio: PortfolioOptions::default(),
+            search: SearchOptions::default(),
         }
     }
 }
@@ -352,6 +391,17 @@ pub struct SearchStats {
     pub memo_peak: usize,
     /// Capacity-bound generation flushes of the dominance memo (BnB only).
     pub memo_flushes: u64,
+    /// No-goods recorded from refuted subtrees (0 with learning off).
+    pub nogoods_recorded: u64,
+    /// Nodes pruned by a no-good hit before expansion.
+    pub nogood_hits: u64,
+    /// Capacity-bound generation flushes of the no-good store.
+    pub nogood_flushes: u64,
+    /// Deterministic (node-count-keyed) Luby restarts performed.
+    pub restarts: u64,
+    /// Deepest decision level reached (0 with learning off — the
+    /// learning-free search does not track levels).
+    pub max_depth: u64,
     /// True when the wall-clock deadline (not a node budget) was a
     /// binding cut anywhere — the result is then machine-dependent.
     pub wall_cut: bool,
@@ -359,6 +409,48 @@ pub struct SearchStats {
     pub wall: Duration,
     /// Per-stage wall times, in execution order.
     pub stages: Vec<StageStats>,
+}
+
+impl SearchStats {
+    /// Fold another report's counters into this one: additive counters
+    /// sum, high-water marks take the max, `wall_cut` ORs. `wall` and
+    /// `stages` are *not* touched — they describe the enclosing solve
+    /// and stay the caller's responsibility.
+    ///
+    /// Aggregation points (the portfolio's heuristic race, its exact
+    /// stages, `serve`'s dedup groups) must use this instead of
+    /// enumerating fields by hand, so a newly added solver counter can
+    /// never again be silently dropped from merged reports.
+    pub fn absorb(&mut self, other: &SearchStats) {
+        let SearchStats {
+            explored,
+            pruned,
+            leaves,
+            memo_hits,
+            memo_peak,
+            memo_flushes,
+            nogoods_recorded,
+            nogood_hits,
+            nogood_flushes,
+            restarts,
+            max_depth,
+            wall_cut,
+            wall: _,
+            stages: _,
+        } = other;
+        self.explored += explored;
+        self.pruned += pruned;
+        self.leaves += leaves;
+        self.memo_hits += memo_hits;
+        self.memo_peak = self.memo_peak.max(*memo_peak);
+        self.memo_flushes += memo_flushes;
+        self.nogoods_recorded += nogoods_recorded;
+        self.nogood_hits += nogood_hits;
+        self.nogood_flushes += nogood_flushes;
+        self.restarts += restarts;
+        self.max_depth = self.max_depth.max(*max_depth);
+        self.wall_cut |= wall_cut;
+    }
 }
 
 /// Outcome of one solve: schedule + verdict + statistics.
@@ -467,6 +559,52 @@ mod tests {
         assert!(!b.is_cancelled());
         a.cancel();
         assert!(b.is_cancelled());
+    }
+
+    #[test]
+    fn absorb_sums_counters_and_maxes_high_water_marks() {
+        let mut a = SearchStats {
+            explored: 10,
+            pruned: 1,
+            memo_peak: 5,
+            nogoods_recorded: 2,
+            max_depth: 3,
+            ..SearchStats::default()
+        };
+        let b = SearchStats {
+            explored: 7,
+            leaves: 4,
+            memo_peak: 2,
+            nogood_hits: 6,
+            nogood_flushes: 1,
+            restarts: 2,
+            max_depth: 9,
+            wall_cut: true,
+            wall: Duration::from_secs(99),
+            ..SearchStats::default()
+        };
+        a.absorb(&b);
+        assert_eq!(a.explored, 17);
+        assert_eq!(a.pruned, 1);
+        assert_eq!(a.leaves, 4);
+        assert_eq!(a.memo_peak, 5, "high-water mark takes the max");
+        assert_eq!(a.nogoods_recorded, 2);
+        assert_eq!(a.nogood_hits, 6);
+        assert_eq!(a.nogood_flushes, 1);
+        assert_eq!(a.restarts, 2);
+        assert_eq!(a.max_depth, 9);
+        assert!(a.wall_cut);
+        assert_eq!(a.wall, Duration::ZERO, "wall stays the caller's");
+    }
+
+    #[test]
+    fn search_options_default_is_fully_off() {
+        let off = SearchOptions::default();
+        assert!(!off.any_enabled());
+        assert!(!SearchOptions { nogood_capacity: Some(0), ..off.clone() }.any_enabled());
+        assert!(SearchOptions { nogood_capacity: Some(64), ..off.clone() }.any_enabled());
+        assert!(SearchOptions { restarts: Some(true), ..off.clone() }.any_enabled());
+        assert!(SearchOptions { activity: Some(true), ..off }.any_enabled());
     }
 
     #[test]

@@ -26,6 +26,7 @@
 //! [`ChouChung::schedule_reference`], the differential-testing oracle.
 
 use super::api::CancelToken;
+use super::cdcl::{canonical_sig, luby, Activity, LearnConfig, NoGood, NoGoodStore, RESTART_UNIT};
 use super::portfolio::{Incumbent, SubtreeOutcome};
 use super::trail::{BnbOp, Mark, Trail};
 use super::{
@@ -265,8 +266,56 @@ struct Ctx<'g> {
     cancel: Option<&'g CancelToken>,
 }
 
+/// Conflict-driven-learning state threaded through one BnB search. The
+/// store and activity table are *borrowed* so the portfolio's segment
+/// runner ([`BnbTask`]) can persist them across restart segments; the
+/// decision stack is rebuilt per segment (re-seeded from the replayed
+/// subtree prefix, so no-good signatures are always rooted at the global
+/// root).
+struct Learn<'a> {
+    cfg: LearnConfig,
+    store: &'a mut NoGoodStore,
+    activity: &'a mut Activity,
+    /// Encoded placement set from the global root (prefix included) —
+    /// set semantics: `(node, core, start)` words fully determine the
+    /// partial state, independent of placement order.
+    decisions: Vec<u64>,
+    /// Trail mark taken right before each decision (conflict analysis
+    /// walks the trail above the last one).
+    decision_marks: Vec<Mark>,
+    scratch: Vec<u64>,
+    nogood_hits: u64,
+    restarts: u64,
+    max_depth: u64,
+}
+
+impl<'a> Learn<'a> {
+    fn new(cfg: LearnConfig, store: &'a mut NoGoodStore, activity: &'a mut Activity) -> Self {
+        Self {
+            cfg,
+            store,
+            activity,
+            decisions: Vec::new(),
+            decision_marks: Vec::new(),
+            scratch: Vec::new(),
+            nogood_hits: 0,
+            restarts: 0,
+            max_depth: 0,
+        }
+    }
+}
+
+/// Encode one placement decision as a canonical `u64` word. Node and
+/// core fit comfortably (node ids are u16-sized throughout the exact
+/// solvers); the start time keeps its low 40 bits — far above any test
+/// horizon, and a clipped start only risks a hash-level alias, the same
+/// 64-bit-collision exposure the dominance memo already accepts.
+fn encode_place(v: NodeId, p: usize, start: Cycles) -> u64 {
+    ((v as u64) << 48) | ((p as u64) << 40) | (start & ((1 << 40) - 1))
+}
+
 /// Mutable search bookkeeping shared by both DFS variants.
-struct SearchState {
+struct SearchState<'a> {
     best: Schedule,
     best_ms: Cycles,
     seen: DominanceMemo,
@@ -277,9 +326,17 @@ struct SearchState {
     timed_out: bool,
     budget_out: bool,
     cancelled: bool,
+    /// Restart machinery: absolute explored-node count ending the current
+    /// Luby segment (`u64::MAX` = no segmentation) plus the unwind flag.
+    /// Both inert with learning off (byte-parity pins cover that).
+    segment_limit: u64,
+    segment_cut: bool,
+    /// Conflict-driven learning; `None` keeps every historical code path
+    /// byte-identical (pinned by `tests/trail_search_parity.rs`).
+    learn: Option<Learn<'a>>,
 }
 
-impl SearchState {
+impl<'a> SearchState<'a> {
     fn new(best: Schedule, best_ms: Cycles, memo_capacity: usize) -> Self {
         Self {
             best,
@@ -292,11 +349,14 @@ impl SearchState {
             timed_out: false,
             budget_out: false,
             cancelled: false,
+            segment_limit: u64::MAX,
+            segment_cut: false,
+            learn: None,
         }
     }
 
     fn stopped(&self) -> bool {
-        self.timed_out || self.budget_out || self.cancelled
+        self.timed_out || self.budget_out || self.cancelled || self.segment_cut
     }
 
     /// Upper bound used for pruning: the local incumbent, tightened by
@@ -318,6 +378,10 @@ impl SearchState {
                 return false;
             }
         }
+        if self.explored > self.segment_limit {
+            self.segment_cut = true;
+            return false;
+        }
         if self.explored % 512 == 0 {
             if ctx.cancel.map_or(false, CancelToken::is_cancelled) {
                 self.cancelled = true;
@@ -327,6 +391,63 @@ impl SearchState {
             }
         }
         !self.stopped()
+    }
+
+    /// Learning bookkeeping around one placement decision (no-op with
+    /// learning off).
+    fn push_decision(&mut self, word: u64, mark: Mark) {
+        if let Some(learn) = self.learn.as_mut() {
+            learn.decisions.push(word);
+            learn.decision_marks.push(mark);
+            learn.max_depth = learn.max_depth.max(learn.decisions.len() as u64);
+        }
+    }
+
+    fn pop_decision(&mut self) {
+        if let Some(learn) = self.learn.as_mut() {
+            learn.decisions.pop();
+            learn.decision_marks.pop();
+        }
+    }
+
+    /// Is the current placement set a known-refuted no-good? Checked at
+    /// node entry, before the dominance/bound prologue.
+    fn nogood_hit(&mut self) -> bool {
+        let Some(learn) = self.learn.as_mut() else { return false };
+        if !learn.cfg.nogoods_on() || learn.decisions.is_empty() {
+            return false;
+        }
+        let ng = canonical_sig(&learn.decisions, &mut learn.scratch);
+        if learn.store.contains(ng) {
+            learn.nogood_hits += 1;
+            return true;
+        }
+        false
+    }
+
+    /// Conflict hook, fired at the lower-bound closure (the proof that no
+    /// completion of the current placement set beats `cap()`): bump the
+    /// activity of the nodes the last decision touched, then learn the
+    /// refuted placement set as a no-good. Sound wherever the bound is at
+    /// most the one it was proven under — bounds only ever descend.
+    fn on_conflict(&mut self, st: &PartialState) {
+        let Some(learn) = self.learn.as_mut() else { return };
+        if learn.cfg.activity {
+            if let Some(&mark) = learn.decision_marks.last() {
+                let act = &mut *learn.activity;
+                for op in st.trail.entries_above(mark) {
+                    match *op {
+                        BnbOp::Place { node, .. } | BnbOp::Est { node, .. } => {
+                            act.bump(node as usize)
+                        }
+                    }
+                }
+                act.decay();
+            }
+        }
+        if learn.cfg.nogoods_on() && !learn.decisions.is_empty() {
+            learn.store.record(canonical_sig(&learn.decisions, &mut learn.scratch));
+        }
     }
 }
 
@@ -350,10 +471,46 @@ impl ChouChung {
         let best = super::serial_schedule(g, m);
         let best_ms = best.makespan();
         let memo_capacity = req.bnb.memo_capacity.unwrap_or(self.memo_capacity);
+        // Conflict-driven learning: resolved per request, fully off by
+        // default (`learn: None` keeps the historical search byte-id).
+        let learn_cfg = LearnConfig::from_options(&req.search);
+        let mut store = NoGoodStore::new(learn_cfg.nogood_capacity);
+        let mut activity = Activity::new(g.n());
         let mut search = SearchState::new(best, best_ms, memo_capacity);
+        if learn_cfg.enabled() {
+            search.learn = Some(Learn::new(learn_cfg, &mut store, &mut activity));
+        }
+        // The dominance memo's peak/flush counters accumulate across
+        // restart segments (the memo itself is reset per segment).
+        let mut memo_peak_acc = 0usize;
+        let mut memo_flushes_acc = 0u64;
         let mut root = PartialState::root(g, m, ctx.levels);
         if reference {
             dfs_reference(&ctx, root, &mut search);
+        } else if learn_cfg.restarts {
+            // Luby-restart driver, keyed on explored-node counts only.
+            // The memo is reset at each restart: an entry inserted in an
+            // *aborted* subtree would otherwise dominance-prune the
+            // re-dive and silently skip unexplored ground. No-goods and
+            // activity persist — they are proven facts, not visit marks.
+            let mut k = 0u64;
+            loop {
+                search.segment_limit =
+                    search.explored.saturating_add(luby(k) * RESTART_UNIT);
+                dfs(&ctx, &mut root, &mut search);
+                k += 1;
+                if !search.segment_cut {
+                    break;
+                }
+                search.segment_cut = false;
+                if let Some(learn) = search.learn.as_mut() {
+                    learn.restarts += 1;
+                }
+                memo_peak_acc = memo_peak_acc.max(search.seen.peak());
+                memo_flushes_acc += search.seen.flushes();
+                search.seen = DominanceMemo::new(memo_capacity);
+            }
+            search.segment_limit = u64::MAX;
         } else {
             dfs(&ctx, &mut root, &mut search);
         }
@@ -371,20 +528,44 @@ impl ChouChung {
         } else {
             Termination::ProvenOptimal
         };
+        // Consume the search (dropping its borrow of store/activity) so
+        // the store's counters can be read for the report.
+        let SearchState {
+            best: schedule,
+            best_ms: _,
+            seen,
+            explored,
+            pruned,
+            memo_hits,
+            leaves,
+            timed_out,
+            budget_out: _,
+            cancelled: _,
+            segment_limit: _,
+            segment_cut: _,
+            learn,
+        } = search;
+        let (nogood_hits, restarts, max_depth) =
+            learn.map_or((0, 0, 0), |l| (l.nogood_hits, l.restarts, l.max_depth));
         SolveReport {
             termination,
             stats: SearchStats {
-                explored: search.explored,
-                pruned: search.pruned,
-                leaves: search.leaves,
-                memo_hits: search.memo_hits,
-                memo_peak: search.seen.peak(),
-                memo_flushes: search.seen.flushes(),
-                wall_cut: search.timed_out,
+                explored,
+                pruned,
+                leaves,
+                memo_hits,
+                memo_peak: memo_peak_acc.max(seen.peak()),
+                memo_flushes: memo_flushes_acc + seen.flushes(),
+                nogoods_recorded: store.recorded(),
+                nogood_hits,
+                nogood_flushes: store.flushes(),
+                restarts,
+                max_depth,
+                wall_cut: timed_out,
                 wall,
-                stages: vec![StageStats { name: "bnb-dfs", wall, explored: search.explored }],
+                stages: vec![StageStats { name: "bnb-dfs", wall, explored }],
             },
-            schedule: search.best,
+            schedule,
         }
     }
 
@@ -479,7 +660,11 @@ fn earliest_start(g: &Dag, st: &PartialState, v: NodeId, p: usize) -> Cycles {
 
 /// Ready nodes under equivalence symmetry breaking, ordered by level
 /// (highest first) for good first dives. Shared by both DFS variants.
-fn ready_nodes(ctx: &Ctx<'_>, st: &PartialState) -> Vec<NodeId> {
+/// With `activity` (the learning search's conflict scores) the hottest
+/// nodes move to the front, ties keeping the static level order — the
+/// stable re-sort means all-zero scores reproduce the static order
+/// exactly, and `None` skips it entirely (learning-off byte parity).
+fn ready_nodes(ctx: &Ctx<'_>, st: &PartialState, activity: Option<&Activity>) -> Vec<NodeId> {
     let n = ctx.g.n();
     let mut ready: Vec<NodeId> = (0..n)
         .filter(|&v| st.core[v] == usize::MAX && st.pending_parents[v] == 0)
@@ -493,13 +678,16 @@ fn ready_nodes(ctx: &Ctx<'_>, st: &PartialState) -> Vec<NodeId> {
         })
         .collect();
     ready.sort_by_key(|&v| std::cmp::Reverse(ctx.levels[v]));
+    if let Some(act) = activity {
+        ready.sort_by_key(|&v| std::cmp::Reverse(act.score(v)));
+    }
     ready
 }
 
 /// Leaf/dominance prologue shared by both DFS variants. Returns false
 /// when the node is a leaf, bound-pruned or dominance-pruned (the caller
 /// backtracks immediately).
-fn expandable(ctx: &Ctx<'_>, st: &PartialState, search: &mut SearchState) -> bool {
+fn expandable(ctx: &Ctx<'_>, st: &PartialState, search: &mut SearchState<'_>) -> bool {
     let g = ctx.g;
     if st.placements.len() == g.n() {
         search.leaves += 1;
@@ -521,6 +709,7 @@ fn expandable(ctx: &Ctx<'_>, st: &PartialState, search: &mut SearchState) -> boo
     debug_assert_eq!(st.lb, scan_lower_bound(ctx, st), "incremental lb diverged");
     if st.lb >= search.cap(ctx) {
         search.pruned += 1;
+        search.on_conflict(st);
         return false;
     }
     // State-dominance memoization on the canonical signature.
@@ -534,15 +723,24 @@ fn expandable(ctx: &Ctx<'_>, st: &PartialState, search: &mut SearchState) -> boo
 
 /// Trail-based DFS: expansions mutate one shared `PartialState` and undo
 /// to a mark on backtrack — no clone per expansion.
-fn dfs(ctx: &Ctx<'_>, st: &mut PartialState, search: &mut SearchState) {
+fn dfs(ctx: &Ctx<'_>, st: &mut PartialState, search: &mut SearchState<'_>) {
     if !search.enter_node(ctx) {
+        return;
+    }
+    // Known-refuted placement set? Prune before the dominance prologue.
+    if search.nogood_hit() {
+        search.pruned += 1;
         return;
     }
     let g = ctx.g;
     if !expandable(ctx, st, search) {
         return;
     }
-    for &v in &ready_nodes(ctx, st) {
+    let order = {
+        let act = search.learn.as_ref().filter(|l| l.cfg.activity).map(|l| &*l.activity);
+        ready_nodes(ctx, st, act)
+    };
+    for &v in &order {
         let mut tried_idle = false;
         for p in 0..ctx.m {
             let idle = st.avail[p] == 0 && !st.core_used[p];
@@ -560,8 +758,10 @@ fn dfs(ctx: &Ctx<'_>, st: &mut PartialState, search: &mut SearchState) {
             }
             let mark = st.trail.mark();
             st.apply_place(g, ctx.levels, v, p, start, fin);
+            search.push_decision(encode_place(v, p, start), mark);
             dfs(ctx, st, search);
             st.undo_to(g, mark);
+            search.pop_decision();
             if search.stopped() {
                 return;
             }
@@ -572,7 +772,7 @@ fn dfs(ctx: &Ctx<'_>, st: &mut PartialState, search: &mut SearchState) {
 /// Pre-trail reference DFS: clones `PartialState` per expansion and
 /// re-scans the lower bound (inside `expandable`'s debug assert the two
 /// agree; here the clone path exercises the same shared prologue).
-fn dfs_reference(ctx: &Ctx<'_>, st: PartialState, search: &mut SearchState) {
+fn dfs_reference(ctx: &Ctx<'_>, st: PartialState, search: &mut SearchState<'_>) {
     if !search.enter_node(ctx) {
         return;
     }
@@ -580,7 +780,7 @@ fn dfs_reference(ctx: &Ctx<'_>, st: PartialState, search: &mut SearchState) {
     if !expandable(ctx, &st, search) {
         return;
     }
-    for &v in &ready_nodes(ctx, &st) {
+    for &v in &ready_nodes(ctx, &st, None) {
         let mut tried_idle = false;
         for p in 0..ctx.m {
             let idle = st.avail[p] == 0 && !st.core_used[p];
@@ -674,7 +874,9 @@ pub(crate) fn enumerate_prefixes(
             if st.lb >= b0 {
                 continue; // proven: nothing better than b0 below here
             }
-            for &v in &ready_nodes(&ctx, &st) {
+            // Static order always: the root split must not depend on the
+            // request's learning overlay.
+            for &v in &ready_nodes(&ctx, &st, None) {
                 let mut tried_idle = false;
                 for p in 0..m {
                     let idle = st.avail[p] == 0 && !st.core_used[p];
@@ -715,11 +917,200 @@ impl StagePrep {
     }
 }
 
+/// Persistent state of one portfolio subtree task in learning mode: the
+/// no-good store, activity table and incumbent survive across
+/// checkpointed restart segments ([`BnbTask::run_segment`]), so the
+/// portfolio can merge freshly learned no-goods between segments at
+/// deterministic node-count boundaries (see `sched::portfolio`).
+pub(crate) struct BnbTask {
+    prefix: BnbPrefix,
+    store: NoGoodStore,
+    activity: Activity,
+    best: Schedule,
+    best_ms: Cycles,
+    memo_capacity: usize,
+    /// Next Luby index: segment `k` gets `luby(k) * RESTART_UNIT` nodes.
+    luby_idx: u64,
+    /// Merge-board cursor: how many board entries were already absorbed.
+    imported: usize,
+    explored: u64,
+    pruned: u64,
+    leaves: u64,
+    memo_hits: u64,
+    memo_peak: usize,
+    memo_flushes: u64,
+    nogood_hits: u64,
+    restarts: u64,
+    max_depth: u64,
+    done: bool,
+    exhausted: bool,
+    timed_out: bool,
+    cancelled: bool,
+}
+
+impl BnbTask {
+    pub fn new(
+        g: &Dag,
+        prefix: BnbPrefix,
+        m: usize,
+        b0: Cycles,
+        memo_capacity: usize,
+        learn: LearnConfig,
+    ) -> Self {
+        Self {
+            prefix,
+            store: NoGoodStore::new(learn.nogood_capacity),
+            activity: Activity::new(g.n()),
+            best: Schedule::new(m),
+            best_ms: b0,
+            memo_capacity,
+            luby_idx: 0,
+            imported: 0,
+            explored: 0,
+            pruned: 0,
+            leaves: 0,
+            memo_hits: 0,
+            memo_peak: 0,
+            memo_flushes: 0,
+            nogood_hits: 0,
+            restarts: 0,
+            max_depth: 0,
+            done: false,
+            exhausted: false,
+            timed_out: false,
+            cancelled: false,
+        }
+    }
+
+    /// True once the subtree is exhausted or a hard budget fired;
+    /// further segments are no-ops.
+    pub fn done(&self) -> bool {
+        self.done
+    }
+
+    /// Absorb the shared merge board from its last-seen position (see
+    /// `CpTask::import` — same protocol, same duplicate tolerance).
+    pub fn import(&mut self, board: &[NoGood]) {
+        self.store.absorb(&board[self.imported.min(board.len())..]);
+        self.imported = board.len();
+    }
+
+    /// Run one Luby segment of this subtree's search (the whole rest of
+    /// the subtree when restarts are off) and return the no-goods learned
+    /// in it. Each segment re-dives from a fresh root with a **fresh
+    /// dominance memo** — an entry inserted in an aborted segment would
+    /// otherwise dominance-prune unexplored ground on the re-dive.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_segment(
+        &mut self,
+        g: &Dag,
+        m: usize,
+        prep: &StagePrep,
+        b0: Cycles,
+        learn: LearnConfig,
+        shared: Option<&Incumbent>,
+        consult_shared: bool,
+        node_limit: Option<u64>,
+        deadline: Instant,
+        cancel: Option<&CancelToken>,
+    ) -> Vec<NoGood> {
+        if self.done {
+            return Vec::new();
+        }
+        let remaining = node_limit.map(|l| l.saturating_sub(self.explored));
+        if remaining == Some(0) {
+            self.done = true;
+            return self.store.take_fresh();
+        }
+        let ctx = Ctx {
+            g,
+            m,
+            levels: &prep.levels,
+            eq_leader: &prep.eq_leader,
+            deadline,
+            node_limit: remaining,
+            shared,
+            consult_shared,
+            cancel,
+        };
+        let mut st = PartialState::root(g, m, ctx.levels);
+        replay_prefix(g, ctx.levels, &mut st, &self.prefix);
+        let mut learn_state = Learn::new(learn, &mut self.store, &mut self.activity);
+        for &(v, p, start) in &st.placements {
+            learn_state.decisions.push(encode_place(v, p, start));
+        }
+        let mut search = SearchState::new(
+            std::mem::replace(&mut self.best, Schedule::new(0)),
+            self.best_ms,
+            self.memo_capacity,
+        );
+        search.learn = Some(learn_state);
+        search.segment_limit = if learn.restarts {
+            luby(self.luby_idx) * RESTART_UNIT
+        } else {
+            u64::MAX
+        };
+        dfs(&ctx, &mut st, &mut search);
+        let cut = search.segment_cut;
+        let stopped_hard = search.timed_out || search.budget_out || search.cancelled;
+        self.timed_out |= search.timed_out;
+        self.cancelled |= search.cancelled;
+        self.explored += search.explored;
+        self.pruned += search.pruned;
+        self.leaves += search.leaves;
+        self.memo_hits += search.memo_hits;
+        self.memo_peak = self.memo_peak.max(search.seen.peak());
+        self.memo_flushes += search.seen.flushes();
+        if let Some(l) = search.learn.as_ref() {
+            self.nogood_hits += l.nogood_hits;
+            self.max_depth = self.max_depth.max(l.max_depth);
+        }
+        search.learn = None; // release the store/activity borrows
+        self.best = search.best;
+        self.best_ms = search.best_ms;
+        self.luby_idx += 1;
+        if cut {
+            self.restarts += 1; // this segment ended in a restart
+        } else {
+            self.done = true;
+            self.exhausted = !stopped_hard;
+        }
+        if stopped_hard {
+            self.done = true;
+        }
+        self.store.take_fresh()
+    }
+
+    /// Final per-subtree outcome in the portfolio's reduce format.
+    pub fn into_outcome(self, b0: Cycles) -> SubtreeOutcome {
+        SubtreeOutcome {
+            best: if self.best_ms < b0 { Some(self.best) } else { None },
+            exhausted: self.exhausted,
+            timed_out: self.timed_out,
+            cancelled: self.cancelled,
+            explored: self.explored,
+            pruned: self.pruned,
+            leaves: self.leaves,
+            memo_hits: self.memo_hits,
+            memo_peak: self.memo_peak,
+            memo_flushes: self.memo_flushes,
+            nogoods_recorded: self.store.recorded(),
+            nogood_hits: self.nogood_hits,
+            nogood_flushes: self.store.flushes(),
+            restarts: self.restarts,
+            max_depth: self.max_depth,
+        }
+    }
+}
+
 /// Solve one subtree to exhaustion (or budget/deadline): fresh trail-backed
 /// state, the prefix replayed, then the ordinary trail DFS. Improvements
 /// are published to `shared`; pruning consults it only when
 /// `consult_shared` (live bound sharing, non-byte-deterministic). `best`
 /// is `Some` only when a schedule strictly better than `b0` was found.
+/// With learning enabled this runs the [`BnbTask`] segment loop to
+/// completion (restarts honoured, no cross-task sharing — the portfolio
+/// drives sharing itself).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn solve_prefix(
     g: &Dag,
@@ -727,6 +1118,7 @@ pub(crate) fn solve_prefix(
     prep: &StagePrep,
     prefix: &[(NodeId, usize)],
     b0: Cycles,
+    learn: LearnConfig,
     shared: Option<&Incumbent>,
     consult_shared: bool,
     node_limit: Option<u64>,
@@ -734,6 +1126,15 @@ pub(crate) fn solve_prefix(
     memo_capacity: usize,
     cancel: Option<&CancelToken>,
 ) -> SubtreeOutcome {
+    if learn.enabled() {
+        let mut task = BnbTask::new(g, prefix.to_vec(), m, b0, memo_capacity, learn);
+        while !task.done() {
+            task.run_segment(
+                g, m, prep, b0, learn, shared, consult_shared, node_limit, deadline, cancel,
+            );
+        }
+        return task.into_outcome(b0);
+    }
     let ctx = Ctx {
         g,
         m,
@@ -759,6 +1160,11 @@ pub(crate) fn solve_prefix(
         memo_hits: search.memo_hits,
         memo_peak: search.seen.peak(),
         memo_flushes: search.seen.flushes(),
+        nogoods_recorded: 0,
+        nogood_hits: 0,
+        nogood_flushes: 0,
+        restarts: 0,
+        max_depth: 0,
         best: if search.best_ms < b0 { Some(search.best) } else { None },
     }
 }
@@ -928,7 +1334,20 @@ mod tests {
         let mut best: Option<Cycles> = None;
         let mut exhausted = true;
         for p in &prefixes {
-            let out = solve_prefix(&g, m, &prep, p, b0, None, false, None, deadline, 1 << 16, None);
+            let out = solve_prefix(
+                &g,
+                m,
+                &prep,
+                p,
+                b0,
+                LearnConfig::default(),
+                None,
+                false,
+                None,
+                deadline,
+                1 << 16,
+                None,
+            );
             exhausted &= out.exhausted;
             if let Some(s) = out.best {
                 assert_eq!(check_valid(&g, &s), Ok(()));
@@ -938,6 +1357,87 @@ mod tests {
         }
         assert!(exhausted);
         assert_eq!(best, Some(seq.schedule.makespan()));
+    }
+
+    fn placements(s: &Schedule) -> Vec<(usize, usize, Cycles, Cycles)> {
+        s.iter().map(|p| (p.core, p.node, p.start, p.finish)).collect()
+    }
+
+    #[test]
+    fn learning_still_proves_the_optimum() {
+        // Every learning feature on: no-good pruning is sound (recorded
+        // only at semantic refutation proofs under a monotone bound) and
+        // restarts reset the dominance memo, so the proven optimum must
+        // match the plain search and the counters must surface.
+        use crate::sched::SearchOptions;
+        let g = paper_example_dag();
+        let m = 2;
+        let base = ChouChung::default().schedule(&g, m);
+        assert!(base.optimal);
+        let req = SolveRequest::new(&g, m)
+            .budget(Budget { deadline: Some(Duration::from_secs(60)), node_limit: None })
+            .search(SearchOptions {
+                nogood_capacity: Some(1 << 12),
+                restarts: Some(true),
+                activity: Some(true),
+            });
+        let rep = ChouChung::default().solve(&req);
+        assert_eq!(rep.termination, Termination::ProvenOptimal);
+        assert_eq!(rep.schedule.makespan(), base.schedule.makespan());
+        assert_eq!(check_valid(&g, &rep.schedule), Ok(()));
+        assert!(rep.stats.nogoods_recorded > 0, "conflicts must be learned");
+        assert!(rep.stats.max_depth > 0);
+    }
+
+    #[test]
+    fn learning_solves_are_deterministic() {
+        // Same request twice ⇒ byte-identical schedule and stats: restart
+        // points are explored-node keyed and the activity arithmetic is
+        // fixed-point integral.
+        use crate::sched::SearchOptions;
+        let g = crate::daggen::generate(&crate::daggen::DagGenConfig::paper(30), 4);
+        let solve_once = || {
+            let req = SolveRequest::new(&g, 4)
+                .budget(Budget {
+                    deadline: Some(Duration::from_secs(3600)),
+                    node_limit: Some(2000),
+                })
+                .search(SearchOptions {
+                    nogood_capacity: Some(1 << 10),
+                    restarts: Some(true),
+                    activity: Some(true),
+                });
+            ChouChung::default().solve(&req)
+        };
+        let a = solve_once();
+        let b = solve_once();
+        assert_eq!(placements(&a.schedule), placements(&b.schedule));
+        assert_eq!(a.stats.explored, b.stats.explored);
+        assert_eq!(a.stats.nogoods_recorded, b.stats.nogoods_recorded);
+        assert_eq!(a.stats.nogood_hits, b.stats.nogood_hits);
+        assert_eq!(a.stats.restarts, b.stats.restarts);
+        assert_eq!(a.stats.max_depth, b.stats.max_depth);
+    }
+
+    #[test]
+    fn learning_off_overlay_matches_the_legacy_path() {
+        // `SearchOptions::default()` leaves `learn = None`: the request
+        // path must stay byte-identical to the legacy shim (the pinned
+        // paper(30)/seed-4 workload of tests/trail_search_parity.rs).
+        let g = crate::daggen::generate(&crate::daggen::DagGenConfig::paper(30), 4);
+        let solver =
+            ChouChung { timeout: Duration::from_secs(3600), node_limit: Some(2000), ..Default::default() };
+        let legacy = solver.schedule(&g, 4);
+        let req = SolveRequest::new(&g, 4).budget(Budget {
+            deadline: Some(Duration::from_secs(3600)),
+            node_limit: Some(2000),
+        });
+        let rep = ChouChung::default().solve(&req);
+        assert_eq!(rep.stats.explored, legacy.explored);
+        assert_eq!(placements(&rep.schedule), placements(&legacy.schedule));
+        assert_eq!(rep.stats.restarts, 0);
+        assert_eq!(rep.stats.nogoods_recorded, 0);
+        assert_eq!(rep.stats.nogood_hits, 0);
     }
 
     #[test]

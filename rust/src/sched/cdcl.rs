@@ -1,0 +1,343 @@
+//! Conflict-driven-learning primitives shared by both exact searches
+//! (`cp::dfs` and `bnb`): the no-good store, the fixed-point activity
+//! table and the Luby restart sequence.
+//!
+//! Everything here is **deterministic by construction** so the byte-parity
+//! guarantees of the exact searches and the portfolio survive with
+//! learning enabled:
+//!
+//! * The [`NoGoodStore`] is capacity-bounded with the same *generation
+//!   flush* discipline as the BnB `DominanceMemo` — when a record would
+//!   exceed capacity the whole store is cleared in one deterministic
+//!   step (a lookup never flushes), so the contents depend only on the
+//!   insert sequence, never on timing or eviction heuristics.
+//! * [`Activity`] uses pure fixed-point integer arithmetic (no floats),
+//!   so VSIDS-style decay produces bit-identical scores on every
+//!   platform.
+//! * [`luby`] restart lengths are consumed in units of **explored
+//!   nodes** ([`RESTART_UNIT`]), never wall clock — two machines restart
+//!   at the identical tree node.
+//!
+//! A no-good is a refuted decision prefix, stored as a `(group, sig)`
+//! pair: the group is the canonical size of the decision set and the
+//! sig a deterministic hash of its canonical (sorted) encoding. Set
+//! semantics make a no-good order-independent: once the assignment set
+//! `{x_a=1, x_b=0}` is refuted under bound `B`, any later path reaching
+//! the same set — in either decision order, after a restart, or in a
+//! sibling portfolio subtree whose bound is at most `B` — is pruned
+//! before expansion. Soundness: bounds only decrease monotonically from
+//! one shared seed, and every bound is witnessed by a real schedule
+//! that survives into the portfolio's reduction, so a no-good can never
+//! hide the optimal makespan.
+
+use super::api::SearchOptions;
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{HashMap, HashSet};
+use std::hash::{Hash, Hasher};
+
+/// One learned no-good: `(group, canonical-sig)`. The group keys the
+/// store's buckets (decision-set size), the sig identifies the set.
+pub type NoGood = (u64, u64);
+
+/// Explored-node quantum of one Luby unit: restart `k` runs for
+/// `luby(k) * RESTART_UNIT` nodes. Also the fixed checkpoint length of
+/// the portfolio's shared no-good merge rounds.
+pub const RESTART_UNIT: u64 = 256;
+
+/// Resolved learning configuration of one search — the request-level
+/// [`SearchOptions`] overlay with every `None` collapsed to **off**.
+/// With everything off the searches take their historical code paths
+/// byte-identically (pinned by `tests/trail_search_parity.rs`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LearnConfig {
+    /// No-good store capacity; 0 disables recording and lookup.
+    pub nogood_capacity: usize,
+    /// Deterministic Luby restarts (node-count keyed).
+    pub restarts: bool,
+    /// Activity-based branching (static heuristic as tie-break).
+    pub activity: bool,
+}
+
+impl LearnConfig {
+    /// Collapse a request overlay into a resolved config.
+    pub fn from_options(o: &SearchOptions) -> Self {
+        Self {
+            nogood_capacity: o.nogood_capacity.unwrap_or(0),
+            restarts: o.restarts.unwrap_or(false),
+            activity: o.activity.unwrap_or(false),
+        }
+    }
+
+    /// True when any learning feature is on (the searches gate *all*
+    /// extra bookkeeping behind this, so learning-off costs nothing).
+    pub fn enabled(&self) -> bool {
+        self.nogood_capacity > 0 || self.restarts || self.activity
+    }
+
+    /// True when no-goods are recorded and consulted.
+    pub fn nogoods_on(&self) -> bool {
+        self.nogood_capacity > 0
+    }
+}
+
+/// Canonical signature of a decision set encoded as `u64` words: sort a
+/// scratch copy (set semantics — decision order must not matter) and
+/// hash it with the deterministic fixed-key std hasher.
+pub fn canonical_sig(decisions: &[u64], scratch: &mut Vec<u64>) -> NoGood {
+    scratch.clear();
+    scratch.extend_from_slice(decisions);
+    scratch.sort_unstable();
+    let mut h = DefaultHasher::new();
+    scratch.hash(&mut h);
+    (decisions.len() as u64, h.finish())
+}
+
+/// Capacity-bounded store of learned no-goods.
+///
+/// Same discipline as `bnb::DominanceMemo`: a duplicate record is a pure
+/// lookup and never flushes; a novel record at capacity clears the whole
+/// store first (one deterministic generation flush), then inserts. The
+/// `fresh` log keeps every no-good recorded since the last
+/// [`NoGoodStore::take_fresh`] drain — the portfolio's publish side of
+/// the checkpointed merge protocol.
+#[derive(Debug, Default)]
+pub struct NoGoodStore {
+    groups: HashMap<u64, HashSet<u64>>,
+    len: usize,
+    cap: usize,
+    peak: usize,
+    flushes: u64,
+    recorded: u64,
+    fresh: Vec<NoGood>,
+}
+
+impl NoGoodStore {
+    pub fn new(capacity: usize) -> Self {
+        Self { cap: capacity.max(1), ..Self::default() }
+    }
+
+    /// Is this decision set known refuted? Pure lookup: never flushes,
+    /// never counts (the search owns the hit counter).
+    pub fn contains(&self, ng: NoGood) -> bool {
+        self.groups.get(&ng.0).map_or(false, |set| set.contains(&ng.1))
+    }
+
+    /// Record a refuted decision set; returns false when it was already
+    /// known. A novel record at capacity flushes the whole generation
+    /// first (deterministic: depends only on the record sequence).
+    pub fn record(&mut self, ng: NoGood) -> bool {
+        if !self.insert(ng) {
+            return false;
+        }
+        self.recorded += 1;
+        self.fresh.push(ng);
+        true
+    }
+
+    /// Merge no-goods published by sibling searches. Imported entries
+    /// are *not* re-published through `fresh` (no rebroadcast loops)
+    /// and do not count as locally recorded.
+    pub fn absorb(&mut self, imported: &[NoGood]) {
+        for &ng in imported {
+            self.insert(ng);
+        }
+    }
+
+    fn insert(&mut self, ng: NoGood) -> bool {
+        if self.contains(ng) {
+            return false;
+        }
+        if self.len >= self.cap {
+            self.groups.clear();
+            self.len = 0;
+            self.flushes += 1;
+        }
+        self.groups.entry(ng.0).or_default().insert(ng.1);
+        self.len += 1;
+        self.peak = self.peak.max(self.len);
+        true
+    }
+
+    /// Drain the no-goods recorded since the last drain (publish side of
+    /// the portfolio's checkpointed merge).
+    pub fn take_fresh(&mut self) -> Vec<NoGood> {
+        std::mem::take(&mut self.fresh)
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// High-water mark of live entries.
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+
+    /// Generation flushes performed.
+    pub fn flushes(&self) -> u64 {
+        self.flushes
+    }
+
+    /// No-goods recorded locally (duplicates and imports excluded).
+    pub fn recorded(&self) -> u64 {
+        self.recorded
+    }
+}
+
+/// Fixed-point activity table: VSIDS-style "bump on conflict, decay by
+/// growing the increment", in 16.16-style integer arithmetic so scores
+/// are bit-identical on every platform. Indexed by DAG node.
+#[derive(Debug, Clone)]
+pub struct Activity {
+    score: Vec<u64>,
+    inc: u64,
+}
+
+/// One fixed-point unit (16 fractional bits).
+const ACT_ONE: u64 = 1 << 16;
+/// Rescale threshold: far below `u64::MAX`, so bumps cannot overflow.
+const ACT_RESCALE: u64 = 1 << 48;
+
+impl Activity {
+    pub fn new(n: usize) -> Self {
+        Self { score: vec![0; n], inc: ACT_ONE }
+    }
+
+    /// Bump one variable's score by the current increment.
+    pub fn bump(&mut self, v: usize) {
+        self.score[v] += self.inc;
+        if self.score[v] >= ACT_RESCALE {
+            self.rescale();
+        }
+    }
+
+    /// Decay every score relative to future bumps by growing the
+    /// increment (the classic inverse-decay trick): integer `* 17/16`
+    /// per conflict ≈ a 0.94 decay factor.
+    pub fn decay(&mut self) {
+        self.inc += self.inc / 16;
+        if self.inc >= ACT_RESCALE {
+            self.rescale();
+        }
+    }
+
+    /// Shift every score (and the increment) down together: relative
+    /// order is exactly preserved, overflow is impossible.
+    fn rescale(&mut self) {
+        for s in &mut self.score {
+            *s >>= 32;
+        }
+        self.inc = (self.inc >> 32).max(ACT_ONE);
+    }
+
+    pub fn score(&self, v: usize) -> u64 {
+        self.score[v]
+    }
+}
+
+/// The Luby restart sequence, 0-indexed: 1, 1, 2, 1, 1, 2, 4, 1, …
+/// Restart `k` gets a budget of `luby(k) * RESTART_UNIT` explored nodes.
+pub fn luby(mut x: u64) -> u64 {
+    // Find the finite subsequence containing x and its size 2^seq - 1.
+    let (mut size, mut seq) = (1u64, 0u32);
+    while size < x + 1 {
+        seq += 1;
+        size = 2 * size + 1;
+    }
+    while size - 1 != x {
+        size = (size - 1) / 2;
+        seq -= 1;
+        x %= size;
+    }
+    1u64 << seq
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn luby_prefix_matches_the_literature() {
+        let want = [1u64, 1, 2, 1, 1, 2, 4, 1, 1, 2, 1, 1, 2, 4, 8, 1];
+        let got: Vec<u64> = (0..want.len() as u64).map(luby).collect();
+        assert_eq!(got, want);
+        assert_eq!(luby(62), 32, "end of the 63-element subsequence");
+    }
+
+    #[test]
+    fn store_flushes_whole_generations_at_capacity() {
+        let mut s = NoGoodStore::new(3);
+        assert!(s.record((1, 10)));
+        assert!(s.record((1, 11)));
+        assert!(s.record((2, 20)));
+        assert_eq!((s.len(), s.flushes()), (3, 0));
+        // A duplicate is a pure lookup: no flush even at capacity.
+        assert!(!s.record((1, 10)));
+        assert_eq!((s.len(), s.flushes()), (3, 0));
+        assert!(s.contains((2, 20)));
+        // A novel record at capacity flushes everything first.
+        assert!(s.record((3, 30)));
+        assert_eq!((s.len(), s.flushes()), (1, 1));
+        assert!(!s.contains((1, 10)), "old generation gone");
+        assert!(s.contains((3, 30)));
+        assert_eq!(s.peak(), 3);
+        assert_eq!(s.recorded(), 4);
+    }
+
+    #[test]
+    fn take_fresh_drains_only_local_records() {
+        let mut s = NoGoodStore::new(8);
+        s.record((1, 1));
+        s.absorb(&[(2, 2), (1, 1)]);
+        assert_eq!(s.len(), 2, "duplicate import skipped");
+        assert_eq!(s.take_fresh(), vec![(1, 1)], "imports are not republished");
+        s.record((3, 3));
+        assert_eq!(s.take_fresh(), vec![(3, 3)]);
+        assert!(s.take_fresh().is_empty());
+        assert_eq!(s.recorded(), 2, "imports are not locally recorded");
+    }
+
+    #[test]
+    fn canonical_sig_is_order_independent() {
+        let mut scratch = Vec::new();
+        let a = canonical_sig(&[5, 9, 2], &mut scratch);
+        let b = canonical_sig(&[9, 2, 5], &mut scratch);
+        assert_eq!(a, b, "set semantics: decision order must not matter");
+        assert_ne!(a, canonical_sig(&[5, 9], &mut scratch), "different set");
+        assert_eq!(a.0, 3, "the group is the set size");
+    }
+
+    #[test]
+    fn activity_orders_by_bumps_and_survives_rescale() {
+        let mut act = Activity::new(3);
+        act.bump(1);
+        act.decay();
+        act.bump(2);
+        assert!(act.score(2) > act.score(1), "later bumps weigh more");
+        assert!(act.score(1) > act.score(0));
+        // Hammer decays until a rescale triggers; ordering must survive.
+        for _ in 0..600 {
+            act.decay();
+        }
+        act.bump(0);
+        assert!(act.score(0) > act.score(2));
+        assert!(act.score(2) >= act.score(1), "rescale preserves order");
+    }
+
+    #[test]
+    fn learn_config_defaults_off() {
+        let off = LearnConfig::from_options(&SearchOptions::default());
+        assert!(!off.enabled());
+        assert!(!off.nogoods_on());
+        let on = LearnConfig::from_options(&SearchOptions {
+            nogood_capacity: Some(1 << 12),
+            restarts: Some(true),
+            activity: Some(true),
+        });
+        assert!(on.enabled() && on.nogoods_on() && on.restarts && on.activity);
+    }
+}

@@ -34,12 +34,14 @@ pub(crate) use state::Bin;
 use state::State;
 
 use super::api::CancelToken;
+use super::cdcl::{canonical_sig, luby, Activity, LearnConfig, NoGood, NoGoodStore, RESTART_UNIT};
 use super::portfolio::{Incumbent, SubtreeOutcome};
+use super::trail::Mark;
 use super::{
     check_valid, prune_redundant, serial_schedule, Budget, Schedule, Scheduler, SearchStats,
     SolveReport, SolveRequest, SolveResult, StageStats, Termination,
 };
-use crate::graph::{critical_path_len, static_levels, Cycles, Dag};
+use crate::graph::{critical_path_len, static_levels, Cycles, Dag, NodeId};
 use std::time::{Duration, Instant};
 
 /// Legacy default wall-clock budget of the `#[doc(hidden)]` shim entry
@@ -163,6 +165,12 @@ impl CpSolver {
         let mut best_ms = best.makespan();
         let mut found_leaf = false;
 
+        // Conflict-driven learning: resolved per request, fully off by
+        // default (`learn: None` keeps the historical search byte-id).
+        let learn_cfg = LearnConfig::from_options(&req.search);
+        let mut store = NoGoodStore::new(learn_cfg.nogood_capacity);
+        let mut activity = Activity::new(g.n());
+
         let mut search = Search {
             g,
             m,
@@ -176,12 +184,17 @@ impl CpSolver {
             timed_out: false,
             budget_out: false,
             cancelled: false,
+            segment_limit: u64::MAX,
+            segment_cut: false,
             best_ms: &mut best_ms,
             best: &mut best,
             found_leaf: &mut found_leaf,
             shared: req.incumbent.as_deref(),
             consult_shared: req.consult_incumbent,
             cancel: req.cancel.as_ref(),
+            learn: learn_cfg
+                .enabled()
+                .then(|| Learn::new(learn_cfg, &mut store, &mut activity)),
         };
         let exhausted = if *search.best_ms <= cp_lb {
             true // warm start already matches the absolute lower bound
@@ -190,7 +203,11 @@ impl CpSolver {
             search.dfs_reference(root)
         } else {
             let mut root = State::root(g, m, sink, encoding);
-            search.dfs(&mut root)
+            if learn_cfg.restarts {
+                search.run_restarting(&mut root)
+            } else {
+                search.dfs(&mut root)
+            }
         };
         let optimal = exhausted && !search.timed_out && !search.budget_out && !search.cancelled;
         let explored = search.explored;
@@ -198,6 +215,10 @@ impl CpSolver {
         let leaves = search.leaves;
         let timed_out = search.timed_out;
         let cancelled = search.cancelled;
+        let (nogood_hits, restarts, max_depth) = search
+            .learn
+            .as_ref()
+            .map_or((0, 0, 0), |l| (l.nogood_hits, l.restarts, l.max_depth));
         drop(search);
         // Exhaustion while consulting an external bound below our own
         // best proves the *bound* optimal, not the schedule in hand.
@@ -222,6 +243,11 @@ impl CpSolver {
                     explored,
                     pruned,
                     leaves,
+                    nogoods_recorded: store.recorded(),
+                    nogood_hits,
+                    nogood_flushes: store.flushes(),
+                    restarts,
+                    max_depth,
                     wall_cut: timed_out,
                     wall,
                     stages: vec![StageStats { name: "cp-dfs", wall, explored }],
@@ -262,6 +288,59 @@ impl Scheduler for CpSolver {
     }
 }
 
+/// Conflict-driven-learning state threaded through one [`Search`]. The
+/// store and activity table are *borrowed* so the portfolio's segment
+/// runner ([`CpTask`]) can persist them across restart segments; the
+/// decision stacks are rebuilt per segment (re-seeded from the subtree
+/// prefix, so no-good signatures are always rooted at the global root).
+struct Learn<'a> {
+    cfg: LearnConfig,
+    store: &'a mut NoGoodStore,
+    activity: &'a mut Activity,
+    /// Encoded decision set from the global root (subtree prefix
+    /// included) — the canonical no-good namespace shared across tasks.
+    decisions: Vec<u64>,
+    /// Trail mark taken right before each decision (conflict analysis
+    /// walks the trail above the last one).
+    decision_marks: Vec<Mark>,
+    scratch: Vec<u64>,
+    nogood_hits: u64,
+    restarts: u64,
+    max_depth: u64,
+}
+
+impl<'a> Learn<'a> {
+    fn new(cfg: LearnConfig, store: &'a mut NoGoodStore, activity: &'a mut Activity) -> Self {
+        Self {
+            cfg,
+            store,
+            activity,
+            decisions: Vec::new(),
+            decision_marks: Vec::new(),
+            scratch: Vec::new(),
+            nogood_hits: 0,
+            restarts: 0,
+            max_depth: 0,
+        }
+    }
+}
+
+/// Encode one binary decision as a canonical `u64` word for no-good
+/// signatures. Top-bit tags keep assignment, communication and order
+/// decisions in disjoint namespaces.
+fn encode_bin(var: Bin, val: i8) -> u64 {
+    match var {
+        Bin::X(i) => (1u64 << 62) | ((i as u64) << 1) | (val as u64),
+        Bin::D(i) => (2u64 << 62) | ((i as u64) << 1) | (val as u64),
+    }
+}
+
+/// Encode one order decision (node ids fit u16 — `State::orders` already
+/// stores them as such).
+fn encode_order(core: usize, a: NodeId, b: NodeId) -> u64 {
+    (3u64 << 62) | ((core as u64) << 32) | ((a as u64) << 16) | (b as u64)
+}
+
 struct Search<'a> {
     g: &'a Dag,
     m: usize,
@@ -275,6 +354,12 @@ struct Search<'a> {
     timed_out: bool,
     budget_out: bool,
     cancelled: bool,
+    /// Restart machinery: absolute explored-node count at which the
+    /// current Luby segment ends (`u64::MAX` = no segmentation) and the
+    /// flag that unwinds the search when it does. Both inert with
+    /// learning off — the byte-parity pins cover that.
+    segment_limit: u64,
+    segment_cut: bool,
     best_ms: &'a mut Cycles,
     best: &'a mut Schedule,
     found_leaf: &'a mut bool,
@@ -287,12 +372,15 @@ struct Search<'a> {
     /// Cooperative cancellation flag from the request (polled at the
     /// same cadence as the wall-clock deadline).
     cancel: Option<&'a CancelToken>,
+    /// Conflict-driven learning; `None` keeps every historical code path
+    /// byte-identical (pinned by `tests/trail_search_parity.rs`).
+    learn: Option<Learn<'a>>,
 }
 
 impl<'a> Search<'a> {
     /// True once any stop condition fired; the search unwinds.
     fn stopped(&self) -> bool {
-        self.timed_out || self.budget_out || self.cancelled
+        self.timed_out || self.budget_out || self.cancelled || self.segment_cut
     }
 
     /// Upper bound used for propagation and pruning: the local incumbent,
@@ -315,6 +403,10 @@ impl<'a> Search<'a> {
                 self.budget_out = true;
                 return false;
             }
+        }
+        if self.explored > self.segment_limit {
+            self.segment_cut = true;
+            return false;
         }
         if self.explored % 256 == 0 {
             if self.cancel.map_or(false, CancelToken::is_cancelled) {
@@ -347,6 +439,82 @@ impl<'a> Search<'a> {
         }
     }
 
+    /// Learning bookkeeping around one decision: record the encoded word
+    /// and the pre-decision trail mark. No-ops with learning off.
+    fn push_decision(&mut self, word: u64, mark: Mark) {
+        if let Some(learn) = self.learn.as_mut() {
+            learn.decisions.push(word);
+            learn.decision_marks.push(mark);
+            learn.max_depth = learn.max_depth.max(learn.decisions.len() as u64);
+        }
+    }
+
+    fn pop_decision(&mut self) {
+        if let Some(learn) = self.learn.as_mut() {
+            learn.decisions.pop();
+            learn.decision_marks.pop();
+        }
+    }
+
+    /// Is the current decision set a known-refuted no-good? Checked at
+    /// node entry, before propagation (a hit skips the whole subtree).
+    fn nogood_hit(&mut self) -> bool {
+        let Some(learn) = self.learn.as_mut() else { return false };
+        if !learn.cfg.nogoods_on() || learn.decisions.is_empty() {
+            return false;
+        }
+        let ng = canonical_sig(&learn.decisions, &mut learn.scratch);
+        if learn.store.contains(ng) {
+            learn.nogood_hits += 1;
+            return true;
+        }
+        false
+    }
+
+    /// Conflict hook, fired where the search *proves* the current
+    /// decision set admits nothing better than `cap()` (failed
+    /// propagation or lower-bound closure): bump the activity of every
+    /// node the failure touched since the last decision, then learn the
+    /// refuted decision set as a no-good. Sound to reuse anywhere the
+    /// bound is at most the one it was proven under — bounds only ever
+    /// descend from one shared seed.
+    fn on_conflict(&mut self, st: &State) {
+        let Some(learn) = self.learn.as_mut() else { return };
+        if learn.cfg.activity {
+            if let Some(&mark) = learn.decision_marks.last() {
+                let act = &mut *learn.activity;
+                st.conflict_nodes(mark, |v| act.bump(v));
+                act.decay();
+            }
+        }
+        if learn.cfg.nogoods_on() && !learn.decisions.is_empty() {
+            learn.store.record(canonical_sig(&learn.decisions, &mut learn.scratch));
+        }
+    }
+
+    /// Luby-restart driver: run [`Search::dfs`] in segments of
+    /// `luby(k) * RESTART_UNIT` explored nodes, re-diving from the (fully
+    /// unwound) root between segments. The incumbent, no-good store and
+    /// activity table persist, so each restart replays with everything
+    /// learned so far. Keyed on explored-node counts only — never wall
+    /// clock — so restart points are deterministic.
+    fn run_restarting(&mut self, st: &mut State) -> bool {
+        let mut k = 0u64;
+        loop {
+            self.segment_limit = self.explored.saturating_add(luby(k) * RESTART_UNIT);
+            let complete = self.dfs(st);
+            k += 1;
+            if !self.segment_cut {
+                self.segment_limit = u64::MAX;
+                return complete;
+            }
+            self.segment_cut = false;
+            if let Some(learn) = self.learn.as_mut() {
+                learn.restarts += 1;
+            }
+        }
+    }
+
     /// Trail-based DFS: branches mutate `st` in place and undo to a mark
     /// on backtrack — no `State` clone anywhere in the loop. Returns true
     /// if the subtree was fully explored (no timeout/budget cut).
@@ -354,27 +522,41 @@ impl<'a> Search<'a> {
         if !self.enter_node() {
             return false;
         }
+        // Known-refuted decision set? Prune before propagating.
+        if self.nogood_hit() {
+            self.pruned += 1;
+            return true;
+        }
         // Propagate to fixpoint under the current incumbent bound. All
         // prunings are trailed, so the caller's undo removes them even on
         // the infeasible path.
         if !st.propagate(self.g, self.m, self.levels, self.encoding, self.cap()) {
             self.pruned += 1;
+            self.on_conflict(st);
             return true; // infeasible or dominated: pruned subtree, fully explored
         }
         // Lower bound pruning.
         if st.lower_bound(self.g, self.m, self.levels) >= self.cap() {
             self.pruned += 1;
+            self.on_conflict(st);
             return true;
         }
-        // Branch on the next undecided binary (greedy value first).
-        if let Some((var, first)) = st.pick_branch(self.g, self.m, self.encoding) {
+        // Branch on the next undecided binary (greedy value first; with
+        // activity on, the hottest open node instead of the first).
+        let branch = {
+            let act = self.learn.as_ref().filter(|l| l.cfg.activity).map(|l| &*l.activity);
+            st.pick_branch(self.g, self.m, self.encoding, act)
+        };
+        if let Some((var, first)) = branch {
             let mut complete = true;
             for val in [first, 1 - first] {
                 let mark = st.mark();
+                self.push_decision(encode_bin(var, val), mark);
                 if st.assign(var, val) {
                     complete &= self.dfs(st);
                 }
                 st.undo_to(mark);
+                self.pop_decision();
                 if self.stopped() {
                     return false;
                 }
@@ -395,9 +577,11 @@ impl<'a> Search<'a> {
             let mut complete = true;
             for &(x, y) in &[(a, b), (b, a)] {
                 let mark = st.mark();
+                self.push_decision(encode_order(core, x, y), mark);
                 st.add_order(core, x, y);
                 complete &= self.dfs(st);
                 st.undo_to(mark);
+                self.pop_decision();
                 if self.stopped() {
                     return false;
                 }
@@ -424,7 +608,7 @@ impl<'a> Search<'a> {
             self.pruned += 1;
             return true;
         }
-        if let Some((var, first)) = st.pick_branch(self.g, self.m, self.encoding) {
+        if let Some((var, first)) = st.pick_branch(self.g, self.m, self.encoding, None) {
             let mut complete = true;
             for val in [first, 1 - first] {
                 let mut child = st.clone();
@@ -531,7 +715,9 @@ pub(crate) fn enumerate_prefixes(
             if st.lower_bound(g, m, levels) >= b0 {
                 continue;
             }
-            match st.pick_branch(g, m, encoding) {
+            // Static choice always: the root split must not depend on the
+            // request's learning overlay.
+            match st.pick_branch(g, m, encoding, None) {
                 Some((var, first)) => {
                     let mut a = prefix.clone();
                     a.push((var, first));
@@ -551,12 +737,198 @@ pub(crate) fn enumerate_prefixes(
     terminals
 }
 
+/// Persistent state of one portfolio subtree task in learning mode: the
+/// no-good store, activity table and incumbent survive across
+/// checkpointed restart segments ([`CpTask::run_segment`]), so the
+/// portfolio can merge freshly learned no-goods between segments at
+/// deterministic node-count boundaries (see `sched::portfolio`).
+pub(crate) struct CpTask {
+    prefix: CpPrefix,
+    store: NoGoodStore,
+    activity: Activity,
+    best: Schedule,
+    best_ms: Cycles,
+    found_leaf: bool,
+    /// Next Luby index: segment `k` gets `luby(k) * RESTART_UNIT` nodes.
+    luby_idx: u64,
+    /// Merge-board cursor: how many board entries were already absorbed.
+    imported: usize,
+    explored: u64,
+    pruned: u64,
+    leaves: u64,
+    nogood_hits: u64,
+    restarts: u64,
+    max_depth: u64,
+    done: bool,
+    exhausted: bool,
+    timed_out: bool,
+    cancelled: bool,
+}
+
+impl CpTask {
+    pub fn new(g: &Dag, prefix: CpPrefix, m: usize, b0: Cycles, learn: LearnConfig) -> Self {
+        Self {
+            prefix,
+            store: NoGoodStore::new(learn.nogood_capacity),
+            activity: Activity::new(g.n()),
+            best: Schedule::new(m),
+            best_ms: b0,
+            found_leaf: false,
+            luby_idx: 0,
+            imported: 0,
+            explored: 0,
+            pruned: 0,
+            leaves: 0,
+            nogood_hits: 0,
+            restarts: 0,
+            max_depth: 0,
+            done: false,
+            exhausted: false,
+            timed_out: false,
+            cancelled: false,
+        }
+    }
+
+    /// True once the subtree is exhausted or a hard budget fired;
+    /// further segments are no-ops.
+    pub fn done(&self) -> bool {
+        self.done
+    }
+
+    /// Absorb the shared merge board from its last-seen position. Own
+    /// publishes may reappear on the board; `NoGoodStore::absorb` skips
+    /// duplicates, so re-importing them is harmless (and deterministic).
+    pub fn import(&mut self, board: &[NoGood]) {
+        self.store.absorb(&board[self.imported.min(board.len())..]);
+        self.imported = board.len();
+    }
+
+    /// Run one Luby segment of this subtree's search (the whole rest of
+    /// the subtree when restarts are off) and return the no-goods learned
+    /// in it — the publish side of the portfolio's checkpointed merge.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_segment(
+        &mut self,
+        g: &Dag,
+        m: usize,
+        encoding: Encoding,
+        levels: &[Cycles],
+        b0: Cycles,
+        learn: LearnConfig,
+        shared: Option<&Incumbent>,
+        consult_shared: bool,
+        node_limit: Option<u64>,
+        deadline: Instant,
+        cancel: Option<&CancelToken>,
+    ) -> Vec<NoGood> {
+        if self.done {
+            return Vec::new();
+        }
+        let sink = g
+            .single_sink()
+            .expect("CP multi-root split requires a single-sink DAG");
+        let remaining = node_limit.map(|l| l.saturating_sub(self.explored));
+        if remaining == Some(0) {
+            self.done = true;
+            return self.store.take_fresh();
+        }
+        // Each segment re-dives from a fresh root: replay the prefix
+        // under the fixed bound `b0` (deterministic), then search with
+        // everything learned so far.
+        let mut st = State::root(g, m, sink, encoding);
+        if !replay_cp_prefix(&mut st, g, m, levels, encoding, b0, &self.prefix) {
+            self.done = true;
+            self.exhausted = true;
+            return self.store.take_fresh();
+        }
+        let mut learn_state = Learn::new(learn, &mut self.store, &mut self.activity);
+        for &(var, val) in &self.prefix {
+            learn_state.decisions.push(encode_bin(var, val));
+        }
+        let mut search = Search {
+            g,
+            m,
+            levels,
+            encoding,
+            deadline,
+            node_limit: remaining,
+            explored: 0,
+            pruned: 0,
+            leaves: 0,
+            timed_out: false,
+            budget_out: false,
+            cancelled: false,
+            segment_limit: if learn.restarts {
+                luby(self.luby_idx) * RESTART_UNIT
+            } else {
+                u64::MAX
+            },
+            segment_cut: false,
+            best_ms: &mut self.best_ms,
+            best: &mut self.best,
+            found_leaf: &mut self.found_leaf,
+            shared,
+            consult_shared,
+            cancel,
+            learn: Some(learn_state),
+        };
+        let complete = search.dfs(&mut st);
+        let cut = search.segment_cut;
+        let stopped_hard = search.timed_out || search.budget_out || search.cancelled;
+        self.timed_out |= search.timed_out;
+        self.cancelled |= search.cancelled;
+        self.explored += search.explored;
+        self.pruned += search.pruned;
+        self.leaves += search.leaves;
+        if let Some(l) = search.learn.as_ref() {
+            self.nogood_hits += l.nogood_hits;
+            self.max_depth = self.max_depth.max(l.max_depth);
+        }
+        drop(search);
+        self.luby_idx += 1;
+        if cut {
+            self.restarts += 1; // this segment ended in a restart
+        } else {
+            self.done = true;
+            self.exhausted = complete && !stopped_hard;
+        }
+        if stopped_hard {
+            self.done = true;
+        }
+        self.store.take_fresh()
+    }
+
+    /// Final per-subtree outcome in the portfolio's reduce format.
+    pub fn into_outcome(self, b0: Cycles) -> SubtreeOutcome {
+        debug_assert!(self.best_ms == b0 || self.found_leaf);
+        SubtreeOutcome {
+            best: if self.best_ms < b0 { Some(self.best) } else { None },
+            exhausted: self.exhausted,
+            timed_out: self.timed_out,
+            cancelled: self.cancelled,
+            explored: self.explored,
+            pruned: self.pruned,
+            leaves: self.leaves,
+            memo_hits: 0,
+            memo_peak: 0,
+            memo_flushes: 0,
+            nogoods_recorded: self.store.recorded(),
+            nogood_hits: self.nogood_hits,
+            nogood_flushes: self.store.flushes(),
+            restarts: self.restarts,
+            max_depth: self.max_depth,
+        }
+    }
+}
+
 /// Solve one subtree to exhaustion (or budget/deadline): fresh state, the
 /// prefix replayed under the fixed bound `b0`, then the ordinary trail
 /// DFS. Improvements are published to `shared`; pruning/propagation
 /// consults it only when `consult_shared` (live bound sharing,
 /// non-byte-deterministic). `best` is `Some` only when a schedule
-/// strictly better than `b0` was found.
+/// strictly better than `b0` was found. With learning enabled this runs
+/// the [`CpTask`] segment loop to completion (restarts honoured, no
+/// cross-task sharing — the portfolio drives sharing itself).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn solve_prefix(
     g: &Dag,
@@ -565,12 +937,23 @@ pub(crate) fn solve_prefix(
     levels: &[Cycles],
     prefix: &[(Bin, i8)],
     b0: Cycles,
+    learn: LearnConfig,
     shared: Option<&Incumbent>,
     consult_shared: bool,
     node_limit: Option<u64>,
     deadline: Instant,
     cancel: Option<&CancelToken>,
 ) -> SubtreeOutcome {
+    if learn.enabled() {
+        let mut task = CpTask::new(g, prefix.to_vec(), m, b0, learn);
+        while !task.done() {
+            task.run_segment(
+                g, m, encoding, levels, b0, learn, shared, consult_shared, node_limit, deadline,
+                cancel,
+            );
+        }
+        return task.into_outcome(b0);
+    }
     let sink = g
         .single_sink()
         .expect("CP multi-root split requires a single-sink DAG");
@@ -590,6 +973,11 @@ pub(crate) fn solve_prefix(
             memo_hits: 0,
             memo_peak: 0,
             memo_flushes: 0,
+            nogoods_recorded: 0,
+            nogood_hits: 0,
+            nogood_flushes: 0,
+            restarts: 0,
+            max_depth: 0,
         };
     }
     let mut search = Search {
@@ -605,12 +993,15 @@ pub(crate) fn solve_prefix(
         timed_out: false,
         budget_out: false,
         cancelled: false,
+        segment_limit: u64::MAX,
+        segment_cut: false,
         best_ms: &mut best_ms,
         best: &mut best,
         found_leaf: &mut found_leaf,
         shared,
         consult_shared,
         cancel,
+        learn: None,
     };
     let exhausted = search.dfs(&mut st);
     let cut = search.stopped();
@@ -631,6 +1022,11 @@ pub(crate) fn solve_prefix(
         memo_hits: 0,
         memo_peak: 0,
         memo_flushes: 0,
+        nogoods_recorded: 0,
+        nogood_hits: 0,
+        nogood_flushes: 0,
+        restarts: 0,
+        max_depth: 0,
     }
 }
 
@@ -652,6 +1048,10 @@ mod tests {
             node_limit: None,
         };
         CpSolver::new(cfg).solve(g, m)
+    }
+
+    fn placements(s: &Schedule) -> Vec<(usize, usize, Cycles, Cycles)> {
+        s.iter().map(|p| (p.core, p.node, p.start, p.finish)).collect()
     }
 
     fn chain3() -> Dag {
@@ -825,6 +1225,7 @@ mod tests {
                 &levels,
                 p,
                 b0,
+                LearnConfig::default(),
                 None,
                 false,
                 None,
@@ -840,6 +1241,89 @@ mod tests {
         }
         assert!(exhausted);
         assert_eq!(best, Some(seq.result.schedule.makespan()));
+    }
+
+    #[test]
+    fn learning_still_proves_the_optimum() {
+        // Every learning feature on: the no-good store, activity
+        // branching and Luby restarts must not change the proven optimum
+        // (pruning is sound, restarts preserve the incumbent), and the
+        // learning counters must surface through the report.
+        use crate::sched::SearchOptions;
+        let mut g = paper_example_dag();
+        ensure_single_sink(&mut g);
+        let m = 2;
+        let base = solve(&g, m, Encoding::Improved, 60);
+        assert!(base.result.optimal);
+        let req = SolveRequest::new(&g, m)
+            .budget(Budget { deadline: Some(Duration::from_secs(60)), node_limit: None })
+            .search(SearchOptions {
+                nogood_capacity: Some(1 << 12),
+                restarts: Some(true),
+                activity: Some(true),
+            });
+        let rep = Scheduler::solve(&CpSolver::improved(), &req);
+        assert_eq!(rep.termination, Termination::ProvenOptimal);
+        assert_eq!(rep.schedule.makespan(), base.result.schedule.makespan());
+        assert!(check_valid(&g, &rep.schedule).is_ok());
+        assert!(rep.stats.nogoods_recorded > 0, "conflicts must be learned");
+        assert!(rep.stats.max_depth > 0);
+    }
+
+    #[test]
+    fn learning_solves_are_deterministic() {
+        // Same request twice ⇒ byte-identical stats and schedule: the
+        // restart points are node-count keyed and the store/activity
+        // arithmetic is integral.
+        use crate::sched::SearchOptions;
+        let mut g = crate::daggen::generate(&crate::daggen::DagGenConfig::paper(20), 5);
+        ensure_single_sink(&mut g);
+        let solve_once = || {
+            let req = SolveRequest::new(&g, 4)
+                .budget(Budget {
+                    deadline: Some(Duration::from_secs(3600)),
+                    node_limit: Some(2000),
+                })
+                .search(SearchOptions {
+                    nogood_capacity: Some(1 << 10),
+                    restarts: Some(true),
+                    activity: Some(true),
+                });
+            Scheduler::solve(&CpSolver::improved(), &req)
+        };
+        let a = solve_once();
+        let b = solve_once();
+        assert_eq!(placements(&a.schedule), placements(&b.schedule));
+        assert_eq!(a.stats.explored, b.stats.explored);
+        assert_eq!(a.stats.nogoods_recorded, b.stats.nogoods_recorded);
+        assert_eq!(a.stats.nogood_hits, b.stats.nogood_hits);
+        assert_eq!(a.stats.restarts, b.stats.restarts);
+        assert_eq!(a.stats.max_depth, b.stats.max_depth);
+    }
+
+    #[test]
+    fn learning_off_overlay_matches_the_legacy_path() {
+        // `SearchOptions::default()` must leave the request path
+        // byte-identical to the legacy shim (learn = None, no segment
+        // cuts): identical explored counts and schedules.
+        let mut g = crate::daggen::generate(&crate::daggen::DagGenConfig::paper(20), 5);
+        ensure_single_sink(&mut g);
+        let cfg = CpConfig {
+            encoding: Encoding::Improved,
+            timeout: Duration::from_secs(3600),
+            warm_start: None,
+            node_limit: Some(500),
+        };
+        let legacy = CpSolver::new(cfg).solve(&g, 4);
+        let req = SolveRequest::new(&g, 4).budget(Budget {
+            deadline: Some(Duration::from_secs(3600)),
+            node_limit: Some(500),
+        });
+        let rep = Scheduler::solve(&CpSolver::improved(), &req);
+        assert_eq!(rep.stats.explored, legacy.result.explored);
+        assert_eq!(placements(&rep.schedule), placements(&legacy.result.schedule));
+        assert_eq!(rep.stats.restarts, 0);
+        assert_eq!(rep.stats.nogoods_recorded, 0);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! clone-based reference search used as the differential-testing oracle.
 
 use crate::graph::{Cycles, Dag, NodeId};
+use crate::sched::cdcl::Activity;
 use crate::sched::trail::{CpOp, Mark, Trail};
 use crate::sched::Schedule;
 use std::sync::Arc;
@@ -589,7 +590,19 @@ impl State {
     /// mimics a list schedule and lands on a good incumbent immediately
     /// (the anytime behaviour §4.3 relies on). Duplicate instances and
     /// Tang communication variables are tried 0-first.
-    pub fn pick_branch(&self, g: &Dag, m: usize, encoding: Encoding) -> Option<(Bin, i8)> {
+    ///
+    /// With `activity` (the learning search's conflict scores) the *node*
+    /// choice prefers the highest-activity open node, ties broken by the
+    /// same topological order — all-zero scores therefore reproduce the
+    /// static choice exactly, and `None` skips the scoring loop entirely
+    /// (learning-off byte parity).
+    pub fn pick_branch(
+        &self,
+        g: &Dag,
+        m: usize,
+        encoding: Encoding,
+        activity: Option<&Activity>,
+    ) -> Option<(Bin, i8)> {
         // List-scheduling-style guidance: the score of placing v on p is
         // max(data-arrival lower bound, committed load of p). Without the
         // load term every s_lb is 0 at the root and the first dive packs
@@ -601,7 +614,23 @@ impl State {
         // values to the scan they replaced.
         debug_assert_eq!(self.load, self.scan_load(g, m), "incremental load diverged");
         let load = &self.load;
-        for &v in &self.ctx.topo {
+        let open = |v: NodeId| (0..m).any(|p| self.xi(v, p) == -1);
+        let chosen = match activity {
+            None => self.ctx.topo.iter().copied().find(|&v| open(v)),
+            Some(act) => {
+                let mut hot: Option<(NodeId, u64)> = None;
+                for &v in &self.ctx.topo {
+                    if open(v) {
+                        let s = act.score(v);
+                        if hot.map_or(true, |(_, hs)| s > hs) {
+                            hot = Some((v, s));
+                        }
+                    }
+                }
+                hot.map(|(v, _)| v)
+            }
+        };
+        if let Some(v) = chosen {
             let has_instance = (0..m).any(|p| self.xi(v, p) == 1);
             let mut best: Option<(usize, Cycles)> = None;
             for p in 0..m {
@@ -612,10 +641,9 @@ impl State {
                     }
                 }
             }
-            if let Some((p, _)) = best {
-                let first = if has_instance { 0 } else { 1 };
-                return Some((Bin::X(v * m + p), first));
-            }
+            let (p, _) = best.expect("an open node has an unset core");
+            let first = if has_instance { 0 } else { 1 };
+            return Some((Bin::X(v * m + p), first));
         }
         if encoding == Encoding::Tang {
             for (idx, &val) in self.d.iter().enumerate() {
@@ -625,6 +653,24 @@ impl State {
             }
         }
         None
+    }
+
+    /// Conflict-analysis input of the learning search: feed `f` the node
+    /// of every variable touched by trail entries above `mark` (the
+    /// writes of the propagation that just failed, plus the decision
+    /// itself). `D` and order entries carry no per-node index worth
+    /// bumping — the bound/assignment writes they cause are reported
+    /// through their own entries.
+    pub fn conflict_nodes(&self, mark: Mark, mut f: impl FnMut(NodeId)) {
+        let m = self.ctx.m;
+        for op in self.trail.entries_above(mark) {
+            match *op {
+                CpOp::X { idx, .. } | CpOp::Lb { idx, .. } | CpOp::Ub { idx, .. } => {
+                    f(idx as usize / m)
+                }
+                CpOp::D { .. } | CpOp::Order => {}
+            }
+        }
     }
 
     /// The O(n·m) committed-load scan the trailed `load` vector replaced;
@@ -804,7 +850,7 @@ mod tests {
                         // Descend: open a level, make a decision, propagate.
                         let mark = st.mark();
                         let snap = snapshot(&st);
-                        let decided = match st.pick_branch(&g, m, encoding) {
+                        let decided = match st.pick_branch(&g, m, encoding, None) {
                             Some((var, first)) => {
                                 let val = if rng.next_below(2) == 0 { first } else { 1 - first };
                                 st.assign(var, val)
@@ -860,6 +906,67 @@ mod tests {
         assert_eq!(snapshot(&st), snap);
     }
 
+    /// Activity-guided branching with all-zero scores must equal the
+    /// static topological choice; bumping a later open node redirects
+    /// the branch to it (the per-node core choice is unchanged).
+    #[test]
+    fn activity_branching_defaults_to_static_choice() {
+        let mut g = generate(&DagGenConfig::paper(8), 11);
+        ensure_single_sink(&mut g);
+        let sink = g.single_sink().expect("single sink");
+        let levels = static_levels(&g);
+        let m = 2;
+        let encoding = Encoding::Improved;
+        let mut st = State::root(&g, m, sink, encoding);
+        st.propagate(&g, m, &levels, encoding, g.total_wcet() + 1);
+        let mut act = Activity::new(g.n());
+        let static_pick = st.pick_branch(&g, m, encoding, None);
+        assert!(static_pick.is_some());
+        assert_eq!(
+            st.pick_branch(&g, m, encoding, Some(&act)),
+            static_pick,
+            "all-zero scores reproduce the static choice"
+        );
+        let last_open = *st
+            .ctx
+            .topo
+            .iter()
+            .rev()
+            .find(|&&v| (0..m).any(|p| st.xi(v, p) == -1))
+            .expect("root state has open nodes");
+        act.bump(last_open);
+        match st.pick_branch(&g, m, encoding, Some(&act)) {
+            Some((Bin::X(i), _)) => assert_eq!(i / m, last_open, "hottest node wins"),
+            other => panic!("expected an X branch, got {other:?}"),
+        }
+    }
+
+    /// `conflict_nodes` must report the node of every trailed write above
+    /// a mark — including the decision itself — without popping anything.
+    #[test]
+    fn conflict_nodes_reports_touched_nodes() {
+        let mut g = generate(&DagGenConfig::paper(8), 5);
+        ensure_single_sink(&mut g);
+        let sink = g.single_sink().expect("single sink");
+        let levels = static_levels(&g);
+        let m = 2;
+        let encoding = Encoding::Improved;
+        let ub = g.total_wcet() + 1;
+        let mut st = State::root(&g, m, sink, encoding);
+        st.propagate(&g, m, &levels, encoding, ub);
+        let mark = st.mark();
+        let snap = snapshot(&st);
+        let (var, first) = st.pick_branch(&g, m, encoding, None).expect("open root");
+        assert!(st.assign(var, first));
+        st.propagate(&g, m, &levels, encoding, ub);
+        let mut seen = vec![false; st.ctx.n];
+        st.conflict_nodes(mark, |v| seen[v] = true);
+        let Bin::X(i) = var else { panic!("improved encoding branches on X") };
+        assert!(seen[i / m], "the decision node itself is reported");
+        st.undo_to(mark);
+        assert_eq!(snapshot(&st), snap, "analysis pops nothing");
+    }
+
     /// The trailed per-core loads must equal the full x-matrix scan at
     /// every point of a propagate/assign/undo round trip.
     #[test]
@@ -879,7 +986,7 @@ mod tests {
                 assert_eq!(st.load, st.scan_load(&g, m));
                 if rng.next_below(3) < 2 {
                     let mark = st.mark();
-                    if let Some((var, first)) = st.pick_branch(&g, m, encoding) {
+                    if let Some((var, first)) = st.pick_branch(&g, m, encoding, None) {
                         let val = if rng.next_below(2) == 0 { first } else { 1 - first };
                         st.assign(var, val);
                         st.propagate(&g, m, &levels, encoding, ub);

@@ -78,6 +78,7 @@
 
 pub mod api;
 pub mod bnb;
+pub mod cdcl;
 pub mod cp;
 pub mod dsh;
 pub mod hlfet;
@@ -91,8 +92,8 @@ pub mod trail;
 mod validity;
 
 pub use api::{
-    BnbOptions, Budget, CancelToken, CpOptions, PortfolioOptions, SearchStats, SolveReport,
-    SolveRequest, StageStats, Termination,
+    BnbOptions, Budget, CancelToken, CpOptions, PortfolioOptions, SearchOptions, SearchStats,
+    SolveReport, SolveRequest, StageStats, Termination,
 };
 pub use program::{derive_comms, derive_programs, CommOp, CoreProgram, CoreStep};
 pub use validity::{check_valid, prune_redundant, ValidityError};

@@ -210,6 +210,27 @@ impl ScheduleCache {
         }
     }
 
+    /// Cross-batch warm hint: the oldest L1 entry solving the **same
+    /// problem** (`key[TAG_WORDS..]` — the DAG + core-count suffix of the
+    /// canonical key) under a *different* resolved-request tag, if any.
+    /// A repeat request whose budget or options changed misses the exact
+    /// key but can seed its search with the schedule already known.
+    /// Deterministic: the FIFO insertion order is scanned, so the hint is
+    /// a pure function of the cache's insert history. L1 only — no disk
+    /// scan (the L2 index is keyed exactly, not by suffix).
+    pub fn warm_hint(&self, key: &[u64]) -> Option<Arc<CachedSolve>> {
+        const TAG: usize = super::TAG_WORDS;
+        if key.len() < TAG {
+            return None;
+        }
+        let inner = self.inner.lock().expect("cache mutex");
+        inner
+            .order
+            .iter()
+            .find(|k| k.len() >= TAG && k[TAG..] == key[TAG..] && k.as_slice() != key)
+            .and_then(|k| inner.map.get(k).cloned())
+    }
+
     pub fn stats(&self) -> CacheStats {
         let inner = self.inner.lock().expect("cache mutex");
         let l2 = inner.l2.as_ref().map(PersistentStore::stats).unwrap_or_default();
@@ -309,6 +330,26 @@ mod tests {
         let hit = cache.get(&k).expect("hit across restart");
         assert_eq!(hit.schedule.iter().next().map(|p| p.start), Some(3));
         assert_eq!(hit.termination, Termination::HeuristicComplete);
+    }
+
+    #[test]
+    fn warm_hint_matches_same_problem_under_a_different_tag() {
+        use crate::sched::portfolio::TAG_WORDS;
+        let g = paper_example_dag();
+        let cache = ScheduleCache::new(4);
+        let tag_a: Vec<u64> = (0..TAG_WORDS as u64).collect();
+        let mut tag_b = tag_a.clone();
+        tag_b[TAG_WORDS - 1] += 1; // e.g. a different node budget
+        let ka = canonical_key(&g, 2, &tag_a);
+        let kb = canonical_key(&g, 2, &tag_b);
+        cache.insert(ka.clone(), dummy(1));
+        assert!(cache.warm_hint(&ka).is_none(), "the exact key is not a hint");
+        let hint = cache.warm_hint(&kb).expect("same problem under a different tag");
+        assert_eq!(hint.schedule.iter().next().map(|p| p.start), Some(1));
+        assert!(
+            cache.warm_hint(&canonical_key(&g, 3, &tag_a)).is_none(),
+            "a different core count is a different problem"
+        );
     }
 
     #[test]

@@ -85,16 +85,18 @@ pub use pool::parallel_map;
 
 use super::api::cancelled_fallback;
 use super::bnb;
+use super::cdcl::{LearnConfig, NoGood};
 use super::cp;
 use super::cp::{CpSolver, Encoding};
 use super::dsh::Dsh;
 use super::hlfet::Hlfet;
 use super::ish::Ish;
 use super::{
-    check_valid, Budget, CancelToken, CpOptions, Schedule, Scheduler, SearchStats, SolveReport,
-    SolveRequest, SolveResult, StageStats, Termination,
+    check_valid, Budget, CancelToken, CpOptions, Schedule, Scheduler, SearchOptions, SearchStats,
+    SolveReport, SolveRequest, SolveResult, StageStats, Termination,
 };
 use crate::graph::{critical_path_len, ensure_single_sink, static_levels, Cycles, Dag, NodeId};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// Result of solving one subtree task (shared by the BnB and CP hooks).
@@ -121,6 +123,16 @@ pub struct SubtreeOutcome {
     pub memo_peak: usize,
     /// Dominance-memo generation flushes of this task (BnB only).
     pub memo_flushes: u64,
+    /// No-goods recorded by this task (0 with learning off).
+    pub nogoods_recorded: u64,
+    /// Nodes pruned by a no-good hit in this task.
+    pub nogood_hits: u64,
+    /// Capacity-bound generation flushes of the task's no-good store.
+    pub nogood_flushes: u64,
+    /// Deterministic Luby restarts performed by this task.
+    pub restarts: u64,
+    /// Deepest decision level reached by this task.
+    pub max_depth: u64,
 }
 
 /// Portfolio configuration: worker-pool and search-shape knobs. The
@@ -169,6 +181,13 @@ pub struct PortfolioConfig {
     /// in-memory cache only; `Some(dir)` makes solves survive process
     /// restarts (see [`PersistentStore`] for the failure containment).
     pub cache_dir: Option<std::path::PathBuf>,
+    /// Conflict-driven-learning defaults for the exact stages (see
+    /// `sched::cdcl`); request-level [`SearchOptions`] fields override
+    /// these per solve. All-`None` (the default) keeps the exact stages
+    /// on their historical learning-free paths, byte for byte. With
+    /// restarts enabled the stages additionally share learned no-goods
+    /// across subtree tasks at deterministic segment checkpoints.
+    pub search: SearchOptions,
 }
 
 impl Default for PortfolioConfig {
@@ -187,6 +206,7 @@ impl Default for PortfolioConfig {
             memo_capacity: bnb::DEFAULT_MEMO_CAPACITY,
             cache_capacity: 128,
             cache_dir: None,
+            search: SearchOptions::default(),
         }
     }
 }
@@ -195,14 +215,14 @@ impl Default for PortfolioConfig {
 /// the set of result-affecting knobs changes). Carried in the header of
 /// every persistent cache file: a store written under a different key
 /// version is stale by definition and ignored on open.
-pub const KEY_VERSION: u64 = 2;
+pub const KEY_VERSION: u64 = 3;
 
 /// Fixed length in words of the resolved-request tag that prefixes every
 /// canonical key ([`Knobs::cache_tag`] emits exactly this many words,
 /// `debug_assert`ed there): `key[TAG_WORDS..]` encodes only the problem
 /// (DAG structure + `m`), which is how `sched::serve` groups requests by
 /// identical problem without re-walking each DAG.
-pub(crate) const TAG_WORDS: usize = 12;
+pub(crate) const TAG_WORDS: usize = 15;
 
 /// One request's fully-resolved knobs: config defaults overlaid with the
 /// request's [`PortfolioOptions`](super::PortfolioOptions) and budget.
@@ -222,6 +242,8 @@ struct Knobs {
     node_limit_per_root: Option<u64>,
     /// The request's wall-clock safety valve, applied per stage.
     deadline: Option<Duration>,
+    /// Resolved conflict-driven-learning config of the exact stages.
+    search: LearnConfig,
 }
 
 impl Knobs {
@@ -246,6 +268,9 @@ impl Knobs {
             self.hybrid_node_limit.is_some() as u64,
             self.hybrid_node_limit.unwrap_or(0),
             self.memo_capacity as u64,
+            self.search.nogood_capacity as u64,
+            self.search.restarts as u64,
+            self.search.activity as u64,
         ];
         debug_assert_eq!(tag.len(), TAG_WORDS, "keep TAG_WORDS in sync with the tag layout");
         tag
@@ -318,6 +343,16 @@ pub struct ExactStage {
     /// Max dominance-memo high-water mark over the stage's tasks.
     pub memo_peak: usize,
     pub memo_flushes: u64,
+    /// No-goods recorded across the stage's tasks (0 with learning off).
+    pub nogoods_recorded: u64,
+    /// Nodes pruned by a no-good hit across the stage's tasks.
+    pub nogood_hits: u64,
+    /// No-good-store generation flushes across the stage's tasks.
+    pub nogood_flushes: u64,
+    /// Deterministic Luby restarts across the stage's tasks.
+    pub restarts: u64,
+    /// Deepest decision level reached by any task.
+    pub max_depth: u64,
     /// Number of subtree roots the search was split into.
     pub roots: usize,
 }
@@ -336,8 +371,51 @@ impl ExactStage {
             memo_hits: 0,
             memo_peak: 0,
             memo_flushes: 0,
+            nogoods_recorded: 0,
+            nogood_hits: 0,
+            nogood_flushes: 0,
+            restarts: 0,
+            max_depth: 0,
             roots: 0,
         }
+    }
+
+    /// Fold this stage's counters into an aggregate report. Exhaustively
+    /// destructured for the same reason as [`SearchStats::absorb`]: a
+    /// newly added counter cannot be silently dropped from merged
+    /// reports. A wall-clock-cut stage sets `wall_cut` (the one cut that
+    /// makes a result machine-dependent).
+    fn fold_into(&self, stats: &mut SearchStats) {
+        let Self {
+            best: _,
+            exhausted: _,
+            timed_out,
+            cancelled: _,
+            explored,
+            pruned,
+            leaves,
+            memo_hits,
+            memo_peak,
+            memo_flushes,
+            nogoods_recorded,
+            nogood_hits,
+            nogood_flushes,
+            restarts,
+            max_depth,
+            roots: _,
+        } = self;
+        stats.explored += explored;
+        stats.pruned += pruned;
+        stats.leaves += leaves;
+        stats.memo_hits += memo_hits;
+        stats.memo_peak = stats.memo_peak.max(*memo_peak);
+        stats.memo_flushes += memo_flushes;
+        stats.nogoods_recorded += nogoods_recorded;
+        stats.nogood_hits += nogood_hits;
+        stats.nogood_flushes += nogood_flushes;
+        stats.restarts += restarts;
+        stats.max_depth = stats.max_depth.max(*max_depth);
+        stats.wall_cut |= timed_out;
     }
 }
 
@@ -454,6 +532,21 @@ impl Portfolio {
             g
         };
 
+        // Cross-batch warm start: a solve of the *same problem* cached
+        // under a different budget/config tag seeds the hybrid racer's
+        // warm start, so a re-budgeted repeat request starts from the
+        // best schedule already known instead of from scratch. The hint
+        // makes the result depend on cache history, so a warm-hinted
+        // solve is cached only when exhaustive (then the result is the
+        // history-independent proven one).
+        let warm_hint = self.cache.warm_hint(&key).map(|hit| {
+            if stripped {
+                extend_with_virtual_sink(gs, &hit.schedule)
+            } else {
+                hit.schedule.clone()
+            }
+        });
+
         // ---- Stage 1: heuristic race (request fan-out) ---------------
         // Each racer solves a child request over the (extended) graph.
         // DSH is computed once and shared: it is both racer #2 and the
@@ -477,18 +570,24 @@ impl Portfolio {
             2 => ("DSH", dsh.clone()),
             _ => {
                 let mut r = hybrid_req.clone();
-                r.cp.warm_start = Some(dsh.schedule.clone());
+                let mut ws = dsh.schedule.clone();
+                if let Some(h) = &warm_hint {
+                    if reduction_prefers(h, &ws) {
+                        ws = h.clone();
+                    }
+                }
+                r.cp.warm_start = Some(ws);
                 ("Hybrid-DSH+CP", Scheduler::solve(&CpSolver::improved(), &r))
             }
         });
         let race_wall = t_race.elapsed();
-        let mut explored: u64 = race.iter().map(|(_, r)| r.stats.explored).sum();
-        let mut pruned: u64 = race.iter().map(|(_, r)| r.stats.pruned).sum();
-        let mut memo_hits: u64 = race.iter().map(|(_, r)| r.stats.memo_hits).sum();
-        let mut memo_flushes: u64 = race.iter().map(|(_, r)| r.stats.memo_flushes).sum();
-        let mut memo_peak: usize = race.iter().map(|(_, r)| r.stats.memo_peak).max().unwrap_or(0);
-        let mut leaves: u64 = race.iter().map(|(_, r)| r.stats.leaves).sum();
-        let race_wall_cut = race.iter().any(|(_, r)| r.stats.wall_cut);
+        // One absorb per racer instead of a hand-enumerated sum per
+        // counter: a newly added solver counter can never be silently
+        // dropped from the merged report.
+        let mut agg = SearchStats::default();
+        for (_, r) in &race {
+            agg.absorb(&r.stats);
+        }
         let race_cancelled = race.iter().any(|(_, r)| r.termination == Termination::Cancelled);
         let mut winner = 0;
         for i in 1..race.len() {
@@ -498,7 +597,7 @@ impl Portfolio {
         }
         let incumbent_source = race[winner].0;
         let mut best = race[winner].1.schedule.clone();
-        let mut stages = vec![StageStats { name: "race", wall: race_wall, explored }];
+        let mut stages = vec![StageStats { name: "race", wall: race_wall, explored: agg.explored }];
         if race_cancelled {
             let schedule = if stripped { strip_virtual_sink(g, &best) } else { best };
             if let Some(inc) = &req.incumbent {
@@ -508,17 +607,7 @@ impl Portfolio {
                 report: SolveReport {
                     schedule,
                     termination: Termination::Cancelled,
-                    stats: SearchStats {
-                        explored,
-                        pruned,
-                        leaves,
-                        memo_hits,
-                        memo_peak,
-                        memo_flushes,
-                        wall: t0.elapsed(),
-                        stages,
-                        ..SearchStats::default()
-                    },
+                    stats: SearchStats { wall: t0.elapsed(), stages, ..agg },
                 },
                 from_cache: false,
                 incumbent_source,
@@ -535,12 +624,7 @@ impl Portfolio {
             let t = Instant::now();
             let s = exact_bnb_stage(gs, m, shared.bound(), &shared, &knobs, cancel);
             stages.push(StageStats { name: "bnb-stage", wall: t.elapsed(), explored: s.explored });
-            explored += s.explored;
-            pruned += s.pruned;
-            leaves += s.leaves;
-            memo_hits += s.memo_hits;
-            memo_peak = memo_peak.max(s.memo_peak);
-            memo_flushes += s.memo_flushes;
+            s.fold_into(&mut agg);
             if let Some(sched) = &s.best {
                 if reduction_prefers(sched, &best) {
                     best = sched.clone();
@@ -556,12 +640,7 @@ impl Portfolio {
             let t = Instant::now();
             let s = exact_cp_stage(gs, m, best.makespan(), &shared, &knobs, cancel);
             stages.push(StageStats { name: "cp-stage", wall: t.elapsed(), explored: s.explored });
-            explored += s.explored;
-            pruned += s.pruned;
-            leaves += s.leaves;
-            memo_hits += s.memo_hits;
-            memo_peak = memo_peak.max(s.memo_peak);
-            memo_flushes += s.memo_flushes;
+            s.fold_into(&mut agg);
             if let Some(sched) = &s.best {
                 if reduction_prefers(sched, &best) {
                     best = sched.clone();
@@ -574,9 +653,9 @@ impl Portfolio {
         // Only CP covers the full duplication-aware space, so only its
         // exhaustion proves global optimality.
         let optimal = cp_stage.as_ref().map_or(false, |s| s.exhausted);
-        let wall_cut = race_wall_cut
-            || bnb_stage.as_ref().map_or(false, |s| s.timed_out)
-            || cp_stage.as_ref().map_or(false, |s| s.timed_out);
+        // Racer wall cuts and stage timeouts are already ORed in by
+        // absorb/fold_into.
+        let wall_cut = agg.wall_cut;
         let cancelled = req.is_cancelled()
             || bnb_stage.as_ref().map_or(false, |s| s.cancelled)
             || cp_stage.as_ref().map_or(false, |s| s.cancelled);
@@ -592,7 +671,7 @@ impl Portfolio {
             Termination::ProvenOptimal
         } else if !exact_exhausted || knobs.use_cp {
             // A stage was cut, or CP ran without exhausting its space.
-            Termination::BudgetExhausted { nodes: explored, wall }
+            Termination::BudgetExhausted { nodes: agg.explored, wall }
         } else {
             // Every enabled stage finished; no optimality proof exists
             // (the CP stage — the only duplication-complete one — is off).
@@ -610,7 +689,10 @@ impl Portfolio {
         // unique in makespan and fixed by the reduction). The
         // deterministic default (share_bound off) caches exhausted and
         // budget-cut solves alike.
-        let reproducible = !wall_cut && !cancelled && (!knobs.share_bound || exact_exhausted);
+        let reproducible = !wall_cut
+            && !cancelled
+            && (!knobs.share_bound || exact_exhausted)
+            && (warm_hint.is_none() || exact_exhausted);
         if reproducible {
             self.cache.insert(
                 key,
@@ -621,17 +703,7 @@ impl Portfolio {
             report: SolveReport {
                 schedule,
                 termination,
-                stats: SearchStats {
-                    explored,
-                    pruned,
-                    leaves,
-                    memo_hits,
-                    memo_peak,
-                    memo_flushes,
-                    wall_cut,
-                    wall,
-                    stages,
-                },
+                stats: SearchStats { wall, stages, ..agg },
             },
             from_cache: false,
             incumbent_source,
@@ -689,6 +761,22 @@ fn strip_virtual_sink(g: &Dag, s: &Schedule) -> Schedule {
     out
 }
 
+/// The inverse of [`strip_virtual_sink`] for cached warm hints: rebuild
+/// an original-graph schedule over the extended single-sink clone,
+/// pinning the virtual sink at the makespan on core 0. The sink has zero
+/// WCET and zero-latency in-edges, so validity and makespan are
+/// unchanged by construction.
+fn extend_with_virtual_sink(gs: &Dag, s: &Schedule) -> Schedule {
+    let sink = gs.single_sink().expect("extended graph has a single sink");
+    let mut out = Schedule::new(s.m);
+    for p in s.iter() {
+        out.place(gs, p.node, p.core, p.start);
+    }
+    let at = out.makespan();
+    out.place(gs, sink, 0, at);
+    out
+}
+
 /// Resolve config defaults against a request's overlays and budget —
 /// the single config-to-knobs mapping (the request path and the pinned
 /// legacy stage wrappers both go through here, so they cannot drift).
@@ -706,6 +794,11 @@ fn resolve_knobs(cfg: &PortfolioConfig, req: &SolveRequest<'_>) -> Knobs {
         memo_capacity: req.bnb.memo_capacity.unwrap_or(cfg.memo_capacity),
         node_limit_per_root: req.budget.node_limit,
         deadline: req.budget.deadline,
+        search: LearnConfig::from_options(&SearchOptions {
+            nogood_capacity: req.search.nogood_capacity.or(cfg.search.nogood_capacity),
+            restarts: req.search.restarts.or(cfg.search.restarts),
+            activity: req.search.activity.or(cfg.search.activity),
+        }),
     }
 }
 
@@ -762,6 +855,49 @@ fn exact_bnb_stage(
     let prefixes =
         bnb::enumerate_prefixes(g, m, &prep, b0, knobs.root_target, knobs.max_split_depth);
     let deadline = knobs.stage_deadline();
+    let learn = knobs.search;
+    if learn.enabled() && learn.restarts {
+        // Checkpointed no-good sharing (module docs): each round runs one
+        // Luby segment per live task, then merges every task's fresh
+        // no-goods onto a global board in task index order. The board is
+        // frozen while a round runs, so what each task imports is a pure
+        // function of the round number — byte-identical for any worker
+        // count or interleaving.
+        let slots: Vec<Mutex<bnb::BnbTask>> = prefixes
+            .iter()
+            .map(|p| Mutex::new(bnb::BnbTask::new(g, p.clone(), m, b0, knobs.memo_capacity, learn)))
+            .collect();
+        let mut board: Vec<NoGood> = Vec::new();
+        while slots.iter().any(|s| !s.lock().expect("task mutex").done()) {
+            let fresh = parallel_map(knobs.workers, slots.len(), |i| {
+                let mut t = slots[i].lock().expect("task mutex");
+                if t.done() {
+                    return Vec::new();
+                }
+                t.import(&board);
+                t.run_segment(
+                    g,
+                    m,
+                    &prep,
+                    b0,
+                    learn,
+                    Some(shared),
+                    knobs.share_bound,
+                    knobs.node_limit_per_root,
+                    deadline,
+                    cancel,
+                )
+            });
+            for f in fresh {
+                board.extend(f);
+            }
+        }
+        let outcomes = slots
+            .into_iter()
+            .map(|s| s.into_inner().expect("task mutex").into_outcome(b0))
+            .collect();
+        return reduce_stage(outcomes, prefixes.len());
+    }
     let outcomes = parallel_map(knobs.workers, prefixes.len(), |i| {
         bnb::solve_prefix(
             g,
@@ -769,6 +905,7 @@ fn exact_bnb_stage(
             &prep,
             &prefixes[i],
             b0,
+            learn,
             Some(shared),
             knobs.share_bound,
             knobs.node_limit_per_root,
@@ -802,6 +939,45 @@ fn exact_cp_stage(
         knobs.max_split_depth,
     );
     let deadline = knobs.stage_deadline();
+    let learn = knobs.search;
+    if learn.enabled() && learn.restarts {
+        // Same checkpointed no-good sharing protocol as the BnB stage.
+        let slots: Vec<Mutex<cp::CpTask>> = prefixes
+            .iter()
+            .map(|p| Mutex::new(cp::CpTask::new(g, p.clone(), m, b0, learn)))
+            .collect();
+        let mut board: Vec<NoGood> = Vec::new();
+        while slots.iter().any(|s| !s.lock().expect("task mutex").done()) {
+            let fresh = parallel_map(knobs.workers, slots.len(), |i| {
+                let mut t = slots[i].lock().expect("task mutex");
+                if t.done() {
+                    return Vec::new();
+                }
+                t.import(&board);
+                t.run_segment(
+                    g,
+                    m,
+                    knobs.encoding,
+                    &levels,
+                    b0,
+                    learn,
+                    Some(shared),
+                    knobs.share_bound,
+                    knobs.node_limit_per_root,
+                    deadline,
+                    cancel,
+                )
+            });
+            for f in fresh {
+                board.extend(f);
+            }
+        }
+        let outcomes = slots
+            .into_iter()
+            .map(|s| s.into_inner().expect("task mutex").into_outcome(b0))
+            .collect();
+        return reduce_stage(outcomes, prefixes.len());
+    }
     let outcomes = parallel_map(knobs.workers, prefixes.len(), |i| {
         cp::solve_prefix(
             g,
@@ -810,6 +986,7 @@ fn exact_cp_stage(
             &levels,
             &prefixes[i],
             b0,
+            learn,
             Some(shared),
             knobs.share_bound,
             knobs.node_limit_per_root,
@@ -833,6 +1010,11 @@ fn reduce_stage(outcomes: Vec<SubtreeOutcome>, roots: usize) -> ExactStage {
         stage.memo_hits += out.memo_hits;
         stage.memo_peak = stage.memo_peak.max(out.memo_peak);
         stage.memo_flushes += out.memo_flushes;
+        stage.nogoods_recorded += out.nogoods_recorded;
+        stage.nogood_hits += out.nogood_hits;
+        stage.nogood_flushes += out.nogood_flushes;
+        stage.restarts += out.restarts;
+        stage.max_depth = stage.max_depth.max(out.max_depth);
         if let Some(s) = out.best {
             match &stage.best {
                 Some(b) if !reduction_prefers(&s, b) => {}
@@ -932,6 +1114,46 @@ mod tests {
         // A different node budget is a different problem → miss.
         let other = p.solve_request(&SolveRequest::new(&g, 2).node_limit(50));
         assert!(!other.from_cache);
+    }
+
+    #[test]
+    fn warm_hint_reuses_cached_solve_across_budgets() {
+        // Same DAG under a different node budget: the exact key misses,
+        // but the cached schedule warm-starts the hybrid racer — the
+        // re-budgeted solve must return the same verdict and makespan.
+        let g = paper_example_dag();
+        let p = Portfolio::new(quick_cfg(2));
+        let first = p.solve_request(&SolveRequest::new(&g, 2).deadline(Duration::from_secs(120)));
+        assert_eq!(first.report.termination, Termination::ProvenOptimal);
+        let req = SolveRequest::new(&g, 2)
+            .deadline(Duration::from_secs(120))
+            .node_limit(100_000);
+        let second = p.solve_request(&req);
+        assert!(!second.from_cache, "a different budget tag must miss the exact key");
+        assert_eq!(second.report.termination, Termination::ProvenOptimal);
+        assert_eq!(second.report.schedule.makespan(), first.report.schedule.makespan());
+    }
+
+    #[test]
+    fn learning_request_still_proves_the_optimum() {
+        // All learning features on end-to-end (multi-root paper example →
+        // the checkpointed no-good sharing rounds run): the proven
+        // optimum must match the learning-free portfolio.
+        let g = paper_example_dag();
+        let base = Portfolio::new(quick_cfg(1)).solve(&g, 2);
+        assert!(base.result.optimal);
+        let p = Portfolio::new(quick_cfg(2));
+        let req = SolveRequest::new(&g, 2)
+            .deadline(Duration::from_secs(120))
+            .search(SearchOptions {
+                nogood_capacity: Some(1 << 10),
+                restarts: Some(true),
+                activity: Some(true),
+            });
+        let out = p.solve_request(&req);
+        assert_eq!(out.report.termination, Termination::ProvenOptimal);
+        assert_eq!(out.report.schedule.makespan(), base.result.schedule.makespan());
+        assert_eq!(check_valid(&g, &out.report.schedule), Ok(()));
     }
 
     #[test]

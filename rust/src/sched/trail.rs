@@ -60,6 +60,14 @@ impl<E> Trail<E> {
         self.log.pop()
     }
 
+    /// Read-only view of every entry pushed after `mark`, oldest first.
+    /// The conflict analysis of the learning searches walks this slice
+    /// to find the variables a failed propagation touched since the
+    /// last decision — without popping anything.
+    pub fn entries_above(&self, mark: Mark) -> &[E] {
+        &self.log[mark.0.min(self.log.len())..]
+    }
+
     /// Pop every entry newer than `mark`, newest first, feeding each to
     /// `apply` (which performs the inverse mutation).
     pub fn undo_to(&mut self, mark: Mark, mut apply: impl FnMut(E)) {
@@ -145,6 +153,20 @@ mod tests {
         t.undo_to(Mark(0), |(i, prev)| cells[i] = prev);
         assert_eq!(cells, vec![0, 0, 0, 0]);
         assert!(t.is_empty());
+    }
+
+    #[test]
+    fn entries_above_views_without_popping() {
+        let mut t: Trail<u8> = Trail::new();
+        t.push(1);
+        let m = t.mark();
+        assert!(t.entries_above(m).is_empty());
+        t.push(2);
+        t.push(3);
+        assert_eq!(t.entries_above(m), &[2, 3], "oldest first");
+        assert_eq!(t.len(), 3, "viewing pops nothing");
+        t.undo_to(m, |_| ());
+        assert!(t.entries_above(m).is_empty());
     }
 
     #[test]

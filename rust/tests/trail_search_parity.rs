@@ -132,6 +132,56 @@ fn bnb_paper50_budgeted_parity() {
 }
 
 #[test]
+fn all_off_search_options_pin_the_legacy_paths() {
+    // The conflict-driven overlay (no-goods, activity, restarts) must be
+    // a pure no-op when every `SearchOptions` field is off: the request
+    // path walks the *byte-identical* tree the legacy entry points walk,
+    // and no learning counter ever moves.
+    use acetone::sched::{Budget, Scheduler, SearchOptions, SolveRequest};
+    let mut g = generate(&DagGenConfig::paper(50), 3);
+    ensure_single_sink(&mut g);
+
+    let cp_cfg = CpConfig {
+        encoding: Encoding::Improved,
+        timeout: Duration::from_secs(3600),
+        warm_start: None,
+        node_limit: Some(1500),
+    };
+    let legacy = CpSolver::new(cp_cfg).solve(&g, 4);
+    let req = SolveRequest::new(&g, 4)
+        .budget(Budget { deadline: Some(Duration::from_secs(3600)), node_limit: Some(1500) })
+        .search(SearchOptions::default());
+    let r = Scheduler::solve(&CpSolver::improved(), &req);
+    assert_eq!(r.stats.explored, legacy.result.explored, "cp: explored");
+    assert_eq!(r.schedule.makespan(), legacy.result.schedule.makespan(), "cp: makespan");
+    assert_eq!(placements(&r.schedule), placements(&legacy.result.schedule), "cp: placements");
+    assert_eq!(
+        (r.stats.nogoods_recorded, r.stats.nogood_hits, r.stats.restarts),
+        (0, 0, 0),
+        "cp: learning counters must stay untouched with the overlay off"
+    );
+
+    let bnb_legacy = ChouChung {
+        timeout: Duration::from_secs(3600),
+        node_limit: Some(3000),
+        ..Default::default()
+    }
+    .schedule(&g, 4);
+    let breq = SolveRequest::new(&g, 4)
+        .budget(Budget { deadline: Some(Duration::from_secs(3600)), node_limit: Some(3000) })
+        .search(SearchOptions::default());
+    let br = ChouChung::default().solve(&breq);
+    assert_eq!(br.stats.explored, bnb_legacy.explored, "bnb: explored");
+    assert_eq!(br.schedule.makespan(), bnb_legacy.schedule.makespan(), "bnb: makespan");
+    assert_eq!(placements(&br.schedule), placements(&bnb_legacy.schedule), "bnb: placements");
+    assert_eq!(
+        (br.stats.nogoods_recorded, br.stats.nogood_hits, br.stats.restarts),
+        (0, 0, 0),
+        "bnb: learning counters must stay untouched with the overlay off"
+    );
+}
+
+#[test]
 fn warm_started_cp_parity() {
     // The hybrid path (warm start seeding the incumbent) must also agree.
     use acetone::sched::dsh::Dsh;
