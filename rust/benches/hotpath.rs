@@ -14,8 +14,8 @@ use acetone::sched::dsh::Dsh;
 use acetone::sched::portfolio::{Portfolio, PortfolioConfig};
 use acetone::sched::serve::{BatchRequest, BatchSolver};
 use acetone::sched::{
-    check_valid, derive_programs, prune_redundant, Scheduler, SearchOptions, SolveReport,
-    SolveRequest,
+    check_valid, derive_programs, prune_redundant, Platform, Scheduler, SearchOptions,
+    SolveReport, SolveRequest, SPEED_SCALE,
 };
 use acetone::sim::{replay_machine, simulate};
 use acetone::util::bench::{bench, write_json, BenchStats};
@@ -37,6 +37,16 @@ fn main() {
     }));
     record(bench("dsh n=100 m=20", 1, 8, || {
         Dsh.solve(&SolveRequest::new(&g100, 20)).schedule.makespan()
+    }));
+
+    // Heterogeneous list scheduling: 2 nominal + 6 half-speed cores. The
+    // per-(node, core) cost lookups and per-class comm scaling run on
+    // every ready-list probe, so this isolates the platform overhead
+    // against the uniform dsh cases above. New cases seed their row in
+    // BENCH_baseline.json on the first CI push — no guard until then.
+    let het8 = Platform::two_class(8, 2, SPEED_SCALE / 2);
+    record(bench("dsh n=100 m=8 2-class", 1, 8, || {
+        Dsh.solve(&SolveRequest::new(&g100, 8).platform(het8.clone())).schedule.makespan()
     }));
 
     let sched = Dsh.solve(&SolveRequest::new(&g100, 8)).schedule;
@@ -70,6 +80,16 @@ fn main() {
     let bnb_deep = ChouChung::default();
     record(bench("bnb n=30 m=4 (20k-node budget)", 1, 5, || {
         bnb_deep.solve(&SolveRequest::new(&g30, 4).node_limit(20_000)).schedule.makespan()
+    }));
+    // Same tree-walk under a heterogeneous platform: bounds come from the
+    // fastest-class cost and every expansion prices (node, core) pairs,
+    // so the case measures the exact-search side of the platform overhead.
+    let het4 = Platform::two_class(4, 1, SPEED_SCALE / 2);
+    record(bench("bnb n=30 m=4 2-class (20k-node budget)", 1, 5, || {
+        bnb_deep
+            .solve(&SolveRequest::new(&g30, 4).node_limit(20_000).platform(het4.clone()))
+            .schedule
+            .makespan()
     }));
 
     // Hard instances, conflict-driven learning off vs on, under the same

@@ -23,7 +23,8 @@ use acetone::sched::portfolio::PortfolioConfig;
 use acetone::sched::serve::{BatchRequest, BatchSolver};
 use acetone::sched::{
     bnb::ChouChung, cp::CpSolver, dsh::Dsh, hlfet::Hlfet, hybrid::Hybrid, ish::Ish,
-    portfolio::Portfolio, Budget, Scheduler, SearchOptions, SolveRequest, Termination,
+    portfolio::Portfolio, Budget, Platform, Scheduler, SearchOptions, SolveRequest, Termination,
+    SPEED_SCALE,
 };
 use acetone::util::json::Json;
 use acetone::wcet::CostModel;
@@ -67,6 +68,12 @@ serve --requests FILE.jsonl [--cores C] [--workers W] [--cache-dir DIR]
     \"cores\", \"node-limit\", \"timeout\", \"nogood-capacity\"
     overriding the CLI defaults (a no-good capacity > 0 turns on
     conflict-driven learning in the exact stages for that request).
+    A heterogeneous platform is described per line by \"speeds\" (one
+    positive factor per core, 1.0 = nominal, larger = faster),
+    \"core-classes\" (core -> class map) and \"comm-matrix\" (square
+    class x class latency factors); omitted pieces default to nominal,
+    and an all-nominal platform solves (and caches) exactly like no
+    platform at all.
 dag --nodes N [--seed S] [--density D]
     generate a §4.1 random DAG (DOT output)
 ";
@@ -400,6 +407,9 @@ struct ServeSpec {
     /// `nogood-capacity` key: a capacity > 0 turns on conflict-driven
     /// learning in the exact stages for this request.
     nogood_capacity: Option<u64>,
+    /// `speeds` / `core-classes` / `comm-matrix` keys: the heterogeneous
+    /// platform of this request, validated with the line number.
+    platform: Option<Platform>,
 }
 
 /// A non-negative integer field of a serve request line. Fractional or
@@ -416,10 +426,91 @@ fn json_u64(v: &Json, key: &str, lineno: usize) -> Result<Option<u64>> {
     }
 }
 
+/// A positive fixed-point factor field (1.0 = nominal): `round(x · SCALE)`
+/// over [`SPEED_SCALE`], hard-erroring with the line number on anything
+/// non-positive, non-numeric, or so small it rounds to zero.
+fn json_factor(x: &Json, what: &str, lineno: usize) -> Result<u32> {
+    let f = x
+        .as_f64()
+        .ok_or_else(|| anyhow!("requests line {lineno}: {what} must be a number"))?;
+    let scaled = (f * SPEED_SCALE as f64).round();
+    if f <= 0.0 || scaled < 1.0 || scaled > u32::MAX as f64 {
+        bail!("requests line {lineno}: {what} must be positive (got {f})");
+    }
+    Ok(scaled as u32)
+}
+
+/// The optional heterogeneous platform of one serve request line:
+/// `speeds` (per-core factors), `core-classes` (core → class map) and
+/// `comm-matrix` (square class × class factors). Any subset may be given;
+/// the missing pieces default to nominal. Shape errors (wrong length,
+/// ragged matrix, class out of range) hard-error with the line number.
+fn json_platform(v: &Json, m: usize, lineno: usize) -> Result<Option<Platform>> {
+    let (speeds_j, classes_j, comm_j) =
+        (v.get("speeds"), v.get("core-classes"), v.get("comm-matrix"));
+    if speeds_j.is_none() && classes_j.is_none() && comm_j.is_none() {
+        return Ok(None);
+    }
+    let speeds = match speeds_j {
+        None => vec![SPEED_SCALE; m],
+        Some(a) => a
+            .as_arr()
+            .ok_or_else(|| anyhow!("requests line {lineno}: \"speeds\" must be an array"))?
+            .iter()
+            .enumerate()
+            .map(|(c, x)| json_factor(x, &format!("\"speeds\"[{c}]"), lineno))
+            .collect::<Result<Vec<_>>>()?,
+    };
+    let core_classes = match classes_j {
+        None => vec![0; m],
+        Some(a) => a
+            .as_arr()
+            .ok_or_else(|| anyhow!("requests line {lineno}: \"core-classes\" must be an array"))?
+            .iter()
+            .enumerate()
+            .map(|(c, x)| match x.as_f64() {
+                // `as_usize` saturates a negative to 0 — check the raw
+                // number so a typo errors instead of naming class 0.
+                Some(f) if f >= 0.0 && f.fract() == 0.0 => Ok(f as usize),
+                _ => bail!(
+                    "requests line {lineno}: \"core-classes\"[{c}] must be a \
+                     non-negative integer"
+                ),
+            })
+            .collect::<Result<Vec<_>>>()?,
+    };
+    let comm_factors = match comm_j {
+        // No matrix given: nominal communication between every named class.
+        None => {
+            let k = core_classes.iter().max().map_or(1, |&c| c + 1);
+            vec![vec![SPEED_SCALE; k]; k]
+        }
+        Some(a) => a
+            .as_arr()
+            .ok_or_else(|| anyhow!("requests line {lineno}: \"comm-matrix\" must be an array"))?
+            .iter()
+            .enumerate()
+            .map(|(i, row)| {
+                row.as_arr()
+                    .ok_or_else(|| {
+                        anyhow!("requests line {lineno}: \"comm-matrix\" row {i} must be an array")
+                    })?
+                    .iter()
+                    .enumerate()
+                    .map(|(j, x)| json_factor(x, &format!("\"comm-matrix\"[{i}][{j}]"), lineno))
+                    .collect::<Result<Vec<_>>>()
+            })
+            .collect::<Result<Vec<_>>>()?,
+    };
+    let p = Platform { speeds, core_classes, comm_factors, cost_table: None };
+    p.validate(m).map_err(|e| anyhow!("requests line {lineno}: {e}"))?;
+    Ok(Some(p))
+}
+
 /// Read a `serve` request stream: one JSON object per line, using the
 /// `schedule` flags as keys (`model` *or* `nodes`/`seed`/`density`, plus
-/// optional `cores`, `node-limit`, `timeout`). Blank lines and `#`
-/// comment lines are skipped.
+/// optional `cores`, `node-limit`, `timeout` and the platform keys —
+/// see [`json_platform`]). Blank lines and `#` comment lines are skipped.
 fn parse_serve_stream(text: &str, opts: &Opts) -> Result<Vec<ServeSpec>> {
     let default_cores = opts.usize("cores", 4)?;
     let default_timeout = opts.u64("timeout", 10)?;
@@ -462,7 +553,8 @@ fn parse_serve_stream(text: &str, opts: &Opts) -> Result<Vec<ServeSpec>> {
         };
         let nogood_capacity =
             json_u64(&v, "nogood-capacity", lineno)?.or(default_nogood_capacity);
-        specs.push(ServeSpec { g, m, budget, nogood_capacity });
+        let platform = json_platform(&v, m, lineno)?;
+        specs.push(ServeSpec { g, m, budget, nogood_capacity, platform });
     }
     Ok(specs)
 }
@@ -485,6 +577,9 @@ fn serve_cmd(opts: &Opts) -> Result<()> {
     let mut batch = BatchRequest::new().workers(workers);
     for spec in &specs {
         let mut req = SolveRequest::new(&spec.g, spec.m).budget(spec.budget.clone());
+        if let Some(p) = &spec.platform {
+            req = req.platform(p.clone());
+        }
         if let Some(cap) = spec.nogood_capacity {
             req = req.search(SearchOptions {
                 nogood_capacity: Some(cap as usize),
@@ -591,6 +686,58 @@ mod tests {
         assert_eq!(specs[1].budget.node_limit, Some(9));
         assert_eq!(specs[1].budget.deadline, Some(Duration::from_secs(1)));
         assert_eq!(specs[1].nogood_capacity, Some(9), "per-line override wins");
+    }
+
+    #[test]
+    fn serve_stream_parses_platform_keys() {
+        let opts = Opts::parse(&[]).unwrap();
+        let text = "{\"nodes\": 6, \"cores\": 2, \"speeds\": [1.0, 0.5], \
+                     \"core-classes\": [0, 1], \
+                     \"comm-matrix\": [[1.0, 2.0], [2.0, 1.0]]}\n\
+                    {\"nodes\": 6, \"cores\": 3, \"speeds\": [1.0, 1.0, 1.0]}\n\
+                    {\"nodes\": 6, \"cores\": 2, \"core-classes\": [0, 1]}\n";
+        let specs = parse_serve_stream(text, &opts).unwrap();
+        let p = specs[0].platform.as_ref().expect("platform parsed");
+        assert_eq!(p.speeds, vec![SPEED_SCALE, SPEED_SCALE / 2]);
+        assert_eq!(p.core_classes, vec![0, 1]);
+        assert_eq!(p.comm_factors[0][1], 2 * SPEED_SCALE);
+        // All-nominal speeds still build a platform; resolution collapses
+        // it to the platform-free encoding (cache.rs pins the key side).
+        let q = specs[1].platform.as_ref().expect("uniform platform parsed");
+        assert_eq!(q.speeds, vec![SPEED_SCALE; 3]);
+        // Classes without a matrix default to a nominal k×k matrix.
+        let r = specs[2].platform.as_ref().expect("classes-only platform parsed");
+        assert_eq!(r.comm_factors, vec![vec![SPEED_SCALE; 2]; 2]);
+        assert_eq!(specs.last().unwrap().platform.as_ref().map(|p| p.speeds.len()), Some(2));
+        // No platform keys at all → no platform.
+        let bare = parse_serve_stream("{\"nodes\": 6}", &opts).unwrap();
+        assert!(bare[0].platform.is_none());
+    }
+
+    #[test]
+    fn serve_stream_rejects_malformed_platforms() {
+        let opts = Opts::parse(&[]).unwrap();
+        let fails = [
+            // non-positive and non-numeric speeds
+            "{\"nodes\": 5, \"cores\": 2, \"speeds\": [1.0, 0.0]}",
+            "{\"nodes\": 5, \"cores\": 2, \"speeds\": [1.0, -2.0]}",
+            "{\"nodes\": 5, \"cores\": 2, \"speeds\": [1.0, \"fast\"]}",
+            // wrong lengths
+            "{\"nodes\": 5, \"cores\": 2, \"speeds\": [1.0]}",
+            "{\"nodes\": 5, \"cores\": 2, \"core-classes\": [0]}",
+            "{\"nodes\": 5, \"cores\": 2, \"core-classes\": [0, -1]}",
+            // ragged / malformed matrix
+            "{\"nodes\": 5, \"cores\": 2, \"core-classes\": [0, 1], \
+              \"comm-matrix\": [[1.0, 1.0], [1.0]]}",
+            "{\"nodes\": 5, \"cores\": 2, \"comm-matrix\": [1.0, 1.0]}",
+            // class out of the matrix's range
+            "{\"nodes\": 5, \"cores\": 2, \"core-classes\": [0, 3], \
+              \"comm-matrix\": [[1.0]]}",
+        ];
+        for line in fails {
+            let err = parse_serve_stream(line, &opts).unwrap_err().to_string();
+            assert!(err.contains("line 1"), "{line}: error must carry the line number: {err}");
+        }
     }
 
     #[test]

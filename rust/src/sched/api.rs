@@ -44,6 +44,7 @@
 //! searches *prune* against the live bound — faster, but the explored tree
 //! then depends on timing (see `sched::portfolio`'s determinism notes).
 
+use super::platform::{Platform, ResolvedPlatform};
 use super::portfolio::Incumbent;
 use super::{cp::Encoding, Schedule, SolveResult};
 use crate::graph::Dag;
@@ -225,6 +226,13 @@ pub struct SolveRequest<'g> {
     pub consult_incumbent: bool,
     /// Cooperative cancellation flag.
     pub cancel: Option<CancelToken>,
+    /// Heterogeneous platform description (per-core speeds, class × class
+    /// communication factors, optional per-(node, class) cost tables).
+    /// `None` — and any semantically uniform platform — is the identical-
+    /// core model, byte-identical to the pre-platform behavior. Unlike the
+    /// option overlays this is part of the *problem*, so [`SolveRequest::child`]
+    /// inherits it and the portfolio cache key encodes it.
+    pub platform: Option<Platform>,
     /// CP solver overlay.
     pub cp: CpOptions,
     /// Branch-and-bound overlay.
@@ -245,6 +253,7 @@ impl<'g> SolveRequest<'g> {
             incumbent: None,
             consult_incumbent: false,
             cancel: None,
+            platform: None,
             cp: CpOptions::default(),
             bnb: BnbOptions::default(),
             portfolio: PortfolioOptions::default(),
@@ -288,6 +297,22 @@ impl<'g> SolveRequest<'g> {
         self
     }
 
+    /// Attach a heterogeneous platform description (see
+    /// [`Platform`]). A semantically uniform platform resolves to the
+    /// exact platform-free behavior.
+    pub fn platform(mut self, p: Platform) -> Self {
+        self.platform = Some(p);
+        self
+    }
+
+    /// Resolve this request's platform (or its absence) against the DAG
+    /// and core count — the solver-facing cost model. Panics on a
+    /// malformed platform (validate user input with [`Platform::validate`]
+    /// first).
+    pub fn resolved_platform(&self) -> ResolvedPlatform {
+        ResolvedPlatform::resolve(self.platform.as_ref(), self.g, self.m)
+    }
+
     /// Set the CP overlay.
     pub fn cp(mut self, opts: CpOptions) -> Self {
         self.cp = opts;
@@ -320,6 +345,8 @@ impl<'g> SolveRequest<'g> {
     /// A sub-request over the same problem sharing the budget, the
     /// incumbent and the cancellation token, but with cleared overlays —
     /// how composite solvers (hybrid, portfolio) delegate to components.
+    /// The platform is *inherited*: it defines the problem, not a solver
+    /// preference.
     pub fn child(&self) -> SolveRequest<'g> {
         SolveRequest {
             g: self.g,
@@ -328,6 +355,7 @@ impl<'g> SolveRequest<'g> {
             incumbent: self.incumbent.clone(),
             consult_incumbent: self.consult_incumbent,
             cancel: self.cancel.clone(),
+            platform: self.platform.clone(),
             cp: CpOptions::default(),
             bnb: BnbOptions::default(),
             portfolio: PortfolioOptions::default(),
@@ -499,7 +527,10 @@ pub(crate) fn cancelled_fallback(
     t0: Instant,
     explored: u64,
 ) -> SolveReport {
-    let schedule = super::serial_schedule(req.g, req.m);
+    let schedule = match &req.platform {
+        None => super::serial_schedule(req.g, req.m),
+        Some(_) => super::serial_schedule_on(req.g, &req.resolved_platform()),
+    };
     if let Some(inc) = &req.incumbent {
         inc.offer(schedule.makespan());
     }
@@ -538,10 +569,23 @@ mod tests {
         let g = paper_example_dag();
         let req = SolveRequest::new(&g, 2)
             .node_limit(7)
+            .platform(Platform::two_class(2, 1, 32))
             .cp(CpOptions { encoding: Some(Encoding::Tang), warm_start: None });
         let child = req.child();
         assert_eq!(child.budget.node_limit, Some(7));
         assert!(child.cp.encoding.is_none(), "overlays are not inherited");
+        assert_eq!(child.platform, req.platform, "the platform is the problem, not an overlay");
+    }
+
+    #[test]
+    fn resolved_platform_defaults_to_uniform() {
+        let g = paper_example_dag();
+        let req = SolveRequest::new(&g, 3);
+        let plat = req.resolved_platform();
+        assert!(plat.is_uniform());
+        assert_eq!(plat.m(), 3);
+        let het = SolveRequest::new(&g, 3).platform(Platform::two_class(3, 1, 32));
+        assert!(!het.resolved_platform().is_uniform());
     }
 
     #[test]

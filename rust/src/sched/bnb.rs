@@ -27,13 +27,14 @@
 
 use super::api::CancelToken;
 use super::cdcl::{canonical_sig, luby, Activity, LearnConfig, NoGood, NoGoodStore, RESTART_UNIT};
+use super::platform::ResolvedPlatform;
 use super::portfolio::{Incumbent, SubtreeOutcome};
 use super::trail::{BnbOp, Mark, Trail};
 use super::{
     Budget, Schedule, Scheduler, SearchStats, SolveReport, SolveRequest, SolveResult, StageStats,
     Termination,
 };
-use crate::graph::{static_levels, Cycles, Dag, NodeId};
+use crate::graph::{Cycles, Dag, NodeId};
 use std::collections::{HashMap, HashSet};
 use std::time::{Duration, Instant};
 
@@ -249,6 +250,9 @@ impl PartialState {
 struct Ctx<'g> {
     g: &'g Dag,
     m: usize,
+    /// The resolved cost model: `plat.cost(v, p)` for durations,
+    /// `plat.comm(src, dst, w)` for cross-core latencies.
+    plat: &'g ResolvedPlatform,
     levels: &'g [Cycles],
     /// Equivalence classes: eq_leader[v] = smallest node with equal parent
     /// and child sets and equal WCET.
@@ -455,10 +459,12 @@ impl ChouChung {
     fn run_req(&self, req: &SolveRequest<'_>, reference: bool) -> SolveReport {
         let t0 = Instant::now();
         let (g, m) = (req.g, req.m);
-        let prep = StagePrep::new(g);
+        let plat = req.resolved_platform();
+        let prep = StagePrep::new(g, &plat);
         let ctx = Ctx {
             g,
             m,
+            plat: &plat,
             levels: &prep.levels,
             eq_leader: &prep.eq_leader,
             deadline: req.budget.deadline_from(t0),
@@ -468,7 +474,7 @@ impl ChouChung {
             cancel: req.cancel.as_ref(),
         };
         // Seed: serial schedule.
-        let best = super::serial_schedule(g, m);
+        let best = super::serial_schedule_on(g, &plat);
         let best_ms = best.makespan();
         let memo_capacity = req.bnb.memo_capacity.unwrap_or(self.memo_capacity);
         // Conflict-driven learning: resolved per request, fully off by
@@ -605,15 +611,19 @@ impl Scheduler for ChouChung {
 }
 
 /// For each node, the smallest node with identical parent set, child set
-/// and WCET (the `uEv` relation of §3.4 extended with equal cost).
-fn equivalence_leaders(g: &Dag) -> Vec<NodeId> {
-    let mut key: Vec<(Vec<NodeId>, Vec<NodeId>, Cycles)> = Vec::with_capacity(g.n());
+/// and per-core cost row (the `uEv` relation of §3.4 extended with equal
+/// cost). On a uniform platform the cost row degenerates to the WCET, so
+/// the classes are exactly the historical ones; on a heterogeneous
+/// platform two nodes are interchangeable only when they cost the same on
+/// *every* core.
+fn equivalence_leaders(g: &Dag, plat: &ResolvedPlatform) -> Vec<NodeId> {
+    let mut key: Vec<(Vec<NodeId>, Vec<NodeId>, Vec<Cycles>)> = Vec::with_capacity(g.n());
     for v in 0..g.n() {
         let mut ps: Vec<NodeId> = g.parents(v).iter().map(|&(u, _)| u).collect();
         let mut cs: Vec<NodeId> = g.children(v).iter().map(|&(c, _)| c).collect();
         ps.sort_unstable();
         cs.sort_unstable();
-        key.push((ps, cs, g.wcet(v)));
+        key.push((ps, cs, plat.cost_key(v)));
     }
     (0..g.n())
         .map(|v| (0..=v).find(|&u| key[u] == key[v]).unwrap())
@@ -644,15 +654,23 @@ fn scan_lower_bound(ctx: &Ctx<'_>, st: &PartialState) -> Cycles {
 
 /// Earliest start of `v` on core `p` given the current partial state:
 /// core availability vs. data arrival over scheduled parents (same-core
-/// parents deliver at `finish`, remote ones at `finish + w`). This is
-/// THE branching rule — shared by `dfs`, `dfs_reference`,
-/// `replay_prefix` and `enumerate_prefixes` so the sequential search,
-/// the prefix replay and the multi-root enumeration cannot drift apart.
-fn earliest_start(g: &Dag, st: &PartialState, v: NodeId, p: usize) -> Cycles {
+/// parents deliver at `finish`, remote ones at `finish + comm(src, p, w)`
+/// under the platform's latency matrix — plain `finish + w` when
+/// uniform). This is THE branching rule — shared by `dfs`,
+/// `dfs_reference`, `replay_prefix` and `enumerate_prefixes` so the
+/// sequential search, the prefix replay and the multi-root enumeration
+/// cannot drift apart.
+fn earliest_start(
+    g: &Dag,
+    plat: &ResolvedPlatform,
+    st: &PartialState,
+    v: NodeId,
+    p: usize,
+) -> Cycles {
     let data = g
         .parents(v)
         .iter()
-        .map(|&(u, w)| st.finish[u] + if st.core[u] == p { 0 } else { w })
+        .map(|&(u, w)| st.finish[u] + plat.comm(st.core[u], p, w))
         .max()
         .unwrap_or(0);
     st.avail[p].max(data)
@@ -695,7 +713,7 @@ fn expandable(ctx: &Ctx<'_>, st: &PartialState, search: &mut SearchState<'_>) ->
             search.best_ms = st.makespan;
             let mut sched = Schedule::new(ctx.m);
             for &(v, c, s) in &st.placements {
-                sched.place(g, v, c, s);
+                sched.place_on(ctx.plat, v, c, s);
             }
             search.best = sched;
             if let Some(inc) = ctx.shared {
@@ -750,8 +768,8 @@ fn dfs(ctx: &Ctx<'_>, st: &mut PartialState, search: &mut SearchState<'_>) {
                 }
                 tried_idle = true;
             }
-            let start = earliest_start(g, st, v, p);
-            let fin = start + g.wcet(v);
+            let start = earliest_start(g, ctx.plat, st, v, p);
+            let fin = start + ctx.plat.cost(v, p);
             if fin.max(st.makespan) >= search.cap(ctx) {
                 search.pruned += 1;
                 continue;
@@ -790,8 +808,8 @@ fn dfs_reference(ctx: &Ctx<'_>, st: PartialState, search: &mut SearchState<'_>) 
                 }
                 tried_idle = true;
             }
-            let start = earliest_start(g, &st, v, p);
-            let fin = start + g.wcet(v);
+            let start = earliest_start(g, ctx.plat, &st, v, p);
+            let fin = start + ctx.plat.cost(v, p);
             if fin.max(st.makespan) >= search.cap(ctx) {
                 search.pruned += 1;
                 continue;
@@ -818,10 +836,16 @@ pub(crate) type BnbPrefix = Vec<(NodeId, usize)>;
 
 /// Replay a prefix on a fresh root state, recomputing each start time the
 /// same way the DFS branching loop does.
-fn replay_prefix(g: &Dag, levels: &[Cycles], st: &mut PartialState, prefix: &[(NodeId, usize)]) {
+fn replay_prefix(
+    g: &Dag,
+    plat: &ResolvedPlatform,
+    levels: &[Cycles],
+    st: &mut PartialState,
+    prefix: &[(NodeId, usize)],
+) {
     for &(v, p) in prefix {
-        let start = earliest_start(g, st, v, p);
-        let fin = start + g.wcet(v);
+        let start = earliest_start(g, plat, st, v, p);
+        let fin = start + plat.cost(v, p);
         st.apply_place(g, levels, v, p, start, fin);
     }
 }
@@ -839,15 +863,17 @@ fn replay_prefix(g: &Dag, levels: &[Cycles], st: &mut PartialState, prefix: &[(N
 /// multi-root/sequential parity silently breaks. Fully deterministic.
 pub(crate) fn enumerate_prefixes(
     g: &Dag,
-    m: usize,
+    plat: &ResolvedPlatform,
     prep: &StagePrep,
     b0: Cycles,
     target: usize,
     max_depth: usize,
 ) -> Vec<BnbPrefix> {
+    let m = plat.m();
     let ctx = Ctx {
         g,
         m,
+        plat,
         levels: &prep.levels,
         eq_leader: &prep.eq_leader,
         deadline: Instant::now() + Duration::from_secs(3600),
@@ -865,7 +891,7 @@ pub(crate) fn enumerate_prefixes(
         let mut next: Vec<BnbPrefix> = Vec::new();
         for prefix in frontier {
             let mut st = PartialState::root(g, m, ctx.levels);
-            replay_prefix(g, ctx.levels, &mut st, &prefix);
+            replay_prefix(g, plat, ctx.levels, &mut st, &prefix);
             if st.placements.len() == g.n() {
                 // Complete schedule: keep it as a (leaf) task.
                 terminals.push(prefix);
@@ -886,8 +912,8 @@ pub(crate) fn enumerate_prefixes(
                         }
                         tried_idle = true;
                     }
-                    let start = earliest_start(g, &st, v, p);
-                    let fin = start + g.wcet(v);
+                    let start = earliest_start(g, plat, &st, v, p);
+                    let fin = start + plat.cost(v, p);
                     if fin.max(st.makespan) >= b0 {
                         continue;
                     }
@@ -912,8 +938,8 @@ pub(crate) struct StagePrep {
 }
 
 impl StagePrep {
-    pub(crate) fn new(g: &Dag) -> Self {
-        Self { levels: static_levels(g), eq_leader: equivalence_leaders(g) }
+    pub(crate) fn new(g: &Dag, plat: &ResolvedPlatform) -> Self {
+        Self { levels: plat.static_levels(g), eq_leader: equivalence_leaders(g, plat) }
     }
 }
 
@@ -1004,7 +1030,7 @@ impl BnbTask {
     pub fn run_segment(
         &mut self,
         g: &Dag,
-        m: usize,
+        plat: &ResolvedPlatform,
         prep: &StagePrep,
         b0: Cycles,
         learn: LearnConfig,
@@ -1017,6 +1043,7 @@ impl BnbTask {
         if self.done {
             return Vec::new();
         }
+        let m = plat.m();
         let remaining = node_limit.map(|l| l.saturating_sub(self.explored));
         if remaining == Some(0) {
             self.done = true;
@@ -1025,6 +1052,7 @@ impl BnbTask {
         let ctx = Ctx {
             g,
             m,
+            plat,
             levels: &prep.levels,
             eq_leader: &prep.eq_leader,
             deadline,
@@ -1034,7 +1062,7 @@ impl BnbTask {
             cancel,
         };
         let mut st = PartialState::root(g, m, ctx.levels);
-        replay_prefix(g, ctx.levels, &mut st, &self.prefix);
+        replay_prefix(g, plat, ctx.levels, &mut st, &self.prefix);
         let mut learn_state = Learn::new(learn, &mut self.store, &mut self.activity);
         for &(v, p, start) in &st.placements {
             learn_state.decisions.push(encode_place(v, p, start));
@@ -1114,7 +1142,7 @@ impl BnbTask {
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn solve_prefix(
     g: &Dag,
-    m: usize,
+    plat: &ResolvedPlatform,
     prep: &StagePrep,
     prefix: &[(NodeId, usize)],
     b0: Cycles,
@@ -1126,11 +1154,12 @@ pub(crate) fn solve_prefix(
     memo_capacity: usize,
     cancel: Option<&CancelToken>,
 ) -> SubtreeOutcome {
+    let m = plat.m();
     if learn.enabled() {
         let mut task = BnbTask::new(g, prefix.to_vec(), m, b0, memo_capacity, learn);
         while !task.done() {
             task.run_segment(
-                g, m, prep, b0, learn, shared, consult_shared, node_limit, deadline, cancel,
+                g, plat, prep, b0, learn, shared, consult_shared, node_limit, deadline, cancel,
             );
         }
         return task.into_outcome(b0);
@@ -1138,6 +1167,7 @@ pub(crate) fn solve_prefix(
     let ctx = Ctx {
         g,
         m,
+        plat,
         levels: &prep.levels,
         eq_leader: &prep.eq_leader,
         deadline,
@@ -1147,7 +1177,7 @@ pub(crate) fn solve_prefix(
         cancel,
     };
     let mut st = PartialState::root(g, m, ctx.levels);
-    replay_prefix(g, ctx.levels, &mut st, prefix);
+    replay_prefix(g, plat, ctx.levels, &mut st, prefix);
     let mut search = SearchState::new(Schedule::new(m), b0, memo_capacity);
     dfs(&ctx, &mut st, &mut search);
     SubtreeOutcome {
@@ -1327,8 +1357,9 @@ mod tests {
         let seq = ChouChung::default().schedule(&g, m);
         assert!(seq.optimal);
         let b0 = g.total_wcet(); // serial incumbent, same seed as `run`
-        let prep = StagePrep::new(&g);
-        let prefixes = enumerate_prefixes(&g, m, &prep, b0, 8, 4);
+        let plat = ResolvedPlatform::resolve(None, &g, m);
+        let prep = StagePrep::new(&g, &plat);
+        let prefixes = enumerate_prefixes(&g, &plat, &prep, b0, 8, 4);
         assert!(prefixes.len() > 1, "paper example must split into several roots");
         let deadline = Instant::now() + Duration::from_secs(120);
         let mut best: Option<Cycles> = None;
@@ -1336,7 +1367,7 @@ mod tests {
         for p in &prefixes {
             let out = solve_prefix(
                 &g,
-                m,
+                &plat,
                 &prep,
                 p,
                 b0,
@@ -1452,7 +1483,7 @@ mod tests {
         g.add_edge(a, c, 1);
         g.add_edge(b, d, 1);
         g.add_edge(c, d, 1);
-        let leaders = equivalence_leaders(&g);
+        let leaders = equivalence_leaders(&g, &ResolvedPlatform::resolve(None, &g, 2));
         assert_eq!(leaders[b], b);
         assert_eq!(leaders[c], b);
         assert_eq!(leaders[a], a);

@@ -35,13 +35,14 @@ use state::State;
 
 use super::api::CancelToken;
 use super::cdcl::{canonical_sig, luby, Activity, LearnConfig, NoGood, NoGoodStore, RESTART_UNIT};
+use super::platform::ResolvedPlatform;
 use super::portfolio::{Incumbent, SubtreeOutcome};
 use super::trail::Mark;
 use super::{
-    check_valid, prune_redundant, serial_schedule, Budget, Schedule, Scheduler, SearchStats,
-    SolveReport, SolveRequest, SolveResult, StageStats, Termination,
+    check_valid_on, prune_redundant_on, serial_schedule_on, Budget, Schedule, Scheduler,
+    SearchStats, SolveReport, SolveRequest, SolveResult, StageStats, Termination,
 };
-use crate::graph::{critical_path_len, static_levels, Cycles, Dag, NodeId};
+use crate::graph::{Cycles, Dag, NodeId};
 use std::time::{Duration, Instant};
 
 /// Legacy default wall-clock budget of the `#[doc(hidden)]` shim entry
@@ -147,20 +148,21 @@ impl CpSolver {
 
     fn run_req(&self, req: &SolveRequest<'_>, reference: bool) -> CpRun {
         let t0 = Instant::now();
-        let (g, m) = (req.g, req.m);
+        let g = req.g;
+        let plat = req.resolved_platform();
         let encoding = req.cp.encoding.unwrap_or(self.cfg.encoding);
         let warm_start = req.cp.warm_start.as_ref().or(self.cfg.warm_start.as_ref());
         let sink = g
             .single_sink()
             .expect("CP solver requires a single-sink DAG (use ensure_single_sink)");
-        let levels = static_levels(g);
-        let cp_lb = critical_path_len(g);
+        let levels = plat.static_levels(g);
+        let cp_lb = plat.critical_path_len(g);
 
         // Incumbent: warm start if provided, else the trivial serial
         // schedule (always valid) so `best` is never empty.
         let mut best = match warm_start {
             Some(s) => s.clone(),
-            None => serial_schedule(g, m),
+            None => serial_schedule_on(g, &plat),
         };
         let mut best_ms = best.makespan();
         let mut found_leaf = false;
@@ -173,7 +175,7 @@ impl CpSolver {
 
         let mut search = Search {
             g,
-            m,
+            plat: &plat,
             levels: &levels,
             encoding,
             deadline: req.budget.deadline_from(t0),
@@ -199,10 +201,10 @@ impl CpSolver {
         let exhausted = if *search.best_ms <= cp_lb {
             true // warm start already matches the absolute lower bound
         } else if reference {
-            let root = State::root(g, m, sink, encoding);
+            let root = State::root(g, &plat, sink, encoding);
             search.dfs_reference(root)
         } else {
-            let mut root = State::root(g, m, sink, encoding);
+            let mut root = State::root(g, &plat, sink, encoding);
             if learn_cfg.restarts {
                 search.run_restarting(&mut root)
             } else {
@@ -343,7 +345,7 @@ fn encode_order(core: usize, a: NodeId, b: NodeId) -> u64 {
 
 struct Search<'a> {
     g: &'a Dag,
-    m: usize,
+    plat: &'a ResolvedPlatform,
     levels: &'a [Cycles],
     encoding: Encoding,
     deadline: Instant,
@@ -424,8 +426,8 @@ impl<'a> Search<'a> {
 
     /// Shared leaf handling: prune duplicates, validate, update incumbent.
     fn offer_incumbent(&mut self, mut sched: Schedule) {
-        prune_redundant(self.g, &mut sched);
-        if check_valid(self.g, &sched).is_ok() {
+        prune_redundant_on(self.g, self.plat, &mut sched);
+        if check_valid_on(self.g, self.plat, &sched).is_ok() {
             *self.found_leaf = true;
             self.leaves += 1;
             let ms = sched.makespan();
@@ -530,13 +532,13 @@ impl<'a> Search<'a> {
         // Propagate to fixpoint under the current incumbent bound. All
         // prunings are trailed, so the caller's undo removes them even on
         // the infeasible path.
-        if !st.propagate(self.g, self.m, self.levels, self.encoding, self.cap()) {
+        if !st.propagate(self.levels, self.encoding, self.cap()) {
             self.pruned += 1;
             self.on_conflict(st);
             return true; // infeasible or dominated: pruned subtree, fully explored
         }
         // Lower bound pruning.
-        if st.lower_bound(self.g, self.m, self.levels) >= self.cap() {
+        if st.lower_bound(self.levels) >= self.cap() {
             self.pruned += 1;
             self.on_conflict(st);
             return true;
@@ -545,7 +547,7 @@ impl<'a> Search<'a> {
         // activity on, the hottest open node instead of the first).
         let branch = {
             let act = self.learn.as_ref().filter(|l| l.cfg.activity).map(|l| &*l.activity);
-            st.pick_branch(self.g, self.m, self.encoding, act)
+            st.pick_branch(self.encoding, act)
         };
         if let Some((var, first)) = branch {
             let mut complete = true;
@@ -567,13 +569,13 @@ impl<'a> Search<'a> {
         // sequence this assignment into a feasible incumbent — the exact
         // order-branching below then searches only for improvements.
         if st.is_assignment_complete() {
-            self.offer_incumbent(st.greedy_complete(self.g, self.m, self.levels));
-            if st.lower_bound(self.g, self.m, self.levels) >= self.cap() {
+            self.offer_incumbent(st.greedy_complete(self.g, self.levels));
+            if st.lower_bound(self.levels) >= self.cap() {
                 return true; // the heuristic already matched the bound here
             }
         }
         // Resolve disjunctive overlaps exactly (constraint (4)).
-        if let Some((core, a, b)) = st.pick_overlap(self.g, self.m) {
+        if let Some((core, a, b)) = st.pick_overlap() {
             let mut complete = true;
             for &(x, y) in &[(a, b), (b, a)] {
                 let mark = st.mark();
@@ -589,7 +591,7 @@ impl<'a> Search<'a> {
             return complete;
         }
         // Leaf: left-shift every assigned instance to its lower bound.
-        self.offer_incumbent(st.extract(self.g, self.m));
+        self.offer_incumbent(st.extract());
         true
     }
 
@@ -600,15 +602,15 @@ impl<'a> Search<'a> {
         if !self.enter_node() {
             return false;
         }
-        if !st.propagate(self.g, self.m, self.levels, self.encoding, self.cap()) {
+        if !st.propagate(self.levels, self.encoding, self.cap()) {
             self.pruned += 1;
             return true;
         }
-        if st.lower_bound(self.g, self.m, self.levels) >= self.cap() {
+        if st.lower_bound(self.levels) >= self.cap() {
             self.pruned += 1;
             return true;
         }
-        if let Some((var, first)) = st.pick_branch(self.g, self.m, self.encoding, None) {
+        if let Some((var, first)) = st.pick_branch(self.encoding, None) {
             let mut complete = true;
             for val in [first, 1 - first] {
                 let mut child = st.clone();
@@ -623,12 +625,12 @@ impl<'a> Search<'a> {
             return complete;
         }
         if st.is_assignment_complete() {
-            self.offer_incumbent(st.greedy_complete(self.g, self.m, self.levels));
-            if st.lower_bound(self.g, self.m, self.levels) >= self.cap() {
+            self.offer_incumbent(st.greedy_complete(self.g, self.levels));
+            if st.lower_bound(self.levels) >= self.cap() {
                 return true;
             }
         }
-        if let Some((core, a, b)) = st.pick_overlap(self.g, self.m) {
+        if let Some((core, a, b)) = st.pick_overlap() {
             let mut complete = true;
             for &(x, y) in &[(a, b), (b, a)] {
                 let mut child = st.clone();
@@ -641,7 +643,7 @@ impl<'a> Search<'a> {
             }
             return complete;
         }
-        self.offer_incumbent(st.extract(self.g, self.m));
+        self.offer_incumbent(st.extract());
         true
     }
 }
@@ -660,15 +662,13 @@ pub(crate) type CpPrefix = Vec<(Bin, i8)>;
 /// better than `b0` — i.e. the subtree is exhausted with nothing found.
 fn replay_cp_prefix(
     st: &mut State,
-    g: &Dag,
-    m: usize,
     levels: &[Cycles],
     encoding: Encoding,
     b0: Cycles,
     prefix: &[(Bin, i8)],
 ) -> bool {
     for &(var, val) in prefix {
-        if !st.propagate(g, m, levels, encoding, b0) {
+        if !st.propagate(levels, encoding, b0) {
             return false;
         }
         if !st.assign(var, val) {
@@ -687,7 +687,7 @@ fn replay_cp_prefix(
 /// schedule. Fully deterministic: only the fixed bound `b0` is consulted.
 pub(crate) fn enumerate_prefixes(
     g: &Dag,
-    m: usize,
+    plat: &ResolvedPlatform,
     encoding: Encoding,
     levels: &[Cycles],
     b0: Cycles,
@@ -705,19 +705,19 @@ pub(crate) fn enumerate_prefixes(
         }
         let mut next: Vec<CpPrefix> = Vec::new();
         for prefix in frontier {
-            let mut st = State::root(g, m, sink, encoding);
-            if !replay_cp_prefix(&mut st, g, m, levels, encoding, b0, &prefix) {
+            let mut st = State::root(g, plat, sink, encoding);
+            if !replay_cp_prefix(&mut st, levels, encoding, b0, &prefix) {
                 continue; // proven empty below b0
             }
-            if !st.propagate(g, m, levels, encoding, b0) {
+            if !st.propagate(levels, encoding, b0) {
                 continue;
             }
-            if st.lower_bound(g, m, levels) >= b0 {
+            if st.lower_bound(levels) >= b0 {
                 continue;
             }
             // Static choice always: the root split must not depend on the
             // request's learning overlay.
-            match st.pick_branch(g, m, encoding, None) {
+            match st.pick_branch(encoding, None) {
                 Some((var, first)) => {
                     let mut a = prefix.clone();
                     a.push((var, first));
@@ -810,7 +810,7 @@ impl CpTask {
     pub fn run_segment(
         &mut self,
         g: &Dag,
-        m: usize,
+        plat: &ResolvedPlatform,
         encoding: Encoding,
         levels: &[Cycles],
         b0: Cycles,
@@ -835,8 +835,8 @@ impl CpTask {
         // Each segment re-dives from a fresh root: replay the prefix
         // under the fixed bound `b0` (deterministic), then search with
         // everything learned so far.
-        let mut st = State::root(g, m, sink, encoding);
-        if !replay_cp_prefix(&mut st, g, m, levels, encoding, b0, &self.prefix) {
+        let mut st = State::root(g, plat, sink, encoding);
+        if !replay_cp_prefix(&mut st, levels, encoding, b0, &self.prefix) {
             self.done = true;
             self.exhausted = true;
             return self.store.take_fresh();
@@ -847,7 +847,7 @@ impl CpTask {
         }
         let mut search = Search {
             g,
-            m,
+            plat,
             levels,
             encoding,
             deadline,
@@ -932,7 +932,7 @@ impl CpTask {
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn solve_prefix(
     g: &Dag,
-    m: usize,
+    plat: &ResolvedPlatform,
     encoding: Encoding,
     levels: &[Cycles],
     prefix: &[(Bin, i8)],
@@ -944,12 +944,13 @@ pub(crate) fn solve_prefix(
     deadline: Instant,
     cancel: Option<&CancelToken>,
 ) -> SubtreeOutcome {
+    let m = plat.m();
     if learn.enabled() {
         let mut task = CpTask::new(g, prefix.to_vec(), m, b0, learn);
         while !task.done() {
             task.run_segment(
-                g, m, encoding, levels, b0, learn, shared, consult_shared, node_limit, deadline,
-                cancel,
+                g, plat, encoding, levels, b0, learn, shared, consult_shared, node_limit,
+                deadline, cancel,
             );
         }
         return task.into_outcome(b0);
@@ -960,8 +961,8 @@ pub(crate) fn solve_prefix(
     let mut best = Schedule::new(m);
     let mut best_ms = b0;
     let mut found_leaf = false;
-    let mut st = State::root(g, m, sink, encoding);
-    if !replay_cp_prefix(&mut st, g, m, levels, encoding, b0, prefix) {
+    let mut st = State::root(g, plat, sink, encoding);
+    if !replay_cp_prefix(&mut st, levels, encoding, b0, prefix) {
         return SubtreeOutcome {
             best: None,
             exhausted: true,
@@ -982,7 +983,7 @@ pub(crate) fn solve_prefix(
     }
     let mut search = Search {
         g,
-        m,
+        plat,
         levels,
         encoding,
         deadline,
@@ -1038,6 +1039,7 @@ mod tests {
     use super::*;
     use crate::graph::{ensure_single_sink, paper_example_dag, Dag};
     use crate::sched::dsh::Dsh;
+    use crate::sched::{check_valid, serial_schedule};
     use std::time::Duration;
 
     fn solve(g: &Dag, m: usize, enc: Encoding, secs: u64) -> CpOutcome {
@@ -1211,8 +1213,9 @@ mod tests {
         let seq = solve(&g, m, Encoding::Improved, 60);
         assert!(seq.result.optimal);
         let b0 = serial_schedule(&g, m).makespan();
-        let levels = static_levels(&g);
-        let prefixes = enumerate_prefixes(&g, m, Encoding::Improved, &levels, b0, 8, 6);
+        let plat = ResolvedPlatform::resolve(None, &g, m);
+        let levels = plat.static_levels(&g);
+        let prefixes = enumerate_prefixes(&g, &plat, Encoding::Improved, &levels, b0, 8, 6);
         assert!(prefixes.len() > 1, "paper example must split into several roots");
         let deadline = Instant::now() + Duration::from_secs(120);
         let mut best: Option<Cycles> = None;
@@ -1220,7 +1223,7 @@ mod tests {
         for p in &prefixes {
             let out = solve_prefix(
                 &g,
-                m,
+                &plat,
                 Encoding::Improved,
                 &levels,
                 p,

@@ -9,6 +9,7 @@
 
 use crate::graph::{Cycles, Dag, NodeId};
 use crate::sched::cdcl::Activity;
+use crate::sched::platform::ResolvedPlatform;
 use crate::sched::trail::{CpOp, Mark, Trail};
 use crate::sched::Schedule;
 use std::sync::Arc;
@@ -42,9 +43,14 @@ struct Ctx {
     /// improved encoding; `m` (no cap beyond one-per-core) for Tang.
     max_dup: Vec<usize>,
     topo: Vec<NodeId>,
-    /// Node WCETs, copied in so reversible-load maintenance (and its
-    /// undo) needs no `&Dag`.
-    wcet: Vec<Cycles>,
+    /// Per-instance compute costs `cost[v·m + p]`, materialized from the
+    /// resolved platform so reversible-load maintenance (and its undo)
+    /// needs neither a `&Dag` nor per-access scaling. Uniform platforms
+    /// degenerate to `m` copies of each node's WCET.
+    cost: Vec<Cycles>,
+    /// The resolved platform — consulted for communication scaling only
+    /// (compute costs are flattened above).
+    plat: ResolvedPlatform,
 }
 
 /// A partial assignment: ternary binaries + start-time interval bounds +
@@ -73,8 +79,9 @@ pub struct State {
 }
 
 impl State {
-    pub fn root(g: &Dag, m: usize, sink: NodeId, encoding: Encoding) -> Self {
+    pub fn root(g: &Dag, plat: &ResolvedPlatform, sink: NodeId, encoding: Encoding) -> Self {
         let n = g.n();
+        let m = plat.m();
         let edges: Vec<_> = g.edges().collect();
         let max_dup: Vec<usize> = (0..n)
             .map(|v| {
@@ -88,6 +95,10 @@ impl State {
                 }
             })
             .collect();
+        let cost: Vec<Cycles> = (0..n)
+            .flat_map(|v| (0..m).map(move |p| (v, p)))
+            .map(|(v, p)| plat.cost(v, p))
+            .collect();
         let ctx = Arc::new(Ctx {
             n,
             m,
@@ -95,9 +106,10 @@ impl State {
             edges: edges.clone(),
             max_dup,
             topo: g.topo_order(),
-            wcet: (0..n).map(|v| g.wcet(v)).collect(),
+            cost,
+            plat: plat.clone(),
         });
-        let horizon = g.total_wcet();
+        let horizon = plat.horizon();
         let d_len = match encoding {
             Encoding::Tang => edges.len() * m * m,
             Encoding::Improved => 0,
@@ -130,7 +142,7 @@ impl State {
     fn set_x(&mut self, idx: usize, val: i8) {
         self.trail.push(CpOp::X { idx: idx as u32, prev: self.x[idx] });
         let p = idx % self.ctx.m;
-        let t = self.ctx.wcet[idx / self.ctx.m];
+        let t = self.ctx.cost[idx];
         if self.x[idx] == 1 {
             self.load[p] -= t;
         }
@@ -172,7 +184,7 @@ impl State {
                 CpOp::X { idx, prev } => {
                     let idx = idx as usize;
                     let p = idx % self.ctx.m;
-                    let t = self.ctx.wcet[idx / self.ctx.m];
+                    let t = self.ctx.cost[idx];
                     if self.x[idx] == 1 {
                         self.load[p] -= t;
                     }
@@ -228,17 +240,13 @@ impl State {
     /// Run every propagator to fixpoint under the incumbent bound `ub`.
     /// Returns false when the state is infeasible (or cannot beat `ub`).
     /// All prunings land on the trail, so a failed propagation is undone
-    /// by the caller's `undo_to` like any other branch.
-    pub fn propagate(
-        &mut self,
-        g: &Dag,
-        m: usize,
-        levels: &[Cycles],
-        encoding: Encoding,
-        ub: Cycles,
-    ) -> bool {
+    /// by the caller's `undo_to` like any other branch. `levels` must be
+    /// the platform's fastest-class static levels (admissible remaining
+    /// work, see [`ResolvedPlatform::static_levels`]).
+    pub fn propagate(&mut self, levels: &[Cycles], encoding: Encoding, ub: Cycles) -> bool {
         let ctx = Arc::clone(&self.ctx);
         let n = ctx.n;
+        let m = ctx.m;
         for _round in 0..4 * (n + self.orders.len() + 4) {
             let mut changed = false;
 
@@ -319,8 +327,8 @@ impl State {
                             continue; // this supplier was branched away
                         }
                         let a = self.s_lb[u * m + i]
-                            + g.wcet(u)
-                            + if i == j { 0 } else { w };
+                            + ctx.cost[u * m + i]
+                            + ctx.plat.comm(i, j, w);
                         arr = arr.min(a);
                     }
                     if arr == Cycles::MAX {
@@ -345,9 +353,9 @@ impl State {
                             if self.di(e_idx, i, j) != 1 {
                                 continue;
                             }
-                            let lat = if i == j { 0 } else { w };
+                            let lat = ctx.plat.comm(i, j, w);
                             let cons_ub = self.s_ub[v * m + j];
-                            match cons_ub.checked_sub(g.wcet(u) + lat) {
+                            match cons_ub.checked_sub(ctx.cost[u * m + i] + lat) {
                                 Some(cap) => {
                                     let idx = u * m + i;
                                     if self.s_ub[idx] > cap {
@@ -371,12 +379,12 @@ impl State {
                 let (c, a, b) = (c as usize, a as usize, b as usize);
                 let ia = a * m + c;
                 let ib = b * m + c;
-                let lb = self.s_lb[ia] + g.wcet(a);
+                let lb = self.s_lb[ia] + ctx.cost[ia];
                 if self.s_lb[ib] < lb {
                     self.set_lb(ib, lb);
                     changed = true;
                 }
-                match self.s_ub[ib].checked_sub(g.wcet(a)) {
+                match self.s_ub[ib].checked_sub(ctx.cost[ia]) {
                     Some(cap) if self.s_ub[ia] > cap => {
                         self.set_ub(ia, cap);
                         changed = true;
@@ -407,7 +415,7 @@ impl State {
 
             // Semi-propagation of the disjunctive constraint (4): commit an
             // ordering when only one direction remains feasible.
-            if !self.propagate_disjunctive(g, m, &mut changed) {
+            if !self.propagate_disjunctive(&mut changed) {
                 return false;
             }
 
@@ -527,8 +535,9 @@ impl State {
 
     /// Constraint (4): for each pair assigned to the same core, fail when
     /// neither order fits, auto-commit when exactly one does.
-    fn propagate_disjunctive(&mut self, g: &Dag, m: usize, changed: &mut bool) -> bool {
+    fn propagate_disjunctive(&mut self, changed: &mut bool) -> bool {
         let n = self.ctx.n;
+        let m = self.ctx.m;
         for c in 0..m {
             let on_core: Vec<NodeId> = (0..n).filter(|&v| self.xi(v, c) == 1).collect();
             for ai in 0..on_core.len() {
@@ -537,10 +546,10 @@ impl State {
                     if self.has_order(c, a, b) || self.has_order(c, b, a) {
                         continue;
                     }
-                    let ab_ok =
-                        self.s_lb[a * m + c] + g.wcet(a) <= self.s_ub[b * m + c];
-                    let ba_ok =
-                        self.s_lb[b * m + c] + g.wcet(b) <= self.s_ub[a * m + c];
+                    let ab_ok = self.s_lb[a * m + c] + self.ctx.cost[a * m + c]
+                        <= self.s_ub[b * m + c];
+                    let ba_ok = self.s_lb[b * m + c] + self.ctx.cost[b * m + c]
+                        <= self.s_ub[a * m + c];
                     match (ab_ok, ba_ok) {
                         (false, false) => return false,
                         (true, false) => {
@@ -565,8 +574,11 @@ impl State {
             .any(|&(oc, oa, ob)| oc as usize == c && oa as usize == a && ob as usize == b)
     }
 
-    /// Critical-path lower bound on the makespan of any completion.
-    pub fn lower_bound(&self, _g: &Dag, m: usize, levels: &[Cycles]) -> Cycles {
+    /// Critical-path lower bound on the makespan of any completion, under
+    /// the platform's fastest-class `levels` (admissible: no instance of
+    /// the remaining chain can run faster than the fastest class).
+    pub fn lower_bound(&self, levels: &[Cycles]) -> Cycles {
+        let m = self.ctx.m;
         let mut lb = 0;
         for v in 0..self.ctx.n {
             let mut node_lb = Cycles::MAX;
@@ -598,11 +610,10 @@ impl State {
     /// (learning-off byte parity).
     pub fn pick_branch(
         &self,
-        g: &Dag,
-        m: usize,
         encoding: Encoding,
         activity: Option<&Activity>,
     ) -> Option<(Bin, i8)> {
+        let m = self.ctx.m;
         // List-scheduling-style guidance: the score of placing v on p is
         // max(data-arrival lower bound, committed load of p). Without the
         // load term every s_lb is 0 at the root and the first dive packs
@@ -612,7 +623,7 @@ impl State {
         // `State::load`) instead of being re-scanned O(n·m) here, on the
         // hot path of every search node; the assert pins the incremental
         // values to the scan they replaced.
-        debug_assert_eq!(self.load, self.scan_load(g, m), "incremental load diverged");
+        debug_assert_eq!(self.load, self.scan_load(), "incremental load diverged");
         let load = &self.load;
         let open = |v: NodeId| (0..m).any(|p| self.xi(v, p) == -1);
         let chosen = match activity {
@@ -675,12 +686,13 @@ impl State {
 
     /// The O(n·m) committed-load scan the trailed `load` vector replaced;
     /// kept as the `debug_assert` witness in `pick_branch`.
-    fn scan_load(&self, g: &Dag, m: usize) -> Vec<Cycles> {
+    fn scan_load(&self) -> Vec<Cycles> {
+        let m = self.ctx.m;
         let mut load = vec![0u64; m];
         for v in 0..self.ctx.n {
             for p in 0..m {
                 if self.xi(v, p) == 1 {
-                    load[p] += g.wcet(v);
+                    load[p] += self.ctx.cost[v * m + p];
                 }
             }
         }
@@ -688,8 +700,9 @@ impl State {
     }
 
     /// An unordered, possibly-overlapping same-core pair, if any remains.
-    pub fn pick_overlap(&self, g: &Dag, m: usize) -> Option<(usize, NodeId, NodeId)> {
+    pub fn pick_overlap(&self) -> Option<(usize, NodeId, NodeId)> {
         let n = self.ctx.n;
+        let m = self.ctx.m;
         for c in 0..m {
             let on_core: Vec<NodeId> = (0..n).filter(|&v| self.xi(v, c) == 1).collect();
             for ai in 0..on_core.len() {
@@ -699,8 +712,10 @@ impl State {
                         continue;
                     }
                     // Already separated by bounds?
-                    let a_before = self.s_ub[a * m + c] + g.wcet(a) <= self.s_lb[b * m + c];
-                    let b_before = self.s_ub[b * m + c] + g.wcet(b) <= self.s_lb[a * m + c];
+                    let a_before = self.s_ub[a * m + c] + self.ctx.cost[a * m + c]
+                        <= self.s_lb[b * m + c];
+                    let b_before = self.s_ub[b * m + c] + self.ctx.cost[b * m + c]
+                        <= self.s_lb[a * m + c];
                     if !a_before && !b_before {
                         // Emit the pair in lb-consistent order so the DFS
                         // tries the schedule the bounds already suggest.
@@ -732,7 +747,8 @@ impl State {
     /// each `Schedule::arrival` probe below is O(#instances-of-parent) on
     /// the indexed schedule (it was a scan over every placement), so one
     /// completion costs O(P² · deg) in the worst case instead of O(P³).
-    pub fn greedy_complete(&self, g: &Dag, m: usize, levels: &[Cycles]) -> Schedule {
+    pub fn greedy_complete(&self, g: &Dag, levels: &[Cycles]) -> Schedule {
+        let m = self.ctx.m;
         let mut sched = Schedule::new(m);
         let mut remaining: Vec<(NodeId, usize)> = Vec::new();
         for v in 0..self.ctx.n {
@@ -750,7 +766,7 @@ impl State {
             for (idx, &(v, p)) in remaining.iter().enumerate() {
                 let mut arrival = Some(0u64);
                 for &(u, w) in g.parents(v) {
-                    match sched.arrival(u, w, p) {
+                    match sched.arrival_on(&self.ctx.plat, u, w, p) {
                         Some(t) if done[u] => {
                             arrival = arrival.map(|a| a.max(t));
                         }
@@ -776,8 +792,8 @@ impl State {
             }
             let (idx, start) = best.expect("a DAG assignment always has a ready instance");
             let (v, p) = remaining.swap_remove(idx);
-            sched.place(g, v, p, start);
-            core_avail[p] = start + g.wcet(v);
+            sched.place_on(&self.ctx.plat, v, p, start);
+            core_avail[p] = start + self.ctx.cost[v * m + p];
             done[v] = true;
         }
         sched
@@ -786,12 +802,13 @@ impl State {
     /// Left-shifted schedule: every assigned instance at its lower bound.
     /// Sound at a leaf because every remaining constraint is a max-plus
     /// (difference) constraint, whose lb fixpoint is the minimal solution.
-    pub fn extract(&self, g: &Dag, m: usize) -> Schedule {
+    pub fn extract(&self) -> Schedule {
+        let m = self.ctx.m;
         let mut s = Schedule::new(m);
         for v in 0..self.ctx.n {
             for p in 0..m {
                 if self.xi(v, p) == 1 {
-                    s.place(g, v, p, self.s_lb[v * m + p]);
+                    s.place_on(&self.ctx.plat, v, p, self.s_lb[v * m + p]);
                 }
             }
         }
@@ -806,6 +823,10 @@ mod tests {
     use crate::graph::{ensure_single_sink, static_levels};
     use crate::util::proptest::for_all_seeds;
     use crate::util::rng::SplitMix64;
+
+    fn uniform(g: &Dag, m: usize) -> ResolvedPlatform {
+        ResolvedPlatform::resolve(None, g, m)
+    }
 
     type Snapshot = (
         Vec<i8>,
@@ -841,8 +862,9 @@ mod tests {
             let ub = g.total_wcet() + 1;
             for encoding in [Encoding::Improved, Encoding::Tang] {
                 let mut rng = SplitMix64::new(seed ^ 0xCAFE);
-                let mut st = State::root(&g, m, sink, encoding);
-                st.propagate(&g, m, &levels, encoding, ub);
+                let plat = uniform(&g, m);
+                let mut st = State::root(&g, &plat, sink, encoding);
+                st.propagate(&levels, encoding, ub);
                 let root_snap = snapshot(&st);
                 let mut stack: Vec<(Mark, Snapshot)> = Vec::new();
                 for _ in 0..40 {
@@ -850,12 +872,12 @@ mod tests {
                         // Descend: open a level, make a decision, propagate.
                         let mark = st.mark();
                         let snap = snapshot(&st);
-                        let decided = match st.pick_branch(&g, m, encoding, None) {
+                        let decided = match st.pick_branch(encoding, None) {
                             Some((var, first)) => {
                                 let val = if rng.next_below(2) == 0 { first } else { 1 - first };
                                 st.assign(var, val)
                             }
-                            None => match st.pick_overlap(&g, m) {
+                            None => match st.pick_overlap() {
                                 Some((c, a, b)) => {
                                     st.add_order(c, a, b);
                                     true
@@ -864,7 +886,7 @@ mod tests {
                             },
                         };
                         if decided {
-                            st.propagate(&g, m, &levels, encoding, ub);
+                            st.propagate(&levels, encoding, ub);
                             stack.push((mark, snap));
                         } else {
                             st.undo_to(mark);
@@ -894,14 +916,15 @@ mod tests {
         let levels = static_levels(&g);
         let m = 2;
         let encoding = Encoding::Improved;
-        let mut st = State::root(&g, m, sink, encoding);
+        let plat = uniform(&g, m);
+        let mut st = State::root(&g, &plat, sink, encoding);
         // A 1-above-critical-path bound is almost always infeasible and
         // forces failures deep in propagation.
         let tight_ub = crate::graph::critical_path_len(&g) + 1;
-        st.propagate(&g, m, &levels, encoding, g.total_wcet() + 1);
+        st.propagate(&levels, encoding, g.total_wcet() + 1);
         let snap = snapshot(&st);
         let mark = st.mark();
-        let _feasible = st.propagate(&g, m, &levels, encoding, tight_ub);
+        let _feasible = st.propagate(&levels, encoding, tight_ub);
         st.undo_to(mark);
         assert_eq!(snapshot(&st), snap);
     }
@@ -917,13 +940,14 @@ mod tests {
         let levels = static_levels(&g);
         let m = 2;
         let encoding = Encoding::Improved;
-        let mut st = State::root(&g, m, sink, encoding);
-        st.propagate(&g, m, &levels, encoding, g.total_wcet() + 1);
+        let plat = uniform(&g, m);
+        let mut st = State::root(&g, &plat, sink, encoding);
+        st.propagate(&levels, encoding, g.total_wcet() + 1);
         let mut act = Activity::new(g.n());
-        let static_pick = st.pick_branch(&g, m, encoding, None);
+        let static_pick = st.pick_branch(encoding, None);
         assert!(static_pick.is_some());
         assert_eq!(
-            st.pick_branch(&g, m, encoding, Some(&act)),
+            st.pick_branch(encoding, Some(&act)),
             static_pick,
             "all-zero scores reproduce the static choice"
         );
@@ -935,7 +959,7 @@ mod tests {
             .find(|&&v| (0..m).any(|p| st.xi(v, p) == -1))
             .expect("root state has open nodes");
         act.bump(last_open);
-        match st.pick_branch(&g, m, encoding, Some(&act)) {
+        match st.pick_branch(encoding, Some(&act)) {
             Some((Bin::X(i), _)) => assert_eq!(i / m, last_open, "hottest node wins"),
             other => panic!("expected an X branch, got {other:?}"),
         }
@@ -952,13 +976,14 @@ mod tests {
         let m = 2;
         let encoding = Encoding::Improved;
         let ub = g.total_wcet() + 1;
-        let mut st = State::root(&g, m, sink, encoding);
-        st.propagate(&g, m, &levels, encoding, ub);
+        let plat = uniform(&g, m);
+        let mut st = State::root(&g, &plat, sink, encoding);
+        st.propagate(&levels, encoding, ub);
         let mark = st.mark();
         let snap = snapshot(&st);
-        let (var, first) = st.pick_branch(&g, m, encoding, None).expect("open root");
+        let (var, first) = st.pick_branch(encoding, None).expect("open root");
         assert!(st.assign(var, first));
-        st.propagate(&g, m, &levels, encoding, ub);
+        st.propagate(&levels, encoding, ub);
         let mut seen = vec![false; st.ctx.n];
         st.conflict_nodes(mark, |v| seen[v] = true);
         let Bin::X(i) = var else { panic!("improved encoding branches on X") };
@@ -980,16 +1005,17 @@ mod tests {
             let ub = g.total_wcet() + 1;
             let encoding = Encoding::Improved;
             let mut rng = SplitMix64::new(seed ^ 0x10AD);
-            let mut st = State::root(&g, m, sink, encoding);
+            let plat = uniform(&g, m);
+            let mut st = State::root(&g, &plat, sink, encoding);
             let mut marks = Vec::new();
             for _ in 0..30 {
-                assert_eq!(st.load, st.scan_load(&g, m));
+                assert_eq!(st.load, st.scan_load());
                 if rng.next_below(3) < 2 {
                     let mark = st.mark();
-                    if let Some((var, first)) = st.pick_branch(&g, m, encoding, None) {
+                    if let Some((var, first)) = st.pick_branch(encoding, None) {
                         let val = if rng.next_below(2) == 0 { first } else { 1 - first };
                         st.assign(var, val);
-                        st.propagate(&g, m, &levels, encoding, ub);
+                        st.propagate(&levels, encoding, ub);
                         marks.push(mark);
                     } else {
                         st.undo_to(mark);
@@ -1000,7 +1026,7 @@ mod tests {
             }
             while let Some(mark) = marks.pop() {
                 st.undo_to(mark);
-                assert_eq!(st.load, st.scan_load(&g, m));
+                assert_eq!(st.load, st.scan_load());
             }
             assert_eq!(st.load, vec![0; m], "full unwind restores empty loads");
         });

@@ -10,7 +10,7 @@
 use super::api::cancelled_fallback;
 use super::list::ListState;
 use super::{
-    prune_redundant, Scheduler, SearchStats, SolveReport, SolveRequest, StageStats, Termination,
+    prune_redundant_on, Scheduler, SearchStats, SolveReport, SolveRequest, StageStats, Termination,
 };
 use crate::graph::{Cycles, NodeId};
 use std::time::Instant;
@@ -34,7 +34,8 @@ impl Scheduler for Dsh {
     fn solve(&self, req: &SolveRequest<'_>) -> SolveReport {
         let t0 = Instant::now();
         let g = req.g;
-        let mut st = ListState::new(g, req.m);
+        let plat = req.resolved_platform();
+        let mut st = ListState::new(g, &plat);
         let mut explored = 0u64;
         while let Some(v) = st.pop_ready() {
             if req.is_cancelled() {
@@ -63,7 +64,7 @@ impl Scheduler for Dsh {
         }
         let t_list = t0.elapsed();
         let mut schedule = st.schedule;
-        prune_redundant(g, &mut schedule);
+        prune_redundant_on(g, &plat, &mut schedule);
         if let Some(inc) = &req.incumbent {
             inc.offer(schedule.makespan());
         }
@@ -126,15 +127,16 @@ fn plan_with_duplication(
             .parents(v)
             .iter()
             .filter(|&&(u, w)| {
-                st.schedule.arrival(u, w, p).unwrap() == start && !st.schedule.on_core(u, p)
+                st.schedule.arrival_on(st.plat, u, w, p).unwrap() == start
+                    && !st.schedule.on_core(u, p)
             })
             .map(|&(u, _)| u)
             .next();
         let Some(u) = crit else { break };
         // Tentative copy of u on p, as early as its own inputs allow.
         let s_u = avail.max(st.data_ready(u, p));
-        let f_u = s_u + g.wcet(u);
-        st.schedule.place(g, u, p, s_u);
+        let f_u = s_u + st.plat.cost(u, p);
+        st.schedule.place_on(st.plat, u, p, s_u);
         let new_start = f_u.max(st.data_ready(v, p));
         if new_start < start {
             dups.push((u, s_u));
@@ -241,7 +243,8 @@ mod tests {
         // rejected trial must have been reverted — verified indirectly by
         // validity plus directly here on a one-step state.
         let g = paper_example_dag();
-        let mut st = ListState::new(&g, 2);
+        let plat = crate::sched::ResolvedPlatform::resolve(None, &g, 2);
+        let mut st = ListState::new(&g, &plat);
         let v = st.pop_ready().unwrap();
         st.commit(v, 0, 0);
         let before: Vec<_> = st.schedule.iter().copied().collect();

@@ -23,7 +23,8 @@ impl Scheduler for Hlfet {
 
     fn solve(&self, req: &SolveRequest<'_>) -> SolveReport {
         let t0 = Instant::now();
-        let mut st = ListState::new(req.g, req.m);
+        let plat = req.resolved_platform();
+        let mut st = ListState::new(req.g, &plat);
         let mut explored = 0u64;
         while let Some(v) = st.pop_ready() {
             if req.is_cancelled() {

@@ -23,7 +23,8 @@ impl Scheduler for Ish {
 
     fn solve(&self, req: &SolveRequest<'_>) -> SolveReport {
         let t0 = Instant::now();
-        let mut st = ListState::new(req.g, req.m);
+        let plat = req.resolved_platform();
+        let mut st = ListState::new(req.g, &plat);
         let mut explored = 0u64;
         while let Some(v) = st.pop_ready() {
             if req.is_cancelled() {
@@ -71,7 +72,7 @@ fn fill_gap(
         while let Some(u) = st.pop_ready() {
             *explored += 1;
             let s = from.max(st.data_ready(u, p));
-            if s + st.g.wcet(u) <= until {
+            if s + st.plat.cost(u, p) <= until {
                 inserted = Some((u, s));
                 break;
             }
@@ -86,7 +87,7 @@ fn fill_gap(
                 // node already placed there keeps its start; the core
                 // cursor is untouched (the gap sits before it).
                 st.commit_inserted(u, p, s);
-                from = s + st.g.wcet(u);
+                from = s + st.plat.cost(u, p);
                 if from >= until {
                     break;
                 }

@@ -9,8 +9,9 @@
 //! O(log n) push/pop instead of the former sorted `Vec` whose
 //! `Vec::remove(0)` front-pop shifted the whole queue on every node.
 
+use super::platform::ResolvedPlatform;
 use super::Schedule;
-use crate::graph::{static_levels, Cycles, Dag, NodeId};
+use crate::graph::{Cycles, Dag, NodeId};
 use std::collections::BinaryHeap;
 
 /// Heap entry: max-heap on `(level, Reverse(id))`, so `pop` yields the
@@ -39,8 +40,13 @@ impl PartialOrd for Ready {
 /// Mutable state threaded through a list-scheduling run.
 pub struct ListState<'g> {
     pub g: &'g Dag,
+    /// The resolved cost model: `plat.cost(v, p)` for durations,
+    /// `plat.comm(src, dst, w)` for cross-core latencies. Uniform when the
+    /// request carried no platform.
+    pub plat: &'g ResolvedPlatform,
     pub m: usize,
-    /// Static level of every node (priority; higher = more urgent).
+    /// Static level of every node (priority; higher = more urgent),
+    /// under the platform's fastest-class costs.
     pub levels: Vec<Cycles>,
     /// Partial schedule under construction.
     pub schedule: Schedule,
@@ -55,9 +61,10 @@ pub struct ListState<'g> {
 }
 
 impl<'g> ListState<'g> {
-    pub fn new(g: &'g Dag, m: usize) -> Self {
+    pub fn new(g: &'g Dag, plat: &'g ResolvedPlatform) -> Self {
+        let m = plat.m();
         assert!(m >= 1);
-        let levels = static_levels(g);
+        let levels = plat.static_levels(g);
         let pending_parents: Vec<usize> = (0..g.n()).map(|v| g.parents(v).len()).collect();
         let ready: BinaryHeap<Ready> = (0..g.n())
             .filter(|&v| pending_parents[v] == 0)
@@ -65,6 +72,7 @@ impl<'g> ListState<'g> {
             .collect();
         Self {
             g,
+            plat,
             m,
             levels,
             schedule: Schedule::new(m),
@@ -104,7 +112,7 @@ impl<'g> ListState<'g> {
             .iter()
             .map(|&(u, w)| {
                 self.schedule
-                    .arrival(u, w, p)
+                    .arrival_on(self.plat, u, w, p)
                     .expect("list scheduling only considers ready nodes")
             })
             .max()
@@ -131,8 +139,8 @@ impl<'g> ListState<'g> {
     pub fn commit(&mut self, v: NodeId, p: usize, start: Cycles) {
         debug_assert!(!self.scheduled[v], "node {v} scheduled twice");
         debug_assert!(start >= self.core_avail[p]);
-        self.schedule.place(self.g, v, p, start);
-        self.core_avail[p] = start + self.g.wcet(v);
+        self.schedule.place_on(self.plat, v, p, start);
+        self.core_avail[p] = start + self.plat.cost(v, p);
         self.scheduled[v] = true;
         self.release_children(v);
     }
@@ -142,8 +150,8 @@ impl<'g> ListState<'g> {
     pub fn commit_duplicate(&mut self, v: NodeId, p: usize, start: Cycles) {
         debug_assert!(self.scheduled[v]);
         debug_assert!(start >= self.core_avail[p]);
-        self.schedule.place(self.g, v, p, start);
-        self.core_avail[p] = start + self.g.wcet(v);
+        self.schedule.place_on(self.plat, v, p, start);
+        self.core_avail[p] = start + self.plat.cost(v, p);
     }
 
     /// Commit `v` *inside* an idle gap of core `p` at `start`, without
@@ -151,7 +159,7 @@ impl<'g> ListState<'g> {
     /// Used by ISH's insertion step.
     pub fn commit_inserted(&mut self, v: NodeId, p: usize, start: Cycles) {
         debug_assert!(!self.scheduled[v], "node {v} scheduled twice");
-        self.schedule.place(self.g, v, p, start);
+        self.schedule.place_on(self.plat, v, p, start);
         self.scheduled[v] = true;
         self.release_children(v);
     }
@@ -177,10 +185,15 @@ mod tests {
     use super::*;
     use crate::graph::paper_example_dag;
 
+    fn uniform(g: &Dag, m: usize) -> ResolvedPlatform {
+        ResolvedPlatform::resolve(None, g, m)
+    }
+
     #[test]
     fn ready_queue_pops_by_level() {
         let g = paper_example_dag();
-        let mut st = ListState::new(&g, 2);
+        let plat = uniform(&g, 2);
+        let mut st = ListState::new(&g, &plat);
         // Only node 1 (id 0) is initially ready.
         assert_eq!(st.pop_ready(), Some(0));
         st.commit(0, 0, 0);
@@ -201,7 +214,8 @@ mod tests {
     #[test]
     fn push_ready_reinserts() {
         let g = paper_example_dag();
-        let mut st = ListState::new(&g, 2);
+        let plat = uniform(&g, 2);
+        let mut st = ListState::new(&g, &plat);
         let v = st.pop_ready().unwrap();
         assert_eq!(st.ready_len(), 0);
         st.push_ready(v);
@@ -212,7 +226,8 @@ mod tests {
     #[test]
     fn est_accounts_for_comm() {
         let g = paper_example_dag();
-        let mut st = ListState::new(&g, 2);
+        let plat = uniform(&g, 2);
+        let mut st = ListState::new(&g, &plat);
         st.pop_ready();
         st.commit(0, 0, 0); // node 1 on P1, finish 1
         // Node 5 (id 4) on P1: data local at 1. On P2: 1 + w(1) = 2.
@@ -223,7 +238,8 @@ mod tests {
     #[test]
     fn commit_advances_core_and_releases_children() {
         let g = paper_example_dag();
-        let mut st = ListState::new(&g, 2);
+        let plat = uniform(&g, 2);
+        let mut st = ListState::new(&g, &plat);
         st.pop_ready();
         st.commit(0, 0, 0);
         assert_eq!(st.core_avail[0], 1);
@@ -235,7 +251,8 @@ mod tests {
     #[test]
     fn on_core_tracks_duplicates() {
         let g = paper_example_dag();
-        let mut st = ListState::new(&g, 2);
+        let plat = uniform(&g, 2);
+        let mut st = ListState::new(&g, &plat);
         st.pop_ready();
         st.commit(0, 0, 0);
         assert!(st.on_core(0, 0));

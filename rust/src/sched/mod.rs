@@ -85,6 +85,7 @@ pub mod hlfet;
 pub mod hybrid;
 pub mod ish;
 pub mod list;
+pub mod platform;
 pub mod portfolio;
 mod program;
 pub mod serve;
@@ -95,8 +96,9 @@ pub use api::{
     BnbOptions, Budget, CancelToken, CpOptions, PortfolioOptions, SearchOptions, SearchStats,
     SolveReport, SolveRequest, StageStats, Termination,
 };
+pub use platform::{Platform, ResolvedPlatform, SPEED_SCALE};
 pub use program::{derive_comms, derive_programs, CommOp, CoreProgram, CoreStep};
-pub use validity::{check_valid, prune_redundant, ValidityError};
+pub use validity::{check_valid, check_valid_on, prune_redundant, prune_redundant_on, ValidityError};
 
 use crate::graph::{Cycles, Dag, NodeId};
 
@@ -158,6 +160,19 @@ impl Schedule {
     /// shift in the core timeline and the node instance list.
     pub fn place(&mut self, g: &Dag, node: NodeId, core: usize, start: Cycles) {
         self.place_raw(node, core, start, start + g.wcet(node));
+    }
+
+    /// [`Schedule::place`] under a heterogeneous platform: the duration is
+    /// the per-core cost `plat.cost(node, core)` instead of the bare WCET.
+    /// Uniform platforms make this identical to `place`.
+    pub fn place_on(
+        &mut self,
+        plat: &ResolvedPlatform,
+        node: NodeId,
+        core: usize,
+        start: Cycles,
+    ) {
+        self.place_raw(node, core, start, start + plat.cost(node, core));
     }
 
     /// [`Schedule::place`] with an explicit finish time — the decoder of
@@ -299,6 +314,22 @@ impl Schedule {
             .min()
     }
 
+    /// [`Schedule::arrival`] under a heterogeneous platform: remote
+    /// instances pay `plat.comm(src, q, w)` instead of the raw `w`.
+    /// Uniform platforms make this identical to `arrival`.
+    pub fn arrival_on(
+        &self,
+        plat: &ResolvedPlatform,
+        u: NodeId,
+        w: Cycles,
+        q: usize,
+    ) -> Option<Cycles> {
+        self.instances(u)
+            .iter()
+            .map(|p| p.finish + plat.comm(p.core, q, w))
+            .min()
+    }
+
     /// The instance of `u` that realizes [`Self::arrival`] (ties prefer the
     /// same core, then the lowest core id) — the communication source used
     /// by the simulator, the executor and the code generator.
@@ -310,6 +341,21 @@ impl Schedule {
                 let t = if p.core == q { p.finish } else { p.finish + w };
                 (t, p.core != q, p.core)
             })
+            .copied()
+    }
+
+    /// [`Schedule::arrival_source`] under a heterogeneous platform (same
+    /// tie-break: earliest arrival, then same core, then lowest core id).
+    pub fn arrival_source_on(
+        &self,
+        plat: &ResolvedPlatform,
+        u: NodeId,
+        w: Cycles,
+        q: usize,
+    ) -> Option<Placement> {
+        self.instances(u)
+            .iter()
+            .min_by_key(|p| (p.finish + plat.comm(p.core, q, w), p.core != q, p.core))
             .copied()
     }
 
@@ -404,6 +450,18 @@ pub(crate) fn serial_schedule(g: &Dag, m: usize) -> Schedule {
     for v in g.topo_order() {
         s.place(g, v, 0, t);
         t += g.wcet(v);
+    }
+    s
+}
+
+/// [`serial_schedule`] under a heterogeneous platform: core 0's own costs
+/// determine every duration. Uniform platforms reproduce `serial_schedule`.
+pub(crate) fn serial_schedule_on(g: &Dag, plat: &ResolvedPlatform) -> Schedule {
+    let mut s = Schedule::new(plat.m());
+    let mut t = 0;
+    for v in g.topo_order() {
+        s.place_on(plat, v, 0, t);
+        t += plat.cost(v, 0);
     }
     s
 }

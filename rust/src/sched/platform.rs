@@ -1,0 +1,523 @@
+//! §Platform — heterogeneous platform model: per-core speed factors and a
+//! core-class × core-class communication-latency matrix.
+//!
+//! The paper's processor-assignment problem assumes `m` identical cores;
+//! real edge targets are not uniform (per-core speed classes, non-uniform
+//! interconnects). A [`Platform`] describes the deviation from that
+//! idealization, a [`ResolvedPlatform`] is the solver-facing form every
+//! scheduler consults instead of the bare `m`:
+//!
+//! ```text
+//!            Platform { speeds, core_classes, comm_factors, cost_table? }
+//!                │ resolve(g, m)           (validate, expand, canonicalize)
+//!                ▼
+//!   ResolvedPlatform
+//!     cost(v, c)      = cost_table[v][class(c)]              (if provided)
+//!                     = ceil(wcet(v) · SCALE / speeds[c])    (otherwise)
+//!     comm(i, j, w)   = 0                                    (i == j)
+//!                     = ceil(w · comm_factors[class(i)][class(j)] / SCALE)
+//!     level(v)        = min_c cost(v, c) + max_child level   (admissible)
+//! ```
+//!
+//! Everything is fixed-point over [`SPEED_SCALE`] — no floats anywhere in
+//! the hot path, so cross-machine byte determinism is preserved. A speed or
+//! comm factor of exactly `SPEED_SCALE` means "nominal": the scaled value
+//! is *bit-identical* to the unscaled one (`ceil(x·S/S) == x`), which makes
+//! the uniform platform an arithmetic identity rather than an approximation.
+//! Resolution detects semantic uniformity (every cost equals the node's
+//! WCET and every comm factor is nominal) and collapses it to the same
+//! representation as "no platform at all": [`ResolvedPlatform::words`]
+//! is empty, so the portfolio cache key of an explicitly-uniform request
+//! is byte-identical to a platform-free one, and the pinned parity suites
+//! (`tests/platform_parity.rs`) hold by construction.
+//!
+//! Admissibility: lower bounds built from [`ResolvedPlatform::static_levels`]
+//! use the *fastest-class* cost per node (`min_cost`), so they never exceed
+//! the true remaining work on any core assignment — the CP and BnB bound
+//! proofs carry over unchanged.
+
+use crate::graph::{Cycles, Dag, NodeId};
+
+/// Fixed-point denominator for speed and communication factors.
+///
+/// A factor of `SPEED_SCALE` is nominal (no scaling); `2 * SPEED_SCALE`
+/// doubles a core's speed (halves its costs, rounding up); `SPEED_SCALE / 2`
+/// halves it (doubles its costs).
+pub const SPEED_SCALE: u32 = 64;
+
+/// `ceil(x * num / den)` over `u128` intermediates — exact for any
+/// `Cycles` value and any non-zero factor, and the identity when
+/// `num == den`.
+#[inline]
+fn scale_ceil(x: Cycles, num: u32, den: u32) -> Cycles {
+    debug_assert!(den > 0);
+    let prod = x as u128 * num as u128;
+    ((prod + den as u128 - 1) / den as u128) as Cycles
+}
+
+/// A heterogeneous platform description, attached to a
+/// [`SolveRequest`](super::SolveRequest) via
+/// [`SolveRequest::platform`](super::SolveRequest::platform).
+///
+/// All factors are fixed-point over [`SPEED_SCALE`]. The default-shaped
+/// uniform platform ([`Platform::uniform`]) resolves to exactly the
+/// platform-free behavior.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Platform {
+    /// Per-core speed factors, `len == m`, each `> 0`.
+    /// `SPEED_SCALE` = nominal; larger = faster (smaller costs).
+    pub speeds: Vec<u32>,
+    /// Core → class map, `len == m`, each `< comm_factors.len()`.
+    /// Classes group cores for the comm matrix and the cost table.
+    pub core_classes: Vec<usize>,
+    /// Class × class communication factors (square, `len ≥ 1`).
+    /// Cross-core latency `w` becomes `ceil(w · f / SPEED_SCALE)`;
+    /// same-core communication stays free regardless of the matrix.
+    pub comm_factors: Vec<Vec<u32>>,
+    /// Optional explicit per-(node, class) cost table overriding speed
+    /// scaling: `cost_table[v][class]` is the WCET of node `v` on a core
+    /// of that class. Node ids `≥ cost_table.len()` (e.g. a virtual sink
+    /// appended by the portfolio) fall back to speed scaling.
+    pub cost_table: Option<Vec<Vec<Cycles>>>,
+}
+
+impl Platform {
+    /// The explicitly-uniform platform on `m` cores: nominal speeds, one
+    /// class, nominal communication. Resolves byte-identically to no
+    /// platform at all.
+    pub fn uniform(m: usize) -> Self {
+        Platform {
+            speeds: vec![SPEED_SCALE; m],
+            core_classes: vec![0; m],
+            comm_factors: vec![vec![SPEED_SCALE]],
+            cost_table: None,
+        }
+    }
+
+    /// Per-core speeds with one class and nominal communication.
+    pub fn with_speeds(speeds: Vec<u32>) -> Self {
+        let m = speeds.len();
+        Platform { speeds, core_classes: vec![0; m], comm_factors: vec![vec![SPEED_SCALE]], cost_table: None }
+    }
+
+    /// A two-class platform: the first `fast` cores run at nominal speed
+    /// (class 0), the remaining `m - fast` at `slow_speed` (class 1).
+    /// Communication stays nominal everywhere — the shape used by the
+    /// heterogeneous bench/parity cases.
+    pub fn two_class(m: usize, fast: usize, slow_speed: u32) -> Self {
+        assert!(fast <= m, "two_class: fast={fast} > m={m}");
+        let speeds =
+            (0..m).map(|c| if c < fast { SPEED_SCALE } else { slow_speed }).collect();
+        let core_classes = (0..m).map(|c| usize::from(c >= fast)).collect();
+        Platform {
+            speeds,
+            core_classes,
+            comm_factors: vec![vec![SPEED_SCALE; 2]; 2],
+            cost_table: None,
+        }
+    }
+
+    /// Shape/positivity validation against a core count, with messages fit
+    /// for the serve front-end (which prefixes line numbers). `Ok(())`
+    /// guarantees [`ResolvedPlatform::resolve`] cannot panic.
+    pub fn validate(&self, m: usize) -> Result<(), String> {
+        if m == 0 {
+            return Err("platform requires at least one core".into());
+        }
+        if self.speeds.len() != m {
+            return Err(format!("speeds has {} entries, expected m={m}", self.speeds.len()));
+        }
+        if let Some(c) = self.speeds.iter().position(|&s| s == 0) {
+            return Err(format!("speed for core {c} must be positive"));
+        }
+        if self.core_classes.len() != m {
+            return Err(format!(
+                "core-classes has {} entries, expected m={m}",
+                self.core_classes.len()
+            ));
+        }
+        let k = self.comm_factors.len();
+        if k == 0 {
+            return Err("comm-matrix must have at least one class".into());
+        }
+        if let Some(i) = self.comm_factors.iter().position(|row| row.len() != k) {
+            return Err(format!(
+                "comm-matrix is ragged: row {i} has {} entries, expected {k}",
+                self.comm_factors[i].len()
+            ));
+        }
+        if let Some(c) = self.core_classes.iter().position(|&cl| cl >= k) {
+            return Err(format!(
+                "core {c} names class {}, but the comm-matrix only defines {k} class(es)",
+                self.core_classes[c]
+            ));
+        }
+        if let Some(t) = &self.cost_table {
+            if let Some(v) = t.iter().position(|row| row.len() != k) {
+                return Err(format!(
+                    "cost-table is ragged: node {v} has {} entries, expected {k} class(es)",
+                    t[v].len()
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The solver-facing form of a platform: the full per-(node, core) cost
+/// matrix, the per-(core, core) communication factors, admissible levels
+/// and the canonical key words, resolved once per solve against a concrete
+/// DAG and core count.
+///
+/// Every solver builds one of these from its request
+/// ([`SolveRequest::resolved_platform`](super::SolveRequest::resolved_platform))
+/// and reads `cost(v, c)` where it used to read `g.wcet(v)` and
+/// `comm(i, j, w)` where it used to pay the raw edge latency `w`.
+/// The uniform resolution stores a single copy of the WCET vector and
+/// short-circuits `comm` to the identity, so the platform-free hot path
+/// does no extra arithmetic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ResolvedPlatform {
+    m: usize,
+    uniform: bool,
+    /// Row-major cost matrix. Uniform: `n` entries (`cost[v] == wcet(v)`,
+    /// indexed with `row=1, col=0`); heterogeneous: `n·m` entries
+    /// (`row=m, col=1`).
+    cost: Vec<Cycles>,
+    row: usize,
+    col: usize,
+    /// Fastest-core cost per node (uniform: equals `cost`).
+    min_cost: Vec<Cycles>,
+    /// Expanded `m·m` per-core comm factors; empty when uniform.
+    comm_f: Vec<u32>,
+    /// Σ_v max_c cost(v, c): a serial-schedule horizon (uniform: total WCET).
+    horizon: Cycles,
+    /// Canonical key words; EMPTY iff semantically uniform, so the cache
+    /// key of a uniform request equals the platform-free one.
+    words: Vec<u64>,
+}
+
+impl ResolvedPlatform {
+    /// Resolve an optional platform against a DAG and core count.
+    ///
+    /// Panics on a malformed platform (see [`Platform::validate`]) — the
+    /// serve/CLI boundary validates user input first; in-crate callers
+    /// construct platforms programmatically.
+    pub fn resolve(platform: Option<&Platform>, g: &Dag, m: usize) -> Self {
+        assert!(m >= 1, "need at least one core");
+        let n = g.n();
+        let p = match platform {
+            None => return Self::uniform_of(g, m),
+            Some(p) => p,
+        };
+        if let Err(e) = p.validate(m) {
+            panic!("invalid platform: {e}");
+        }
+        let mut cost = Vec::with_capacity(n * m);
+        for v in 0..n {
+            let table_row = p.cost_table.as_deref().and_then(|t| t.get(v));
+            for c in 0..m {
+                cost.push(match table_row {
+                    Some(row) => row[p.core_classes[c]],
+                    None => scale_ceil(g.wcet(v), SPEED_SCALE, p.speeds[c]),
+                });
+            }
+        }
+        let mut comm_f = Vec::with_capacity(m * m);
+        for i in 0..m {
+            for j in 0..m {
+                comm_f.push(p.comm_factors[p.core_classes[i]][p.core_classes[j]]);
+            }
+        }
+        let costs_nominal = (0..n).all(|v| (0..m).all(|c| cost[v * m + c] == g.wcet(v)));
+        if costs_nominal && comm_f.iter().all(|&f| f == SPEED_SCALE) {
+            // Semantically uniform: collapse to the platform-free encoding.
+            return Self::uniform_of(g, m);
+        }
+        let min_cost: Vec<Cycles> =
+            (0..n).map(|v| (0..m).map(|c| cost[v * m + c]).min().unwrap_or(0)).collect();
+        let horizon =
+            (0..n).map(|v| (0..m).map(|c| cost[v * m + c]).max().unwrap_or(0)).sum();
+        // Canonical words: a marker, then the resolved semantic content
+        // (cost matrix + comm factors) — two platforms that scale every
+        // cost and latency identically share one encoding no matter how
+        // they were specified (speeds vs. an equivalent cost table).
+        let mut words = Vec::with_capacity(1 + n * m + m * m);
+        words.push(1); // platform marker / encoding version
+        words.extend(cost.iter().copied());
+        words.extend(comm_f.iter().map(|&f| f as u64));
+        ResolvedPlatform {
+            m,
+            uniform: false,
+            cost,
+            row: m,
+            col: 1,
+            min_cost,
+            comm_f,
+            horizon,
+            words,
+        }
+    }
+
+    /// The uniform resolution: costs are the WCET vector, communication is
+    /// the identity, key words are empty.
+    fn uniform_of(g: &Dag, m: usize) -> Self {
+        let n = g.n();
+        let cost: Vec<Cycles> = (0..n).map(|v| g.wcet(v)).collect();
+        ResolvedPlatform {
+            m,
+            uniform: true,
+            min_cost: cost.clone(),
+            cost,
+            row: 1,
+            col: 0,
+            comm_f: Vec::new(),
+            horizon: g.total_wcet(),
+            words: Vec::new(),
+        }
+    }
+
+    /// Core count.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// True when this resolution is (semantically) the uniform platform.
+    #[inline]
+    pub fn is_uniform(&self) -> bool {
+        self.uniform
+    }
+
+    /// Execution cost of node `v` on core `c`.
+    #[inline]
+    pub fn cost(&self, v: NodeId, c: usize) -> Cycles {
+        debug_assert!(c < self.m);
+        self.cost[v * self.row + c * self.col]
+    }
+
+    /// Fastest-core cost of node `v` — the admissible per-node weight for
+    /// lower bounds (no core can run `v` cheaper).
+    #[inline]
+    pub fn min_cost(&self, v: NodeId) -> Cycles {
+        self.min_cost[v]
+    }
+
+    /// Communication latency for an edge of weight `w` from an instance on
+    /// `src` to a consumer on `dst`. Same-core is free; uniform platforms
+    /// pay exactly `w`.
+    #[inline]
+    pub fn comm(&self, src: usize, dst: usize, w: Cycles) -> Cycles {
+        if src == dst {
+            return 0;
+        }
+        if self.uniform {
+            return w;
+        }
+        scale_ceil(w, self.comm_f[src * self.m + dst], SPEED_SCALE)
+    }
+
+    /// The full cost row of node `v` across all cores — the equivalence
+    /// key the BnB leader computation uses (uniform rows degenerate to
+    /// today's single-WCET key: equal rows iff equal WCETs).
+    pub fn cost_key(&self, v: NodeId) -> Vec<Cycles> {
+        (0..self.m).map(|c| self.cost(v, c)).collect()
+    }
+
+    /// Static (bottom) levels under the fastest-class cost: admissible for
+    /// every core assignment. Uniform: identical to
+    /// [`graph::static_levels`](crate::graph::static_levels).
+    pub fn static_levels(&self, g: &Dag) -> Vec<Cycles> {
+        let mut lvl = vec![0; g.n()];
+        for &v in g.topo_order().iter().rev() {
+            let best_child = g.children(v).iter().map(|&(c, _)| lvl[c]).max().unwrap_or(0);
+            lvl[v] = self.min_cost(v) + best_child;
+        }
+        lvl
+    }
+
+    /// Critical-path length under fastest-class costs — a makespan lower
+    /// bound on any number of cores of this platform.
+    pub fn critical_path_len(&self, g: &Dag) -> Cycles {
+        self.static_levels(g).into_iter().max().unwrap_or(0)
+    }
+
+    /// Σ_v max_c cost(v, c): an upper horizon no (duplication-free) serial
+    /// schedule exceeds — the CP start-time domain width. Uniform: the
+    /// total WCET, exactly as before.
+    #[inline]
+    pub fn horizon(&self) -> Cycles {
+        self.horizon
+    }
+
+    /// Canonical cache-key words. Empty iff uniform: appending them to the
+    /// platform-free canonical key leaves uniform requests byte-identical
+    /// to requests with no platform at all.
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{paper_example_dag, static_levels};
+
+    #[test]
+    fn uniform_resolution_is_the_identity() {
+        let g = paper_example_dag();
+        let plat = ResolvedPlatform::resolve(None, &g, 3);
+        assert!(plat.is_uniform());
+        assert_eq!(plat.m(), 3);
+        assert!(plat.words().is_empty());
+        for v in 0..g.n() {
+            for c in 0..3 {
+                assert_eq!(plat.cost(v, c), g.wcet(v));
+            }
+            assert_eq!(plat.min_cost(v), g.wcet(v));
+        }
+        assert_eq!(plat.comm(0, 0, 7), 0);
+        assert_eq!(plat.comm(0, 2, 7), 7);
+        assert_eq!(plat.horizon(), g.total_wcet());
+        assert_eq!(plat.static_levels(&g), static_levels(&g));
+    }
+
+    #[test]
+    fn explicitly_uniform_platform_collapses_to_none() {
+        let g = paper_example_dag();
+        let none = ResolvedPlatform::resolve(None, &g, 2);
+        let explicit = ResolvedPlatform::resolve(Some(&Platform::uniform(2)), &g, 2);
+        assert_eq!(none, explicit);
+        assert!(explicit.words().is_empty());
+    }
+
+    #[test]
+    fn equivalent_cost_table_also_collapses() {
+        let g = paper_example_dag();
+        let mut p = Platform::uniform(2);
+        p.cost_table = Some((0..g.n()).map(|v| vec![g.wcet(v)]).collect());
+        let r = ResolvedPlatform::resolve(Some(&p), &g, 2);
+        assert!(r.is_uniform());
+        assert!(r.words().is_empty());
+    }
+
+    #[test]
+    fn speed_scaling_rounds_up() {
+        let g = paper_example_dag(); // wcet(4) == 2, wcet(5) == 3
+        let p = Platform::with_speeds(vec![SPEED_SCALE, SPEED_SCALE / 2, 2 * SPEED_SCALE]);
+        let r = ResolvedPlatform::resolve(Some(&p), &g, 3);
+        assert!(!r.is_uniform());
+        assert_eq!(r.cost(5, 0), 3); // nominal
+        assert_eq!(r.cost(5, 1), 6); // half speed: 2×
+        assert_eq!(r.cost(5, 2), 2); // double speed: ceil(3/2)
+        assert_eq!(r.cost(4, 2), 1); // ceil(2/2)
+        assert_eq!(r.min_cost(5), 2);
+        // 48/64 = 0.75 speed: ceil(3 · 64 / 48) = ceil(4) = 4
+        let p2 = Platform::with_speeds(vec![48]);
+        let r2 = ResolvedPlatform::resolve(Some(&p2), &g, 1);
+        assert_eq!(r2.cost(5, 0), 4);
+    }
+
+    #[test]
+    fn comm_scaling_is_per_class_pair_and_same_core_free() {
+        let g = paper_example_dag();
+        let mut p = Platform::two_class(4, 2, SPEED_SCALE);
+        // cross-class communication costs double; intra-class nominal
+        p.comm_factors = vec![
+            vec![SPEED_SCALE, 2 * SPEED_SCALE],
+            vec![2 * SPEED_SCALE, SPEED_SCALE],
+        ];
+        let r = ResolvedPlatform::resolve(Some(&p), &g, 4);
+        assert_eq!(r.comm(0, 0, 9), 0); // same core
+        assert_eq!(r.comm(0, 1, 9), 9); // class 0 → class 0
+        assert_eq!(r.comm(0, 2, 9), 18); // class 0 → class 1
+        assert_eq!(r.comm(3, 1, 9), 18); // class 1 → class 0
+        assert_eq!(r.comm(2, 3, 9), 9); // class 1 → class 1
+        // odd latency rounds up under a half factor
+        p.comm_factors[0][1] = SPEED_SCALE / 2;
+        let r2 = ResolvedPlatform::resolve(Some(&p), &g, 4);
+        assert_eq!(r2.comm(0, 2, 9), 5); // ceil(9/2)
+    }
+
+    #[test]
+    fn cost_table_overrides_and_out_of_range_nodes_fall_back() {
+        let g = paper_example_dag();
+        let mut p = Platform::two_class(2, 1, SPEED_SCALE / 2);
+        // explicit table for the first two nodes only; the rest (and any
+        // virtual sink the portfolio appends) speed-scale their WCET
+        p.cost_table = Some(vec![vec![10, 20], vec![30, 40]]);
+        let r = ResolvedPlatform::resolve(Some(&p), &g, 2);
+        assert_eq!(r.cost(0, 0), 10); // class 0
+        assert_eq!(r.cost(0, 1), 20); // class 1
+        assert_eq!(r.cost(1, 1), 40);
+        assert_eq!(r.cost(2, 0), g.wcet(2)); // fallback, nominal core
+        assert_eq!(r.cost(2, 1), 2 * g.wcet(2)); // fallback, half-speed core
+    }
+
+    #[test]
+    fn levels_and_horizon_scale() {
+        let g = paper_example_dag();
+        let p = Platform::with_speeds(vec![SPEED_SCALE, SPEED_SCALE / 2]);
+        let r = ResolvedPlatform::resolve(Some(&p), &g, 2);
+        // min cost is the nominal core, so levels match the uniform ones
+        assert_eq!(r.static_levels(&g), static_levels(&g));
+        assert_eq!(r.critical_path_len(&g), crate::graph::critical_path_len(&g));
+        // horizon sums the slowest-core (doubled) costs
+        assert_eq!(r.horizon(), 2 * g.total_wcet());
+    }
+
+    #[test]
+    fn validation_rejects_malformed_platforms() {
+        let ok = Platform::uniform(2);
+        assert!(ok.validate(2).is_ok());
+        assert!(ok.validate(3).is_err()); // wrong m
+
+        let mut zero = Platform::uniform(2);
+        zero.speeds[1] = 0;
+        assert!(zero.validate(2).unwrap_err().contains("positive"));
+
+        let mut ragged = Platform::two_class(2, 1, 32);
+        ragged.comm_factors[1].pop();
+        assert!(ragged.validate(2).unwrap_err().contains("ragged"));
+
+        let mut bad_class = Platform::uniform(2);
+        bad_class.core_classes[0] = 5;
+        assert!(bad_class.validate(2).unwrap_err().contains("class"));
+
+        let mut bad_table = Platform::uniform(2);
+        bad_table.cost_table = Some(vec![vec![1, 2]]); // 2 classes, only 1 defined
+        assert!(bad_table.validate(2).unwrap_err().contains("cost-table"));
+    }
+
+    #[test]
+    fn two_class_shape() {
+        let p = Platform::two_class(4, 1, 16);
+        assert_eq!(p.speeds, vec![SPEED_SCALE, 16, 16, 16]);
+        assert_eq!(p.core_classes, vec![0, 1, 1, 1]);
+        assert!(p.validate(4).is_ok());
+    }
+
+    #[test]
+    fn canonical_words_distinguish_platforms() {
+        let g = paper_example_dag();
+        let a = ResolvedPlatform::resolve(
+            Some(&Platform::with_speeds(vec![SPEED_SCALE, 32])),
+            &g,
+            2,
+        );
+        let b = ResolvedPlatform::resolve(
+            Some(&Platform::with_speeds(vec![SPEED_SCALE, 16])),
+            &g,
+            2,
+        );
+        assert!(!a.words().is_empty());
+        assert_ne!(a.words(), b.words());
+        // same semantics through a different description → same words
+        let table: Vec<Vec<Cycles>> =
+            (0..g.n()).map(|v| vec![g.wcet(v), scale_ceil(g.wcet(v), SPEED_SCALE, 32)]).collect();
+        let mut via_table = Platform::two_class(2, 1, SPEED_SCALE);
+        via_table.cost_table = Some(table);
+        let c = ResolvedPlatform::resolve(Some(&via_table), &g, 2);
+        assert_eq!(a.words(), c.words());
+    }
+}

@@ -353,6 +353,31 @@ mod tests {
     }
 
     #[test]
+    fn uniform_platform_canonicalizes_to_the_platform_free_key() {
+        // The tentpole's cache contract: an explicitly-uniform platform
+        // resolves to empty key words, so its request key is byte-identical
+        // to a request with no platform at all; a heterogeneous platform
+        // appends its resolved words and is a different problem.
+        use crate::sched::portfolio::Portfolio;
+        use crate::sched::{Platform, SolveRequest, SPEED_SCALE};
+        let g = paper_example_dag();
+        let p = Portfolio::default();
+        let bare = p.request_key(&SolveRequest::new(&g, 2));
+        let uniform = p.request_key(&SolveRequest::new(&g, 2).platform(Platform::uniform(2)));
+        assert_eq!(bare, uniform, "explicit uniform platform must share the platform-free key");
+        let het = p.request_key(
+            &SolveRequest::new(&g, 2).platform(Platform::two_class(2, 1, SPEED_SCALE / 2)),
+        );
+        assert_ne!(bare, het, "a heterogeneous platform is a different problem");
+        assert!(het.len() > bare.len(), "platform words append to the key suffix");
+        // The words live in the problem suffix (`key[TAG_WORDS..]`), so a
+        // cross-budget warm hint never leaks across platforms.
+        let cache = ScheduleCache::new(4);
+        cache.insert(bare.clone(), dummy(1));
+        assert!(cache.warm_hint(&het).is_none(), "hints must not cross platforms");
+    }
+
+    #[test]
     fn reinsert_overwrites_without_duplicate_order_slot() {
         let g = paper_example_dag();
         let cache = ScheduleCache::new(2);

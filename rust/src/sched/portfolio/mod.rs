@@ -91,11 +91,12 @@ use super::cp::{CpSolver, Encoding};
 use super::dsh::Dsh;
 use super::hlfet::Hlfet;
 use super::ish::Ish;
+use super::platform::ResolvedPlatform;
 use super::{
-    check_valid, Budget, CancelToken, CpOptions, Schedule, Scheduler, SearchOptions, SearchStats,
-    SolveReport, SolveRequest, SolveResult, StageStats, Termination,
+    check_valid_on, Budget, CancelToken, CpOptions, Schedule, Scheduler, SearchOptions,
+    SearchStats, SolveReport, SolveRequest, SolveResult, StageStats, Termination,
 };
-use crate::graph::{critical_path_len, ensure_single_sink, static_levels, Cycles, Dag, NodeId};
+use crate::graph::{ensure_single_sink, Cycles, Dag, NodeId};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -215,7 +216,7 @@ impl Default for PortfolioConfig {
 /// the set of result-affecting knobs changes). Carried in the header of
 /// every persistent cache file: a store written under a different key
 /// version is stale by definition and ignored on open.
-pub const KEY_VERSION: u64 = 3;
+pub const KEY_VERSION: u64 = 4;
 
 /// Fixed length in words of the resolved-request tag that prefixes every
 /// canonical key ([`Knobs::cache_tag`] emits exactly this many words,
@@ -452,9 +453,14 @@ impl Portfolio {
     /// configuration — the dedup identity [`serve`](super::serve) groups
     /// batched requests by, and the key a solve is cached under. Worker
     /// count and the wall-clock deadline are excluded (they never affect
-    /// the result); every other result-affecting knob is included.
+    /// the result); every other result-affecting knob is included. A
+    /// heterogeneous [`Platform`](super::Platform) appends its resolved
+    /// canonical words; the uniform platform appends nothing, so an
+    /// explicitly-uniform request keys identically to a platform-free one.
     pub fn request_key(&self, req: &SolveRequest<'_>) -> Vec<u64> {
-        canonical_key(req.g, req.m, &resolve_knobs(&self.cfg, req).cache_tag())
+        let mut key = canonical_key(req.g, req.m, &resolve_knobs(&self.cfg, req).cache_tag());
+        key.extend_from_slice(req.resolved_platform().words());
+        key
     }
 
     /// Legacy entry point: a request assembled from the config's
@@ -490,7 +496,11 @@ impl Portfolio {
         let t0 = Instant::now();
         let (g, m) = (req.g, req.m);
         let knobs = resolve_knobs(&self.cfg, req);
-        let key = canonical_key(g, m, &knobs.cache_tag());
+        // Resolved over the *original* graph: key words and the final
+        // validity check; the stages re-resolve over the extended clone.
+        let plat_g = req.resolved_platform();
+        let mut key = canonical_key(g, m, &knobs.cache_tag());
+        key.extend_from_slice(plat_g.words());
         if let Some(hit) = self.cache.get(&key) {
             // The deep Schedule copy happens here, outside the cache lock.
             if let Some(inc) = &req.incumbent {
@@ -531,6 +541,14 @@ impl Portfolio {
         } else {
             g
         };
+        // The virtual sink has zero WCET, so it costs 0 on every core under
+        // any platform (an out-of-range cost-table node speed-scales its
+        // WCET — see `Platform::cost_table`).
+        let plat = if stripped {
+            ResolvedPlatform::resolve(req.platform.as_ref(), gs, m)
+        } else {
+            plat_g.clone()
+        };
 
         // Cross-batch warm start: a solve of the *same problem* cached
         // under a different budget/config tag seeds the hybrid racer's
@@ -555,6 +573,9 @@ impl Portfolio {
         // `stats.wall_cut`: a timing-cut racer result must never be
         // cached.
         let mut heur_req = SolveRequest::new(gs, m);
+        if let Some(p) = &req.platform {
+            heur_req = heur_req.platform(p.clone());
+        }
         if let Some(c) = &req.cancel {
             heur_req = heur_req.cancel(c.clone());
         }
@@ -615,14 +636,14 @@ impl Portfolio {
                 roots_cp: 0,
             };
         }
-        debug_assert!(check_valid(gs, &best).is_ok(), "race winner invalid");
+        debug_assert!(check_valid_on(gs, &plat, &best).is_ok(), "race winner invalid");
 
         // ---- Stage 2: multi-root exact search ------------------------
         let cancel = req.cancel.as_ref();
         let shared = Incumbent::new(best.makespan());
         let bnb_stage = if knobs.use_bnb && !req.is_cancelled() {
             let t = Instant::now();
-            let s = exact_bnb_stage(gs, m, shared.bound(), &shared, &knobs, cancel);
+            let s = exact_bnb_stage(gs, &plat, shared.bound(), &shared, &knobs, cancel);
             stages.push(StageStats { name: "bnb-stage", wall: t.elapsed(), explored: s.explored });
             s.fold_into(&mut agg);
             if let Some(sched) = &s.best {
@@ -638,7 +659,7 @@ impl Portfolio {
         // from: cross-engine bound sharing without a determinism cost.
         let cp_stage = if knobs.use_cp && !req.is_cancelled() {
             let t = Instant::now();
-            let s = exact_cp_stage(gs, m, best.makespan(), &shared, &knobs, cancel);
+            let s = exact_cp_stage(gs, &plat, best.makespan(), &shared, &knobs, cancel);
             stages.push(StageStats { name: "cp-stage", wall: t.elapsed(), explored: s.explored });
             s.fold_into(&mut agg);
             if let Some(sched) = &s.best {
@@ -663,7 +684,7 @@ impl Portfolio {
             && cp_stage.as_ref().map_or(true, |s| s.exhausted);
 
         let schedule = if stripped { strip_virtual_sink(g, &best) } else { best };
-        debug_assert!(check_valid(g, &schedule).is_ok(), "portfolio result invalid");
+        debug_assert!(check_valid_on(g, &plat_g, &schedule).is_ok(), "portfolio result invalid");
         let wall = t0.elapsed();
         let termination = if cancelled {
             Termination::Cancelled
@@ -751,11 +772,13 @@ fn placement_key(s: &Schedule) -> Vec<(usize, NodeId, Cycles, Cycles)> {
 
 /// Rebuild a solver schedule over the original graph, dropping the
 /// virtual `__sink__` instance added by the single-sink transform.
+/// Placements are copied verbatim (`place_raw`): the stored finish times
+/// already carry the platform-scaled costs.
 fn strip_virtual_sink(g: &Dag, s: &Schedule) -> Schedule {
     let mut out = Schedule::new(s.m);
     for p in s.iter() {
         if p.node < g.n() {
-            out.place(g, p.node, p.core, p.start);
+            out.place_raw(p.node, p.core, p.start, p.finish);
         }
     }
     out
@@ -764,16 +787,16 @@ fn strip_virtual_sink(g: &Dag, s: &Schedule) -> Schedule {
 /// The inverse of [`strip_virtual_sink`] for cached warm hints: rebuild
 /// an original-graph schedule over the extended single-sink clone,
 /// pinning the virtual sink at the makespan on core 0. The sink has zero
-/// WCET and zero-latency in-edges, so validity and makespan are
-/// unchanged by construction.
+/// WCET (hence zero cost on every core of any platform) and zero-latency
+/// in-edges, so validity and makespan are unchanged by construction.
 fn extend_with_virtual_sink(gs: &Dag, s: &Schedule) -> Schedule {
     let sink = gs.single_sink().expect("extended graph has a single sink");
     let mut out = Schedule::new(s.m);
     for p in s.iter() {
-        out.place(gs, p.node, p.core, p.start);
+        out.place_raw(p.node, p.core, p.start, p.finish);
     }
     let at = out.makespan();
-    out.place(gs, sink, 0, at);
+    out.place_raw(sink, 0, at, at);
     out
 }
 
@@ -821,7 +844,8 @@ pub fn solve_exact_bnb(
     shared: &Incumbent,
     cfg: &PortfolioConfig,
 ) -> ExactStage {
-    exact_bnb_stage(g, m, b0, shared, &legacy_knobs(g, cfg), None)
+    let plat = ResolvedPlatform::resolve(None, g, m);
+    exact_bnb_stage(g, &plat, b0, shared, &legacy_knobs(g, cfg), None)
 }
 
 /// Multi-root CP stage under a legacy config: split the constraint
@@ -836,24 +860,27 @@ pub fn solve_exact_cp(
     shared: &Incumbent,
     cfg: &PortfolioConfig,
 ) -> ExactStage {
-    exact_cp_stage(g, m, b0, shared, &legacy_knobs(g, cfg), None)
+    let plat = ResolvedPlatform::resolve(None, g, m);
+    exact_cp_stage(g, &plat, b0, shared, &legacy_knobs(g, cfg), None)
 }
 
 fn exact_bnb_stage(
     g: &Dag,
-    m: usize,
+    plat: &ResolvedPlatform,
     b0: Cycles,
     shared: &Incumbent,
     knobs: &Knobs,
     cancel: Option<&CancelToken>,
 ) -> ExactStage {
-    // Nothing can beat a bound at (or under) the critical path.
-    if b0 <= critical_path_len(g) {
+    let m = plat.m();
+    // Nothing can beat a bound at (or under) the fastest-class critical
+    // path (admissible on any core assignment of this platform).
+    if b0 <= plat.critical_path_len(g) {
         return ExactStage::empty();
     }
-    let prep = bnb::StagePrep::new(g);
+    let prep = bnb::StagePrep::new(g, plat);
     let prefixes =
-        bnb::enumerate_prefixes(g, m, &prep, b0, knobs.root_target, knobs.max_split_depth);
+        bnb::enumerate_prefixes(g, plat, &prep, b0, knobs.root_target, knobs.max_split_depth);
     let deadline = knobs.stage_deadline();
     let learn = knobs.search;
     if learn.enabled() && learn.restarts {
@@ -877,7 +904,7 @@ fn exact_bnb_stage(
                 t.import(&board);
                 t.run_segment(
                     g,
-                    m,
+                    plat,
                     &prep,
                     b0,
                     learn,
@@ -901,7 +928,7 @@ fn exact_bnb_stage(
     let outcomes = parallel_map(knobs.workers, prefixes.len(), |i| {
         bnb::solve_prefix(
             g,
-            m,
+            plat,
             &prep,
             &prefixes[i],
             b0,
@@ -919,19 +946,20 @@ fn exact_bnb_stage(
 
 fn exact_cp_stage(
     g: &Dag,
-    m: usize,
+    plat: &ResolvedPlatform,
     b0: Cycles,
     shared: &Incumbent,
     knobs: &Knobs,
     cancel: Option<&CancelToken>,
 ) -> ExactStage {
-    if b0 <= critical_path_len(g) {
+    let m = plat.m();
+    if b0 <= plat.critical_path_len(g) {
         return ExactStage::empty();
     }
-    let levels = static_levels(g);
+    let levels = plat.static_levels(g);
     let prefixes = cp::enumerate_prefixes(
         g,
-        m,
+        plat,
         knobs.encoding,
         &levels,
         b0,
@@ -956,7 +984,7 @@ fn exact_cp_stage(
                 t.import(&board);
                 t.run_segment(
                     g,
-                    m,
+                    plat,
                     knobs.encoding,
                     &levels,
                     b0,
@@ -981,7 +1009,7 @@ fn exact_cp_stage(
     let outcomes = parallel_map(knobs.workers, prefixes.len(), |i| {
         cp::solve_prefix(
             g,
-            m,
+            plat,
             knobs.encoding,
             &levels,
             &prefixes[i],
@@ -1032,6 +1060,7 @@ fn reduce_stage(outcomes: Vec<SubtreeOutcome>, roots: usize) -> ExactStage {
 mod tests {
     use super::*;
     use crate::graph::paper_example_dag;
+    use crate::sched::check_valid;
 
     fn quick_cfg(workers: usize) -> PortfolioConfig {
         PortfolioConfig {

@@ -8,6 +8,7 @@
 //! and cascades removals through a dirty worklist instead of re-scanning
 //! every placement per fixpoint round.
 
+use super::platform::ResolvedPlatform;
 use super::{Placement, Schedule};
 use crate::graph::{Cycles, Dag, NodeId};
 use std::collections::HashMap;
@@ -42,12 +43,24 @@ impl std::fmt::Display for ValidityError {
 /// 3. every node present at least once, at most once per sub-schedule;
 /// 4. non-preemption: finish = start + t.
 pub fn check_valid(g: &Dag, s: &Schedule) -> Result<(), ValidityError> {
+    check_valid_on(g, &ResolvedPlatform::resolve(None, g, s.m.max(1)), s)
+}
+
+/// [`check_valid`] under a heterogeneous platform: rule 4 becomes
+/// `finish = start + plat.cost(v, core)` and rule 2 measures arrivals with
+/// the platform's communication factors. Uniform platforms reproduce
+/// `check_valid` exactly.
+pub fn check_valid_on(
+    g: &Dag,
+    plat: &ResolvedPlatform,
+    s: &Schedule,
+) -> Result<(), ValidityError> {
     let mut present = vec![0usize; g.n()];
     for p in s.iter() {
-        if p.core >= s.m {
+        if p.core >= s.m || p.core >= plat.m() {
             return Err(ValidityError::CoreOutOfRange { core: p.core });
         }
-        if p.finish != p.start + g.wcet(p.node) {
+        if p.finish != p.start + plat.cost(p.node, p.core) {
             return Err(ValidityError::BadDuration { node: p.node, core: p.core });
         }
         present[p.node] += 1;
@@ -81,7 +94,7 @@ pub fn check_valid(g: &Dag, s: &Schedule) -> Result<(), ValidityError> {
     // Data availability.
     for p in s.iter() {
         for &(u, w) in g.parents(p.node) {
-            match s.arrival(u, w, p.core) {
+            match s.arrival_on(plat, u, w, p.core) {
                 Some(t) if t <= p.start => {}
                 _ => {
                     return Err(ValidityError::DataNotReady { node: p.node, core: p.core });
@@ -113,6 +126,14 @@ pub fn check_valid(g: &Dag, s: &Schedule) -> Result<(), ValidityError> {
 /// and shrinking a candidate set cannot change its argmin), so the
 /// one-shot resolution computes the identical fixpoint.
 pub fn prune_redundant(g: &Dag, s: &mut Schedule) -> usize {
+    prune_redundant_on(g, &ResolvedPlatform::resolve(None, g, s.m.max(1)), s)
+}
+
+/// [`prune_redundant`] under a heterogeneous platform: communication
+/// sources are resolved with the platform's latency factors, so an
+/// instance is useful iff it wins the *scaled* arrival race. Uniform
+/// platforms reproduce `prune_redundant` exactly.
+pub fn prune_redundant_on(g: &Dag, plat: &ResolvedPlatform, s: &mut Schedule) -> usize {
     let all: Vec<Placement> = s.iter().copied().collect();
     // First master-order index of each (node, core, start) key, so a
     // source placement is resolved in O(1) instead of a linear scan.
@@ -126,7 +147,7 @@ pub fn prune_redundant(g: &Dag, s: &mut Schedule) -> usize {
     let mut supports: Vec<usize> = vec![0; all.len()];
     for (i, p) in all.iter().enumerate() {
         for &(u, w) in g.parents(p.node) {
-            if let Some(src) = s.arrival_source(u, w, p.core) {
+            if let Some(src) = s.arrival_source_on(plat, u, w, p.core) {
                 if let Some(&j) = index_of.get(&(src.node, src.core, src.start)) {
                     feeds[i].push(j);
                     supports[j] += 1;
@@ -304,6 +325,42 @@ mod tests {
         let removed = prune_redundant(&g, &mut s);
         assert_eq!(removed, 2, "b-dup removal must cascade to a-dup");
         assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn check_valid_on_scales_durations_and_comm() {
+        use crate::sched::platform::{Platform, SPEED_SCALE};
+        let g = chain(); // a(2) → b(3), w = 4
+        // Core 1 runs at half speed: costs double there.
+        let p = Platform::with_speeds(vec![SPEED_SCALE, SPEED_SCALE / 2]);
+        let plat = ResolvedPlatform::resolve(Some(&p), &g, 2);
+        let mut s = Schedule::new(2);
+        s.place_on(&plat, 0, 1, 0); // a on the slow core: [0, 4)
+        s.place_on(&plat, 1, 0, 8); // b on core 0: data at 4 + w(4) = 8
+        assert_eq!(check_valid_on(&g, &plat, &s), Ok(()));
+        // The same shape with uniform durations fails the scaled rule 4.
+        let mut bad = Schedule::new(2);
+        bad.place(&g, 0, 1, 0); // finish 2 ≠ 0 + cost 4
+        bad.place(&g, 1, 0, 8);
+        assert!(matches!(
+            check_valid_on(&g, &plat, &bad),
+            Err(ValidityError::BadDuration { node: 0, .. })
+        ));
+        // Doubled communication factors push the arrival to 2 + 2·4 = 10.
+        let mut slow_comm = Platform::uniform(2);
+        slow_comm.comm_factors = vec![vec![2 * SPEED_SCALE]];
+        let cplat = ResolvedPlatform::resolve(Some(&slow_comm), &g, 2);
+        let mut c = Schedule::new(2);
+        c.place_on(&cplat, 0, 1, 0);
+        c.place_on(&cplat, 1, 0, 8);
+        assert!(matches!(
+            check_valid_on(&g, &cplat, &c),
+            Err(ValidityError::DataNotReady { node: 1, .. })
+        ));
+        let mut ok = Schedule::new(2);
+        ok.place_on(&cplat, 0, 1, 0);
+        ok.place_on(&cplat, 1, 0, 12);
+        assert_eq!(check_valid_on(&g, &cplat, &ok), Ok(()));
     }
 
     /// The pre-worklist implementation: full usefulness re-scan per

@@ -17,7 +17,7 @@
 //!   stream the input simultaneously over one bus).
 
 use crate::graph::{Cycles, Dag, NodeId};
-use crate::sched::{derive_programs, CoreStep, Schedule};
+use crate::sched::{derive_programs, CoreStep, ResolvedPlatform, Schedule};
 use crate::util::rng::SplitMix64;
 use std::collections::HashMap;
 
@@ -96,10 +96,25 @@ impl SimReport {
     }
 }
 
-/// Simulate a schedule on the machine. Panics on protocol deadlock (which
-/// a valid schedule-derived program can't produce — a panic here indicates
-/// a scheduler bug, and the tests rely on that).
+/// Simulate a schedule on the machine (uniform cores). Panics on protocol
+/// deadlock (which a valid schedule-derived program can't produce — a
+/// panic here indicates a scheduler bug, and the tests rely on that).
 pub fn simulate(g: &Dag, schedule: &Schedule, machine: &Machine) -> SimReport {
+    let plat = ResolvedPlatform::resolve(None, g, schedule.m.max(1));
+    simulate_on(g, &plat, schedule, machine)
+}
+
+/// Platform-aware simulation: a compute step on core `c` costs
+/// `plat.cost(node, c)` (before jitter/contention) instead of the bare
+/// WCET, matching what a platform-aware scheduler promised. Communication
+/// costs stay with the machine's `comm_cycles` model — the simulator
+/// prices payload bytes, not edge latencies.
+pub fn simulate_on(
+    g: &Dag,
+    plat: &ResolvedPlatform,
+    schedule: &Schedule,
+    machine: &Machine,
+) -> SimReport {
     let programs = derive_programs(g, schedule);
     let m = programs.len();
     let mut pc = vec![0usize; m];
@@ -141,7 +156,7 @@ pub fn simulate(g: &Dag, schedule: &Schedule, machine: &Machine) -> SimReport {
             }
             match &programs[c].steps[pc[c]] {
                 CoreStep::Compute { node, .. } => {
-                    let mut cost = jittered(&mut rng, g.wcet(*node), machine);
+                    let mut cost = jittered(&mut rng, plat.cost(*node, c), machine);
                     // Copy-class contention: any other core still running?
                     let others_busy = (0..m).any(|o| {
                         o != c && pc[o] < programs[o].steps.len()
@@ -381,6 +396,36 @@ mod tests {
         for v in 0..g.n() {
             assert!(r1.node_cycles.contains_key(&v), "node {v} missing");
         }
+    }
+
+    #[test]
+    fn platform_scaled_compute_doubles_on_the_slow_core() {
+        use crate::sched::{Platform, SPEED_SCALE};
+        let mut g = crate::graph::Dag::new();
+        let a = g.add_node("a", 4);
+        let b = g.add_node("b", 4);
+        g.add_edge(a, b, 1);
+        let plat = ResolvedPlatform::resolve(
+            Some(&Platform::two_class(2, 1, SPEED_SCALE / 2)),
+            &g,
+            2,
+        );
+        // Both nodes on the slow core 1: each costs 8 instead of 4.
+        let mut s = Schedule::new(2);
+        s.place_on(&plat, a, 1, 0);
+        s.place_on(&plat, b, 1, 8);
+        let r = simulate_on(&g, &plat, &s, &replay_machine());
+        assert_eq!(r.makespan, 16);
+        assert_eq!(r.node_cycles[&a], 8);
+        // Same schedule shape on the fast core 0 replays the raw WCETs.
+        let mut f = Schedule::new(2);
+        f.place_on(&plat, a, 0, 0);
+        f.place_on(&plat, b, 0, 4);
+        let rf = simulate_on(&g, &plat, &f, &replay_machine());
+        assert_eq!(rf.makespan, 8);
+        // The uniform wrapper stays byte-identical to the old behavior.
+        let ru = simulate(&g, &f, &replay_machine());
+        assert_eq!(ru.makespan, 8);
     }
 
     #[test]

@@ -20,7 +20,7 @@
 
 use crate::graph::{Cycles, Dag};
 use crate::nn::{numel, Network, Op};
-use crate::sched::{derive_programs, CoreStep, Schedule};
+use crate::sched::{derive_programs, CoreStep, Platform, Schedule, SPEED_SCALE};
 use std::collections::HashMap;
 
 /// Per-operation cycle constants of the target (§2.1's homogeneous UMA
@@ -104,6 +104,53 @@ pub fn layer_table(net: &Network, cm: &CostModel) -> Vec<(String, Cycles)> {
             (l.name.clone(), cm.layer_wcet(&l.op, &ins, &shapes[i]))
         })
         .collect()
+}
+
+/// Per-(layer, core-class) WCET table — the heterogeneous Table 1.
+/// Class `k`'s bound is the base layer WCET scaled by
+/// `SPEED_SCALE / class_speeds[k]`, rounding up: the same fixed-point rule
+/// [`ResolvedPlatform`](crate::sched::ResolvedPlatform) applies to plain
+/// node weights, computed here once per layer so a
+/// [`Platform::cost_table`] carries analysis-grade per-class bounds.
+pub fn layer_table_classes(
+    net: &Network,
+    cm: &CostModel,
+    class_speeds: &[u32],
+) -> Vec<Vec<Cycles>> {
+    assert!(class_speeds.iter().all(|&s| s > 0), "class speeds must be positive");
+    layer_table(net, cm)
+        .into_iter()
+        .map(|(_, w)| {
+            class_speeds
+                .iter()
+                .map(|&s| {
+                    (((w as u128) * SPEED_SCALE as u128 + s as u128 - 1) / s as u128) as Cycles
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// A ready-to-attach heterogeneous [`Platform`] for a network: cores map
+/// to speed classes (`core_classes[c] < class_speeds.len()`),
+/// communication stays nominal, and the cost table carries the
+/// per-(layer, class) bounds of [`layer_table_classes`] — so a
+/// platform-aware solve prices every layer with its analysis-grade bound
+/// instead of runtime-scaling one number.
+pub fn heterogeneous_platform(
+    net: &Network,
+    cm: &CostModel,
+    core_classes: Vec<usize>,
+    class_speeds: &[u32],
+) -> Platform {
+    let k = class_speeds.len();
+    let speeds = core_classes.iter().map(|&c| class_speeds[c]).collect();
+    Platform {
+        speeds,
+        core_classes,
+        comm_factors: vec![vec![SPEED_SCALE; k]; k],
+        cost_table: Some(layer_table_classes(net, cm, class_speeds)),
+    }
 }
 
 /// Result of the §5.4 global-WCET composition.
@@ -253,6 +300,31 @@ mod tests {
         cm.interference_margin = 0.10;
         let with = cm.layer_wcet(&Op::Split, &[vec![100]], &[100]);
         assert_eq!(with, (base as f64 * 1.10).round() as u64);
+    }
+
+    #[test]
+    fn per_class_layer_table_feeds_a_platform() {
+        use crate::nn::zoo::lenet5;
+        use crate::sched::ResolvedPlatform;
+        let net = lenet5(Scale::Tiny);
+        let cm = CostModel::default();
+        let base = layer_table(&net, &cm);
+        // Class 0 nominal, class 1 at half speed: every bound doubles.
+        let table = layer_table_classes(&net, &cm, &[SPEED_SCALE, SPEED_SCALE / 2]);
+        assert_eq!(table.len(), base.len());
+        for (v, (_, w)) in base.iter().enumerate() {
+            assert_eq!(table[v], vec![*w, 2 * *w]);
+        }
+        // The ready-made platform resolves and prices layers per class.
+        let p = heterogeneous_platform(&net, &cm, vec![0, 1], &[SPEED_SCALE, SPEED_SCALE / 2]);
+        assert!(p.validate(2).is_ok());
+        let g = net.to_dag(&cm);
+        let plat = ResolvedPlatform::resolve(Some(&p), &g, 2);
+        assert!(!plat.is_uniform());
+        for v in 0..g.n() {
+            assert_eq!(plat.cost(v, 0), g.wcet(v), "layer {v} nominal on the fast core");
+            assert_eq!(plat.cost(v, 1), 2 * g.wcet(v), "layer {v} doubled on the slow core");
+        }
     }
 
     #[test]

@@ -1,0 +1,193 @@
+//! Parity suite for the platform-aware request redesign: attaching an
+//! explicitly **uniform** [`Platform`] to a request must be byte-identical
+//! (makespan, placement lists, explored counts, verdict) to attaching no
+//! platform at all, for every solver and for the portfolio at 1/2/8
+//! workers — the resolver collapses semantic uniformity to the exact
+//! pre-platform code path, so any divergence here is a real regression.
+//!
+//! A heterogeneous smoke closes the loop: on a serial chain with one
+//! nominal and one half-speed core, the proven optimum lands entirely on
+//! the fast core and strictly beats the identical-slow-core platform.
+//!
+//! Workloads follow the pinned byte-parity suites: the paper's Fig. 3
+//! example and `paper(50)` seeds 1–3 under deterministic node budgets
+//! (unreachable wall-clock deadlines).
+
+use acetone::daggen::{generate, DagGenConfig};
+use acetone::graph::{ensure_single_sink, paper_example_dag, Cycles, Dag};
+use acetone::sched::bnb::ChouChung;
+use acetone::sched::cp::CpSolver;
+use acetone::sched::dsh::Dsh;
+use acetone::sched::hlfet::Hlfet;
+use acetone::sched::hybrid::Hybrid;
+use acetone::sched::ish::Ish;
+use acetone::sched::portfolio::{Portfolio, PortfolioConfig};
+use acetone::sched::{
+    check_valid, check_valid_on, Platform, ResolvedPlatform, Schedule, Scheduler, SolveReport,
+    SolveRequest, SPEED_SCALE,
+};
+use std::time::Duration;
+
+/// Unreachable wall-clock deadline: every cut below is a node budget.
+const SAFE: Duration = Duration::from_secs(3600);
+
+/// Full placement list in the schedule's deterministic master order.
+fn placements(s: &Schedule) -> Vec<(usize, usize, Cycles, Cycles)> {
+    s.iter().map(|p| (p.core, p.node, p.start, p.finish)).collect()
+}
+
+/// The two workload families of the parity suites, single-sinked so the
+/// CP encodings and the hybrid accept them (harmless for the rest).
+fn workloads() -> Vec<(String, Dag)> {
+    let mut w = vec![("paper-example".to_string(), paper_example_dag())];
+    for seed in 1..=3u64 {
+        w.push((format!("paper(50) seed={seed}"), generate(&DagGenConfig::paper(50), seed)));
+    }
+    for (_, g) in w.iter_mut() {
+        ensure_single_sink(g);
+    }
+    w
+}
+
+fn assert_same(label: &str, g: &Dag, bare: &SolveReport, uni: &SolveReport) {
+    assert_eq!(
+        bare.stats.explored, uni.stats.explored,
+        "{label}: explored counts diverge — the uniform platform changed the search"
+    );
+    assert_eq!(bare.termination, uni.termination, "{label}: verdict");
+    assert_eq!(bare.schedule.makespan(), uni.schedule.makespan(), "{label}: makespan");
+    assert_eq!(placements(&bare.schedule), placements(&uni.schedule), "{label}: placement lists");
+    assert!(check_valid(g, &uni.schedule).is_ok(), "{label}: validity");
+}
+
+#[test]
+fn uniform_platform_is_byte_identical_for_every_solver() {
+    for (label, g) in workloads() {
+        let m = 3usize;
+        let solvers: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(Hlfet),
+            Box::new(Ish),
+            Box::new(Dsh),
+            Box::new(ChouChung::default()),
+            Box::new(CpSolver::improved()),
+            Box::new(CpSolver::tang()),
+            Box::new(Hybrid),
+        ];
+        for solver in solvers {
+            // Same budget discipline as api_parity: the Tang d-tensor
+            // explodes on n=50, the others take deterministic node cuts.
+            if solver.name() == "CP-Tang" && g.n() > 11 {
+                continue;
+            }
+            let budget = if g.n() > 11 { 1500u64 } else { 4000 };
+            let breq = SolveRequest::new(&g, m).deadline(SAFE).node_limit(budget);
+            let ureq = breq.child().platform(Platform::uniform(m));
+            let bare = solver.solve(&breq);
+            let uni = solver.solve(&ureq);
+            assert_same(&format!("{label} {} m={m}", solver.name()), &g, &bare, &uni);
+        }
+    }
+}
+
+#[test]
+fn uniform_platform_portfolio_parity_across_worker_counts() {
+    // Fresh Portfolio per solve: the schedule cache would otherwise let
+    // the second run answer from the first (they share a request key by
+    // design — that collapse is pinned separately in the cache tests).
+    for (label, g) in workloads() {
+        for workers in [1usize, 2, 8] {
+            let cfg = PortfolioConfig {
+                workers,
+                root_target: 6,
+                hybrid_node_limit: Some(400),
+                ..Default::default()
+            };
+            let breq = SolveRequest::new(&g, 4).deadline(SAFE).node_limit(200);
+            let ureq = breq.child().platform(Platform::uniform(4));
+            let bare = Portfolio::new(cfg.clone()).solve_request(&breq);
+            let uni = Portfolio::new(cfg).solve_request(&ureq);
+            assert!(!bare.from_cache && !uni.from_cache, "{label} workers={workers}");
+            assert_same(
+                &format!("{label} portfolio workers={workers}"),
+                &g,
+                &bare.report,
+                &uni.report,
+            );
+        }
+    }
+}
+
+/// A serial chain: 3 nodes of 4 cycles, unit-weight edges. Any schedule
+/// runs the nodes back to back, so per-core speed fully determines the
+/// optimum — the cleanest possible heterogeneous oracle.
+fn chain() -> Dag {
+    let mut g = Dag::new();
+    let a = g.add_node("a", 4);
+    let b = g.add_node("b", 4);
+    let c = g.add_node("c", 4);
+    g.add_edge(a, b, 1);
+    g.add_edge(b, c, 1);
+    g
+}
+
+#[test]
+fn heterogeneous_optimum_moves_to_the_fast_core() {
+    let g = chain();
+    let m = 2usize;
+    // Core 0 nominal, core 1 at half speed — vs. both cores at half speed.
+    let het = Platform::two_class(m, 1, SPEED_SCALE / 2);
+    let slow = Platform::with_speeds(vec![SPEED_SCALE / 2; m]);
+    let het_plat = ResolvedPlatform::resolve(Some(&het), &g, m);
+
+    let het_req = SolveRequest::new(&g, m).deadline(SAFE).platform(het.clone());
+    let slow_req = SolveRequest::new(&g, m).deadline(SAFE).platform(slow.clone());
+    let het_opt = ChouChung::default().solve(&het_req);
+    let slow_opt = ChouChung::default().solve(&slow_req);
+    assert!(het_opt.proven_optimal() && slow_opt.proven_optimal());
+    assert!(check_valid_on(&g, &het_plat, &het_opt.schedule).is_ok());
+
+    // The chain runs serially: 3×4 on the nominal core, 3×8 all-slow.
+    assert_eq!(het_opt.schedule.makespan(), 12, "optimum must use the nominal core");
+    assert_eq!(slow_opt.schedule.makespan(), 24);
+    assert!(
+        het_opt.schedule.makespan() < slow_opt.schedule.makespan(),
+        "one fast core must strictly beat identical slow cores"
+    );
+    assert!(
+        het_opt.schedule.iter().all(|p| p.core == 0),
+        "every node of the chain belongs on the fast core"
+    );
+
+    // The heuristics see the same cost model and reach the same verdict.
+    for solver in [&Hlfet as &dyn Scheduler, &Ish, &Dsh] {
+        let h = solver.solve(&SolveRequest::new(&g, m).platform(het.clone()));
+        let s = solver.solve(&SolveRequest::new(&g, m).platform(slow.clone()));
+        assert!(check_valid_on(&g, &het_plat, &h.schedule).is_ok(), "{}", solver.name());
+        assert!(
+            h.schedule.makespan() < s.schedule.makespan(),
+            "{}: het {} !< all-slow {}",
+            solver.name(),
+            h.schedule.makespan(),
+            s.schedule.makespan()
+        );
+    }
+}
+
+#[test]
+fn heterogeneous_portfolio_beats_the_all_slow_platform() {
+    // End-to-end: the full portfolio under the same two platforms. Also
+    // pins that the answers are *cached separately* — a het request must
+    // never be answered from the all-slow entry or vice versa.
+    let g = chain();
+    let m = 2usize;
+    let het = Platform::two_class(m, 1, SPEED_SCALE / 2);
+    let slow = Platform::with_speeds(vec![SPEED_SCALE / 2; m]);
+    let p = Portfolio::default();
+    let h = p.solve_request(&SolveRequest::new(&g, m).deadline(SAFE).platform(het.clone()));
+    let s = p.solve_request(&SolveRequest::new(&g, m).deadline(SAFE).platform(slow));
+    assert!(!h.from_cache && !s.from_cache, "distinct platforms must not share a cache entry");
+    let het_plat = ResolvedPlatform::resolve(Some(&het), &g, m);
+    assert!(check_valid_on(&g, &het_plat, &h.report.schedule).is_ok());
+    assert_eq!(h.report.schedule.makespan(), 12);
+    assert_eq!(s.report.schedule.makespan(), 24);
+}
