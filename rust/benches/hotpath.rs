@@ -12,13 +12,15 @@ use acetone::sched::bnb::ChouChung;
 use acetone::sched::cp::CpSolver;
 use acetone::sched::dsh::Dsh;
 use acetone::sched::portfolio::{Portfolio, PortfolioConfig};
-use acetone::sched::serve::{BatchRequest, BatchSolver};
+use acetone::sched::serve::{BatchRequest, BatchSolver, Daemon, DaemonConfig, ProblemSpec};
 use acetone::sched::{
-    check_valid, derive_programs, prune_redundant, Platform, Scheduler, SearchOptions,
+    check_valid, derive_programs, prune_redundant, Budget, Platform, Scheduler, SearchOptions,
     SolveReport, SolveRequest, SPEED_SCALE,
 };
 use acetone::sim::{replay_machine, simulate};
 use acetone::util::bench::{bench, write_json, BenchStats};
+use acetone::util::json::Json;
+use std::io::Cursor;
 use std::time::Duration;
 
 fn main() {
@@ -178,6 +180,41 @@ fn main() {
         assert_eq!(out.stats.distinct, 4);
         assert_eq!(out.stats.deduped, 12);
         out.reports.len()
+    }));
+
+    // The same 16 requests through a fresh serve daemon session: JSONL
+    // parse + admission + dispatch + response formatting on top of the
+    // batch solve above — the delta between the two cases is the
+    // daemon's own overhead. One window (max_inflight 16), workers = 2.
+    let daemon_session = {
+        let mut s = String::new();
+        for i in 0..16 {
+            s.push_str(&format!("{{\"id\":\"r{i}\",\"seed\":{}}}\n", i % 4));
+        }
+        s.push_str("{\"verb\":\"shutdown\"}\n");
+        s
+    };
+    let daemon_parse = |v: &Json, _lineno: usize| -> Result<ProblemSpec, String> {
+        let seed = v.get("seed").and_then(Json::as_usize).unwrap_or(0);
+        Ok(ProblemSpec {
+            g: serve_dags[seed % 4].clone(),
+            m: 4,
+            budget: Budget { deadline: None, node_limit: Some(200) },
+            platform: None,
+            search: None,
+        })
+    };
+    record(bench("serve daemon session=16", 1, 5, || {
+        let mut daemon = Daemon::new(
+            serve_cfg.clone(),
+            DaemonConfig { workers: 2, max_inflight: 16, ..DaemonConfig::default() },
+        );
+        let mut out = Vec::new();
+        let summary = daemon
+            .run_session(Cursor::new(daemon_session.as_str()), &mut out, daemon_parse)
+            .unwrap();
+        assert_eq!((summary.totals.solved, summary.totals.deduped), (4, 12));
+        out.len()
     }));
 
     // Duplicate pruning on a duplication-heavy DSH schedule (clone cost

@@ -15,16 +15,20 @@
 //! * `serve`          — batch-solve a JSONL stream of scheduling requests
 //!                      through the portfolio, deduplicated, optionally
 //!                      over a persistent `--cache-dir` schedule cache;
+//!                      with `--listen`, a persistent solver daemon with
+//!                      admission control and a `stats` verb;
 //! * `dag`            — generate a §4.1 random DAG (DOT output).
 
 use acetone::graph::ensure_single_sink;
 use acetone::nn::{eval::Tensor, model_json, numel, weights, zoo, Network};
 use acetone::sched::portfolio::PortfolioConfig;
-use acetone::sched::serve::{BatchRequest, BatchSolver};
+use acetone::sched::serve::{
+    BatchRequest, BatchSolver, Daemon, DaemonConfig, ProblemSpec, SessionSummary,
+};
 use acetone::sched::{
     bnb::ChouChung, cp::CpSolver, dsh::Dsh, hlfet::Hlfet, hybrid::Hybrid, ish::Ish,
-    portfolio::Portfolio, Budget, Platform, Scheduler, SearchOptions, SolveRequest, Termination,
-    SPEED_SCALE,
+    portfolio::Portfolio, Budget, CancelToken, Platform, Scheduler, SearchOptions, SolveRequest,
+    Termination, SPEED_SCALE,
 };
 use acetone::util::json::Json;
 use acetone::wcet::CostModel;
@@ -59,6 +63,7 @@ codegen --model M --cores C --out DIR [--algo A] [--timeout S] [--node-limit N]
     emit the ACETONE-style parallel C project
 serve --requests FILE.jsonl [--cores C] [--workers W] [--cache-dir DIR]
       [--timeout S] [--node-limit N] [--nogood-capacity K]
+      [--listen SOCKET|-] [--max-inflight N] [--cache-budget BYTES]
     batch-solve a JSONL request stream through the portfolio: requests
     are deduplicated by canonical key, fanned out over one worker pool
     and answered in input order; with --cache-dir, solved schedules
@@ -74,6 +79,20 @@ serve --requests FILE.jsonl [--cores C] [--workers W] [--cache-dir DIR]
     class x class latency factors); omitted pieces default to nominal,
     and an all-nominal platform solves (and caches) exactly like no
     platform at all.
+    A line may carry an \"id\" string echoed in its response (default
+    line-<n>; duplicates are rejected naming both lines) and
+    \"cancelled\": true to mark a client that went away (answered by
+    the serial fallback). With --listen (unix socket path, or - for
+    stdio) serve becomes a persistent daemon: request lines are
+    admitted into a bounded queue (--max-inflight, default 64; excess
+    lines get an immediate {\"rejected\": true} response), the queued
+    window dispatches at {\"verb\": \"flush\"} / {\"verb\":
+    \"shutdown\"} / EOF, and every request is answered with one JSON
+    line tagged by its id. {\"verb\": \"stats\"} reports cache
+    hit/miss/eviction and compaction counters, queue depth, admission
+    rejections and per-stage wall times. --cache-budget BYTES bounds
+    the persistent L2 log, evicting oldest records first; compaction
+    reclaims dead bytes automatically in both modes.
 dag --nodes N [--seed S] [--density D]
     generate a §4.1 random DAG (DOT output)
 ";
@@ -175,14 +194,10 @@ fn budget_from(opts: &Opts) -> Result<Budget> {
     })
 }
 
-/// One-word CLI rendering of a termination verdict.
+/// One-word CLI rendering of a termination verdict (the daemon's JSONL
+/// responses use the same [`Termination::as_str`] words).
 fn verdict(t: &Termination) -> &'static str {
-    match t {
-        Termination::ProvenOptimal => "proven-optimal",
-        Termination::HeuristicComplete => "heuristic-complete",
-        Termination::BudgetExhausted { .. } => "budget-exhausted",
-        Termination::Cancelled => "cancelled",
-    }
+    t.as_str()
 }
 
 fn dispatch(args: &[String]) -> Result<()> {
@@ -401,6 +416,13 @@ fn codegen_cmd(opts: &Opts) -> Result<()> {
 /// One parsed line of the `serve` JSONL stream: the problem is
 /// materialized into an owned `Dag` first (requests borrow them).
 struct ServeSpec {
+    /// `id` key, echoed in the output (`line-<n>` when absent). Batch
+    /// mode hard-errors on duplicates; the daemon rejects the line and
+    /// keeps serving.
+    id: String,
+    /// `cancelled` key: the client was gone before dispatch — answered
+    /// by the serial fallback without running a solve.
+    cancelled: bool,
     g: acetone::graph::Dag,
     m: usize,
     budget: Budget,
@@ -410,6 +432,40 @@ struct ServeSpec {
     /// `speeds` / `core-classes` / `comm-matrix` keys: the heterogeneous
     /// platform of this request, validated with the line number.
     platform: Option<Platform>,
+}
+
+/// CLI-level request defaults every JSONL line may override.
+struct ServeDefaults {
+    cores: usize,
+    timeout: u64,
+    node_limit: Option<u64>,
+    nogood_capacity: Option<u64>,
+}
+
+impl ServeDefaults {
+    fn from_opts(opts: &Opts) -> Result<Self> {
+        Ok(Self {
+            cores: opts.usize("cores", 4)?,
+            timeout: opts.u64("timeout", 10)?,
+            node_limit: opts.opt_parsed("node-limit")?,
+            nogood_capacity: opts.opt_parsed("nogood-capacity")?,
+        })
+    }
+}
+
+/// Lower a parsed request line into the library's owned problem form
+/// (the daemon path; `id`/`cancelled` are handled by the daemon itself).
+fn spec_to_problem(spec: ServeSpec) -> ProblemSpec {
+    ProblemSpec {
+        g: spec.g,
+        m: spec.m,
+        budget: spec.budget,
+        platform: spec.platform,
+        search: spec.nogood_capacity.map(|cap| SearchOptions {
+            nogood_capacity: Some(cap as usize),
+            ..SearchOptions::default()
+        }),
+    }
 }
 
 /// A non-negative integer field of a serve request line. Fractional or
@@ -507,16 +563,61 @@ fn json_platform(v: &Json, m: usize, lineno: usize) -> Result<Option<Platform>> 
     Ok(Some(p))
 }
 
-/// Read a `serve` request stream: one JSON object per line, using the
-/// `schedule` flags as keys (`model` *or* `nodes`/`seed`/`density`, plus
-/// optional `cores`, `node-limit`, `timeout` and the platform keys —
-/// see [`json_platform`]). Blank lines and `#` comment lines are skipped.
+/// Parse one `serve` request line: the `schedule` flags as keys (`model`
+/// *or* `nodes`/`seed`/`density`, plus optional `cores`, `node-limit`,
+/// `timeout`, the platform keys — see [`json_platform`] — and the
+/// daemon keys `id`/`cancelled`). Shared by the batch path and the
+/// `--listen` daemon, so both speak the exact same request vocabulary.
+fn parse_serve_line(v: &Json, defaults: &ServeDefaults, lineno: usize) -> Result<ServeSpec> {
+    let id = match v.get("id") {
+        None => format!("line-{lineno}"),
+        Some(Json::Str(s)) => s.clone(),
+        Some(_) => bail!("requests line {lineno}: \"id\" must be a string"),
+    };
+    let cancelled = match v.get("cancelled") {
+        None => false,
+        Some(Json::Bool(b)) => *b,
+        Some(_) => bail!("requests line {lineno}: \"cancelled\" must be a boolean"),
+    };
+    let g = if let Some(name) = v.get("model").and_then(Json::as_str) {
+        model_by_name(name)?.to_dag(&CostModel::default())
+    } else if let Some(n) = json_u64(v, "nodes", lineno)? {
+        if n == 0 {
+            bail!("requests line {lineno}: \"nodes\" must be >= 1");
+        }
+        let mut cfg = acetone::daggen::DagGenConfig::paper(n as usize);
+        if let Some(d) = v.get("density").and_then(Json::as_f64) {
+            cfg.density = d;
+        }
+        let seed = json_u64(v, "seed", lineno)?.unwrap_or(1);
+        acetone::daggen::generate(&cfg, seed)
+    } else {
+        bail!("requests line {lineno}: need \"model\" or \"nodes\"");
+    };
+    // Validate here with the line number rather than letting the
+    // portfolio's `m >= 1` assertion abort the whole batch.
+    let m = json_u64(v, "cores", lineno)?.map(|c| c as usize).unwrap_or(defaults.cores);
+    if m == 0 {
+        bail!("requests line {lineno}: \"cores\" must be >= 1");
+    }
+    let budget = Budget {
+        deadline: Some(Duration::from_secs(
+            json_u64(v, "timeout", lineno)?.unwrap_or(defaults.timeout),
+        )),
+        node_limit: json_u64(v, "node-limit", lineno)?.or(defaults.node_limit),
+    };
+    let nogood_capacity = json_u64(v, "nogood-capacity", lineno)?.or(defaults.nogood_capacity);
+    let platform = json_platform(v, m, lineno)?;
+    Ok(ServeSpec { id, cancelled, g, m, budget, nogood_capacity, platform })
+}
+
+/// Read a whole `serve` request stream (batch mode). Blank lines and `#`
+/// comment lines are skipped; duplicate ids are a hard error here (the
+/// daemon instead rejects the offending line and keeps serving).
 fn parse_serve_stream(text: &str, opts: &Opts) -> Result<Vec<ServeSpec>> {
-    let default_cores = opts.usize("cores", 4)?;
-    let default_timeout = opts.u64("timeout", 10)?;
-    let default_node_limit: Option<u64> = opts.opt_parsed("node-limit")?;
-    let default_nogood_capacity: Option<u64> = opts.opt_parsed("nogood-capacity")?;
-    let mut specs = Vec::new();
+    let defaults = ServeDefaults::from_opts(opts)?;
+    let mut specs: Vec<ServeSpec> = Vec::new();
+    let mut seen_ids: HashMap<String, usize> = HashMap::new();
     for (lineno, raw) in text.lines().enumerate() {
         let line = raw.trim();
         let lineno = lineno + 1;
@@ -524,45 +625,25 @@ fn parse_serve_stream(text: &str, opts: &Opts) -> Result<Vec<ServeSpec>> {
             continue;
         }
         let v = Json::parse(line).map_err(|e| anyhow!("requests line {lineno}: {e}"))?;
-        let g = if let Some(name) = v.get("model").and_then(Json::as_str) {
-            model_by_name(name)?.to_dag(&CostModel::default())
-        } else if let Some(n) = json_u64(&v, "nodes", lineno)? {
-            if n == 0 {
-                bail!("requests line {lineno}: \"nodes\" must be >= 1");
-            }
-            let mut cfg = acetone::daggen::DagGenConfig::paper(n as usize);
-            if let Some(d) = v.get("density").and_then(Json::as_f64) {
-                cfg.density = d;
-            }
-            let seed = json_u64(&v, "seed", lineno)?.unwrap_or(1);
-            acetone::daggen::generate(&cfg, seed)
-        } else {
-            bail!("requests line {lineno}: need \"model\" or \"nodes\"");
-        };
-        // Validate here with the line number rather than letting the
-        // portfolio's `m >= 1` assertion abort the whole batch.
-        let m = json_u64(&v, "cores", lineno)?.map(|c| c as usize).unwrap_or(default_cores);
-        if m == 0 {
-            bail!("requests line {lineno}: \"cores\" must be >= 1");
+        let spec = parse_serve_line(&v, &defaults, lineno)?;
+        if let Some(first) = seen_ids.insert(spec.id.clone(), lineno) {
+            bail!(
+                "requests line {lineno}: duplicate id {:?} (already used on line {first})",
+                spec.id
+            );
         }
-        let budget = Budget {
-            deadline: Some(Duration::from_secs(
-                json_u64(&v, "timeout", lineno)?.unwrap_or(default_timeout),
-            )),
-            node_limit: json_u64(&v, "node-limit", lineno)?.or(default_node_limit),
-        };
-        let nogood_capacity =
-            json_u64(&v, "nogood-capacity", lineno)?.or(default_nogood_capacity);
-        let platform = json_platform(&v, m, lineno)?;
-        specs.push(ServeSpec { g, m, budget, nogood_capacity, platform });
+        specs.push(spec);
     }
     Ok(specs)
 }
 
 fn serve_cmd(opts: &Opts) -> Result<()> {
-    let path = opts
-        .get("requests")
-        .ok_or_else(|| anyhow!("--requests FILE.jsonl required (one request object per line)"))?;
+    if opts.get("listen").is_some() {
+        return serve_daemon_cmd(opts);
+    }
+    let path = opts.get("requests").ok_or_else(|| {
+        anyhow!("--requests FILE.jsonl required (or --listen SOCKET|- for daemon mode)")
+    })?;
     let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
     let specs = parse_serve_stream(&text, opts)?;
     if specs.is_empty() {
@@ -571,12 +652,18 @@ fn serve_cmd(opts: &Opts) -> Result<()> {
     let workers = opts.usize("workers", 0)?;
     let cfg = PortfolioConfig {
         cache_dir: opts.get("cache-dir").map(PathBuf::from),
+        cache_budget: opts.opt_parsed("cache-budget")?,
         ..PortfolioConfig::default()
     };
     let server = BatchSolver::new(cfg);
     let mut batch = BatchRequest::new().workers(workers);
     for spec in &specs {
         let mut req = SolveRequest::new(&spec.g, spec.m).budget(spec.budget.clone());
+        if spec.cancelled {
+            let token = CancelToken::new();
+            token.cancel();
+            req = req.cancel(token);
+        }
         if let Some(p) = &spec.platform {
             req = req.platform(p.clone());
         }
@@ -589,10 +676,12 @@ fn serve_cmd(opts: &Opts) -> Result<()> {
         batch = batch.push(req);
     }
     let out = server.solve_batch(&batch);
-    for (i, served) in out.reports.iter().enumerate() {
+    for (i, (spec, served)) in specs.iter().zip(&out.reports).enumerate() {
         let r = &served.report;
         println!(
-            "#{i:<4} {:<9} makespan={:<8} verdict={:<18} explored={:<8} nogoods={:<6} wall={:?}",
+            "#{i:<4} id={:<10} {:<9} makespan={:<8} verdict={:<18} explored={:<8} \
+             nogoods={:<6} wall={:?}",
+            spec.id,
             served.source.as_str(),
             r.schedule.makespan(),
             verdict(&r.termination),
@@ -609,6 +698,93 @@ fn serve_cmd(opts: &Opts) -> Result<()> {
     );
     println!("cache: {:?}", server.portfolio().cache_stats());
     Ok(())
+}
+
+/// The daemon's per-line parser: the batch request vocabulary, lowered
+/// to the library's [`ProblemSpec`]. Errors become per-line error
+/// responses instead of killing the session.
+fn line_parser(
+    defaults: &ServeDefaults,
+) -> impl FnMut(&Json, usize) -> Result<ProblemSpec, String> + '_ {
+    move |v, lineno| {
+        parse_serve_line(v, defaults, lineno).map(spec_to_problem).map_err(|e| format!("{e:#}"))
+    }
+}
+
+/// One line of operator log per served session (stderr: stdout carries
+/// the JSONL responses in `--listen -` mode). Counters are
+/// daemon-lifetime, so over a socket they accumulate across connections.
+fn log_session(s: &SessionSummary) {
+    let t = s.totals;
+    eprintln!(
+        "session: {} lines → {} responses ({} solved, {} cache hits, {} deduped, \
+         {} cancelled, {} errors, {} rejected){}",
+        t.lines,
+        t.responses,
+        t.solved,
+        t.cache_hits,
+        t.deduped,
+        t.cancelled,
+        t.errors,
+        s.queue.rejected,
+        if s.shutdown { "; shutdown" } else { "" }
+    );
+}
+
+/// `serve --listen`: the persistent solver daemon
+/// (see `acetone::sched::serve::daemon` for the protocol).
+fn serve_daemon_cmd(opts: &Opts) -> Result<()> {
+    let listen = opts.get("listen").unwrap_or("-");
+    let defaults = ServeDefaults::from_opts(opts)?;
+    let cfg = PortfolioConfig {
+        cache_dir: opts.get("cache-dir").map(PathBuf::from),
+        cache_budget: opts.opt_parsed("cache-budget")?,
+        ..PortfolioConfig::default()
+    };
+    let dcfg = DaemonConfig {
+        max_inflight: opts.usize("max-inflight", 64)?,
+        workers: opts.usize("workers", 0)?,
+        ..DaemonConfig::default()
+    };
+    let mut daemon = Daemon::new(cfg, dcfg);
+    if listen == "-" {
+        let stdin = std::io::stdin();
+        let stdout = std::io::stdout();
+        let summary = daemon.run_session(stdin.lock(), stdout.lock(), line_parser(&defaults))?;
+        log_session(&summary);
+        return Ok(());
+    }
+    listen_unix(&mut daemon, listen, &defaults)
+}
+
+/// Accept connections on a unix socket, one session at a time (the
+/// daemon, its caches and its counters persist across connections). A
+/// `shutdown` verb ends the whole daemon; a client EOF only ends its
+/// session.
+#[cfg(unix)]
+fn listen_unix(daemon: &mut Daemon, path: &str, defaults: &ServeDefaults) -> Result<()> {
+    use std::os::unix::net::UnixListener;
+    // A leftover socket file from an unclean exit would fail the bind
+    // with AddrInUse.
+    let _ = std::fs::remove_file(path);
+    let listener = UnixListener::bind(path).with_context(|| format!("binding {path}"))?;
+    eprintln!("serve: listening on {path} (JSONL requests; {{\"verb\":\"shutdown\"}} stops)");
+    loop {
+        let (stream, _) = listener.accept()?;
+        let reader = std::io::BufReader::new(stream.try_clone()?);
+        let summary = daemon.run_session(reader, stream, line_parser(defaults))?;
+        log_session(&summary);
+        if summary.shutdown {
+            break;
+        }
+    }
+    let _ = std::fs::remove_file(path);
+    Ok(())
+}
+
+#[cfg(not(unix))]
+fn listen_unix(_daemon: &mut Daemon, _path: &str, _defaults: &ServeDefaults) -> Result<()> {
+    bail!("--listen SOCKET needs a unix platform; use --listen - for stdio")
 }
 
 fn dag_cmd(opts: &Opts) -> Result<()> {
@@ -646,9 +822,13 @@ mod tests {
     #[test]
     fn help_covers_every_parsed_flag() {
         let flags = parsed_flags();
-        // Scraper sanity: flags only this PR introduced must be seen.
+        // Scraper sanity: flags only recent PRs introduced must be seen.
         assert!(flags.contains("cache-dir"), "scraper missed serve flags: {flags:?}");
         assert!(flags.contains("node-limit"), "scraper missed budget flags: {flags:?}");
+        assert!(flags.contains("listen"), "scraper missed daemon flags: {flags:?}");
+        assert!(flags.contains("max-inflight"), "scraper missed daemon flags: {flags:?}");
+        assert!(flags.contains("cache-budget"), "scraper missed daemon flags: {flags:?}");
+        assert!(flags.contains("id"), "scraper missed the serve id key: {flags:?}");
         for flag in &flags {
             assert!(
                 HELP.contains(&format!("--{flag}")) || HELP.contains(&format!("\"{flag}\"")),
@@ -686,6 +866,27 @@ mod tests {
         assert_eq!(specs[1].budget.node_limit, Some(9));
         assert_eq!(specs[1].budget.deadline, Some(Duration::from_secs(1)));
         assert_eq!(specs[1].nogood_capacity, Some(9), "per-line override wins");
+    }
+
+    #[test]
+    fn serve_stream_parses_ids_and_rejects_duplicates() {
+        let opts = Opts::parse(&[]).unwrap();
+        let text = "{\"nodes\": 6, \"id\": \"job-a\"}\n\n{\"nodes\": 6}\n";
+        let specs = parse_serve_stream(text, &opts).unwrap();
+        assert_eq!(specs[0].id, "job-a");
+        assert_eq!(specs[1].id, "line-3", "fallback id names the input line");
+        assert!(!specs[0].cancelled);
+
+        let dup = "{\"nodes\": 6, \"id\": \"a\"}\n{\"nodes\": 7, \"id\": \"a\"}\n";
+        let err = parse_serve_stream(dup, &opts).unwrap_err().to_string();
+        assert!(err.contains("duplicate id"), "got {err}");
+        assert!(err.contains("line 2") && err.contains("line 1"), "both lines named: {err}");
+
+        assert!(parse_serve_stream("{\"nodes\": 6, \"id\": 7}", &opts).is_err());
+
+        let c = parse_serve_stream("{\"nodes\": 6, \"cancelled\": true}", &opts).unwrap();
+        assert!(c[0].cancelled);
+        assert!(parse_serve_stream("{\"nodes\": 6, \"cancelled\": 1}", &opts).is_err());
     }
 
     #[test]

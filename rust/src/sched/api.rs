@@ -392,6 +392,18 @@ impl Termination {
     pub fn is_optimal(&self) -> bool {
         matches!(self, Termination::ProvenOptimal)
     }
+
+    /// Stable one-word rendering for logs, the CLI and the serve daemon's
+    /// JSONL responses (part of the daemon's byte-determinism surface —
+    /// renaming a verdict is a response-format change).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Termination::ProvenOptimal => "proven-optimal",
+            Termination::HeuristicComplete => "heuristic-complete",
+            Termination::BudgetExhausted { .. } => "budget-exhausted",
+            Termination::Cancelled => "cancelled",
+        }
+    }
 }
 
 /// Wall time and exploration of one internal stage of a composite solve
@@ -478,6 +490,26 @@ impl SearchStats {
         self.restarts += restarts;
         self.max_depth = self.max_depth.max(*max_depth);
         self.wall_cut |= wall_cut;
+    }
+
+    /// Fold another report's *stage* timings into this one, merging by
+    /// stage name (first-appearance order, walls and explored counts
+    /// sum). [`SearchStats::absorb`] deliberately leaves `stages` alone —
+    /// inside one composite solve they describe the enclosing pipeline —
+    /// but a long-lived server aggregating *across* solves (the serve
+    /// daemon's `stats` verb) wants exactly this cumulative per-stage
+    /// view. Kept separate so the two aggregation scopes can't be mixed
+    /// up by accident.
+    pub fn absorb_stages(&mut self, other: &[StageStats]) {
+        for s in other {
+            match self.stages.iter_mut().find(|mine| mine.name == s.name) {
+                Some(mine) => {
+                    mine.wall += s.wall;
+                    mine.explored += s.explored;
+                }
+                None => self.stages.push(s.clone()),
+            }
+        }
     }
 }
 

@@ -82,12 +82,23 @@ pub struct CacheStats {
     pub len: usize,
     /// Hits answered by the persistent L2 (0 without a cache directory).
     pub l2_hits: u64,
+    /// Cross-request warm hints served ([`ScheduleCache::warm_hint`]
+    /// returned a same-problem schedule under a different request tag).
+    pub hint_hits: u64,
     /// Solves currently readable from the persistent L2.
     pub persisted: usize,
     /// Stale files / corrupt records the L2 ignored (never a panic).
     pub skipped: u64,
     /// L2 I/O errors downgraded to miss/no-persist.
     pub io_errors: u64,
+    /// Current size of the L2 log (`schedules.bin`) in bytes.
+    pub bin_bytes: u64,
+    /// L2 log bytes owned by no live record (compaction reclaims them).
+    pub dead_bytes: u64,
+    /// L2 compaction/GC cycles performed.
+    pub compactions: u64,
+    /// L2 records evicted by the size budget (oldest-first).
+    pub l2_evicted: u64,
 }
 
 struct Inner {
@@ -103,6 +114,7 @@ struct Inner {
     misses: u64,
     evictions: u64,
     l2_hits: u64,
+    hint_hits: u64,
 }
 
 /// Thread-safe two-tier schedule cache: capacity-bounded in-memory L1
@@ -149,6 +161,24 @@ impl ScheduleCache {
         Self::build(capacity, Some(PersistentStore::open(dir)))
     }
 
+    /// Like [`ScheduleCache::with_persistent`], with the L2 lifecycle
+    /// knobs of a long-lived daemon: an optional size budget in bytes
+    /// (oldest-first eviction + compaction keep `schedules.bin` under
+    /// it) and the dead-bytes threshold that triggers a GC cycle — see
+    /// [`PersistentStore::set_budget`] /
+    /// [`PersistentStore::set_compact_threshold`].
+    pub fn with_persistent_budget(
+        capacity: usize,
+        dir: impl AsRef<Path>,
+        budget: Option<u64>,
+        compact_threshold: u64,
+    ) -> Self {
+        let mut store = PersistentStore::open(dir);
+        store.set_compact_threshold(compact_threshold);
+        store.set_budget(budget);
+        Self::build(capacity, Some(store))
+    }
+
     fn build(capacity: usize, l2: Option<PersistentStore>) -> Self {
         Self {
             inner: Mutex::new(Inner {
@@ -159,6 +189,7 @@ impl ScheduleCache {
                 misses: 0,
                 evictions: 0,
                 l2_hits: 0,
+                hint_hits: 0,
             }),
             capacity: capacity.max(1),
         }
@@ -223,12 +254,16 @@ impl ScheduleCache {
         if key.len() < TAG {
             return None;
         }
-        let inner = self.inner.lock().expect("cache mutex");
-        inner
+        let mut inner = self.inner.lock().expect("cache mutex");
+        let hit = inner
             .order
             .iter()
             .find(|k| k.len() >= TAG && k[TAG..] == key[TAG..] && k.as_slice() != key)
-            .and_then(|k| inner.map.get(k).cloned())
+            .and_then(|k| inner.map.get(k).cloned());
+        if hit.is_some() {
+            inner.hint_hits += 1;
+        }
+        hit
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -240,9 +275,14 @@ impl ScheduleCache {
             evictions: inner.evictions,
             len: inner.map.len(),
             l2_hits: inner.l2_hits,
+            hint_hits: inner.hint_hits,
             persisted: l2.entries,
             skipped: l2.skipped,
             io_errors: l2.io_errors,
+            bin_bytes: l2.bin_bytes,
+            dead_bytes: l2.dead_bytes,
+            compactions: l2.compactions,
+            l2_evicted: l2.evicted,
         }
     }
 }

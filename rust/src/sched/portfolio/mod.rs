@@ -80,7 +80,7 @@ mod pool;
 
 pub use cache::{canonical_key, CacheStats, CachedSolve, ScheduleCache};
 pub use incumbent::Incumbent;
-pub use persist::{PersistStats, PersistentStore};
+pub use persist::{PersistStats, PersistentStore, DEFAULT_COMPACT_THRESHOLD};
 pub use pool::parallel_map;
 
 use super::api::cancelled_fallback;
@@ -182,6 +182,12 @@ pub struct PortfolioConfig {
     /// in-memory cache only; `Some(dir)` makes solves survive process
     /// restarts (see [`PersistentStore`] for the failure containment).
     pub cache_dir: Option<std::path::PathBuf>,
+    /// Size budget in bytes for the persistent tier's `schedules.bin`
+    /// (ignored without [`PortfolioConfig::cache_dir`]). `None` =
+    /// unbounded (the historical behavior); `Some(bytes)` keeps the log
+    /// under the bound with deterministic oldest-first eviction plus a
+    /// compaction cycle — the `--cache-budget` flag of the serve daemon.
+    pub cache_budget: Option<u64>,
     /// Conflict-driven-learning defaults for the exact stages (see
     /// `sched::cdcl`); request-level [`SearchOptions`] fields override
     /// these per solve. All-`None` (the default) keeps the exact stages
@@ -207,6 +213,7 @@ impl Default for PortfolioConfig {
             memo_capacity: bnb::DEFAULT_MEMO_CAPACITY,
             cache_capacity: 128,
             cache_dir: None,
+            cache_budget: None,
             search: SearchOptions::default(),
         }
     }
@@ -437,7 +444,12 @@ impl Default for Portfolio {
 impl Portfolio {
     pub fn new(cfg: PortfolioConfig) -> Self {
         let cache = match &cfg.cache_dir {
-            Some(dir) => ScheduleCache::with_persistent(cfg.cache_capacity, dir),
+            Some(dir) => ScheduleCache::with_persistent_budget(
+                cfg.cache_capacity,
+                dir,
+                cfg.cache_budget,
+                DEFAULT_COMPACT_THRESHOLD,
+            ),
             None => ScheduleCache::new(cfg.cache_capacity),
         };
         Self { cfg, cache }

@@ -14,12 +14,33 @@
 //!   followed by append-only records, each `[payload-length, key,
 //!   termination, schedule, checksum]` as little-endian `u64` words.
 //!   Inserts append; nothing is ever rewritten in place.
-//! * **`schedules.idx`** — the lookup index (keys + byte offsets into
-//!   the log), rewritten atomically via temp-file + rename on an
+//! * **`schedules.idx`** — the lookup index (keys + byte offsets/lengths
+//!   into the log), rewritten atomically via temp-file + rename on an
 //!   amortized schedule (every append while the store is small, then at
 //!   power-of-two sizes). On open, a consistent index makes startup
 //!   O(index); a missing/stale/corrupt index falls back to a full log
 //!   scan and is rebuilt.
+//!
+//! # Lifecycle: dead bytes, compaction, size budget
+//!
+//! A long-lived daemon writes the log indefinitely, so the store tracks
+//! **dead bytes** — log bytes no live index entry points at. They arise
+//! from records superseded after a crash replay (`scan_log`'s later-wins
+//! rule orphans the earlier copy) and from budget evictions (below).
+//! Once `dead_bytes` crosses the compaction threshold
+//! ([`PersistentStore::set_compact_threshold`]), the live records are
+//! rewritten — in their original append order — through the same atomic
+//! temp-file + rename path every other rewrite uses, shrinking
+//! `schedules.bin` to exactly its live content. Each cycle is counted in
+//! [`PersistStats::compactions`].
+//!
+//! An optional **size budget** ([`PersistentStore::set_budget`]) bounds
+//! the log: when `schedules.bin` grows past the budget, the *oldest*
+//! records (lowest log offset — deterministic, no clocks involved) are
+//! evicted until the live content fits in three quarters of the budget
+//! (hysteresis: each compaction buys a quarter-budget of appends before
+//! the next), then a compaction shrinks the file. Evictions are counted
+//! in [`PersistStats::evicted`].
 //!
 //! # Failure containment
 //!
@@ -32,9 +53,12 @@
 //!   temp-file + rename;
 //! * a **corrupt or torn record** (crash mid-append, bad checksum)
 //!   ends the scan: the valid prefix is kept, the tail is counted as
-//!   skipped and healed away by an atomic rewrite of the prefix;
+//!   skipped and healed away by an atomic rewrite of the prefix; a
+//!   record that fails its checksum during *compaction* is dropped the
+//!   same way (counted as skipped) — live records are preserved;
 //! * any I/O error downgrades the operation (a failed read is a miss, a
-//!   failed append is simply not persisted) and is counted in
+//!   failed append is simply not persisted, a failed compaction leaves
+//!   the old file in place) and is counted in
 //!   [`PersistStats::io_errors`].
 
 use super::cache::CachedSolve;
@@ -57,9 +81,13 @@ const HEADER_WORDS: usize = 3;
 /// Upper bound on one record's payload words — a length word beyond this
 /// is treated as corruption rather than attempted as an allocation.
 const MAX_RECORD_WORDS: u64 = 1 << 24;
+/// Default dead-bytes threshold that triggers a compaction cycle (1 MiB:
+/// small enough that a daemon's log never carries much garbage, large
+/// enough that the rewrite is rare relative to appends).
+pub const DEFAULT_COMPACT_THRESHOLD: u64 = 1 << 20;
 
 /// Counters of the persistent tier (monotonic over the store's lifetime,
-/// except `entries`/`bin_bytes` which track current state).
+/// except `entries`/`bin_bytes`/`dead_bytes` which track current state).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PersistStats {
     /// Records currently indexed (readable solves on disk).
@@ -70,6 +98,22 @@ pub struct PersistStats {
     pub io_errors: u64,
     /// Current size of `schedules.bin` in bytes.
     pub bin_bytes: u64,
+    /// Bytes of `schedules.bin` no live record owns (superseded or
+    /// evicted records awaiting compaction).
+    pub dead_bytes: u64,
+    /// Compaction cycles performed (live records rewritten atomically).
+    pub compactions: u64,
+    /// Records evicted by the size budget (oldest-first, deterministic).
+    pub evicted: u64,
+}
+
+/// One indexed record: where its length word sits and how many bytes the
+/// whole record spans (known sizes make eviction and dead-byte
+/// accounting O(1), no re-read).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Rec {
+    offset: u64,
+    len: u64,
 }
 
 /// The append-only on-disk schedule store. Not internally synchronized:
@@ -81,19 +125,28 @@ pub struct PersistStats {
 /// (appends are indexed at the real end-of-file offset and entries are
 /// verified by key on read), but a reopen that catches a sibling's
 /// append mid-write will treat the half-written tail as torn and heal
-/// it away. Serving replicas should each point at their own directory
+/// it away, and a compaction drops sibling records the local index
+/// never saw. Serving replicas should each point at their own directory
 /// (or share a pre-warmed read-mostly one).
 #[derive(Debug)]
 pub struct PersistentStore {
     dir: PathBuf,
     bin: PathBuf,
     idx: PathBuf,
-    /// key → byte offset of the record's length word in `schedules.bin`.
-    index: HashMap<Vec<u64>, u64>,
+    /// key → offset/length of the record in `schedules.bin`.
+    index: HashMap<Vec<u64>, Rec>,
     /// Valid length of `schedules.bin` (append position).
     bin_len: u64,
+    /// Log bytes no index entry owns (see the module docs).
+    dead_bytes: u64,
+    /// Optional bound on `schedules.bin` (see [`Self::set_budget`]).
+    budget: Option<u64>,
+    /// Dead-bytes level that triggers a compaction cycle.
+    compact_threshold: u64,
     skipped: u64,
     io_errors: u64,
+    compactions: u64,
+    evicted: u64,
     /// Set after an unrecoverable write error: reads keep working off the
     /// index, further appends are dropped (counted as io_errors).
     append_broken: bool,
@@ -111,8 +164,13 @@ impl PersistentStore {
             dir,
             index: HashMap::new(),
             bin_len: (HEADER_WORDS * 8) as u64,
+            dead_bytes: 0,
+            budget: None,
+            compact_threshold: DEFAULT_COMPACT_THRESHOLD,
             skipped: 0,
             io_errors: 0,
+            compactions: 0,
+            evicted: 0,
             append_broken: false,
         };
         if fs::create_dir_all(&store.dir).is_err() {
@@ -161,18 +219,42 @@ impl PersistentStore {
             skipped: self.skipped,
             io_errors: self.io_errors,
             bin_bytes: self.bin_len,
+            dead_bytes: self.dead_bytes,
+            compactions: self.compactions,
+            evicted: self.evicted,
         }
+    }
+
+    /// Bound `schedules.bin` to `bytes` (`None` = unbounded, the
+    /// default). Enforced immediately and after every append: oldest
+    /// records (lowest log offset) are evicted until the live content
+    /// fits in three quarters of the budget, then a compaction shrinks
+    /// the file (module docs: lifecycle).
+    pub fn set_budget(&mut self, bytes: Option<u64>) {
+        self.budget = bytes;
+        self.enforce_budget();
+        self.maybe_compact();
+    }
+
+    /// Set the dead-bytes level that triggers a compaction cycle
+    /// (default [`DEFAULT_COMPACT_THRESHOLD`]). Re-checked immediately,
+    /// so lowering the threshold below the current `dead_bytes` compacts
+    /// right away.
+    pub fn set_compact_threshold(&mut self, bytes: u64) {
+        self.compact_threshold = bytes.max(1);
+        self.maybe_compact();
     }
 
     /// Read one solve back. A decode failure un-indexes the record and
     /// reports a miss (counted), never an error.
     pub fn get(&mut self, key: &[u64]) -> Option<CachedSolve> {
-        let offset = *self.index.get(key)?;
-        match self.read_record_at(offset) {
+        let rec = *self.index.get(key)?;
+        match self.read_record_at(rec.offset) {
             Some((stored_key, solve)) if stored_key == key => Some(solve),
             _ => {
                 self.io_errors += 1;
                 self.index.remove(key);
+                self.dead_bytes += rec.len;
                 None
             }
         }
@@ -212,8 +294,10 @@ impl PersistentStore {
                 return;
             }
         };
-        self.index.insert(key.to_vec(), offset);
+        self.index.insert(key.to_vec(), Rec { offset, len: record.len() as u64 });
         self.bin_len = offset + record.len() as u64;
+        self.enforce_budget();
+        self.maybe_compact();
         // Amortize the index rewrite: every insert while the store is
         // small (tests and typical serving stores see a fresh index),
         // then only at power-of-two sizes — O(total entries) index bytes
@@ -225,6 +309,99 @@ impl PersistentStore {
         }
     }
 
+    /// Budget enforcement (no-op without a budget): evict oldest-first
+    /// until the live bytes fit in 3/4 of the budget, then compact so the
+    /// file itself shrinks under the bound. Deterministic — eviction
+    /// order is log offset order, a pure function of insert history.
+    fn enforce_budget(&mut self) {
+        let Some(budget) = self.budget else {
+            return;
+        };
+        if self.bin_len <= budget {
+            return;
+        }
+        // Hysteresis target: each enforcement buys a quarter budget of
+        // appends before the next, keeping the rewrite amortized O(1)
+        // per appended byte.
+        let target = budget - budget / 4;
+        let mut by_age: Vec<(Vec<u64>, Rec)> =
+            self.index.iter().map(|(k, &r)| (k.clone(), r)).collect();
+        by_age.sort_by_key(|&(_, r)| r.offset);
+        for (key, rec) in by_age {
+            if self.bin_len - self.dead_bytes <= target {
+                break;
+            }
+            self.index.remove(&key);
+            self.dead_bytes += rec.len;
+            self.evicted += 1;
+        }
+        // The file is over budget by precondition; only a rewrite of the
+        // live records actually shrinks it.
+        self.compact();
+    }
+
+    fn maybe_compact(&mut self) {
+        if self.dead_bytes >= self.compact_threshold {
+            self.compact();
+        }
+    }
+
+    /// Rewrite the live records — original append order — through the
+    /// atomic temp-file + rename path, dropping every dead byte. A record
+    /// that fails its checksum on the way through is dropped and counted
+    /// as skipped; a failed write leaves the old file (and index) intact.
+    fn compact(&mut self) {
+        if self.append_broken {
+            return;
+        }
+        let Ok(bytes) = fs::read(&self.bin) else {
+            self.io_errors += 1;
+            self.append_broken = true;
+            return;
+        };
+        let mut by_age: Vec<(Vec<u64>, Rec)> =
+            self.index.iter().map(|(k, &r)| (k.clone(), r)).collect();
+        by_age.sort_by_key(|&(_, r)| r.offset);
+        let mut fresh = Vec::with_capacity((self.bin_len - self.dead_bytes) as usize);
+        for w in [MAGIC_BIN, FORMAT_VERSION, KEY_VERSION] {
+            fresh.extend_from_slice(&w.to_le_bytes());
+        }
+        let mut new_index = HashMap::with_capacity(self.index.len());
+        let mut dropped = 0u64;
+        for (key, rec) in by_age {
+            let (start, end) = (rec.offset as usize, (rec.offset + rec.len) as usize);
+            let valid = if end > bytes.len() {
+                false
+            } else {
+                match decode_record(&bytes[start..end]) {
+                    Some((consumed, k, _)) => consumed == rec.len as usize && k == key,
+                    None => false,
+                }
+            };
+            if !valid {
+                // Live-set corruption: drop the record, keep the rest.
+                dropped += 1;
+                continue;
+            }
+            let offset = fresh.len() as u64;
+            fresh.extend_from_slice(&bytes[start..end]);
+            new_index.insert(key, Rec { offset, len: rec.len });
+        }
+        if write_atomic(&self.bin, &fresh).is_err() {
+            // Old file still in place: the index stays valid, only the
+            // garbage stays too.
+            self.io_errors += 1;
+            self.append_broken = true;
+            return;
+        }
+        self.skipped += dropped;
+        self.index = new_index;
+        self.bin_len = fresh.len() as u64;
+        self.dead_bytes = 0;
+        self.compactions += 1;
+        self.write_index();
+    }
+
     /// Replace `schedules.bin` with a fresh header-only file, atomically.
     fn write_fresh(&mut self) {
         let mut bytes = Vec::with_capacity(HEADER_WORDS * 8);
@@ -233,6 +410,7 @@ impl PersistentStore {
         }
         self.index.clear();
         self.bin_len = bytes.len() as u64;
+        self.dead_bytes = 0;
         if write_atomic(&self.bin, &bytes).is_err() {
             self.io_errors += 1;
             self.append_broken = true;
@@ -244,7 +422,9 @@ impl PersistentStore {
     /// Try the fast open path: a `schedules.idx` whose header matches and
     /// whose recorded log length equals the actual file. Returns false
     /// (leaving the index empty) when the caller must fall back to a
-    /// full log scan.
+    /// full log scan. An index written before records carried lengths
+    /// (the pre-lifecycle layout) fails the structural walk here and is
+    /// rebuilt by that same scan — one slower open, no data loss.
     fn load_index(&mut self, bin_bytes: &[u8]) -> bool {
         let Ok(idx_bytes) = fs::read(&self.idx) else {
             return false;
@@ -252,7 +432,7 @@ impl PersistentStore {
         let Some(words) = as_words(&idx_bytes) else {
             return false;
         };
-        if words.len() < 5
+        if words.len() < 6
             || words[0] != MAGIC_IDX
             || words[1] != FORMAT_VERSION
             || words[2] != KEY_VERSION
@@ -260,8 +440,9 @@ impl PersistentStore {
         {
             return false;
         }
-        let n_entries = words[4] as usize;
-        let mut pos = 5;
+        let dead_bytes = words[4];
+        let n_entries = words[5] as usize;
+        let mut pos = 6;
         let mut index = HashMap::with_capacity(n_entries);
         for _ in 0..n_entries {
             let Some(&key_len) = words.get(pos) else {
@@ -274,35 +455,42 @@ impl PersistentStore {
             let Some(key) = words.get(pos + 1..pos + 1 + key_len) else {
                 return false;
             };
-            let Some(&offset) = words.get(pos + 1 + key_len) else {
+            let (Some(&offset), Some(&len)) =
+                (words.get(pos + 1 + key_len), words.get(pos + 2 + key_len))
+            else {
                 return false;
             };
-            if offset >= bin_bytes.len() as u64 {
+            if offset >= bin_bytes.len() as u64 || offset + len > bin_bytes.len() as u64 {
                 return false;
             }
-            index.insert(key.to_vec(), offset);
-            pos += 2 + key_len;
+            index.insert(key.to_vec(), Rec { offset, len });
+            pos += 3 + key_len;
         }
         if pos != words.len() {
             return false;
         }
         self.index = index;
         self.bin_len = bin_bytes.len() as u64;
+        self.dead_bytes = dead_bytes;
         true
     }
 
     /// Full log scan: index every valid record, heal a corrupt/torn tail
-    /// by atomically rewriting the valid prefix.
+    /// by atomically rewriting the valid prefix. A later record for an
+    /// already-seen key wins (only possible after a crash between append
+    /// and index rewrite) and orphans the earlier copy into `dead_bytes`.
     fn scan_log(&mut self, bytes: &[u8]) {
         self.index.clear();
+        self.dead_bytes = 0;
         let mut pos = HEADER_WORDS * 8;
         let mut torn = false;
         while pos < bytes.len() {
             match decode_record(&bytes[pos..]) {
                 Some((consumed, key, _)) => {
-                    // Later records win (only possible after a crash
-                    // between append and index rewrite).
-                    self.index.insert(key, pos as u64);
+                    let rec = Rec { offset: pos as u64, len: consumed as u64 };
+                    if let Some(old) = self.index.insert(key, rec) {
+                        self.dead_bytes += old.len;
+                    }
                     pos += consumed;
                 }
                 None => {
@@ -322,6 +510,7 @@ impl PersistentStore {
             }
         }
         self.write_index();
+        self.maybe_compact();
     }
 
     /// Rewrite `schedules.idx` via temp-file + rename. Pure acceleration:
@@ -332,16 +521,18 @@ impl PersistentStore {
             FORMAT_VERSION,
             KEY_VERSION,
             self.bin_len,
+            self.dead_bytes,
             self.index.len() as u64,
         ];
         // Deterministic entry order (HashMap iteration is seeded per
         // process): sort by offset, i.e. log append order.
-        let mut entries: Vec<(&Vec<u64>, &u64)> = self.index.iter().collect();
-        entries.sort_by_key(|&(_, &off)| off);
-        for (key, &offset) in entries {
+        let mut entries: Vec<(&Vec<u64>, &Rec)> = self.index.iter().collect();
+        entries.sort_by_key(|&(_, r)| r.offset);
+        for (key, rec) in entries {
             words.push(key.len() as u64);
             words.extend_from_slice(key);
-            words.push(offset);
+            words.push(rec.offset);
+            words.push(rec.len);
         }
         let mut bytes = Vec::with_capacity(words.len() * 8);
         for w in words {
@@ -653,5 +844,98 @@ mod tests {
         assert_eq!(store.stats().bin_bytes, before, "duplicate key not re-appended");
         let hit = store.get(&key).unwrap();
         assert_eq!(placements(&hit.schedule), placements(&sample_solve(1).schedule));
+    }
+
+    /// Orphan a key's record by appending a fresher copy for the same key
+    /// directly to the log (what a crash between append and index rewrite
+    /// leaves behind) — the next open's scan applies later-wins and the
+    /// earlier copy becomes dead bytes.
+    fn orphan_duplicate(dir: &Path, key: &[u64], newer: &CachedSolve) {
+        let bin = dir.join("schedules.bin");
+        let mut bytes = fs::read(&bin).unwrap();
+        bytes.extend_from_slice(&encode_record(key, newer));
+        fs::write(&bin, &bytes).unwrap();
+        let _ = fs::remove_file(dir.join("schedules.idx"));
+    }
+
+    #[test]
+    fn scan_counts_superseded_records_as_dead_bytes() {
+        let dir = TempDir::new("acetone-persist").unwrap();
+        let key = vec![KEY_VERSION, 11];
+        {
+            let mut store = PersistentStore::open(dir.path());
+            store.insert(&key, &sample_solve(1));
+        }
+        orphan_duplicate(dir.path(), &key, &sample_solve(5));
+        let mut store = PersistentStore::open(dir.path());
+        assert_eq!(store.len(), 1);
+        let dead = store.stats().dead_bytes;
+        assert_eq!(dead, encode_record(&key, &sample_solve(1)).len() as u64);
+        // Later record wins.
+        let hit = store.get(&key).unwrap();
+        assert_eq!(placements(&hit.schedule), placements(&sample_solve(5).schedule));
+    }
+
+    #[test]
+    fn compaction_drops_dead_bytes_and_preserves_live_records() {
+        let dir = TempDir::new("acetone-persist").unwrap();
+        let (k1, k2) = (vec![KEY_VERSION, 21], vec![KEY_VERSION, 22]);
+        {
+            let mut store = PersistentStore::open(dir.path());
+            store.insert(&k1, &sample_solve(1));
+            store.insert(&k2, &sample_solve(2));
+        }
+        orphan_duplicate(dir.path(), &k1, &sample_solve(7));
+        let before = fs::metadata(dir.path().join("schedules.bin")).unwrap().len();
+        let mut store = PersistentStore::open(dir.path());
+        assert!(store.stats().dead_bytes > 0);
+        // Any dead byte is over this threshold: compacts immediately.
+        store.set_compact_threshold(1);
+        let stats = store.stats();
+        assert_eq!(stats.compactions, 1);
+        assert_eq!(stats.dead_bytes, 0);
+        assert!(stats.bin_bytes < before, "the file shrank");
+        assert_eq!(store.len(), 2, "every live schedule survived the GC cycle");
+        let h1 = store.get(&k1).expect("live after compaction");
+        assert_eq!(placements(&h1.schedule), placements(&sample_solve(7).schedule));
+        let h2 = store.get(&k2).expect("live after compaction");
+        assert_eq!(placements(&h2.schedule), placements(&sample_solve(2).schedule));
+        // The compacted store reopens cleanly (index fast path).
+        drop(store);
+        let mut reopened = PersistentStore::open(dir.path());
+        assert_eq!(reopened.len(), 2);
+        assert_eq!(reopened.stats().dead_bytes, 0);
+        assert!(reopened.get(&k1).is_some() && reopened.get(&k2).is_some());
+    }
+
+    #[test]
+    fn budget_evicts_oldest_first_and_shrinks_the_file() {
+        let dir = TempDir::new("acetone-persist").unwrap();
+        let mut store = PersistentStore::open(dir.path());
+        let keys: Vec<Vec<u64>> = (0..6).map(|i| vec![KEY_VERSION, 100 + i]).collect();
+        for (i, k) in keys.iter().enumerate() {
+            store.insert(k, &sample_solve(i as u64));
+        }
+        let full = store.stats().bin_bytes;
+        let record = encode_record(&keys[0], &sample_solve(0)).len() as u64;
+        // Budget for about half the records: the oldest go first.
+        let budget = (HEADER_WORDS * 8) as u64 + 3 * record;
+        store.set_budget(Some(budget));
+        let stats = store.stats();
+        assert!(stats.evicted >= 3, "oldest records evicted: {stats:?}");
+        assert!(stats.bin_bytes <= budget, "file bounded by the budget: {stats:?}");
+        assert!(stats.bin_bytes < full);
+        assert_eq!(stats.dead_bytes, 0, "eviction ends in a compaction");
+        assert!(stats.compactions >= 1);
+        // Newest entries live, oldest gone — deterministic offset order.
+        assert!(store.get(keys.last().unwrap()).is_some(), "newest survives");
+        assert!(store.get(&keys[0]).is_none(), "oldest evicted");
+        let live = (0..6).filter(|&i| store.get(&keys[i]).is_some()).count();
+        assert_eq!(live, store.len());
+        // Appends keep respecting the bound.
+        let extra = vec![KEY_VERSION, 200];
+        store.insert(&extra, &sample_solve(9));
+        assert!(store.stats().bin_bytes <= budget);
+        assert!(store.get(&extra).is_some(), "the newest insert is never evicted");
     }
 }

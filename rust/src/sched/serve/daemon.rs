@@ -1,0 +1,749 @@
+//! The serve daemon: a persistent JSONL request loop over one
+//! [`BatchSolver`], with admission control, deadline reaping and
+//! observable cache/search counters.
+//!
+//! `acetone serve --listen <socket|->` wraps this module; everything
+//! protocol-shaped lives here so the loop can be driven from tests and
+//! benches with in-memory readers and writers.
+//!
+//! # Protocol
+//!
+//! One JSON object per input line. Blank lines and `#` comments are
+//! skipped. A line is either a **solve request** (the batch `serve` keys,
+//! parsed by the caller-supplied closure, plus the daemon keys below) or
+//! a **control verb** `{"verb": ...}`:
+//!
+//! - `"id"` — optional string echoed in the response; defaults to
+//!   `line-<n>`. Reusing an id that was already admitted this session is
+//!   an error naming both line numbers.
+//! - `"cancelled": true` — the client was gone before dispatch: the
+//!   request is admitted with a pre-cancelled [`CancelToken`] and is
+//!   answered by the serial fallback (`"source": "cancelled"`).
+//! - `{"verb": "flush"}` — dispatch the queued window now.
+//! - `{"verb": "stats"}` — emit the daemon counters (cache tiers, queue,
+//!   aggregated search stats, per-stage walls). Does **not** flush, so
+//!   `queue.depth` reports the requests currently awaiting dispatch.
+//! - `{"verb": "shutdown"}` — flush, answer everything, end the session.
+//!   EOF is an implicit `shutdown` (graceful drain, never dropped work).
+//!
+//! **Admission** is bounded by [`DaemonConfig::max_inflight`]: a solve
+//! line past the bound is answered *immediately* with
+//! `{"rejected": true, "error": "queue full: ..."}` — explicit
+//! backpressure instead of unbounded buffering. Error and rejection
+//! responses are emitted at read time; solve responses are emitted at
+//! the next dispatch boundary, in admission order.
+//!
+//! # Determinism
+//!
+//! For a fixed input stream, every non-`stats` response line is
+//! **byte-identical for any worker count**: admission and rejection are
+//! pure functions of the line sequence (dispatch happens only at
+//! explicit boundaries), the solves inherit the batch determinism
+//! contract of [`BatchSolver::solve_batch`], and responses carry no
+//! wall-clock fields. `stats` responses isolate every volatile value in
+//! keys suffixed `_ns`, so a transcript diff only needs to mask those
+//! (`tests/daemon_determinism.rs` pins this at 1/2/8 workers).
+//!
+//! # Deadline reaping
+//!
+//! A request with a wall deadline gets its own [`CancelToken`], armed
+//! with a background **reaper** thread at dispatch time for
+//! `deadline + reaper_grace`. The solver's own wall-clock valve is the
+//! primary cut; the reaper is strictly a backstop that cancels the
+//! client's token if a solve overstays, so a wedged stage can never hang
+//! the session. Tokens are disarmed as soon as their window returns.
+
+use super::queue::{AdmissionQueue, QueueStats, RejectReason};
+use super::{BatchRequest, BatchSolver, ServeSource};
+use crate::graph::Dag;
+use crate::sched::portfolio::PortfolioConfig;
+use crate::sched::{Budget, CancelToken, Platform, SearchOptions, SearchStats, SolveRequest};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::io::{self, BufRead, Write};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// One parsed solve request, owned by the daemon: the problem plus the
+/// per-request budget and overlays. The parser closure handed to
+/// [`Daemon::run_session`] produces these from the non-daemon keys of a
+/// request line (the daemon itself only understands its protocol keys —
+/// `id`, `cancelled`, `verb` — so the request vocabulary stays with the
+/// caller).
+#[derive(Debug, Clone)]
+pub struct ProblemSpec {
+    pub g: Dag,
+    pub m: usize,
+    pub budget: Budget,
+    pub platform: Option<Platform>,
+    pub search: Option<SearchOptions>,
+}
+
+/// Daemon knobs, all orthogonal to the solver's [`PortfolioConfig`].
+#[derive(Debug, Clone)]
+pub struct DaemonConfig {
+    /// Admission bound: requests in flight before explicit rejection
+    /// (`--max-inflight`; clamped to at least 1).
+    pub max_inflight: usize,
+    /// Worker pool per dispatched window (0 = portfolio resolution).
+    pub workers: usize,
+    /// Slack added to a request's deadline before the reaper cancels its
+    /// token — the solver's own valve gets this long to cut first.
+    pub reaper_grace: Duration,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        Self { max_inflight: 64, workers: 0, reaper_grace: Duration::from_millis(250) }
+    }
+}
+
+/// Monotonic response accounting over the daemon's lifetime (sessions on
+/// a listening socket share it, like they share the schedule cache).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DaemonTotals {
+    /// Non-blank input lines processed.
+    pub lines: u64,
+    /// Response lines emitted (every kind).
+    pub responses: u64,
+    /// Requests answered by an actual search.
+    pub solved: u64,
+    /// Requests answered by the schedule cache.
+    pub cache_hits: u64,
+    /// Requests answered by replaying a window sibling's report.
+    pub deduped: u64,
+    /// Requests answered by the serial fallback (client gone).
+    pub cancelled: u64,
+    /// Malformed lines answered with an error response.
+    pub errors: u64,
+    /// Dispatch boundaries that solved a non-empty window.
+    pub flushes: u64,
+}
+
+/// What one [`Daemon::run_session`] call did, for the caller's log line.
+#[derive(Debug, Clone, Copy)]
+pub struct SessionSummary {
+    /// Daemon-lifetime totals as of the end of this session.
+    pub totals: DaemonTotals,
+    /// Admission queue counters as of the end of this session.
+    pub queue: QueueStats,
+    /// True when the session ended with a `shutdown` verb (false: EOF).
+    pub shutdown: bool,
+}
+
+/// An admitted request waiting for the next dispatch boundary.
+#[derive(Debug)]
+struct Admitted {
+    id: String,
+    spec: ProblemSpec,
+    /// Present when the request has a deadline (reaper arming) or came
+    /// in pre-cancelled.
+    cancel: Option<CancelToken>,
+}
+
+/// The deadline reaper: a thread sleeping until the nearest armed
+/// deadline, cancelling overdue tokens. Joined on drop.
+struct Reaper {
+    shared: Arc<(Mutex<ReaperState>, Condvar)>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+struct ReaperState {
+    arms: Vec<(CancelToken, Instant)>,
+    shutdown: bool,
+}
+
+impl Reaper {
+    fn spawn() -> Self {
+        let shared = Arc::new((
+            Mutex::new(ReaperState { arms: Vec::new(), shutdown: false }),
+            Condvar::new(),
+        ));
+        let in_thread = Arc::clone(&shared);
+        let handle = thread::spawn(move || {
+            let (lock, cv) = &*in_thread;
+            let mut st = lock.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                let now = Instant::now();
+                st.arms.retain(|(token, due)| {
+                    if *due <= now {
+                        token.cancel();
+                        false
+                    } else {
+                        true
+                    }
+                });
+                match st.arms.iter().map(|&(_, due)| due).min() {
+                    Some(due) => {
+                        let wait = due.saturating_duration_since(now);
+                        st = cv.wait_timeout(st, wait).unwrap().0;
+                    }
+                    None => st = cv.wait(st).unwrap(),
+                }
+            }
+        });
+        Self { shared, handle: Some(handle) }
+    }
+
+    fn arm(&self, token: CancelToken, due: Instant) {
+        let (lock, cv) = &*self.shared;
+        lock.lock().unwrap().arms.push((token, due));
+        cv.notify_one();
+    }
+
+    fn disarm_all(&self) {
+        let (lock, cv) = &*self.shared;
+        lock.lock().unwrap().arms.clear();
+        cv.notify_one();
+    }
+}
+
+impl Drop for Reaper {
+    fn drop(&mut self) {
+        let (lock, cv) = &*self.shared;
+        lock.lock().unwrap().shutdown = true;
+        cv.notify_one();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The persistent solver daemon. Construct once; run any number of
+/// sessions over it — the schedule cache, the admission counters and the
+/// aggregated search stats all persist across sessions.
+pub struct Daemon {
+    solver: BatchSolver,
+    cfg: DaemonConfig,
+    queue: AdmissionQueue<Admitted>,
+    reaper: Reaper,
+    totals: DaemonTotals,
+    /// Search counters absorbed from every `Solved` response (dedup and
+    /// cache answers replay stats verbatim — absorbing those too would
+    /// double-count, the `serve` module-docs hazard).
+    agg: SearchStats,
+    /// Cumulative wall time of all dispatched windows.
+    wall: Duration,
+}
+
+impl Daemon {
+    /// A daemon over a fresh [`BatchSolver`] (set
+    /// [`PortfolioConfig::cache_dir`] / `cache_budget` there for a
+    /// persistent L2 with a size bound).
+    pub fn new(solver_cfg: PortfolioConfig, cfg: DaemonConfig) -> Self {
+        Self::with_solver(BatchSolver::new(solver_cfg), cfg)
+    }
+
+    /// Wrap an existing solver (sharing its warm caches).
+    pub fn with_solver(solver: BatchSolver, cfg: DaemonConfig) -> Self {
+        let queue = AdmissionQueue::new(cfg.max_inflight);
+        Self {
+            solver,
+            cfg,
+            queue,
+            reaper: Reaper::spawn(),
+            totals: DaemonTotals::default(),
+            agg: SearchStats::default(),
+            wall: Duration::ZERO,
+        }
+    }
+
+    pub fn solver(&self) -> &BatchSolver {
+        &self.solver
+    }
+
+    pub fn totals(&self) -> DaemonTotals {
+        self.totals
+    }
+
+    pub fn queue_stats(&self) -> QueueStats {
+        self.queue.stats()
+    }
+
+    /// Serve one session: read `input` to `shutdown`/EOF, answer on
+    /// `output`. `parse` turns one request line (minus the daemon's own
+    /// keys) into a [`ProblemSpec`]; its `Err` string becomes an error
+    /// response for that line, and the session continues. Request ids
+    /// must be unique within a session (each connection is a fresh id
+    /// namespace; the queue may still carry admissions from a previous
+    /// session that ended at EOF with nothing queued — EOF always
+    /// drains).
+    pub fn run_session<R, W, P>(
+        &mut self,
+        input: R,
+        mut output: W,
+        mut parse: P,
+    ) -> io::Result<SessionSummary>
+    where
+        R: BufRead,
+        W: Write,
+        P: FnMut(&Json, usize) -> Result<ProblemSpec, String>,
+    {
+        let mut seen_ids: HashMap<String, usize> = HashMap::new();
+        let mut shutdown = false;
+        for (idx, line) in input.lines().enumerate() {
+            let line = line?;
+            let lineno = idx + 1;
+            let trimmed = line.trim();
+            if trimmed.is_empty() || trimmed.starts_with('#') {
+                continue;
+            }
+            self.totals.lines += 1;
+            let v = match Json::parse(trimmed) {
+                Ok(v) => v,
+                Err(e) => {
+                    self.respond_error(&mut output, None, lineno, &format!("bad JSON: {e}"))?;
+                    continue;
+                }
+            };
+            if let Some(verb) = v.get("verb") {
+                match verb.as_str() {
+                    Some("stats") => self.emit_stats(&mut output)?,
+                    Some("flush") => self.flush_window(&mut output)?,
+                    Some("shutdown") => {
+                        self.flush_window(&mut output)?;
+                        shutdown = true;
+                    }
+                    other => {
+                        let msg = format!(
+                            "unknown verb {:?} (expected \"stats\", \"flush\" or \"shutdown\")",
+                            other.unwrap_or("<non-string>"),
+                        );
+                        self.respond_error(&mut output, None, lineno, &msg)?;
+                    }
+                }
+                if shutdown {
+                    break;
+                }
+                continue;
+            }
+            let id = match v.get("id") {
+                None => format!("line-{lineno}"),
+                Some(Json::Str(s)) => s.clone(),
+                Some(_) => {
+                    self.respond_error(&mut output, None, lineno, "\"id\" must be a string")?;
+                    continue;
+                }
+            };
+            if let Some(&first) = seen_ids.get(&id) {
+                let msg = format!("duplicate id {id:?}: already admitted on line {first}");
+                self.respond_error(&mut output, Some(&id), lineno, &msg)?;
+                continue;
+            }
+            let pre_cancelled = match v.get("cancelled") {
+                None => false,
+                Some(Json::Bool(b)) => *b,
+                Some(_) => {
+                    let msg = "\"cancelled\" must be a boolean";
+                    self.respond_error(&mut output, Some(&id), lineno, msg)?;
+                    continue;
+                }
+            };
+            let spec = match parse(&v, lineno) {
+                Ok(spec) => spec,
+                Err(e) => {
+                    self.respond_error(&mut output, Some(&id), lineno, &e)?;
+                    continue;
+                }
+            };
+            let cancel = if pre_cancelled || spec.budget.deadline.is_some() {
+                let token = CancelToken::new();
+                if pre_cancelled {
+                    token.cancel();
+                }
+                Some(token)
+            } else {
+                None
+            };
+            match self.queue.admit(Admitted { id: id.clone(), spec, cancel }) {
+                Ok(()) => {
+                    seen_ids.insert(id, lineno);
+                }
+                // A rejected id was never admitted: the client may
+                // resubmit it after the window drains.
+                Err(reason) => self.respond_rejection(&mut output, &id, lineno, &reason)?,
+            }
+        }
+        if !shutdown {
+            // EOF is a graceful drain: admitted work is always answered.
+            self.flush_window(&mut output)?;
+        }
+        Ok(SessionSummary { totals: self.totals, queue: self.queue.stats(), shutdown })
+    }
+
+    /// Dispatch the queued window through the batch solver and emit one
+    /// response per request, in admission order.
+    fn flush_window<W: Write>(&mut self, output: &mut W) -> io::Result<()> {
+        let window = self.queue.drain();
+        if window.is_empty() {
+            return Ok(());
+        }
+        self.totals.flushes += 1;
+        let now = Instant::now();
+        for a in &window {
+            if let (Some(token), Some(d)) = (&a.cancel, a.spec.budget.deadline) {
+                // Overflow-proof: an absurd deadline simply isn't armed
+                // (the solver's own valve never fires either).
+                if let Some(due) =
+                    d.checked_add(self.cfg.reaper_grace).and_then(|t| now.checked_add(t))
+                {
+                    self.reaper.arm(token.clone(), due);
+                }
+            }
+        }
+        let requests: Vec<SolveRequest<'_>> = window
+            .iter()
+            .map(|a| {
+                let mut r = SolveRequest::new(&a.spec.g, a.spec.m).budget(a.spec.budget.clone());
+                if let Some(token) = &a.cancel {
+                    r = r.cancel(token.clone());
+                }
+                if let Some(p) = &a.spec.platform {
+                    r = r.platform(p.clone());
+                }
+                if let Some(s) = &a.spec.search {
+                    r = r.search(s.clone());
+                }
+                r
+            })
+            .collect();
+        let batch = BatchRequest { requests, workers: self.cfg.workers };
+        let outcome = self.solver.solve_batch(&batch);
+        drop(batch);
+        self.reaper.disarm_all();
+        self.wall += outcome.stats.wall;
+        for (a, served) in window.iter().zip(&outcome.reports) {
+            match served.source {
+                ServeSource::Solved => {
+                    self.totals.solved += 1;
+                    self.agg.absorb(&served.report.stats);
+                    self.agg.absorb_stages(&served.report.stats.stages);
+                }
+                ServeSource::CacheHit => self.totals.cache_hits += 1,
+                ServeSource::Deduped => self.totals.deduped += 1,
+                ServeSource::Cancelled => self.totals.cancelled += 1,
+            }
+            let resp = Json::obj(vec![
+                ("explored", Json::Num(served.report.stats.explored as f64)),
+                ("id", Json::Str(a.id.clone())),
+                ("makespan", Json::Num(served.report.schedule.makespan() as f64)),
+                ("source", Json::Str(served.source.as_str().to_string())),
+                ("verdict", Json::Str(served.report.termination.as_str().to_string())),
+            ]);
+            self.emit(output, resp)?;
+        }
+        Ok(())
+    }
+
+    /// The `stats` response: every daemon counter, volatile wall values
+    /// isolated under `_ns`-suffixed keys (the masking contract).
+    fn emit_stats<W: Write>(&mut self, output: &mut W) -> io::Result<()> {
+        fn n(x: u64) -> Json {
+            Json::Num(x as f64)
+        }
+        fn nu(x: usize) -> Json {
+            Json::Num(x as f64)
+        }
+        let c = self.solver.portfolio().cache_stats();
+        let q = self.queue.stats();
+        let cache = Json::obj(vec![
+            ("bin_bytes", n(c.bin_bytes)),
+            ("compactions", n(c.compactions)),
+            ("dead_bytes", n(c.dead_bytes)),
+            ("evictions", n(c.evictions)),
+            ("hint_hits", n(c.hint_hits)),
+            ("hits", n(c.hits)),
+            ("io_errors", n(c.io_errors)),
+            ("l2_evicted", n(c.l2_evicted)),
+            ("l2_hits", n(c.l2_hits)),
+            ("len", nu(c.len)),
+            ("misses", n(c.misses)),
+            ("persisted", nu(c.persisted)),
+            ("skipped", n(c.skipped)),
+        ]);
+        let queue = Json::obj(vec![
+            ("admitted", n(q.admitted)),
+            ("capacity", nu(self.queue.capacity())),
+            ("depth", nu(q.depth)),
+            ("peak_depth", nu(q.peak_depth)),
+            ("rejected", n(q.rejected)),
+        ]);
+        let search = Json::obj(vec![
+            ("explored", n(self.agg.explored)),
+            ("leaves", n(self.agg.leaves)),
+            ("max_depth", n(self.agg.max_depth)),
+            ("memo_flushes", n(self.agg.memo_flushes)),
+            ("memo_hits", n(self.agg.memo_hits)),
+            ("memo_peak", nu(self.agg.memo_peak)),
+            ("nogood_flushes", n(self.agg.nogood_flushes)),
+            ("nogood_hits", n(self.agg.nogood_hits)),
+            ("nogoods_recorded", n(self.agg.nogoods_recorded)),
+            ("pruned", n(self.agg.pruned)),
+            ("restarts", n(self.agg.restarts)),
+            ("wall_cut", Json::Bool(self.agg.wall_cut)),
+        ]);
+        let mut stage_items = Vec::new();
+        for s in &self.agg.stages {
+            stage_items.push(Json::obj(vec![
+                ("explored", n(s.explored)),
+                ("name", Json::Str(s.name.to_string())),
+                ("wall_ns", Json::Num(s.wall.as_nanos() as f64)),
+            ]));
+        }
+        let stages = Json::Arr(stage_items);
+        let totals = Json::obj(vec![
+            ("cache_hits", n(self.totals.cache_hits)),
+            ("cancelled", n(self.totals.cancelled)),
+            ("deduped", n(self.totals.deduped)),
+            ("errors", n(self.totals.errors)),
+            ("flushes", n(self.totals.flushes)),
+            ("lines", n(self.totals.lines)),
+            ("responses", n(self.totals.responses)),
+            ("solved", n(self.totals.solved)),
+            ("wall_ns", Json::Num(self.wall.as_nanos() as f64)),
+        ]);
+        self.emit(
+            output,
+            Json::obj(vec![
+                ("cache", cache),
+                ("queue", queue),
+                ("search", search),
+                ("stages", stages),
+                ("totals", totals),
+                ("verb", Json::Str("stats".to_string())),
+            ]),
+        )
+    }
+
+    fn respond_error<W: Write>(
+        &mut self,
+        output: &mut W,
+        id: Option<&str>,
+        lineno: usize,
+        msg: &str,
+    ) -> io::Result<()> {
+        self.totals.errors += 1;
+        let mut pairs = vec![
+            ("error", Json::Str(msg.to_string())),
+            ("line", Json::Num(lineno as f64)),
+        ];
+        if let Some(id) = id {
+            pairs.push(("id", Json::Str(id.to_string())));
+        }
+        self.emit(output, Json::obj(pairs))
+    }
+
+    fn respond_rejection<W: Write>(
+        &mut self,
+        output: &mut W,
+        id: &str,
+        lineno: usize,
+        reason: &RejectReason,
+    ) -> io::Result<()> {
+        let pairs = vec![
+            ("error", Json::Str(reason.as_message())),
+            ("id", Json::Str(id.to_string())),
+            ("line", Json::Num(lineno as f64)),
+            ("rejected", Json::Bool(true)),
+        ];
+        self.emit(output, Json::obj(pairs))
+    }
+
+    /// Write one response line and flush (clients on a socket block on
+    /// the response, so buffering across lines would deadlock them).
+    fn emit<W: Write>(&mut self, output: &mut W, v: Json) -> io::Result<()> {
+        self.totals.responses += 1;
+        writeln!(output, "{}", v.to_string())?;
+        output.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::daggen::{generate, DagGenConfig};
+    use std::io::Cursor;
+
+    fn quick_daemon(max_inflight: usize) -> Daemon {
+        Daemon::new(
+            PortfolioConfig {
+                root_target: 6,
+                hybrid_node_limit: Some(200),
+                ..PortfolioConfig::default()
+            },
+            DaemonConfig { max_inflight, ..DaemonConfig::default() },
+        )
+    }
+
+    /// Test request vocabulary: `{"seed": N, "nodes": N, "cores": N}`.
+    fn parse_line(v: &Json, lineno: usize) -> Result<ProblemSpec, String> {
+        let seed = v
+            .get("seed")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| format!("line {lineno}: missing \"seed\""))? as u64;
+        let nodes = v.get("nodes").and_then(Json::as_usize).unwrap_or(12);
+        let m = v.get("cores").and_then(Json::as_usize).unwrap_or(2);
+        Ok(ProblemSpec {
+            g: generate(&DagGenConfig::paper(nodes), seed),
+            m,
+            budget: Budget { deadline: None, node_limit: Some(300) },
+            platform: None,
+            search: None,
+        })
+    }
+
+    fn run(daemon: &mut Daemon, input: &str) -> (Vec<Json>, SessionSummary) {
+        let mut out = Vec::new();
+        let summary =
+            daemon.run_session(Cursor::new(input.to_string()), &mut out, parse_line).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+        (lines, summary)
+    }
+
+    fn field<'j>(v: &'j Json, key: &str) -> &'j Json {
+        v.get(key).unwrap_or_else(|| panic!("missing {key:?} in {}", v.to_string()))
+    }
+
+    #[test]
+    fn answers_in_admission_order_and_dedups_within_a_window() {
+        let mut daemon = quick_daemon(8);
+        let input = "\
+{\"id\":\"a\",\"seed\":1}\n\
+{\"id\":\"b\",\"seed\":2}\n\
+{\"id\":\"c\",\"seed\":1}\n\
+{\"verb\":\"shutdown\"}\n";
+        let (lines, summary) = run(&mut daemon, input);
+        assert_eq!(lines.len(), 3);
+        let ids: Vec<_> = lines.iter().map(|l| field(l, "id").as_str().unwrap()).collect();
+        assert_eq!(ids, ["a", "b", "c"]);
+        assert_eq!(field(&lines[0], "source").as_str(), Some("solved"));
+        assert_eq!(field(&lines[2], "source").as_str(), Some("deduped"));
+        assert_eq!(field(&lines[2], "makespan"), field(&lines[0], "makespan"));
+        assert!(summary.shutdown);
+        assert_eq!(summary.totals.solved, 2);
+        assert_eq!(summary.totals.deduped, 1);
+        assert_eq!(summary.totals.flushes, 1);
+    }
+
+    #[test]
+    fn duplicate_id_is_rejected_naming_the_first_line() {
+        let mut daemon = quick_daemon(8);
+        let input = "{\"id\":\"a\",\"seed\":1}\n{\"id\":\"a\",\"seed\":2}\n";
+        let (lines, summary) = run(&mut daemon, input);
+        // The error is emitted at read time, before the EOF flush.
+        assert_eq!(lines.len(), 2);
+        let err = field(&lines[0], "error").as_str().unwrap().to_string();
+        assert!(err.contains("duplicate id"), "got {err:?}");
+        assert!(err.contains("line 1"), "got {err:?}");
+        assert_eq!(field(&lines[0], "line").as_f64(), Some(2.0));
+        assert_eq!(field(&lines[1], "id").as_str(), Some("a"));
+        assert_eq!(field(&lines[1], "source").as_str(), Some("solved"));
+        assert!(!summary.shutdown, "EOF, not a shutdown verb");
+        assert_eq!(summary.totals.errors, 1);
+    }
+
+    #[test]
+    fn overflow_is_rejected_explicitly_never_buffered() {
+        let mut daemon = quick_daemon(2);
+        let input = "\
+{\"id\":\"a\",\"seed\":1}\n\
+{\"id\":\"b\",\"seed\":2}\n\
+{\"id\":\"c\",\"seed\":3}\n\
+{\"id\":\"d\",\"seed\":4}\n\
+{\"verb\":\"shutdown\"}\n";
+        let (lines, summary) = run(&mut daemon, input);
+        // Two immediate rejections, then the two admitted answers.
+        assert_eq!(lines.len(), 4);
+        for (l, id) in lines[..2].iter().zip(["c", "d"]) {
+            assert_eq!(field(l, "rejected"), &Json::Bool(true));
+            assert_eq!(field(l, "id").as_str(), Some(id));
+            assert!(field(l, "error").as_str().unwrap().contains("queue full"));
+        }
+        assert_eq!(field(&lines[2], "id").as_str(), Some("a"));
+        assert_eq!(field(&lines[3], "id").as_str(), Some("b"));
+        assert_eq!(summary.queue.rejected, 2);
+        assert_eq!(summary.totals.errors, 0, "a rejection is backpressure, not an error");
+        // A rejected id was never admitted: it may be resubmitted.
+        let (lines, _) = run(&mut daemon, "{\"id\":\"c\",\"seed\":3}\n");
+        assert_eq!(field(&lines[0], "id").as_str(), Some("c"));
+        assert_eq!(field(&lines[0], "source").as_str(), Some("solved"));
+    }
+
+    #[test]
+    fn pre_cancelled_client_gets_the_fallback_answer() {
+        let mut daemon = quick_daemon(8);
+        let input = "\
+{\"id\":\"x\",\"seed\":1,\"cancelled\":true}\n\
+{\"id\":\"y\",\"seed\":2}\n\
+{\"verb\":\"shutdown\"}\n";
+        let (lines, summary) = run(&mut daemon, input);
+        assert_eq!(lines.len(), 2);
+        assert_eq!(field(&lines[0], "source").as_str(), Some("cancelled"));
+        assert_eq!(field(&lines[0], "verdict").as_str(), Some("cancelled"));
+        assert_eq!(field(&lines[1], "source").as_str(), Some("solved"));
+        assert_eq!(summary.totals.cancelled, 1);
+    }
+
+    #[test]
+    fn stats_reports_queue_depth_without_flushing() {
+        let mut daemon = quick_daemon(8);
+        let input = "\
+{\"id\":\"a\",\"seed\":1}\n\
+{\"verb\":\"stats\"}\n\
+{\"verb\":\"shutdown\"}\n";
+        let (lines, summary) = run(&mut daemon, input);
+        assert_eq!(lines.len(), 2);
+        let stats = &lines[0];
+        assert_eq!(field(stats, "verb").as_str(), Some("stats"));
+        let queue = field(stats, "queue");
+        assert_eq!(field(queue, "depth").as_f64(), Some(1.0), "stats does not flush");
+        assert_eq!(field(queue, "admitted").as_f64(), Some(1.0));
+        assert_eq!(field(&lines[1], "id").as_str(), Some("a"));
+        assert_eq!(summary.totals.solved, 1);
+    }
+
+    #[test]
+    fn flush_verb_dispatches_and_second_window_hits_the_cache() {
+        let mut daemon = quick_daemon(8);
+        let input = "\
+{\"id\":\"a\",\"seed\":1}\n\
+{\"verb\":\"flush\"}\n\
+{\"id\":\"b\",\"seed\":1}\n\
+{\"verb\":\"shutdown\"}\n";
+        let (lines, summary) = run(&mut daemon, input);
+        assert_eq!(lines.len(), 2);
+        assert_eq!(field(&lines[0], "source").as_str(), Some("solved"));
+        assert_eq!(
+            field(&lines[1], "source").as_str(),
+            Some("cache-hit"),
+            "the daemon-held solver keeps its cache warm across windows"
+        );
+        assert_eq!(field(&lines[1], "makespan"), field(&lines[0], "makespan"));
+        assert_eq!(summary.totals.flushes, 2);
+        assert_eq!(summary.totals.cache_hits, 1);
+    }
+
+    #[test]
+    fn malformed_lines_get_error_responses_and_the_session_continues() {
+        let mut daemon = quick_daemon(8);
+        let input = "\
+not json\n\
+{\"verb\":\"frobnicate\"}\n\
+{\"id\":7,\"seed\":1}\n\
+{\"id\":\"ok\",\"seed\":1}\n\
+{\"verb\":\"shutdown\"}\n";
+        let (lines, summary) = run(&mut daemon, input);
+        assert_eq!(lines.len(), 4);
+        assert!(field(&lines[0], "error").as_str().unwrap().contains("bad JSON"));
+        assert!(field(&lines[1], "error").as_str().unwrap().contains("unknown verb"));
+        assert!(field(&lines[2], "error").as_str().unwrap().contains("must be a string"));
+        assert_eq!(field(&lines[3], "id").as_str(), Some("ok"));
+        assert_eq!(field(&lines[3], "source").as_str(), Some("solved"));
+        assert_eq!(summary.totals.errors, 3);
+    }
+}

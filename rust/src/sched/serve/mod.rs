@@ -50,6 +50,16 @@
 //! persistent cache composes with this: a batch served from a reused
 //! cache directory replays the same schedules and verdicts byte-for-byte
 //! ([`ServeSource::CacheHit`]).
+//!
+//! The long-running front-end over this module — a persistent JSONL
+//! request loop with admission control ([`queue`]), deadline reaping and
+//! observable counters — lives in [`daemon`] (`acetone serve --listen`).
+
+pub mod daemon;
+pub mod queue;
+
+pub use daemon::{Daemon, DaemonConfig, DaemonTotals, ProblemSpec, SessionSummary};
+pub use queue::{AdmissionQueue, QueueStats, RejectReason};
 
 use super::api::cancelled_fallback;
 use super::portfolio::{

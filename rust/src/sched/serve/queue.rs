@@ -1,0 +1,157 @@
+//! Bounded in-flight admission queue of the serve daemon.
+//!
+//! The daemon ([`super::daemon`]) reads requests faster than the solver
+//! can answer them; this queue is the explicit backpressure point
+//! between the two. Its capacity is the daemon's `--max-inflight`: a
+//! request either *admits* (it will be answered at the next dispatch
+//! boundary) or is *rejected with a reason* — the queue never buffers
+//! beyond its bound, so a client flooding the socket gets told to back
+//! off instead of silently growing the process heap.
+//!
+//! Deterministic by construction: admission is a pure function of the
+//! sequence of `admit`/`drain` calls (no clocks, no thread state), which
+//! is what lets the daemon promise byte-identical response streams for
+//! a fixed request stream at any worker count.
+
+use std::collections::VecDeque;
+
+/// Why a request was not admitted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The queue already holds `capacity` in-flight requests. The client
+    /// must wait for a dispatch boundary (`flush`/`shutdown`/EOF in the
+    /// daemon protocol) before submitting more.
+    QueueFull { capacity: usize },
+}
+
+impl RejectReason {
+    /// Human-readable reason echoed in the daemon's rejection response.
+    pub fn as_message(&self) -> String {
+        match self {
+            RejectReason::QueueFull { capacity } => format!(
+                "queue full: {capacity} requests in flight (--max-inflight {capacity}); \
+                 flush or await responses before submitting more"
+            ),
+        }
+    }
+}
+
+/// Monotonic admission counters plus the current depth — the queue's
+/// slice of the daemon's `stats` response.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueueStats {
+    /// Requests currently admitted and not yet drained.
+    pub depth: usize,
+    /// High-water mark of `depth` over the queue's lifetime.
+    pub peak_depth: usize,
+    /// Requests admitted over the queue's lifetime.
+    pub admitted: u64,
+    /// Requests rejected at the admission bound.
+    pub rejected: u64,
+}
+
+/// A FIFO queue with a hard capacity and explicit admission accounting.
+/// Single-owner (the daemon's session loop holds it); thread safety is
+/// the caller's concern, determinism is this type's.
+#[derive(Debug)]
+pub struct AdmissionQueue<T> {
+    entries: VecDeque<T>,
+    capacity: usize,
+    peak_depth: usize,
+    admitted: u64,
+    rejected: u64,
+}
+
+impl<T> AdmissionQueue<T> {
+    /// A queue admitting at most `capacity` in-flight requests
+    /// (`capacity` is clamped to at least 1 — a zero-capacity queue
+    /// would reject every request unconditionally).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            entries: VecDeque::new(),
+            capacity: capacity.max(1),
+            peak_depth: 0,
+            admitted: 0,
+            rejected: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn depth(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Admit one request, or reject it with the reason the daemon echoes
+    /// back to the client. Never blocks, never buffers past the bound.
+    pub fn admit(&mut self, item: T) -> Result<(), RejectReason> {
+        if self.entries.len() >= self.capacity {
+            self.rejected += 1;
+            return Err(RejectReason::QueueFull { capacity: self.capacity });
+        }
+        self.entries.push_back(item);
+        self.admitted += 1;
+        self.peak_depth = self.peak_depth.max(self.entries.len());
+        Ok(())
+    }
+
+    /// Take the whole in-flight window, in admission order, leaving the
+    /// queue empty (the daemon's dispatch boundary).
+    pub fn drain(&mut self) -> Vec<T> {
+        self.entries.drain(..).collect()
+    }
+
+    pub fn stats(&self) -> QueueStats {
+        QueueStats {
+            depth: self.entries.len(),
+            peak_depth: self.peak_depth,
+            admitted: self.admitted,
+            rejected: self.rejected,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_up_to_capacity_then_rejects_with_reason() {
+        let mut q = AdmissionQueue::new(2);
+        assert!(q.admit("a").is_ok());
+        assert!(q.admit("b").is_ok());
+        let err = q.admit("c").expect_err("over capacity");
+        assert_eq!(err, RejectReason::QueueFull { capacity: 2 });
+        assert!(err.as_message().contains("--max-inflight 2"));
+        let s = q.stats();
+        assert_eq!((s.depth, s.peak_depth, s.admitted, s.rejected), (2, 2, 2, 1));
+    }
+
+    #[test]
+    fn drain_returns_admission_order_and_resets_depth() {
+        let mut q = AdmissionQueue::new(3);
+        for x in ["x", "y", "z"] {
+            q.admit(x).unwrap();
+        }
+        assert_eq!(q.drain(), vec!["x", "y", "z"]);
+        assert!(q.is_empty());
+        // Capacity is available again; the counters stay monotonic.
+        assert!(q.admit("w").is_ok());
+        let s = q.stats();
+        assert_eq!((s.depth, s.peak_depth, s.admitted, s.rejected), (1, 3, 4, 0));
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped_to_one() {
+        let mut q = AdmissionQueue::new(0);
+        assert_eq!(q.capacity(), 1);
+        assert!(q.admit(1).is_ok());
+        assert!(q.admit(2).is_err());
+    }
+}

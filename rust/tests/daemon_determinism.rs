@@ -1,0 +1,276 @@
+//! The serve daemon's determinism and L2-lifecycle contracts, pinned
+//! end to end:
+//!
+//! - A golden JSONL session (mixed solves, within-window duplicates, a
+//!   duplicate id, a pre-cancelled client, an admission overflow,
+//!   `stats`, `flush`, `shutdown`) produces **byte-identical** response
+//!   streams at 1, 2 and 8 workers. Volatile values live only in
+//!   `_ns`-suffixed keys of the `stats` response, so the comparison
+//!   masks exactly those and nothing else.
+//! - The persistent schedule store survives log corruption and index
+//!   orphaning: a reopen scan keeps every live record, heals the torn
+//!   tail, and a budget-driven GC evicts oldest-first while compaction
+//!   shrinks the file under the bound.
+
+use acetone::daggen::{generate, DagGenConfig};
+use acetone::graph::Dag;
+use acetone::sched::portfolio::{CachedSolve, PersistentStore, PortfolioConfig};
+use acetone::sched::serve::{Daemon, DaemonConfig, ProblemSpec};
+use acetone::sched::{Budget, Schedule, Termination};
+use acetone::util::json::Json;
+use acetone::util::tempdir::TempDir;
+use std::io::Cursor;
+
+fn cfg() -> PortfolioConfig {
+    PortfolioConfig {
+        root_target: 6,
+        hybrid_node_limit: Some(200),
+        ..PortfolioConfig::default()
+    }
+}
+
+fn daemon_with(workers: usize, max_inflight: usize) -> Daemon {
+    Daemon::new(cfg(), DaemonConfig { workers, max_inflight, ..DaemonConfig::default() })
+}
+
+/// Test request vocabulary: `{"seed": N, "nodes": N, "cores": N}`.
+fn parse_line(v: &Json, lineno: usize) -> Result<ProblemSpec, String> {
+    let seed = v
+        .get("seed")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| format!("line {lineno}: missing \"seed\""))? as u64;
+    let nodes = v.get("nodes").and_then(Json::as_usize).unwrap_or(16);
+    let m = v.get("cores").and_then(Json::as_usize).unwrap_or(2);
+    Ok(ProblemSpec {
+        g: generate(&DagGenConfig::paper(nodes), seed),
+        m,
+        budget: Budget { deadline: None, node_limit: Some(300) },
+        platform: None,
+        search: None,
+    })
+}
+
+/// Run one session against a fresh daemon, returning the raw transcript.
+fn run_session(workers: usize, max_inflight: usize, input: &str) -> String {
+    let mut daemon = daemon_with(workers, max_inflight);
+    let mut out = Vec::new();
+    daemon.run_session(Cursor::new(input.to_string()), &mut out, parse_line).unwrap();
+    String::from_utf8(out).unwrap()
+}
+
+/// Replace the digit run after every `_ns":` with `#`. Those are the
+/// only volatile bytes the protocol permits; everything else must match
+/// exactly.
+fn mask_ns(s: &str) -> String {
+    let marker = "_ns\":";
+    let mut out = String::with_capacity(s.len());
+    let mut rest = s;
+    while let Some(at) = rest.find(marker) {
+        let cut = at + marker.len();
+        out.push_str(&rest[..cut]);
+        rest = &rest[cut..];
+        let run = rest.bytes().take_while(|b| b.is_ascii_digit() || *b == b'.').count();
+        out.push('#');
+        rest = &rest[run..];
+    }
+    out.push_str(rest);
+    out
+}
+
+fn field<'j>(v: &'j Json, key: &str) -> &'j Json {
+    v.get(key).unwrap_or_else(|| panic!("missing {key:?} in {}", v.to_string()))
+}
+
+/// Every protocol shape in one transcript: two distinct solves, a
+/// duplicate id, a pre-cancelled client, a within-window duplicate
+/// problem, an admission overflow at `--max-inflight 4`, a cross-window
+/// cache hit, a `stats` probe and a `shutdown`.
+const GOLDEN_SESSION: &str = "\
+# golden session: every response kind, fixed line numbers
+{\"id\":\"a\",\"seed\":1}
+{\"id\":\"b\",\"seed\":2,\"cores\":3}
+{\"id\":\"a\",\"seed\":3}
+
+{\"id\":\"gone\",\"seed\":1,\"cancelled\":true}
+{\"id\":\"twin\",\"seed\":1}
+{\"id\":\"spill\",\"seed\":4}
+{\"verb\":\"flush\"}
+{\"id\":\"replay\",\"seed\":1}
+{\"verb\":\"stats\"}
+{\"verb\":\"shutdown\"}
+";
+
+#[test]
+fn golden_session_replays_byte_identical_at_1_2_8_workers() {
+    let base = run_session(1, 4, GOLDEN_SESSION);
+    for workers in [2, 8] {
+        let other = run_session(workers, 4, GOLDEN_SESSION);
+        assert_eq!(
+            mask_ns(&base),
+            mask_ns(&other),
+            "masked transcript diverged at {workers} workers"
+        );
+        // Outside the stats line not even the mask is needed.
+        let solid = |s: &str| {
+            s.lines().filter(|l| !l.contains("\"verb\":\"stats\"")).collect::<Vec<_>>().join("\n")
+        };
+        assert_eq!(solid(&base), solid(&other), "non-stats bytes diverged at {workers} workers");
+    }
+}
+
+#[test]
+fn golden_session_covers_every_response_kind_in_order() {
+    let text = run_session(2, 4, GOLDEN_SESSION);
+    let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert_eq!(lines.len(), 8, "transcript was:\n{text}");
+
+    // Read-time responses come first: the duplicate id (input line 4 in
+    // the comment-counting protocol numbering), then the overflow.
+    let err = field(&lines[0], "error").as_str().unwrap().to_string();
+    assert!(err.contains("duplicate id \"a\""), "got {err:?}");
+    assert!(err.contains("line 2"), "names the first admission: {err:?}");
+    let reject = &lines[1];
+    assert_eq!(field(reject, "id").as_str(), Some("spill"));
+    assert_eq!(field(reject, "rejected"), &Json::Bool(true));
+    assert!(field(reject, "error").as_str().unwrap().contains("queue full"));
+
+    // The flushed window, in admission order, each with its provenance.
+    let want = [
+        ("a", "solved"),
+        ("b", "solved"),
+        ("gone", "cancelled"),
+        ("twin", "deduped"),
+    ];
+    for (line, (id, source)) in lines[2..6].iter().zip(want) {
+        assert_eq!(field(line, "id").as_str(), Some(id));
+        assert_eq!(field(line, "source").as_str(), Some(source));
+    }
+    assert_eq!(field(&lines[5], "makespan"), field(&lines[2], "makespan"), "dedup replays a");
+
+    // The stats probe sees the second window still queued.
+    let stats = &lines[6];
+    assert_eq!(field(stats, "verb").as_str(), Some("stats"));
+    let queue = field(stats, "queue");
+    assert_eq!(field(queue, "depth").as_f64(), Some(1.0), "stats must not flush");
+    assert_eq!(field(queue, "capacity").as_f64(), Some(4.0));
+    assert_eq!(field(queue, "admitted").as_f64(), Some(5.0));
+    assert_eq!(field(queue, "rejected").as_f64(), Some(1.0));
+    let totals = field(stats, "totals");
+    assert_eq!(field(totals, "solved").as_f64(), Some(2.0));
+    assert_eq!(field(totals, "deduped").as_f64(), Some(1.0));
+    assert_eq!(field(totals, "cancelled").as_f64(), Some(1.0));
+    assert_eq!(field(totals, "errors").as_f64(), Some(1.0));
+    let cache = field(stats, "cache");
+    for key in ["hits", "misses", "l2_hits", "l2_evicted", "hint_hits", "bin_bytes"] {
+        assert!(field(cache, key).as_f64().is_some(), "cache stats carry {key:?}");
+    }
+
+    // The shutdown flush answers the second window out of the warm L1.
+    assert_eq!(field(&lines[7], "id").as_str(), Some("replay"));
+    assert_eq!(field(&lines[7], "source").as_str(), Some("cache-hit"));
+    assert_eq!(field(&lines[7], "makespan"), field(&lines[2], "makespan"));
+}
+
+#[test]
+fn daemon_restart_over_a_cache_dir_replays_from_l2() {
+    let dir = TempDir::new("acetone-daemon-l2").unwrap();
+    let with_dir = || PortfolioConfig { cache_dir: Some(dir.path().to_path_buf()), ..cfg() };
+    let session = "{\"id\":\"warm\",\"seed\":5}\n{\"verb\":\"shutdown\"}\n";
+
+    let run = |daemon: &mut Daemon, input: &str| {
+        let mut out = Vec::new();
+        daemon.run_session(Cursor::new(input.to_string()), &mut out, parse_line).unwrap();
+        String::from_utf8(out).unwrap()
+    };
+
+    let mut first = Daemon::new(with_dir(), DaemonConfig::default());
+    let solved = run(&mut first, session);
+    drop(first);
+
+    // A cold daemon over the same directory answers from disk — and its
+    // stats response (probed after the flush) says so.
+    let mut second = Daemon::new(with_dir(), DaemonConfig::default());
+    let probe = "{\"id\":\"warm\",\"seed\":5}\n{\"verb\":\"flush\"}\n{\"verb\":\"stats\"}\n";
+    let replayed = run(&mut second, probe);
+    let lines: Vec<Json> = replayed.lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert_eq!(field(&lines[0], "source").as_str(), Some("cache-hit"));
+    let solved_first = Json::parse(solved.lines().next().unwrap()).unwrap();
+    assert_eq!(field(&lines[0], "makespan"), field(&solved_first, "makespan"));
+    let cache = field(&lines[1], "cache");
+    assert_eq!(field(cache, "l2_hits").as_f64(), Some(1.0));
+    assert!(field(cache, "bin_bytes").as_f64().unwrap() > 24.0, "the log outgrew its header");
+}
+
+/// A structurally valid (if boring) solve to populate the store with:
+/// every node of `g` placed round-robin, shifted by `skew` so records
+/// differ byte-wise.
+fn sample_solve(g: &Dag, m: usize, skew: u64) -> CachedSolve {
+    let mut s = Schedule::new(m);
+    for v in 0..g.n() {
+        s.place(g, v, v % m, skew + 1000 * v as u64);
+    }
+    CachedSolve { schedule: s, termination: Termination::HeuristicComplete }
+}
+
+#[test]
+fn reopen_scan_survives_log_corruption_and_an_orphaned_index() {
+    let dir = TempDir::new("acetone-daemon-gc").unwrap();
+    let g = generate(&DagGenConfig::paper(10), 7);
+    {
+        let mut store = PersistentStore::open(dir.path());
+        for i in 0..6u64 {
+            store.insert(&[i, 100 + i], &sample_solve(&g, 2, i));
+        }
+        assert_eq!(store.len(), 6);
+    }
+
+    // Corrupt the log with a torn garbage tail and orphan the index.
+    let bin = dir.path().join("schedules.bin");
+    let mut bytes = std::fs::read(&bin).unwrap();
+    let clean_len = bytes.len();
+    bytes.extend_from_slice(b"GARBAGE GARBAGE GARBAGE GARBAGE!");
+    std::fs::write(&bin, &bytes).unwrap();
+    std::fs::remove_file(dir.path().join("schedules.idx")).unwrap();
+
+    // Reopen: the scan rebuilds the index from the valid prefix and
+    // heals the file on disk.
+    let mut store = PersistentStore::open(dir.path());
+    assert_eq!(store.len(), 6, "every live schedule survives the corruption");
+    let st = store.stats();
+    assert!(st.skipped >= 1, "the torn tail is counted");
+    assert_eq!(st.bin_bytes, clean_len as u64);
+    assert_eq!(std::fs::read(&bin).unwrap().len(), clean_len, "garbage dropped on disk");
+    for i in 0..6u64 {
+        let got = store.get(&[i, 100 + i]).expect("live record readable after heal");
+        assert_eq!(got.schedule.len(), g.n());
+        assert_eq!(got.termination, Termination::HeuristicComplete);
+    }
+}
+
+#[test]
+fn budget_gc_evicts_oldest_first_and_compaction_shrinks_the_file() {
+    let dir = TempDir::new("acetone-daemon-budget").unwrap();
+    let g = generate(&DagGenConfig::paper(10), 7);
+    let mut store = PersistentStore::open(dir.path());
+    for i in 0..12u64 {
+        store.insert(&[i], &sample_solve(&g, 2, i));
+    }
+    let full = store.stats().bin_bytes;
+    let budget = full / 2;
+
+    store.set_budget(Some(budget));
+    let st = store.stats();
+    assert!(st.evicted > 0, "the bound forced evictions");
+    assert!(st.compactions >= 1, "eviction ends in a compaction");
+    assert!(st.bin_bytes <= budget, "{} bytes over a {budget} budget", st.bin_bytes);
+    assert_eq!(st.dead_bytes, 0, "compaction reclaimed every evicted byte");
+
+    // Oldest-first: the newest records live, the oldest are gone.
+    assert!(store.get(&[11]).is_some());
+    assert!(store.get(&[0]).is_none());
+
+    // Survivors stay readable through further appends under the bound.
+    store.insert(&[99], &sample_solve(&g, 2, 99));
+    assert!(store.get(&[99]).is_some());
+    assert!(store.stats().bin_bytes <= budget);
+}
