@@ -14,8 +14,8 @@ use acetone::sched::dsh::Dsh;
 use acetone::sched::portfolio::{Portfolio, PortfolioConfig};
 use acetone::sched::serve::{BatchRequest, BatchSolver, Daemon, DaemonConfig, ProblemSpec};
 use acetone::sched::{
-    check_valid, derive_programs, prune_redundant, Budget, Platform, Scheduler, SearchOptions,
-    SolveReport, SolveRequest, SPEED_SCALE,
+    check_valid, derive_programs, prune_redundant, Budget, PipelineRequest, PipelineSolver,
+    Platform, Scheduler, SearchOptions, SolveReport, SolveRequest, SPEED_SCALE,
 };
 use acetone::sim::{replay_machine, simulate};
 use acetone::util::bench::{bench, write_json, BenchStats};
@@ -158,6 +158,29 @@ fn main() {
         out.report.schedule.makespan()
     }));
 
+    // Steady-state pipeline scheduling. The heuristic case measures the
+    // seed race + rigid-kernel replay + rebalance loop end to end on a
+    // paper-scale instance; the exact-kernel case adds the 2-iteration
+    // unrolled portfolio search under a deterministic per-root node
+    // budget, so the explored tree is machine-independent. A fresh
+    // solver per iteration keeps the L1 cache cold. New cases seed
+    // their BENCH_baseline.json row on the first CI push.
+    let pipe_cfg = PortfolioConfig {
+        workers: 2,
+        root_target: 6,
+        hybrid_node_limit: Some(200),
+        ..Default::default()
+    };
+    record(bench("pipeline n=50 m=4", 1, 8, || {
+        PipelineSolver::new(pipe_cfg.clone()).solve(&PipelineRequest::new(&g50, 4)).ii
+    }));
+    let g20 = generate(&DagGenConfig::paper(20), 6);
+    record(bench("pipeline n=20 m=4 exact-kernel", 1, 5, || {
+        PipelineSolver::new(pipe_cfg.clone())
+            .solve(&PipelineRequest::new(&g20, 4).node_limit(200).exact(true))
+            .ii
+    }));
+
     // Batched serving with dedup: 16 requests over 4 distinct problems,
     // each under a deterministic 200-node/root budget, so the measured
     // search work is machine-independent. A fresh BatchSolver per
@@ -202,6 +225,8 @@ fn main() {
             budget: Budget { deadline: None, node_limit: Some(200) },
             platform: None,
             search: None,
+            pipeline: false,
+            stream_depth: None,
         })
     };
     record(bench("serve daemon session=16", 1, 5, || {

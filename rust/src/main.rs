@@ -25,10 +25,11 @@ use acetone::sched::portfolio::PortfolioConfig;
 use acetone::sched::serve::{
     BatchRequest, BatchSolver, Daemon, DaemonConfig, ProblemSpec, SessionSummary,
 };
+use acetone::sched::pipeline::solve_pipeline;
 use acetone::sched::{
     bnb::ChouChung, cp::CpSolver, dsh::Dsh, hlfet::Hlfet, hybrid::Hybrid, ish::Ish,
-    portfolio::Portfolio, Budget, CancelToken, Platform, Scheduler, SearchOptions, SolveRequest,
-    Termination, SPEED_SCALE,
+    portfolio::Portfolio, Budget, CancelToken, PipelineRequest, PipelineSolver, Platform,
+    Scheduler, SearchOptions, SolveRequest, Termination, SPEED_SCALE,
 };
 use acetone::util::json::Json;
 use acetone::wcet::CostModel;
@@ -50,9 +51,15 @@ export-models --dir D
     write the model-zoo JSONs consumed by the Python AOT path
 schedule --model M | --nodes N [--seed S] [--density D]
          --cores C --algo A [--timeout S] [--node-limit N]
+         [--pipeline true [--exact true]]
     schedule a model or random DAG, print makespan/speedup/verdict + Gantt
     (algo: hlfet|ish|dsh|cp|tang|bnb|hybrid|portfolio; a --node-limit
-     makes truncated exact runs machine-independent)
+     makes truncated exact runs machine-independent).
+    --pipeline true switches to steady-state throughput mode: the report
+    is the initiation interval II (one inference admitted every II
+    cycles), its admissible lower bound, the fill/drain latency and the
+    per-channel buffer depth; --exact true certifies II on the unrolled
+    2-iteration kernel via the exact portfolio when the budget allows
 wcet --cores C [--model googlenet:paper]
     static per-layer WCET table + the global composition for a schedule
 simulate --model M --cores C [--jitter J] [--seed S]
@@ -82,13 +89,20 @@ serve --requests FILE.jsonl [--cores C] [--workers W] [--cache-dir DIR]
     A line may carry an \"id\" string echoed in its response (default
     line-<n>; duplicates are rejected naming both lines) and
     \"cancelled\": true to mark a client that went away (answered by
-    the serial fallback). With --listen (unix socket path, or - for
+    the serial fallback). \"mode\": \"pipeline\" answers with the
+    steady-state pipeline report (initiation interval \"ii\", its
+    admissible \"bound\", fill/drain \"latency\", buffer \"depth\")
+    instead of a one-shot makespan; \"stream-depth\" declares the
+    client's per-channel buffer capacity and adds a boolean \"fits\"
+    to the response. With --listen (unix socket path, or - for
     stdio) serve becomes a persistent daemon: request lines are
     admitted into a bounded queue (--max-inflight, default 64; excess
     lines get an immediate {\"rejected\": true} response), the queued
     window dispatches at {\"verb\": \"flush\"} / {\"verb\":
     \"shutdown\"} / EOF, and every request is answered with one JSON
-    line tagged by its id. {\"verb\": \"stats\"} reports cache
+    line tagged by its id. {\"verb\": \"cancel\", \"id\": I} fires
+    request I's cancel token (a queued request is answered by the
+    serial fallback); {\"verb\": \"stats\"} reports cache
     hit/miss/eviction and compaction counters, queue depth, admission
     rejections and per-stage wall times. --cache-budget BYTES bounds
     the persistent L2 log, evicting oldest records first; compaction
@@ -254,6 +268,9 @@ fn schedule_cmd(opts: &Opts) -> Result<()> {
     ensure_single_sink(&mut g);
     let m = opts.usize("cores", 4)?;
     let budget = budget_from(opts)?;
+    if opts.parsed("pipeline", false)? {
+        return pipeline_cmd(&g, m, budget, opts);
+    }
     let solver = solver_by_name(opts.get("algo").unwrap_or("dsh"))?;
     let r = solver.solve(&SolveRequest::new(&g, m).budget(budget));
     acetone::sched::check_valid(&g, &r.schedule)
@@ -286,6 +303,35 @@ fn schedule_cmd(opts: &Opts) -> Result<()> {
     }
     if g.n() <= 64 && g.total_wcet() <= 512 {
         println!("{}", r.schedule.gantt(&g));
+    }
+    Ok(())
+}
+
+/// `schedule --pipeline true`: steady-state throughput mode. The report
+/// is the one-iteration kernel plus its initiation interval — a new
+/// inference is admitted every II cycles, so throughput is 1/II.
+fn pipeline_cmd(g: &acetone::graph::Dag, m: usize, budget: Budget, opts: &Opts) -> Result<()> {
+    let exact = opts.parsed("exact", false)?;
+    let solver = PipelineSolver::default();
+    let r = solver.solve(&PipelineRequest::new(g, m).budget(budget).exact(exact));
+    acetone::sched::check_valid(g, &r.kernel)
+        .map_err(|e| anyhow!("pipeline produced an invalid kernel: {e}"))?;
+    println!(
+        "pipeline on {m} cores: ii={} (bound {}) latency={} buffer-depth={} verdict={} \
+         time={:?} explored={}",
+        r.ii,
+        r.lower_bound,
+        r.latency,
+        r.buffer_depth,
+        verdict(&r.termination),
+        r.stats.wall,
+        r.stats.explored,
+    );
+    for stage in &r.stats.stages {
+        println!("  stage {:<16} wall={:?} explored={}", stage.name, stage.wall, stage.explored);
+    }
+    if g.n() <= 64 && g.total_wcet() <= 512 {
+        println!("{}", r.kernel.gantt(g));
     }
     Ok(())
 }
@@ -432,6 +478,12 @@ struct ServeSpec {
     /// `speeds` / `core-classes` / `comm-matrix` keys: the heterogeneous
     /// platform of this request, validated with the line number.
     platform: Option<Platform>,
+    /// `mode` key: `"pipeline"` answers with a steady-state pipeline
+    /// report (ii/latency/depth) instead of a one-shot makespan.
+    pipeline: bool,
+    /// `stream-depth` key: the client's per-channel buffer capacity —
+    /// pipeline responses report whether the schedule fits it.
+    stream_depth: Option<usize>,
 }
 
 /// CLI-level request defaults every JSONL line may override.
@@ -465,6 +517,8 @@ fn spec_to_problem(spec: ServeSpec) -> ProblemSpec {
             nogood_capacity: Some(cap as usize),
             ..SearchOptions::default()
         }),
+        pipeline: spec.pipeline,
+        stream_depth: spec.stream_depth,
     }
 }
 
@@ -608,7 +662,14 @@ fn parse_serve_line(v: &Json, defaults: &ServeDefaults, lineno: usize) -> Result
     };
     let nogood_capacity = json_u64(v, "nogood-capacity", lineno)?.or(defaults.nogood_capacity);
     let platform = json_platform(v, m, lineno)?;
-    Ok(ServeSpec { id, cancelled, g, m, budget, nogood_capacity, platform })
+    let pipeline = match v.get("mode") {
+        None => false,
+        Some(Json::Str(s)) if s == "pipeline" => true,
+        Some(Json::Str(s)) if s == "solve" => false,
+        Some(_) => bail!("requests line {lineno}: \"mode\" must be \"solve\" or \"pipeline\""),
+    };
+    let stream_depth = json_u64(v, "stream-depth", lineno)?.map(|d| d as usize);
+    Ok(ServeSpec { id, cancelled, g, m, budget, nogood_capacity, platform, pipeline, stream_depth })
 }
 
 /// Read a whole `serve` request stream (batch mode). Blank lines and `#`
@@ -657,7 +718,7 @@ fn serve_cmd(opts: &Opts) -> Result<()> {
     };
     let server = BatchSolver::new(cfg);
     let mut batch = BatchRequest::new().workers(workers);
-    for spec in &specs {
+    for spec in specs.iter().filter(|s| !s.pipeline) {
         let mut req = SolveRequest::new(&spec.g, spec.m).budget(spec.budget.clone());
         if spec.cancelled {
             let token = CancelToken::new();
@@ -676,7 +737,40 @@ fn serve_cmd(opts: &Opts) -> Result<()> {
         batch = batch.push(req);
     }
     let out = server.solve_batch(&batch);
-    for (i, (spec, served)) in specs.iter().zip(&out.reports).enumerate() {
+    let mut reports = out.reports.iter();
+    for (i, spec) in specs.iter().enumerate() {
+        if spec.pipeline {
+            // Pipeline lines ride the shared cache individually (their
+            // own key suffix — never a one-shot collision).
+            let mut req = PipelineRequest::new(&spec.g, spec.m).budget(spec.budget.clone());
+            if spec.cancelled {
+                let token = CancelToken::new();
+                token.cancel();
+                req = req.cancel(token);
+            }
+            if let Some(p) = &spec.platform {
+                req = req.platform(p.clone());
+            }
+            let r = solve_pipeline(server.portfolio(), &req);
+            let fits = match spec.stream_depth {
+                Some(cap) => format!(" fits({cap})={}", r.buffer_depth <= cap),
+                None => String::new(),
+            };
+            println!(
+                "#{i:<4} id={:<10} pipeline  ii={:<8} bound={:<8} latency={:<8} depth={:<4} \
+                 verdict={:<18} explored={:<8} wall={:?}{fits}",
+                spec.id,
+                r.ii,
+                r.lower_bound,
+                r.latency,
+                r.buffer_depth,
+                verdict(&r.termination),
+                r.stats.explored,
+                r.stats.wall
+            );
+            continue;
+        }
+        let served = reports.next().expect("one batch report per one-shot spec");
         let r = &served.report;
         println!(
             "#{i:<4} id={:<10} {:<9} makespan={:<8} verdict={:<18} explored={:<8} \
@@ -829,6 +923,8 @@ mod tests {
         assert!(flags.contains("max-inflight"), "scraper missed daemon flags: {flags:?}");
         assert!(flags.contains("cache-budget"), "scraper missed daemon flags: {flags:?}");
         assert!(flags.contains("id"), "scraper missed the serve id key: {flags:?}");
+        assert!(flags.contains("pipeline"), "scraper missed the pipeline flag: {flags:?}");
+        assert!(flags.contains("mode"), "scraper missed the serve mode key: {flags:?}");
         for flag in &flags {
             assert!(
                 HELP.contains(&format!("--{flag}")) || HELP.contains(&format!("\"{flag}\"")),
@@ -913,6 +1009,23 @@ mod tests {
         // No platform keys at all → no platform.
         let bare = parse_serve_stream("{\"nodes\": 6}", &opts).unwrap();
         assert!(bare[0].platform.is_none());
+    }
+
+    #[test]
+    fn serve_stream_parses_pipeline_mode() {
+        let opts = Opts::parse(&[]).unwrap();
+        let text = "{\"nodes\": 6, \"mode\": \"pipeline\", \"stream-depth\": 4}\n\
+                    {\"nodes\": 6, \"mode\": \"solve\"}\n\
+                    {\"nodes\": 6}\n";
+        let specs = parse_serve_stream(text, &opts).unwrap();
+        assert!(specs[0].pipeline);
+        assert_eq!(specs[0].stream_depth, Some(4));
+        assert!(!specs[1].pipeline, "explicit one-shot mode");
+        assert!(!specs[2].pipeline && specs[2].stream_depth.is_none(), "one-shot default");
+        // Unknown modes and non-string modes error with the line number.
+        assert!(parse_serve_stream("{\"nodes\": 6, \"mode\": \"stream\"}", &opts).is_err());
+        assert!(parse_serve_stream("{\"nodes\": 6, \"mode\": 3}", &opts).is_err());
+        assert!(parse_serve_stream("{\"nodes\": 6, \"stream-depth\": -2}", &opts).is_err());
     }
 
     #[test]

@@ -73,6 +73,10 @@
 //! the best schedule the crate can find. [`serve`] batches many
 //! requests over the portfolio: dedup by canonical key, one shared
 //! worker pool, per-request budgets/cancellation, input-order reports.
+//! [`pipeline`] turns the one-shot problem into a periodic software
+//! pipeline for inference *streams*: initiation interval, per-core
+//! stage assignment, buffer depth and fill latency, validated end to
+//! end by `sim::simulate_stream`.
 //!
 //! [`Incumbent`]: portfolio::Incumbent
 
@@ -85,6 +89,7 @@ pub mod hlfet;
 pub mod hybrid;
 pub mod ish;
 pub mod list;
+pub mod pipeline;
 pub mod platform;
 pub mod portfolio;
 mod program;
@@ -96,6 +101,7 @@ pub use api::{
     BnbOptions, Budget, CancelToken, CpOptions, PortfolioOptions, SearchOptions, SearchStats,
     SolveReport, SolveRequest, StageStats, Termination,
 };
+pub use pipeline::{PipelineReport, PipelineRequest, PipelineSolver};
 pub use platform::{Platform, ResolvedPlatform, SPEED_SCALE};
 pub use program::{derive_comms, derive_programs, CommOp, CoreProgram, CoreStep};
 pub use validity::{check_valid, check_valid_on, prune_redundant, prune_redundant_on, ValidityError};

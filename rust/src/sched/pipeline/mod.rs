@@ -1,0 +1,882 @@
+//! `sched::pipeline` — steady-state throughput scheduling for inference
+//! streams.
+//!
+//! Every other solver in the crate minimizes the *single-shot makespan*
+//! of one inference. The serving scenario the ROADMAP names is different:
+//! a **stream** of inferences over the same DAG, where the figure of
+//! merit is steady-state *throughput* — how often a new inference can be
+//! admitted — not how fast one inference finishes in isolation.
+//!
+//! # The rigid-shift pipeline model
+//!
+//! A pipeline is described by a **kernel** (one ordinary [`Schedule`] of
+//! a single iteration, duplication-free) and an **initiation interval**
+//! `II`: iteration `k` executes the kernel shifted by `k · II` cycles.
+//! Every node keeps its core across iterations (a *stage assignment*),
+//! so iteration `k+1`'s first placement on core `c` starts at
+//! `first(c) + II`, which does not overlap iteration `k` as long as
+//!
+//! ```text
+//! II ≥ span(c) = last_finish(c) − first_start(c)   for every core c.
+//! ```
+//!
+//! The smallest rigid-shift interval of a kernel is therefore
+//! `max_c span(c)` ([`kernel_ii`]). The one-shot completion time of a
+//! single iteration — the pipeline's fill/drain **latency** — stays the
+//! kernel makespan, and steady-state throughput is exactly `1 / II`.
+//!
+//! # Admissible lower bounds
+//!
+//! Two bounds hold for *any* stage assignment (see [`lower_bound`]):
+//!
+//! * **load**: some core executes work totalling at least
+//!   `⌈Σ_v min_cost(v) / m⌉` per iteration, and every node runs
+//!   somewhere, so `II ≥ max(⌈Σ min_cost / m⌉, max_v min_cost(v))`;
+//! * **recurrence**: for an edge `(u, v)`, either both endpoints share a
+//!   core (that core is busy `cost(u) + cost(v)` per iteration) or they
+//!   don't (each core pays its own node, `II ≥ max(cost(u), cost(v))`).
+//!   Both cases imply `II ≥ ⌈(min_cost(u) + min_cost(v)) / 2⌉`.
+//!
+//! Because the bounds are assignment-independent, a pipeline whose `II`
+//! *meets* the bound is optimal over every rigid-shift pipeline — that
+//! equality is the [`Termination::ProvenOptimal`] certificate here.
+//!
+//! # The solver
+//!
+//! [`solve_pipeline`] seeds stage assignments from the one-shot list
+//! schedulers (HLFET / ISH / DSH, raced over the worker pool exactly
+//! like the portfolio's heuristic stage), optionally harvests two more
+//! seeds from an **exact** portfolio solve of the unrolled 2-iteration
+//! kernel ([`PipelineRequest::exact`] — the exact engines see the
+//! inter-iteration resource interleaving the heuristics can't), then
+//! iteratively rebalances the bottleneck core: move one node off the
+//! widest-span core whenever that strictly improves `(II, latency)`,
+//! until the lower bound is met or no move helps. Everything is
+//! deterministic for any worker count — the seeds are index-reduced and
+//! the rebalancer walks nodes and cores in id order.
+//!
+//! Solves ride the portfolio's L1/L2 [`ScheduleCache`]: the pipeline key
+//! is the one-shot canonical key with two mode words appended
+//! ([`PIPELINE_MODE_WORD`], under the bumped
+//! [`KEY_VERSION`](super::portfolio::KEY_VERSION)), so pipeline and
+//! one-shot solves of the same problem never collide and cached kernels
+//! — verdict included — survive process restarts. `II`, latency and
+//! buffer depth are re-derived from the cached kernel on a hit.
+//!
+//! # Buffering
+//!
+//! Cross-core messages of iteration `k` can still be in flight while
+//! iteration `k+1` produces the next batch. [`PipelineReport::buffer_depth`]
+//! is the maximum number of simultaneously-live messages on any one
+//! `(src core → dst core)` channel over the periodic steady state,
+//! counting each message conservatively live from producer finish to
+//! consumer start. Replaying the stream on a machine with
+//! `channel_capacity ≥ buffer_depth` never blocks a writer
+//! (`sim::simulate_stream` cross-validates this and the `1 / II`
+//! throughput end to end; `tests/pipeline_determinism.rs` pins both).
+//!
+//! ```
+//! use acetone::graph::paper_example_dag;
+//! use acetone::sched::pipeline::{PipelineRequest, PipelineSolver};
+//!
+//! let g = paper_example_dag();
+//! let solver = PipelineSolver::default();
+//! let report = solver.solve(&PipelineRequest::new(&g, 2));
+//! assert!(report.ii >= report.lower_bound);
+//! assert!(report.latency >= report.ii);
+//! println!("II {} · latency {} · {}", report.ii, report.latency, report.termination.as_str());
+//! ```
+//!
+//! [`ScheduleCache`]: super::portfolio::ScheduleCache
+
+use super::dsh::Dsh;
+use super::hlfet::Hlfet;
+use super::ish::Ish;
+use super::platform::{Platform, ResolvedPlatform};
+use super::portfolio::{parallel_map, resolve_workers, CachedSolve, Portfolio, PortfolioConfig};
+use super::{
+    derive_comms, Budget, CancelToken, Schedule, Scheduler, SearchStats, SolveRequest, StageStats,
+    Termination,
+};
+use crate::graph::{Cycles, Dag, NodeId};
+use std::time::Instant;
+
+/// Cache-key mode marker appended (with the `exact` flag) after the
+/// one-shot key words. One-shot keys never carry a suffix, so a pipeline
+/// solve of a problem can never hit a one-shot entry or vice versa; the
+/// distinct problem suffix also keeps warm hints mode-local.
+pub const PIPELINE_MODE_WORD: u64 = 2;
+
+/// Bottleneck-rebalancing rounds before the heuristic settles (each
+/// accepted round strictly decreases `(II, latency)`, so this is a
+/// safety cap, not the usual exit).
+const REBALANCE_ROUNDS: usize = 32;
+
+/// One pipeline solve request: the problem plus the shared budget /
+/// cancellation hooks of the one-shot API (see [`super::SolveRequest`]).
+///
+/// ```
+/// use acetone::graph::paper_example_dag;
+/// use acetone::sched::pipeline::PipelineRequest;
+/// use std::time::Duration;
+///
+/// let g = paper_example_dag();
+/// let req = PipelineRequest::new(&g, 3).node_limit(10_000).exact(true);
+/// assert_eq!(req.m, 3);
+/// assert!(req.exact);
+/// ```
+#[derive(Debug, Clone)]
+pub struct PipelineRequest<'g> {
+    /// The per-iteration task DAG.
+    pub g: &'g Dag,
+    /// Number of cores.
+    pub m: usize,
+    /// The unified resource budget (drives the exact kernel solve; the
+    /// polynomial seeding/rebalancing runs to completion regardless).
+    pub budget: Budget,
+    /// Cooperative cancellation flag.
+    pub cancel: Option<CancelToken>,
+    /// Heterogeneous platform description; `None` (or any semantically
+    /// uniform platform) is the identical-core model.
+    pub platform: Option<Platform>,
+    /// Also run the exact portfolio on the unrolled 2-iteration kernel
+    /// and harvest its per-copy assignments as extra rebalancer seeds.
+    pub exact: bool,
+}
+
+impl<'g> PipelineRequest<'g> {
+    /// An unbudgeted heuristic-only request.
+    pub fn new(g: &'g Dag, m: usize) -> Self {
+        Self { g, m, budget: Budget::default(), cancel: None, platform: None, exact: false }
+    }
+
+    /// Set the wall-clock safety valve.
+    pub fn deadline(mut self, d: std::time::Duration) -> Self {
+        self.budget.deadline = Some(d);
+        self
+    }
+
+    /// Set the deterministic node budget (per subtree root of the exact
+    /// kernel solve, like the portfolio).
+    pub fn node_limit(mut self, n: u64) -> Self {
+        self.budget.node_limit = Some(n);
+        self
+    }
+
+    /// Replace the whole budget.
+    pub fn budget(mut self, b: Budget) -> Self {
+        self.budget = b;
+        self
+    }
+
+    /// Attach a cancellation token.
+    pub fn cancel(mut self, token: CancelToken) -> Self {
+        self.cancel = Some(token);
+        self
+    }
+
+    /// Attach a heterogeneous platform description.
+    pub fn platform(mut self, p: Platform) -> Self {
+        self.platform = Some(p);
+        self
+    }
+
+    /// Enable the exact unrolled-kernel seeding stage.
+    pub fn exact(mut self, on: bool) -> Self {
+        self.exact = on;
+        self
+    }
+
+    /// Resolve this request's platform against the DAG and core count.
+    pub fn resolved_platform(&self) -> ResolvedPlatform {
+        ResolvedPlatform::resolve(self.platform.as_ref(), self.g, self.m)
+    }
+
+    /// True once the attached token (if any) has been cancelled.
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.as_ref().map_or(false, CancelToken::is_cancelled)
+    }
+
+    /// The one-shot request this pipeline request keys through: same
+    /// problem, same budget, same hooks. The pipeline cache key is this
+    /// request's canonical key plus the mode words.
+    fn as_solve_request(&self) -> SolveRequest<'g> {
+        let mut req = SolveRequest::new(self.g, self.m).budget(self.budget.clone());
+        if let Some(p) = &self.platform {
+            req = req.platform(p.clone());
+        }
+        if let Some(c) = &self.cancel {
+            req = req.cancel(c.clone());
+        }
+        req
+    }
+}
+
+/// Outcome of one pipeline solve.
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    /// The one-iteration kernel; iteration `k` replays it shifted by
+    /// `k · II` (every node keeps its core — duplication-free).
+    pub kernel: Schedule,
+    /// Initiation interval: a new inference is admitted every `II`
+    /// cycles; steady-state throughput is `1 / II`.
+    pub ii: Cycles,
+    /// Fill/drain latency of one iteration (the kernel makespan).
+    pub latency: Cycles,
+    /// The admissible `II` lower bound ([`lower_bound`]); `ii ==
+    /// lower_bound` is the optimality certificate.
+    pub lower_bound: Cycles,
+    /// Max simultaneously-live messages on any one core-pair channel in
+    /// steady state — the per-channel buffer capacity that never blocks
+    /// a writer.
+    pub buffer_depth: usize,
+    /// Why the solve stopped ([`Termination::ProvenOptimal`] iff
+    /// `ii == lower_bound`).
+    pub termination: Termination,
+    /// Merged statistics of the seeding solves and the exact stage.
+    pub stats: SearchStats,
+}
+
+// ---------------------------------------------------------------------
+// Lower bounds
+// ---------------------------------------------------------------------
+
+/// Per-core load bound: `max(⌈Σ_v min_cost(v) / m⌉, max_v min_cost(v))`.
+/// Admissible for any stage assignment — some core carries at least the
+/// average load per iteration, and every node's own core carries at
+/// least that node.
+pub fn load_bound(g: &Dag, plat: &ResolvedPlatform) -> Cycles {
+    let m = plat.m() as u64;
+    let total: Cycles = (0..g.n()).map(|v| plat.min_cost(v)).sum();
+    let widest = (0..g.n()).map(|v| plat.min_cost(v)).max().unwrap_or(0);
+    ((total + m - 1) / m).max(widest)
+}
+
+/// Recurrence bound over comm-carried dependencies:
+/// `max over edges (u, v) of ⌈(min_cost(u) + min_cost(v)) / 2⌉`.
+/// Admissible: same-core placement makes one core busy `cost(u) +
+/// cost(v)` per iteration; cross-core placement still pays
+/// `max(cost(u), cost(v))` on one of the two cores, and for integers
+/// `max(a, b) ≥ ⌈(a + b) / 2⌉`.
+pub fn recurrence_bound(g: &Dag, plat: &ResolvedPlatform) -> Cycles {
+    g.edges()
+        .map(|(u, v, _)| (plat.min_cost(u) + plat.min_cost(v) + 1) / 2)
+        .max()
+        .unwrap_or(0)
+}
+
+/// The combined admissible `II` lower bound, clamped to ≥ 1 (at most one
+/// admission per cycle — the degenerate all-zero-cost graph would
+/// otherwise divide the throughput model by zero).
+pub fn lower_bound(g: &Dag, plat: &ResolvedPlatform) -> Cycles {
+    load_bound(g, plat).max(recurrence_bound(g, plat)).max(1)
+}
+
+// ---------------------------------------------------------------------
+// Kernel construction
+// ---------------------------------------------------------------------
+
+/// The stage assignment a one-shot schedule implies: each node's primary
+/// instance (earliest start, then lowest core) names its stage core —
+/// duplicates are dropped, the pipeline kernel is duplication-free.
+fn assignment_of(g: &Dag, s: &Schedule) -> Vec<usize> {
+    (0..g.n())
+        .map(|v| {
+            s.instances(v)
+                .iter()
+                .min_by_key(|p| (p.start, p.core))
+                .map_or(0, |p| p.core)
+        })
+        .collect()
+}
+
+/// ASAP kernel under a fixed stage assignment: place nodes in topological
+/// order, each starting when its core is free and every parent's data
+/// has arrived (`finish(u) + plat.comm(σ(u), σ(v), w)`).
+fn rigid_kernel(g: &Dag, plat: &ResolvedPlatform, topo: &[NodeId], assign: &[usize]) -> Schedule {
+    let mut s = Schedule::new(plat.m());
+    let mut finish = vec![0u64; g.n()];
+    let mut avail = vec![0u64; plat.m()];
+    for &v in topo {
+        let c = assign[v];
+        let mut start = avail[c];
+        for &(u, w) in g.parents(v) {
+            start = start.max(finish[u] + plat.comm(assign[u], c, w));
+        }
+        let end = start + plat.cost(v, c);
+        s.place_raw(v, c, start, end);
+        finish[v] = end;
+        avail[c] = end;
+    }
+    s
+}
+
+/// The smallest rigid-shift initiation interval of a kernel:
+/// `max_c (last_finish(c) − first_start(c))`, clamped to ≥ 1. Iteration
+/// `k+1`'s first placement on core `c` starts at `first(c) + II ≥
+/// last(c)`, so consecutive iterations never overlap on any core.
+pub fn kernel_ii(kernel: &Schedule) -> Cycles {
+    (0..kernel.m)
+        .map(|c| {
+            let row = kernel.core(c);
+            match row.first() {
+                Some(first) => {
+                    let last = row.iter().map(|p| p.finish).max().unwrap_or(first.start);
+                    last - first.start
+                }
+                None => 0,
+            }
+        })
+        .max()
+        .unwrap_or(0)
+        .max(1)
+}
+
+/// Max simultaneously-live messages on any one `(src core → dst core)`
+/// channel over the periodic steady state. Each merged cross-core
+/// message (see [`derive_comms`]) is counted live over the closed kernel
+/// interval `[producer finish, earliest consumer start]`, replicated at
+/// every `II` shift; the sweep window sits past the longest lifetime so
+/// every overlap pattern of the infinite stream is present.
+pub fn buffer_depth(g: &Dag, kernel: &Schedule, ii: Cycles) -> usize {
+    let mut per_chan: std::collections::HashMap<(usize, usize), Vec<(Cycles, Cycles)>> =
+        std::collections::HashMap::new();
+    for c in derive_comms(g, kernel) {
+        per_chan
+            .entry((c.src_core, c.dst_core))
+            .or_default()
+            .push((c.ready, c.deadline.max(c.ready)));
+    }
+    per_chan.values().map(|msgs| channel_depth(msgs, ii)).max().unwrap_or(0)
+}
+
+/// Exact periodic max-occupancy of one channel: sweep the event points of
+/// all `II`-shifted copies of the message lifetimes intersecting one
+/// steady-state window.
+fn channel_depth(msgs: &[(Cycles, Cycles)], ii: Cycles) -> usize {
+    let span = msgs.iter().map(|&(r, d)| d - r).max().unwrap_or(0);
+    let periods = (span / ii) as usize + 2;
+    let w0 = periods as u64 * ii;
+    let w1 = w0 + ii;
+    let mut events: Vec<(Cycles, i64)> = Vec::new();
+    for k in 0..(2 * periods + 2) {
+        let off = k as u64 * ii;
+        for &(r, d) in msgs {
+            // Closed interval [r, d] → half-open [r, d + 1).
+            let (s, e) = (r + off, d + off + 1);
+            if s < w1 && e > w0 {
+                events.push((s.max(w0), 1));
+                events.push((e.min(w1), -1));
+            }
+        }
+    }
+    // Decrements sort first at equal times: half-open intervals meeting
+    // end-to-start do not overlap.
+    events.sort_unstable();
+    let mut cur = 0i64;
+    let mut best = 0i64;
+    for (_, delta) in events {
+        cur += delta;
+        best = best.max(cur);
+    }
+    best as usize
+}
+
+// ---------------------------------------------------------------------
+// Unrolling (the exact stage and the stream simulator both replay K
+// disjoint iteration copies of the per-iteration DAG)
+// ---------------------------------------------------------------------
+
+/// `copies` disjoint copies of `g`: iteration `k`'s copy of node `v` is
+/// node `k · g.n() + v`, with only intra-iteration edges (the stream
+/// admits iterations independently; there are no loop-carried values).
+pub fn unroll_dag(g: &Dag, copies: usize) -> Dag {
+    let mut out = Dag::new();
+    for k in 0..copies {
+        for v in 0..g.n() {
+            out.add_node(format!("{}#{k}", g.name(v)), g.wcet(v));
+        }
+    }
+    for k in 0..copies {
+        let off = k * g.n();
+        for (u, v, w) in g.edges() {
+            out.add_edge(u + off, v + off, w);
+        }
+    }
+    out
+}
+
+/// A platform for the unrolled graph: speeds, classes and the comm
+/// matrix are per-core (unchanged); an explicit per-node cost table is
+/// replicated per copy so copy `k`'s nodes cost what the originals do.
+pub fn unroll_platform(p: &Platform, copies: usize) -> Platform {
+    let mut out = p.clone();
+    if let Some(table) = &p.cost_table {
+        let mut big = Vec::with_capacity(table.len() * copies);
+        for _ in 0..copies {
+            big.extend(table.iter().cloned());
+        }
+        out.cost_table = Some(big);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// The solver
+// ---------------------------------------------------------------------
+
+/// The pipeline cache key under `portfolio`'s configuration: the
+/// one-shot canonical key of the equivalent [`SolveRequest`] plus
+/// `[PIPELINE_MODE_WORD, exact]`. Distinct from every one-shot key of
+/// the same problem by construction.
+pub fn pipeline_request_key(portfolio: &Portfolio, req: &PipelineRequest<'_>) -> Vec<u64> {
+    let mut key = portfolio.request_key(&req.as_solve_request());
+    key.push(PIPELINE_MODE_WORD);
+    key.push(req.exact as u64);
+    key
+}
+
+/// Solve one pipeline request over a shared [`Portfolio`] (its worker
+/// pool, cache tiers and exact engines). Deterministic for any worker
+/// count; see the module docs for the algorithm.
+pub fn solve_pipeline(portfolio: &Portfolio, req: &PipelineRequest<'_>) -> PipelineReport {
+    assert!(req.m >= 1, "pipeline requires at least one core");
+    assert!(req.g.n() > 0, "pipeline requires a non-empty DAG");
+    let t0 = Instant::now();
+    let g = req.g;
+    let plat = req.resolved_platform();
+    let lb = lower_bound(g, &plat);
+    let topo = g.topo_order();
+
+    let key = pipeline_request_key(portfolio, req);
+    if let Some(hit) = portfolio.cache_lookup(&key) {
+        let kernel = hit.schedule.clone();
+        let stats = SearchStats { wall: t0.elapsed(), ..SearchStats::default() };
+        return report_from_kernel(g, kernel, lb, hit.termination.clone(), stats);
+    }
+    if req.is_cancelled() {
+        return cancelled_report(g, &plat, &topo, lb, t0);
+    }
+
+    // ---- Stage 1: one-shot seeds (HLFET / ISH / DSH race) ------------
+    let workers = resolve_workers(portfolio.cfg.workers);
+    let heur_req = req.as_solve_request();
+    let t_seed = Instant::now();
+    let seeds = parallel_map(workers, 3, |i| match i {
+        0 => Hlfet.solve(&heur_req),
+        1 => Ish.solve(&heur_req),
+        _ => Dsh.solve(&heur_req),
+    });
+    let mut stats = SearchStats::default();
+    for s in &seeds {
+        stats.absorb(&s.stats);
+    }
+    stats
+        .stages
+        .push(StageStats { name: "pipeline-seeds", wall: t_seed.elapsed(), explored: 0 });
+    let mut assignments: Vec<Vec<usize>> =
+        seeds.iter().map(|s| assignment_of(g, &s.schedule)).collect();
+
+    // ---- Stage 2 (optional): exact unrolled-kernel seeds -------------
+    // The exact engines solve two independent iteration copies sharing
+    // the m cores, so their assignment already balances inter-iteration
+    // resource pressure. Each copy's induced stage assignment joins the
+    // rebalancer's seed pool.
+    let mut exact_cut = false;
+    if req.exact && !req.is_cancelled() {
+        let g2 = unroll_dag(g, 2);
+        let t_exact = Instant::now();
+        let mut sr = SolveRequest::new(&g2, req.m).budget(req.budget.clone());
+        if let Some(p) = &req.platform {
+            sr = sr.platform(unroll_platform(p, 2));
+        }
+        if let Some(c) = &req.cancel {
+            sr = sr.cancel(c.clone());
+        }
+        let out = portfolio.solve_request(&sr);
+        stats.absorb(&out.report.stats);
+        stats.stages.push(StageStats {
+            name: "pipeline-exact",
+            wall: t_exact.elapsed(),
+            explored: out.report.stats.explored,
+        });
+        exact_cut = matches!(out.report.termination, Termination::BudgetExhausted { .. });
+        let n = g.n();
+        for copy in 0..2 {
+            let assign: Vec<usize> = (0..n)
+                .map(|v| {
+                    out.report
+                        .schedule
+                        .instances(copy * n + v)
+                        .iter()
+                        .min_by_key(|p| (p.start, p.core))
+                        .map_or(0, |p| p.core)
+                })
+                .collect();
+            assignments.push(assign);
+        }
+    }
+
+    // ---- Stage 3: bottleneck rebalancing, deterministic reduction ----
+    let t_bal = Instant::now();
+    let mut best: Option<(Cycles, Schedule)> = None;
+    for assign in assignments {
+        let (ii, kernel) = rebalance(g, &plat, &topo, assign, lb, req.cancel.as_ref());
+        let better = match &best {
+            None => true,
+            Some((bi, bk)) => {
+                (ii, kernel.makespan()) < (*bi, bk.makespan())
+                    || ((ii, kernel.makespan()) == (*bi, bk.makespan())
+                        && super::portfolio::placement_key(&kernel)
+                            < super::portfolio::placement_key(bk))
+            }
+        };
+        if better {
+            best = Some((ii, kernel));
+        }
+    }
+    stats
+        .stages
+        .push(StageStats { name: "pipeline-rebalance", wall: t_bal.elapsed(), explored: 0 });
+    let (ii, kernel) = best.expect("at least one seed assignment");
+    debug_assert!(ii >= lb, "kernel II {ii} below the admissible bound {lb}");
+
+    let cancelled = req.is_cancelled();
+    let termination = if cancelled {
+        Termination::Cancelled
+    } else if ii == lb {
+        Termination::ProvenOptimal
+    } else if exact_cut {
+        Termination::BudgetExhausted { nodes: stats.explored, wall: t0.elapsed() }
+    } else {
+        Termination::HeuristicComplete
+    };
+    // Cache only reproducible results (same rule as the portfolio): a
+    // wall-clock-cut or cancelled solve is machine-dependent.
+    if !cancelled && !stats.wall_cut {
+        portfolio.cache_store(
+            key,
+            CachedSolve { schedule: kernel.clone(), termination: termination.clone() },
+        );
+    }
+    stats.wall = t0.elapsed();
+    report_from_kernel(g, kernel, lb, termination, stats)
+}
+
+/// Assemble a report from a kernel: `II`, latency and buffer depth are
+/// all deterministic functions of the kernel (which is what lets a cache
+/// hit re-derive them instead of persisting them).
+fn report_from_kernel(
+    g: &Dag,
+    kernel: Schedule,
+    lb: Cycles,
+    termination: Termination,
+    stats: SearchStats,
+) -> PipelineReport {
+    let ii = kernel_ii(&kernel);
+    let latency = kernel.makespan();
+    let depth = buffer_depth(g, &kernel, ii);
+    PipelineReport { kernel, ii, latency, lower_bound: lb, buffer_depth: depth, termination, stats }
+}
+
+/// Serial fallback for a solve cancelled before any seed was computed:
+/// everything on core 0 (always a valid rigid pipeline).
+fn cancelled_report(
+    g: &Dag,
+    plat: &ResolvedPlatform,
+    topo: &[NodeId],
+    lb: Cycles,
+    t0: Instant,
+) -> PipelineReport {
+    let kernel = rigid_kernel(g, plat, topo, &vec![0; g.n()]);
+    let stats = SearchStats { wall: t0.elapsed(), ..SearchStats::default() };
+    report_from_kernel(g, kernel, lb, Termination::Cancelled, stats)
+}
+
+/// Rebalance one stage assignment: while `II` sits above the bound, move
+/// a single node off the bottleneck core (max span, tie → lowest id)
+/// whenever the best such move — nodes and target cores tried in id
+/// order, ties broken by the placement key — strictly improves
+/// `(II, latency)`. Each acceptance strictly decreases that pair, so the
+/// loop terminates; [`REBALANCE_ROUNDS`] is a safety cap.
+fn rebalance(
+    g: &Dag,
+    plat: &ResolvedPlatform,
+    topo: &[NodeId],
+    mut assign: Vec<usize>,
+    lb: Cycles,
+    cancel: Option<&CancelToken>,
+) -> (Cycles, Schedule) {
+    let m = plat.m();
+    let mut kernel = rigid_kernel(g, plat, topo, &assign);
+    let mut ii = kernel_ii(&kernel);
+    if m == 1 {
+        return (ii, kernel);
+    }
+    for _ in 0..REBALANCE_ROUNDS {
+        if ii <= lb || cancel.map_or(false, |t| t.is_cancelled()) {
+            break;
+        }
+        let bottleneck = (0..m)
+            .max_by_key(|&c| {
+                let row = kernel.core(c);
+                let span = match row.first() {
+                    Some(first) => {
+                        row.iter().map(|p| p.finish).max().unwrap_or(first.start) - first.start
+                    }
+                    None => 0,
+                };
+                // max_by_key keeps the *last* max; negate the id to
+                // prefer the lowest core on span ties.
+                (span, std::cmp::Reverse(c))
+            })
+            .expect("m >= 1");
+        let movable: Vec<NodeId> = (0..g.n()).filter(|&v| assign[v] == bottleneck).collect();
+        let mut cand: Option<(Cycles, Cycles, NodeId, usize, Schedule)> = None;
+        for &v in &movable {
+            for c in 0..m {
+                if c == bottleneck {
+                    continue;
+                }
+                assign[v] = c;
+                let k2 = rigid_kernel(g, plat, topo, &assign);
+                let ii2 = kernel_ii(&k2);
+                let lat2 = k2.makespan();
+                let better = match &cand {
+                    None => true,
+                    Some((ci, cl, _, _, ck)) => {
+                        (ii2, lat2) < (*ci, *cl)
+                            || ((ii2, lat2) == (*ci, *cl)
+                                && super::portfolio::placement_key(&k2)
+                                    < super::portfolio::placement_key(ck))
+                    }
+                };
+                if better {
+                    cand = Some((ii2, lat2, v, c, k2));
+                }
+                assign[v] = bottleneck;
+            }
+        }
+        match cand {
+            Some((ii2, lat2, v, c, k2)) if (ii2, lat2) < (ii, kernel.makespan()) => {
+                assign[v] = c;
+                kernel = k2;
+                ii = ii2;
+            }
+            _ => break,
+        }
+    }
+    (ii, kernel)
+}
+
+/// Convenience owner of a [`Portfolio`] for standalone pipeline solving —
+/// the CLI and the tests construct one per worker-count configuration;
+/// the serve daemon calls [`solve_pipeline`] on its shared portfolio
+/// instead.
+pub struct PipelineSolver {
+    portfolio: Portfolio,
+}
+
+impl Default for PipelineSolver {
+    fn default() -> Self {
+        Self::new(PortfolioConfig::default())
+    }
+}
+
+impl PipelineSolver {
+    /// A solver over a fresh portfolio with this configuration.
+    pub fn new(cfg: PortfolioConfig) -> Self {
+        Self { portfolio: Portfolio::new(cfg) }
+    }
+
+    /// Wrap an existing portfolio (shared cache tiers).
+    pub fn with_portfolio(portfolio: Portfolio) -> Self {
+        Self { portfolio }
+    }
+
+    /// The underlying portfolio (cache stats, config).
+    pub fn portfolio(&self) -> &Portfolio {
+        &self.portfolio
+    }
+
+    /// The canonical cache key of `req` (see [`pipeline_request_key`]).
+    pub fn request_key(&self, req: &PipelineRequest<'_>) -> Vec<u64> {
+        pipeline_request_key(&self.portfolio, req)
+    }
+
+    /// Solve one request (see [`solve_pipeline`]).
+    pub fn solve(&self, req: &PipelineRequest<'_>) -> PipelineReport {
+        solve_pipeline(&self.portfolio, req)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::paper_example_dag;
+    use crate::sched::check_valid_on;
+
+    fn quick_solver() -> PipelineSolver {
+        PipelineSolver::new(PortfolioConfig {
+            workers: 2,
+            root_target: 4,
+            hybrid_node_limit: Some(200),
+            ..PortfolioConfig::default()
+        })
+    }
+
+    #[test]
+    fn bounds_are_admissible_and_met_by_any_kernel() {
+        let g = paper_example_dag();
+        for m in 1..=4 {
+            let plat = ResolvedPlatform::resolve(None, &g, m);
+            let lb = lower_bound(&g, &plat);
+            assert!(lb >= 1);
+            let topo = g.topo_order();
+            // Any assignment's kernel II meets the bound.
+            let assign: Vec<usize> = (0..g.n()).map(|v| v % m).collect();
+            let kernel = rigid_kernel(&g, &plat, &topo, &assign);
+            assert!(kernel_ii(&kernel) >= lb, "m={m}");
+        }
+    }
+
+    #[test]
+    fn single_core_pipeline_is_the_serial_loop() {
+        let g = paper_example_dag();
+        let report = quick_solver().solve(&PipelineRequest::new(&g, 1));
+        // One core: II = latency = total work, no cross-core buffering.
+        assert_eq!(report.ii, g.total_wcet());
+        assert_eq!(report.latency, g.total_wcet());
+        assert_eq!(report.buffer_depth, 0);
+        assert_eq!(report.termination, Termination::ProvenOptimal);
+    }
+
+    #[test]
+    fn kernel_is_valid_and_ii_at_most_latency() {
+        let g = paper_example_dag();
+        for m in 2..=4 {
+            let report = quick_solver().solve(&PipelineRequest::new(&g, m));
+            let plat = ResolvedPlatform::resolve(None, &g, m);
+            assert_eq!(check_valid_on(&g, &plat, &report.kernel), Ok(()));
+            assert!(report.ii >= report.lower_bound, "m={m}");
+            assert!(report.ii <= report.latency, "m={m}");
+            assert_eq!(report.kernel.duplication_count(), 0, "kernel is duplication-free");
+        }
+    }
+
+    #[test]
+    fn worker_count_never_changes_the_report() {
+        let g = paper_example_dag();
+        let solve_with = |workers: usize| {
+            PipelineSolver::new(PortfolioConfig { workers, ..PortfolioConfig::default() })
+                .solve(&PipelineRequest::new(&g, 3))
+        };
+        let (r1, r4) = (solve_with(1), solve_with(4));
+        assert_eq!(r1.ii, r4.ii);
+        assert_eq!(r1.latency, r4.latency);
+        assert_eq!(r1.buffer_depth, r4.buffer_depth);
+        let key = |s: &Schedule| super::super::portfolio::placement_key(s);
+        assert_eq!(key(&r1.kernel), key(&r4.kernel));
+    }
+
+    #[test]
+    fn pipeline_key_differs_from_oneshot_key_and_by_exact_flag() {
+        let g = paper_example_dag();
+        let solver = quick_solver();
+        let req = PipelineRequest::new(&g, 2);
+        let pipe_key = solver.request_key(&req);
+        let oneshot_key = solver.portfolio().request_key(&SolveRequest::new(&g, 2));
+        assert_ne!(pipe_key, oneshot_key);
+        assert_eq!(&pipe_key[..oneshot_key.len()], &oneshot_key[..]);
+        let exact_key = solver.request_key(&req.clone().exact(true));
+        assert_ne!(pipe_key, exact_key);
+    }
+
+    #[test]
+    fn cache_hit_reproduces_the_report() {
+        let g = paper_example_dag();
+        let solver = quick_solver();
+        let req = PipelineRequest::new(&g, 3);
+        let cold = solver.solve(&req);
+        let misses = solver.portfolio().cache_stats().misses;
+        let warm = solver.solve(&req);
+        assert_eq!(solver.portfolio().cache_stats().misses, misses, "second solve hits");
+        assert_eq!(warm.ii, cold.ii);
+        assert_eq!(warm.latency, cold.latency);
+        assert_eq!(warm.buffer_depth, cold.buffer_depth);
+        assert_eq!(warm.termination, cold.termination);
+    }
+
+    #[test]
+    fn cancelled_request_reports_cancelled() {
+        let g = paper_example_dag();
+        let token = CancelToken::new();
+        token.cancel();
+        let report = quick_solver().solve(&PipelineRequest::new(&g, 2).cancel(token));
+        assert_eq!(report.termination, Termination::Cancelled);
+        // The fallback kernel is still a valid single-core pipeline.
+        assert_eq!(report.kernel.used_cores(), 1);
+    }
+
+    #[test]
+    fn exact_stage_never_worsens_the_heuristic() {
+        // The exact stage only *adds* seeds to the rebalancer pool, so
+        // the lexicographic reduction can only improve.
+        let g = paper_example_dag();
+        let heur = quick_solver().solve(&PipelineRequest::new(&g, 2).node_limit(2_000));
+        let exact =
+            quick_solver().solve(&PipelineRequest::new(&g, 2).node_limit(2_000).exact(true));
+        assert!(exact.ii <= heur.ii);
+    }
+
+    #[test]
+    fn unroll_doubles_nodes_and_edges_without_cross_edges() {
+        let g = paper_example_dag();
+        let g2 = unroll_dag(&g, 2);
+        assert_eq!(g2.n(), 2 * g.n());
+        assert_eq!(g2.edge_count(), 2 * g.edge_count());
+        for (u, v, _) in g2.edges() {
+            assert_eq!(u / g.n(), v / g.n(), "no cross-iteration edges");
+        }
+        assert_eq!(g2.name(g.n()), format!("{}#1", g.name(0)));
+    }
+
+    #[test]
+    fn unroll_platform_replicates_the_cost_table() {
+        let mut p = Platform::uniform(2);
+        p.cost_table = Some(vec![vec![3], vec![5]]);
+        let p2 = unroll_platform(&p, 3);
+        let table = p2.cost_table.unwrap();
+        assert_eq!(table.len(), 6);
+        assert_eq!(table[0], table[2]);
+        assert_eq!(table[1], table[5]);
+        assert!(unroll_platform(&Platform::uniform(2), 3).cost_table.is_none());
+    }
+
+    #[test]
+    fn channel_depth_counts_overlapping_periods() {
+        // One message alive 10 cycles, admitted every 4: lifetimes of
+        // ceil(11/4) = 3 consecutive iterations overlap.
+        assert_eq!(channel_depth(&[(0, 10)], 4), 3);
+        // Instantaneous message: exactly one alive at a time.
+        assert_eq!(channel_depth(&[(5, 5)], 4), 1);
+        // Two disjoint messages inside one period.
+        assert_eq!(channel_depth(&[(0, 1), (3, 3)], 8), 1);
+    }
+
+    #[test]
+    fn buffer_depth_covers_a_two_core_relay() {
+        // a → b cross-core, consumer starts long after the producer
+        // finishes: many messages pile up per II.
+        let mut g = Dag::new();
+        let a = g.add_node("a", 2);
+        let b = g.add_node("b", 2);
+        g.add_edge(a, b, 1);
+        let plat = ResolvedPlatform::resolve(None, &g, 2);
+        let kernel = rigid_kernel(&g, &plat, &g.topo_order(), &[0, 1]);
+        let ii = kernel_ii(&kernel);
+        assert_eq!(ii, 2);
+        let depth = buffer_depth(&g, &kernel, ii);
+        assert!(depth >= 1);
+    }
+}

@@ -222,8 +222,12 @@ impl Default for PortfolioConfig {
 /// Version tag of the canonical request key (bump when the key layout or
 /// the set of result-affecting knobs changes). Carried in the header of
 /// every persistent cache file: a store written under a different key
-/// version is stale by definition and ignored on open.
-pub const KEY_VERSION: u64 = 4;
+/// version is stale by definition and ignored on open. Version 5
+/// introduced the pipeline mode words appended by
+/// [`pipeline::pipeline_request_key`](super::pipeline::pipeline_request_key):
+/// one shared cache namespace now holds both one-shot and pipeline
+/// solves, so stores written before the split must be invalidated.
+pub const KEY_VERSION: u64 = 5;
 
 /// Fixed length in words of the resolved-request tag that prefixes every
 /// canonical key ([`Knobs::cache_tag`] emits exactly this many words,
@@ -459,6 +463,19 @@ impl Portfolio {
     /// persistent-tier counters when a cache directory is configured).
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.stats()
+    }
+
+    /// L1/L2 lookup under a pre-computed canonical key — how
+    /// `sched::pipeline` rides this portfolio's cache tiers with its own
+    /// mode-suffixed keys.
+    pub(crate) fn cache_lookup(&self, key: &[u64]) -> Option<std::sync::Arc<CachedSolve>> {
+        self.cache.get(key)
+    }
+
+    /// Insert a reproducible solve under a pre-computed canonical key
+    /// (the pipeline-side counterpart of [`Portfolio::cache_lookup`]).
+    pub(crate) fn cache_store(&self, key: Vec<u64>, value: CachedSolve) {
+        self.cache.insert(key, value);
     }
 
     /// The canonical cache key `req` resolves to under this portfolio's
@@ -777,8 +794,9 @@ fn reduction_prefers(a: &Schedule, b: &Schedule) -> bool {
 }
 
 /// Full placement list in the schedule's `(core, start, node)` master
-/// order — the lexicographic component of the reduction order.
-fn placement_key(s: &Schedule) -> Vec<(usize, NodeId, Cycles, Cycles)> {
+/// order — the lexicographic component of the reduction order (also the
+/// deterministic tie-break of `sched::pipeline`'s seed reduction).
+pub(crate) fn placement_key(s: &Schedule) -> Vec<(usize, NodeId, Cycles, Cycles)> {
     s.iter().map(|p| (p.core, p.node, p.start, p.finish)).collect()
 }
 

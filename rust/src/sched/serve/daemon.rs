@@ -20,11 +20,25 @@
 //!   request is admitted with a pre-cancelled [`CancelToken`] and is
 //!   answered by the serial fallback (`"source": "cancelled"`).
 //! - `{"verb": "flush"}` — dispatch the queued window now.
+//! - `{"verb": "cancel", "id": ...}` — fire the named request's
+//!   [`CancelToken`] (every admission owns one). A still-queued request
+//!   is answered at the next dispatch boundary by the serial fallback
+//!   (`"source": "cancelled"`), exactly like a pre-cancelled admission;
+//!   an id this session never admitted gets an error response.
 //! - `{"verb": "stats"}` — emit the daemon counters (cache tiers, queue,
 //!   aggregated search stats, per-stage walls). Does **not** flush, so
 //!   `queue.depth` reports the requests currently awaiting dispatch.
 //! - `{"verb": "shutdown"}` — flush, answer everything, end the session.
 //!   EOF is an implicit `shutdown` (graceful drain, never dropped work).
+//!
+//! A request line with `"mode": "pipeline"` (surfaced by the CLI parser
+//! as [`ProblemSpec::pipeline`]) is answered with the steady-state
+//! pipeline report — `ii`, `latency`, buffer `depth`, the admissible
+//! `bound` — instead of a one-shot makespan; `"stream-depth"` declares
+//! the client's per-channel buffer capacity and adds `"fits"` to the
+//! response. Pipeline solves ride the same schedule cache under their
+//! own key suffix (never colliding with one-shot solves) and are
+//! dispatched at the same window boundaries.
 //!
 //! **Admission** is bounded by [`DaemonConfig::max_inflight`]: a solve
 //! line past the bound is answered *immediately* with
@@ -56,8 +70,11 @@
 use super::queue::{AdmissionQueue, QueueStats, RejectReason};
 use super::{BatchRequest, BatchSolver, ServeSource};
 use crate::graph::Dag;
+use crate::sched::pipeline::{solve_pipeline, PipelineReport, PipelineRequest};
 use crate::sched::portfolio::PortfolioConfig;
-use crate::sched::{Budget, CancelToken, Platform, SearchOptions, SearchStats, SolveRequest};
+use crate::sched::{
+    Budget, CancelToken, Platform, SearchOptions, SearchStats, SolveRequest, Termination,
+};
 use crate::util::json::Json;
 use std::collections::HashMap;
 use std::io::{self, BufRead, Write};
@@ -78,6 +95,12 @@ pub struct ProblemSpec {
     pub budget: Budget,
     pub platform: Option<Platform>,
     pub search: Option<SearchOptions>,
+    /// `"mode": "pipeline"` — answer with a steady-state pipeline report
+    /// (`ii`/`latency`/`depth`/`bound`) instead of a one-shot makespan.
+    pub pipeline: bool,
+    /// `"stream-depth"` — the client's per-channel buffer capacity; a
+    /// pipeline response reports `"fits"` (reported depth ≤ this).
+    pub stream_depth: Option<usize>,
 }
 
 /// Daemon knobs, all orthogonal to the solver's [`PortfolioConfig`].
@@ -137,9 +160,10 @@ pub struct SessionSummary {
 struct Admitted {
     id: String,
     spec: ProblemSpec,
-    /// Present when the request has a deadline (reaper arming) or came
-    /// in pre-cancelled.
-    cancel: Option<CancelToken>,
+    /// Every admission owns a token: it is armed with the reaper when
+    /// the request has a deadline, fired early by the `cancel` verb, and
+    /// pre-fired for `"cancelled": true` admissions.
+    cancel: CancelToken,
 }
 
 /// The deadline reaper: a thread sleeping until the nearest armed
@@ -284,6 +308,10 @@ impl Daemon {
         P: FnMut(&Json, usize) -> Result<ProblemSpec, String>,
     {
         let mut seen_ids: HashMap<String, usize> = HashMap::new();
+        // Token per admitted id, for the `cancel` verb. Kept for the
+        // whole session: cancelling an already-answered id is a no-op on
+        // an orphaned token, not an error (the races a client can't see).
+        let mut tokens: HashMap<String, CancelToken> = HashMap::new();
         let mut shutdown = false;
         for (idx, line) in input.lines().enumerate() {
             let line = line?;
@@ -304,13 +332,35 @@ impl Daemon {
                 match verb.as_str() {
                     Some("stats") => self.emit_stats(&mut output)?,
                     Some("flush") => self.flush_window(&mut output)?,
+                    Some("cancel") => match v.get("id") {
+                        Some(Json::Str(target)) => match tokens.get(target.as_str()) {
+                            Some(token) => {
+                                token.cancel();
+                                let ack = Json::obj(vec![
+                                    ("cancelled", Json::Bool(true)),
+                                    ("id", Json::Str(target.clone())),
+                                    ("verb", Json::Str("cancel".to_string())),
+                                ]);
+                                self.emit(&mut output, ack)?;
+                            }
+                            None => {
+                                let msg = format!("cancel: unknown id {target:?}");
+                                self.respond_error(&mut output, Some(target), lineno, &msg)?;
+                            }
+                        },
+                        _ => {
+                            let msg = "\"cancel\" needs a string \"id\" naming an admitted request";
+                            self.respond_error(&mut output, None, lineno, msg)?;
+                        }
+                    },
                     Some("shutdown") => {
                         self.flush_window(&mut output)?;
                         shutdown = true;
                     }
                     other => {
                         let msg = format!(
-                            "unknown verb {:?} (expected \"stats\", \"flush\" or \"shutdown\")",
+                            "unknown verb {:?} (expected \"stats\", \"flush\", \"cancel\" \
+                             or \"shutdown\")",
                             other.unwrap_or("<non-string>"),
                         );
                         self.respond_error(&mut output, None, lineno, &msg)?;
@@ -350,17 +400,13 @@ impl Daemon {
                     continue;
                 }
             };
-            let cancel = if pre_cancelled || spec.budget.deadline.is_some() {
-                let token = CancelToken::new();
-                if pre_cancelled {
-                    token.cancel();
-                }
-                Some(token)
-            } else {
-                None
-            };
-            match self.queue.admit(Admitted { id: id.clone(), spec, cancel }) {
+            let token = CancelToken::new();
+            if pre_cancelled {
+                token.cancel();
+            }
+            match self.queue.admit(Admitted { id: id.clone(), spec, cancel: token.clone() }) {
                 Ok(()) => {
+                    tokens.insert(id.clone(), token);
                     seen_ids.insert(id, lineno);
                 }
                 // A rejected id was never admitted: the client may
@@ -385,38 +431,63 @@ impl Daemon {
         self.totals.flushes += 1;
         let now = Instant::now();
         for a in &window {
-            if let (Some(token), Some(d)) = (&a.cancel, a.spec.budget.deadline) {
+            if let Some(d) = a.spec.budget.deadline {
                 // Overflow-proof: an absurd deadline simply isn't armed
                 // (the solver's own valve never fires either).
                 if let Some(due) =
                     d.checked_add(self.cfg.reaper_grace).and_then(|t| now.checked_add(t))
                 {
-                    self.reaper.arm(token.clone(), due);
+                    self.reaper.arm(a.cancel.clone(), due);
                 }
             }
         }
-        let requests: Vec<SolveRequest<'_>> = window
-            .iter()
-            .map(|a| {
-                let mut r = SolveRequest::new(&a.spec.g, a.spec.m).budget(a.spec.budget.clone());
-                if let Some(token) = &a.cancel {
-                    r = r.cancel(token.clone());
-                }
-                if let Some(p) = &a.spec.platform {
-                    r = r.platform(p.clone());
-                }
-                if let Some(s) = &a.spec.search {
-                    r = r.search(s.clone());
-                }
-                r
-            })
-            .collect();
-        let batch = BatchRequest { requests, workers: self.cfg.workers };
+        // One-shot requests go through the batch solver (window dedup,
+        // shared tokens); pipeline requests are solved one by one against
+        // the shared portfolio — they have their own cache suffix, and a
+        // window never mixes their reports with a sibling's.
+        let mut oneshot: Vec<SolveRequest<'_>> = Vec::new();
+        for a in &window {
+            if a.spec.pipeline {
+                continue;
+            }
+            let mut r = SolveRequest::new(&a.spec.g, a.spec.m)
+                .budget(a.spec.budget.clone())
+                .cancel(a.cancel.clone());
+            if let Some(p) = &a.spec.platform {
+                r = r.platform(p.clone());
+            }
+            if let Some(s) = &a.spec.search {
+                r = r.search(s.clone());
+            }
+            oneshot.push(r);
+        }
+        let batch = BatchRequest { requests: oneshot, workers: self.cfg.workers };
         let outcome = self.solver.solve_batch(&batch);
         drop(batch);
+        let piped: Vec<Option<PipelineReport>> = window
+            .iter()
+            .map(|a| {
+                if !a.spec.pipeline {
+                    return None;
+                }
+                let mut req = PipelineRequest::new(&a.spec.g, a.spec.m)
+                    .budget(a.spec.budget.clone())
+                    .cancel(a.cancel.clone());
+                if let Some(p) = &a.spec.platform {
+                    req = req.platform(p.clone());
+                }
+                Some(solve_pipeline(self.solver.portfolio(), &req))
+            })
+            .collect();
         self.reaper.disarm_all();
         self.wall += outcome.stats.wall;
-        for (a, served) in window.iter().zip(&outcome.reports) {
+        let mut reports = outcome.reports.iter();
+        for (a, rep) in window.iter().zip(&piped) {
+            if let Some(rep) = rep {
+                self.respond_pipeline(output, a, rep)?;
+                continue;
+            }
+            let served = reports.next().expect("one batch report per one-shot admission");
             match served.source {
                 ServeSource::Solved => {
                     self.totals.solved += 1;
@@ -437,6 +508,44 @@ impl Daemon {
             self.emit(output, resp)?;
         }
         Ok(())
+    }
+
+    /// The pipeline response line: sorted keys, no volatile values. A
+    /// live solve carries stage counters (`"source": "solved"`); a warm
+    /// key replays from the schedule cache (`"cache-hit"`); a fired
+    /// token answers `"cancelled"` like the one-shot fallback.
+    fn respond_pipeline<W: Write>(
+        &mut self,
+        output: &mut W,
+        a: &Admitted,
+        rep: &PipelineReport,
+    ) -> io::Result<()> {
+        let source = if matches!(rep.termination, Termination::Cancelled) {
+            self.totals.cancelled += 1;
+            "cancelled"
+        } else if rep.stats.stages.is_empty() {
+            self.totals.cache_hits += 1;
+            "cache-hit"
+        } else {
+            self.totals.solved += 1;
+            self.agg.absorb(&rep.stats);
+            self.agg.absorb_stages(&rep.stats.stages);
+            "solved"
+        };
+        let mut pairs = vec![
+            ("bound", Json::Num(rep.lower_bound as f64)),
+            ("depth", Json::Num(rep.buffer_depth as f64)),
+            ("explored", Json::Num(rep.stats.explored as f64)),
+        ];
+        if let Some(cap) = a.spec.stream_depth {
+            pairs.push(("fits", Json::Bool(rep.buffer_depth <= cap)));
+        }
+        pairs.push(("id", Json::Str(a.id.clone())));
+        pairs.push(("ii", Json::Num(rep.ii as f64)));
+        pairs.push(("latency", Json::Num(rep.latency as f64)));
+        pairs.push(("source", Json::Str(source.to_string())));
+        pairs.push(("verdict", Json::Str(rep.termination.as_str().to_string())));
+        self.emit(output, Json::obj(pairs))
     }
 
     /// The `stats` response: every daemon counter, volatile wall values
@@ -579,7 +688,8 @@ mod tests {
         )
     }
 
-    /// Test request vocabulary: `{"seed": N, "nodes": N, "cores": N}`.
+    /// Test request vocabulary: `{"seed": N, "nodes": N, "cores": N}`
+    /// plus the pipeline keys `"mode"` / `"stream-depth"`.
     fn parse_line(v: &Json, lineno: usize) -> Result<ProblemSpec, String> {
         let seed = v
             .get("seed")
@@ -593,6 +703,8 @@ mod tests {
             budget: Budget { deadline: None, node_limit: Some(300) },
             platform: None,
             search: None,
+            pipeline: matches!(v.get("mode").and_then(Json::as_str), Some("pipeline")),
+            stream_depth: v.get("stream-depth").and_then(Json::as_usize),
         })
     }
 
@@ -745,5 +857,57 @@ not json\n\
         assert_eq!(field(&lines[3], "id").as_str(), Some("ok"));
         assert_eq!(field(&lines[3], "source").as_str(), Some("solved"));
         assert_eq!(summary.totals.errors, 3);
+    }
+
+    #[test]
+    fn cancel_verb_fires_the_named_request() {
+        let mut daemon = quick_daemon(8);
+        let input = "\
+{\"id\":\"a\",\"seed\":1}\n\
+{\"verb\":\"cancel\",\"id\":\"a\"}\n\
+{\"verb\":\"cancel\",\"id\":\"ghost\"}\n\
+{\"verb\":\"cancel\"}\n\
+{\"verb\":\"shutdown\"}\n";
+        let (lines, summary) = run(&mut daemon, input);
+        assert_eq!(lines.len(), 4);
+        assert_eq!(field(&lines[0], "verb").as_str(), Some("cancel"));
+        assert_eq!(field(&lines[0], "cancelled"), &Json::Bool(true));
+        assert!(field(&lines[1], "error").as_str().unwrap().contains("unknown id"));
+        assert!(field(&lines[2], "error").as_str().unwrap().contains("needs a string"));
+        // The fired token turns the admitted solve into the fallback.
+        assert_eq!(field(&lines[3], "id").as_str(), Some("a"));
+        assert_eq!(field(&lines[3], "source").as_str(), Some("cancelled"));
+        assert_eq!(field(&lines[3], "verdict").as_str(), Some("cancelled"));
+        assert_eq!(summary.totals.cancelled, 1);
+        assert_eq!(summary.totals.errors, 2);
+    }
+
+    #[test]
+    fn pipeline_mode_reports_ii_depth_and_fit() {
+        let mut daemon = quick_daemon(8);
+        let input = "\
+{\"id\":\"p\",\"seed\":1,\"mode\":\"pipeline\",\"stream-depth\":64}\n\
+{\"id\":\"q\",\"seed\":1}\n\
+{\"verb\":\"flush\"}\n\
+{\"id\":\"p2\",\"seed\":1,\"mode\":\"pipeline\",\"stream-depth\":64}\n\
+{\"verb\":\"shutdown\"}\n";
+        let (lines, summary) = run(&mut daemon, input);
+        assert_eq!(lines.len(), 3);
+        let p = &lines[0];
+        assert_eq!(field(p, "source").as_str(), Some("solved"));
+        let ii = field(p, "ii").as_f64().unwrap();
+        let bound = field(p, "bound").as_f64().unwrap();
+        assert!(ii >= bound && bound >= 1.0, "ii={ii} bound={bound}");
+        assert!(field(p, "latency").as_f64().unwrap() >= ii);
+        assert_eq!(field(p, "fits"), &Json::Bool(true), "depth must fit 64 slots");
+        // The one-shot sibling of the same problem never shares the
+        // pipeline's cache line (distinct key suffix).
+        assert_eq!(field(&lines[1], "source").as_str(), Some("solved"));
+        // Resubmitting the pipeline request replays from the cache.
+        assert_eq!(field(&lines[2], "id").as_str(), Some("p2"));
+        assert_eq!(field(&lines[2], "source").as_str(), Some("cache-hit"));
+        assert_eq!(field(&lines[2], "ii").as_f64(), Some(ii));
+        assert_eq!(summary.totals.cache_hits, 1);
+        assert_eq!(summary.totals.solved, 2);
     }
 }

@@ -15,9 +15,22 @@
 //!   are scaled by a contention factor when several cores are active
 //!   (Table 3's Input layer runs 3.4× slower multi-core: all four cores
 //!   stream the input simultaneously over one bus).
+//!
+//! Under a heterogeneous [`Platform`] the replay prices compute per core
+//! (`plat.cost`) *and* routes the nominal Write/Read cost through the
+//! class × class communication factors (`plat.comm`) — a uniform
+//! platform replays byte-identically to no platform at all.
+//!
+//! Besides the one-shot replay, [`simulate_stream`] replays a
+//! K-iteration *inference stream* of a `sched::pipeline` kernel
+//! (scheduled starts as release times, one DAG copy per iteration) and
+//! measures the steady-state period and the per-channel message
+//! high-water mark — the executable cross-check of the pipeline's
+//! `II`/buffer-depth claims.
 
 use crate::graph::{Cycles, Dag, NodeId};
-use crate::sched::{derive_programs, CoreStep, ResolvedPlatform, Schedule};
+use crate::sched::pipeline::{unroll_dag, unroll_platform};
+use crate::sched::{derive_programs, CoreStep, Platform, ResolvedPlatform, Schedule};
 use crate::util::rng::SplitMix64;
 use std::collections::HashMap;
 
@@ -106,15 +119,42 @@ pub fn simulate(g: &Dag, schedule: &Schedule, machine: &Machine) -> SimReport {
 
 /// Platform-aware simulation: a compute step on core `c` costs
 /// `plat.cost(node, c)` (before jitter/contention) instead of the bare
-/// WCET, matching what a platform-aware scheduler promised. Communication
-/// costs stay with the machine's `comm_cycles` model — the simulator
-/// prices payload bytes, not edge latencies.
+/// WCET, matching what a platform-aware scheduler promised. The machine's
+/// `comm_cycles` model prices payload bytes per Write/Read operator, and
+/// that nominal cost is then routed through the platform's class × class
+/// communication factors (`plat.comm(src, dst, ·)`) — the uniform
+/// platform leaves it untouched, byte for byte.
 pub fn simulate_on(
     g: &Dag,
     plat: &ResolvedPlatform,
     schedule: &Schedule,
     machine: &Machine,
 ) -> SimReport {
+    run_sim(g, plat, schedule, machine, false).0
+}
+
+/// The shared event loop. `honor_starts` selects between the two replay
+/// semantics:
+///
+/// * `false` (the one-shot [`simulate_on`] contract): every step fires as
+///   soon as the flag protocol allows (ASAP, work-conserving) — scheduled
+///   start times are ignored, so a zero-comm replay can *beat* the
+///   schedule's makespan;
+/// * `true` (the [`simulate_stream`] contract): a compute step treats its
+///   scheduled start as a *release time* (`max(core clock, start)`),
+///   which is what makes a pipelined stream admit iterations at exactly
+///   the initiation interval instead of racing ahead of it.
+///
+/// Also returns the high-water mark of in-flight (written, not yet read)
+/// messages over all channels — the measured counterpart of
+/// `sched::pipeline`'s reported buffer depth.
+fn run_sim(
+    g: &Dag,
+    plat: &ResolvedPlatform,
+    schedule: &Schedule,
+    machine: &Machine,
+    honor_starts: bool,
+) -> (SimReport, usize) {
     let programs = derive_programs(g, schedule);
     let m = programs.len();
     let mut pc = vec![0usize; m];
@@ -133,6 +173,7 @@ pub fn simulate_on(
     let mut node_cycles: HashMap<NodeId, Cycles> = HashMap::new();
     let mut total_wait = 0u64;
     let mut write_wait = 0u64;
+    let mut max_unread = 0usize;
     let mut rng = SplitMix64::new(machine.seed ^ 0x5157);
 
     let jittered = |rng: &mut SplitMix64, base: Cycles, m_cfg: &Machine| -> Cycles {
@@ -155,7 +196,7 @@ pub fn simulate_on(
                 continue;
             }
             match &programs[c].steps[pc[c]] {
-                CoreStep::Compute { node, .. } => {
+                CoreStep::Compute { node, start: sched_start, .. } => {
                     let mut cost = jittered(&mut rng, plat.cost(*node, c), machine);
                     // Copy-class contention: any other core still running?
                     let others_busy = (0..m).any(|o| {
@@ -167,15 +208,19 @@ pub fn simulate_on(
                     {
                         cost = (cost as f64 * machine.copy_contention).round() as Cycles;
                     }
+                    let release = if honor_starts { *sched_start } else { 0 };
+                    let begin = clock[c].max(release);
+                    let wait = begin - clock[c];
                     let start = clock[c];
-                    clock[c] += cost;
+                    clock[c] = begin + cost;
                     timeline[c].push(TimelineEntry {
                         desc: g.name(*node).to_string(),
                         node: Some(*node),
                         start,
                         end: clock[c],
-                        wait: 0,
+                        wait,
                     });
+                    total_wait += wait;
                     let e = node_cycles.entry(*node).or_insert(0);
                     *e = (*e).max(cost);
                     pc[c] += 1;
@@ -197,11 +242,16 @@ pub fn simulate_on(
                         };
                         let ready_at = freed_at.max(clock[c]);
                         let wait = ready_at - clock[c];
-                        let cost =
-                            jittered(&mut rng, (machine.comm_cycles)(machine.payload(comm.src)), machine);
+                        let base = (machine.comm_cycles)(machine.payload(comm.src));
+                        let cost = jittered(
+                            &mut rng,
+                            plat.comm(comm.src_core, comm.dst_core, base),
+                            machine,
+                        );
                         let start = clock[c];
                         clock[c] = ready_at + cost;
                         chan.write_done.push(clock[c]);
+                        max_unread = max_unread.max(chan.write_done.len() - chan.read_done.len());
                         timeline[c].push(TimelineEntry {
                             desc: format!("Write {}", comm.tag()),
                             node: None,
@@ -223,8 +273,12 @@ pub fn simulate_on(
                     if readable {
                         let ready_at = chan.write_done[comm.seq].max(clock[c]);
                         let wait = ready_at - clock[c];
-                        let cost =
-                            jittered(&mut rng, (machine.comm_cycles)(machine.payload(comm.src)), machine);
+                        let base = (machine.comm_cycles)(machine.payload(comm.src));
+                        let cost = jittered(
+                            &mut rng,
+                            plat.comm(comm.src_core, comm.dst_core, base),
+                            machine,
+                        );
                         let start = clock[c];
                         clock[c] = ready_at + cost;
                         chan.read_done.push(clock[c]);
@@ -253,13 +307,95 @@ pub fn simulate_on(
         }
     }
 
-    SimReport {
+    let report = SimReport {
         makespan: clock.into_iter().max().unwrap_or(0),
         per_core: timeline,
         node_cycles,
         total_wait,
         write_wait,
+    };
+    (report, max_unread)
+}
+
+/// Outcome of a K-iteration stream replay ([`simulate_stream`]).
+#[derive(Debug, Clone)]
+pub struct StreamOutcome {
+    /// Completion time of each iteration: the latest compute finish among
+    /// that iteration's node copies.
+    pub completions: Vec<Cycles>,
+    /// Measured steady-state period — the completion delta between the
+    /// last two iterations (0 with fewer than 2 iterations). For a valid
+    /// rigid pipeline replayed WCET-exactly this equals the initiation
+    /// interval, making measured throughput exactly `1 / II`.
+    pub steady_period: Cycles,
+    /// High-water mark of in-flight (written, not yet read) messages on
+    /// any one channel — must stay within the pipeline's reported
+    /// [`buffer_depth`](crate::sched::PipelineReport::buffer_depth).
+    pub max_channel_occupancy: usize,
+    /// Full replay report of the unrolled stream.
+    pub report: SimReport,
+}
+
+/// Replay a K-iteration inference stream of a pipeline kernel: iteration
+/// `k` executes node copy `k · g.n() + v` on the kernel's core for `v`,
+/// released at the kernel start shifted by `k · ii` (scheduled starts are
+/// *release times* here — the stream must not race ahead of the
+/// initiation interval, or measured throughput would be meaningless).
+/// Payload bytes and copy-class markers of the per-iteration machine are
+/// replicated to every copy; an explicit platform cost table is
+/// replicated via [`unroll_platform`].
+///
+/// Validates `sched::pipeline` end to end: with `machine` set to the
+/// WCET-exact replay machine and `channel_capacity` at the reported
+/// buffer depth, completions advance by exactly `ii` per iteration and
+/// no channel ever holds more messages than the reported depth
+/// (`tests/pipeline_determinism.rs` pins both).
+pub fn simulate_stream(
+    g: &Dag,
+    platform: Option<&Platform>,
+    kernel: &Schedule,
+    ii: Cycles,
+    iterations: usize,
+    machine: &Machine,
+) -> StreamOutcome {
+    assert!(iterations >= 1, "stream needs at least one iteration");
+    assert!(ii >= 1, "initiation interval must be positive");
+    let n = g.n();
+    let gk = unroll_dag(g, iterations);
+    let plat_k = platform.map(|p| unroll_platform(p, iterations));
+    let plat = ResolvedPlatform::resolve(plat_k.as_ref(), &gk, kernel.m.max(1));
+    let mut sched = Schedule::new(kernel.m.max(1));
+    for k in 0..iterations {
+        let off = (k as u64) * ii;
+        for p in kernel.iter() {
+            sched.place_raw(p.node + k * n, p.core, p.start + off, p.finish + off);
+        }
     }
+    let mut mach = machine.clone();
+    for k in 1..iterations {
+        for (&v, &bytes) in &machine.payload_bytes {
+            mach.payload_bytes.insert(v + k * n, bytes);
+        }
+        for &v in &machine.copy_nodes {
+            mach.copy_nodes.push(v + k * n);
+        }
+    }
+    let (report, max_channel_occupancy) = run_sim(&gk, &plat, &sched, &mach, true);
+    let mut completions = vec![0u64; iterations];
+    for row in &report.per_core {
+        for entry in row {
+            if let Some(v) = entry.node {
+                let k = v / n;
+                completions[k] = completions[k].max(entry.end);
+            }
+        }
+    }
+    let steady_period = if iterations >= 2 {
+        completions[iterations - 1] - completions[iterations - 2]
+    } else {
+        0
+    };
+    StreamOutcome { completions, steady_period, max_channel_occupancy, report }
 }
 
 /// Simulate the serial (single-core) execution of the whole DAG — the
@@ -426,6 +562,82 @@ mod tests {
         // The uniform wrapper stays byte-identical to the old behavior.
         let ru = simulate(&g, &f, &replay_machine());
         assert_eq!(ru.makespan, 8);
+    }
+
+    #[test]
+    fn uniform_platform_comm_replay_is_byte_identical() {
+        // The comm-routing satellite: pricing Write/Read through
+        // `plat.comm` must leave the uniform replay untouched, timeline
+        // entry for timeline entry, even with nonzero payload costs.
+        use crate::sched::Platform;
+        let mut g = crate::graph::Dag::new();
+        let a = g.add_node("a", 2);
+        let b = g.add_node("b", 3);
+        g.add_edge(a, b, 5);
+        let mut s = Schedule::new(2);
+        s.place(&g, a, 0, 0);
+        s.place(&g, b, 1, 7);
+        let mut machine = Machine::exact(fixed_comm);
+        machine.payload_bytes.insert(a, 16);
+        let bare = simulate(&g, &s, &machine);
+        let plat = ResolvedPlatform::resolve(Some(&Platform::uniform(2)), &g, 2);
+        let uni = simulate_on(&g, &plat, &s, &machine);
+        assert_eq!(bare.makespan, uni.makespan);
+        assert_eq!(bare.total_wait, uni.total_wait);
+        assert_eq!(bare.write_wait, uni.write_wait);
+        let flat = |r: &SimReport| -> Vec<(String, Cycles, Cycles, Cycles)> {
+            r.per_core
+                .iter()
+                .flatten()
+                .map(|t| (t.desc.clone(), t.start, t.end, t.wait))
+                .collect()
+        };
+        assert_eq!(flat(&bare), flat(&uni));
+    }
+
+    #[test]
+    fn comm_factors_scale_write_and_read_costs() {
+        // Nominal speeds but a 2x class-to-class comm factor: only the
+        // Write/Read operators slow down. Baseline topology replays at
+        // makespan 11 (see comm_cost_appears_in_timeline); doubling the
+        // comm cost 3 -> 6 moves it to 2+6=8 (write), read 8..14, b 14..17.
+        use crate::sched::{Platform, SPEED_SCALE};
+        let mut g = crate::graph::Dag::new();
+        let a = g.add_node("a", 2);
+        let b = g.add_node("b", 3);
+        g.add_edge(a, b, 5);
+        let mut s = Schedule::new(2);
+        s.place(&g, a, 0, 0);
+        s.place(&g, b, 1, 7);
+        let mut machine = Machine::exact(fixed_comm);
+        machine.payload_bytes.insert(a, 16);
+        let mut p = Platform::uniform(2);
+        p.comm_factors = vec![vec![2 * SPEED_SCALE]];
+        let plat = ResolvedPlatform::resolve(Some(&p), &g, 2);
+        let r = simulate_on(&g, &plat, &s, &machine);
+        assert_eq!(r.makespan, 17);
+    }
+
+    #[test]
+    fn stream_replay_paces_at_the_initiation_interval() {
+        // A two-stage kernel (a on core 0, b on core 1, span 3) streamed
+        // for six iterations completes one inference every II cycles.
+        let mut g = crate::graph::Dag::new();
+        let a = g.add_node("a", 2);
+        let b = g.add_node("b", 3);
+        g.add_edge(a, b, 1);
+        let mut kernel = Schedule::new(2);
+        kernel.place(&g, a, 0, 0);
+        kernel.place(&g, b, 1, 3);
+        let mut machine = replay_machine();
+        machine.channel_capacity = 2;
+        let out = simulate_stream(&g, None, &kernel, 3, 6, &machine);
+        assert_eq!(out.completions.len(), 6);
+        for k in 1..6 {
+            assert_eq!(out.completions[k] - out.completions[k - 1], 3);
+        }
+        assert_eq!(out.steady_period, 3);
+        assert!(out.max_channel_occupancy <= 2);
     }
 
     #[test]

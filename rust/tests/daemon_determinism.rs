@@ -47,6 +47,8 @@ fn parse_line(v: &Json, lineno: usize) -> Result<ProblemSpec, String> {
         budget: Budget { deadline: None, node_limit: Some(300) },
         platform: None,
         search: None,
+        pipeline: matches!(v.get("mode").and_then(Json::as_str), Some("pipeline")),
+        stream_depth: v.get("stream-depth").and_then(Json::as_usize),
     })
 }
 
@@ -169,6 +171,37 @@ fn golden_session_covers_every_response_kind_in_order() {
     assert_eq!(field(&lines[7], "id").as_str(), Some("replay"));
     assert_eq!(field(&lines[7], "source").as_str(), Some("cache-hit"));
     assert_eq!(field(&lines[7], "makespan"), field(&lines[2], "makespan"));
+}
+
+/// The `cancel` verb and the pipeline mode ride the same determinism
+/// contract as every other response kind: the ack, the fallback answer
+/// for the fired token, the unknown-id error and the pipeline report
+/// are byte-identical at 1, 2 and 8 workers.
+#[test]
+fn cancel_and_pipeline_responses_replay_byte_identical() {
+    let session = "\
+{\"id\":\"a\",\"seed\":1}
+{\"id\":\"p\",\"seed\":2,\"mode\":\"pipeline\",\"stream-depth\":8}
+{\"verb\":\"cancel\",\"id\":\"a\"}
+{\"verb\":\"cancel\",\"id\":\"ghost\"}
+{\"verb\":\"shutdown\"}
+";
+    let base = run_session(1, 4, session);
+    for workers in [2, 8] {
+        assert_eq!(base, run_session(workers, 4, session), "diverged at {workers} workers");
+    }
+    let lines: Vec<Json> = base.lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert_eq!(lines.len(), 4, "transcript was:\n{base}");
+    assert_eq!(field(&lines[0], "verb").as_str(), Some("cancel"));
+    assert_eq!(field(&lines[0], "cancelled"), &Json::Bool(true));
+    assert!(field(&lines[1], "error").as_str().unwrap().contains("unknown id"));
+    assert_eq!(field(&lines[2], "source").as_str(), Some("cancelled"), "a was cancelled");
+    let p = &lines[3];
+    assert_eq!(field(p, "id").as_str(), Some("p"));
+    let ii = field(p, "ii").as_f64().unwrap();
+    assert!(ii >= field(p, "bound").as_f64().unwrap());
+    assert!(field(p, "latency").as_f64().unwrap() >= ii);
+    assert!(matches!(field(p, "fits"), Json::Bool(_)), "fits is a boolean verdict");
 }
 
 #[test]

@@ -1,0 +1,151 @@
+//! The `sched::pipeline` subsystem's contracts, pinned end to end:
+//!
+//! - **Determinism**: the full `PipelineReport` (kernel placements
+//!   included) is byte-identical at 1, 2 and 8 workers on the paper
+//!   example and three paper-scale 50-node instances.
+//! - **Admissibility**: the reported initiation interval meets the
+//!   per-core load bound and the recurrence bound for every instance.
+//! - **Executable cross-validation**: `sim::simulate_stream` replays an
+//!   8-iteration stream of each kernel and measures steady-state
+//!   throughput of exactly `1 / II`, with no channel ever holding more
+//!   in-flight messages than the reported buffer depth — and the stream
+//!   is unchanged when buffers are capped at exactly that depth.
+//! - **Cache isolation**: a pipeline request's cache key strictly
+//!   extends the one-shot key of the same problem, so uniform-platform
+//!   pipeline solves never collide with one-shot solves (and the exact
+//!   flag keys separately).
+
+use acetone::daggen::{generate, DagGenConfig};
+use acetone::graph::{paper_example_dag, Dag};
+use acetone::sched::pipeline::{load_bound, recurrence_bound};
+use acetone::sched::portfolio::PortfolioConfig;
+use acetone::sched::{PipelineReport, PipelineRequest, PipelineSolver, Platform, SolveRequest};
+use acetone::sim::{replay_machine, simulate_stream};
+use std::fmt::Write as _;
+
+fn solver_with(workers: usize) -> PipelineSolver {
+    PipelineSolver::new(PortfolioConfig {
+        workers,
+        root_target: 6,
+        hybrid_node_limit: Some(200),
+        ..PortfolioConfig::default()
+    })
+}
+
+/// The pinned instances: the paper's example DAG plus three §4.1
+/// paper-scale 50-node graphs.
+fn cases() -> Vec<(String, Dag)> {
+    let mut v = vec![("paper-example".to_string(), paper_example_dag())];
+    for seed in 1u64..=3 {
+        v.push((format!("paper50-seed{seed}"), generate(&DagGenConfig::paper(50), seed)));
+    }
+    v
+}
+
+/// A canonical rendering of everything a client can observe in a
+/// report: scalar fields, verdict word, and every kernel placement in
+/// the schedule's deterministic iteration order. No wall-clock values.
+fn render(rep: &PipelineReport) -> String {
+    let mut s = format!(
+        "ii={} bound={} latency={} depth={} verdict={}\n",
+        rep.ii,
+        rep.lower_bound,
+        rep.latency,
+        rep.buffer_depth,
+        rep.termination.as_str()
+    );
+    for p in rep.kernel.iter() {
+        writeln!(s, "v{} c{} {}..{}", p.node, p.core, p.start, p.finish).unwrap();
+    }
+    s
+}
+
+#[test]
+fn reports_are_byte_identical_at_1_2_8_workers() {
+    for (label, g) in cases() {
+        for m in [2, 4] {
+            let base = render(&solver_with(1).solve(&PipelineRequest::new(&g, m)));
+            for workers in [2, 8] {
+                let other = render(&solver_with(workers).solve(&PipelineRequest::new(&g, m)));
+                assert_eq!(base, other, "{label} m={m} diverged at {workers} workers");
+            }
+        }
+    }
+}
+
+#[test]
+fn certified_ii_meets_the_admissible_bounds() {
+    for (label, g) in cases() {
+        for m in [1, 2, 4] {
+            let rep = solver_with(2).solve(&PipelineRequest::new(&g, m));
+            let plat = PipelineRequest::new(&g, m).resolved_platform();
+            assert!(rep.ii >= load_bound(&g, &plat), "{label} m={m}: ii under the load bound");
+            assert!(
+                rep.ii >= recurrence_bound(&g, &plat),
+                "{label} m={m}: ii under the recurrence bound"
+            );
+            assert_eq!(rep.lower_bound, load_bound(&g, &plat).max(recurrence_bound(&g, &plat)));
+            assert!(rep.ii <= rep.latency, "{label} m={m}: one iteration can't beat its own span");
+        }
+    }
+}
+
+#[test]
+fn stream_replay_measures_throughput_one_over_ii_within_buffer_depth() {
+    let iters = 8;
+    for (label, g) in cases() {
+        for m in [2, 4] {
+            let rep = solver_with(2).solve(&PipelineRequest::new(&g, m));
+            // Generous buffers first: the capacity gate never interferes,
+            // so the measured high-water mark is the stream's real demand.
+            let mut machine = replay_machine();
+            machine.channel_capacity = 1024;
+            let out = simulate_stream(&g, None, &rep.kernel, rep.ii, iters, &machine);
+            for k in 1..iters {
+                assert_eq!(
+                    out.completions[k] - out.completions[k - 1],
+                    rep.ii,
+                    "{label} m={m}: iteration {k} did not complete II after its predecessor"
+                );
+            }
+            assert_eq!(out.steady_period, rep.ii, "{label} m={m}");
+            assert!(
+                out.max_channel_occupancy <= rep.buffer_depth,
+                "{label} m={m}: measured occupancy {} exceeds reported depth {}",
+                out.max_channel_occupancy,
+                rep.buffer_depth
+            );
+            // And the reported depth itself suffices: buffers capped at
+            // exactly that depth leave the whole stream unchanged.
+            let mut tight = replay_machine();
+            tight.channel_capacity = rep.buffer_depth.max(1);
+            let out2 = simulate_stream(&g, None, &rep.kernel, rep.ii, iters, &tight);
+            assert_eq!(
+                out2.completions, out.completions,
+                "{label} m={m}: depth-bounded buffers changed the stream"
+            );
+        }
+    }
+}
+
+#[test]
+fn pipeline_cache_keys_never_collide_with_one_shot_solves() {
+    let g = paper_example_dag();
+    let solver = solver_with(2);
+    for m in [2, 3] {
+        // An explicitly-uniform platform resolves to the platform-free
+        // encoding on both sides — the mode words still keep the keys
+        // apart (no cross-mode cache hits).
+        let uni = Platform::uniform(m);
+        let pkey = solver.request_key(&PipelineRequest::new(&g, m).platform(uni.clone()));
+        let skey = solver.portfolio().request_key(&SolveRequest::new(&g, m).platform(uni));
+        assert!(pkey.len() > skey.len(), "m={m}: pipeline key must extend the one-shot key");
+        assert_eq!(&pkey[..skey.len()], &skey[..], "m={m}: shared canonical prefix");
+        assert_ne!(pkey, skey, "m={m}");
+        // The exact flag is part of the key: certified and heuristic
+        // pipeline solves cache separately.
+        let ekey = solver.request_key(&PipelineRequest::new(&g, m).exact(true));
+        let hkey = solver.request_key(&PipelineRequest::new(&g, m));
+        assert_ne!(ekey, hkey, "m={m}: exact flag must be keyed");
+    }
+}
