@@ -14,8 +14,8 @@ use acetone::sched::dsh::Dsh;
 use acetone::sched::portfolio::{Portfolio, PortfolioConfig};
 use acetone::sched::serve::{BatchRequest, BatchSolver, Daemon, DaemonConfig, ProblemSpec};
 use acetone::sched::{
-    check_valid, derive_programs, prune_redundant, Budget, PipelineRequest, PipelineSolver,
-    Platform, Scheduler, SearchOptions, SolveReport, SolveRequest, SPEED_SCALE,
+    check_valid, derive_programs, prune_redundant, Budget, CpGlobals, CpOptions, PipelineRequest,
+    PipelineSolver, Platform, Scheduler, SearchOptions, SolveReport, SolveRequest, SPEED_SCALE,
 };
 use acetone::sim::{replay_machine, simulate};
 use acetone::util::bench::{bench, write_json, BenchStats};
@@ -116,6 +116,23 @@ fn main() {
     }));
     record(bench("cp n=40 m=6 (10k budget, learn-on)", 1, 5, || {
         Scheduler::solve(&cp_hard, &cp_on).schedule.makespan()
+    }));
+    // Same hard instance with the global scheduling propagators on: the
+    // per-node propagation is dearer (edge-finding is O(k²) per core),
+    // so the wall-clock pair shows the cost side; the SearchStats
+    // comparison printed after the table shows what the extra pruning
+    // bought. Node counts are not monotone — tighter start bounds also
+    // steer the branching heuristic — so the comparison is reported,
+    // not asserted (optimum equality is asserted in the test suites).
+    let cp_globals_on = SolveRequest::new(&g40s, 6).node_limit(10_000).cp(CpOptions {
+        globals: Some(CpGlobals { disjunctive: true, binpacking: true }),
+        ..CpOptions::default()
+    });
+    record(bench("cp n=40 m=6 (10k budget, globals-off)", 1, 5, || {
+        Scheduler::solve(&cp_hard, &cp_off).schedule.makespan()
+    }));
+    record(bench("cp n=40 m=6 (10k budget, globals-on)", 1, 5, || {
+        Scheduler::solve(&cp_hard, &cp_globals_on).schedule.makespan()
     }));
     let bnb_hard = ChouChung::default();
     let bnb_off = SolveRequest::new(&g40, 6).node_limit(30_000);
@@ -225,6 +242,7 @@ fn main() {
             budget: Budget { deadline: None, node_limit: Some(200) },
             platform: None,
             search: None,
+            cp_globals: None,
             pipeline: false,
             stream_depth: None,
         })
@@ -275,6 +293,21 @@ fn main() {
         "bnb n=40 m=6 @30k",
         &bnb_hard.solve(&bnb_off),
         &bnb_hard.solve(&bnb_on),
+    );
+
+    // Same machine-independent report for the global propagators (one
+    // solve per side; "fewer" can legitimately be negative — see above).
+    println!("\n# global-propagator effect on the hard instance (SearchStats)\n");
+    let base = Scheduler::solve(&cp_hard, &cp_off);
+    let glob = Scheduler::solve(&cp_hard, &cp_globals_on);
+    let fewer = 100.0 * (1.0 - glob.stats.explored as f64 / base.stats.explored.max(1) as f64);
+    println!(
+        "cp  n=40 m=6 @10k: globals-off explored={} makespan={} | globals-on explored={} \
+         ({fewer:+.1}% fewer) makespan={}",
+        base.stats.explored,
+        base.schedule.makespan(),
+        glob.stats.explored,
+        glob.schedule.makespan(),
     );
 
     let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");

@@ -28,8 +28,8 @@ use acetone::sched::serve::{
 use acetone::sched::pipeline::solve_pipeline;
 use acetone::sched::{
     bnb::ChouChung, cp::CpSolver, dsh::Dsh, hlfet::Hlfet, hybrid::Hybrid, ish::Ish,
-    portfolio::Portfolio, Budget, CancelToken, PipelineRequest, PipelineSolver, Platform,
-    Scheduler, SearchOptions, SolveRequest, Termination, SPEED_SCALE,
+    portfolio::Portfolio, Budget, CancelToken, CpGlobals, CpOptions, PipelineRequest,
+    PipelineSolver, Platform, Scheduler, SearchOptions, SolveRequest, Termination, SPEED_SCALE,
 };
 use acetone::util::json::Json;
 use acetone::wcet::CostModel;
@@ -70,6 +70,7 @@ codegen --model M --cores C --out DIR [--algo A] [--timeout S] [--node-limit N]
     emit the ACETONE-style parallel C project
 serve --requests FILE.jsonl [--cores C] [--workers W] [--cache-dir DIR]
       [--timeout S] [--node-limit N] [--nogood-capacity K]
+      [--cp-disjunctive true] [--cp-binpacking true]
       [--listen SOCKET|-] [--max-inflight N] [--cache-budget BYTES]
     batch-solve a JSONL request stream through the portfolio: requests
     are deduplicated by canonical key, fanned out over one worker pool
@@ -77,9 +78,12 @@ serve --requests FILE.jsonl [--cores C] [--workers W] [--cache-dir DIR]
     (verdicts included) persist across processes. Each line is one JSON
     object using the schedule flags as keys: {\"model\": \"lenet5\"} or
     {\"nodes\": 50, \"seed\": 1, \"density\": 0.1}, plus optional
-    \"cores\", \"node-limit\", \"timeout\", \"nogood-capacity\"
-    overriding the CLI defaults (a no-good capacity > 0 turns on
-    conflict-driven learning in the exact stages for that request).
+    \"cores\", \"node-limit\", \"timeout\", \"nogood-capacity\",
+    \"cp-disjunctive\", \"cp-binpacking\" overriding the CLI defaults
+    (a no-good capacity > 0 turns on conflict-driven learning in the
+    exact stages for that request; the cp-* booleans switch on the CP
+    stage's global scheduling propagators — disjunctive edge-finding
+    and the bin-packing load bound — for that request).
     A heterogeneous platform is described per line by \"speeds\" (one
     positive factor per core, 1.0 = nominal, larger = faster),
     \"core-classes\" (core -> class map) and \"comm-matrix\" (square
@@ -478,6 +482,9 @@ struct ServeSpec {
     /// `speeds` / `core-classes` / `comm-matrix` keys: the heterogeneous
     /// platform of this request, validated with the line number.
     platform: Option<Platform>,
+    /// `cp-disjunctive` / `cp-binpacking` keys: the CP stage's global
+    /// scheduling propagators for this request (`None` = both off).
+    cp_globals: Option<CpGlobals>,
     /// `mode` key: `"pipeline"` answers with a steady-state pipeline
     /// report (ii/latency/depth) instead of a one-shot makespan.
     pipeline: bool,
@@ -492,6 +499,8 @@ struct ServeDefaults {
     timeout: u64,
     node_limit: Option<u64>,
     nogood_capacity: Option<u64>,
+    cp_disjunctive: bool,
+    cp_binpacking: bool,
 }
 
 impl ServeDefaults {
@@ -501,6 +510,8 @@ impl ServeDefaults {
             timeout: opts.u64("timeout", 10)?,
             node_limit: opts.opt_parsed("node-limit")?,
             nogood_capacity: opts.opt_parsed("nogood-capacity")?,
+            cp_disjunctive: opts.parsed("cp-disjunctive", false)?,
+            cp_binpacking: opts.parsed("cp-binpacking", false)?,
         })
     }
 }
@@ -517,8 +528,20 @@ fn spec_to_problem(spec: ServeSpec) -> ProblemSpec {
             nogood_capacity: Some(cap as usize),
             ..SearchOptions::default()
         }),
+        cp_globals: spec.cp_globals,
         pipeline: spec.pipeline,
         stream_depth: spec.stream_depth,
+    }
+}
+
+/// A boolean field of a serve request line, hard-erroring with the line
+/// number on anything that is not a JSON `true`/`false` — the serve
+/// request vocabulary never coerces (a string "true" stays an error).
+fn json_bool(v: &Json, key: &str, lineno: usize) -> Result<Option<bool>> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(Json::Bool(b)) => Ok(Some(*b)),
+        Some(_) => bail!("requests line {lineno}: {key:?} must be a boolean"),
     }
 }
 
@@ -661,6 +684,11 @@ fn parse_serve_line(v: &Json, defaults: &ServeDefaults, lineno: usize) -> Result
         node_limit: json_u64(v, "node-limit", lineno)?.or(defaults.node_limit),
     };
     let nogood_capacity = json_u64(v, "nogood-capacity", lineno)?.or(defaults.nogood_capacity);
+    let disjunctive =
+        json_bool(v, "cp-disjunctive", lineno)?.unwrap_or(defaults.cp_disjunctive);
+    let binpacking = json_bool(v, "cp-binpacking", lineno)?.unwrap_or(defaults.cp_binpacking);
+    let cp_globals =
+        (disjunctive || binpacking).then_some(CpGlobals { disjunctive, binpacking });
     let platform = json_platform(v, m, lineno)?;
     let pipeline = match v.get("mode") {
         None => false,
@@ -669,7 +697,18 @@ fn parse_serve_line(v: &Json, defaults: &ServeDefaults, lineno: usize) -> Result
         Some(_) => bail!("requests line {lineno}: \"mode\" must be \"solve\" or \"pipeline\""),
     };
     let stream_depth = json_u64(v, "stream-depth", lineno)?.map(|d| d as usize);
-    Ok(ServeSpec { id, cancelled, g, m, budget, nogood_capacity, platform, pipeline, stream_depth })
+    Ok(ServeSpec {
+        id,
+        cancelled,
+        g,
+        m,
+        budget,
+        nogood_capacity,
+        platform,
+        cp_globals,
+        pipeline,
+        stream_depth,
+    })
 }
 
 /// Read a whole `serve` request stream (batch mode). Blank lines and `#`
@@ -733,6 +772,9 @@ fn serve_cmd(opts: &Opts) -> Result<()> {
                 nogood_capacity: Some(cap as usize),
                 ..SearchOptions::default()
             });
+        }
+        if let Some(gl) = spec.cp_globals {
+            req = req.cp(CpOptions { globals: Some(gl), ..CpOptions::default() });
         }
         batch = batch.push(req);
     }
@@ -962,6 +1004,33 @@ mod tests {
         assert_eq!(specs[1].budget.node_limit, Some(9));
         assert_eq!(specs[1].budget.deadline, Some(Duration::from_secs(1)));
         assert_eq!(specs[1].nogood_capacity, Some(9), "per-line override wins");
+    }
+
+    #[test]
+    fn serve_stream_parses_cp_global_flags() {
+        // CLI default: disjunctive on for every line unless overridden.
+        let args = ["--cp-disjunctive", "true"].map(String::from);
+        let opts = Opts::parse(&args).unwrap();
+        let text = "{\"nodes\": 8, \"seed\": 1}\n\
+                    {\"nodes\": 8, \"seed\": 2, \"cp-disjunctive\": false, \
+                     \"cp-binpacking\": true}\n\
+                    {\"nodes\": 8, \"seed\": 3, \"cp-disjunctive\": false}\n";
+        let specs = parse_serve_stream(text, &opts).unwrap();
+        assert_eq!(
+            specs[0].cp_globals,
+            Some(CpGlobals { disjunctive: true, binpacking: false }),
+            "CLI default applies"
+        );
+        assert_eq!(
+            specs[1].cp_globals,
+            Some(CpGlobals { disjunctive: false, binpacking: true }),
+            "per-line override wins"
+        );
+        assert_eq!(specs[2].cp_globals, None, "both off collapses to the config default");
+
+        let bad = "{\"nodes\": 8, \"cp-binpacking\": \"yes\"}\n";
+        let err = parse_serve_stream(bad, &Opts::parse(&[]).unwrap()).unwrap_err().to_string();
+        assert!(err.contains("cp-binpacking"), "boolean type error names the key: {err}");
     }
 
     #[test]

@@ -46,7 +46,10 @@
 
 use super::platform::{Platform, ResolvedPlatform};
 use super::portfolio::Incumbent;
-use super::{cp::Encoding, Schedule, SolveResult};
+use super::{
+    cp::{CpGlobals, Encoding},
+    Schedule, SolveResult,
+};
 use crate::graph::Dag;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -139,6 +142,14 @@ pub struct CpOptions {
     /// Seed the incumbent with a known schedule (§4.3's hybrid warm
     /// start): the search then only explores strict improvements.
     pub warm_start: Option<Schedule>,
+    /// Override the scheduling global propagators ([`CpGlobals`]:
+    /// per-core disjunctive edge-finding, bin-packing load bound). `None`
+    /// falls back to the solver/portfolio default — **off**, which is
+    /// byte-identical to the pre-queue propagation (the parity suites pin
+    /// it). Turning either on is sound (prunings are proof-backed and
+    /// trail-recorded) and changes only explored-node counts, so the
+    /// portfolio folds the flags into its cache tag.
+    pub globals: Option<CpGlobals>,
 }
 
 /// Option overlay for the Chou–Chung branch-and-bound.
@@ -602,7 +613,7 @@ mod tests {
         let req = SolveRequest::new(&g, 2)
             .node_limit(7)
             .platform(Platform::two_class(2, 1, 32))
-            .cp(CpOptions { encoding: Some(Encoding::Tang), warm_start: None });
+            .cp(CpOptions { encoding: Some(Encoding::Tang), warm_start: None, globals: None });
         let child = req.child();
         assert_eq!(child.budget.node_limit, Some(7));
         assert!(child.cp.encoding.is_none(), "overlays are not inherited");

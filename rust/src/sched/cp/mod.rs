@@ -27,11 +27,16 @@
 //! as [`CpSolver::solve_reference`], the oracle for the differential
 //! parity tests (`tests/trail_search_parity.rs`).
 
+mod propagators;
 mod state;
 
+pub use propagators::CpGlobals;
 pub use state::Encoding;
-pub(crate) use state::Bin;
-use state::State;
+// The solver state and its snapshot type are exported `doc(hidden)` for
+// the differential propagation harness (`tests/propagation_parity.rs`),
+// which drives the queue and the monolithic oracle side by side.
+#[doc(hidden)]
+pub use state::{Bin, State, StateDump};
 
 use super::api::CancelToken;
 use super::cdcl::{canonical_sig, luby, Activity, LearnConfig, NoGood, NoGoodStore, RESTART_UNIT};
@@ -66,14 +71,30 @@ pub struct CpConfig {
     pub warm_start: Option<Schedule>,
     /// Legacy-shim node budget (see the struct docs).
     pub node_limit: Option<u64>,
+    /// Default global-propagator flags; a request overrides them via
+    /// [`CpOptions::globals`](super::CpOptions::globals). Off (the
+    /// default) keeps propagation byte-identical to the pre-queue solver.
+    pub globals: CpGlobals,
 }
 
 impl CpConfig {
     pub fn improved(timeout: Duration) -> Self {
-        Self { encoding: Encoding::Improved, timeout, warm_start: None, node_limit: None }
+        Self {
+            encoding: Encoding::Improved,
+            timeout,
+            warm_start: None,
+            node_limit: None,
+            globals: CpGlobals::default(),
+        }
     }
     pub fn tang(timeout: Duration) -> Self {
-        Self { encoding: Encoding::Tang, timeout, warm_start: None, node_limit: None }
+        Self {
+            encoding: Encoding::Tang,
+            timeout,
+            warm_start: None,
+            node_limit: None,
+            globals: CpGlobals::default(),
+        }
     }
 }
 
@@ -151,6 +172,7 @@ impl CpSolver {
         let g = req.g;
         let plat = req.resolved_platform();
         let encoding = req.cp.encoding.unwrap_or(self.cfg.encoding);
+        let globals = req.cp.globals.unwrap_or(self.cfg.globals);
         let warm_start = req.cp.warm_start.as_ref().or(self.cfg.warm_start.as_ref());
         let sink = g
             .single_sink()
@@ -178,6 +200,7 @@ impl CpSolver {
             plat: &plat,
             levels: &levels,
             encoding,
+            globals,
             deadline: req.budget.deadline_from(t0),
             node_limit: req.budget.node_limit,
             explored: 0,
@@ -348,6 +371,10 @@ struct Search<'a> {
     plat: &'a ResolvedPlatform,
     levels: &'a [Cycles],
     encoding: Encoding,
+    /// Global-propagator flags handed to every `propagate` call. Off by
+    /// default (byte-parity with the pre-queue solver); the resolved
+    /// request/knobs turn them on.
+    globals: CpGlobals,
     deadline: Instant,
     node_limit: Option<u64>,
     explored: u64,
@@ -532,7 +559,7 @@ impl<'a> Search<'a> {
         // Propagate to fixpoint under the current incumbent bound. All
         // prunings are trailed, so the caller's undo removes them even on
         // the infeasible path.
-        if !st.propagate(self.levels, self.encoding, self.cap()) {
+        if !st.propagate(self.levels, self.encoding, self.cap(), self.globals) {
             self.pruned += 1;
             self.on_conflict(st);
             return true; // infeasible or dominated: pruned subtree, fully explored
@@ -602,7 +629,7 @@ impl<'a> Search<'a> {
         if !self.enter_node() {
             return false;
         }
-        if !st.propagate(self.levels, self.encoding, self.cap()) {
+        if !st.propagate(self.levels, self.encoding, self.cap(), self.globals) {
             self.pruned += 1;
             return true;
         }
@@ -664,11 +691,12 @@ fn replay_cp_prefix(
     st: &mut State,
     levels: &[Cycles],
     encoding: Encoding,
+    globals: CpGlobals,
     b0: Cycles,
     prefix: &[(Bin, i8)],
 ) -> bool {
     for &(var, val) in prefix {
-        if !st.propagate(levels, encoding, b0) {
+        if !st.propagate(levels, encoding, b0, globals) {
             return false;
         }
         if !st.assign(var, val) {
@@ -685,10 +713,12 @@ fn replay_cp_prefix(
 /// contain nothing better than `b0` (failed propagation / lower-bound
 /// cut), so the returned subtrees jointly cover every improving
 /// schedule. Fully deterministic: only the fixed bound `b0` is consulted.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn enumerate_prefixes(
     g: &Dag,
     plat: &ResolvedPlatform,
     encoding: Encoding,
+    globals: CpGlobals,
     levels: &[Cycles],
     b0: Cycles,
     target: usize,
@@ -706,10 +736,10 @@ pub(crate) fn enumerate_prefixes(
         let mut next: Vec<CpPrefix> = Vec::new();
         for prefix in frontier {
             let mut st = State::root(g, plat, sink, encoding);
-            if !replay_cp_prefix(&mut st, levels, encoding, b0, &prefix) {
+            if !replay_cp_prefix(&mut st, levels, encoding, globals, b0, &prefix) {
                 continue; // proven empty below b0
             }
-            if !st.propagate(levels, encoding, b0) {
+            if !st.propagate(levels, encoding, b0, globals) {
                 continue;
             }
             if st.lower_bound(levels) >= b0 {
@@ -812,6 +842,7 @@ impl CpTask {
         g: &Dag,
         plat: &ResolvedPlatform,
         encoding: Encoding,
+        globals: CpGlobals,
         levels: &[Cycles],
         b0: Cycles,
         learn: LearnConfig,
@@ -836,7 +867,7 @@ impl CpTask {
         // under the fixed bound `b0` (deterministic), then search with
         // everything learned so far.
         let mut st = State::root(g, plat, sink, encoding);
-        if !replay_cp_prefix(&mut st, levels, encoding, b0, &self.prefix) {
+        if !replay_cp_prefix(&mut st, levels, encoding, globals, b0, &self.prefix) {
             self.done = true;
             self.exhausted = true;
             return self.store.take_fresh();
@@ -850,6 +881,7 @@ impl CpTask {
             plat,
             levels,
             encoding,
+            globals,
             deadline,
             node_limit: remaining,
             explored: 0,
@@ -934,6 +966,7 @@ pub(crate) fn solve_prefix(
     g: &Dag,
     plat: &ResolvedPlatform,
     encoding: Encoding,
+    globals: CpGlobals,
     levels: &[Cycles],
     prefix: &[(Bin, i8)],
     b0: Cycles,
@@ -949,8 +982,8 @@ pub(crate) fn solve_prefix(
         let mut task = CpTask::new(g, prefix.to_vec(), m, b0, learn);
         while !task.done() {
             task.run_segment(
-                g, plat, encoding, levels, b0, learn, shared, consult_shared, node_limit,
-                deadline, cancel,
+                g, plat, encoding, globals, levels, b0, learn, shared, consult_shared,
+                node_limit, deadline, cancel,
             );
         }
         return task.into_outcome(b0);
@@ -962,7 +995,7 @@ pub(crate) fn solve_prefix(
     let mut best_ms = b0;
     let mut found_leaf = false;
     let mut st = State::root(g, plat, sink, encoding);
-    if !replay_cp_prefix(&mut st, levels, encoding, b0, prefix) {
+    if !replay_cp_prefix(&mut st, levels, encoding, globals, b0, prefix) {
         return SubtreeOutcome {
             best: None,
             exhausted: true,
@@ -986,6 +1019,7 @@ pub(crate) fn solve_prefix(
         plat,
         levels,
         encoding,
+        globals,
         deadline,
         node_limit,
         explored: 0,
@@ -1048,6 +1082,7 @@ mod tests {
             timeout: Duration::from_secs(secs),
             warm_start: None,
             node_limit: None,
+            globals: CpGlobals::default(),
         };
         CpSolver::new(cfg).solve(g, m)
     }
@@ -1160,6 +1195,7 @@ mod tests {
             timeout: Duration::from_millis(200),
             warm_start: None,
             node_limit: None,
+            globals: CpGlobals::default(),
         };
         let out = CpSolver::new(cfg).solve(&g, 4);
         // Whatever happened, we must hold a valid schedule.
@@ -1176,6 +1212,7 @@ mod tests {
             timeout: Duration::from_secs(3600),
             warm_start: None,
             node_limit: Some(500),
+            globals: CpGlobals::default(),
         };
         let a = CpSolver::new(cfg.clone()).solve(&g, 4);
         let b = CpSolver::new(cfg).solve(&g, 4);
@@ -1197,6 +1234,7 @@ mod tests {
             timeout: Duration::from_secs(10),
             warm_start: Some(dsh),
             node_limit: None,
+            globals: CpGlobals::default(),
         };
         let out = CpSolver::new(cfg).solve(&g, 2);
         assert!(out.result.schedule.makespan() <= dsh_ms);
@@ -1215,7 +1253,16 @@ mod tests {
         let b0 = serial_schedule(&g, m).makespan();
         let plat = ResolvedPlatform::resolve(None, &g, m);
         let levels = plat.static_levels(&g);
-        let prefixes = enumerate_prefixes(&g, &plat, Encoding::Improved, &levels, b0, 8, 6);
+        let prefixes = enumerate_prefixes(
+            &g,
+            &plat,
+            Encoding::Improved,
+            CpGlobals::default(),
+            &levels,
+            b0,
+            8,
+            6,
+        );
         assert!(prefixes.len() > 1, "paper example must split into several roots");
         let deadline = Instant::now() + Duration::from_secs(120);
         let mut best: Option<Cycles> = None;
@@ -1225,6 +1272,7 @@ mod tests {
                 &g,
                 &plat,
                 Encoding::Improved,
+                CpGlobals::default(),
                 &levels,
                 p,
                 b0,
@@ -1316,6 +1364,7 @@ mod tests {
             timeout: Duration::from_secs(3600),
             warm_start: None,
             node_limit: Some(500),
+            globals: CpGlobals::default(),
         };
         let legacy = CpSolver::new(cfg).solve(&g, 4);
         let req = SolveRequest::new(&g, 4).budget(Budget {
@@ -1327,6 +1376,37 @@ mod tests {
         assert_eq!(placements(&rep.schedule), placements(&legacy.result.schedule));
         assert_eq!(rep.stats.restarts, 0);
         assert_eq!(rep.stats.nogoods_recorded, 0);
+    }
+
+    #[test]
+    fn global_propagators_prove_the_same_optimum() {
+        // Edge-finding and the load bound only ever prune subtrees that
+        // provably hold nothing better than the incumbent, so the proven
+        // optimum must match the globals-off run — each flag alone and
+        // both together.
+        use crate::sched::CpOptions;
+        let mut g = paper_example_dag();
+        ensure_single_sink(&mut g);
+        let m = 2;
+        let base = solve(&g, m, Encoding::Improved, 60);
+        assert!(base.result.optimal);
+        for globals in [
+            CpGlobals { disjunctive: true, binpacking: false },
+            CpGlobals { disjunctive: false, binpacking: true },
+            CpGlobals { disjunctive: true, binpacking: true },
+        ] {
+            let req = SolveRequest::new(&g, m)
+                .budget(Budget { deadline: Some(Duration::from_secs(60)), node_limit: None })
+                .cp(CpOptions { globals: Some(globals), ..CpOptions::default() });
+            let rep = Scheduler::solve(&CpSolver::improved(), &req);
+            assert_eq!(rep.termination, Termination::ProvenOptimal, "{globals:?}");
+            assert_eq!(
+                rep.schedule.makespan(),
+                base.result.schedule.makespan(),
+                "{globals:?}"
+            );
+            assert!(check_valid(&g, &rep.schedule).is_ok());
+        }
     }
 
     #[test]

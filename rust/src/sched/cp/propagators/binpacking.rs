@@ -1,0 +1,56 @@
+//! Bin-packing load bound per core: a makespan lower bound from committed
+//! compute loads plus an admissible relaxation of the unplaced nodes.
+//!
+//! Constraint (4) serializes each core, so a core's makespan is at least
+//! its committed load, and the *total* remaining compute — committed
+//! loads plus, for every node without a committed instance yet, the
+//! cheapest cost over its still-candidate cores — must fit into `m` bins.
+//! Some bin then carries at least `⌈total / m⌉`. Both bounds are
+//! admissible under heterogeneous platforms: committed instances use
+//! their actual per-core cost (the trailed `load` vector), unplaced nodes
+//! the minimum over candidate cores, and duplication only ever *adds*
+//! load beyond this relaxation. A checker, not a filter: it fires no
+//! events and never writes — it only fails states the incumbent bound
+//! already proves hopeless, which is where the node-count wins come from.
+
+use super::super::state::State;
+use crate::graph::Cycles;
+
+impl State {
+    /// False when the load bound proves the state cannot beat `ub`.
+    pub(super) fn propagate_binpacking(&mut self, ub: Cycles) -> bool {
+        let n = self.ctx.n;
+        let m = self.ctx.m;
+        let cap = ub - 1; // must strictly beat the incumbent
+        let mut total: Cycles = 0;
+        for &l in &self.load {
+            if l > cap {
+                return false; // a serialized core already overruns
+            }
+            total += l;
+        }
+        for v in 0..n {
+            let mut placed = false;
+            let mut cheapest = Cycles::MAX;
+            for p in 0..m {
+                let idx = v * m + p;
+                match self.x[idx] {
+                    1 => {
+                        placed = true;
+                        break;
+                    }
+                    -1 => cheapest = cheapest.min(self.ctx.cost[idx]),
+                    _ => {}
+                }
+            }
+            if !placed {
+                if cheapest == Cycles::MAX {
+                    return false; // no candidate core left (cardinality fails too)
+                }
+                total += cheapest;
+            }
+        }
+        // Pigeonhole over the m bins.
+        (total + m as Cycles - 1) / m as Cycles <= cap
+    }
+}

@@ -1,0 +1,104 @@
+//! Per-core disjunctive edge-finding over committed start-time windows.
+//!
+//! The committed instances of one core (`x_{v,c} = 1`) form a disjunctive
+//! resource: constraint (4) forces them onto disjoint intervals, so for
+//! any subset Ω that must finish by `lct(Ω) = max lct` the classic
+//! edge-finding reasoning applies — if `ECT(Ω) > lct(Ω)` the core is
+//! overloaded (fail), and if `ECT(Ω ∪ {t}) > lct(Ω)` for a task `t` with
+//! a later deadline, then `t` runs after all of Ω and its earliest start
+//! lifts to `ECT(Ω)`. Duplicated instances on *other* cores don't weaken
+//! this: whatever else runs elsewhere, the committed instances of core
+//! `c` still occupy disjoint intervals of `c`.
+//!
+//! `ECT` is computed by the one-machine greedy over tasks in ascending
+//! `est` order (`ect = max(ect, est) + p`), which is exact for a set
+//! scanned in that order. Prunings read the bounds captured at entry and
+//! write through the trailed setters only; the iteration order (cores
+//! ascending, Λ candidates ascending, lifted tasks in node order) is
+//! fixed, so the write sequence is deterministic.
+
+use super::super::state::State;
+use crate::graph::Cycles;
+
+impl State {
+    /// One edge-finding sweep per core. Returns false on overload (the
+    /// core provably cannot meet its committed deadlines) or when a
+    /// lifted earliest start crosses the task's own deadline.
+    pub(super) fn propagate_edge_finding(&mut self) -> bool {
+        let n = self.ctx.n;
+        let m = self.ctx.m;
+        // (instance index, est, p, lct) per committed task of the core
+        // under scan; bounds snapshotted at entry (lifts within the sweep
+        // deliberately don't feed back — the sorted scan order stays
+        // valid, which the greedy ECT's exactness depends on).
+        let mut tasks: Vec<(usize, Cycles, Cycles, Cycles)> = Vec::new();
+        let mut order: Vec<usize> = Vec::new();
+        let mut lcts: Vec<Cycles> = Vec::new();
+        for c in 0..m {
+            tasks.clear();
+            for v in 0..n {
+                let idx = v * m + c;
+                if self.x[idx] == 1 {
+                    let p = self.ctx.cost[idx];
+                    tasks.push((idx, self.s_lb[idx], p, self.s_ub[idx] + p));
+                }
+            }
+            if tasks.len() < 2 {
+                continue;
+            }
+            order.clear();
+            order.extend(0..tasks.len());
+            order.sort_by_key(|&i| (tasks[i].1, tasks[i].0)); // est asc, node tiebreak
+            lcts.clear();
+            lcts.extend(tasks.iter().map(|t| t.3));
+            lcts.sort_unstable();
+            lcts.dedup();
+            for &cap in &lcts {
+                // Ω = {tasks with lct ≤ cap}: everything that must be done
+                // by time `cap`.
+                let mut ect = 0;
+                let mut omega = 0;
+                for &i in &order {
+                    let (_, est, p, lct) = tasks[i];
+                    if lct <= cap {
+                        ect = Cycles::max(ect, est) + p;
+                        omega += 1;
+                    }
+                }
+                if ect > cap {
+                    return false; // overloaded core
+                }
+                if omega == tasks.len() {
+                    continue; // no outside task to lift
+                }
+                let ect_omega = ect;
+                for t in 0..tasks.len() {
+                    if tasks[t].3 <= cap {
+                        continue; // member of Ω
+                    }
+                    // Would inserting t into Ω's window overflow it? Then
+                    // t must wait for all of Ω.
+                    let mut ect_with = 0;
+                    for &i in &order {
+                        let (_, est, p, lct) = tasks[i];
+                        if lct <= cap || i == t {
+                            ect_with = Cycles::max(ect_with, est) + p;
+                        }
+                    }
+                    if ect_with > cap {
+                        let idx = tasks[t].0;
+                        // Live-state guard: lift only strictly (repeat Λ
+                        // passes must not re-write the same bound).
+                        if self.s_lb[idx] < ect_omega {
+                            if ect_omega > self.s_ub[idx] {
+                                return false; // committed task misses its window
+                            }
+                            self.set_lb(idx, ect_omega);
+                        }
+                    }
+                }
+            }
+        }
+        true
+    }
+}

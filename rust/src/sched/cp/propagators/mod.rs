@@ -1,0 +1,193 @@
+//! Event-driven propagator queue for the CP solver state.
+//!
+//! The former monolithic fixpoint loop in `cp::state` re-ran every
+//! propagation phase every round, whether or not anything it reads had
+//! moved. This module turns those phases into *propagators* scheduled by
+//! the events the trailed writers fire:
+//!
+//! - [`EV_DOMAIN`] — a ternary was narrowed (`x` or Tang `d`),
+//! - [`EV_BOUND`] — a start-time window was tightened (`s_lb`/`s_ub`),
+//! - [`EV_ORDER`] — a same-core disjunction was committed.
+//!
+//! **Determinism rule.** Scheduling is wave-based FIFO: the agenda of a
+//! wave is fixed before the wave runs, propagators execute in their
+//! registration order (the legacy round order), and the events fired
+//! during wave *k* — accumulated on [`State::events`] and cleared at each
+//! wave start — select the subscribers that form wave *k + 1*. No
+//! priorities, no timestamps: the trail-write sequence (and with it every
+//! explored-node count downstream) is a pure function of the state, which
+//! is what keeps the portfolio byte-reproducible at any worker count.
+//!
+//! Every builtin propagator watches all three events, so with both
+//! globals off each wave runs the full legacy phase list exactly when the
+//! previous wave wrote anything — the engine then degenerates to the
+//! monolithic round loop, write for write. `tests/propagation_parity.rs`
+//! holds the two to identical fixpoints on every instance family.
+//!
+//! The two scheduling globals ([`CpGlobals`]) register behind the
+//! builtins: per-core disjunctive edge-finding (`disjunctive`) and a
+//! bin-packing load bound on the makespan (`binpacking`). **Soundness
+//! invariant:** a global may only fail or tighten bounds through the
+//! trailed writers, so every pruning is a `CpOp` on the trail — undo
+//! stays O(changes) and a failed probe unwinds like any other branch.
+
+mod binpacking;
+mod disjunctive;
+
+use super::state::{Encoding, State};
+use crate::graph::Cycles;
+
+/// A ternary (`x`/`d`) was narrowed.
+pub(super) const EV_DOMAIN: u8 = 1 << 0;
+/// A start-time bound (`s_lb`/`s_ub`) was tightened.
+pub(super) const EV_BOUND: u8 = 1 << 1;
+/// An order literal was committed.
+pub(super) const EV_ORDER: u8 = 1 << 2;
+
+const EV_ALL: u8 = EV_DOMAIN | EV_BOUND | EV_ORDER;
+
+/// Which optional global propagators the CP search runs. Both default to
+/// **off**, where propagation is byte-identical to the pre-queue solver
+/// (pinned by the parity suites); either flag only ever *adds* prunings,
+/// so optima are unchanged — only the node counts drop.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CpGlobals {
+    /// Per-core disjunctive edge-finding over the committed instances'
+    /// start-time windows (overload checking + earliest-start lifting).
+    pub disjunctive: bool,
+    /// Per-core bin-packing load bound: fail any state whose committed
+    /// loads plus a cheapest-core relaxation of the unplaced nodes cannot
+    /// beat the incumbent makespan.
+    pub binpacking: bool,
+}
+
+impl CpGlobals {
+    /// True when at least one global propagator is enabled.
+    pub fn any(&self) -> bool {
+        self.disjunctive || self.binpacking
+    }
+}
+
+/// One registered propagator. The builtins are the legacy phases in their
+/// legacy order; the globals append behind them.
+#[derive(Clone, Copy)]
+enum Prop {
+    Makespan,
+    Cardinality,
+    EdgeTiming,
+    Orders,
+    Window,
+    TangLink,
+    DisjSemi,
+    EdgeFind,
+    BinPack,
+}
+
+impl Prop {
+    /// Watch list: the events whose firing re-schedules this propagator.
+    fn watches(self) -> u8 {
+        match self {
+            // Builtins watch everything — the degenerate-to-monolithic
+            // guarantee above depends on this.
+            Prop::Makespan
+            | Prop::Cardinality
+            | Prop::EdgeTiming
+            | Prop::Orders
+            | Prop::Window
+            | Prop::TangLink
+            | Prop::DisjSemi => EV_ALL,
+            // Edge-finding reads windows and core membership.
+            Prop::EdgeFind => EV_BOUND | EV_DOMAIN,
+            // The load bound reads only core membership (x).
+            Prop::BinPack => EV_DOMAIN,
+        }
+    }
+}
+
+impl State {
+    /// Run the propagator queue to fixpoint under the incumbent bound
+    /// `ub`. Returns false when the state is infeasible (or cannot beat
+    /// `ub`). All prunings land on the trail, so a failed propagation is
+    /// undone by the caller's `undo_to` like any other branch. `levels`
+    /// must be the platform's fastest-class static levels (admissible
+    /// remaining work, see
+    /// [`ResolvedPlatform::static_levels`](crate::sched::platform::ResolvedPlatform::static_levels)).
+    pub fn propagate(
+        &mut self,
+        levels: &[Cycles],
+        encoding: Encoding,
+        ub: Cycles,
+        globals: CpGlobals,
+    ) -> bool {
+        let mut props = [Prop::Makespan; 9];
+        let mut k = 0;
+        for p in [
+            Prop::Makespan,
+            Prop::Cardinality,
+            Prop::EdgeTiming,
+            Prop::Orders,
+            Prop::Window,
+        ] {
+            props[k] = p;
+            k += 1;
+        }
+        if encoding == Encoding::Tang {
+            props[k] = Prop::TangLink;
+            k += 1;
+        }
+        props[k] = Prop::DisjSemi;
+        k += 1;
+        if globals.disjunctive {
+            props[k] = Prop::EdgeFind;
+            k += 1;
+        }
+        if globals.binpacking {
+            props[k] = Prop::BinPack;
+            k += 1;
+        }
+        let props = &props[..k];
+
+        // Same wave cap as the monolithic loop's round cap, evaluated
+        // once at entry: sound to stop early (propagation only ever
+        // tightens), and the shared cap keeps the off-path write-for-write
+        // identical to the oracle even on cap exhaustion.
+        let waves = 4 * (self.ctx.n + self.orders.len() + 4);
+        let mut agenda: u16 = (1 << k) - 1; // wave 0: everything runs once
+        for _wave in 0..waves {
+            if agenda == 0 {
+                return true; // quiescent: fixpoint reached
+            }
+            self.events = 0;
+            for (i, &p) in props.iter().enumerate() {
+                if agenda & (1 << i) == 0 {
+                    continue;
+                }
+                if !self.run_prop(p, levels, encoding, ub) {
+                    return false;
+                }
+            }
+            let fired = self.events;
+            agenda = 0;
+            for (i, &p) in props.iter().enumerate() {
+                if p.watches() & fired != 0 {
+                    agenda |= 1 << i;
+                }
+            }
+        }
+        true // wave cap: sound (propagation is only ever tightening)
+    }
+
+    fn run_prop(&mut self, p: Prop, levels: &[Cycles], encoding: Encoding, ub: Cycles) -> bool {
+        match p {
+            Prop::Makespan => self.prop_makespan(levels, ub),
+            Prop::Cardinality => self.prop_cardinality(),
+            Prop::EdgeTiming => self.prop_edge_timing(encoding),
+            Prop::Orders => self.prop_orders(),
+            Prop::Window => self.prop_windows(),
+            Prop::TangLink => self.propagate_tang(),
+            Prop::DisjSemi => self.propagate_disjunctive(),
+            Prop::EdgeFind => self.propagate_edge_finding(),
+            Prop::BinPack => self.propagate_binpacking(ub),
+        }
+    }
+}

@@ -1,4 +1,4 @@
-//! Solver state and propagation for the two CP encodings.
+//! Solver state and propagation phases for the two CP encodings.
 //!
 //! Every domain-changing mutation (ternary assignment, bound tightening,
 //! order-literal commit) is recorded on a [`Trail`], so the DFS in
@@ -6,7 +6,14 @@
 //! mark on backtrack — O(changes) per branch instead of the former
 //! clone-per-branch O(state-size). `Clone` is kept only for the
 //! clone-based reference search used as the differential-testing oracle.
+//!
+//! The individual propagation phases live here (they are inseparable from
+//! the field layout); the event-driven engine that schedules them — plus
+//! the optional scheduling globals — lives in [`super::propagators`]. The
+//! pre-queue round loop survives as [`State::propagate_monolithic`], the
+//! differential oracle of `tests/propagation_parity.rs`.
 
+use super::propagators::{CpGlobals, EV_BOUND, EV_DOMAIN, EV_ORDER};
 use crate::graph::{Cycles, Dag, NodeId};
 use crate::sched::cdcl::Activity;
 use crate::sched::platform::ResolvedPlatform;
@@ -34,45 +41,55 @@ pub enum Bin {
 }
 
 /// Static context shared by all states of one solve.
-struct Ctx {
-    n: usize,
-    m: usize,
-    sink: NodeId,
-    edges: Vec<(NodeId, NodeId, Cycles)>,
+pub(super) struct Ctx {
+    pub(super) n: usize,
+    pub(super) m: usize,
+    pub(super) sink: NodeId,
+    pub(super) edges: Vec<(NodeId, NodeId, Cycles)>,
     /// Duplication cap per node: constraint (9) `card(children)` for the
     /// improved encoding; `m` (no cap beyond one-per-core) for Tang.
-    max_dup: Vec<usize>,
-    topo: Vec<NodeId>,
+    pub(super) max_dup: Vec<usize>,
+    pub(super) topo: Vec<NodeId>,
     /// Per-instance compute costs `cost[v·m + p]`, materialized from the
     /// resolved platform so reversible-load maintenance (and its undo)
     /// needs neither a `&Dag` nor per-access scaling. Uniform platforms
     /// degenerate to `m` copies of each node's WCET.
-    cost: Vec<Cycles>,
+    pub(super) cost: Vec<Cycles>,
+    /// Out-edge indices per node, precomputed once at the root so the
+    /// Tang constraint-(7) scan stops rebuilding the same filter vector
+    /// on every node of every fixpoint round.
+    pub(super) out_edges: Vec<Vec<usize>>,
     /// The resolved platform — consulted for communication scaling only
     /// (compute costs are flattened above).
-    plat: ResolvedPlatform,
+    pub(super) plat: ResolvedPlatform,
 }
 
 /// A partial assignment: ternary binaries + start-time interval bounds +
 /// committed same-core orderings, with a trail of reversible writes.
 #[derive(Clone)]
 pub struct State {
-    ctx: Arc<Ctx>,
+    pub(super) ctx: Arc<Ctx>,
     /// x_{v,p} ∈ {-1 unset, 0, 1}.
-    x: Vec<i8>,
+    pub(super) x: Vec<i8>,
     /// d_{e,i,j} (Tang only; empty vec for Improved).
-    d: Vec<i8>,
+    pub(super) d: Vec<i8>,
     /// Conditional start-time bounds: valid whenever the instance is
     /// assigned (x ≠ 0). Unassigned instances are ignored at extraction.
-    s_lb: Vec<Cycles>,
-    s_ub: Vec<Cycles>,
+    pub(super) s_lb: Vec<Cycles>,
+    pub(super) s_ub: Vec<Cycles>,
     /// Committed disjunctions: (core, a, b) ⇒ f_{a,core} ≤ s_{b,core}.
-    orders: Vec<(u16, u16, u16)>,
+    pub(super) orders: Vec<(u16, u16, u16)>,
     /// Per-core committed compute load: `Σ t(v)` over `x_{v,p} = 1`.
     /// Maintained incrementally by [`State::set_x`] and restored by
     /// [`State::undo_to`], so `pick_branch` no longer re-scans the whole
     /// `x` matrix (O(n·m) per search node — a ROADMAP hot spot).
-    load: Vec<Cycles>,
+    pub(super) load: Vec<Cycles>,
+    /// Event bits (`EV_*`) fired by the trailed writers since the current
+    /// propagation wave started. Transient scratch: the engine clears it
+    /// at every wave start and reads it at wave end to build the next
+    /// agenda; it is deliberately **not** restored by [`State::undo_to`]
+    /// (no propagator runs across an undo).
+    pub(super) events: u8,
     /// Undo log: every mutation of the fields above is recorded here
     /// so the search can backtrack without cloning.
     trail: Trail<CpOp>,
@@ -99,6 +116,12 @@ impl State {
             .flat_map(|v| (0..m).map(move |p| (v, p)))
             .map(|(v, p)| plat.cost(v, p))
             .collect();
+        // Ascending edge indices per source node — the same enumeration
+        // order the former per-round filter produced.
+        let mut out_edges: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (e, &(u, _, _)) in edges.iter().enumerate() {
+            out_edges[u].push(e);
+        }
         let ctx = Arc::new(Ctx {
             n,
             m,
@@ -107,6 +130,7 @@ impl State {
             max_dup,
             topo: g.topo_order(),
             cost,
+            out_edges,
             plat: plat.clone(),
         });
         let horizon = plat.horizon();
@@ -122,24 +146,26 @@ impl State {
             s_ub: vec![horizon; n * m],
             orders: Vec::new(),
             load: vec![0; m],
+            events: 0,
             trail: Trail::new(),
         }
     }
 
     #[inline]
-    fn xi(&self, v: NodeId, p: usize) -> i8 {
+    pub(super) fn xi(&self, v: NodeId, p: usize) -> i8 {
         self.x[v * self.ctx.m + p]
     }
 
     #[inline]
-    fn di(&self, e: usize, i: usize, j: usize) -> i8 {
+    pub(super) fn di(&self, e: usize, i: usize, j: usize) -> i8 {
         self.d[e * self.ctx.m * self.ctx.m + i * self.ctx.m + j]
     }
 
-    // ---- Reversible writes (every mutation goes through the trail) ----
+    // ---- Reversible writes (every mutation goes through the trail and
+    // ---- fires the matching propagation event) ----
 
     #[inline]
-    fn set_x(&mut self, idx: usize, val: i8) {
+    pub(super) fn set_x(&mut self, idx: usize, val: i8) {
         self.trail.push(CpOp::X { idx: idx as u32, prev: self.x[idx] });
         let p = idx % self.ctx.m;
         let t = self.ctx.cost[idx];
@@ -150,24 +176,28 @@ impl State {
             self.load[p] += t;
         }
         self.x[idx] = val;
+        self.events |= EV_DOMAIN;
     }
 
     #[inline]
-    fn set_d(&mut self, idx: usize, val: i8) {
+    pub(super) fn set_d(&mut self, idx: usize, val: i8) {
         self.trail.push(CpOp::D { idx: idx as u32, prev: self.d[idx] });
         self.d[idx] = val;
+        self.events |= EV_DOMAIN;
     }
 
     #[inline]
-    fn set_lb(&mut self, idx: usize, val: Cycles) {
+    pub(super) fn set_lb(&mut self, idx: usize, val: Cycles) {
         self.trail.push(CpOp::Lb { idx: idx as u32, prev: self.s_lb[idx] });
         self.s_lb[idx] = val;
+        self.events |= EV_BOUND;
     }
 
     #[inline]
-    fn set_ub(&mut self, idx: usize, val: Cycles) {
+    pub(super) fn set_ub(&mut self, idx: usize, val: Cycles) {
         self.trail.push(CpOp::Ub { idx: idx as u32, prev: self.s_ub[idx] });
         self.s_ub[idx] = val;
+        self.events |= EV_BOUND;
     }
 
     /// Trail position before a branch; pass back to [`State::undo_to`].
@@ -235,198 +265,224 @@ impl State {
     pub fn add_order(&mut self, core: usize, a: NodeId, b: NodeId) {
         self.trail.push(CpOp::Order);
         self.orders.push((core as u16, a as u16, b as u16));
+        self.events |= EV_ORDER;
     }
 
-    /// Run every propagator to fixpoint under the incumbent bound `ub`.
-    /// Returns false when the state is infeasible (or cannot beat `ub`).
-    /// All prunings land on the trail, so a failed propagation is undone
-    /// by the caller's `undo_to` like any other branch. `levels` must be
-    /// the platform's fastest-class static levels (admissible remaining
-    /// work, see [`ResolvedPlatform::static_levels`]).
-    pub fn propagate(&mut self, levels: &[Cycles], encoding: Encoding, ub: Cycles) -> bool {
-        let ctx = Arc::clone(&self.ctx);
-        let n = ctx.n;
-        let m = ctx.m;
-        for _round in 0..4 * (n + self.orders.len() + 4) {
-            let mut changed = false;
-
-            // Makespan bound: s_{v,p} + lvl(v) ≤ ub − 1 for assignable
-            // instances (lvl = remaining compute chain incl. v).
-            for v in 0..n {
-                for p in 0..m {
-                    let idx = v * m + p;
-                    if self.x[idx] == 0 {
-                        continue;
-                    }
-                    match (ub - 1).checked_sub(levels[v]) {
-                        Some(cap) if cap >= self.s_lb[idx] => {
-                            if self.s_ub[idx] > cap {
-                                self.set_ub(idx, cap);
-                                changed = true;
-                            }
-                        }
-                        _ => {
-                            // No feasible start on this core.
-                            if self.x[idx] == 1 {
-                                return false;
-                            }
-                            self.set_x(idx, 0);
-                            changed = true;
-                        }
-                    }
-                }
-            }
-
-            // Cardinality constraints (1), (6), (9).
-            for v in 0..n {
-                let mut ones = 0;
-                let mut unset = 0;
-                for p in 0..m {
-                    match self.xi(v, p) {
-                        1 => ones += 1,
-                        -1 => unset += 1,
-                        _ => {}
-                    }
-                }
-                let cap = ctx.max_dup[v];
-                if ones > cap || ones + unset == 0 {
-                    return false;
-                }
-                if ones == 0 && unset == 1 {
-                    // Forced: exactly one candidate remains (constraint 1).
-                    for p in 0..m {
-                        if self.xi(v, p) == -1 {
-                            self.set_x(v * m + p, 1);
-                            changed = true;
-                        }
-                    }
-                } else if ones == cap && unset > 0 {
-                    for p in 0..m {
-                        if self.xi(v, p) == -1 {
-                            self.set_x(v * m + p, 0);
-                            changed = true;
-                        }
-                    }
-                }
-            }
-
-            // Edge timing: constraints (10)–(11) (improved) / (5) (Tang).
-            for (e_idx, &(u, v, w)) in ctx.edges.iter().enumerate() {
-                for j in 0..m {
-                    if self.xi(v, j) == 0 {
-                        continue;
-                    }
-                    // Earliest possible arrival of u's data at core j over
-                    // all still-candidate supplier instances.
-                    let mut arr = Cycles::MAX;
-                    for i in 0..m {
-                        if self.xi(u, i) == 0 {
-                            continue;
-                        }
-                        if encoding == Encoding::Tang && self.di(e_idx, i, j) == 0 {
-                            continue; // this supplier was branched away
-                        }
-                        let a = self.s_lb[u * m + i]
-                            + ctx.cost[u * m + i]
-                            + ctx.plat.comm(i, j, w);
-                        arr = arr.min(a);
-                    }
-                    if arr == Cycles::MAX {
-                        if self.xi(v, j) == 1 {
-                            return false; // consumer with no possible supplier
-                        }
-                        self.set_x(v * m + j, 0);
-                        changed = true;
-                        continue;
-                    }
-                    let idx = v * m + j;
-                    if self.s_lb[idx] < arr {
-                        self.set_lb(idx, arr);
-                        changed = true;
-                    }
-                }
-                // Tang back-propagation: a committed supplier must finish in
-                // time for its consumer (tightens s_ub of the supplier).
-                if encoding == Encoding::Tang {
-                    for i in 0..m {
-                        for j in 0..m {
-                            if self.di(e_idx, i, j) != 1 {
-                                continue;
-                            }
-                            let lat = ctx.plat.comm(i, j, w);
-                            let cons_ub = self.s_ub[v * m + j];
-                            match cons_ub.checked_sub(ctx.cost[u * m + i] + lat) {
-                                Some(cap) => {
-                                    let idx = u * m + i;
-                                    if self.s_ub[idx] > cap {
-                                        self.set_ub(idx, cap);
-                                        changed = true;
-                                    }
-                                }
-                                None => return false,
-                            }
-                        }
-                    }
-                }
-            }
-
-            // Committed orderings (from constraint (4) branching). Indexed
-            // iteration: propagation only appends to `orders` (never here),
-            // so the former per-round `self.orders.clone()` was pure
-            // allocation overhead.
-            for k in 0..self.orders.len() {
-                let (c, a, b) = self.orders[k];
-                let (c, a, b) = (c as usize, a as usize, b as usize);
-                let ia = a * m + c;
-                let ib = b * m + c;
-                let lb = self.s_lb[ia] + ctx.cost[ia];
-                if self.s_lb[ib] < lb {
-                    self.set_lb(ib, lb);
-                    changed = true;
-                }
-                match self.s_ub[ib].checked_sub(ctx.cost[ia]) {
-                    Some(cap) if self.s_ub[ia] > cap => {
-                        self.set_ub(ia, cap);
-                        changed = true;
-                    }
-                    Some(_) => {}
-                    None => return false,
-                }
-            }
-
-            // Window consistency: empty interval kills the instance.
-            for v in 0..n {
-                for p in 0..m {
-                    let idx = v * m + p;
-                    if self.x[idx] != 0 && self.s_lb[idx] > self.s_ub[idx] {
-                        if self.x[idx] == 1 {
-                            return false;
-                        }
-                        self.set_x(idx, 0);
-                        changed = true;
-                    }
-                }
-            }
-
-            // Tang d-variable propagation: linking + sums (7)–(8).
-            if encoding == Encoding::Tang && !self.propagate_tang(&mut changed) {
+    /// The pre-queue propagation loop, kept as the differential oracle for
+    /// `tests/propagation_parity.rs`: every phase in the fixed round
+    /// order, re-run while any write landed, up to the same round cap the
+    /// event-driven engine uses ([`State::propagate`], defined in
+    /// [`super::propagators`]). Never called by a solver — with both
+    /// globals off the engine's wave schedule degenerates to exactly this
+    /// loop, and the harness holds the two to byte-identical fixpoints.
+    #[doc(hidden)]
+    pub fn propagate_monolithic(
+        &mut self,
+        levels: &[Cycles],
+        encoding: Encoding,
+        ub: Cycles,
+    ) -> bool {
+        for _round in 0..4 * (self.ctx.n + self.orders.len() + 4) {
+            self.events = 0;
+            if !self.prop_makespan(levels, ub)
+                || !self.prop_cardinality()
+                || !self.prop_edge_timing(encoding)
+                || !self.prop_orders()
+                || !self.prop_windows()
+            {
                 return false;
             }
-
-            // Semi-propagation of the disjunctive constraint (4): commit an
-            // ordering when only one direction remains feasible.
-            if !self.propagate_disjunctive(&mut changed) {
+            if encoding == Encoding::Tang && !self.propagate_tang() {
                 return false;
             }
-
-            if !changed {
+            if !self.propagate_disjunctive() {
+                return false;
+            }
+            if self.events == 0 {
                 return true;
             }
         }
         true // iteration cap: sound (propagation is only ever tightening)
     }
 
-    fn propagate_tang(&mut self, changed: &mut bool) -> bool {
+    // ---- Builtin propagation phases. Each does trailed writes only (the
+    // ---- writers fire the events the engine schedules by) and returns
+    // ---- false on proven infeasibility. ----
+
+    /// Makespan bound: s_{v,p} + lvl(v) ≤ ub − 1 for assignable instances
+    /// (lvl = remaining compute chain incl. v).
+    pub(super) fn prop_makespan(&mut self, levels: &[Cycles], ub: Cycles) -> bool {
+        let n = self.ctx.n;
+        let m = self.ctx.m;
+        for v in 0..n {
+            for p in 0..m {
+                let idx = v * m + p;
+                if self.x[idx] == 0 {
+                    continue;
+                }
+                match (ub - 1).checked_sub(levels[v]) {
+                    Some(cap) if cap >= self.s_lb[idx] => {
+                        if self.s_ub[idx] > cap {
+                            self.set_ub(idx, cap);
+                        }
+                    }
+                    _ => {
+                        // No feasible start on this core.
+                        if self.x[idx] == 1 {
+                            return false;
+                        }
+                        self.set_x(idx, 0);
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    /// Cardinality constraints (1), (6), (9).
+    pub(super) fn prop_cardinality(&mut self) -> bool {
+        let n = self.ctx.n;
+        let m = self.ctx.m;
+        for v in 0..n {
+            let mut ones = 0;
+            let mut unset = 0;
+            for p in 0..m {
+                match self.xi(v, p) {
+                    1 => ones += 1,
+                    -1 => unset += 1,
+                    _ => {}
+                }
+            }
+            let cap = self.ctx.max_dup[v];
+            if ones > cap || ones + unset == 0 {
+                return false;
+            }
+            if ones == 0 && unset == 1 {
+                // Forced: exactly one candidate remains (constraint 1).
+                for p in 0..m {
+                    if self.xi(v, p) == -1 {
+                        self.set_x(v * m + p, 1);
+                    }
+                }
+            } else if ones == cap && unset > 0 {
+                for p in 0..m {
+                    if self.xi(v, p) == -1 {
+                        self.set_x(v * m + p, 0);
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    /// Edge timing: constraints (10)–(11) (improved) / (5) (Tang), with
+    /// the Tang supplier back-propagation inlined per edge.
+    pub(super) fn prop_edge_timing(&mut self, encoding: Encoding) -> bool {
+        let ctx = Arc::clone(&self.ctx);
+        let m = ctx.m;
+        for (e_idx, &(u, v, w)) in ctx.edges.iter().enumerate() {
+            for j in 0..m {
+                if self.xi(v, j) == 0 {
+                    continue;
+                }
+                // Earliest possible arrival of u's data at core j over
+                // all still-candidate supplier instances.
+                let mut arr = Cycles::MAX;
+                for i in 0..m {
+                    if self.xi(u, i) == 0 {
+                        continue;
+                    }
+                    if encoding == Encoding::Tang && self.di(e_idx, i, j) == 0 {
+                        continue; // this supplier was branched away
+                    }
+                    let a =
+                        self.s_lb[u * m + i] + ctx.cost[u * m + i] + ctx.plat.comm(i, j, w);
+                    arr = arr.min(a);
+                }
+                if arr == Cycles::MAX {
+                    if self.xi(v, j) == 1 {
+                        return false; // consumer with no possible supplier
+                    }
+                    self.set_x(v * m + j, 0);
+                    continue;
+                }
+                let idx = v * m + j;
+                if self.s_lb[idx] < arr {
+                    self.set_lb(idx, arr);
+                }
+            }
+            // Tang back-propagation: a committed supplier must finish in
+            // time for its consumer (tightens s_ub of the supplier).
+            if encoding == Encoding::Tang {
+                for i in 0..m {
+                    for j in 0..m {
+                        if self.di(e_idx, i, j) != 1 {
+                            continue;
+                        }
+                        let lat = ctx.plat.comm(i, j, w);
+                        let cons_ub = self.s_ub[v * m + j];
+                        match cons_ub.checked_sub(ctx.cost[u * m + i] + lat) {
+                            Some(cap) => {
+                                let idx = u * m + i;
+                                if self.s_ub[idx] > cap {
+                                    self.set_ub(idx, cap);
+                                }
+                            }
+                            None => return false,
+                        }
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    /// Committed orderings (from constraint (4) branching). Indexed
+    /// iteration: propagation only appends to `orders` (never here), so
+    /// the former per-round `self.orders.clone()` was pure allocation
+    /// overhead.
+    pub(super) fn prop_orders(&mut self) -> bool {
+        let m = self.ctx.m;
+        for k in 0..self.orders.len() {
+            let (c, a, b) = self.orders[k];
+            let (c, a, b) = (c as usize, a as usize, b as usize);
+            let ia = a * m + c;
+            let ib = b * m + c;
+            let lb = self.s_lb[ia] + self.ctx.cost[ia];
+            if self.s_lb[ib] < lb {
+                self.set_lb(ib, lb);
+            }
+            match self.s_ub[ib].checked_sub(self.ctx.cost[ia]) {
+                Some(cap) if self.s_ub[ia] > cap => {
+                    self.set_ub(ia, cap);
+                }
+                Some(_) => {}
+                None => return false,
+            }
+        }
+        true
+    }
+
+    /// Window consistency: empty interval kills the instance.
+    pub(super) fn prop_windows(&mut self) -> bool {
+        let n = self.ctx.n;
+        let m = self.ctx.m;
+        for v in 0..n {
+            for p in 0..m {
+                let idx = v * m + p;
+                if self.x[idx] != 0 && self.s_lb[idx] > self.s_ub[idx] {
+                    if self.x[idx] == 1 {
+                        return false;
+                    }
+                    self.set_x(idx, 0);
+                }
+            }
+        }
+        true
+    }
+
+    /// Tang d-variable propagation: linking + sums (7)–(8).
+    pub(super) fn propagate_tang(&mut self) -> bool {
         let m = self.ctx.m;
         let ne = self.ctx.edges.len();
         // Linking: d=1 ⇒ both endpoints assigned; endpoint=0 ⇒ d=0.
@@ -440,10 +496,7 @@ impl State {
                             for (node, core) in [(u, i), (v, j)] {
                                 match self.xi(node, core) {
                                     0 => return false,
-                                    -1 => {
-                                        self.set_x(node * m + core, 1);
-                                        *changed = true;
-                                    }
+                                    -1 => self.set_x(node * m + core, 1),
                                     _ => {}
                                 }
                             }
@@ -451,7 +504,6 @@ impl State {
                         -1 => {
                             if self.xi(u, i) == 0 || self.xi(v, j) == 0 {
                                 self.set_d(idx, 0);
-                                *changed = true;
                             }
                         }
                         _ => {}
@@ -483,7 +535,6 @@ impl State {
                         let idx = e * m * m + i * m + j;
                         if self.d[idx] == -1 {
                             self.set_d(idx, 0);
-                            *changed = true;
                         }
                     }
                 } else if ones == 0 && unset == 1 {
@@ -491,7 +542,6 @@ impl State {
                         let idx = e * m * m + i * m + j;
                         if self.d[idx] == -1 {
                             self.set_d(idx, 1);
-                            *changed = true;
                         }
                     }
                 }
@@ -502,14 +552,7 @@ impl State {
             if v0 == self.ctx.sink {
                 continue;
             }
-            let out_edges: Vec<usize> = self
-                .ctx
-                .edges
-                .iter()
-                .enumerate()
-                .filter(|(_, &(u, _, _))| u == v0)
-                .map(|(e, _)| e)
-                .collect();
+            let out_edges = &self.ctx.out_edges[v0];
             if out_edges.is_empty() {
                 continue;
             }
@@ -535,14 +578,23 @@ impl State {
 
     /// Constraint (4): for each pair assigned to the same core, fail when
     /// neither order fits, auto-commit when exactly one does.
-    fn propagate_disjunctive(&mut self, changed: &mut bool) -> bool {
+    ///
+    /// Iterates committed pairs directly (ascending `a < b`, the order
+    /// the former per-core `on_core` scratch vector produced) instead of
+    /// collecting that vector per core per round — `add_order` never
+    /// touches `x`, so the membership test stays stable mid-loop.
+    pub(super) fn propagate_disjunctive(&mut self) -> bool {
         let n = self.ctx.n;
         let m = self.ctx.m;
         for c in 0..m {
-            let on_core: Vec<NodeId> = (0..n).filter(|&v| self.xi(v, c) == 1).collect();
-            for ai in 0..on_core.len() {
-                for bi in ai + 1..on_core.len() {
-                    let (a, b) = (on_core[ai], on_core[bi]);
+            for a in 0..n {
+                if self.xi(a, c) != 1 {
+                    continue;
+                }
+                for b in a + 1..n {
+                    if self.xi(b, c) != 1 {
+                        continue;
+                    }
                     if self.has_order(c, a, b) || self.has_order(c, b, a) {
                         continue;
                     }
@@ -552,14 +604,8 @@ impl State {
                         <= self.s_ub[a * m + c];
                     match (ab_ok, ba_ok) {
                         (false, false) => return false,
-                        (true, false) => {
-                            self.add_order(c, a, b);
-                            *changed = true;
-                        }
-                        (false, true) => {
-                            self.add_order(c, b, a);
-                            *changed = true;
-                        }
+                        (true, false) => self.add_order(c, a, b),
+                        (false, true) => self.add_order(c, b, a),
                         (true, true) => {}
                     }
                 }
@@ -568,7 +614,7 @@ impl State {
         true
     }
 
-    fn has_order(&self, c: usize, a: NodeId, b: NodeId) -> bool {
+    pub(super) fn has_order(&self, c: usize, a: NodeId, b: NodeId) -> bool {
         self.orders
             .iter()
             .any(|&(oc, oa, ob)| oc as usize == c && oa as usize == a && ob as usize == b)
@@ -700,14 +746,20 @@ impl State {
     }
 
     /// An unordered, possibly-overlapping same-core pair, if any remains.
+    /// Same direct pair iteration as [`State::propagate_disjunctive`] —
+    /// no per-core scratch allocation on the branching hot path.
     pub fn pick_overlap(&self) -> Option<(usize, NodeId, NodeId)> {
         let n = self.ctx.n;
         let m = self.ctx.m;
         for c in 0..m {
-            let on_core: Vec<NodeId> = (0..n).filter(|&v| self.xi(v, c) == 1).collect();
-            for ai in 0..on_core.len() {
-                for bi in ai + 1..on_core.len() {
-                    let (a, b) = (on_core[ai], on_core[bi]);
+            for a in 0..n {
+                if self.xi(a, c) != 1 {
+                    continue;
+                }
+                for b in a + 1..n {
+                    if self.xi(b, c) != 1 {
+                        continue;
+                    }
                     if self.has_order(c, a, b) || self.has_order(c, b, a) {
                         continue;
                     }
@@ -814,6 +866,39 @@ impl State {
         }
         s
     }
+
+    /// Field-for-field snapshot of every mutable solver field (the event
+    /// scratch excluded — it is transient within one propagation call).
+    /// Comparison currency of the differential propagation harness and
+    /// the trail round-trip tests.
+    #[doc(hidden)]
+    pub fn dump(&self) -> StateDump {
+        StateDump {
+            x: self.x.clone(),
+            d: self.d.clone(),
+            s_lb: self.s_lb.clone(),
+            s_ub: self.s_ub.clone(),
+            orders: self.orders.clone(),
+            load: self.load.clone(),
+        }
+    }
+}
+
+/// A snapshot of the mutable CP solver state: ternary assignment matrix,
+/// Tang communication ternaries, start-time windows, committed order
+/// literals and per-core committed loads. Two states propagated to the
+/// same fixpoint must compare equal here — that is exactly what
+/// `tests/propagation_parity.rs` asserts between the event-driven queue
+/// and the monolithic oracle.
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StateDump {
+    pub x: Vec<i8>,
+    pub d: Vec<i8>,
+    pub s_lb: Vec<Cycles>,
+    pub s_ub: Vec<Cycles>,
+    pub orders: Vec<(u16, u16, u16)>,
+    pub load: Vec<Cycles>,
 }
 
 #[cfg(test)]
@@ -828,24 +913,10 @@ mod tests {
         ResolvedPlatform::resolve(None, g, m)
     }
 
-    type Snapshot = (
-        Vec<i8>,
-        Vec<i8>,
-        Vec<Cycles>,
-        Vec<Cycles>,
-        Vec<(u16, u16, u16)>,
-        Vec<Cycles>,
-    );
+    type Snapshot = StateDump;
 
     fn snapshot(st: &State) -> Snapshot {
-        (
-            st.x.clone(),
-            st.d.clone(),
-            st.s_lb.clone(),
-            st.s_ub.clone(),
-            st.orders.clone(),
-            st.load.clone(),
-        )
+        st.dump()
     }
 
     /// Randomized push/undo round trips over the *real* mutation surface:
@@ -864,7 +935,7 @@ mod tests {
                 let mut rng = SplitMix64::new(seed ^ 0xCAFE);
                 let plat = uniform(&g, m);
                 let mut st = State::root(&g, &plat, sink, encoding);
-                st.propagate(&levels, encoding, ub);
+                st.propagate(&levels, encoding, ub, CpGlobals::default());
                 let root_snap = snapshot(&st);
                 let mut stack: Vec<(Mark, Snapshot)> = Vec::new();
                 for _ in 0..40 {
@@ -886,7 +957,7 @@ mod tests {
                             },
                         };
                         if decided {
-                            st.propagate(&levels, encoding, ub);
+                            st.propagate(&levels, encoding, ub, CpGlobals::default());
                             stack.push((mark, snap));
                         } else {
                             st.undo_to(mark);
@@ -921,10 +992,10 @@ mod tests {
         // A 1-above-critical-path bound is almost always infeasible and
         // forces failures deep in propagation.
         let tight_ub = crate::graph::critical_path_len(&g) + 1;
-        st.propagate(&levels, encoding, g.total_wcet() + 1);
+        st.propagate(&levels, encoding, g.total_wcet() + 1, CpGlobals::default());
         let snap = snapshot(&st);
         let mark = st.mark();
-        let _feasible = st.propagate(&levels, encoding, tight_ub);
+        let _feasible = st.propagate(&levels, encoding, tight_ub, CpGlobals::default());
         st.undo_to(mark);
         assert_eq!(snapshot(&st), snap);
     }
@@ -942,7 +1013,7 @@ mod tests {
         let encoding = Encoding::Improved;
         let plat = uniform(&g, m);
         let mut st = State::root(&g, &plat, sink, encoding);
-        st.propagate(&levels, encoding, g.total_wcet() + 1);
+        st.propagate(&levels, encoding, g.total_wcet() + 1, CpGlobals::default());
         let mut act = Activity::new(g.n());
         let static_pick = st.pick_branch(encoding, None);
         assert!(static_pick.is_some());
@@ -978,12 +1049,12 @@ mod tests {
         let ub = g.total_wcet() + 1;
         let plat = uniform(&g, m);
         let mut st = State::root(&g, &plat, sink, encoding);
-        st.propagate(&levels, encoding, ub);
+        st.propagate(&levels, encoding, ub, CpGlobals::default());
         let mark = st.mark();
         let snap = snapshot(&st);
         let (var, first) = st.pick_branch(encoding, None).expect("open root");
         assert!(st.assign(var, first));
-        st.propagate(&levels, encoding, ub);
+        st.propagate(&levels, encoding, ub, CpGlobals::default());
         let mut seen = vec![false; st.ctx.n];
         st.conflict_nodes(mark, |v| seen[v] = true);
         let Bin::X(i) = var else { panic!("improved encoding branches on X") };
@@ -1015,7 +1086,7 @@ mod tests {
                     if let Some((var, first)) = st.pick_branch(encoding, None) {
                         let val = if rng.next_below(2) == 0 { first } else { 1 - first };
                         st.assign(var, val);
-                        st.propagate(&levels, encoding, ub);
+                        st.propagate(&levels, encoding, ub, CpGlobals::default());
                         marks.push(mark);
                     } else {
                         st.undo_to(mark);

@@ -36,7 +36,11 @@ impl Scheduler for Hybrid {
             return seed;
         }
         let t_dsh = t0.elapsed();
-        let cp_opts = CpOptions { encoding: req.cp.encoding, warm_start: Some(seed.schedule) };
+        let cp_opts = CpOptions {
+            encoding: req.cp.encoding,
+            warm_start: Some(seed.schedule),
+            globals: req.cp.globals,
+        };
         let refine = Scheduler::solve(&CpSolver::improved(), &req.child().cp(cp_opts));
         let wall = t0.elapsed();
         let explored = seed.stats.explored + refine.stats.explored;

@@ -101,6 +101,7 @@ pub use api::{
     BnbOptions, Budget, CancelToken, CpOptions, PortfolioOptions, SearchOptions, SearchStats,
     SolveReport, SolveRequest, StageStats, Termination,
 };
+pub use cp::CpGlobals;
 pub use pipeline::{PipelineReport, PipelineRequest, PipelineSolver};
 pub use platform::{Platform, ResolvedPlatform, SPEED_SCALE};
 pub use program::{derive_comms, derive_programs, CommOp, CoreProgram, CoreStep};

@@ -87,7 +87,7 @@ use super::api::cancelled_fallback;
 use super::bnb;
 use super::cdcl::{LearnConfig, NoGood};
 use super::cp;
-use super::cp::{CpSolver, Encoding};
+use super::cp::{CpGlobals, CpSolver, Encoding};
 use super::dsh::Dsh;
 use super::hlfet::Hlfet;
 use super::ish::Ish;
@@ -171,6 +171,12 @@ pub struct PortfolioConfig {
     pub use_cp: bool,
     /// CP encoding for the exact stage.
     pub encoding: Encoding,
+    /// Global scheduling propagators (disjunctive edge-finding and the
+    /// bin-packing load bound) for the CP stage and the hybrid racer's
+    /// refinement. Both off (the default) keeps every CP search on the
+    /// historical semi-disjunctive-only path, byte for byte; request-level
+    /// [`CpOptions::globals`](super::CpOptions) overrides per solve.
+    pub cp_globals: CpGlobals,
     /// Node budget of the CP refinement inside the heuristic-race hybrid
     /// (a wall-clock budget there would be non-deterministic).
     pub hybrid_node_limit: Option<u64>,
@@ -209,6 +215,7 @@ impl Default for PortfolioConfig {
             use_bnb: true,
             use_cp: true,
             encoding: Encoding::Improved,
+            cp_globals: CpGlobals::default(),
             hybrid_node_limit: Some(2_000),
             memo_capacity: bnb::DEFAULT_MEMO_CAPACITY,
             cache_capacity: 128,
@@ -227,14 +234,18 @@ impl Default for PortfolioConfig {
 /// [`pipeline::pipeline_request_key`](super::pipeline::pipeline_request_key):
 /// one shared cache namespace now holds both one-shot and pipeline
 /// solves, so stores written before the split must be invalidated.
-pub const KEY_VERSION: u64 = 5;
+/// Version 6 appended the two [`CpGlobals`] words (disjunctive
+/// edge-finding, bin-packing bound): the globals change which nodes the
+/// exact CP search explores, so a store written without them must not
+/// answer a request that enables them (or vice versa).
+pub const KEY_VERSION: u64 = 6;
 
 /// Fixed length in words of the resolved-request tag that prefixes every
 /// canonical key ([`Knobs::cache_tag`] emits exactly this many words,
 /// `debug_assert`ed there): `key[TAG_WORDS..]` encodes only the problem
 /// (DAG structure + `m`), which is how `sched::serve` groups requests by
 /// identical problem without re-walking each DAG.
-pub(crate) const TAG_WORDS: usize = 15;
+pub(crate) const TAG_WORDS: usize = 17;
 
 /// One request's fully-resolved knobs: config defaults overlaid with the
 /// request's [`PortfolioOptions`](super::PortfolioOptions) and budget.
@@ -248,6 +259,7 @@ struct Knobs {
     use_bnb: bool,
     use_cp: bool,
     encoding: Encoding,
+    cp_globals: CpGlobals,
     hybrid_node_limit: Option<u64>,
     memo_capacity: usize,
     /// The request's deterministic node budget, applied per subtree root.
@@ -283,6 +295,8 @@ impl Knobs {
             self.search.nogood_capacity as u64,
             self.search.restarts as u64,
             self.search.activity as u64,
+            self.cp_globals.disjunctive as u64,
+            self.cp_globals.binpacking as u64,
         ];
         debug_assert_eq!(tag.len(), TAG_WORDS, "keep TAG_WORDS in sync with the tag layout");
         tag
@@ -611,7 +625,11 @@ impl Portfolio {
         let hybrid_req = heur_req
             .clone()
             .budget(Budget { deadline: knobs.deadline, node_limit: knobs.hybrid_node_limit })
-            .cp(CpOptions { encoding: Some(knobs.encoding), warm_start: None });
+            .cp(CpOptions {
+                encoding: Some(knobs.encoding),
+                warm_start: None,
+                globals: Some(knobs.cp_globals),
+            });
         let t_race = Instant::now();
         let dsh = Dsh.solve(&heur_req);
         let race: Vec<(&'static str, SolveReport)> = parallel_map(knobs.workers, 4, |i| match i {
@@ -843,6 +861,7 @@ fn resolve_knobs(cfg: &PortfolioConfig, req: &SolveRequest<'_>) -> Knobs {
         use_bnb: o.use_bnb.unwrap_or(cfg.use_bnb),
         use_cp: o.use_cp.unwrap_or(cfg.use_cp),
         encoding: req.cp.encoding.unwrap_or(cfg.encoding),
+        cp_globals: req.cp.globals.unwrap_or(cfg.cp_globals),
         hybrid_node_limit: o.hybrid_node_limit.or(cfg.hybrid_node_limit),
         memo_capacity: req.bnb.memo_capacity.unwrap_or(cfg.memo_capacity),
         node_limit_per_root: req.budget.node_limit,
@@ -991,6 +1010,7 @@ fn exact_cp_stage(
         g,
         plat,
         knobs.encoding,
+        knobs.cp_globals,
         &levels,
         b0,
         knobs.root_target,
@@ -1016,6 +1036,7 @@ fn exact_cp_stage(
                     g,
                     plat,
                     knobs.encoding,
+                    knobs.cp_globals,
                     &levels,
                     b0,
                     learn,
@@ -1041,6 +1062,7 @@ fn exact_cp_stage(
             g,
             plat,
             knobs.encoding,
+            knobs.cp_globals,
             &levels,
             &prefixes[i],
             b0,

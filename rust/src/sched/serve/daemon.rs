@@ -73,7 +73,8 @@ use crate::graph::Dag;
 use crate::sched::pipeline::{solve_pipeline, PipelineReport, PipelineRequest};
 use crate::sched::portfolio::PortfolioConfig;
 use crate::sched::{
-    Budget, CancelToken, Platform, SearchOptions, SearchStats, SolveRequest, Termination,
+    Budget, CancelToken, CpGlobals, CpOptions, Platform, SearchOptions, SearchStats, SolveRequest,
+    Termination,
 };
 use crate::util::json::Json;
 use std::collections::HashMap;
@@ -95,6 +96,10 @@ pub struct ProblemSpec {
     pub budget: Budget,
     pub platform: Option<Platform>,
     pub search: Option<SearchOptions>,
+    /// `"cp-disjunctive"` / `"cp-binpacking"` — per-request override of
+    /// the CP stage's global scheduling propagators (`None` = whatever
+    /// the portfolio config says, which defaults to off).
+    pub cp_globals: Option<CpGlobals>,
     /// `"mode": "pipeline"` — answer with a steady-state pipeline report
     /// (`ii`/`latency`/`depth`/`bound`) instead of a one-shot makespan.
     pub pipeline: bool,
@@ -459,6 +464,9 @@ impl Daemon {
             if let Some(s) = &a.spec.search {
                 r = r.search(s.clone());
             }
+            if let Some(gl) = a.spec.cp_globals {
+                r = r.cp(CpOptions { globals: Some(gl), ..CpOptions::default() });
+            }
             oneshot.push(r);
         }
         let batch = BatchRequest { requests: oneshot, workers: self.cfg.workers };
@@ -703,6 +711,7 @@ mod tests {
             budget: Budget { deadline: None, node_limit: Some(300) },
             platform: None,
             search: None,
+            cp_globals: None,
             pipeline: matches!(v.get("mode").and_then(Json::as_str), Some("pipeline")),
             stream_depth: v.get("stream-depth").and_then(Json::as_usize),
         })

@@ -12,7 +12,11 @@
 //!
 //! * [`CpOp`] — CP solver entries: domain prunings (`X`/`D` ternaries),
 //!   start-time bound updates (`Lb`/`Ub`) and order literals (`Order`,
-//!   undone by popping the order stack).
+//!   undone by popping the order stack). The global scheduling
+//!   propagators (`cp::propagators`) record every pruning through the
+//!   same trailed writers, so enabling them never changes the undo
+//!   cost model: backtracking stays O(changes), whichever propagator
+//!   made them.
 //! * [`BnbOp`] — branch-and-bound entries: a placement record carrying
 //!   every scalar it clobbered (core availability, makespan, incremental
 //!   lower bound) plus earliest-start bound updates (`Est`).

@@ -18,7 +18,7 @@
 use acetone::daggen::{generate, DagGenConfig};
 use acetone::graph::{ensure_single_sink, paper_example_dag, Cycles, Dag};
 use acetone::sched::bnb::ChouChung;
-use acetone::sched::cp::{CpConfig, CpSolver, Encoding};
+use acetone::sched::cp::{CpConfig, CpGlobals, CpSolver, Encoding};
 use acetone::sched::dsh::Dsh;
 use acetone::sched::hlfet::Hlfet;
 use acetone::sched::hybrid::Hybrid;
@@ -142,6 +142,7 @@ fn cp_request_parity_under_node_budgets() {
                 timeout: SAFE,
                 warm_start: None,
                 node_limit: budget,
+                globals: CpGlobals::default(),
             })
             .solve(&g, 3);
             let solver = match encoding {
@@ -179,7 +180,7 @@ fn cp_encoding_overlay_matches_dedicated_solver() {
         &SolveRequest::new(&g, 2)
             .deadline(SAFE)
             .node_limit(2000)
-            .cp(CpOptions { encoding: Some(Encoding::Tang), warm_start: None }),
+            .cp(CpOptions { encoding: Some(Encoding::Tang), warm_start: None, globals: None }),
     );
     let dedicated = Scheduler::solve(
         &CpSolver::tang(),
@@ -203,6 +204,7 @@ fn hybrid_request_matches_manual_dsh_plus_warm_started_cp() {
             timeout: SAFE,
             warm_start: Some(warm),
             node_limit: Some(budget),
+            globals: CpGlobals::default(),
         })
         .solve(&g, 3);
         let report = Hybrid.solve(&SolveRequest::new(&g, 3).deadline(SAFE).node_limit(budget));

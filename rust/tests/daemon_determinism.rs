@@ -47,6 +47,7 @@ fn parse_line(v: &Json, lineno: usize) -> Result<ProblemSpec, String> {
         budget: Budget { deadline: None, node_limit: Some(300) },
         platform: None,
         search: None,
+        cp_globals: None,
         pipeline: matches!(v.get("mode").and_then(Json::as_str), Some("pipeline")),
         stream_depth: v.get("stream-depth").and_then(Json::as_usize),
     })

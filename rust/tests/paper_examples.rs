@@ -8,7 +8,7 @@
 
 use acetone::graph::{critical_path_len, ensure_single_sink, paper_example_dag};
 use acetone::sched::bnb::ChouChung;
-use acetone::sched::cp::{CpConfig, CpSolver, Encoding};
+use acetone::sched::cp::{CpConfig, CpGlobals, CpSolver, Encoding};
 use acetone::sched::dsh::Dsh;
 use acetone::sched::ish::Ish;
 use acetone::sched::{check_valid, Scheduler};
@@ -100,6 +100,7 @@ fn cp_improved_at_least_matches_dsh_plateau() {
         timeout: Duration::from_secs(60),
         warm_start: None,
         node_limit: None,
+        globals: CpGlobals::default(),
     });
     for m in 2..=3 {
         let opt = cp.schedule(&g, m).schedule.makespan();

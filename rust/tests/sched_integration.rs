@@ -7,7 +7,7 @@
 
 use acetone::daggen::{generate, DagGenConfig};
 use acetone::graph::critical_path_len;
-use acetone::sched::cp::{CpConfig, CpSolver, Encoding};
+use acetone::sched::cp::{CpConfig, CpGlobals, CpSolver, Encoding};
 use acetone::sched::dsh::Dsh;
 use acetone::sched::hybrid::Hybrid;
 use acetone::sched::ish::Ish;
@@ -62,6 +62,7 @@ fn cp_improved_beats_or_matches_heuristics_small() {
         timeout: Duration::from_secs(20),
         warm_start: None,
         node_limit: None,
+        globals: CpGlobals::default(),
     });
     for seed in 0..3 {
         let g = generate(&cfg, seed);
@@ -91,6 +92,7 @@ fn tang_and_improved_agree_when_both_finish() {
             timeout: Duration::from_secs(30),
             warm_start: None,
             node_limit: None,
+            globals: CpGlobals::default(),
         })
         .solve(&g, 2);
         let tang = CpSolver::new(CpConfig {
@@ -98,6 +100,7 @@ fn tang_and_improved_agree_when_both_finish() {
             timeout: Duration::from_secs(60),
             warm_start: None,
             node_limit: None,
+            globals: CpGlobals::default(),
         })
         .solve(&g, 2);
         if imp.result.optimal && tang.result.optimal {
@@ -144,6 +147,7 @@ fn cp_anytime_quality_regression() {
         timeout: Duration::from_secs(5),
         warm_start: None,
         node_limit: None,
+        globals: CpGlobals::default(),
     })
     .solve(&g, 4);
     assert!(out.found_solution, "search must reach feasible leaves");

@@ -125,3 +125,61 @@ fn prop_daggen_always_single_sink_acyclic() {
         assert!(g.single_sink().is_some());
     });
 }
+
+#[test]
+fn prop_global_propagators_undo_cleanly() {
+    // propagate → branch → propagate → undo must restore the pre-branch
+    // state byte for byte with the global propagators ON: edge-finding
+    // lifts bounds and bin-packing fails states, and every one of those
+    // effects must live on the trail (or, for the failure verdict, be
+    // stateless) so backtracking stays exact.
+    use acetone::graph::ensure_single_sink;
+    use acetone::sched::cp::{CpGlobals, Encoding, State};
+    use acetone::sched::ResolvedPlatform;
+    use acetone::util::rng::SplitMix64;
+
+    let globals = CpGlobals { disjunctive: true, binpacking: true };
+    for_all_seeds("globals undo round-trip", 30, |seed| {
+        let (cfg, m) = random_cfg(seed);
+        let mut g = generate(&cfg, seed);
+        ensure_single_sink(&mut g);
+        let m = m.clamp(2, 4);
+        let plat = ResolvedPlatform::resolve(None, &g, m);
+        let levels = plat.static_levels(&g);
+        let sink = g.single_sink().unwrap();
+        let mut st = State::root(&g, &plat, sink, Encoding::Improved);
+        let mut rng = SplitMix64::new(seed ^ 0xA5A5_5A5A_1234_5678);
+        // A tight bound (DSH's own makespan) makes both globals actually
+        // fire: edge-finding lifts, bin-packing rejects.
+        let ub = Dsh.solve(&acetone::sched::SolveRequest::new(&g, m)).schedule.makespan();
+        if !st.propagate(&levels, Encoding::Improved, ub, globals) {
+            return; // root already infeasible under the strict bound: fine
+        }
+        for _depth in 0..12 {
+            let before = st.dump();
+            let mark = st.mark();
+            let Some((var, val)) = st.pick_branch(Encoding::Improved, None) else {
+                break;
+            };
+            let val = if rng.next_below(3) == 0 { 1 - val } else { val };
+            assert!(st.assign(var, val), "seed={seed}: branching an open var");
+            let ok = st.propagate(&levels, Encoding::Improved, ub, globals);
+            st.undo_to(mark);
+            assert_eq!(
+                st.dump(),
+                before,
+                "seed={seed}: undo after a globals-on wave must restore the state"
+            );
+            // Walk onward along the same decision so later depths see
+            // states the globals have already pruned once.
+            if ok {
+                st.assign(var, val);
+                if !st.propagate(&levels, Encoding::Improved, ub, globals) {
+                    break;
+                }
+            } else {
+                break;
+            }
+        }
+    });
+}

@@ -16,7 +16,7 @@
 use acetone::daggen::{generate, DagGenConfig};
 use acetone::graph::{ensure_single_sink, paper_example_dag, Cycles, Dag};
 use acetone::sched::bnb::ChouChung;
-use acetone::sched::cp::{CpConfig, CpSolver, Encoding};
+use acetone::sched::cp::{CpConfig, CpGlobals, CpSolver, Encoding};
 use acetone::sched::{check_valid, Schedule, Scheduler};
 use std::time::Duration;
 
@@ -73,6 +73,7 @@ fn cp_paper_example_full_solve_parity() {
             timeout: Duration::from_secs(120),
             warm_start: None,
             node_limit: None,
+            globals: CpGlobals::default(),
         };
         assert_cp_parity(&g, m, &cfg, &format!("cp improved m={m}"));
     }
@@ -90,6 +91,7 @@ fn cp_tang_budgeted_parity() {
         timeout: Duration::from_secs(3600),
         warm_start: None,
         node_limit: Some(4000),
+        globals: CpGlobals::default(),
     };
     assert_cp_parity(&g, 2, &cfg, "cp tang paper-example");
 }
@@ -104,6 +106,7 @@ fn cp_paper50_budgeted_parity() {
             timeout: Duration::from_secs(3600),
             warm_start: None,
             node_limit: Some(1500),
+            globals: CpGlobals::default(),
         };
         assert_cp_parity(&g, 4, &cfg, &format!("cp paper(50) seed={seed}"));
     }
@@ -146,6 +149,7 @@ fn all_off_search_options_pin_the_legacy_paths() {
         timeout: Duration::from_secs(3600),
         warm_start: None,
         node_limit: Some(1500),
+        globals: CpGlobals::default(),
     };
     let legacy = CpSolver::new(cp_cfg).solve(&g, 4);
     let req = SolveRequest::new(&g, 4)
@@ -193,6 +197,7 @@ fn warm_started_cp_parity() {
         timeout: Duration::from_secs(3600),
         warm_start: Some(warm),
         node_limit: Some(1000),
+        globals: CpGlobals::default(),
     };
     assert_cp_parity(&g, 3, &cfg, "cp warm-started paper(30)");
 }
